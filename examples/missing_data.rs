@@ -1,0 +1,65 @@
+//! Missing-data handling (paper footnote 2 + the "variants capable of
+//! dealing with many missing values" future-work item): run the Chile
+//! scene with cloud-masked (NaN) observations through the coordinator,
+//! whose staging workers gap-fill each chunk, and compare against the
+//! same scene without clouds.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example missing_data
+//! ```
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::fill;
+use bfast::synth::ChileScene;
+
+fn main() -> anyhow::Result<()> {
+    let clean_scene = ChileScene::scaled(96, 72, 11);
+    let cloudy_scene = ChileScene { cloud_rate: 0.08, ..clean_scene.clone() };
+    let params = clean_scene.params();
+
+    let (clean, _) = clean_scene.generate();
+    let (mut cloudy, _) = cloudy_scene.generate();
+    let nan_count = cloudy.data().iter().filter(|v| v.is_nan()).count();
+    println!(
+        "scene {}x{}: {} observations, {} cloud-masked ({:.1}%)",
+        clean_scene.width,
+        clean_scene.height,
+        cloudy.data().len(),
+        nan_count,
+        100.0 * nan_count as f64 / cloudy.data().len() as f64
+    );
+
+    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+
+    // Coordinator path: staging-side gap filling (fill_missing = true).
+    let res_clean = runner.run(&clean, &params)?;
+    let res_cloudy = runner.run(&cloudy, &params)?;
+    println!(
+        "breaks: clean {:.2}%  cloudy(staging-filled) {:.2}%",
+        100.0 * res_clean.map.break_fraction(),
+        100.0 * res_cloudy.map.break_fraction()
+    );
+
+    // Same data pre-filled on the host — must agree with staging fill.
+    let stats = fill::fill_stack(&mut cloudy, bfast::threadpool::default_threads());
+    println!(
+        "host fill: {} gap pixels, {} values, longest gap {}",
+        stats.pixels_with_gaps, stats.missing_values, stats.longest_gap
+    );
+    let res_prefilled = runner.run(&cloudy, &params)?;
+    anyhow::ensure!(
+        res_prefilled.map.breaks == res_cloudy.map.breaks,
+        "staging-side fill must equal host-side fill"
+    );
+
+    // Detection should survive moderate cloud cover.
+    let mut agree = 0usize;
+    for (a, b) in res_clean.map.breaks.iter().zip(&res_cloudy.map.breaks) {
+        agree += (a == b) as usize;
+    }
+    let rate = agree as f64 / res_clean.len() as f64;
+    println!("clean vs cloudy agreement: {:.2}%", 100.0 * rate);
+    anyhow::ensure!(rate > 0.9, "cloud gaps degraded detection too much");
+    println!("missing_data OK");
+    Ok(())
+}

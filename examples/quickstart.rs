@@ -1,0 +1,86 @@
+//! Quickstart: generate a small artificial scene, run it through the
+//! AOT device pipeline, cross-check against the multi-core CPU
+//! implementation, and inspect one broken pixel.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's synthetic benchmark setting (§4.2), small m.
+    let params = BfastParams::paper_synthetic();
+    println!(
+        "params: N={} n={} h={} k={} f={} alpha={} -> lambda={:.3}",
+        params.n_total, params.n_hist, params.h, params.k, params.freq, params.alpha,
+        params.lambda
+    );
+
+    let data = ArtificialDataset::new(params.clone(), 20_000, 42)
+        .with_noise(0.01, 0.1)
+        .generate();
+    println!(
+        "generated {} pixels x {} timesteps ({} with injected breaks)",
+        data.stack.n_pixels(),
+        data.stack.n_times(),
+        data.truth.iter().filter(|&&t| t).count()
+    );
+
+    // --- device pipeline (AOT JAX/Pallas via PJRT) ----------------------
+    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    println!("device: {}", runner.runtime().platform());
+    let res = runner.run(&data.stack, &params)?;
+    let (tpr, fpr) = data.score(&res.map.breaks);
+    println!(
+        "device: {} breaks / {} px in {:.3}s ({} chunks, artifact {})  TPR={:.3} FPR={:.3}",
+        res.break_count(),
+        res.len(),
+        res.wall.as_secs_f64(),
+        res.chunks,
+        res.artifact,
+        tpr,
+        fpr
+    );
+    print!("{}", res.phases.table("device phases"));
+
+    // --- multi-core CPU cross-check -------------------------------------
+    let cpu = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)?;
+    let t0 = std::time::Instant::now();
+    let (cpu_map, cpu_phases) = cpu.run(&data.stack)?;
+    println!("cpu: {} breaks in {:.3}s", cpu_map.break_count(), t0.elapsed().as_secs_f64());
+    print!("{}", cpu_phases.table("cpu phases"));
+
+    let agree = res
+        .map
+        .breaks
+        .iter()
+        .zip(&cpu_map.breaks)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!(
+        "device/cpu agreement: {agree}/{} ({:.4}%)",
+        res.len(),
+        100.0 * agree as f64 / res.len() as f64
+    );
+    anyhow::ensure!(
+        agree as f64 / res.len() as f64 > 0.999,
+        "device and CPU implementations disagree"
+    );
+
+    // --- per-pixel inspection (the paper's post-hoc workflow) -----------
+    if let Some(px) = res.map.breaks.iter().position(|&b| b != 0) {
+        let detail = runner.inspect_pixel(&data.stack, &params, px)?;
+        println!(
+            "pixel {px}: first crossing at monitor step {} (t={}), momax={:.2}",
+            detail.scan.first,
+            params.n_hist as i32 + 1 + detail.scan.first,
+            detail.scan.momax
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

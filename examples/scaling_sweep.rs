@@ -1,0 +1,110 @@
+//! End-to-end validation driver (Fig. 2 analogue): run all four
+//! implementations over increasing m on the paper's synthetic
+//! workload, print runtimes + speedups over the naive (R-analogue)
+//! baseline, verify every implementation agrees with the reference,
+//! and save the table to `results/`.
+//!
+//! m is scaled for a laptop run by default; set `SWEEP_M_MAX` /
+//! `SWEEP_POINTS` to go bigger (the paper sweeps 100k..1M).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example scaling_sweep
+//! ```
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::pixel::{DirectBfast, NaiveBfast};
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let params = BfastParams::paper_synthetic();
+    let m_max = env_usize("SWEEP_M_MAX", 100_000);
+    let points = env_usize("SWEEP_POINTS", 5);
+    // naive is O(100x) slower; cap its workload like the paper caps R's
+    let naive_cap = env_usize("SWEEP_NAIVE_CAP", 4_000);
+
+    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    println!("device: {}", runner.runtime().platform());
+
+    let mut table = Table::new(
+        "fig2: runtime vs m (seconds)",
+        &["m", "naive_R", "direct_Py", "cpu_multi", "device", "speedup_cpu", "speedup_dev"],
+    );
+
+    for i in 1..=points {
+        let m = m_max * i / points;
+        let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+        let stack = &data.stack;
+
+        // naive (BFAST(R) analogue) on a capped subset, extrapolated
+        let naive_m = m.min(naive_cap);
+        let sub = stack.slice_pixels(0, naive_m);
+        let t0 = Instant::now();
+        let naive_map = NaiveBfast::new(params.clone()).run(&sub)?;
+        let naive_s = t0.elapsed().as_secs_f64() * (m as f64 / naive_m as f64);
+
+        // direct (BFAST(Python) analogue)
+        let direct = DirectBfast::new(params.clone(), &stack.time_axis)?;
+        let t0 = Instant::now();
+        let direct_map = direct.run(stack)?;
+        let direct_s = t0.elapsed().as_secs_f64();
+
+        // fused multi-core (BFAST(CPU))
+        let cpu = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
+        let t0 = Instant::now();
+        let (cpu_map, _) = cpu.run(stack)?;
+        let cpu_s = t0.elapsed().as_secs_f64();
+
+        // device (BFAST(GPU) analogue)
+        let res = runner.run(stack, &params)?;
+        let dev_s = res.wall.as_secs_f64();
+
+        // cross-implementation agreement (the correctness part of the
+        // end-to-end validation)
+        anyhow::ensure!(
+            direct_map.breaks == cpu_map.breaks,
+            "direct vs cpu disagreement at m={m}"
+        );
+        anyhow::ensure!(
+            naive_map.breaks[..] == direct_map.breaks[..naive_m],
+            "naive vs direct disagreement at m={m}"
+        );
+        let agree = res
+            .map
+            .breaks
+            .iter()
+            .zip(&cpu_map.breaks)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / m as f64;
+        anyhow::ensure!(agree > 0.999, "device vs cpu agreement {agree} at m={m}");
+
+        println!(
+            "m={m:>8}: naive*={naive_s:>8.2}s direct={direct_s:>8.2}s cpu={cpu_s:>7.3}s \
+             device={dev_s:>7.3}s (agree {:.4})",
+            agree
+        );
+        table.row(vec![
+            m.to_string(),
+            Table::num(naive_s),
+            Table::num(direct_s),
+            Table::num(cpu_s),
+            Table::num(dev_s),
+            Table::num(naive_s / cpu_s),
+            Table::num(naive_s / dev_s),
+        ]);
+    }
+
+    print!("{}", table.to_console());
+    let path = table.save("results", "fig2_scaling")?;
+    println!("saved {}", path.display());
+    println!("(naive_R column extrapolated beyond {naive_cap} px, as the paper does for R)");
+    Ok(())
+}

@@ -1,0 +1,267 @@
+"""AOT driver — lowers the L2/L1 graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on
+the request path. For every configuration variant this emits:
+
+    artifacts/<name>__<phase>.hlo.txt   one HLO module per phase
+    artifacts/manifest.json             shapes/dtypes for the rust runtime
+    artifacts/golden/*.bten             oracle vectors for rust tests
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the rust side reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # Gram solve runs in f64
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import (  # noqa: E402
+    ModelConfig,
+    bfast_fused,
+    phase_detect,
+    phase_fit,
+    phase_predict,
+    phase_mosum,
+)
+from .kernels import ref  # noqa: E402
+
+F32 = "f32"
+I32 = "i32"
+
+
+def spec(shape, dtype=F32):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _phase_tables(cfg: ModelConfig):
+    """(fn, input-spec, output-spec) per phase for one config."""
+    N, n, m, p = cfg.n_total, cfg.n_hist, cfg.m_chunk, cfg.p
+    nm = N - n
+    f32 = jnp.float32
+    t_s = jax.ShapeDtypeStruct((N,), f32)
+    f_s = jax.ShapeDtypeStruct((), f32)
+    lam_s = jax.ShapeDtypeStruct((), f32)
+    y_s = jax.ShapeDtypeStruct((N, m), f32)
+    w_s = jax.ShapeDtypeStruct((nm, N), f32)
+    yh_s = jax.ShapeDtypeStruct((n, m), f32)
+    beta_s = jax.ShapeDtypeStruct((p, m), f32)
+    yhat_s = jax.ShapeDtypeStruct((N, m), f32)
+    mo_s = jax.ShapeDtypeStruct((nm, m), f32)
+
+    out_detect = [
+        ("breaks", spec((m,), I32)),
+        ("first", spec((m,), I32)),
+        ("momax", spec((m,))),
+    ]
+    return {
+        "fused": (
+            lambda t, f, w, y, lam: bfast_fused(t, f, w, y, lam, cfg),
+            [("t", t_s), ("f", f_s), ("w", w_s), ("y", y_s), ("lam", lam_s)],
+            out_detect,
+        ),
+        "fit": (
+            lambda t, f, yh: phase_fit(t, f, yh, cfg),
+            [("t", t_s), ("f", f_s), ("y_hist", yh_s)],
+            [("beta", spec((p, m)))],
+        ),
+        "predict": (
+            lambda t, f, b: phase_predict(t, f, b, cfg),
+            [("t", t_s), ("f", f_s), ("beta", beta_s)],
+            [("yhat", spec((N, m)))],
+        ),
+        "mosum": (
+            lambda w, y, yh: phase_mosum(w, y, yh, cfg),
+            [("w", w_s), ("y", y_s), ("yhat", yhat_s)],
+            [("mo", spec((nm, m)))],
+        ),
+        "detect": (
+            lambda mo, lam: phase_detect(mo, lam, cfg),
+            [("mo", mo_s), ("lam", lam_s)],
+            out_detect,
+        ),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_phase(cfg: ModelConfig, phase: str) -> tuple[str, list, list]:
+    fn, inputs, outputs = _phase_tables(cfg)[phase]
+    in_specs = [s for (_, s) in inputs]
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    in_desc = [
+        {"name": nm_, **spec(tuple(s.shape), F32)} for (nm_, s) in inputs
+    ]
+    return text, in_desc, [{"name": nm_, **s} for (nm_, s) in outputs]
+
+
+# Variant table — see DESIGN.md §4 for which figure needs which.
+BASE = dict(n_total=200, n_hist=100, h=50, k=3)
+ALL_PHASES = ["fused", "fit", "predict", "mosum", "detect"]
+
+
+def variants(m_chunk: int, quick: bool):
+    out = [
+        ("small", ModelConfig(**BASE, m_chunk=1024, block_m=256), ALL_PHASES),
+    ]
+    if quick:
+        return out
+    out += [
+        ("default", ModelConfig(**BASE, m_chunk=m_chunk, block_m=m_chunk), ALL_PHASES),
+        # Fig. 5 — influence of k on the phases.
+        *[
+            (
+                f"k{k}",
+                ModelConfig(n_total=200, n_hist=100, h=50, k=k, m_chunk=m_chunk, block_m=m_chunk),
+                ALL_PHASES,
+            )
+            for k in (1, 2, 4, 5)
+        ],
+        # Fig. 6 — influence of h on the MOSUM phase.
+        *[
+            (
+                f"h{h}",
+                ModelConfig(n_total=200, n_hist=100, h=h, k=3, m_chunk=m_chunk, block_m=m_chunk),
+                ALL_PHASES,
+            )
+            for h in (25, 100)
+        ],
+        # §4.3 — Chile Landsat configuration (irregular day-of-year axis).
+        (
+            "chile",
+            ModelConfig(n_total=288, n_hist=144, h=72, k=3, m_chunk=m_chunk, block_m=m_chunk),
+            ["fused"],
+        ),
+        # Ablation — same pipeline with the plain-XLA mosum instead of pallas.
+        (
+            "default_xla",
+            ModelConfig(**BASE, m_chunk=m_chunk, use_pallas=False),
+            ["fused"],
+        ),
+    ]
+    return out
+
+
+def write_bten(path: str, arr: np.ndarray) -> None:
+    """Tiny tensor container for rust golden tests.
+
+    Layout: b"BTEN" | u8 dtype (0=f32,1=i32,2=f64) | u8 ndim |
+    ndim × u32 dims | raw little-endian data.
+    """
+    arr = np.ascontiguousarray(arr)
+    code = {np.dtype("float32"): 0, np.dtype("int32"): 1, np.dtype("float64"): 2}[
+        arr.dtype
+    ]
+    with open(path, "wb") as fh:
+        fh.write(b"BTEN")
+        fh.write(struct.pack("<BB", code, arr.ndim))
+        for d in arr.shape:
+            fh.write(struct.pack("<I", d))
+        fh.write(arr.tobytes())
+
+
+def emit_golden(outdir: str) -> None:
+    """Oracle vectors the rust tests compare against (ref.py, float64)."""
+    os.makedirs(outdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+    N, n, h, k, f, lam, m = 60, 40, 20, 2, 12.0, 2.5, 7
+    t = np.arange(1, N + 1, dtype=np.float64)
+    Y = 0.05 * np.sin(2 * np.pi * t[:, None] / f) + 0.01 * rng.standard_normal(
+        (N, m)
+    )
+    Y[int(N * 0.6) :, ::2] += 0.5  # breaks in even pixels
+    breaks, first, momax, MO = ref.bfast_ref(Y, t, f=f, n=n, h=h, k=k, lam=lam)
+    X = ref.design_matrix(t, f, k)
+    beta = np.stack([ref.fit_history(X, Y[:, i], n) for i in range(m)], axis=1)
+    meta = dict(N=N, n=n, h=h, k=k, f=f, lam=lam, m=m)
+    with open(os.path.join(outdir, "case0.json"), "w") as fh:
+        json.dump(meta, fh)
+    for name, arr, dt in [
+        ("t", t, "float64"),
+        ("y", Y, "float64"),
+        ("beta", beta, "float64"),
+        ("mo", MO, "float64"),
+        ("momax", momax, "float64"),
+        ("breaks", breaks, "int32"),
+        ("first", first, "int32"),
+    ]:
+        write_bten(os.path.join(outdir, f"case0_{name}.bten"), arr.astype(dt))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--m-chunk", type=int, default=16384)
+    ap.add_argument("--quick", action="store_true", help="small config only")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated variant names to (re)build"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    only = set(args.only.split(",")) if args.only else None
+    for name, cfg, phases in variants(args.m_chunk, args.quick):
+        if only and name not in only:
+            continue
+        cfg.validate()
+        for phase in phases:
+            fname = f"{name}__{phase}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            text, ins, outs = lower_phase(cfg, phase)
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "phase": phase,
+                    "file": fname,
+                    "n_total": cfg.n_total,
+                    "n_hist": cfg.n_hist,
+                    "h": cfg.h,
+                    "k": cfg.k,
+                    "p": cfg.p,
+                    "m_chunk": cfg.m_chunk,
+                    "use_pallas": cfg.use_pallas,
+                    "inputs": ins,
+                    "outputs": outs,
+                }
+            )
+            print(f"lowered {fname:<28} ({len(text) / 1024:.0f} KiB)", flush=True)
+    man_path = os.path.join(args.out, "manifest.json")
+    # --only patches an existing manifest instead of clobbering it.
+    if only and os.path.exists(man_path):
+        with open(man_path) as fh:
+            old = json.load(fh)
+        keep = [a for a in old["artifacts"] if a["name"] not in only]
+        manifest["artifacts"] = keep + manifest["artifacts"]
+    with open(man_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    emit_golden(os.path.join(args.out, "golden"))
+    print(f"manifest: {man_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

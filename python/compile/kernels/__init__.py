@@ -1,0 +1,3 @@
+"""Pallas kernels (L1) and their pure-jnp/numpy oracles."""
+
+from .mosum import mosum_pallas, mosum_xla  # noqa: F401

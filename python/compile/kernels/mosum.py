@@ -1,0 +1,195 @@
+"""L1 — Pallas MOSUM kernel (the paper's Algorithm 3, re-thought for TPU).
+
+The CUDA kernel in the paper spawns one thread per pixel (``gid``) and
+walks the time axis sequentially, updating each moving sum from the
+previous one. The arrays are stored pixel-major (``Y[gid + j*m]``) so a
+warp's threads access consecutive addresses (coalescing).
+
+The Pallas port transposes that schedule for a vector unit:
+
+* the **pixel axis is the lane axis** — a BlockSpec tile of shape
+  ``(N, block_m)`` keeps ``block_m`` pixels resident in VMEM and every
+  jnp op inside the kernel vectorises over them (the analogue of the
+  warp), while
+* the **time axis is handled with a cumulative sum** instead of the
+  loop-carried rolling update: ``MO_t = cs_t - cs_{t-h}`` where ``cs``
+  is the inclusive cumsum of the residuals. Same O(N) work per pixel,
+  but no sequential dependence that would serialise the VPU.
+* residuals are **recomputed on the fly** from ``Y`` and ``Ŷ`` exactly
+  as the paper does to save device memory — they never leave VMEM.
+
+VMEM budget per grid step (f32): two ``(N, block_m)`` input slabs, one
+``(N - n, block_m)`` output slab and ~3 temporaries of the input size,
+i.e. roughly ``5.5 * N * block_m * 4`` bytes ≈ 0.29 MB/lane-group for
+``N = 200, block_m = 256`` — far below the 16 MB VMEM ceiling, leaving
+room for double buffering. ``block_m`` is a multiple of the 128-wide
+lane dimension.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers the kernel to plain HLO so
+the AOT artifact runs on any backend. Correctness is pinned against
+the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Lane width of the TPU VPU; block_m should be a multiple of this.
+LANE = 128
+DEFAULT_BLOCK_M = 2048
+
+
+def window_matrix(n_total: int, n: int, h: int, dtype=np.float32) -> np.ndarray:
+    """Banded window-sum operator W ∈ R^{(N-n)×N}.
+
+    Row i (monitor step t = n+1+i, 1-based) selects the h residuals of
+    the Eq. (3) window: ``W[i, j] = 1`` for ``j ∈ [n+i-h+1, n+i]``
+    (0-based columns), so ``W @ r`` yields every window sum at once.
+
+    Why a matmul instead of a scan: this is the MXU-shaped formulation
+    of the paper's rolling update — a (N−n)×N constant band contracted
+    against the (N, block_m) residual slab feeds the systolic array on
+    a real TPU, and lowers to the (multi-threaded) Eigen dot on the CPU
+    PJRT backend. The scan/cumsum formulations lower to O(N²)
+    reduce-windows or long slice+pad chains on xla_extension 0.5.1 and
+    dominated the whole pipeline (EXPERIMENTS.md §Perf has the A/B).
+    """
+    nm = n_total - n
+    w = np.zeros((nm, n_total), dtype=dtype)
+    for i in range(nm):
+        w[i, n + i - h + 1 : n + i + 1] = 1.0
+    return w
+
+
+def window_matrix_trunc(n_total: int, n: int, h: int, dtype=np.float32):
+    """Toeplitz band restricted to the rows any window touches.
+
+    The Eq. (3) windows only read residual rows ``n-h+1 .. N-1``
+    (0-based), so the contraction shrinks from (N−n)×N to
+    (N−n)×(N−n+h−1): ``W'[i, i:i+h] = 1`` and ``win = W' @ r[n-h+1:]``.
+    ~25–75 % fewer MACs depending on h/N (EXPERIMENTS.md §Perf).
+    Returns (W', first_row) where first_row = n-h+1.
+    """
+    nm = n_total - n
+    cols = nm + h - 1
+    w = np.zeros((nm, cols), dtype=dtype)
+    for i in range(nm):
+        w[i, i : i + h] = 1.0
+    return w, n - h + 1
+
+
+def _mosum_kernel(w_ref, y_ref, yh_ref, mo_ref, *, n: int, h: int, dof: int):
+    """Fused residual -> banded-matmul window sums -> sigma-normalise.
+
+    y_ref, yh_ref : (N, bm) observations and model predictions
+    mo_ref        : (N - n, bm) normalised MOSUM process output
+
+    Implements Eq. (3) of the paper:
+        MO_t = 1/(sigma_hat * sqrt(n)) * sum_{s=t-h+1..t} r_s
+    with sigma_hat^2 = sum_{i<=n} r_i^2 / (n - (2 + 2k))  (Alg. 3).
+    """
+    y = y_ref[...]
+    yh = yh_ref[...]
+    r = y - yh                                  # residuals, on the fly
+    hist = r[:n, :]
+    sigma = jnp.sqrt(jnp.sum(hist * hist, axis=0) / dof)     # (bm,)
+    win = jnp.dot(w_ref[...], r)                # (N-n, bm) window sums
+    denom = sigma * jnp.sqrt(jnp.asarray(n, dtype=y.dtype))
+    mo_ref[...] = win / denom
+
+
+def mosum_pallas(
+    y: jax.Array,
+    yhat: jax.Array,
+    *,
+    n: int,
+    h: int,
+    k: int,
+    w: jax.Array | None = None,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Normalised MOSUM process for a chunk of pixels.
+
+    Parameters
+    ----------
+    y, yhat : (N, m) float32 — observations / predictions, time-major.
+    n       : length of the stable history period (1 <= n < N).
+    h       : MOSUM bandwidth (1 <= h <= n).
+    k       : number of harmonic terms (sigma dof correction 2 + 2k).
+    block_m : pixels per VMEM tile; m must be divisible by it.
+
+    Returns
+    -------
+    (N - n, m) float32 — MO_t for t = n+1 .. N.
+    """
+    N, m = y.shape
+    if yhat.shape != (N, m):
+        raise ValueError(f"y {y.shape} vs yhat {yhat.shape}")
+    if not (1 <= n < N):
+        raise ValueError(f"need 1 <= n < N, got n={n}, N={N}")
+    if not (1 <= h <= n):
+        raise ValueError(f"need 1 <= h <= n, got h={h}, n={n}")
+    dof = n - (2 + 2 * k)
+    if dof <= 0:
+        raise ValueError(f"history too short: n={n} <= 2+2k={2 + 2 * k}")
+    if m % block_m != 0:
+        # Shrink the tile rather than fail: keeps small test shapes easy.
+        block_m = m if m < block_m else _largest_divisor(m, block_m)
+    grid = (m // block_m,)
+    # The banded window operator rides along as a kernel input pinned
+    # to block (0, 0) — resident in VMEM across all grid steps. For AOT
+    # modules W arrives as a *runtime input* (the L3 coordinator builds
+    # it): baking it as an HLO constant feeding the dot miscompiles to
+    # all-zeros on xla_extension 0.5.1's CPU backend (EXPERIMENTS.md
+    # §Perf documents the hunt).
+    wmat = jnp.asarray(window_matrix(N, n, h), dtype=y.dtype) if w is None else w
+    kernel = functools.partial(_mosum_kernel, n=n, h=h, dof=dof)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N - n, N), lambda i: (0, 0)),
+            pl.BlockSpec((N, block_m), lambda i: (0, i)),
+            pl.BlockSpec((N, block_m), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((N - n, block_m), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((N - n, m), y.dtype),
+        interpret=interpret,
+    )(wmat, y, yhat)
+
+
+def _largest_divisor(m: int, upto: int) -> int:
+    for b in range(min(m, upto), 0, -1):
+        if m % b == 0:
+            return b
+    return 1
+
+
+def mosum_xla(
+    y: jax.Array,
+    yhat: jax.Array,
+    *,
+    n: int,
+    h: int,
+    k: int,
+    w: jax.Array | None = None,
+) -> jax.Array:
+    """Plain-XLA variant of the same computation (ablation baseline).
+
+    Identical math, no pallas_call — used to quantify what explicit
+    tiling buys on top of XLA's own fusion (DESIGN.md ablations).
+    """
+    dof = n - (2 + 2 * k)
+    r = y - yhat
+    hist = r[:n, :]
+    sigma = jnp.sqrt(jnp.sum(hist * hist, axis=0) / dof)
+    wmat = jnp.asarray(window_matrix(y.shape[0], n, h), dtype=y.dtype) if w is None else w
+    win = jnp.dot(wmat, r)
+    return win / (sigma * jnp.sqrt(jnp.asarray(n, dtype=y.dtype)))

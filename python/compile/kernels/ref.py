@@ -1,0 +1,119 @@
+"""Pure-numpy correctness oracle for the BFAST(monitor) pipeline.
+
+This is the slow-but-obviously-correct reference every other layer is
+pinned against:
+
+* ``python/tests`` asserts the Pallas kernel and the AOT model match it;
+* the rust test-suite compares against golden vectors exported from it
+  (``aot.py --golden``).
+
+Everything here follows Algorithm 1 of the paper literally, one time
+series at a time, in float64.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "design_matrix",
+    "fit_history",
+    "mosum_ref",
+    "log_plus",
+    "boundary_ref",
+    "bfast_ref",
+]
+
+
+def design_matrix(t: np.ndarray, f: float, k: int) -> np.ndarray:
+    """Season-trend design matrix X in R^{(2+2k) x N} (paper Alg. 1, step 1).
+
+    Row layout: [1, t/f, sin(2*pi*1*t/f), cos(2*pi*1*t/f), ...,
+    sin(2*pi*k*t/f), cos(2*pi*k*t/f)].
+
+    The trend regressor is t/f (time in *years*) rather than the raw
+    index t: an exact reparameterisation of Eq. (1) — predictions are
+    identical — that keeps the Gram matrix well-conditioned in float32
+    for N up to several hundred. All implementations (numpy, jax, rust)
+    share this convention.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    rows = [np.ones_like(t), t / f]
+    for j in range(1, k + 1):
+        w = 2.0 * np.pi * j * t / f
+        rows.append(np.sin(w))
+        rows.append(np.cos(w))
+    return np.stack(rows)  # (2 + 2k, N)
+
+
+def fit_history(X: np.ndarray, y: np.ndarray, n: int) -> np.ndarray:
+    """OLS coefficients from the stable history period (Eq. 6)."""
+    Xh = X[:, :n]  # (p, n)
+    G = Xh @ Xh.T
+    return np.linalg.solve(G, Xh @ y[:n])
+
+
+def mosum_ref(r: np.ndarray, n: int, h: int, k: int) -> np.ndarray:
+    """Normalised MOSUM process MO_t for t = n+1..N (Eq. 3).
+
+    ``r`` are residuals y - yhat for the full series. sigma_hat uses
+    the history residuals with dof n - (2 + 2k), as in Algorithm 3.
+    """
+    N = r.shape[0]
+    dof = n - (2 + 2 * k)
+    sigma = np.sqrt(np.sum(r[:n] ** 2) / dof)
+    mo = np.empty(N - n, dtype=np.float64)
+    for t in range(n + 1, N + 1):  # 1-based t
+        mo[t - n - 1] = r[t - h : t].sum()  # h terms ending at t
+    return mo / (sigma * np.sqrt(n))
+
+
+def log_plus(x: np.ndarray) -> np.ndarray:
+    """log_+ from Eq. (4): 1 for x <= e, log(x) otherwise."""
+    x = np.asarray(x, dtype=np.float64)
+    return np.where(x <= np.e, 1.0, np.log(np.maximum(x, 1e-300)))
+
+
+def boundary_ref(N: int, n: int, lam: float) -> np.ndarray:
+    """Boundary b_t = lambda * sqrt(log_+ (t/n)) for t = n+1..N (Eq. 4)."""
+    t = np.arange(n + 1, N + 1, dtype=np.float64)
+    return lam * np.sqrt(log_plus(t / n))
+
+
+def bfast_ref(
+    Y: np.ndarray,
+    t: np.ndarray,
+    *,
+    f: float,
+    n: int,
+    h: int,
+    k: int,
+    lam: float,
+):
+    """Full per-pixel BFAST(monitor) reference over Y in R^{N x m}.
+
+    Returns (breaks int32[m], first int32[m], momax f64[m],
+    MO f64[(N-n) x m]). ``first`` is the 0-based monitor index of the
+    first boundary crossing, or -1 when the pixel has no break.
+    """
+    Y = np.asarray(Y, dtype=np.float64)
+    N, m = Y.shape
+    X = design_matrix(t, f, k)
+    bound = boundary_ref(N, n, lam)
+    breaks = np.zeros(m, dtype=np.int32)
+    first = np.full(m, -1, dtype=np.int32)
+    momax = np.zeros(m, dtype=np.float64)
+    MO = np.zeros((N - n, m), dtype=np.float64)
+    for i in range(m):
+        y = Y[:, i]
+        beta = fit_history(X, y, n)
+        yhat = X.T @ beta
+        r = y - yhat
+        mo = mosum_ref(r, n, h, k)
+        MO[:, i] = mo
+        exceed = np.abs(mo) > bound
+        momax[i] = np.abs(mo).max() if mo.size else 0.0
+        if exceed.any():
+            breaks[i] = 1
+            first[i] = int(np.argmax(exceed))
+    return breaks, first, momax, MO

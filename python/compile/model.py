@@ -1,0 +1,198 @@
+"""L2 — the batched BFAST(monitor) compute graph in JAX.
+
+Operates on a *chunk* of pixels ``Y ∈ R^{N×m}`` (time-major) at once,
+exactly the fusion the paper performs in Section 3: the design matrix
+and its pseudo-inverse are computed once per chunk, the per-pixel model
+fits collapse into one matmul (Eq. 9), predictions into another
+(Eq. 10), and the residual/MOSUM/detection tail runs in the L1 Pallas
+kernel plus a handful of fused element-wise ops.
+
+Two kinds of modules are exported by ``aot.py``:
+
+* ``fused``  — the production path: (t, f, Y, lambda) → (breaks, first,
+  momax). One executable, no intermediate round-trips.
+* ``fit`` / ``predict`` / ``mosum`` / ``detect`` — the *phased* path
+  used only by the instrumented benchmarks that reproduce the paper's
+  per-phase figures (Figs. 3–6). Intermediates stay on device as PJRT
+  buffers between phases.
+
+Numerics: everything is float32 on the request path (as in the paper's
+CUDA code); only the tiny (p×p, p = 2+2k ≤ 12) Gram inversion is done
+in float64 and hand-rolled Gauss–Jordan, because the CPU PJRT plugin of
+xla_extension 0.5.1 cannot run LAPACK custom-calls that
+``jnp.linalg.*`` would lower to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mosum import mosum_pallas, mosum_xla
+
+# float64 constants/ops below require the x64 flag; aot.py sets it
+# before tracing. Harmless for the f32 request path.
+E = 2.718281828459045
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyper-parameters baked into one AOT artifact."""
+
+    n_total: int  # N — length of each time series
+    n_hist: int  # n — stable history period
+    h: int  # MOSUM bandwidth
+    k: int  # harmonic terms
+    m_chunk: int  # pixels per chunk (the batched axis)
+    # Pallas lane tile: the HBM↔VMEM schedule knob. On a real TPU this
+    # is bounded by VMEM (~2048 lanes for N=200, see DESIGN.md §2); for
+    # CPU-PJRT deployment aot.py sets block_m = m_chunk so the
+    # interpret-mode grid collapses to one step (the while-loop +
+    # dynamic-slice overhead of interpreted grids is pure loss on CPU).
+    block_m: int = 2048
+    use_pallas: bool = True  # False → plain-XLA ablation variant
+
+    @property
+    def p(self) -> int:
+        return 2 + 2 * self.k
+
+    def validate(self) -> None:
+        if not 1 <= self.n_hist < self.n_total:
+            raise ValueError(f"need 1 <= n < N: {self}")
+        if not 1 <= self.h <= self.n_hist:
+            raise ValueError(f"need 1 <= h <= n: {self}")
+        if self.n_hist <= self.p:
+            raise ValueError(f"history shorter than dof correction: {self}")
+        if self.m_chunk < 1:
+            raise ValueError(f"m_chunk must be positive: {self}")
+
+
+def design_matrix(t: jax.Array, f: jax.Array, k: int) -> jax.Array:
+    """X ∈ R^{(2+2k)×N} from a runtime time vector and frequency.
+
+    ``t`` is a *runtime input* so the same artifact serves both the
+    regular-index case (t = 1..N, f = 23) and the irregular Landsat
+    day-of-year case of §4.3 (t = fractional days, f = 365) without
+    re-lowering. Trend regressor is t/f — see ref.design_matrix.
+    """
+    ty = t / f
+    rows = [jnp.ones_like(t), ty]
+    for j in range(1, k + 1):
+        w = (2.0 * jnp.pi * j) * ty
+        rows.append(jnp.sin(w))
+        rows.append(jnp.cos(w))
+    return jnp.stack(rows)
+
+
+def gauss_jordan_inv(G: jax.Array) -> jax.Array:
+    """Inverse of a small SPD matrix via unrolled Gauss–Jordan.
+
+    p ≤ 12, so the python loop unrolls into a handful of fused HLO ops;
+    no pivoting is needed for an SPD Gram matrix. Runs in the dtype of
+    ``G`` (float64 from the caller).
+    """
+    p = G.shape[0]
+    A = jnp.concatenate([G, jnp.eye(p, dtype=G.dtype)], axis=1)  # (p, 2p)
+    for i in range(p):
+        row = A[i, :] / A[i, i]
+        elim = A[:, i : i + 1] * row[None, :]
+        mask = jnp.zeros((p, 1), dtype=G.dtype).at[i, 0].set(1.0)
+        A = (A - elim) * (1.0 - mask) + row[None, :] * mask
+    return A[:, p:]
+
+
+def fit(t: jax.Array, f: jax.Array, y_hist: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """β̂_all = M · Y_hist (Eqs. 8–9) for all pixels of the chunk.
+
+    The Gram solve runs in float64 (p×p — negligible), the big
+    (p×n)·(n×m) matmul in float32 (MXU-friendly).
+    """
+    X = design_matrix(t, f, cfg.k)  # (p, N) f32
+    Xh = X[:, : cfg.n_hist]
+    Xh64 = Xh.astype(jnp.float64)
+    G = Xh64 @ Xh64.T  # (p, p)
+    M = (gauss_jordan_inv(G) @ Xh64).astype(jnp.float32)  # (p, n)
+    return M @ y_hist  # (p, m)
+
+
+def predict(t: jax.Array, f: jax.Array, beta: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Ŷ = Xᵀ β̂_all (Eq. 10)."""
+    X = design_matrix(t, f, cfg.k)
+    return X.T @ beta  # (N, m)
+
+
+def mosum(y: jax.Array, yhat: jax.Array, w: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Normalised MOSUM process — dispatches to the L1 kernel.
+
+    ``w`` is the banded window-sum operator (kernels.mosum.window_matrix)
+    supplied as a *runtime input*: baking it as an HLO constant feeding
+    the dot miscompiles to all-zeros on xla_extension 0.5.1 (the rust
+    coordinator rebuilds the same band from the manifest shape).
+    """
+    if cfg.use_pallas:
+        return mosum_pallas(
+            y, yhat, n=cfg.n_hist, h=cfg.h, k=cfg.k, w=w, block_m=cfg.block_m
+        )
+    return mosum_xla(y, yhat, n=cfg.n_hist, h=cfg.h, k=cfg.k, w=w)
+
+
+def boundary(lam: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """b_t = λ √(log₊ (t/n)) for the monitor period (Eq. 4)."""
+    t = jnp.arange(cfg.n_hist + 1, cfg.n_total + 1, dtype=jnp.float32)
+    x = t / jnp.float32(cfg.n_hist)
+    logp = jnp.where(x <= E, 1.0, jnp.log(x))
+    return lam * jnp.sqrt(logp)  # (N - n,)
+
+
+def detect(mo: jax.Array, bound: jax.Array):
+    """Boundary crossing per pixel.
+
+    Returns (breaks i32[m], first i32[m], momax f32[m]); ``first`` is
+    the 0-based monitor index of the first crossing or -1.
+    """
+    amo = jnp.abs(mo)  # (N-n, m)
+    exceed = amo > bound[:, None]
+    has = jnp.any(exceed, axis=0)
+    idx = jnp.argmax(exceed, axis=0).astype(jnp.int32)
+    first = jnp.where(has, idx, jnp.int32(-1))
+    return has.astype(jnp.int32), first, jnp.max(amo, axis=0)
+
+
+def bfast_fused(t, f, w, y, lam, cfg: ModelConfig):
+    """The production module: whole pipeline, one executable.
+
+    Inputs
+    ------
+    t   : f32[N]  — time axis (index or fractional day-of-year)
+    f   : f32[]   — observations per period (23, 365, ...)
+    w   : f32[N-n, N] — banded window operator (see ``mosum``)
+    y   : f32[N, m_chunk] — one chunk of pixel series, time-major
+    lam : f32[]   — critical value λ(α, h/n, N/n)
+
+    Outputs: (breaks i32[m], first i32[m], momax f32[m]).
+    """
+    beta = fit(t, f, y[: cfg.n_hist, :], cfg)
+    yhat = predict(t, f, beta, cfg)
+    mo = mosum(y, yhat, w, cfg)
+    return detect(mo, boundary(lam, cfg))
+
+
+# --- phased entry points (instrumented benchmarks only) -----------------
+
+
+def phase_fit(t, f, y_hist, cfg: ModelConfig):
+    return (fit(t, f, y_hist, cfg),)
+
+
+def phase_predict(t, f, beta, cfg: ModelConfig):
+    return (predict(t, f, beta, cfg),)
+
+
+def phase_mosum(w, y, yhat, cfg: ModelConfig):
+    return (mosum(y, yhat, w, cfg),)
+
+
+def phase_detect(mo, lam, cfg: ModelConfig):
+    return detect(mo, boundary(lam, cfg))

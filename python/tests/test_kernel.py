@@ -1,0 +1,134 @@
+"""L1 correctness: the Pallas MOSUM kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes/bandwidths/dtypes; every case is also checked
+against the plain-XLA variant so the two backends can never drift.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mosum import mosum_pallas, mosum_xla
+
+
+def oracle_mosum(Y, Yhat, n, h, k):
+    N, m = Y.shape
+    out = np.empty((N - n, m))
+    for i in range(m):
+        out[:, i] = ref.mosum_ref(Y[:, i] - Yhat[:, i], n, h, k)
+    return out
+
+
+def random_case(rng, N, m, n, h, k):
+    t = np.arange(1, N + 1, dtype=np.float64)
+    Y = 0.1 * np.sin(2 * np.pi * t[:, None] / 12.0) + 0.05 * rng.standard_normal(
+        (N, m)
+    )
+    X = ref.design_matrix(t, 12.0, k)
+    beta = np.stack([ref.fit_history(X, Y[:, i], n) for i in range(m)], axis=1)
+    Yhat = X.T @ beta
+    return Y, Yhat
+
+
+@pytest.mark.parametrize("block_m", [1, 2, 7, 64, 256])
+def test_block_shapes_match_oracle(block_m):
+    rng = np.random.default_rng(0)
+    N, m, n, h, k = 80, 64, 50, 25, 2
+    Y, Yhat = random_case(rng, N, m, n, h, k)
+    got = mosum_pallas(
+        jnp.asarray(Y, jnp.float32),
+        jnp.asarray(Yhat, jnp.float32),
+        n=n,
+        h=h,
+        k=k,
+        block_m=block_m,
+    )
+    want = oracle_mosum(Y, Yhat, n, h, k)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    N=st.integers(24, 120),
+    m=st.integers(1, 40),
+    data=st.data(),
+)
+def test_hypothesis_shape_sweep(N, m, data):
+    k = data.draw(st.integers(1, 3))
+    n = data.draw(st.integers(2 + 2 * k + 2, N - 2))
+    h = data.draw(st.integers(1, n))
+    rng = np.random.default_rng(N * 1000 + m)
+    Y, Yhat = random_case(rng, N, m, n, h, k)
+    got = mosum_pallas(
+        jnp.asarray(Y, jnp.float32), jnp.asarray(Yhat, jnp.float32), n=n, h=h, k=k
+    )
+    want = oracle_mosum(Y, Yhat, n, h, k)
+    assert got.shape == (N - n, m)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.float64]))
+def test_dtype_sweep(dtype):
+    rng = np.random.default_rng(7)
+    N, m, n, h, k = 60, 16, 40, 20, 2
+    Y, Yhat = random_case(rng, N, m, n, h, k)
+    got = mosum_pallas(
+        jnp.asarray(Y, dtype), jnp.asarray(Yhat, dtype), n=n, h=h, k=k
+    )
+    want = oracle_mosum(Y, Yhat, n, h, k)
+    tol = 2e-3 if dtype == jnp.float32 else 1e-9
+    np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_pallas_equals_xla_variant():
+    rng = np.random.default_rng(3)
+    N, m, n, h, k = 100, 128, 60, 30, 3
+    Y, Yhat = random_case(rng, N, m, n, h, k)
+    yj = jnp.asarray(Y, jnp.float32)
+    yh = jnp.asarray(Yhat, jnp.float32)
+    a = mosum_pallas(yj, yh, n=n, h=h, k=k)
+    b = mosum_xla(yj, yh, n=n, h=h, k=k)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_window_is_h_terms_ending_at_t():
+    # Deterministic: residual = 1 exactly at one time step; the MOSUM
+    # must be nonzero exactly for the h monitor steps covering it.
+    N, m, n, h, k = 40, 4, 24, 6, 1  # wait: dof = n - 4 > 0
+    Y = np.zeros((N, m), dtype=np.float32)
+    Yhat = np.zeros_like(Y)
+    spike = n + 3  # 0-based time index in the monitor period
+    Y[spike, :] = 1.0
+    # history residuals must be nonzero for sigma > 0
+    rng = np.random.default_rng(1)
+    Y[:n, :] = rng.standard_normal((n, m)).astype(np.float32)
+    mo = np.asarray(mosum_pallas(jnp.asarray(Y), jnp.asarray(Yhat), n=n, h=h, k=k))
+    nz = np.abs(mo[:, 0]) > 1e-9
+    # Windows ending at t cover the spike for t in [spike, spike+h-1].
+    # Monitor indices < h-1 have windows reaching into the (noisy)
+    # history, so only assert from h-1 onwards.
+    lo = spike - n  # first monitor index whose window includes spike
+    hi = min(lo + h, N - n)
+    expect = np.zeros(N - n, dtype=bool)
+    expect[lo:hi] = True
+    np.testing.assert_array_equal(nz[h - 1 :], expect[h - 1 :])
+
+
+def test_rejects_bad_params():
+    y = jnp.zeros((10, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        mosum_pallas(y, y, n=12, h=2, k=1)  # n >= N
+    with pytest.raises(ValueError):
+        mosum_pallas(y, y, n=8, h=9, k=1)  # h > n
+    with pytest.raises(ValueError):
+        mosum_pallas(y, y, n=4, h=2, k=1)  # dof <= 0
+    with pytest.raises(ValueError):
+        mosum_pallas(y, jnp.zeros((10, 5), jnp.float32), n=8, h=2, k=1)

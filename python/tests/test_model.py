@@ -1,0 +1,200 @@
+"""L2 correctness: the batched jax pipeline vs the per-pixel oracle."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.mosum import window_matrix
+
+
+def wmat(cfg):
+    return jnp.asarray(window_matrix(cfg.n_total, cfg.n_hist, cfg.h))
+
+
+def make_cfg(N=60, n=40, h=20, k=2, m=8, use_pallas=True):
+    return model.ModelConfig(
+        n_total=N, n_hist=n, h=h, k=k, m_chunk=m, use_pallas=use_pallas
+    )
+
+
+def synth(rng, N, m, f=12.0, with_breaks=True):
+    t = np.arange(1, N + 1, dtype=np.float64)
+    Y = 0.05 * np.sin(2 * np.pi * t[:, None] / f) + 0.01 * rng.standard_normal(
+        (N, m)
+    )
+    if with_breaks:
+        Y[int(0.6 * N) :, ::2] += 0.5
+    return t, Y
+
+
+def test_gauss_jordan_inv_matches_numpy():
+    rng = np.random.default_rng(0)
+    for p in (2, 4, 8, 12):
+        A = rng.standard_normal((p, p))
+        G = A @ A.T + p * np.eye(p)  # SPD
+        got = np.asarray(model.gauss_jordan_inv(jnp.asarray(G)))
+        np.testing.assert_allclose(got, np.linalg.inv(G), rtol=1e-8, atol=1e-8)
+
+
+def test_design_matrix_matches_ref():
+    t = np.arange(1, 51, dtype=np.float64)
+    for k in (1, 3, 5):
+        got = np.asarray(
+            model.design_matrix(jnp.asarray(t, jnp.float32), jnp.float32(23.0), k)
+        )
+        want = ref.design_matrix(t, 23.0, k)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert got.shape == (2 + 2 * k, 50)
+
+
+def test_fit_matches_per_pixel_ols():
+    rng = np.random.default_rng(1)
+    cfg = make_cfg()
+    t, Y = synth(rng, cfg.n_total, cfg.m_chunk)
+    X = ref.design_matrix(t, 12.0, cfg.k)
+    want = np.stack(
+        [ref.fit_history(X, Y[:, i], cfg.n_hist) for i in range(cfg.m_chunk)], axis=1
+    )
+    got = np.asarray(
+        model.fit(
+            jnp.asarray(t, jnp.float32),
+            jnp.float32(12.0),
+            jnp.asarray(Y[: cfg.n_hist], jnp.float32),
+            cfg,
+        )
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_boundary_matches_ref():
+    cfg = make_cfg(N=120, n=30)
+    got = np.asarray(model.boundary(jnp.float32(2.5), cfg))
+    want = ref.boundary_ref(120, 30, 2.5)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    # log_+ kicks in at t/n > e: boundary constant before, growing after
+    assert np.all(got[: int(np.e * 30) - 30] == got[0])
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_fused_pipeline_matches_oracle(use_pallas):
+    rng = np.random.default_rng(2)
+    cfg = make_cfg(N=80, n=50, h=25, k=2, m=16, use_pallas=use_pallas)
+    t, Y = synth(rng, cfg.n_total, cfg.m_chunk)
+    lam = 2.0
+    breaks, first, momax, _ = ref.bfast_ref(
+        Y, t, f=12.0, n=cfg.n_hist, h=cfg.h, k=cfg.k, lam=lam
+    )
+    got_b, got_f, got_m = [
+        np.asarray(a)
+        for a in model.bfast_fused(
+            jnp.asarray(t, jnp.float32),
+            jnp.float32(12.0),
+            wmat(cfg),
+            jnp.asarray(Y, jnp.float32),
+            jnp.float32(lam),
+            cfg,
+        )
+    ]
+    np.testing.assert_array_equal(got_b, breaks)
+    np.testing.assert_array_equal(got_f, first)
+    np.testing.assert_allclose(got_m, momax, rtol=5e-3, atol=5e-3)
+
+
+def test_phased_equals_fused():
+    rng = np.random.default_rng(3)
+    cfg = make_cfg(N=70, n=45, h=20, k=3, m=12)
+    t, Y = synth(rng, cfg.n_total, cfg.m_chunk)
+    tj = jnp.asarray(t, jnp.float32)
+    fj = jnp.float32(12.0)
+    yj = jnp.asarray(Y, jnp.float32)
+    lam = jnp.float32(2.2)
+    (beta,) = model.phase_fit(tj, fj, yj[: cfg.n_hist], cfg)
+    (yhat,) = model.phase_predict(tj, fj, beta, cfg)
+    (mo,) = model.phase_mosum(wmat(cfg), yj, yhat, cfg)
+    pb, pf, pm = model.phase_detect(mo, lam, cfg)
+    fb, ff, fm = model.bfast_fused(tj, fj, wmat(cfg), yj, lam, cfg)
+    np.testing.assert_array_equal(np.asarray(pb), np.asarray(fb))
+    np.testing.assert_array_equal(np.asarray(pf), np.asarray(ff))
+    np.testing.assert_allclose(np.asarray(pm), np.asarray(fm), rtol=1e-6)
+
+
+def test_irregular_day_of_year_axis():
+    """§4.3: fractional-year time axis with uneven gaps must work."""
+    rng = np.random.default_rng(4)
+    N, n, h, k, f = 96, 64, 32, 3, 365.0
+    cfg = make_cfg(N=N, n=n, h=h, k=k, m=6)
+    # Landsat-like: ~16-day cadence with jitter and dropped scenes.
+    gaps = rng.choice([8.0, 16.0, 16.0, 24.0, 32.0], size=N)
+    t = np.cumsum(gaps)
+    Y = 0.3 + 0.1 * np.sin(2 * np.pi * t[:, None] / f) + 0.01 * rng.standard_normal(
+        (N, cfg.m_chunk)
+    )
+    Y[70:, :3] -= 0.4
+    # lam well above the 5%-alpha value (~2.39) so that random noise
+    # cannot flake the no-break pixels; the oracle-equality assertions
+    # below are the real test.
+    lam = 4.0
+    breaks, first, momax, _ = ref.bfast_ref(Y, t, f=f, n=n, h=h, k=k, lam=lam)
+    got_b, got_f, got_m = [
+        np.asarray(a)
+        for a in model.bfast_fused(
+            jnp.asarray(t, jnp.float32),
+            jnp.float32(f),
+            wmat(cfg),
+            jnp.asarray(Y, jnp.float32),
+            jnp.float32(lam),
+            cfg,
+        )
+    ]
+    np.testing.assert_array_equal(got_b, breaks)
+    assert got_b[:3].all() and not got_b[3:].any()
+    np.testing.assert_array_equal(got_f, first)
+    np.testing.assert_allclose(got_m, momax, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hypothesis_break_detection_roundtrip(seed):
+    """Injected level shifts must flag, and every pixel must agree with
+    the per-pixel float64 oracle (breaks AND first-crossing index).
+
+    No absolute "no false positive" claim is made for the flat pixels:
+    under H0 the MOSUM drifts with the parameter-estimation error (the
+    reason lambda comes from simulation in the first place).
+    """
+    rng = np.random.default_rng(seed)
+    cfg = make_cfg(N=100, n=60, h=30, k=2, m=10)
+    t, Y = synth(rng, cfg.n_total, cfg.m_chunk, with_breaks=False)
+    Y[75:, :5] += 1.0  # strong break in pixels 0..4
+    lam = 4.0
+    breaks, first, _, _ = ref.bfast_ref(
+        Y, t, f=12.0, n=cfg.n_hist, h=cfg.h, k=cfg.k, lam=lam
+    )
+    got_b, got_f, _ = model.bfast_fused(
+        jnp.asarray(t, jnp.float32),
+        jnp.float32(12.0),
+        wmat(cfg),
+        jnp.asarray(Y, jnp.float32),
+        jnp.float32(lam),
+        cfg,
+    )
+    got_b, got_f = np.asarray(got_b), np.asarray(got_f)
+    assert got_b[:5].all()
+    np.testing.assert_array_equal(got_b, breaks)
+    np.testing.assert_array_equal(got_f, first)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        make_cfg(N=50, n=50).validate()
+    with pytest.raises(ValueError):
+        make_cfg(n=20, h=21).validate()
+    with pytest.raises(ValueError):
+        make_cfg(n=6, h=2, k=3).validate()  # n <= p

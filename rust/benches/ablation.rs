@@ -1,0 +1,73 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. Pallas kernel vs plain-XLA fusion for the MOSUM stage (same math,
+//!    with/without the explicit BlockSpec schedule).
+//! 2. Coordinator queue depth (backpressure window) and staging thread
+//!    count — the transfer/compute overlap knobs.
+//! 3. Fused single-executable pipeline vs phased per-stage executables
+//!    (the cost of intermediate round-trips).
+
+use bfast::bench_support::{banner, scaled_m, Bench};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::params::BfastParams;
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    banner("ablation", "pallas-vs-xla, queue depth, fused-vs-phased");
+    let params = BfastParams::paper_synthetic();
+    let m = scaled_m(100_000);
+    let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+    let bench = Bench::quick();
+    let mut table = Table::new("ablations (seconds, steady-state)", &["config", "seconds"]);
+
+    // 1. pallas vs xla artifact
+    for name in ["default", "default_xla"] {
+        let mut runner = BfastRunner::from_manifest_dir(
+            "artifacts",
+            RunnerConfig { artifact: Some(name.into()), ..Default::default() },
+        )?;
+        let _ = runner.run(&data.stack, &params)?; // compile
+        let s = bench.run(|| runner.run(&data.stack, &params).unwrap()).secs();
+        println!("kernel={name:<12} {s:.3}s");
+        table.row(vec![format!("kernel:{name}"), Table::num(s)]);
+    }
+
+    // 2. queue depth × staging threads
+    for (depth, threads) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2)] {
+        let mut runner = BfastRunner::from_manifest_dir(
+            "artifacts",
+            RunnerConfig {
+                artifact: Some("default".into()),
+                queue_depth: depth,
+                staging_threads: threads,
+                ..Default::default()
+            },
+        )?;
+        let _ = runner.run(&data.stack, &params)?;
+        let s = bench.run(|| runner.run(&data.stack, &params).unwrap()).secs();
+        println!("queue_depth={depth} staging={threads}: {s:.3}s");
+        table.row(vec![format!("queue{depth}-stage{threads}"), Table::num(s)]);
+    }
+
+    // 3. fused vs phased
+    for phased in [false, true] {
+        let mut runner = BfastRunner::from_manifest_dir(
+            "artifacts",
+            RunnerConfig {
+                artifact: Some("default".into()),
+                phased,
+                ..Default::default()
+            },
+        )?;
+        let _ = runner.run(&data.stack, &params)?;
+        let s = bench.run(|| runner.run(&data.stack, &params).unwrap()).secs();
+        let label = if phased { "phased" } else { "fused" };
+        println!("pipeline={label}: {s:.3}s");
+        table.row(vec![format!("pipeline:{label}"), Table::num(s)]);
+    }
+
+    print!("{}", table.to_console());
+    table.save("results", "ablations")?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Fig. 2 — runtime of the four implementations vs the number of time
+//! series m, plus speedups over the naive (R-analogue) baseline.
+//!
+//! Paper setting: N=200, n=100, f=23, h=50, k=3, alpha=0.05;
+//! m = 100k..1M. Default workload is laptop-sized; crank
+//! BFAST_BENCH_SCALE (e.g. 10) to approach the paper's sizes.
+
+use bfast::bench_support::{banner, scaled_m, Bench};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::pixel::{DirectBfast, NaiveBfast};
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig2", "runtime of BFAST(R/Python/CPU/GPU) analogues vs m");
+    let params = BfastParams::paper_synthetic();
+    let bench = Bench::quick();
+    let naive_cap = 2_000usize;
+
+    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let mut table = Table::new(
+        "fig2: seconds per implementation (naive extrapolated past cap)",
+        &["m", "naive_R", "direct_Py", "cpu_multi", "device", "su_direct", "su_cpu", "su_device"],
+    );
+
+    let base = scaled_m(10_000);
+    for step in 1..=5usize {
+        let m = base * step;
+        let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+        let stack = &data.stack;
+
+        let naive_m = m.min(naive_cap);
+        let sub = stack.slice_pixels(0, naive_m);
+        let naive = NaiveBfast::new(params.clone());
+        let naive_s = bench.run(|| naive.run(&sub).unwrap()).secs() * (m as f64 / naive_m as f64);
+
+        let direct = DirectBfast::new(params.clone(), &stack.time_axis)?;
+        let direct_s = bench.run(|| direct.run(stack).unwrap()).secs();
+
+        let cpu = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
+        let cpu_s = bench.run(|| cpu.run(stack).unwrap()).secs();
+
+        let dev_s = bench.run(|| runner.run(stack, &params).unwrap()).secs();
+
+        println!(
+            "m={m:>8}  naive*={naive_s:>9.3}s  direct={direct_s:>8.3}s  cpu={cpu_s:>7.3}s  \
+             device={dev_s:>7.3}s  | speedups over naive: direct {:.0}x cpu {:.0}x device {:.0}x",
+            naive_s / direct_s,
+            naive_s / cpu_s,
+            naive_s / dev_s
+        );
+        table.row(vec![
+            m.to_string(),
+            Table::num(naive_s),
+            Table::num(direct_s),
+            Table::num(cpu_s),
+            Table::num(dev_s),
+            Table::num(naive_s / direct_s),
+            Table::num(naive_s / cpu_s),
+            Table::num(naive_s / dev_s),
+        ]);
+    }
+    print!("{}", table.to_console());
+    table.save("results", "fig2_impls")?;
+    println!("expected shape (paper): naive >> direct >> cpu > device, ratios ~constant in m");
+    Ok(())
+}

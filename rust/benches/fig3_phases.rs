@@ -1,0 +1,60 @@
+//! Fig. 3 — per-phase runtime breakdown of (a) the fused multi-core
+//! CPU implementation and (b) the device pipeline at a fixed m.
+//!
+//! The device side uses the phase-instrumented executables (fit /
+//! predict / mosum / detect as separate HLO modules) plus the measured
+//! host→device transfer — the paper's five GPU phases. A fused-path
+//! row is appended to show what the production configuration does to
+//! the same work.
+
+use bfast::bench_support::{banner, scaled_m};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig3", "phase breakdown, CPU vs device");
+    let params = BfastParams::paper_synthetic();
+    let m = scaled_m(100_000);
+    let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+
+    // (a) CPU phases
+    let cpu = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)?;
+    let (_, cpu_phases) = cpu.run(&data.stack)?; // warmup
+    let (_, cpu_phases2) = cpu.run(&data.stack)?;
+    let _ = cpu_phases;
+    print!("{}", cpu_phases2.table(&format!("(a) BFAST(CPU) phases, m={m}")));
+
+    // (b) device phases (instrumented pipeline)
+    let mut runner = BfastRunner::from_manifest_dir(
+        "artifacts",
+        RunnerConfig { phased: true, ..Default::default() },
+    )?;
+    let _ = runner.run(&data.stack, &params)?; // warmup (compiles)
+    let res = runner.run(&data.stack, &params)?;
+    print!("{}", res.phases.table(&format!("(b) BFAST(device) phases, m={m}")));
+
+    // fused-path reference (the production configuration)
+    let mut fused_runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let _ = fused_runner.run(&data.stack, &params)?;
+    let fres = fused_runner.run(&data.stack, &params)?;
+    print!("{}", fres.phases.table("(b') device fused path, same work"));
+
+    let mut t = Table::new("fig3: phase seconds", &["impl", "phase", "seconds"]);
+    for (n, d) in cpu_phases2.iter() {
+        t.row(vec!["cpu".into(), n.into(), Table::num(d.as_secs_f64())]);
+    }
+    for (n, d) in res.phases.iter() {
+        t.row(vec!["device".into(), n.into(), Table::num(d.as_secs_f64())]);
+    }
+    for (n, d) in fres.phases.iter() {
+        t.row(vec!["device-fused".into(), n.into(), Table::num(d.as_secs_f64())]);
+    }
+    t.save("results", "fig3_phases")?;
+    println!(
+        "expected shape (paper): CPU time spread across all phases; device dominated by transfer"
+    );
+    Ok(())
+}

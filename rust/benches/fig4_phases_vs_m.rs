@@ -1,0 +1,67 @@
+//! Fig. 4 — per-phase runtimes of the CPU and device implementations
+//! as m grows: every phase should scale ~linearly in m, preserving the
+//! Fig. 3 shape at each size.
+
+use bfast::bench_support::{banner, scaled_m};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig4", "phases vs m");
+    let params = BfastParams::paper_synthetic();
+    let mut cpu_table = Table::new(
+        "fig4a: CPU phase seconds vs m",
+        &["m", "create model", "predictions", "residuals", "mosum", "detect breaks"],
+    );
+    let mut dev_table = Table::new(
+        "fig4b: device phase seconds vs m",
+        &["m", "transfer", "create model", "predictions", "mosum", "detect breaks", "readback"],
+    );
+
+    let mut runner = BfastRunner::from_manifest_dir(
+        "artifacts",
+        RunnerConfig { phased: true, ..Default::default() },
+    )?;
+    let base = scaled_m(20_000);
+    for step in 1..=5usize {
+        let m = base * step;
+        let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+
+        let cpu = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)?;
+        let (_, ph) = cpu.run(&data.stack)?;
+        cpu_table.row(vec![
+            m.to_string(),
+            Table::num(ph.get("create model").unwrap_or_default().as_secs_f64()),
+            Table::num(ph.get("predictions").unwrap_or_default().as_secs_f64()),
+            Table::num(ph.get("residuals").unwrap_or_default().as_secs_f64()),
+            Table::num(ph.get("mosum").unwrap_or_default().as_secs_f64()),
+            Table::num(ph.get("detect breaks").unwrap_or_default().as_secs_f64()),
+        ]);
+
+        if step == 1 {
+            let _ = runner.run(&data.stack, &params)?; // compile warmup
+        }
+        let res = runner.run(&data.stack, &params)?;
+        let g = |n: &str| Table::num(res.phases.get(n).unwrap_or_default().as_secs_f64());
+        dev_table.row(vec![
+            m.to_string(),
+            g("transfer"),
+            g("create model"),
+            g("predictions"),
+            g("mosum"),
+            g("detect breaks"),
+            g("readback"),
+        ]);
+        println!("m={m:>8}: cpu total {:.3}s, device total {:.3}s",
+            ph.total().as_secs_f64(), res.phases.total().as_secs_f64());
+    }
+    print!("{}", cpu_table.to_console());
+    print!("{}", dev_table.to_console());
+    cpu_table.save("results", "fig4a_cpu_phases_vs_m")?;
+    dev_table.save("results", "fig4b_dev_phases_vs_m")?;
+    println!("expected shape (paper): all phases grow ~linearly; device transfer dominates at every m");
+    Ok(())
+}

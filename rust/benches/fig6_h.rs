@@ -1,0 +1,55 @@
+//! Fig. 6 — influence of the MOSUM bandwidth h (25 / 50 / 100) on the
+//! MOSUM phase and the total runtime. Only the *first* window sum
+//! depends on h (rolling update afterwards), so the paper finds no
+//! impact — our rolling-update CPU phase and cumsum-based kernel
+//! preserve that property.
+
+use bfast::bench_support::{banner, scaled_m};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::report::Table;
+use bfast::synth::ArtificialDataset;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig6", "influence of h on MOSUM phase + total");
+    let m = scaled_m(50_000);
+    let mut table = Table::new(
+        "fig6: seconds vs h",
+        &["h", "cpu_mosum", "cpu_total", "dev_mosum", "dev_total"],
+    );
+    let mut runner = BfastRunner::from_manifest_dir(
+        "artifacts",
+        RunnerConfig { phased: true, ..Default::default() },
+    )?;
+    for h in [25usize, 50, 100] {
+        let params = BfastParams::new(200, 100, h, 3, 23.0, 0.05)?;
+        let data = ArtificialDataset::new(params.clone(), m, 42).generate();
+
+        let cpu = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)?;
+        let (_, ph) = cpu.run(&data.stack)?;
+
+        runner.cfg.artifact = Some(if h == 50 { "default".into() } else { format!("h{h}") });
+        let _ = runner.run(&data.stack, &params)?; // compile warmup
+        let res = runner.run(&data.stack, &params)?;
+
+        let cpu_mosum = ph.get("mosum").unwrap_or_default().as_secs_f64();
+        let dev_mosum = res.phases.get("mosum").unwrap_or_default().as_secs_f64();
+        println!(
+            "h={h:>3}: cpu mosum {cpu_mosum:.3}s / total {:.3}s | device mosum {dev_mosum:.3}s / total {:.3}s",
+            ph.total().as_secs_f64(),
+            res.phases.total().as_secs_f64()
+        );
+        table.row(vec![
+            h.to_string(),
+            Table::num(cpu_mosum),
+            Table::num(ph.total().as_secs_f64()),
+            Table::num(dev_mosum),
+            Table::num(res.phases.total().as_secs_f64()),
+        ]);
+    }
+    print!("{}", table.to_console());
+    table.save("results", "fig6_h")?;
+    println!("expected shape (paper): h has no impact on either implementation");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Fig. 8 — Chile scene: runtime of CPU and device implementations on
+//! 1/6 .. 6/6 of the scene (the paper splits the 2400×1851 scene into
+//! six equal parts). Runtime must grow linearly; the device path must
+//! beat the fused CPU path (paper: 3.9 s vs 32.8 s at full scale).
+//! Also checks the §4.3 claims: >99 % of pixels break.
+
+use bfast::bench_support::{banner, bench_scale};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::report::Table;
+use bfast::synth::ChileScene;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    banner("fig8", "Chile scene, chunked runtimes");
+    let scale = bench_scale().sqrt();
+    let scene = ChileScene::scaled(
+        ((240.0 * scale) as usize).max(32),
+        ((186.0 * scale) as usize).max(32),
+        2017,
+    );
+    let params = scene.params();
+    let (stack, _) = scene.generate();
+    let m = stack.n_pixels();
+    println!("scene {}x{} = {m} px, N={}", scene.width, scene.height, scene.n_times);
+
+    let cpu = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
+    let mut runner = BfastRunner::from_manifest_dir(
+        "artifacts",
+        RunnerConfig { artifact: Some("chile".into()), ..Default::default() },
+    )?;
+    // compile warmup on a small slice
+    let warm = stack.slice_pixels(0, (m / 6).max(1));
+    let _ = runner.run(&warm, &params)?;
+
+    let mut table = Table::new(
+        "fig8: seconds vs scene fraction",
+        &["parts", "pixels", "cpu_s", "device_s", "speedup"],
+    );
+    let mut dev_full = 0.0;
+    let mut cpu_full = 0.0;
+    for parts in 1..=6usize {
+        let end = m * parts / 6;
+        let sub = stack.slice_pixels(0, end);
+        let t0 = Instant::now();
+        let (cpu_map, _) = cpu.run(&sub)?;
+        let cpu_s = t0.elapsed().as_secs_f64();
+        let res = runner.run(&sub, &params)?;
+        let dev_s = res.wall.as_secs_f64();
+        println!(
+            "parts={parts}: {end:>8} px  cpu={cpu_s:>7.3}s  device={dev_s:>7.3}s  \
+             breaks cpu {:.2}% dev {:.2}%",
+            100.0 * cpu_map.break_fraction(),
+            100.0 * res.map.break_fraction()
+        );
+        table.row(vec![
+            parts.to_string(),
+            end.to_string(),
+            Table::num(cpu_s),
+            Table::num(dev_s),
+            Table::num(cpu_s / dev_s),
+        ]);
+        if parts == 6 {
+            dev_full = dev_s;
+            cpu_full = cpu_s;
+            anyhow::ensure!(
+                res.map.break_fraction() > 0.95,
+                "expected near-total break coverage (paper: >99%)"
+            );
+        }
+    }
+    print!("{}", table.to_console());
+    table.save("results", "fig8_chile")?;
+    println!(
+        "full scene: cpu {cpu_full:.3}s vs device {dev_full:.3}s (paper shape: 32.8s vs 3.9s); \
+         linear growth expected"
+    );
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Wall-clock benchmark harness (replaces `criterion` for the offline
+//! build; `cargo bench` targets use `harness = false` and call into
+//! this).
+//!
+//! Methodology: `warmup` unmeasured runs, then `samples` measured
+//! runs; report median and MAD (robust to scheduler noise). Sample
+//! counts adapt to a target time budget so big-m cases don't explode
+//! the bench wall time.
+
+use crate::metrics;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median: Duration,
+    /// Median absolute deviation.
+    pub mad: Duration,
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup: usize,
+    pub max_samples: usize,
+    pub min_samples: usize,
+    /// Stop sampling when this much time was spent measuring.
+    pub budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            max_samples: 7,
+            min_samples: 3,
+            budget: Duration::from_secs(20),
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self { warmup: 1, max_samples: 3, min_samples: 2, budget: Duration::from_secs(10) }
+    }
+
+    /// Measure `f` (its return value is black-boxed).
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut secs = Vec::with_capacity(self.max_samples);
+        let started = Instant::now();
+        while secs.len() < self.max_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+            if secs.len() >= self.min_samples && started.elapsed() > self.budget {
+                break;
+            }
+        }
+        let med = metrics::median(&mut secs.clone());
+        let mut devs: Vec<f64> = secs.iter().map(|s| (s - med).abs()).collect();
+        let mad = metrics::median(&mut devs);
+        Measurement {
+            median: Duration::from_secs_f64(med),
+            mad: Duration::from_secs_f64(mad),
+            samples: secs.len(),
+        }
+    }
+}
+
+/// Opaque value sink (stable `black_box` is available since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench banner so all figure benches print uniformly.
+pub fn banner(fig: &str, what: &str) {
+    println!("\n=== {fig}: {what} ===");
+    println!(
+        "host threads={} | BFAST_BENCH_SCALE={}",
+        crate::threadpool::default_threads(),
+        bench_scale()
+    );
+}
+
+/// Global scale factor for bench workloads (`BFAST_BENCH_SCALE`, default
+/// 1.0 = paper-shaped but laptop-sized workloads; crank up to approach
+/// the paper's m = 10⁶).
+pub fn bench_scale() -> f64 {
+    std::env::var("BFAST_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&v| v > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// Scaled pixel count helper.
+pub fn scaled_m(base: usize) -> usize {
+    ((base as f64 * bench_scale()) as usize).max(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bench { warmup: 0, max_samples: 3, min_samples: 3, budget: Duration::from_secs(5) };
+        let m = b.run(|| std::thread::sleep(Duration::from_millis(10)));
+        assert!(m.median >= Duration::from_millis(9), "{m:?}");
+        assert!(m.median < Duration::from_millis(100), "{m:?}");
+        assert_eq!(m.samples, 3);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let b = Bench {
+            warmup: 0,
+            max_samples: 100,
+            min_samples: 2,
+            budget: Duration::from_millis(30),
+        };
+        let m = b.run(|| std::thread::sleep(Duration::from_millis(20)));
+        assert!(m.samples < 100, "{m:?}");
+    }
+
+    #[test]
+    fn scale_default_is_one() {
+        std::env::remove_var("BFAST_BENCH_SCALE");
+        assert_eq!(bench_scale(), 1.0);
+        assert_eq!(scaled_m(1000), 1000);
+    }
+}

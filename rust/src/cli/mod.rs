@@ -1,0 +1,236 @@
+//! Command-line parsing substrate (replaces `clap` for the offline
+//! build). Declarative flag specs with typed getters, auto-generated
+//! `--help`, and subcommand dispatch in `main.rs`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// One flag specification.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// A declarative command: name, about text, flags.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, flags: Vec::new() }
+    }
+
+    /// Value flag with a default (`--chunk 16384`).
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: Some(default), takes_value: true });
+        self
+    }
+
+    /// Required value flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, takes_value: true });
+        self
+    }
+
+    /// Boolean switch (`--verbose`).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, takes_value: false });
+        self
+    }
+
+    /// Render help text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.name, self.about);
+        for f in &self.flags {
+            let head = if f.takes_value {
+                format!("  --{} <value>", f.name)
+            } else {
+                format!("  --{}", f.name)
+            };
+            s.push_str(&format!("{head:<26} {}", f.help));
+            if let Some(d) = f.default {
+                s.push_str(&format!(" [default: {d}]"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Parse raw args (without the program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut switches: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &self.flags {
+            if f.takes_value {
+                if let Some(d) = f.default {
+                    values.insert(f.name.to_string(), d.to_string());
+                }
+            } else {
+                switches.insert(f.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                // --name=value form
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    switches.insert(name.to_string(), true);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // required flags present?
+        for f in &self.flags {
+            if f.takes_value && f.default.is_none() && !values.contains_key(f.name) {
+                bail!("missing required flag --{}\n\n{}", f.name, self.usage());
+            }
+        }
+        Ok(Matches { values, switches, positional })
+    }
+}
+
+/// Parsed arguments with typed access.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Matches {
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("flag --{name} not set"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        let s = self.str(name)?;
+        s.parse().map_err(|_| anyhow!("--{name}: expected integer, got {s:?}"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        let s = self.str(name)?;
+        s.parse().map_err(|_| anyhow!("--{name}: expected integer, got {s:?}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        let s = self.str(name)?;
+        s.parse().map_err(|_| anyhow!("--{name}: expected number, got {s:?}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of integers ("25,50,100").
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.str(name)?
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--{name}: bad list element {p:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run break detection")
+            .opt("chunk", "16384", "pixels per chunk")
+            .opt("alpha", "0.05", "significance level")
+            .req("input", "input stack path")
+            .switch("verbose", "log progress")
+    }
+
+    fn parse(args: &[&str]) -> Result<Matches> {
+        cmd().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let m = parse(&["--input", "x.bsq"]).unwrap();
+        assert_eq!(m.usize("chunk").unwrap(), 16384);
+        assert_eq!(m.f64("alpha").unwrap(), 0.05);
+        assert!(!m.flag("verbose"));
+        let m = parse(&["--input=x.bsq", "--chunk=512", "--verbose"]).unwrap();
+        assert_eq!(m.usize("chunk").unwrap(), 512);
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(parse(&["--chunk", "2"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails_with_usage() {
+        let err = parse(&["--input", "x", "--bogus"]).unwrap_err().to_string();
+        assert!(err.contains("unknown flag --bogus"));
+        assert!(err.contains("FLAGS:"));
+    }
+
+    #[test]
+    fn positional_and_lists() {
+        let c = Command::new("t", "").opt("hs", "25,50", "h values");
+        let m = c
+            .parse(&["pos1".into(), "--hs".into(), "25,50,100".into()])
+            .unwrap();
+        assert_eq!(m.positional, vec!["pos1"]);
+        assert_eq!(m.usize_list("hs").unwrap(), vec![25, 50, 100]);
+    }
+
+    #[test]
+    fn type_errors_are_caught() {
+        let m = parse(&["--input", "x", "--chunk", "abc"]).unwrap();
+        assert!(m.usize("chunk").is_err());
+    }
+
+    #[test]
+    fn switch_rejects_value() {
+        assert!(parse(&["--input", "x", "--verbose=1"]).is_err());
+    }
+}

@@ -1,0 +1,345 @@
+//! L3 coordinator — the streaming scene pipeline (the paper's system
+//! contribution, rust-side).
+//!
+//! The paper's profile shows the device pipeline is dominated by the
+//! host→device transfer of Y; its future-work section asks for that
+//! transfer to be overlapped/compressed. This coordinator implements
+//! the overlap:
+//!
+//! ```text
+//!   staging workers (CPU threads)          executor thread (owns PJRT)
+//!  ┌───────────────────────────────┐      ┌─────────────────────────────┐
+//!  │ gather chunk px range          │ ───▶ │ transfer → execute → read   │
+//!  │ pad to m_chunk, gap-fill       │ sync │ back, assemble break map    │
+//!  └───────────────────────────────┘ chan └─────────────────────────────┘
+//! ```
+//!
+//! * the bounded channel (depth = [`RunnerConfig::queue_depth`])
+//!   provides **backpressure**: staging can run at most `depth` chunks
+//!   ahead of the device, bounding memory;
+//! * chunk buffers are **recycled** through a free-list channel (no
+//!   allocation in the steady state);
+//! * PJRT handles are not `Send`, so the executor thread owns the
+//!   [`DeviceRuntime`] exclusively — the analogue of a CUDA-stream
+//!   owner thread.
+//!
+//! [`BfastRunner`] is the leader API; `phased` mode swaps the fused
+//! executable for the four per-phase executables to reproduce the
+//! paper's phase figures.
+
+use crate::fill;
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::pixel::{DirectBfast, PixelResult};
+use crate::raster::{BreakMap, ChunkPlan, TimeStack};
+use crate::runtime::{ChunkOutput, DeviceRuntime};
+use anyhow::{ensure, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Staging-side phase label (host work before the device sees data).
+pub const PHASE_STAGING: &str = "staging (host)";
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct RunnerConfig {
+    /// Artifact config name; `None` = auto-select by analysis shape.
+    pub artifact: Option<String>,
+    /// Bounded-queue depth between staging and executor (≥ 1;
+    /// 2 = classic double buffering).
+    pub queue_depth: usize,
+    /// Staging worker threads.
+    pub staging_threads: usize,
+    /// Run the per-phase executables instead of the fused one.
+    pub phased: bool,
+    /// Gap-fill NaN observations during staging (paper footnote 2).
+    pub fill_missing: bool,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        Self {
+            artifact: None,
+            queue_depth: 2,
+            staging_threads: (crate::threadpool::default_threads() / 2).max(1),
+            phased: false,
+            fill_missing: true,
+        }
+    }
+}
+
+/// Results of one coordinated run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub map: BreakMap,
+    pub phases: PhaseTimes,
+    pub chunks: usize,
+    pub artifact: String,
+    pub wall: std::time::Duration,
+}
+
+impl RunResult {
+    pub fn break_count(&self) -> usize {
+        self.map.break_count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// The leader: owns the device runtime and drives scene analyses.
+pub struct BfastRunner {
+    rt: DeviceRuntime,
+    pub cfg: RunnerConfig,
+}
+
+impl BfastRunner {
+    /// Open the runtime from an artifact directory (see `make artifacts`).
+    pub fn from_manifest_dir(dir: impl AsRef<std::path::Path>, cfg: RunnerConfig) -> Result<Self> {
+        ensure!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+        ensure!(cfg.staging_threads >= 1, "staging_threads must be >= 1");
+        Ok(Self { rt: DeviceRuntime::new(dir)?, cfg })
+    }
+
+    pub fn runtime(&self) -> &DeviceRuntime {
+        &self.rt
+    }
+
+    /// Pick the artifact for an analysis.
+    fn artifact_name(&self, params: &BfastParams) -> Result<String> {
+        if let Some(name) = &self.cfg.artifact {
+            return Ok(name.clone());
+        }
+        Ok(self
+            .rt
+            .manifest()
+            .find_fused_for(params.n_total, params.n_hist, params.h, params.k)?
+            .name
+            .clone())
+    }
+
+    /// Analyse a scene. Streams chunks through the staging → executor
+    /// pipeline; returns the assembled break map plus phase timings
+    /// (executor phases + accumulated staging time).
+    pub fn run(&mut self, stack: &TimeStack, params: &BfastParams) -> Result<RunResult> {
+        params.validate()?;
+        ensure!(
+            stack.n_times() == params.n_total,
+            "stack has {} layers, params expect N={}",
+            stack.n_times(),
+            params.n_total
+        );
+        let t0 = Instant::now();
+        let name = self.artifact_name(params)?;
+        let spec = self.rt.manifest().find(&name, "fused")?.clone();
+        ensure!(
+            spec.n_total == params.n_total
+                && spec.n_hist == params.n_hist
+                && spec.h == params.h
+                && spec.k == params.k,
+            "artifact {name} is shaped (N={}, n={}, h={}, k={}) but params are \
+             (N={}, n={}, h={}, k={})",
+            spec.n_total,
+            spec.n_hist,
+            spec.h,
+            spec.k,
+            params.n_total,
+            params.n_hist,
+            params.h,
+            params.k
+        );
+        let m = stack.n_pixels();
+        let plan = ChunkPlan::new(m, spec.m_chunk);
+        let t_axis: Vec<f32> = stack.time_axis.iter().map(|&v| v as f32).collect();
+        let freq = params.freq as f32;
+        let lambda = params.lambda as f32;
+
+        let mut map = BreakMap::zeros(m);
+        let mut phases = PhaseTimes::new();
+        let staging_ns = AtomicUsize::new(0);
+        let chunk_len = spec.n_total * spec.m_chunk;
+
+        // Compile before the clock starts ticking per-chunk (one-time;
+        // cached across runs of the same runner).
+        let fused = if self.cfg.phased { None } else { Some(self.rt.fused(&name)?) };
+        let phased = if self.cfg.phased { Some(self.rt.phased(&name)?) } else { None };
+
+        if plan.is_empty() {
+            return Ok(RunResult {
+                map,
+                phases,
+                chunks: 0,
+                artifact: name,
+                wall: t0.elapsed(),
+            });
+        }
+
+        let (full_tx, full_rx) =
+            mpsc::sync_channel::<(crate::raster::PixelChunk, Vec<f32>)>(self.cfg.queue_depth);
+        let (free_tx, free_rx) = mpsc::channel::<Vec<f32>>();
+        // Pre-seed the free list: queue_depth in flight + one being
+        // staged per worker.
+        for _ in 0..self.cfg.queue_depth + self.cfg.staging_threads {
+            let _ = free_tx.send(vec![0.0f32; chunk_len]);
+        }
+        let next_chunk = AtomicUsize::new(0);
+        let fill_missing = self.cfg.fill_missing;
+        let n_workers = self.cfg.staging_threads.min(plan.len());
+
+        let free_rx = std::sync::Mutex::new(free_rx);
+        let result: Result<()> = std::thread::scope(|scope| {
+            // --- staging workers ---------------------------------------
+            for _ in 0..n_workers {
+                let full_tx = full_tx.clone();
+                let plan = &plan;
+                let next_chunk = &next_chunk;
+                let staging_ns = &staging_ns;
+                let free_rx = &free_rx;
+                scope.spawn(move || {
+                    loop {
+                        let idx = next_chunk.fetch_add(1, Ordering::Relaxed);
+                        if idx >= plan.len() {
+                            break;
+                        }
+                        let chunk = plan.get(idx);
+                        let mut buf = free_rx
+                            .lock()
+                            .unwrap()
+                            .recv()
+                            .unwrap_or_else(|_| vec![0.0f32; chunk_len]);
+                        if buf.len() != chunk_len {
+                            buf = vec![0.0f32; chunk_len];
+                        }
+                        let s0 = Instant::now();
+                        stack.copy_chunk_padded(
+                            chunk.start,
+                            chunk.end,
+                            chunk.padded,
+                            0.0,
+                            &mut buf,
+                        );
+                        if fill_missing {
+                            fill_chunk_columns(&mut buf, spec.n_total, chunk.padded);
+                        }
+                        staging_ns
+                            .fetch_add(s0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+                        if full_tx.send((chunk, buf)).is_err() {
+                            break; // executor bailed
+                        }
+                    }
+                });
+            }
+            drop(full_tx);
+
+            // --- executor (this thread owns the PJRT handles) -----------
+            let mut done = 0usize;
+            while let Ok((chunk, buf)) = full_rx.recv() {
+                let out: ChunkOutput = match (&fused, &phased) {
+                    (Some(f), _) => {
+                        f.run_chunk(&t_axis, freq, &buf, lambda, &mut phases)?
+                    }
+                    (_, Some(p)) => {
+                        p.run_chunk(&t_axis, freq, &buf, lambda, &mut phases)?
+                    }
+                    _ => unreachable!(),
+                };
+                let w = chunk.width();
+                map.write_at(chunk.start, &out.breaks[..w], &out.first[..w], &out.momax[..w]);
+                let _ = free_tx.send(buf); // recycle
+                done += 1;
+            }
+            ensure!(done == plan.len(), "executor saw {done}/{} chunks", plan.len());
+            Ok(())
+        });
+        result?;
+        phases.add(
+            PHASE_STAGING,
+            std::time::Duration::from_nanos(staging_ns.load(Ordering::Relaxed) as u64),
+        );
+        Ok(RunResult {
+            map,
+            phases,
+            chunks: plan.len(),
+            artifact: name,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Post-hoc inspection of a single pixel on the CPU — the paper's
+    /// workflow for analysing intermediaries (residuals, MOSUM) of
+    /// interesting pixels after the device pass located the breaks.
+    pub fn inspect_pixel(
+        &self,
+        stack: &TimeStack,
+        params: &BfastParams,
+        pixel: usize,
+    ) -> Result<PixelResult> {
+        ensure!(pixel < stack.n_pixels(), "pixel {pixel} out of range");
+        let direct = DirectBfast::new(params.clone(), &stack.time_axis)?;
+        let mut y = stack.series_f64(pixel);
+        // mirror staging-side gap handling
+        let mut yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        fill::fill_series(&mut yf);
+        for (a, &b) in y.iter_mut().zip(&yf) {
+            *a = b as f64;
+        }
+        direct.run_pixel(&y).context("inspect pixel")
+    }
+}
+
+/// Forward/backward fill each column of a time-major chunk in place.
+fn fill_chunk_columns(buf: &mut [f32], n_times: usize, width: usize) {
+    debug_assert_eq!(buf.len(), n_times * width);
+    // Fast path: no NaN anywhere (bulk scan is vectorisable).
+    if !buf.iter().any(|v| v.is_nan()) {
+        return;
+    }
+    let mut series = vec![0.0f32; n_times];
+    for col in 0..width {
+        let mut has_nan = false;
+        for t in 0..n_times {
+            let v = buf[t * width + col];
+            series[t] = v;
+            has_nan |= v.is_nan();
+        }
+        if !has_nan {
+            continue;
+        }
+        fill::fill_series(&mut series);
+        for t in 0..n_times {
+            buf[t * width + col] = series[t];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        let bad = RunnerConfig { queue_depth: 0, ..Default::default() };
+        assert!(BfastRunner::from_manifest_dir("/nonexistent", bad).is_err());
+    }
+
+    #[test]
+    fn fill_chunk_handles_columns_independently() {
+        // 3 times × 2 cols; col 0 has a gap, col 1 complete
+        let mut buf = vec![1.0, 10.0, f32::NAN, 20.0, 3.0, 30.0];
+        fill_chunk_columns(&mut buf, 3, 2);
+        assert_eq!(buf, vec![1.0, 10.0, 1.0, 20.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn fill_chunk_noop_when_complete() {
+        let mut buf = vec![1.0f32; 12];
+        fill_chunk_columns(&mut buf, 3, 4);
+        assert_eq!(buf, vec![1.0f32; 12]);
+    }
+}

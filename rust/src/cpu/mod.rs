@@ -1,0 +1,271 @@
+//! BFAST(CPU) — the fused multi-core implementation of Section 3.
+//!
+//! All per-pixel model fits collapse into matrix operations shared
+//! across the scene (Eqs. 8–11):
+//!
+//! 1. **create model** — `β_all = M · Y_hist` (one parallel GEMM; M is
+//!    computed once in f64 and cast, exactly like the device path);
+//! 2. **predictions** — `Ŷ = Xᵀ · β_all` (parallel GEMM);
+//! 3. **residuals** — `R = Y − Ŷ` (parallel elementwise);
+//! 4. **MOSUMs** — rolling-window sums per pixel, vectorised across
+//!    pixel blocks row-by-row (the time-major layout makes the inner
+//!    loop contiguous — the CPU analogue of warp coalescing);
+//! 5. **detect breaks** — boundary scan per pixel.
+//!
+//! The five named phases match Fig. 3(a)/4(a)/5/6 of the paper; a
+//! [`PhaseTimes`] is returned alongside the results so the benches can
+//! print the same breakdowns.
+
+use crate::design;
+use crate::linalg;
+use crate::metrics::PhaseTimes;
+use crate::mosum;
+use crate::params::BfastParams;
+use crate::raster::{BreakMap, TimeStack};
+use crate::threadpool::{self, SyncSlice};
+use anyhow::{ensure, Result};
+
+/// Phase names (shared with the coordinator's tables).
+pub const PHASE_MODEL: &str = "create model";
+pub const PHASE_PREDICT: &str = "predictions";
+pub const PHASE_RESID: &str = "residuals";
+pub const PHASE_MOSUM: &str = "mosum";
+pub const PHASE_DETECT: &str = "detect breaks";
+
+/// Pixel-block width for the vectorised MOSUM/detect phases.
+const BLOCK: usize = 512;
+
+/// Fused multi-core BFAST over whole scenes.
+pub struct FusedCpuBfast {
+    pub params: BfastParams,
+    pub threads: usize,
+    /// M = (X_h X_hᵀ)⁻¹ X_h, f32 (p × n), from the f64 computation.
+    m_f32: Vec<f32>,
+    /// Xᵀ, f32 (N × p).
+    xt_f32: Vec<f32>,
+    bound: Vec<f64>,
+}
+
+impl FusedCpuBfast {
+    pub fn new(params: BfastParams, time_axis: &[f64]) -> Result<Self> {
+        ensure!(
+            time_axis.len() == params.n_total,
+            "time axis length {} != N {}",
+            time_axis.len(),
+            params.n_total
+        );
+        let x = design::design_matrix(time_axis, params.freq, params.k);
+        let m = design::history_pinv(&x, params.n_hist)?;
+        let bound = mosum::boundary(&params);
+        Ok(Self {
+            threads: threadpool::default_threads(),
+            m_f32: m.to_f32(),
+            xt_f32: x.transpose().to_f32(),
+            bound,
+            params,
+        })
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Full scene analysis; returns the break map and phase timings.
+    pub fn run(&self, stack: &TimeStack) -> Result<(BreakMap, PhaseTimes)> {
+        let p = &self.params;
+        ensure!(
+            stack.n_times() == p.n_total,
+            "stack has {} layers, params expect N={}",
+            stack.n_times(),
+            p.n_total
+        );
+        let (n_total, n_hist, preg) = (p.n_total, p.n_hist, p.p());
+        let m = stack.n_pixels();
+        let mut times = PhaseTimes::new();
+        if m == 0 {
+            return Ok((BreakMap::zeros(0), times));
+        }
+        let y = stack.data();
+
+        // 1. create model: beta (p × m) = M (p × n) · Y[:n] (n × m)
+        let mut beta = vec![0.0f32; preg * m];
+        times.time(PHASE_MODEL, || {
+            linalg::par_sgemm(
+                self.threads,
+                preg,
+                n_hist,
+                m,
+                &self.m_f32,
+                &y[..n_hist * m],
+                &mut beta,
+            );
+        });
+
+        // 2. predictions: yhat (N × m) = Xᵀ (N × p) · beta (p × m)
+        let mut yhat = vec![0.0f32; n_total * m];
+        times.time(PHASE_PREDICT, || {
+            linalg::par_sgemm(self.threads, n_total, preg, m, &self.xt_f32, &beta, &mut yhat);
+        });
+        drop(beta);
+
+        // 3. residuals: R = Y − Ŷ (reuse the yhat buffer)
+        let mut resid = yhat;
+        times.time(PHASE_RESID, || {
+            let view = SyncSlice::new(&mut resid);
+            threadpool::parallel_ranges(n_total * m, 1 << 16, self.threads, |s, e| {
+                let part = unsafe { view.slice_mut(s, e) };
+                for (r, &yv) in part.iter_mut().zip(&y[s..e]) {
+                    *r = yv - *r;
+                }
+            });
+        });
+
+        // 4. MOSUMs: (N − n) × m, vectorised across pixel blocks
+        let n_mon = p.n_monitor();
+        let mut mo = vec![0.0f32; n_mon * m];
+        times.time(PHASE_MOSUM, || {
+            let view = SyncSlice::new(&mut mo);
+            let dof = p.dof() as f64;
+            let h = p.h;
+            threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
+                let w = e - s;
+                let mut sigma = vec![0.0f64; w];
+                let mut acc = vec![0.0f64; w];
+                // sigma from history rows
+                for t in 0..n_hist {
+                    let row = &resid[t * m + s..t * m + e];
+                    for (sg, &r) in sigma.iter_mut().zip(row) {
+                        *sg += (r as f64) * (r as f64);
+                    }
+                }
+                let sqrt_n = (n_hist as f64).sqrt();
+                for sg in sigma.iter_mut() {
+                    *sg = (*sg / dof).sqrt() * sqrt_n; // denominator σ̂√n
+                }
+                // initial window: rows n-h .. n-1 end at t = n+1 (row n)
+                for t in n_hist + 1 - h..=n_hist {
+                    let row = &resid[t * m + s..t * m + e];
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a += r as f64;
+                    }
+                }
+                for (j, (&a, &sg)) in acc.iter().zip(&sigma).enumerate() {
+                    unsafe { view.write(s + j, (a / sg) as f32) };
+                }
+                // rolling update: t = n+2..N (1-based) → row index t-1
+                for ti in 1..n_mon {
+                    let add = &resid[(n_hist + ti) * m + s..(n_hist + ti) * m + e];
+                    let sub = &resid[(n_hist + ti - h) * m + s..(n_hist + ti - h) * m + e];
+                    for ((a, &ad), &su) in acc.iter_mut().zip(add).zip(sub) {
+                        *a += ad as f64 - su as f64;
+                    }
+                    for (j, (&a, &sg)) in acc.iter().zip(&sigma).enumerate() {
+                        unsafe { view.write(ti * m + s + j, (a / sg) as f32) };
+                    }
+                }
+            });
+        });
+        drop(resid);
+
+        // 5. detect breaks
+        let mut map = BreakMap::zeros(m);
+        times.time(PHASE_DETECT, || {
+            let vb = SyncSlice::new(&mut map.breaks);
+            let vf = SyncSlice::new(&mut map.first);
+            let vm = SyncSlice::new(&mut map.momax);
+            threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
+                let w = e - s;
+                let mut momax = vec![0.0f32; w];
+                let mut first = vec![-1i32; w];
+                for ti in 0..n_mon {
+                    let b = self.bound[ti] as f32;
+                    let row = &mo[ti * m + s..ti * m + e];
+                    for (j, &v) in row.iter().enumerate() {
+                        let a = v.abs();
+                        if a > momax[j] {
+                            momax[j] = a;
+                        }
+                        if first[j] < 0 && a > b {
+                            first[j] = ti as i32;
+                        }
+                    }
+                }
+                for j in 0..w {
+                    unsafe {
+                        vb.write(s + j, (first[j] >= 0) as i32);
+                        vf.write(s + j, first[j]);
+                        vm.write(s + j, momax[j]);
+                    }
+                }
+            });
+        });
+        Ok((map, times))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pixel::DirectBfast;
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap()
+    }
+
+    #[test]
+    fn matches_per_pixel_reference() {
+        let p = params();
+        let data = ArtificialDataset::new(p.clone(), 333, 5).generate();
+        let fused = FusedCpuBfast::new(p.clone(), &data.stack.time_axis).unwrap();
+        let (map, times) = fused.run(&data.stack).unwrap();
+        let direct = DirectBfast::new(p, &data.stack.time_axis)
+            .unwrap()
+            .run(&data.stack)
+            .unwrap();
+        assert_eq!(map.breaks, direct.breaks);
+        assert_eq!(map.first, direct.first);
+        for (a, b) in map.momax.iter().zip(&direct.momax) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}");
+        }
+        // all five phases were recorded
+        for ph in [PHASE_MODEL, PHASE_PREDICT, PHASE_RESID, PHASE_MOSUM, PHASE_DETECT] {
+            assert!(times.get(ph).is_some(), "missing phase {ph}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let p = params();
+        let data = ArtificialDataset::new(p.clone(), 97, 6).generate();
+        let f1 = FusedCpuBfast::new(p.clone(), &data.stack.time_axis)
+            .unwrap()
+            .with_threads(1);
+        let f8 = FusedCpuBfast::new(p, &data.stack.time_axis)
+            .unwrap()
+            .with_threads(8);
+        let (m1, _) = f1.run(&data.stack).unwrap();
+        let (m8, _) = f8.run(&data.stack).unwrap();
+        assert_eq!(m1.breaks, m8.breaks);
+        assert_eq!(m1.first, m8.first);
+        assert_eq!(m1.momax, m8.momax);
+    }
+
+    #[test]
+    fn empty_scene_ok() {
+        let p = params();
+        let stack = TimeStack::zeros(p.n_total, 0);
+        let fused = FusedCpuBfast::new(p, &stack.time_axis).unwrap();
+        let (map, _) = fused.run(&stack).unwrap();
+        assert_eq!(map.len(), 0);
+    }
+
+    #[test]
+    fn rejects_layer_mismatch() {
+        let p = params();
+        let stack = TimeStack::zeros(10, 4);
+        let fused = FusedCpuBfast::new(p, &crate::design::regular_time_axis(60)).unwrap();
+        assert!(fused.run(&stack).is_err());
+    }
+}

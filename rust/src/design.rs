@@ -1,0 +1,115 @@
+//! Season-trend design matrix (paper Eq. 1–2 / Alg. 1 step 1).
+//!
+//! X ∈ R^{(2+2k)×N} with row layout
+//! `[1, t/f, sin(2π·1·t/f), cos(2π·1·t/f), …, sin(2π·k·t/f), cos(2π·k·t/f)]`.
+//!
+//! The trend regressor is t/f (time in *periods*, e.g. years) rather
+//! than the raw index t — an exact reparameterisation of Eq. (1) that
+//! keeps the Gram matrix well-conditioned in f32. Identical convention
+//! in `python/compile/model.py` and `ref.py`.
+
+use crate::linalg::Mat;
+use crate::params::BfastParams;
+
+/// Regular time axis 1..=N (the §4.2 artificial-data setting).
+pub fn regular_time_axis(n_total: usize) -> Vec<f64> {
+    (1..=n_total).map(|t| t as f64).collect()
+}
+
+/// Build X from an arbitrary time axis (supports the §4.3 irregular
+/// Landsat day-of-year axis).
+pub fn design_matrix(t: &[f64], freq: f64, k: usize) -> Mat {
+    let n = t.len();
+    let p = 2 + 2 * k;
+    Mat::from_fn(p, n, |row, col| {
+        let ty = t[col] / freq;
+        match row {
+            0 => 1.0,
+            1 => ty,
+            _ => {
+                let j = (row - 2) / 2 + 1;
+                let w = 2.0 * std::f64::consts::PI * j as f64 * ty;
+                if row % 2 == 0 {
+                    w.sin()
+                } else {
+                    w.cos()
+                }
+            }
+        }
+    })
+}
+
+/// Design matrix for [`BfastParams`] on the regular axis.
+pub fn design_for(params: &BfastParams) -> Mat {
+    design_matrix(&regular_time_axis(params.n_total), params.freq, params.k)
+}
+
+/// The paper's fused precomputation (Eq. 8):
+/// `M = (X_h X_hᵀ)⁻¹ X_h ∈ R^{p×n}` with X_h the history columns.
+/// Shared by every pixel of a scene — computed once per analysis.
+pub fn history_pinv(x: &Mat, n_hist: usize) -> anyhow::Result<Mat> {
+    let p = x.rows();
+    let xh = Mat::from_fn(p, n_hist, |i, j| x[(i, j)]);
+    xh.pinv_wide()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_paper() {
+        let t = regular_time_axis(46);
+        let x = design_matrix(&t, 23.0, 2);
+        assert_eq!(x.rows(), 6);
+        assert_eq!(x.cols(), 46);
+        // row 0: intercept
+        assert!(x.row(0).iter().all(|&v| v == 1.0));
+        // row 1: trend t/f
+        assert!((x[(1, 0)] - 1.0 / 23.0).abs() < 1e-12);
+        assert!((x[(1, 45)] - 2.0).abs() < 1e-12);
+        // rows 2,3: first harmonic
+        let w = 2.0 * std::f64::consts::PI * 5.0 / 23.0;
+        assert!((x[(2, 4)] - w.sin()).abs() < 1e-12);
+        assert!((x[(3, 4)] - w.cos()).abs() < 1e-12);
+        // rows 4,5: second harmonic (j = 2)
+        let w2 = 2.0 * w;
+        assert!((x[(4, 4)] - w2.sin()).abs() < 1e-12);
+        assert!((x[(5, 4)] - w2.cos()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonics_period_exactly_f() {
+        // sin/cos rows must repeat with period f on the regular axis
+        let t = regular_time_axis(92);
+        let x = design_matrix(&t, 23.0, 3);
+        for row in 2..8 {
+            for col in 0..(92 - 23) {
+                assert!(
+                    (x[(row, col)] - x[(row, col + 23)]).abs() < 1e-9,
+                    "row {row} col {col}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_identity_on_design_rows() {
+        let p = BfastParams::paper_synthetic();
+        let x = design_for(&p);
+        let m = history_pinv(&x, p.n_hist).unwrap();
+        assert_eq!((m.rows(), m.cols()), (p.p(), p.n_hist));
+        // M · X_hᵀ = I_p
+        let xh = Mat::from_fn(p.p(), p.n_hist, |i, j| x[(i, j)]);
+        let id = m.matmul(&xh.transpose()).unwrap();
+        assert!(id.dist(&Mat::eye(p.p())) < 1e-8);
+    }
+
+    #[test]
+    fn irregular_axis_supported() {
+        let t = vec![1.5, 18.0, 33.2, 49.9, 65.0, 81.7, 97.4, 113.0, 130.1, 145.8];
+        let x = design_matrix(&t, 365.0, 1);
+        assert_eq!((x.rows(), x.cols()), (4, 10));
+        assert!((x[(1, 2)] - 33.2 / 365.0).abs() < 1e-12);
+    }
+}

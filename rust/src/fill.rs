@@ -1,0 +1,176 @@
+//! Missing-value handling (paper footnote 2: *"in case of almost
+//! complete time series, one can resort to simple schemes such as
+//! forward/backward filling to remove the missing values (spending
+//! linear time)"*).
+//!
+//! Missing observations are encoded as NaN. [`fill_series`] runs
+//! forward fill then backward fill over one series; [`fill_stack`]
+//! applies it to every pixel of a time-major stack in parallel.
+
+use crate::raster::TimeStack;
+use crate::threadpool::{self, SyncSlice};
+
+/// Per-pixel validity statistics of a stack.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ValidityStats {
+    /// Pixels with at least one missing observation.
+    pub pixels_with_gaps: usize,
+    /// Pixels that are entirely missing (cannot be filled).
+    pub pixels_all_missing: usize,
+    /// Total missing observations.
+    pub missing_values: usize,
+    /// Longest run of consecutive missing values seen anywhere.
+    pub longest_gap: usize,
+}
+
+/// Forward fill then backward fill one series in place.
+/// Returns the number of values that were missing. A series that is
+/// entirely NaN is left untouched.
+pub fn fill_series(y: &mut [f32]) -> usize {
+    let mut missing = 0;
+    let mut last: Option<f32> = None;
+    for v in y.iter_mut() {
+        if v.is_nan() {
+            missing += 1;
+            if let Some(l) = last {
+                *v = l;
+            }
+        } else {
+            last = Some(*v);
+        }
+    }
+    if missing == 0 || last.is_none() {
+        return missing; // complete, or all-NaN
+    }
+    // leading NaNs remain — backward fill
+    let mut next: Option<f32> = None;
+    for v in y.iter_mut().rev() {
+        if v.is_nan() {
+            if let Some(nx) = next {
+                *v = nx;
+            }
+        } else {
+            next = Some(*v);
+        }
+    }
+    missing
+}
+
+/// Gap statistics of one series (does not modify it).
+pub fn series_stats(y: &[f32]) -> (usize, usize) {
+    let mut missing = 0;
+    let mut longest = 0;
+    let mut run = 0;
+    for &v in y {
+        if v.is_nan() {
+            missing += 1;
+            run += 1;
+            longest = longest.max(run);
+        } else {
+            run = 0;
+        }
+    }
+    (missing, longest)
+}
+
+/// Fill every pixel of a stack in place (parallel over pixels).
+/// Stacks are time-major (`N × m`), so per-pixel series are strided;
+/// each worker gathers, fills, and scatters its pixel range.
+pub fn fill_stack(stack: &mut TimeStack, threads: usize) -> ValidityStats {
+    let n = stack.n_times();
+    let m = stack.n_pixels();
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let gaps = AtomicUsize::new(0);
+    let all_missing = AtomicUsize::new(0);
+    let missing_total = AtomicUsize::new(0);
+    let longest = AtomicUsize::new(0);
+    {
+        let data = SyncSlice::new(stack.data_mut());
+        threadpool::parallel_ranges(m, 1024, threads, |s, e| {
+            let mut series = vec![0.0f32; n];
+            for px in s..e {
+                // gather strided series (each worker owns its pixel range)
+                for (t, s) in series.iter_mut().enumerate() {
+                    *s = unsafe { data.read(t * m + px) };
+                }
+                let (miss, run) = series_stats(&series);
+                if miss == 0 {
+                    continue;
+                }
+                gaps.fetch_add(1, Ordering::Relaxed);
+                missing_total.fetch_add(miss, Ordering::Relaxed);
+                longest.fetch_max(run, Ordering::Relaxed);
+                if miss == n {
+                    all_missing.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                fill_series(&mut series);
+                for t in 0..n {
+                    unsafe { data.write(t * m + px, series[t]) };
+                }
+            }
+        });
+    }
+    ValidityStats {
+        pixels_with_gaps: gaps.load(Ordering::Relaxed),
+        pixels_all_missing: all_missing.load(Ordering::Relaxed),
+        missing_values: missing_total.load(Ordering::Relaxed),
+        longest_gap: longest.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_then_backward() {
+        let mut y = vec![f32::NAN, f32::NAN, 1.0, f32::NAN, 3.0, f32::NAN];
+        let miss = fill_series(&mut y);
+        assert_eq!(miss, 4);
+        assert_eq!(y, vec![1.0, 1.0, 1.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn complete_series_untouched() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        assert_eq!(fill_series(&mut y), 0);
+        assert_eq!(y, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn all_nan_left_alone() {
+        let mut y = vec![f32::NAN; 4];
+        assert_eq!(fill_series(&mut y), 4);
+        assert!(y.iter().all(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn stats_longest_gap() {
+        let y = [1.0, f32::NAN, f32::NAN, 2.0, f32::NAN, f32::NAN, f32::NAN, 3.0];
+        assert_eq!(series_stats(&y), (5, 3));
+    }
+
+    #[test]
+    fn stack_fill_parallel_matches_serial() {
+        let (n, m) = (10, 500);
+        let mut data = vec![0.0f32; n * m];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = (i % 17) as f32;
+        }
+        // punch holes
+        for px in (0..m).step_by(3) {
+            for t in (px % 4)..(px % 4 + 3).min(n) {
+                data[t * m + px] = f32::NAN;
+            }
+        }
+        let mut s1 = TimeStack::from_vec(n, m, data.clone()).unwrap();
+        let mut s2 = TimeStack::from_vec(n, m, data).unwrap();
+        let st1 = fill_stack(&mut s1, 1);
+        let st2 = fill_stack(&mut s2, 8);
+        assert_eq!(st1, st2);
+        assert_eq!(s1.data(), s2.data());
+        assert!(st1.pixels_with_gaps > 0);
+        assert!(!s1.data().iter().any(|v| v.is_nan()));
+    }
+}

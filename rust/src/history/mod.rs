@@ -1,0 +1,274 @@
+//! Stable-history-period selection — the ROC (reverse-ordered CUSUM)
+//! procedure of Verbesselt et al. (2012), the BFAST(monitor) component
+//! that *chooses* n when it is not known a priori.
+//!
+//! The paper's pipeline assumes "a stable history period … known in
+//! advance" (§2.1); bfastmonitor in practice derives it with ROC: run
+//! a *recursive CUSUM* test backwards from the monitoring start and cut
+//! the history at the latest boundary crossing. This module provides
+//!
+//! * [`Rls`] — recursive least squares (Sherman–Morrison P-matrix
+//!   updates), the substrate for recursive residuals;
+//! * [`rec_cusum`] — the Brown–Durbin–Evans recursive-CUSUM process;
+//! * [`roc_history_start`] — the reverse-ordered scan returning the
+//!   first index of the stable history.
+
+use crate::linalg::Mat;
+use anyhow::{ensure, Result};
+
+/// Recursive least squares over a fixed design.
+///
+/// Maintains β̂_t and P_t = (X_{1..t}ᵀ X_{1..t})⁻¹ via rank-one
+/// Sherman–Morrison updates; yields the standardised *recursive
+/// residuals* `w_t = (y_t − x_tᵀ β̂_{t−1}) / √(1 + x_tᵀ P_{t−1} x_t)`
+/// that the CUSUM test is built on.
+pub struct Rls {
+    p: usize,
+    beta: Vec<f64>,
+    pmat: Mat,
+    seen: usize,
+}
+
+impl Rls {
+    /// Initialise from the first p observations (exact solve).
+    pub fn init(xs: &[&[f64]], ys: &[f64]) -> Result<Self> {
+        let p = xs.first().map(|x| x.len()).unwrap_or(0);
+        ensure!(p > 0 && xs.len() == p && ys.len() == p, "RLS init needs exactly p rows");
+        let mut g = Mat::zeros(p, p);
+        let mut xty = vec![0.0; p];
+        for (x, &y) in xs.iter().zip(ys) {
+            ensure!(x.len() == p, "row arity");
+            for i in 0..p {
+                for j in 0..p {
+                    g[(i, j)] += x[i] * x[j];
+                }
+                xty[i] += x[i] * y;
+            }
+        }
+        // ridge the init Gram very slightly: the first p harmonic rows
+        // can be near-collinear for small t spans
+        for i in 0..p {
+            g[(i, i)] += 1e-10;
+        }
+        let pmat = g.inverse()?;
+        let beta = pmat.matvec(&xty)?;
+        Ok(Self { p, beta, pmat, seen: p })
+    }
+
+    /// Observations consumed so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Feed one observation; returns the standardised recursive
+    /// residual w_t (prediction error before updating).
+    pub fn update(&mut self, x: &[f64], y: f64) -> f64 {
+        debug_assert_eq!(x.len(), self.p);
+        // v = P x ; s = 1 + xᵀ P x
+        let v: Vec<f64> = (0..self.p)
+            .map(|i| (0..self.p).map(|j| self.pmat[(i, j)] * x[j]).sum())
+            .collect();
+        let s: f64 = 1.0 + x.iter().zip(&v).map(|(a, b)| a * b).sum::<f64>();
+        let pred: f64 = x.iter().zip(&self.beta).map(|(a, b)| a * b).sum();
+        let err = y - pred;
+        // beta += P x err / s ; P -= v vᵀ / s
+        for i in 0..self.p {
+            self.beta[i] += v[i] * err / s;
+        }
+        for i in 0..self.p {
+            for j in 0..self.p {
+                self.pmat[(i, j)] -= v[i] * v[j] / s;
+            }
+        }
+        self.seen += 1;
+        err / s.sqrt()
+    }
+}
+
+/// Recursive-CUSUM process over (X, y): returns the scaled partial
+/// sums `W_j = Σ_{t=p+1..j} w_t / (σ̂ √(n−p))` for j = p+1..n
+/// (Brown–Durbin–Evans efp), where σ̂ is the sd of the recursive
+/// residuals.
+pub fn rec_cusum(x: &Mat, y: &[f64]) -> Result<Vec<f64>> {
+    let p = x.rows();
+    let n = y.len();
+    ensure!(x.cols() == n, "design is {}x{}, y has {}", x.rows(), x.cols(), n);
+    ensure!(n > p + 1, "need more than p+1 observations");
+    let rows: Vec<Vec<f64>> = (0..n)
+        .map(|t| (0..p).map(|j| x[(j, t)]).collect())
+        .collect();
+    let init_rows: Vec<&[f64]> = rows[..p].iter().map(|r| r.as_slice()).collect();
+    let mut rls = Rls::init(&init_rows, &y[..p])?;
+    let mut w = Vec::with_capacity(n - p);
+    for t in p..n {
+        w.push(rls.update(&rows[t], y[t]));
+    }
+    let mean = w.iter().sum::<f64>() / w.len() as f64;
+    let sigma = (w.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+        / (w.len() as f64 - 1.0))
+        .sqrt();
+    let denom = sigma * (w.len() as f64).sqrt();
+    let mut acc = 0.0;
+    Ok(w.iter()
+        .map(|v| {
+            acc += v;
+            acc / denom
+        })
+        .collect())
+}
+
+/// Brown–Durbin–Evans critical value for the recursive-CUSUM boundary
+/// `b(s) = λ (1 + 2s)`, s ∈ [0, 1].
+pub fn rec_cusum_lambda(alpha: f64) -> f64 {
+    // classical tabulated values (BDE 1975 / strucchange)
+    match alpha {
+        a if a <= 0.01 => 1.143,
+        a if a <= 0.05 => 0.948,
+        a if a <= 0.10 => 0.850,
+        _ => 0.850,
+    }
+}
+
+/// ROC: reverse-ordered CUSUM history selection.
+///
+/// Runs the recursive CUSUM on the *reversed* history period (from the
+/// monitoring start backwards) and returns the 0-based index where the
+/// stable history begins: the sample just after the latest boundary
+/// crossing, or 0 if the whole history is stable.
+///
+/// `x` is the (p × n_hist) design of the candidate history,
+/// `y` the candidate history observations (chronological order).
+pub fn roc_history_start(x: &Mat, y: &[f64], alpha: f64) -> Result<usize> {
+    let p = x.rows();
+    let n = y.len();
+    ensure!(x.cols() == n, "design/history length mismatch");
+    if n <= 2 * p + 2 {
+        return Ok(0); // too short to test — keep everything
+    }
+    // reverse both
+    let yr: Vec<f64> = y.iter().rev().copied().collect();
+    let xr = Mat::from_fn(p, n, |i, j| x[(i, n - 1 - j)]);
+    let cus = rec_cusum(&xr, &yr)?;
+    let lam = rec_cusum_lambda(alpha);
+    let m = cus.len() as f64;
+    let mut crossing: Option<usize> = None; // index into cus (reversed axis)
+    for (j, &v) in cus.iter().enumerate() {
+        let s = (j + 1) as f64 / m;
+        if v.abs() > lam * (1.0 + 2.0 * s) {
+            crossing = Some(j);
+            break; // first crossing in reverse order = latest in time
+        }
+    }
+    Ok(match crossing {
+        // cus index j corresponds to reversed position p + j, i.e.
+        // chronological index n - 1 - (p + j); history starts after it
+        Some(j) => n - (p + j),
+        None => 0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::design;
+    use crate::prng::Normal;
+
+    fn design(n: usize) -> Mat {
+        design::design_matrix(&design::regular_time_axis(n), 12.0, 1)
+    }
+
+    #[test]
+    fn rls_matches_batch_ols() {
+        let n = 60;
+        let x = design(n);
+        let mut nrm = Normal::from_seed(1);
+        let y: Vec<f64> = (0..n)
+            .map(|t| {
+                0.4 + 0.02 * (t as f64 / 12.0)
+                    + 0.3 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin()
+                    + 0.05 * nrm.sample()
+            })
+            .collect();
+        let p = x.rows();
+        let rows: Vec<Vec<f64>> = (0..n).map(|t| (0..p).map(|j| x[(j, t)]).collect()).collect();
+        let init: Vec<&[f64]> = rows[..p].iter().map(|r| r.as_slice()).collect();
+        let mut rls = Rls::init(&init, &y[..p]).unwrap();
+        for t in p..n {
+            rls.update(&rows[t], y[t]);
+        }
+        // batch OLS
+        let m = design::history_pinv(&x, n).unwrap();
+        let beta = m.matvec(&y).unwrap();
+        for (a, b) in rls.beta().iter().zip(&beta) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        assert_eq!(rls.seen(), n);
+    }
+
+    #[test]
+    fn cusum_stays_inside_under_null() {
+        let n = 80;
+        let x = design(n);
+        let mut nrm = Normal::from_seed(2);
+        let y: Vec<f64> = (0..n).map(|_| nrm.sample()).collect();
+        let cus = rec_cusum(&x, &y).unwrap();
+        let lam = rec_cusum_lambda(0.01); // conservative
+        let m = cus.len() as f64;
+        let inside = cus
+            .iter()
+            .enumerate()
+            .all(|(j, v)| v.abs() <= lam * (1.0 + 2.0 * (j + 1) as f64 / m));
+        assert!(inside, "null series crossed the 1% boundary");
+    }
+
+    #[test]
+    fn roc_keeps_stable_history() {
+        let n = 100;
+        let x = design(n);
+        let mut nrm = Normal::from_seed(3);
+        let y: Vec<f64> = (0..n)
+            .map(|t| 0.3 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin() + 0.02 * nrm.sample())
+            .collect();
+        assert_eq!(roc_history_start(&x, &y, 0.05).unwrap(), 0);
+    }
+
+    #[test]
+    fn roc_cuts_at_level_shift() {
+        let n = 120;
+        let shift_at = 40; // chronological index of the break
+        let x = design(n);
+        let mut nrm = Normal::from_seed(4);
+        let y: Vec<f64> = (0..n)
+            .map(|t| {
+                let base = if t < shift_at { 2.0 } else { 0.0 };
+                base + 0.1 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin()
+                    + 0.03 * nrm.sample()
+            })
+            .collect();
+        let start = roc_history_start(&x, &y, 0.05).unwrap();
+        // CUSUM has a detection lag of a few samples when walking
+        // backwards past the break, so allow a small contamination
+        // window before the shift, and bounded trimming after it.
+        assert!(start >= shift_at - 12, "start {start} vs shift {shift_at}");
+        assert!(start <= shift_at + 25, "start {start} discards stable data");
+        assert!(start > 0, "the break must cut the history");
+    }
+
+    #[test]
+    fn roc_short_history_kept_whole() {
+        let n = 8;
+        let x = design(n);
+        let y = vec![0.1; n];
+        assert_eq!(roc_history_start(&x, &y, 0.05).unwrap(), 0);
+    }
+
+    #[test]
+    fn rec_cusum_shape_errors() {
+        let x = design(10);
+        assert!(rec_cusum(&x, &[0.0; 4]).is_err());
+    }
+}

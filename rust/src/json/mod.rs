@@ -1,0 +1,515 @@
+//! Minimal JSON substrate (replaces `serde_json` for the offline
+//! build). Parses/serialises the artifact manifest, config files and
+//! experiment reports.
+//!
+//! Full RFC 8259 value model; numbers are kept as f64 (sufficient for
+//! the shapes/params we store). Object key order is preserved.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    // -- typed accessors -------------------------------------------------
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            v => bail!("expected bool, got {}", v.kind()),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            v => bail!("expected number, got {}", v.kind()),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 * 4096.0 {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 {
+            bail!("expected integer, got {n}");
+        }
+        Ok(n as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            v => bail!("expected string, got {}", v.kind()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            v => bail!("expected array, got {}", v.kind()),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Value)]> {
+        match self {
+            Value::Obj(o) => Ok(o),
+            v => bail!("expected object, got {}", v.kind()),
+        }
+    }
+
+    /// Object member lookup (error if absent).
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.try_get(key)
+            .ok_or_else(|| anyhow!("missing key {key:?} in object"))
+    }
+
+    /// Object member lookup (None if absent or not an object).
+    pub fn try_get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(o) => o.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Arr(_) => "array",
+            Value::Obj(_) => "object",
+        }
+    }
+
+    // -- construction helpers -------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_num(xs: &[f64]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x)).collect())
+    }
+
+    pub fn arr_usize(xs: &[usize]) -> Value {
+        Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+    }
+
+    // -- serialisation ----------------------------------------------------
+
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, true);
+        s
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = |out: &mut String, n: usize| {
+            if pretty {
+                out.push('\n');
+                for _ in 0..n {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_num(out, *n),
+            Value::Str(s) => write_escaped(out, s),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    v.write(out, indent + 1, pretty);
+                }
+                if !a.is_empty() {
+                    pad(out, indent);
+                }
+                out.push(']');
+            }
+            Value::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if !o.is_empty() {
+                    pad(out, indent);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document.
+pub fn parse(input: &str) -> Result<Value> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value().context("JSON parse error")?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte {} of JSON document", p.pos);
+    }
+    Ok(v)
+}
+
+/// Parse a JSON file.
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<Value> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.pos,
+                self.peek().map(|b| b as char)
+            )
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at byte {}", other.map(|b| b as char), self.pos),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text.parse().with_context(|| format!("bad number {text:?}"))?;
+        Ok(Value::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                            let code =
+                                u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            // Surrogate pairs: only handle BMP + paired surrogates.
+                            if (0xD800..0xDC00).contains(&code) {
+                                // expect low surrogate
+                                if self.bytes.get(self.pos + 5) == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 6) == Some(&b'u')
+                                {
+                                    let hex2 = self
+                                        .bytes
+                                        .get(self.pos + 7..self.pos + 11)
+                                        .ok_or_else(|| anyhow!("truncated surrogate"))?;
+                                    let lo = u32::from_str_radix(
+                                        std::str::from_utf8(hex2)?,
+                                        16,
+                                    )?;
+                                    let c = 0x10000
+                                        + ((code - 0xD800) << 10)
+                                        + (lo - 0xDC00);
+                                    s.push(
+                                        char::from_u32(c)
+                                            .ok_or_else(|| anyhow!("bad surrogate pair"))?,
+                                    );
+                                    self.pos += 10;
+                                } else {
+                                    bail!("lone high surrogate");
+                                }
+                            } else {
+                                s.push(
+                                    char::from_u32(code)
+                                        .ok_or_else(|| anyhow!("bad \\u escape"))?,
+                                );
+                                self.pos += 4;
+                            }
+                        }
+                        other => bail!("bad escape {:?}", other.map(|b| b as char)),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // consume one UTF-8 char
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let c = rest.chars().next().unwrap();
+                    s.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                other => bail!("expected ',' or ']', found {:?}", other.map(|b| b as char)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut items: Vec<(String, Value)> = Vec::new();
+        let mut seen = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(items));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            if seen.insert(key.clone(), ()).is_some() {
+                bail!("duplicate key {key:?}");
+            }
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            items.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(items));
+                }
+                other => bail!("expected ',' or '}}', found {:?}", other.map(|b| b as char)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_like_document() {
+        let doc = r#"{"version": 1, "artifacts": [
+            {"name": "small", "phase": "fused", "m_chunk": 1024,
+             "use_pallas": true, "inputs": [{"name":"t","shape":[200],"dtype":"f32"}]}
+        ]}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize().unwrap(), 1);
+        let arts = v.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts.len(), 1);
+        assert_eq!(arts[0].get("name").unwrap().as_str().unwrap(), "small");
+        assert!(arts[0].get("use_pallas").unwrap().as_bool().unwrap());
+        let ins = arts[0].get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(
+            ins[0].get("shape").unwrap().as_arr().unwrap()[0]
+                .as_usize()
+                .unwrap(),
+            200
+        );
+    }
+
+    #[test]
+    fn roundtrip_pretty_and_compact() {
+        let v = Value::obj(vec![
+            ("a", Value::Num(1.5)),
+            ("b", Value::Arr(vec![Value::Bool(true), Value::Null])),
+            ("s", Value::Str("he\"llo\nworld".into())),
+            ("empty", Value::Obj(vec![])),
+        ]);
+        for text in [v.to_string_pretty(), v.to_string_compact()] {
+            assert_eq!(parse(&text).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn numbers() {
+        for (s, want) in [
+            ("0", 0.0),
+            ("-12", -12.0),
+            ("3.5", 3.5),
+            ("1e3", 1000.0),
+            ("-2.5E-2", -0.025),
+        ] {
+            assert_eq!(parse(s).unwrap().as_f64().unwrap(), want, "{s}");
+        }
+        assert!(parse("01abc").is_err());
+    }
+
+    #[test]
+    fn escapes_and_unicode() {
+        let v = parse(r#""é\tA 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "é\tA 😀");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["{", "[1,", "{\"a\":}", "tru", "\"abc", "{\"a\":1,\"a\":2}", "[] []"] {
+            assert!(parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let v = parse("{\"n\": 1.5}").unwrap();
+        assert!(v.get("n").unwrap().as_usize().is_err());
+        assert!(v.get("n").unwrap().as_str().is_err());
+        assert!(v.get("missing").is_err());
+        assert!(v.try_get("missing").is_none());
+    }
+}

@@ -1,0 +1,262 @@
+//! Critical value λ(α, h/n, N/n) for the MOSUM boundary (paper §2.1).
+//!
+//! The paper: *"the specific value of λ has been found by simulation
+//! of different values of α, h, and N/n"*. This module reproduces that
+//! simulation substrate two ways:
+//!
+//! * [`critical_value`] — the production lookup: Monte-Carlo on the
+//!   *limit process* of the OLS-MOSUM monitoring statistic
+//!   (`W(s) − W(s−h̄) − h̄·W(1)` for s ∈ (1, N/n], with the boundary
+//!   shape √log₊ s divided out, so λ is the (1−α)-quantile of the
+//!   normalised supremum). Deterministic seed, memoised per
+//!   (α, h̄, horizon).
+//! * [`simulate_lambda`] — the finite-sample check: simulates the
+//!   *actual* pipeline (season-trend OLS fit on iid noise, MOSUM,
+//!   sup |MO|/√log₊) for a concrete [`BfastParams`]; used by tests to
+//!   validate the limit approximation and by the `lambda-table` CLI.
+//!
+//! For the paper's Chile setting (h/n = 0.5, N/n = 2, α = 0.05) the
+//! paper quotes a boundary of 2.39 — the reference point our tests pin
+//! within tolerance.
+
+use crate::design;
+use crate::mosum;
+use crate::params::BfastParams;
+use crate::prng::{Normal, Pcg32};
+use crate::threadpool;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Grid resolution (steps per unit of rescaled time) for the limit MC.
+const GRID: usize = 256;
+/// Replications for the limit MC.
+const REPS: usize = 20_000;
+
+fn cache() -> &'static Mutex<HashMap<(u64, u64, u64), f64>> {
+    static CACHE: OnceLock<Mutex<HashMap<(u64, u64, u64), f64>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// λ such that the normalised MOSUM limit process crosses the boundary
+/// with probability α over the monitoring horizon.
+///
+/// * `alpha` ∈ (0, 1) — crossing probability (paper uses 0.05)
+/// * `h_frac` = h/n ∈ (0, 1]
+/// * `horizon` = N/n ∈ (1, 16]
+pub fn critical_value(alpha: f64, h_frac: f64, horizon: f64) -> Result<f64> {
+    ensure!(alpha > 0.0 && alpha < 1.0, "alpha in (0,1), got {alpha}");
+    ensure!(h_frac > 0.0 && h_frac <= 1.0, "h/n in (0,1], got {h_frac}");
+    ensure!(horizon > 1.0 && horizon <= 16.0, "N/n in (1,16], got {horizon}");
+    let key = (alpha.to_bits(), h_frac.to_bits(), horizon.to_bits());
+    if let Some(&v) = cache().lock().unwrap().get(&key) {
+        return Ok(v);
+    }
+    let v = limit_mc(alpha, h_frac, horizon, REPS, 0x1A3B_5C7D);
+    cache().lock().unwrap().insert(key, v);
+    Ok(v)
+}
+
+/// One path of the limit statistic: sup over the monitor grid of
+/// |W(s) − W(s−h̄) − h̄·W(1)| / √log₊(s).
+fn limit_path_stat(rng: &mut Normal, h_frac: f64, horizon: f64) -> f64 {
+    let steps_total = (horizon * GRID as f64).round() as usize;
+    let steps_hist = GRID; // history is [0, 1]
+    let dt_sqrt = (1.0 / GRID as f64).sqrt();
+    // prefix sums of Brownian increments
+    let mut w = Vec::with_capacity(steps_total + 1);
+    w.push(0.0);
+    let mut acc = 0.0;
+    for _ in 0..steps_total {
+        acc += dt_sqrt * rng.sample();
+        w.push(acc);
+    }
+    let w1 = w[steps_hist];
+    let hsteps = ((h_frac * GRID as f64).round() as usize).max(1);
+    let mut stat: f64 = 0.0;
+    for i in steps_hist + 1..=steps_total {
+        let s = i as f64 / GRID as f64;
+        let mo = w[i] - w[i - hsteps] - h_frac * w1;
+        let norm = mosum::log_plus(s).sqrt();
+        let v = (mo / norm).abs();
+        if v > stat {
+            stat = v;
+        }
+    }
+    stat
+}
+
+fn limit_mc(alpha: f64, h_frac: f64, horizon: f64, reps: usize, seed: u64) -> f64 {
+    let threads = threadpool::default_threads();
+    let stats = threadpool::parallel_map(reps, threads, |i| {
+        let mut nrm = Normal::new(Pcg32::with_stream(seed, i as u64));
+        limit_path_stat(&mut nrm, h_frac, horizon)
+    });
+    quantile(stats, 1.0 - alpha)
+}
+
+/// Empirical quantile (linear interpolation between order statistics).
+pub fn quantile(mut xs: Vec<f64>, q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    xs[lo] * (1.0 - frac) + xs[hi] * frac
+}
+
+/// Finite-sample λ for concrete params: run the real pipeline on iid
+/// Gaussian noise `reps` times, return the (1−α) quantile of
+/// sup_t |MO_t| / √log₊(t/n).
+pub fn simulate_lambda(params: &BfastParams, reps: usize, seed: u64) -> f64 {
+    let x = design::design_for(params);
+    let m = design::history_pinv(&x, params.n_hist).expect("design full rank");
+    let n_total = params.n_total;
+    let threads = threadpool::default_threads();
+    let stats = threadpool::parallel_map(reps, threads, |i| {
+        let mut nrm = Normal::new(Pcg32::with_stream(seed, i as u64));
+        let y: Vec<f64> = (0..n_total).map(|_| nrm.sample()).collect();
+        let beta = m.matvec(&y[..params.n_hist]).expect("shapes");
+        let mut r = vec![0.0; n_total];
+        for t in 0..n_total {
+            let mut pred = 0.0;
+            for (j, &b) in beta.iter().enumerate() {
+                pred += x[(j, t)] * b;
+            }
+            r[t] = y[t] - pred;
+        }
+        let mo = mosum::mosum_process(&r, params);
+        let n = params.n_hist as f64;
+        mo.iter()
+            .enumerate()
+            .map(|(idx, &v)| {
+                let t = (params.n_hist + 1 + idx) as f64;
+                v.abs() / mosum::log_plus(t / n).sqrt()
+            })
+            .fold(0.0f64, f64::max)
+    });
+    quantile(stats, 1.0 - params.alpha)
+}
+
+/// Pretty table over (α, h̄) for a fixed horizon — the `lambda-table`
+/// CLI output, analogous to the simulated tables in Verbesselt et al.
+pub fn table(horizon: f64, alphas: &[f64], h_fracs: &[f64]) -> Result<String> {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(s, "critical values lambda(alpha, h/n) at horizon N/n = {horizon}")?;
+    write!(s, "{:>8}", "h/n\\a")?;
+    for &a in alphas {
+        write!(s, "{a:>9.3}")?;
+    }
+    writeln!(s)?;
+    for &hf in h_fracs {
+        write!(s, "{hf:>8.3}")?;
+        for &a in alphas {
+            write!(s, "{:>9.3}", critical_value(a, hf, horizon)?)?;
+        }
+        writeln!(s)?;
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_basics() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(xs.clone(), 0.0), 1.0);
+        assert_eq!(quantile(xs.clone(), 1.0), 4.0);
+        assert!((quantile(xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_alpha_and_h() {
+        // smaller alpha -> larger lambda; larger window -> larger sums
+        let l05 = critical_value(0.05, 0.5, 2.0).unwrap();
+        let l10 = critical_value(0.10, 0.5, 2.0).unwrap();
+        let l01 = critical_value(0.01, 0.5, 2.0).unwrap();
+        assert!(l01 > l05 && l05 > l10, "{l01} {l05} {l10}");
+        let small_h = critical_value(0.05, 0.25, 2.0).unwrap();
+        assert!(l05 > small_h, "{l05} vs {small_h}");
+    }
+
+    #[test]
+    fn chile_setting_near_paper_quoted_239() {
+        // paper §4.3: boundary at 2.39 for h/n=0.5, N/n=2, alpha=0.05
+        let lam = critical_value(0.05, 0.5, 2.0).unwrap();
+        assert!(
+            (lam - 2.39).abs() < 0.25,
+            "limit-MC lambda {lam} too far from paper's 2.39"
+        );
+    }
+
+    #[test]
+    fn limit_matches_mean_model_finite_sample() {
+        // Validate the limit MC against a finite-sample process whose
+        // design matches its assumptions (intercept-only OLS): the
+        // (1-alpha) quantile of sup |MO|/sqrt(log+) must agree.
+        let (n, n_tot, h) = (100usize, 200usize, 50usize);
+        let reps = 4000;
+        let stats = crate::threadpool::parallel_map(reps, crate::threadpool::default_threads(), |i| {
+            let mut nrm = Normal::new(crate::prng::Pcg32::with_stream(99, i as u64));
+            let y: Vec<f64> = (0..n_tot).map(|_| nrm.sample()).collect();
+            let mean = y[..n].iter().sum::<f64>() / n as f64;
+            let r: Vec<f64> = y.iter().map(|v| v - mean).collect();
+            let sigma =
+                (r[..n].iter().map(|x| x * x).sum::<f64>() / (n - 1) as f64).sqrt();
+            let denom = sigma * (n as f64).sqrt();
+            let mut acc: f64 = r[n + 1 - h..=n].iter().sum();
+            let mut stat: f64 = 0.0;
+            for t in n + 1..=n_tot {
+                if t > n + 1 {
+                    acc += r[t - 1] - r[t - 1 - h];
+                }
+                let norm = crate::mosum::log_plus(t as f64 / n as f64).sqrt();
+                stat = stat.max((acc / denom / norm).abs());
+            }
+            stat
+        });
+        let fin = quantile(stats, 0.95);
+        let lim = critical_value(0.05, 0.5, 2.0).unwrap();
+        let rel = (fin - lim).abs() / lim;
+        assert!(rel < 0.1, "finite {fin} vs limit {lim} (rel {rel:.3})");
+    }
+
+    #[test]
+    fn finite_sample_with_trend_exceeds_limit() {
+        // With a trending regressor the beta-hat extrapolation drift
+        // inflates the finite-sample quantile above the limit value —
+        // the reason bfastmonitor analyses use conservative alphas.
+        // Documented in EXPERIMENTS.md; here we pin the ordering.
+        let p = BfastParams::with_lambda(200, 100, 50, 3, 23.0, 0.05, 1.0).unwrap();
+        let fin = simulate_lambda(&p, 1000, 7);
+        let lim = critical_value(0.05, 0.5, 2.0).unwrap();
+        assert!(fin > lim, "finite {fin} should exceed limit {lim}");
+        assert!(fin < 4.0 * lim, "finite {fin} implausibly large vs {lim}");
+    }
+
+    #[test]
+    fn determinism() {
+        let a = critical_value(0.05, 0.5, 2.0).unwrap();
+        let b = critical_value(0.05, 0.5, 2.0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_bad_domain() {
+        assert!(critical_value(0.0, 0.5, 2.0).is_err());
+        assert!(critical_value(0.05, 0.0, 2.0).is_err());
+        assert!(critical_value(0.05, 1.5, 2.0).is_err());
+        assert!(critical_value(0.05, 0.5, 1.0).is_err());
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = table(2.0, &[0.05], &[0.5]).unwrap();
+        assert!(t.contains("lambda"));
+        assert!(t.lines().count() >= 3);
+    }
+}

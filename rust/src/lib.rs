@@ -1,0 +1,63 @@
+//! # bfast — massively-parallel break detection for satellite data
+//!
+//! A production reproduction of *"Massively-Parallel Break Detection
+//! for Satellite Data"* (von Mehren et al., 2018): the BFAST(monitor)
+//! structural-change procedure of Verbesselt et al. applied to every
+//! pixel of a satellite image time-series stack, executed through an
+//! AOT-compiled JAX/Pallas pipeline on an XLA/PJRT device, coordinated
+//! from rust.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the streaming coordinator ([`coordinator`]):
+//!   scene source → gap-fill → chunking → staged device transfer →
+//!   executor → break-map assembly, plus all CPU baselines
+//!   ([`pixel`], [`cpu`]) the paper evaluates against.
+//! * **L2/L1 (python/compile)** — the batched BFAST compute graph and
+//!   its Pallas MOSUM kernel, lowered once to `artifacts/*.hlo.txt`.
+//! * **runtime** ([`runtime`]) — loads those artifacts through the
+//!   `xla` crate's PJRT client and executes them from the request path
+//!   (no python anywhere near it).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use bfast::params::BfastParams;
+//! use bfast::synth::artificial::ArtificialDataset;
+//! use bfast::coordinator::{BfastRunner, RunnerConfig};
+//!
+//! let params = BfastParams::new(200, 100, 50, 3, 23.0, 0.05).unwrap();
+//! let data = ArtificialDataset::new(params.clone(), 10_000, 42).generate();
+//! let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default()).unwrap();
+//! let result = runner.run(&data.stack, &params).unwrap();
+//! println!("{} of {} pixels broke", result.break_count(), result.len());
+//! ```
+//!
+//! Substrate modules ([`prng`], [`linalg`], [`json`], [`threadpool`],
+//! [`cli`], [`propcheck`], [`bench_support`]) exist because the build
+//! environment is fully offline — see DESIGN.md §3.
+
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod cpu;
+pub mod design;
+pub mod fill;
+pub mod history;
+pub mod json;
+pub mod lambda;
+pub mod linalg;
+pub mod metrics;
+pub mod mosum;
+pub mod params;
+pub mod pixel;
+pub mod prng;
+pub mod propcheck;
+pub mod raster;
+pub mod report;
+pub mod runtime;
+pub mod synth;
+pub mod threadpool;
+
+/// Crate-wide result type (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

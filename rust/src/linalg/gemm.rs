@@ -1,0 +1,207 @@
+//! f32 blocked GEMM — the multi-core hot path of the fused CPU
+//! implementation (β = M·Y_hist, Ŷ = Xᵀ·β with m up to 10⁶ pixels).
+//!
+//! Row-major, no allocation, cache-blocked with an ikj inner order so
+//! the innermost loop streams both B and C rows (auto-vectorises to
+//! AVX on the target). A second entry point accumulates into C for
+//! panel-parallel callers.
+
+/// Cache block sizes: A-panel rows × K block must fit in L1-ish,
+/// B row segments stream through L2.
+const MC: usize = 64;
+const KC: usize = 128;
+const NC: usize = 4096;
+
+/// C = A·B. A is (m × k), B is (k × n), C is (m × n); all row-major.
+pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "sgemm: A size");
+    assert_eq!(b.len(), k * n, "sgemm: B size");
+    assert_eq!(c.len(), m * n, "sgemm: C size");
+    c.fill(0.0);
+    sgemm_acc(m, k, n, a, b, c);
+}
+
+/// C += A·B (same shapes as [`sgemm`]); caller owns the initial C.
+pub fn sgemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "sgemm: A size");
+    assert_eq!(b.len(), k * n, "sgemm: B size");
+    assert_eq!(c.len(), m * n, "sgemm: C size");
+    for jc in (0..n).step_by(NC) {
+        let nb = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            for ic in (0..m).step_by(MC) {
+                let mb = MC.min(m - ic);
+                // micro: ikj over the block
+                for i in 0..mb {
+                    let arow = &a[(ic + i) * k + pc..(ic + i) * k + pc + kb];
+                    let crow = &mut c[(ic + i) * n + jc..(ic + i) * n + jc + nb];
+                    for (p, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[(pc + p) * n + jc..(pc + p) * n + jc + nb];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Compute the column panel `C[:, j0..j1] (+)= A · B[:, j0..j1]` where
+/// A is (m × k), B is (k × n) and C is (m × n), all row-major with
+/// their full widths as leading dimensions. Panels with disjoint
+/// `[j0, j1)` touch disjoint C elements, so this is the unit of
+/// thread-parallel GEMM (see [`par_sgemm`]).
+///
+/// # Safety
+/// `c` is a raw view over the full C buffer; the caller guarantees
+/// that concurrent calls use disjoint column ranges.
+pub unsafe fn sgemm_cols(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &crate::threadpool::SyncSlice<'_, f32>,
+    j0: usize,
+    j1: usize,
+    acc: bool,
+) {
+    debug_assert!(j0 <= j1 && j1 <= n);
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let nb = j1 - j0;
+    if nb == 0 {
+        return;
+    }
+    for i in 0..m {
+        let crow = unsafe { c.slice_mut(i * n + j0, i * n + j0 + nb) };
+        if !acc {
+            crow.fill(0.0);
+        }
+        for pc in (0..k).step_by(KC) {
+            let kb = KC.min(k - pc);
+            let arow = &a[i * k + pc..i * k + pc + kb];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[(pc + p) * n + j0..(pc + p) * n + j0 + nb];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Thread-parallel C = A·B by column panels (the m-pixel axis of the
+/// BFAST batched fit/predict matmuls).
+pub fn par_sgemm(
+    threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "par_sgemm: A size");
+    assert_eq!(b.len(), k * n, "par_sgemm: B size");
+    assert_eq!(c.len(), m * n, "par_sgemm: C size");
+    let panel = 2048usize;
+    let view = crate::threadpool::SyncSlice::new(c);
+    crate::threadpool::parallel_ranges(n, panel, threads, |j0, j1| {
+        // SAFETY: parallel_ranges hands out disjoint [j0, j1).
+        unsafe { sgemm_cols(m, k, n, a, b, &view, j0, j1, false) };
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] as f64 * b[p * n + j] as f64;
+                }
+            }
+        }
+        c.into_iter().map(|x| x as f32).collect()
+    }
+
+    fn rand_vec(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn matches_naive_over_shapes() {
+        let mut rng = Pcg32::new(10);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (8, 8, 8),
+            (65, 129, 33),   // crosses block boundaries
+            (64, 128, 4096), // exactly one block
+            (2, 300, 17),
+            (130, 7, 4100),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c = vec![0.0; m * n];
+            sgemm(m, k, n, &a, &b, &mut c);
+            let want = naive(m, k, n, &a, &b);
+            for (i, (&x, &y)) in c.iter().zip(&want).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                    "({m},{k},{n}) idx {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let mut rng = Pcg32::new(11);
+        let (m, k, n) = (4, 6, 5);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![1.0f32; m * n];
+        sgemm_acc(m, k, n, &a, &b, &mut c);
+        let want = naive(m, k, n, &a, &b);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - (y + 1.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn par_sgemm_matches_serial() {
+        let mut rng = Pcg32::new(12);
+        let (m, k, n) = (8, 100, 5000);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        sgemm(m, k, n, &a, &b, &mut c1);
+        par_sgemm(4, m, k, n, &a, &b, &mut c2);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sgemm: A size")]
+    fn panics_on_bad_shape() {
+        let mut c = vec![0.0; 4];
+        sgemm(2, 2, 2, &[0.0; 3], &[0.0; 4], &mut c);
+    }
+}

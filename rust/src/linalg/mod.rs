@@ -1,0 +1,411 @@
+//! Dense linear algebra substrate (replaces BLAS/LAPACK/numpy for the
+//! offline build).
+//!
+//! Two tiers, matching how the paper's pipeline uses linear algebra:
+//!
+//! * [`Mat`] — small f64 matrices (design matrix, Gram, pseudo-inverse;
+//!   p = 2+2k ≤ 12, n ≤ a few hundred). Clarity over speed.
+//! * [`sgemm`] — the f32 hot path: blocked row-major matmul used by the
+//!   fused multi-core implementation for β = M·Y and Ŷ = Xᵀβ where the
+//!   pixel axis m reaches 10⁶.
+
+pub mod gemm;
+
+pub use gemm::{par_sgemm, sgemm, sgemm_acc};
+
+use anyhow::{bail, ensure, Result};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        ensure!(
+            data.len() == rows * cols,
+            "Mat::from_vec: {}x{} needs {} elements, got {}",
+            rows,
+            cols,
+            rows * cols,
+            data.len()
+        );
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build row-by-row from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// C = self · other.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        ensure!(
+            self.cols == other.rows,
+            "matmul: {}x{} · {}x{}",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj order: stream over rows of `other`, vectorises well.
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self[(i, kk)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(kk);
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// C = self · otherᵀ — avoids materialising the transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Result<Mat> {
+        ensure!(
+            self.cols == other.cols,
+            "matmul_nt: {}x{} · ({}x{})ᵀ",
+            self.rows,
+            self.cols,
+            other.rows,
+            other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                out[(i, j)] = dot(arow, other.row(j));
+            }
+        }
+        Ok(out)
+    }
+
+    /// y = self · x for a vector x.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        ensure!(self.cols == x.len(), "matvec: {}x{} · {}", self.rows, self.cols, x.len());
+        Ok((0..self.rows).map(|i| dot(self.row(i), x)).collect())
+    }
+
+    /// Inverse via Gauss–Jordan with partial pivoting.
+    pub fn inverse(&self) -> Result<Mat> {
+        ensure!(self.rows == self.cols, "inverse of non-square {}x{}", self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Mat::eye(n);
+        for col in 0..n {
+            // partial pivot
+            let mut piv = col;
+            let mut best = a[(col, col)].abs();
+            for r in col + 1..n {
+                if a[(r, col)].abs() > best {
+                    best = a[(r, col)].abs();
+                    piv = r;
+                }
+            }
+            if best < 1e-300 {
+                bail!("inverse: singular matrix (pivot {col})");
+            }
+            if piv != col {
+                a.swap_rows(piv, col);
+                inv.swap_rows(piv, col);
+            }
+            let d = a[(col, col)];
+            for j in 0..n {
+                a[(col, j)] /= d;
+                inv[(col, j)] /= d;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    a[(r, j)] -= f * a[(col, j)];
+                    inv[(r, j)] -= f * inv[(col, j)];
+                }
+            }
+        }
+        Ok(inv)
+    }
+
+    /// Cholesky factor L (lower) of an SPD matrix: self = L·Lᵀ.
+    pub fn cholesky(&self) -> Result<Mat> {
+        ensure!(self.rows == self.cols, "cholesky of non-square");
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: matrix not positive definite (diag {i}: {s})");
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve self · x = b for SPD self via Cholesky (b may be multi-column).
+    pub fn solve_spd(&self, b: &Mat) -> Result<Mat> {
+        ensure!(self.rows == b.rows, "solve_spd: {}x{} vs rhs {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let l = self.cholesky()?;
+        let n = self.rows;
+        let mut x = b.clone();
+        // forward substitution L·z = b
+        for col in 0..x.cols {
+            for i in 0..n {
+                let mut s = x[(i, col)];
+                for k in 0..i {
+                    s -= l[(i, k)] * x[(k, col)];
+                }
+                x[(i, col)] = s / l[(i, i)];
+            }
+            // back substitution Lᵀ·x = z
+            for i in (0..n).rev() {
+                let mut s = x[(i, col)];
+                for k in i + 1..n {
+                    s -= l[(k, i)] * x[(k, col)];
+                }
+                x[(i, col)] = s / l[(i, i)];
+            }
+        }
+        Ok(x)
+    }
+
+    /// Moore–Penrose style left pseudo-inverse used by BFAST (Eq. 8):
+    /// M = (self · selfᵀ)⁻¹ · self, for a wide full-row-rank matrix.
+    pub fn pinv_wide(&self) -> Result<Mat> {
+        let g = self.matmul_nt(self)?; // (p, p)
+        g.solve_spd(self)
+    }
+
+    /// Frobenius-norm distance to another matrix.
+    pub fn dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        let (a, b) = (a.min(b), a.max(b));
+        let (top, bot) = self.data.split_at_mut(b * self.cols);
+        top[a * self.cols..(a + 1) * self.cols]
+            .swap_with_slice(&mut bot[..self.cols]);
+    }
+
+    /// Cast to a flat row-major f32 buffer.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    fn random_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    fn random_spd(rng: &mut Pcg32, n: usize) -> Mat {
+        let a = random_mat(rng, n, n);
+        let mut g = a.matmul_nt(&a).unwrap();
+        for i in 0..n {
+            g[(i, i)] += n as f64; // well-conditioned
+        }
+        g
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_of_transpose() {
+        let mut rng = Pcg32::new(1);
+        let a = random_mat(&mut rng, 5, 7);
+        let b = random_mat(&mut rng, 4, 7);
+        let c1 = a.matmul_nt(&b).unwrap();
+        let c2 = a.matmul(&b.transpose()).unwrap();
+        assert!(c1.dist(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Pcg32::new(2);
+        for n in [1, 2, 5, 9] {
+            let a = random_spd(&mut rng, n);
+            let inv = a.inverse().unwrap();
+            let id = a.matmul(&inv).unwrap();
+            assert!(id.dist(&Mat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn inverse_rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 4.]).unwrap();
+        assert!(a.inverse().is_err());
+    }
+
+    #[test]
+    fn inverse_needs_pivoting_case() {
+        // zero leading pivot — fails without partial pivoting
+        let a = Mat::from_vec(2, 2, vec![0., 1., 1., 0.]).unwrap();
+        let inv = a.inverse().unwrap();
+        assert!(inv.dist(&a) < 1e-14); // own inverse
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg32::new(3);
+        let g = random_spd(&mut rng, 8);
+        let l = g.cholesky().unwrap();
+        let back = l.matmul_nt(&l).unwrap();
+        assert!(back.dist(&g) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 2., 1.]).unwrap();
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn solve_spd_matches_inverse() {
+        let mut rng = Pcg32::new(4);
+        let g = random_spd(&mut rng, 6);
+        let b = random_mat(&mut rng, 6, 3);
+        let x1 = g.solve_spd(&b).unwrap();
+        let x2 = g.inverse().unwrap().matmul(&b).unwrap();
+        assert!(x1.dist(&x2) < 1e-9);
+    }
+
+    #[test]
+    fn pinv_wide_is_left_identity_on_range() {
+        // For wide full-rank X: M = (XXᵀ)⁻¹X satisfies M·Xᵀ = I.
+        let mut rng = Pcg32::new(5);
+        let x = random_mat(&mut rng, 4, 20);
+        let m = x.pinv_wide().unwrap();
+        let id = m.matmul(&x.transpose()).unwrap();
+        assert!(id.dist(&Mat::eye(4)) < 1e-9);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg32::new(6);
+        let a = random_mat(&mut rng, 5, 4);
+        let x: Vec<f64> = (0..4).map(|_| rng.uniform()).collect();
+        let y = a.matvec(&x).unwrap();
+        let xm = Mat::from_vec(4, 1, x).unwrap();
+        let ym = a.matmul(&xm).unwrap();
+        for i in 0..5 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+        assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(a.matvec(&[0.0; 2]).is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! `bfast` — the leader binary: generate data, run break detection
+//! through any of the four implementations, inspect pixels, and print
+//! critical-value tables.
+
+use anyhow::{bail, Result};
+use bfast::cli::Command;
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::pixel::{DirectBfast, NaiveBfast};
+use bfast::raster::{io as rio, pgm};
+use bfast::synth::{ArtificialDataset, ChileScene};
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+const TOPLEVEL: &str = "\
+bfast — massively-parallel break detection for satellite data
+
+USAGE: bfast <command> [flags]   (bfast <command> --help for details)
+
+COMMANDS:
+  info          show artifact manifest + device platform
+  generate      write a synthetic .bsq stack (artificial or chile)
+  run           analyse a .bsq stack (engine: device|cpu|direct|naive)
+  inspect       per-pixel MOSUM/fit details for one pixel
+  lambda-table  print simulated critical values λ(α, h/n)
+";
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{TOPLEVEL}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "generate" => cmd_generate(rest),
+        "run" => cmd_run(rest),
+        "inspect" => cmd_inspect(rest),
+        "lambda-table" => cmd_lambda(rest),
+        "--help" | "-h" | "help" => {
+            print!("{TOPLEVEL}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{TOPLEVEL}"),
+    }
+}
+
+fn params_from(m: &bfast::cli::Matches) -> Result<BfastParams> {
+    let n_total = m.usize("n-total")?;
+    let n_hist = m.usize("n-hist")?;
+    BfastParams::new(
+        n_total,
+        n_hist,
+        m.usize("h")?,
+        m.usize("k")?,
+        m.f64("freq")?,
+        m.f64("alpha")?,
+    )
+}
+
+fn param_flags(c: Command) -> Command {
+    c.opt("n-total", "200", "series length N")
+        .opt("n-hist", "100", "stable history length n")
+        .opt("h", "50", "MOSUM bandwidth")
+        .opt("k", "3", "harmonic terms")
+        .opt("freq", "23", "observations per period f")
+        .opt("alpha", "0.05", "significance level")
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let cmd = Command::new("info", "show artifacts + device")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let m = cmd.parse(args)?;
+    let rt = bfast::runtime::DeviceRuntime::new(m.str("artifacts")?)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest().artifacts.len());
+    for a in &rt.manifest().artifacts {
+        println!(
+            "  {:<14} {:<8} N={:<4} n={:<4} h={:<4} k={} m_chunk={:<6} pallas={}",
+            a.name, a.phase, a.n_total, a.n_hist, a.h, a.k, a.m_chunk, a.use_pallas
+        );
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let cmd = param_flags(
+        Command::new("generate", "write a synthetic stack")
+            .req("out", "output .bsq path")
+            .opt("kind", "artificial", "artificial | chile")
+            .opt("m", "10000", "pixels (artificial)")
+            .opt("width", "240", "scene width (chile)")
+            .opt("height", "186", "scene height (chile)")
+            .opt("seed", "42", "generator seed")
+            .opt("cloud-rate", "0", "missing-value probability (chile)"),
+    );
+    let m = cmd.parse(args)?;
+    let out = m.str("out")?;
+    match m.str("kind")? {
+        "artificial" => {
+            let params = params_from(&m)?;
+            let data = ArtificialDataset::new(params, m.usize("m")?, m.u64("seed")?).generate();
+            rio::write_stack(out, &data.stack)?;
+            println!(
+                "wrote {out}: {} x {} (artificial, {} with injected breaks)",
+                data.stack.n_times(),
+                data.stack.n_pixels(),
+                data.truth.iter().filter(|&&t| t).count()
+            );
+        }
+        "chile" => {
+            let scene = ChileScene {
+                width: m.usize("width")?,
+                height: m.usize("height")?,
+                seed: m.u64("seed")?,
+                cloud_rate: m.f64("cloud-rate")?,
+                ..ChileScene::default()
+            };
+            let (stack, truth) = scene.generate();
+            rio::write_stack(out, &stack)?;
+            println!(
+                "wrote {out}: {} x {} ({}x{} chile scene, {} forest px)",
+                stack.n_times(),
+                stack.n_pixels(),
+                scene.width,
+                scene.height,
+                truth.is_forest.iter().filter(|&&f| f).count()
+            );
+        }
+        other => bail!("unknown kind {other:?} (artificial|chile)"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cmd = param_flags(
+        Command::new("run", "analyse a stack")
+            .req("input", "input .bsq stack")
+            .opt("engine", "device", "device | cpu | direct | naive")
+            .opt("artifacts", "artifacts", "artifact directory (device)")
+            .opt("artifact", "", "artifact config name override (device)")
+            .opt("queue-depth", "2", "staging queue depth (device)")
+            .opt("staging-threads", "0", "staging threads, 0 = auto (device)")
+            .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
+            .switch("phased", "run the per-phase executables (instrumented)")
+            .switch("timings", "print the phase breakdown"),
+    );
+    let m = cmd.parse(args)?;
+    let stack = rio::read_stack(m.str("input")?)?;
+    let params = params_from(&m)?;
+    let t0 = Instant::now();
+    let (map, phases) = match m.str("engine")? {
+        "device" => {
+            let mut cfg = RunnerConfig {
+                phased: m.flag("phased"),
+                queue_depth: m.usize("queue-depth")?,
+                ..Default::default()
+            };
+            if m.usize("staging-threads")? > 0 {
+                cfg.staging_threads = m.usize("staging-threads")?;
+            }
+            let name = m.str("artifact")?;
+            if !name.is_empty() {
+                cfg.artifact = Some(name.to_string());
+            }
+            let mut runner = BfastRunner::from_manifest_dir(m.str("artifacts")?, cfg)?;
+            let res = runner.run(&stack, &params)?;
+            println!(
+                "device run: artifact={} chunks={} wall={:.3}s",
+                res.artifact,
+                res.chunks,
+                res.wall.as_secs_f64()
+            );
+            (res.map, Some(res.phases))
+        }
+        "cpu" => {
+            let eng = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
+            let (map, times) = eng.run(&stack)?;
+            (map, Some(times))
+        }
+        "direct" => (DirectBfast::new(params.clone(), &stack.time_axis)?.run(&stack)?, None),
+        "naive" => (NaiveBfast::new(params.clone()).run(&stack)?, None),
+        other => bail!("unknown engine {other:?}"),
+    };
+    let wall = t0.elapsed();
+    println!(
+        "{} pixels, {} breaks ({:.2}%) in {:.3}s  [lambda={:.3}]",
+        map.len(),
+        map.break_count(),
+        100.0 * map.break_fraction(),
+        wall.as_secs_f64(),
+        params.lambda
+    );
+    if m.flag("timings") {
+        if let Some(p) = &phases {
+            print!("{}", p.table("phase breakdown"));
+        }
+    }
+    let pgm_path = m.str("momax-pgm")?;
+    if !pgm_path.is_empty() {
+        let (w, h) = match (stack.width, stack.height) {
+            (Some(w), Some(h)) => (w, h),
+            _ => (map.len(), 1),
+        };
+        let (lo, hi) = pgm::write_pgm_autoscale(pgm_path, &map.momax, w, h)?;
+        println!("wrote {pgm_path} (scale {lo:.2}..{hi:.2})");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let cmd = param_flags(
+        Command::new("inspect", "per-pixel detail")
+            .req("input", "input .bsq stack")
+            .req("pixel", "pixel index")
+            .opt("artifacts", "artifacts", "artifact directory"),
+    );
+    let m = cmd.parse(args)?;
+    let stack = rio::read_stack(m.str("input")?)?;
+    let params = params_from(&m)?;
+    let px = m.usize("pixel")?;
+    let runner =
+        BfastRunner::from_manifest_dir(m.str("artifacts")?, RunnerConfig::default())?;
+    let res = runner.inspect_pixel(&stack, &params, px)?;
+    println!(
+        "pixel {px}: break={} first={} momax={:.3}",
+        res.scan.has_break, res.scan.first, res.scan.momax
+    );
+    let bound = bfast::mosum::boundary(&params);
+    println!("  t        MO_t     bound");
+    for (i, (mo, b)) in res.mosum.iter().zip(&bound).enumerate() {
+        let t = params.n_hist + 1 + i;
+        let mark = if mo.abs() > *b { "  <-- break" } else { "" };
+        println!("  {t:<6} {mo:>8.3}  {b:>8.3}{mark}");
+    }
+    Ok(())
+}
+
+fn cmd_lambda(args: &[String]) -> Result<()> {
+    let cmd = Command::new("lambda-table", "simulated critical values")
+        .opt("horizon", "2", "monitoring horizon N/n")
+        .opt("alphas", "0.01,0.05,0.1", "comma-separated alphas (percent as fractions)")
+        .opt("h-fracs", "0.25,0.5,1.0", "comma-separated h/n values");
+    let m = cmd.parse(args)?;
+    let alphas: Vec<f64> = m
+        .str("alphas")?
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad alpha {s:?}")))
+        .collect::<Result<_>>()?;
+    let hfracs: Vec<f64> = m
+        .str("h-fracs")?
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad h/n {s:?}")))
+        .collect::<Result<_>>()?;
+    print!("{}", bfast::lambda::table(m.f64("horizon")?, &alphas, &hfracs)?);
+    Ok(())
+}

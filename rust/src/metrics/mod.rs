@@ -1,0 +1,141 @@
+//! Phase timing & aggregation — the instrumentation behind the
+//! paper's per-phase figures (Figs. 3–6).
+//!
+//! Both the CPU implementations and the device coordinator report
+//! their work as named phases ("create model", "transfer", …); a
+//! [`PhaseTimes`] accumulates durations across chunks and renders the
+//! breakdown tables the benches print.
+
+use std::time::{Duration, Instant};
+
+/// Accumulated duration per named phase (insertion-ordered).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    entries: Vec<(String, Duration)>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name` (created on first use).
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some((_, acc)) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            *acc += d;
+        } else {
+            self.entries.push((name.to_string(), d));
+        }
+    }
+
+    /// Time `f` and charge it to `name`; returns f's output.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, d)| *d)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.entries.iter().map(|(n, d)| (n.as_str(), *d))
+    }
+
+    /// Merge another accumulation into this one.
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (n, d) in other.iter() {
+            self.add(n, d);
+        }
+    }
+
+    /// Render the per-phase table (seconds + share of total).
+    pub fn table(&self, title: &str) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let total = self.total().as_secs_f64();
+        let _ = writeln!(s, "{title}");
+        for (n, d) in self.iter() {
+            let secs = d.as_secs_f64();
+            let pct = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            let _ = writeln!(s, "  {n:<24} {secs:>10.4}s  {pct:>5.1}%");
+        }
+        let _ = writeln!(s, "  {:<24} {total:>10.4}s", "TOTAL");
+        s
+    }
+}
+
+/// Median / MAD over repeated wall-clock samples (bench harness use).
+pub fn median(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_orders() {
+        let mut p = PhaseTimes::new();
+        p.add("b", Duration::from_millis(10));
+        p.add("a", Duration::from_millis(5));
+        p.add("b", Duration::from_millis(10));
+        let names: Vec<_> = p.iter().map(|(n, _)| n.to_string()).collect();
+        assert_eq!(names, vec!["b", "a"]); // insertion order
+        assert_eq!(p.get("b").unwrap(), Duration::from_millis(20));
+        assert_eq!(p.total(), Duration::from_millis(25));
+    }
+
+    #[test]
+    fn time_charges_phase() {
+        let mut p = PhaseTimes::new();
+        let v = p.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(p.get("work").unwrap() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimes::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimes::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap(), Duration::from_millis(3));
+        assert_eq!(a.get("y").unwrap(), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn table_renders_shares() {
+        let mut p = PhaseTimes::new();
+        p.add("alpha", Duration::from_millis(75));
+        p.add("beta", Duration::from_millis(25));
+        let t = p.table("phases");
+        assert!(t.contains("alpha"));
+        assert!(t.contains("75.0%"));
+        assert!(t.contains("TOTAL"));
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

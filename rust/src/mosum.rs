@@ -1,0 +1,186 @@
+//! The MOSUM process, boundary function, and break scan for a single
+//! time series (paper Eq. 3–4 / Alg. 1 steps 5–13).
+//!
+//! These are the per-pixel building blocks shared by every CPU-side
+//! implementation; the batched/device variants in `cpu` and the AOT
+//! pipeline must agree with them bit-for-tolerance (enforced by the
+//! cross-implementation integration tests).
+
+use crate::params::BfastParams;
+
+/// σ̂ from the history residuals (Alg. 3: dof = n − (2 + 2k)).
+pub fn sigma_hat(residuals: &[f64], params: &BfastParams) -> f64 {
+    let n = params.n_hist;
+    let ss: f64 = residuals[..n].iter().map(|r| r * r).sum();
+    (ss / params.dof() as f64).sqrt()
+}
+
+/// Normalised MOSUM process MO_t for t = n+1..N (Eq. 3):
+/// `MO_t = 1/(σ̂√n) Σ_{s=t-h+1..t} r_s` — windows of h terms ending at
+/// t. Runs the paper's rolling-update scheme (Alg. 3 lines 22–27):
+/// O(1) per step after the initial sum.
+pub fn mosum_process(residuals: &[f64], params: &BfastParams) -> Vec<f64> {
+    let (n, h) = (params.n_hist, params.h);
+    let n_mon = params.n_monitor();
+    let sigma = sigma_hat(residuals, params);
+    let denom = sigma * (n as f64).sqrt();
+    let mut out = Vec::with_capacity(n_mon);
+    // initial window: ends at t = n+1 (0-based residuals n-h+1 ..= n)
+    let mut acc: f64 = residuals[n + 1 - h..=n].iter().sum();
+    out.push(acc / denom);
+    for t in n + 2..=params.n_total {
+        // slide: drop r_{t-h-1}, add r_t   (1-based) — 0-based below
+        acc += residuals[t - 1] - residuals[t - 1 - h];
+        out.push(acc / denom);
+    }
+    out
+}
+
+/// log₊ of Eq. (4): 1 for x ≤ e, ln(x) otherwise.
+#[inline]
+pub fn log_plus(x: f64) -> f64 {
+    if x <= std::f64::consts::E {
+        1.0
+    } else {
+        x.ln()
+    }
+}
+
+/// Boundary b_t = λ √(log₊ (t/n)) for t = n+1..N (Eq. 4).
+pub fn boundary(params: &BfastParams) -> Vec<f64> {
+    let n = params.n_hist as f64;
+    (params.n_hist + 1..=params.n_total)
+        .map(|t| params.lambda * log_plus(t as f64 / n).sqrt())
+        .collect()
+}
+
+/// Banded window-sum operator W ∈ R^{(N−n)×N}, row-major f32:
+/// `W[i, j] = 1` for `j ∈ [n+i−h+1, n+i]` (0-based), so `W · r` yields
+/// every Eq. (3) window sum at once. This is the runtime input the AOT
+/// modules contract against (the MXU-shaped formulation of the rolling
+/// update; supplied at runtime because xla_extension 0.5.1 miscompiles
+/// it as an HLO constant — see python/compile/kernels/mosum.py).
+pub fn window_matrix_f32(n_total: usize, n_hist: usize, h: usize) -> Vec<f32> {
+    let nm = n_total - n_hist;
+    let mut w = vec![0.0f32; nm * n_total];
+    for i in 0..nm {
+        for j in n_hist + i + 1 - h..=n_hist + i {
+            w[i * n_total + j] = 1.0;
+        }
+    }
+    w
+}
+
+/// Result of scanning one pixel's MOSUM against the boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakScan {
+    /// Whether |MO_t| crossed the boundary anywhere in the monitor period.
+    pub has_break: bool,
+    /// 0-based monitor index of the first crossing, or -1.
+    pub first: i32,
+    /// max_t |MO_t| (the Fig. 9 heatmap statistic).
+    pub momax: f64,
+}
+
+/// Scan a MOSUM process against a boundary (Alg. 1 step 13).
+pub fn scan_breaks(mo: &[f64], bound: &[f64]) -> BreakScan {
+    debug_assert_eq!(mo.len(), bound.len());
+    let mut first = -1i32;
+    let mut momax = 0.0f64;
+    for (i, (&m, &b)) in mo.iter().zip(bound).enumerate() {
+        let a = m.abs();
+        if a > momax {
+            momax = a;
+        }
+        if first < 0 && a > b {
+            first = i as i32;
+        }
+    }
+    BreakScan { has_break: first >= 0, first, momax }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Normal;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(40, 24, 6, 1, 12.0, 0.05, 2.0).unwrap()
+    }
+
+    #[test]
+    fn rolling_update_equals_direct_sums() {
+        let p = params();
+        let mut nrm = Normal::from_seed(1);
+        let r: Vec<f64> = (0..p.n_total).map(|_| nrm.sample()).collect();
+        let mo = mosum_process(&r, &p);
+        let sigma = sigma_hat(&r, &p);
+        for (i, &v) in mo.iter().enumerate() {
+            let t = p.n_hist + 1 + i; // 1-based
+            let direct: f64 = r[t - p.h..t].iter().sum();
+            let want = direct / (sigma * (p.n_hist as f64).sqrt());
+            assert!((v - want).abs() < 1e-12, "t={t}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sigma_uses_history_only_with_dof() {
+        let p = params();
+        let mut r = vec![0.5; p.n_total];
+        // monitor residuals should not affect sigma
+        for v in r.iter_mut().skip(p.n_hist) {
+            *v = 100.0;
+        }
+        let s = sigma_hat(&r, &p);
+        let want = (0.25 * p.n_hist as f64 / p.dof() as f64).sqrt();
+        assert!((s - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_plus_definition() {
+        assert_eq!(log_plus(0.5), 1.0);
+        assert_eq!(log_plus(std::f64::consts::E), 1.0);
+        assert!((log_plus(10.0) - 10f64.ln()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn boundary_flat_then_growing() {
+        // t/n <= e for all t <= e*n: boundary == lambda there
+        let p = BfastParams::with_lambda(300, 100, 50, 3, 23.0, 0.05, 2.5).unwrap();
+        let b = boundary(&p);
+        assert_eq!(b.len(), 200);
+        let e_cut = (std::f64::consts::E * 100.0).floor() as usize; // t <= 271
+        for (i, &v) in b.iter().enumerate() {
+            let t = 101 + i;
+            if t <= e_cut {
+                assert!((v - 2.5).abs() < 1e-12, "t={t}");
+            } else {
+                assert!(v > 2.5, "t={t}");
+            }
+        }
+        assert!(b.last().unwrap() > &2.5);
+    }
+
+    #[test]
+    fn scan_finds_first_crossing() {
+        let mo = vec![0.1, -0.2, 3.0, 0.5, -4.0];
+        let bound = vec![2.0; 5];
+        let s = scan_breaks(&mo, &bound);
+        assert!(s.has_break);
+        assert_eq!(s.first, 2);
+        assert!((s.momax - 4.0).abs() < 1e-15);
+        let none = scan_breaks(&[0.1, 0.2], &[2.0, 2.0]);
+        assert!(!none.has_break);
+        assert_eq!(none.first, -1);
+    }
+
+    #[test]
+    fn no_break_under_null_with_big_lambda() {
+        let p = BfastParams::with_lambda(200, 100, 50, 3, 23.0, 0.05, 50.0).unwrap();
+        let mut nrm = Normal::from_seed(2);
+        let r: Vec<f64> = (0..p.n_total).map(|_| nrm.sample() * 0.01).collect();
+        let mo = mosum_process(&r, &p);
+        let s = scan_breaks(&mo, &boundary(&p));
+        assert!(!s.has_break);
+    }
+}

@@ -1,0 +1,146 @@
+//! BFAST(monitor) hyper-parameters and their validation (paper §2.1).
+
+use anyhow::{ensure, Result};
+
+/// Parameters of one BFAST(monitor) analysis.
+///
+/// * `n_total` (N) — time-series length (history + monitor)
+/// * `n_hist` (n) — stable history period used for the OLS fit
+/// * `h` — MOSUM bandwidth, `1 ≤ h ≤ n`
+/// * `k` — number of harmonic terms (season), regressors p = 2 + 2k
+/// * `freq` (f) — observations per period (23 for 16-day series, 365
+///   for day-of-year time axes)
+/// * `alpha` — significance level of the boundary crossing
+/// * `lambda` — critical value λ(α, h/n, N/n); either supplied or
+///   derived via [`crate::lambda`]
+#[derive(Clone, Debug, PartialEq)]
+pub struct BfastParams {
+    pub n_total: usize,
+    pub n_hist: usize,
+    pub h: usize,
+    pub k: usize,
+    pub freq: f64,
+    pub alpha: f64,
+    pub lambda: f64,
+}
+
+impl BfastParams {
+    /// Construct with λ looked up from the built-in critical-value
+    /// table for the given α.
+    pub fn new(
+        n_total: usize,
+        n_hist: usize,
+        h: usize,
+        k: usize,
+        freq: f64,
+        alpha: f64,
+    ) -> Result<Self> {
+        let mut p = Self { n_total, n_hist, h, k, freq, alpha, lambda: f64::NAN };
+        p.validate()?;
+        p.lambda = crate::lambda::critical_value(
+            alpha,
+            h as f64 / n_hist as f64,
+            n_total as f64 / n_hist as f64,
+        )?;
+        Ok(p)
+    }
+
+    /// Construct with an explicit λ (e.g. from a simulation run).
+    pub fn with_lambda(
+        n_total: usize,
+        n_hist: usize,
+        h: usize,
+        k: usize,
+        freq: f64,
+        alpha: f64,
+        lambda: f64,
+    ) -> Result<Self> {
+        let p = Self { n_total, n_hist, h, k, freq, alpha, lambda };
+        p.validate()?;
+        ensure!(lambda > 0.0, "lambda must be positive, got {lambda}");
+        Ok(p)
+    }
+
+    /// Number of regressors p = 2 + 2k.
+    pub fn p(&self) -> usize {
+        2 + 2 * self.k
+    }
+
+    /// Length of the monitor period N − n.
+    pub fn n_monitor(&self) -> usize {
+        self.n_total - self.n_hist
+    }
+
+    /// σ̂ degrees of freedom n − (2 + 2k) (paper Alg. 3).
+    pub fn dof(&self) -> usize {
+        self.n_hist - self.p()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.n_hist >= 1 && self.n_hist < self.n_total,
+            "need 1 <= n < N, got n={} N={}",
+            self.n_hist,
+            self.n_total
+        );
+        ensure!(
+            self.h >= 1 && self.h <= self.n_hist,
+            "need 1 <= h <= n, got h={} n={}",
+            self.h,
+            self.n_hist
+        );
+        ensure!(self.k >= 1 && self.k <= 8, "need 1 <= k <= 8, got {}", self.k);
+        ensure!(
+            self.n_hist > self.p(),
+            "history too short: n={} <= p={}",
+            self.n_hist,
+            self.p()
+        );
+        ensure!(self.freq > 0.0, "freq must be positive, got {}", self.freq);
+        ensure!(
+            self.alpha > 0.0 && self.alpha < 1.0,
+            "alpha must be in (0,1), got {}",
+            self.alpha
+        );
+        Ok(())
+    }
+
+    /// The paper's default synthetic-benchmark setting
+    /// (§4.2: N=200, n=100, f=23, h=50, k=3, α=0.05).
+    pub fn paper_synthetic() -> Self {
+        Self::new(200, 100, 50, 3, 23.0, 0.05).expect("paper defaults are valid")
+    }
+
+    /// The paper's Chile Landsat setting
+    /// (§4.3: N=288, n=144, h=72, k=3, f=365, α=0.05).
+    pub fn paper_chile() -> Self {
+        Self::new(288, 144, 72, 3, 365.0, 0.05).expect("paper defaults are valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_validate() {
+        let p = BfastParams::paper_synthetic();
+        assert_eq!(p.p(), 8);
+        assert_eq!(p.n_monitor(), 100);
+        assert_eq!(p.dof(), 92);
+        assert!(p.lambda > 0.5 && p.lambda < 10.0, "lambda={}", p.lambda);
+        let c = BfastParams::paper_chile();
+        assert_eq!(c.n_monitor(), 144);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(BfastParams::new(100, 100, 10, 3, 23.0, 0.05).is_err()); // n == N
+        assert!(BfastParams::new(200, 100, 101, 3, 23.0, 0.05).is_err()); // h > n
+        assert!(BfastParams::new(200, 100, 0, 3, 23.0, 0.05).is_err()); // h == 0
+        assert!(BfastParams::new(200, 7, 2, 3, 23.0, 0.05).is_err()); // n <= p
+        assert!(BfastParams::new(200, 100, 50, 3, -1.0, 0.05).is_err()); // freq
+        assert!(BfastParams::new(200, 100, 50, 3, 23.0, 1.5).is_err()); // alpha
+        assert!(BfastParams::with_lambda(200, 100, 50, 3, 23.0, 0.05, -2.0).is_err());
+    }
+}

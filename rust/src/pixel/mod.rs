@@ -1,0 +1,30 @@
+//! Per-pixel reference implementations — the paper's two slow
+//! baselines.
+//!
+//! * [`naive`] — the BFAST(R) analogue: every pixel rebuilds the
+//!   design matrix, re-factorises the Gram matrix, and allocates
+//!   afresh, the way the general-purpose R implementation behaves.
+//! * [`direct`] — the BFAST(Python) analogue: Algorithm 1 run per
+//!   pixel, but the design matrix and pseudo-inverse are reused
+//!   across pixels (what a straightforward numpy port does).
+//!
+//! Both produce exactly the same statistics as the fused CPU and
+//! device implementations (cross-checked in tests); they exist to
+//! reproduce the runtime orderings of Fig. 2.
+
+pub mod direct;
+pub mod naive;
+
+pub use direct::DirectBfast;
+pub use naive::NaiveBfast;
+
+use crate::mosum::BreakScan;
+
+/// Per-pixel result of any single-series implementation.
+#[derive(Clone, Debug)]
+pub struct PixelResult {
+    pub scan: BreakScan,
+    /// Full MOSUM process (kept by the per-pixel baselines; the
+    /// device path only returns the scan, as in the paper).
+    pub mosum: Vec<f64>,
+}

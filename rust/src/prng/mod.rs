@@ -1,0 +1,259 @@
+//! Deterministic pseudo-random number generation (substrate for the
+//! offline build — replaces the `rand` crate).
+//!
+//! * [`SplitMix64`] — seeding / stream derivation.
+//! * [`Pcg32`] — the workhorse generator (PCG-XSH-RR 64/32).
+//! * Gaussian sampling via Box–Muller with a cached spare.
+//!
+//! Everything is reproducible from a `u64` seed; parallel workers
+//! derive independent streams with [`Pcg32::stream`].
+
+/// SplitMix64 — tiny, solid 64-bit generator used to seed PCG.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 — small-state, statistically strong, fast.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub const DEFAULT_STREAM: u64 = 0xDA3E_39CB_94B9_5BDB;
+
+    /// Seed via SplitMix so that nearby seeds give unrelated states.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, Self::DEFAULT_STREAM)
+    }
+
+    /// Independent generator for (seed, stream id) — used to give each
+    /// worker thread / pixel block its own sequence.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let init_state = sm.next_u64();
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(init_state);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child stream (e.g. per chunk index).
+    pub fn stream(&self, id: u64) -> Self {
+        Self::with_stream(self.state ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15), id)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64) * (bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Gaussian sampler: Box–Muller with a cached second deviate.
+#[derive(Clone, Debug)]
+pub struct Normal {
+    rng: Pcg32,
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new(rng: Pcg32) -> Self {
+        Self { rng, spare: None }
+    }
+
+    pub fn from_seed(seed: u64) -> Self {
+        Self::new(Pcg32::new(seed))
+    }
+
+    /// Standard normal deviate.
+    pub fn sample(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // Box–Muller on (0,1] uniforms (avoid ln(0)).
+        let u1 = 1.0 - self.rng.uniform();
+        let u2 = self.rng.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// N(mu, sigma^2) deviate.
+    #[inline]
+    pub fn sample_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.sample()
+    }
+
+    /// Fill a slice with iid standard normals (f32).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.sample() as f32;
+        }
+    }
+
+    /// Access the underlying uniform generator.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the canonical splitmix64.c with seed 0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn pcg_is_deterministic_and_stream_dependent() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let seq_a: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let seq_b: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(seq_a, seq_b);
+        let mut c = Pcg32::with_stream(42, 7);
+        let seq_c: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_ne!(seq_a, seq_c);
+    }
+
+    #[test]
+    fn uniform_bounds_and_moments() {
+        let mut rng = Pcg32::new(1);
+        let nsamp = 200_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..nsamp {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            sumsq += u * u;
+        }
+        let mean = sum / nsamp as f64;
+        let var = sumsq / nsamp as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 3e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 3e-3, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_over_small_bound() {
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..100_000 {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 / 20_000.0 - 1.0).abs() < 0.05, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut n = Normal::from_seed(3);
+        let nsamp = 200_000;
+        let (mut sum, mut sumsq, mut sumcub) = (0.0, 0.0, 0.0);
+        for _ in 0..nsamp {
+            let x = n.sample();
+            sum += x;
+            sumsq += x * x;
+            sumcub += x * x * x;
+        }
+        let mean = sum / nsamp as f64;
+        let var = sumsq / nsamp as f64 - mean * mean;
+        let skew = sumcub / nsamp as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+        assert!(skew.abs() < 0.05, "skew={skew}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg32::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn child_streams_are_distinct() {
+        let base = Pcg32::new(11);
+        let mut s1 = base.stream(1);
+        let mut s2 = base.stream(2);
+        let a: Vec<u32> = (0..4).map(|_| s1.next_u32()).collect();
+        let b: Vec<u32> = (0..4).map(|_| s2.next_u32()).collect();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,127 @@
+//! Property-based testing substrate (replaces `proptest` for the
+//! offline build).
+//!
+//! A property runs many times against randomly generated inputs drawn
+//! from a [`Gen`]; on failure the failing case and its reproduction
+//! seed are reported. Used by the coordinator/raster/linalg test
+//! suites for invariants (routing, chunk coverage, state machines).
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla_extension rpath
+//! use bfast::propcheck::{property, Gen};
+//! property("reverse twice is identity", 64, |g| {
+//!     let xs = g.vec_u32(0..=100, 0..=32);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys == xs { Ok(()) } else { Err(format!("{xs:?}")) }
+//! });
+//! ```
+
+use crate::prng::Pcg32;
+use std::ops::RangeInclusive;
+
+/// Random input source handed to each property run.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size hint grows with the run index so early runs are small
+    /// (cheap smoke) and later runs stress larger inputs.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn u32(&mut self, range: RangeInclusive<u32>) -> u32 {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_u32(&mut self, elem: RangeInclusive<u32>, len: RangeInclusive<usize>) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u32(elem.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, lo: f64, hi: f64, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(lo, hi) as f32).collect()
+    }
+
+    /// Access the raw generator for custom draws.
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `runs` random inputs. Panics (test failure) on
+/// the first counter-example, printing the case description returned
+/// by the property and the seed that reproduces it.
+///
+/// Seed override: set `BFAST_PROP_SEED` to replay a failure.
+pub fn property<F>(name: &str, runs: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("BFAST_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xB0F5_7A57_u64);
+    for run in 0..runs {
+        let seed = base_seed.wrapping_add(run as u64);
+        let mut g = Gen { rng: Pcg32::new(seed), size: 4 + run * 4 };
+        if let Err(case) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on run {run}/{runs}\n  case: {case}\n  \
+                 reproduce with BFAST_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        property("u32 in range", 100, |g| {
+            let x = g.u32(3..=9);
+            if (3..=9).contains(&x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    fn vec_len_respected() {
+        property("vec len", 50, |g| {
+            let v = g.vec_u32(0..=10, 2..=5);
+            if (2..=5).contains(&v.len()) { Ok(()) } else { Err(format!("{v:?}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with BFAST_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        property("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_grows() {
+        let mut sizes = Vec::new();
+        property("size", 5, |g| {
+            sizes.push(g.size);
+            Ok(())
+        });
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,134 @@
+//! Pixel-range chunking for the streaming coordinator.
+//!
+//! The device executables are shape-specialised on `m_chunk` pixels,
+//! so a scene of `m` pixels becomes `⌈m / m_chunk⌉` chunks; the last
+//! one is padded. [`ChunkPlan`] is the pure planning half (easy to
+//! property-test); the coordinator owns the buffers.
+
+/// One planned chunk: pixels `[start, end)` of the scene, executed in
+/// a buffer of `padded` columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PixelChunk {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+    pub padded: usize,
+}
+
+impl PixelChunk {
+    pub fn width(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn pad(&self) -> usize {
+        self.padded - self.width()
+    }
+}
+
+/// Deterministic chunk plan over `m` pixels with chunk width `m_chunk`.
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    pub m: usize,
+    pub m_chunk: usize,
+    chunks: Vec<PixelChunk>,
+}
+
+impl ChunkPlan {
+    pub fn new(m: usize, m_chunk: usize) -> Self {
+        assert!(m_chunk >= 1, "m_chunk must be >= 1");
+        let mut chunks = Vec::with_capacity(m.div_ceil(m_chunk));
+        let mut start = 0;
+        let mut index = 0;
+        while start < m {
+            let end = (start + m_chunk).min(m);
+            chunks.push(PixelChunk { index, start, end, padded: m_chunk });
+            start = end;
+            index += 1;
+        }
+        Self { m, m_chunk, chunks }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = PixelChunk> + '_ {
+        self.chunks.iter().copied()
+    }
+
+    pub fn get(&self, i: usize) -> PixelChunk {
+        self.chunks[i]
+    }
+
+    /// Total padding overhead (wasted columns) of the plan.
+    pub fn padding_overhead(&self) -> usize {
+        self.chunks.iter().map(|c| c.pad()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::propcheck::property;
+
+    #[test]
+    fn exact_division() {
+        let p = ChunkPlan::new(100, 25);
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|c| c.width() == 25 && c.pad() == 0));
+    }
+
+    #[test]
+    fn remainder_chunk_padded() {
+        let p = ChunkPlan::new(10, 4);
+        let cs: Vec<_> = p.iter().collect();
+        assert_eq!(cs.len(), 3);
+        assert_eq!((cs[2].start, cs[2].end, cs[2].padded), (8, 10, 4));
+        assert_eq!(cs[2].pad(), 2);
+        assert_eq!(p.padding_overhead(), 2);
+    }
+
+    #[test]
+    fn empty_scene() {
+        let p = ChunkPlan::new(0, 16);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn prop_chunks_partition_the_scene() {
+        property("chunks partition [0, m)", 200, |g| {
+            let m = g.usize(0..=10_000);
+            let mc = g.usize(1..=512);
+            let plan = ChunkPlan::new(m, mc);
+            let mut covered = 0usize;
+            let mut prev_end = 0usize;
+            for (i, c) in plan.iter().enumerate() {
+                if c.index != i {
+                    return Err(format!("index mismatch at {i}"));
+                }
+                if c.start != prev_end {
+                    return Err(format!("gap before chunk {i}: {} != {}", c.start, prev_end));
+                }
+                if c.end <= c.start && m > 0 {
+                    return Err(format!("empty chunk {i}"));
+                }
+                if c.padded != mc || c.width() > mc {
+                    return Err(format!("bad padding at {i}: {c:?}"));
+                }
+                covered += c.width();
+                prev_end = c.end;
+            }
+            if covered != m {
+                return Err(format!("covered {covered} != m {m}"));
+            }
+            if m > 0 && plan.len() != m.div_ceil(mc) {
+                return Err(format!("chunk count {} for m={m} mc={mc}", plan.len()));
+            }
+            Ok(())
+        });
+    }
+}

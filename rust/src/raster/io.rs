@@ -1,0 +1,151 @@
+//! On-disk stack format (`.bsq` — band-sequential f32 + JSON header).
+//!
+//! Layout:
+//! ```text
+//! magic  "BSQ1"            4 bytes
+//! hlen   u32 LE            header length
+//! header JSON              n_times, n_pixels, width?, height?, time_axis
+//! data   f32 LE            n_times × n_pixels values, time-major
+//! ```
+//! NaN encodes missing observations (see [`crate::fill`]).
+
+use super::TimeStack;
+use crate::json::{self, Value};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BSQ1";
+
+/// Write a stack to a `.bsq` file.
+pub fn write_stack(path: impl AsRef<Path>, stack: &TimeStack) -> Result<()> {
+    let path = path.as_ref();
+    let mut header = vec![
+        ("n_times", Value::Num(stack.n_times() as f64)),
+        ("n_pixels", Value::Num(stack.n_pixels() as f64)),
+        ("time_axis", Value::arr_num(&stack.time_axis)),
+    ];
+    if let (Some(w), Some(h)) = (stack.width, stack.height) {
+        header.push(("width", Value::Num(w as f64)));
+        header.push(("height", Value::Num(h as f64)));
+    }
+    let htext = Value::obj(header).to_string_compact();
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(htext.len() as u32).to_le_bytes())?;
+    w.write_all(htext.as_bytes())?;
+    // bulk f32 LE write
+    let data = stack.data();
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    #[cfg(target_endian = "big")]
+    compile_error!("bsq writer assumes little-endian host");
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a stack from a `.bsq` file.
+pub fn read_stack(path: impl AsRef<Path>) -> Result<TimeStack> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a BSQ1 file", path.display());
+    }
+    let mut hlen = [0u8; 4];
+    r.read_exact(&mut hlen)?;
+    let hlen = u32::from_le_bytes(hlen) as usize;
+    ensure!(hlen < 64 << 20, "unreasonable header length {hlen}");
+    let mut htext = vec![0u8; hlen];
+    r.read_exact(&mut htext)?;
+    let header = json::parse(std::str::from_utf8(&htext)?)
+        .with_context(|| format!("{}: bad header", path.display()))?;
+    let n_times = header.get("n_times")?.as_usize()?;
+    let n_pixels = header.get("n_pixels")?.as_usize()?;
+    let taxis: Vec<f64> = header
+        .get("time_axis")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64())
+        .collect::<Result<_>>()?;
+    let mut bytes = Vec::new();
+    r.read_to_end(&mut bytes)?;
+    ensure!(
+        bytes.len() == n_times * n_pixels * 4,
+        "{}: expected {} data bytes, found {}",
+        path.display(),
+        n_times * n_pixels * 4,
+        bytes.len()
+    );
+    let mut data = vec![0.0f32; n_times * n_pixels];
+    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+    }
+    let mut stack = TimeStack::from_vec(n_times, n_pixels, data)?.with_time_axis(taxis)?;
+    if let (Some(w), Some(h)) = (header.try_get("width"), header.try_get("height")) {
+        stack = stack.with_geometry(w.as_usize()?, h.as_usize()?)?;
+    }
+    Ok(stack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("bfast_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut s = TimeStack::zeros(5, 7).with_geometry(7, 1).unwrap();
+        for (i, v) in s.data_mut().iter_mut().enumerate() {
+            *v = i as f32 * 0.5;
+        }
+        s.data_mut()[3] = f32::NAN;
+        let path = tmpfile("roundtrip.bsq");
+        write_stack(&path, &s).unwrap();
+        let back = read_stack(&path).unwrap();
+        assert_eq!(back.n_times(), 5);
+        assert_eq!(back.n_pixels(), 7);
+        assert_eq!((back.width, back.height), (Some(7), Some(1)));
+        assert_eq!(back.time_axis, s.time_axis);
+        for (a, b) in back.data().iter().zip(s.data()) {
+            assert!(a == b || (a.is_nan() && b.is_nan()));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn irregular_time_axis_roundtrip() {
+        let s = TimeStack::zeros(3, 2)
+            .with_time_axis(vec![18.0, 50.5, 99.25])
+            .unwrap();
+        let path = tmpfile("axis.bsq");
+        write_stack(&path, &s).unwrap();
+        assert_eq!(read_stack(&path).unwrap().time_axis, vec![18.0, 50.5, 99.25]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_truncation() {
+        let path = tmpfile("bad.bsq");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_stack(&path).is_err());
+        let s = TimeStack::zeros(4, 4);
+        write_stack(&path, &s).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(read_stack(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

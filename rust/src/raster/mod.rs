@@ -1,0 +1,293 @@
+//! Scene / time-series raster data model.
+//!
+//! A [`TimeStack`] holds every pixel's series for one scene in a
+//! single time-major buffer `Y ∈ R^{N×m}` (row = one acquisition, as
+//! in Eq. 7 of the paper). Time-major layout is what the device
+//! pipeline wants (the history rows `Y[:n]` form a contiguous prefix,
+//! and a pixel-range chunk is one memcpy per row).
+//!
+//! Submodules: [`io`] — the `.bsq` on-disk format; [`pgm`] — grayscale
+//! heatmap export (Fig. 7/9 analogues); [`chunks`] — pixel-range
+//! chunking used by the coordinator.
+
+pub mod chunks;
+pub mod io;
+pub mod pgm;
+
+pub use chunks::{ChunkPlan, PixelChunk};
+
+use anyhow::{ensure, Result};
+
+/// A scene's worth of time series: `n_times × n_pixels`, time-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimeStack {
+    n_times: usize,
+    n_pixels: usize,
+    /// Optional scene geometry (pixels = width × height when present).
+    pub width: Option<usize>,
+    pub height: Option<usize>,
+    /// Time axis: acquisition time of each layer (index or fractional
+    /// day-of-year — see `design::design_matrix`).
+    pub time_axis: Vec<f64>,
+    data: Vec<f32>,
+}
+
+impl TimeStack {
+    /// New zero-filled stack with a regular 1..=N time axis.
+    pub fn zeros(n_times: usize, n_pixels: usize) -> Self {
+        Self {
+            n_times,
+            n_pixels,
+            width: None,
+            height: None,
+            time_axis: crate::design::regular_time_axis(n_times),
+            data: vec![0.0; n_times * n_pixels],
+        }
+    }
+
+    pub fn from_vec(n_times: usize, n_pixels: usize, data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            data.len() == n_times * n_pixels,
+            "TimeStack: {}x{} needs {} values, got {}",
+            n_times,
+            n_pixels,
+            n_times * n_pixels,
+            data.len()
+        );
+        Ok(Self {
+            n_times,
+            n_pixels,
+            width: None,
+            height: None,
+            time_axis: crate::design::regular_time_axis(n_times),
+            data,
+        })
+    }
+
+    pub fn with_geometry(mut self, width: usize, height: usize) -> Result<Self> {
+        ensure!(
+            width * height == self.n_pixels,
+            "geometry {}x{} != {} pixels",
+            width,
+            height,
+            self.n_pixels
+        );
+        self.width = Some(width);
+        self.height = Some(height);
+        Ok(self)
+    }
+
+    pub fn with_time_axis(mut self, t: Vec<f64>) -> Result<Self> {
+        ensure!(
+            t.len() == self.n_times,
+            "time axis length {} != {} layers",
+            t.len(),
+            self.n_times
+        );
+        ensure!(
+            t.windows(2).all(|w| w[1] > w[0]),
+            "time axis must be strictly increasing"
+        );
+        self.time_axis = t;
+        Ok(self)
+    }
+
+    pub fn n_times(&self) -> usize {
+        self.n_times
+    }
+
+    pub fn n_pixels(&self) -> usize {
+        self.n_pixels
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// One acquisition layer (all pixels at time index `t`).
+    pub fn layer(&self, t: usize) -> &[f32] {
+        &self.data[t * self.n_pixels..(t + 1) * self.n_pixels]
+    }
+
+    pub fn layer_mut(&mut self, t: usize) -> &mut [f32] {
+        &mut self.data[t * self.n_pixels..(t + 1) * self.n_pixels]
+    }
+
+    /// Gather one pixel's series (strided copy).
+    pub fn series(&self, pixel: usize) -> Vec<f32> {
+        (0..self.n_times)
+            .map(|t| self.data[t * self.n_pixels + pixel])
+            .collect()
+    }
+
+    /// Gather one pixel's series as f64 (for the per-pixel baselines).
+    pub fn series_f64(&self, pixel: usize) -> Vec<f64> {
+        (0..self.n_times)
+            .map(|t| self.data[t * self.n_pixels + pixel] as f64)
+            .collect()
+    }
+
+    /// Set one pixel's series (strided scatter).
+    pub fn set_series(&mut self, pixel: usize, series: &[f32]) {
+        assert_eq!(series.len(), self.n_times);
+        for (t, &v) in series.iter().enumerate() {
+            self.data[t * self.n_pixels + pixel] = v;
+        }
+    }
+
+    /// Copy the pixel range `[start, end)` into `dst`, which must hold
+    /// `n_times × (end-start + pad)` values; pixels beyond `end-start`
+    /// columns are filled with `pad_value` (chunk padding for the
+    /// shape-specialised device executables). One memcpy per row.
+    pub fn copy_chunk_padded(
+        &self,
+        start: usize,
+        end: usize,
+        padded_width: usize,
+        pad_value: f32,
+        dst: &mut [f32],
+    ) {
+        let w = end - start;
+        assert!(end <= self.n_pixels && w <= padded_width);
+        assert_eq!(dst.len(), self.n_times * padded_width);
+        for t in 0..self.n_times {
+            let src = &self.data[t * self.n_pixels + start..t * self.n_pixels + end];
+            let drow = &mut dst[t * padded_width..t * padded_width + w];
+            drow.copy_from_slice(src);
+            dst[t * padded_width + w..(t + 1) * padded_width].fill(pad_value);
+        }
+    }
+
+    /// View of a pixel range as a new stack (copies).
+    pub fn slice_pixels(&self, start: usize, end: usize) -> TimeStack {
+        let w = end - start;
+        let mut out = TimeStack::zeros(self.n_times, w);
+        out.time_axis = self.time_axis.clone();
+        for t in 0..self.n_times {
+            out.data[t * w..(t + 1) * w].copy_from_slice(
+                &self.data[t * self.n_pixels + start..t * self.n_pixels + end],
+            );
+        }
+        out
+    }
+}
+
+/// Per-pixel outputs of one analysis, assembled scene-wide.
+#[derive(Clone, Debug, Default)]
+pub struct BreakMap {
+    /// 1 where a break was detected.
+    pub breaks: Vec<i32>,
+    /// 0-based monitor index of the first crossing, -1 when none.
+    pub first: Vec<i32>,
+    /// max_t |MO_t| per pixel (Fig. 9 statistic).
+    pub momax: Vec<f32>,
+}
+
+impl BreakMap {
+    pub fn with_capacity(m: usize) -> Self {
+        Self {
+            breaks: Vec::with_capacity(m),
+            first: Vec::with_capacity(m),
+            momax: Vec::with_capacity(m),
+        }
+    }
+
+    pub fn zeros(m: usize) -> Self {
+        Self { breaks: vec![0; m], first: vec![-1; m], momax: vec![0.0; m] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.breaks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.breaks.is_empty()
+    }
+
+    pub fn break_count(&self) -> usize {
+        self.breaks.iter().filter(|&&b| b != 0).count()
+    }
+
+    pub fn break_fraction(&self) -> f64 {
+        if self.breaks.is_empty() {
+            0.0
+        } else {
+            self.break_count() as f64 / self.breaks.len() as f64
+        }
+    }
+
+    /// Write a chunk's results at pixel offset `at` (used by the
+    /// coordinator when chunks complete out of order).
+    pub fn write_at(&mut self, at: usize, breaks: &[i32], first: &[i32], momax: &[f32]) {
+        self.breaks[at..at + breaks.len()].copy_from_slice(breaks);
+        self.first[at..at + first.len()].copy_from_slice(first);
+        self.momax[at..at + momax.len()].copy_from_slice(momax);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_layer_are_consistent() {
+        let mut s = TimeStack::zeros(3, 4);
+        for t in 0..3 {
+            for p in 0..4 {
+                s.data_mut()[t * 4 + p] = (t * 10 + p) as f32;
+            }
+        }
+        assert_eq!(s.layer(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(s.series(2), vec![2.0, 12.0, 22.0]);
+        s.set_series(0, &[9.0, 9.0, 9.0]);
+        assert_eq!(s.series(0), vec![9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn chunk_copy_pads() {
+        let mut s = TimeStack::zeros(2, 5);
+        for (i, v) in s.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let mut dst = vec![-1.0f32; 2 * 4];
+        s.copy_chunk_padded(1, 3, 4, 0.5, &mut dst);
+        assert_eq!(dst, vec![1.0, 2.0, 0.5, 0.5, 6.0, 7.0, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn slice_pixels_roundtrip() {
+        let mut s = TimeStack::zeros(3, 6);
+        for (i, v) in s.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let sub = s.slice_pixels(2, 5);
+        assert_eq!(sub.n_pixels(), 3);
+        for p in 0..3 {
+            assert_eq!(sub.series(p), s.series(2 + p));
+        }
+    }
+
+    #[test]
+    fn geometry_and_time_axis_validation() {
+        let s = TimeStack::zeros(4, 6);
+        assert!(s.clone().with_geometry(2, 3).is_ok());
+        assert!(s.clone().with_geometry(2, 2).is_err());
+        assert!(s.clone().with_time_axis(vec![1.0, 2.0, 3.0, 4.0]).is_ok());
+        assert!(s.clone().with_time_axis(vec![1.0, 2.0]).is_err());
+        assert!(s.with_time_axis(vec![1.0, 3.0, 2.0, 4.0]).is_err());
+    }
+
+    #[test]
+    fn break_map_assembly() {
+        let mut bm = BreakMap::zeros(6);
+        bm.write_at(2, &[1, 0], &[3, -1], &[2.5, 0.1]);
+        assert_eq!(bm.breaks, vec![0, 0, 1, 0, 0, 0]);
+        assert_eq!(bm.first, vec![-1, -1, 3, -1, -1, -1]);
+        assert_eq!(bm.break_count(), 1);
+        assert!((bm.break_fraction() - 1.0 / 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,93 @@
+//! Grayscale heatmap export (binary PGM, P5).
+//!
+//! Used to render the paper's image figures from our outputs: Fig. 7
+//! (scene snapshots) and Fig. 9 (max |MOSUM| heatmap). PGM needs no
+//! codec dependencies and opens everywhere.
+
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Write `values` (row-major, `width × height`) as an 8-bit PGM,
+/// linearly mapping `[lo, hi]` → [0, 255]. NaN renders as 0.
+pub fn write_pgm(
+    path: impl AsRef<Path>,
+    values: &[f32],
+    width: usize,
+    height: usize,
+    lo: f32,
+    hi: f32,
+) -> Result<()> {
+    assert_eq!(values.len(), width * height, "pgm: size mismatch");
+    let path = path.as_ref();
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write!(w, "P5\n{width} {height}\n255\n")?;
+    let span = if hi > lo { hi - lo } else { 1.0 };
+    let mut row = Vec::with_capacity(width);
+    for y in 0..height {
+        row.clear();
+        for x in 0..width {
+            let v = values[y * width + x];
+            let b = if v.is_nan() {
+                0u8
+            } else {
+                (((v - lo) / span).clamp(0.0, 1.0) * 255.0).round() as u8
+            };
+            row.push(b);
+        }
+        w.write_all(&row)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Convenience: auto-scale to the finite min/max of the data.
+pub fn write_pgm_autoscale(
+    path: impl AsRef<Path>,
+    values: &[f32],
+    width: usize,
+    height: usize,
+) -> Result<(f32, f32)> {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        lo = 0.0;
+        hi = 1.0;
+    }
+    write_pgm(path, values, width, height, lo, hi)?;
+    Ok((lo, hi))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_payload() {
+        let path = std::env::temp_dir().join(format!("bfast_pgm_{}.pgm", std::process::id()));
+        let vals = vec![0.0f32, 0.5, 1.0, f32::NAN];
+        write_pgm(&path, &vals, 2, 2, 0.0, 1.0).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let text = String::from_utf8_lossy(&bytes[..9]);
+        assert!(text.starts_with("P5\n2 2\n"));
+        let pixels = &bytes[bytes.len() - 4..];
+        assert_eq!(pixels, &[0, 128, 255, 0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn autoscale_finds_range() {
+        let path = std::env::temp_dir().join(format!("bfast_pgm2_{}.pgm", std::process::id()));
+        let (lo, hi) = write_pgm_autoscale(&path, &[2.0, 4.0, 3.0, 2.5], 2, 2).unwrap();
+        assert_eq!((lo, hi), (2.0, 4.0));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,144 @@
+//! Experiment report emitters — CSV + markdown tables written under
+//! `results/`, consumed by EXPERIMENTS.md.
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// A simple column-oriented results table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Format a f64 cell compactly.
+    pub fn num(v: f64) -> String {
+        if v == 0.0 {
+            "0".into()
+        } else if v.abs() >= 100.0 {
+            format!("{v:.1}")
+        } else if v.abs() >= 0.01 {
+            format!("{v:.4}")
+        } else {
+            format!("{v:.3e}")
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.columns.join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.join(","));
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(s, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    /// Plain console rendering.
+    pub fn to_console(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(s, "{}", fmt_row(&self.columns, &widths));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", fmt_row(r, &widths));
+        }
+        s
+    }
+
+    /// Write CSV + markdown into `results/` under the given stem.
+    pub fn save(&self, results_dir: impl AsRef<Path>, stem: &str) -> Result<PathBuf> {
+        let dir = results_dir.as_ref();
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let csv = dir.join(format!("{stem}.csv"));
+        std::fs::write(&csv, self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        Ok(csv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Table {
+        let mut t = Table::new("speedups", &["m", "cpu_s", "device_s"]);
+        t.row(vec!["1000".into(), Table::num(0.5), Table::num(0.0123)]);
+        t
+    }
+
+    #[test]
+    fn csv_and_markdown() {
+        let t = t();
+        assert_eq!(t.to_csv(), "m,cpu_s,device_s\n1000,0.5000,0.0123\n");
+        let md = t.to_markdown();
+        assert!(md.contains("| m | cpu_s | device_s |"));
+        assert!(md.contains("### speedups"));
+        let con = t.to_console();
+        assert!(con.contains("speedups"));
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(Table::num(0.0), "0");
+        assert_eq!(Table::num(123.456), "123.5");
+        assert_eq!(Table::num(0.5), "0.5000");
+        assert_eq!(Table::num(0.0001234), "1.234e-4");
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join(format!("bfast_rep_{}", std::process::id()));
+        let p = t().save(&dir, "fig2").unwrap();
+        assert!(p.exists());
+        assert!(dir.join("fig2.md").exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = t();
+        t.row(vec!["x".into()]);
+    }
+}

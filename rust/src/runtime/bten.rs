@@ -1,0 +1,137 @@
+//! `.bten` tensor container reader — golden-vector interchange with
+//! the python oracle (written by `aot.py --golden`).
+//!
+//! Layout: `b"BTEN" | u8 dtype (0=f32, 1=i32, 2=f64) | u8 ndim |
+//! ndim × u32 LE dims | raw LE data`.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// A loaded tensor (data flattened, row-major).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F64 { shape: Vec<usize>, data: Vec<f64> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::F64 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().map(|&x| x as f64).collect(),
+            Tensor::I32 { data, .. } => data.iter().map(|&x| x as f64).collect(),
+            Tensor::F64 { data, .. } => data.clone(),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// Read one `.bten` file.
+pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(bytes.len() >= 6 && &bytes[..4] == b"BTEN", "{}: bad magic", path.display());
+    let dtype = bytes[4];
+    let ndim = bytes[5] as usize;
+    let mut off = 6;
+    ensure!(bytes.len() >= off + 4 * ndim, "{}: truncated dims", path.display());
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
+        off += 4;
+    }
+    let count: usize = shape.iter().product();
+    let payload = &bytes[off..];
+    match dtype {
+        0 => {
+            ensure!(payload.len() == count * 4, "{}: f32 payload size", path.display());
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Tensor::F32 { shape, data })
+        }
+        1 => {
+            ensure!(payload.len() == count * 4, "{}: i32 payload size", path.display());
+            let data = payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Tensor::I32 { shape, data })
+        }
+        2 => {
+            ensure!(payload.len() == count * 8, "{}: f64 payload size", path.display());
+            let data = payload
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Tensor::F64 { shape, data })
+        }
+        other => bail!("{}: unknown dtype code {other}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_case(path: &Path, dtype: u8, dims: &[u32], payload: &[u8]) {
+        let mut b = b"BTEN".to_vec();
+        b.push(dtype);
+        b.push(dims.len() as u8);
+        for d in dims {
+            b.extend_from_slice(&d.to_le_bytes());
+        }
+        b.extend_from_slice(payload);
+        std::fs::write(path, b).unwrap();
+    }
+
+    #[test]
+    fn reads_all_dtypes() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("bfast_bten_{}.bten", std::process::id()));
+        // f32 2x2
+        let f: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_case(&p, 0, &[2, 2], &f);
+        let t = read_bten(&p).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.as_f64_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        // i32 3
+        let i: Vec<u8> = [5i32, -6, 7].iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_case(&p, 1, &[3], &i);
+        assert_eq!(read_bten(&p).unwrap().as_i32().unwrap(), &[5, -6, 7]);
+        // f64 scalar-ish
+        let d: Vec<u8> = [2.5f64].iter().flat_map(|v| v.to_le_bytes()).collect();
+        write_case(&p, 2, &[1], &d);
+        assert_eq!(read_bten(&p).unwrap().as_f64_vec(), vec![2.5]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("bfast_bten_bad_{}.bten", std::process::id()));
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_bten(&p).is_err());
+        write_case(&p, 9, &[1], &[0, 0, 0, 0]);
+        assert!(read_bten(&p).is_err());
+        write_case(&p, 0, &[2], &[0, 0, 0, 0]); // payload too short
+        assert!(read_bten(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unsupported dtype {other:?}")),
+        }
+    }
+}
+
+/// One named tensor port of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(v.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT-lowered HLO module (a (config, phase) pair).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub phase: String,
+    pub path: PathBuf,
+    pub n_total: usize,
+    pub n_hist: usize,
+    pub h: usize,
+    pub k: usize,
+    pub p: usize,
+    pub m_chunk: usize,
+    pub use_pallas: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn n_monitor(&self) -> usize {
+        self.n_total - self.n_hist
+    }
+}
+
+/// The parsed manifest: all artifacts of an `artifacts/` directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let man_path = dir.join("manifest.json");
+        let doc = json::parse_file(&man_path)?;
+        let version = doc.get("version")?.as_usize()?;
+        ensure!(version == 1, "manifest version {version} unsupported (want 1)");
+        let mut artifacts = Vec::new();
+        for a in doc.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let phase = a.get("phase")?.as_str()?.to_string();
+            let file = a.get("file")?.as_str()?;
+            let spec = ArtifactSpec {
+                path: dir.join(file),
+                n_total: a.get("n_total")?.as_usize()?,
+                n_hist: a.get("n_hist")?.as_usize()?,
+                h: a.get("h")?.as_usize()?,
+                k: a.get("k")?.as_usize()?,
+                p: a.get("p")?.as_usize()?,
+                m_chunk: a.get("m_chunk")?.as_usize()?,
+                use_pallas: a.get("use_pallas")?.as_bool()?,
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("inputs of {name}/{phase}"))?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<_>>()
+                    .with_context(|| format!("outputs of {name}/{phase}"))?,
+                name,
+                phase,
+            };
+            ensure!(
+                spec.path.exists(),
+                "artifact file missing: {} (run `make artifacts`)",
+                spec.path.display()
+            );
+            artifacts.push(spec);
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Find a (config, phase) artifact.
+    pub fn find(&self, name: &str, phase: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name && a.phase == phase)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {name}/{phase} in {} (have: {})",
+                    self.dir.display(),
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    /// Distinct config names.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.artifacts.iter().map(|a| a.name.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Pick a fused config compatible with the given analysis shape
+    /// (N, n, h, k), preferring pallas variants, any m_chunk.
+    pub fn find_fused_for(
+        &self,
+        n_total: usize,
+        n_hist: usize,
+        h: usize,
+        k: usize,
+    ) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.phase == "fused"
+                    && a.n_total == n_total
+                    && a.n_hist == n_hist
+                    && a.h == h
+                    && a.k == k
+            })
+            .max_by_key(|a| (a.use_pallas, a.m_chunk))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no fused artifact for N={n_total} n={n_hist} h={h} k={k}; \
+                     add the variant in python/compile/aot.py and re-run `make artifacts`"
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn spec_json(dir: &Path) -> String {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("a__fused.hlo.txt"), "HloModule x").unwrap();
+        r#"{"version":1,"artifacts":[{
+            "name":"a","phase":"fused","file":"a__fused.hlo.txt",
+            "n_total":200,"n_hist":100,"h":50,"k":3,"p":8,"m_chunk":1024,
+            "use_pallas":true,
+            "inputs":[{"name":"t","shape":[200],"dtype":"f32"},
+                      {"name":"y","shape":[200,1024],"dtype":"f32"}],
+            "outputs":[{"name":"breaks","shape":[1024],"dtype":"i32"}]}]}"#
+            .to_string()
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join(format!("bfast_man_{}", std::process::id()));
+        write_manifest(&dir, &spec_json(&dir));
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.names(), vec!["a"]);
+        let a = m.find("a", "fused").unwrap();
+        assert_eq!(a.m_chunk, 1024);
+        assert_eq!(a.inputs[1].elements(), 200 * 1024);
+        assert_eq!(a.outputs[0].dtype, Dtype::I32);
+        assert!(m.find("a", "fit").is_err());
+        assert!(m.find_fused_for(200, 100, 50, 3).is_ok());
+        assert!(m.find_fused_for(100, 50, 25, 3).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("bfast_man2_{}", std::process::id()));
+        write_manifest(&dir, &spec_json(&dir));
+        std::fs::remove_file(dir.join("a__fused.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn version_check() {
+        let dir = std::env::temp_dir().join(format!("bfast_man3_{}", std::process::id()));
+        write_manifest(&dir, r#"{"version":2,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

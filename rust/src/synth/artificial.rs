@@ -1,0 +1,174 @@
+//! Artificial benchmark data (paper §4.2, Eq. 12):
+//!
+//! `y_t = 0.05 · sin(2πt/f) + ε_t + c`
+//!
+//! where ε_t is small Gaussian noise and `c` is a constant added to
+//! the last 40 % of the series for the half of the pixels that should
+//! exhibit a break.
+
+use crate::params::BfastParams;
+use crate::prng::{Normal, Pcg32};
+use crate::raster::TimeStack;
+use crate::threadpool::{self, SyncSlice};
+
+/// Generator configuration + output labels.
+#[derive(Clone, Debug)]
+pub struct ArtificialDataset {
+    pub params: BfastParams,
+    pub m: usize,
+    pub seed: u64,
+    /// Amplitude of the seasonal sinus (paper: 0.05).
+    pub amplitude: f64,
+    /// Noise standard deviation.
+    pub noise_sd: f64,
+    /// Break constant `c` (paper adds a visible constant).
+    pub break_shift: f64,
+    /// Fraction of the series length that carries the break (paper: 0.4).
+    pub break_tail: f64,
+}
+
+/// Generated stack plus per-pixel ground truth.
+pub struct GeneratedData {
+    pub stack: TimeStack,
+    /// true where the generator injected a break (every 2nd pixel).
+    pub truth: Vec<bool>,
+}
+
+impl ArtificialDataset {
+    pub fn new(params: BfastParams, m: usize, seed: u64) -> Self {
+        Self {
+            params,
+            m,
+            seed,
+            amplitude: 0.05,
+            noise_sd: 0.01,
+            break_shift: 0.1,
+            break_tail: 0.4,
+        }
+    }
+
+    /// Stronger breaks / noise for detection-quality tests.
+    pub fn with_noise(mut self, noise_sd: f64, break_shift: f64) -> Self {
+        self.noise_sd = noise_sd;
+        self.break_shift = break_shift;
+        self
+    }
+
+    /// Generate the stack (parallel over pixels, deterministic in the
+    /// seed regardless of thread count).
+    pub fn generate(&self) -> GeneratedData {
+        let n = self.params.n_total;
+        let m = self.m;
+        let f = self.params.freq;
+        let break_from = ((1.0 - self.break_tail) * n as f64).floor() as usize;
+        // seasonal component shared by every pixel
+        let season: Vec<f64> = (1..=n)
+            .map(|t| self.amplitude * (2.0 * std::f64::consts::PI * t as f64 / f).sin())
+            .collect();
+        let mut stack = TimeStack::zeros(n, m);
+        {
+            let data = SyncSlice::new(stack.data_mut());
+            let threads = threadpool::default_threads();
+            threadpool::parallel_ranges(m, 4096, threads, |s, e| {
+                for px in s..e {
+                    let mut nrm =
+                        Normal::new(Pcg32::with_stream(self.seed, px as u64));
+                    let has_break = px % 2 == 0;
+                    for (t, &sv) in season.iter().enumerate() {
+                        let mut v = sv + self.noise_sd * nrm.sample();
+                        if has_break && t >= break_from {
+                            v += self.break_shift;
+                        }
+                        unsafe { data.write(t * m + px, v as f32) };
+                    }
+                }
+            });
+        }
+        let truth = (0..m).map(|px| px % 2 == 0).collect();
+        GeneratedData { stack, truth }
+    }
+}
+
+impl GeneratedData {
+    /// Detection quality against the generator's ground truth.
+    pub fn score(&self, breaks: &[i32]) -> (f64, f64) {
+        assert_eq!(breaks.len(), self.truth.len());
+        let mut tp = 0usize;
+        let mut fp = 0usize;
+        let (mut pos, mut neg) = (0usize, 0usize);
+        for (&b, &t) in breaks.iter().zip(&self.truth) {
+            if t {
+                pos += 1;
+                if b != 0 {
+                    tp += 1;
+                }
+            } else {
+                neg += 1;
+                if b != 0 {
+                    fp += 1;
+                }
+            }
+        }
+        let tpr = if pos > 0 { tp as f64 / pos as f64 } else { 1.0 };
+        let fpr = if neg > 0 { fp as f64 / neg as f64 } else { 0.0 };
+        (tpr, fpr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ArtificialDataset {
+        let p = BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap();
+        ArtificialDataset::new(p, 64, 123)
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let d = small();
+        std::env::set_var("BFAST_THREADS", "1");
+        let a = d.generate();
+        std::env::set_var("BFAST_THREADS", "7");
+        let b = d.generate();
+        std::env::remove_var("BFAST_THREADS");
+        assert_eq!(a.stack.data(), b.stack.data());
+    }
+
+    #[test]
+    fn break_pixels_shift_in_tail() {
+        let d = small().with_noise(0.001, 0.5);
+        let g = d.generate();
+        let n = d.params.n_total;
+        let break_from = (0.6 * n as f64).floor() as usize;
+        // even pixel: tail mean >> head mean; odd pixel: comparable
+        let s0 = g.stack.series(0);
+        let s1 = g.stack.series(1);
+        let mean = |xs: &[f32]| xs.iter().map(|&v| v as f64).sum::<f64>() / xs.len() as f64;
+        assert!(mean(&s0[break_from..]) - mean(&s0[..break_from]) > 0.4);
+        assert!((mean(&s1[break_from..]) - mean(&s1[..break_from])).abs() < 0.05);
+        assert!(g.truth[0] && !g.truth[1]);
+    }
+
+    #[test]
+    fn seasonal_amplitude_visible() {
+        let d = small().with_noise(0.0001, 0.0);
+        let g = d.generate();
+        let s = g.stack.series(1);
+        let max = s.iter().cloned().fold(f32::MIN, f32::max);
+        let min = s.iter().cloned().fold(f32::MAX, f32::min);
+        assert!((max as f64 - 0.05).abs() < 0.01, "max {max}");
+        assert!((min as f64 + 0.05).abs() < 0.01, "min {min}");
+    }
+
+    #[test]
+    fn score_computes_rates() {
+        let d = small();
+        let g = d.generate();
+        // flag exactly the truth
+        let breaks: Vec<i32> = g.truth.iter().map(|&t| t as i32).collect();
+        assert_eq!(g.score(&breaks), (1.0, 0.0));
+        let none = vec![0; g.truth.len()];
+        assert_eq!(g.score(&none), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Synthetic dataset generators.
+//!
+//! * [`artificial`] — the §4.2 runtime-benchmark generator (Eq. 12):
+//!   sinus + noise, a constant added to the last 40 % of half of the
+//!   series so they exhibit a break.
+//! * [`chile`] — a procedural stand-in for the §4.3 USGS Landsat scene
+//!   over the Atacama plantation forest (the real archive is not
+//!   available offline; DESIGN.md §4 documents the substitution).
+
+pub mod artificial;
+pub mod chile;
+
+pub use artificial::ArtificialDataset;
+pub use chile::ChileScene;

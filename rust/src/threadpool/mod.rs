@@ -1,0 +1,201 @@
+//! Data-parallel execution substrate (replaces rayon/OpenMP for the
+//! offline build).
+//!
+//! The paper's multi-core baseline parallelises the per-pixel tail of
+//! the pipeline "over the m time series using, e.g., OpenMP". This
+//! module provides exactly that shape of parallelism on std scoped
+//! threads: a static chunk grid pulled from an atomic counter, so load
+//! imbalance self-corrects without work-stealing machinery.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `BFAST_THREADS` env override or
+/// the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("BFAST_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `body(start, end)` over `[0, len)` split into `grain`-sized
+/// ranges, on `threads` workers. `body` must be `Sync` (it is shared);
+/// per-range state should live inside the closure call.
+pub fn parallel_ranges<F>(len: usize, grain: usize, threads: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let grain = grain.max(1);
+    let n_chunks = len.div_ceil(grain);
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        let mut s = 0;
+        while s < len {
+            body(s, (s + grain).min(len));
+            s += grain;
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let c = next.fetch_add(1, Ordering::Relaxed);
+                if c >= n_chunks {
+                    break;
+                }
+                let s = c * grain;
+                body(s, (s + grain).min(len));
+            });
+        }
+    });
+}
+
+/// Map over `[0, len)` in parallel producing a `Vec<T>`; `f(i)` runs
+/// once per index, results land in order.
+pub fn parallel_map<T, F>(len: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); len];
+    let slots = SyncSlice::new(&mut out);
+    let grain = (len / (threads.max(1) * 8)).max(1);
+    parallel_ranges(len, grain, threads, |s, e| {
+        for i in s..e {
+            // SAFETY: each index is written by exactly one worker.
+            unsafe { slots.write(i, f(i)) };
+        }
+    });
+    out
+}
+
+/// Split a mutable slice into disjoint per-index cells that different
+/// threads may write. Sound as long as every index is written by at
+/// most one thread (guaranteed by the chunk grid above).
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one cell. Caller contract: no two threads write the same
+    /// index, and no one reads it concurrently.
+    ///
+    /// # Safety
+    /// `i < len` and exclusive access to index `i`.
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = value };
+    }
+
+    /// Read one cell. Caller contract: no concurrent writer for `i`.
+    ///
+    /// # Safety
+    /// `i < len` and no data race on index `i`.
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) }
+    }
+
+    /// Get a mutable sub-slice `[start, end)`. Caller contract: ranges
+    /// handed to different threads are disjoint.
+    ///
+    /// # Safety
+    /// `start <= end <= len` and ranges are disjoint across threads.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), end - start) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let len = 10_003;
+        let hits: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(len, 17, 8, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn handles_edge_sizes() {
+        for len in [0, 1, 2, 7] {
+            let count = AtomicUsize::new(0);
+            parallel_ranges(len, 3, 4, |s, e| {
+                count.fetch_add(e - s, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), len);
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicUsize::new(0);
+        parallel_ranges(100, 10, 1, |s, e| {
+            sum.fetch_add((s..e).sum::<usize>(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(1000, 4, |i| i * i);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * i));
+    }
+
+    #[test]
+    fn sync_slice_disjoint_ranges() {
+        let mut data = vec![0u32; 256];
+        let ss = SyncSlice::new(&mut data);
+        parallel_ranges(256, 32, 4, |s, e| {
+            let part = unsafe { ss.slice_mut(s, e) };
+            for (off, v) in part.iter_mut().enumerate() {
+                *v = (s + off) as u32;
+            }
+        });
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn default_threads_env_override() {
+        // run serially: env is process-global
+        std::env::set_var("BFAST_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("BFAST_THREADS", "bogus");
+        assert!(default_threads() >= 1);
+        std::env::remove_var("BFAST_THREADS");
+    }
+}

@@ -1,0 +1,153 @@
+//! Property-based integration tests on coordinator/stack invariants
+//! (using the in-tree `propcheck` substrate — see DESIGN.md §3).
+
+use bfast::params::BfastParams;
+use bfast::propcheck::property;
+use bfast::raster::{BreakMap, ChunkPlan, TimeStack};
+use bfast::synth::ArtificialDataset;
+
+#[test]
+fn prop_chunked_assembly_reconstructs_any_map() {
+    // Writing per-chunk slices through BreakMap::write_at in ANY chunk
+    // order must reproduce the full map (the coordinator's out-of-order
+    // completion invariant).
+    property("chunked assembly", 120, |g| {
+        let m = g.usize(1..=5000);
+        let mc = g.usize(1..=700);
+        let plan = ChunkPlan::new(m, mc);
+        // reference data
+        let breaks: Vec<i32> = (0..m).map(|i| (i % 3 == 0) as i32).collect();
+        let first: Vec<i32> = (0..m).map(|i| if i % 3 == 0 { (i % 40) as i32 } else { -1 }).collect();
+        let momax: Vec<f32> = (0..m).map(|i| i as f32 * 0.5).collect();
+        let mut order: Vec<usize> = (0..plan.len()).collect();
+        // deterministic shuffle from the generator
+        for i in (1..order.len()).rev() {
+            let j = g.usize(0..=i);
+            order.swap(i, j);
+        }
+        let mut map = BreakMap::zeros(m);
+        for idx in order {
+            let c = plan.get(idx);
+            map.write_at(c.start, &breaks[c.start..c.end], &first[c.start..c.end], &momax[c.start..c.end]);
+        }
+        if map.breaks != breaks || map.first != first || map.momax != momax {
+            return Err(format!("m={m} mc={mc}: assembled map differs"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_copy_roundtrip_with_padding() {
+    // copy_chunk_padded must be the exact strided gather of a pixel
+    // range, with the pad columns holding the pad value.
+    property("chunk copy roundtrip", 80, |g| {
+        let n = g.usize(1..=40);
+        let m = g.usize(1..=300);
+        let mut stack = TimeStack::zeros(n, m);
+        for (i, v) in stack.data_mut().iter_mut().enumerate() {
+            *v = (i % 251) as f32;
+        }
+        let start = g.usize(0..=m - 1);
+        let end = g.usize(start + 1..=m);
+        let padded = (end - start) + g.usize(0..=16);
+        let mut buf = vec![-1.0f32; n * padded];
+        stack.copy_chunk_padded(start, end, padded, 9.5, &mut buf);
+        for t in 0..n {
+            for j in 0..padded {
+                let got = buf[t * padded + j];
+                let want = if j < end - start {
+                    stack.data()[t * m + start + j]
+                } else {
+                    9.5
+                };
+                if got != want {
+                    return Err(format!("n={n} m={m} [{start},{end}) pad={padded} at ({t},{j}): {got} vs {want}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slice_pixels_preserves_series() {
+    property("slice preserves series", 60, |g| {
+        let n = g.usize(2..=30);
+        let m = g.usize(2..=200);
+        let mut stack = TimeStack::zeros(n, m);
+        for (i, v) in stack.data_mut().iter_mut().enumerate() {
+            *v = ((i * 7) % 113) as f32;
+        }
+        let a = g.usize(0..=m - 1);
+        let b = g.usize(a + 1..=m);
+        let sub = stack.slice_pixels(a, b);
+        for px in 0..(b - a) {
+            if sub.series(px) != stack.series(a + px) {
+                return Err(format!("series {px} differs for [{a},{b})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cpu_engine_invariant_to_thread_count() {
+    // The fused CPU engine must be bit-stable across thread counts
+    // (each pixel's arithmetic is identical, only the partition moves).
+    let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+    property("cpu thread invariance", 12, |g| {
+        let m = g.usize(1..=600);
+        let seed = g.u32(0..=9999) as u64;
+        let data = ArtificialDataset::new(params.clone(), m, seed).generate();
+        let e1 = bfast::cpu::FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+            .map_err(|e| e.to_string())?
+            .with_threads(1);
+        let e4 = bfast::cpu::FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+            .map_err(|e| e.to_string())?
+            .with_threads(4);
+        let (m1, _) = e1.run(&data.stack).map_err(|e| e.to_string())?;
+        let (m4, _) = e4.run(&data.stack).map_err(|e| e.to_string())?;
+        if m1.breaks != m4.breaks || m1.momax != m4.momax {
+            return Err(format!("m={m} seed={seed}: thread count changed results"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fill_idempotent_and_gap_free() {
+    property("fill idempotent", 60, |g| {
+        let n = g.usize(2..=50);
+        let mut y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        // punch random holes, maybe all
+        let holes = g.usize(0..=n);
+        for _ in 0..holes {
+            let i = g.usize(0..=n - 1);
+            y[i] = f32::NAN;
+        }
+        let all_nan = y.iter().all(|v| v.is_nan());
+        let mut once = y.clone();
+        bfast::fill::fill_series(&mut once);
+        let mut twice = once.clone();
+        bfast::fill::fill_series(&mut twice);
+        if all_nan {
+            // untouched by contract
+            if !once.iter().all(|v| v.is_nan()) {
+                return Err("all-NaN series was modified".into());
+            }
+            return Ok(());
+        }
+        if once.iter().any(|v| v.is_nan()) {
+            return Err(format!("gaps remain: {once:?}"));
+        }
+        let same = once
+            .iter()
+            .zip(&twice)
+            .all(|(a, b)| (a == b) || (a.is_nan() && b.is_nan()));
+        if !same {
+            return Err("fill not idempotent".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,204 @@
+//! Integration tests over the AOT device pipeline: the rust runtime
+//! executing the JAX/Pallas HLO artifacts must agree with the CPU
+//! implementations on every workload shape, in both fused and phased
+//! modes. Requires `make artifacts`.
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::synth::{ArtificialDataset, ChileScene};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP device tests: run `make artifacts` first");
+        None
+    }
+}
+
+fn agree(a: &[i32], b: &[i32]) -> f64 {
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len().max(1) as f64
+}
+
+#[test]
+fn fused_device_equals_cpu_on_synthetic() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    // m chosen to exercise multiple chunks + a padded tail (small
+    // artifact has m_chunk = 1024)
+    let data = ArtificialDataset::new(params.clone(), 2500, 17).generate();
+    let mut runner = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+    )
+    .unwrap();
+    let res = runner.run(&data.stack, &params).unwrap();
+    assert_eq!(res.chunks, 3); // 1024+1024+452(padded)
+    let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+        .unwrap()
+        .run(&data.stack)
+        .unwrap();
+    assert_eq!(res.map.breaks, cpu_map.breaks, "break maps must agree exactly");
+    assert_eq!(res.map.first, cpu_map.first, "first indices must agree");
+    for (a, b) in res.map.momax.iter().zip(&cpu_map.momax) {
+        assert!((a - b).abs() / b.abs().max(1.0) < 5e-3, "momax {a} vs {b}");
+    }
+}
+
+#[test]
+fn phased_equals_fused_device() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    let data = ArtificialDataset::new(params.clone(), 1500, 3).generate();
+    let mut fused = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+    )
+    .unwrap();
+    let mut phased = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), phased: true, ..Default::default() },
+    )
+    .unwrap();
+    let rf = fused.run(&data.stack, &params).unwrap();
+    let rp = phased.run(&data.stack, &params).unwrap();
+    assert_eq!(rf.map.breaks, rp.map.breaks);
+    assert_eq!(rf.map.first, rp.map.first);
+    // phased mode must have recorded the paper's phase names
+    for ph in ["transfer", "create model", "predictions", "mosum", "detect breaks"] {
+        assert!(rp.phases.get(ph).is_some(), "missing phase {ph:?}");
+    }
+}
+
+#[test]
+fn pallas_and_xla_variants_agree() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    let data = ArtificialDataset::new(params.clone(), 900, 5).generate();
+    let run = |name: &str| {
+        let mut r = BfastRunner::from_manifest_dir(
+            &dir,
+            RunnerConfig { artifact: Some(name.into()), ..Default::default() },
+        )
+        .unwrap();
+        r.run(&data.stack, &params).unwrap()
+    };
+    let a = run("default"); // pallas kernel
+    let b = run("default_xla"); // plain-XLA ablation
+    assert_eq!(a.map.breaks, b.map.breaks);
+    assert_eq!(a.map.first, b.map.first);
+}
+
+#[test]
+fn chile_artifact_runs_irregular_axis() {
+    let Some(dir) = artifacts() else { return };
+    let scene = ChileScene::scaled(48, 40, 23);
+    let params = scene.params();
+    let (stack, _) = scene.generate();
+    let mut runner = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("chile".into()), ..Default::default() },
+    )
+    .unwrap();
+    let res = runner.run(&stack, &params).unwrap();
+    let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &stack.time_axis)
+        .unwrap()
+        .run(&stack)
+        .unwrap();
+    // Irregular axis + strong injected events: near-total agreement
+    // (f32 vs f64 borderline pixels allowed at the margin).
+    let rate = agree(&res.map.breaks, &cpu_map.breaks);
+    assert!(rate > 0.995, "chile agreement {rate}");
+    assert!(res.map.break_fraction() > 0.95, "paper: >99% breaks");
+}
+
+#[test]
+fn queue_depth_and_threads_do_not_change_results() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    let data = ArtificialDataset::new(params.clone(), 3100, 9).generate();
+    let mut outs = Vec::new();
+    for (depth, threads) in [(1, 1), (2, 2), (4, 3)] {
+        let mut runner = BfastRunner::from_manifest_dir(
+            &dir,
+            RunnerConfig {
+                artifact: Some("small".into()),
+                queue_depth: depth,
+                staging_threads: threads,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        outs.push(runner.run(&data.stack, &params).unwrap());
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.map.breaks, outs[0].map.breaks);
+        assert_eq!(o.map.first, outs[0].map.first);
+        assert_eq!(o.map.momax, outs[0].map.momax);
+    }
+}
+
+#[test]
+fn single_pixel_and_exact_chunk_sizes() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    let mut runner = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+    )
+    .unwrap();
+    for m in [1usize, 1023, 1024, 1025, 2048] {
+        let data = ArtificialDataset::new(params.clone(), m, 31).generate();
+        let res = runner.run(&data.stack, &params).unwrap();
+        assert_eq!(res.len(), m, "m={m}");
+        let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+            .unwrap()
+            .run(&data.stack)
+            .unwrap();
+        assert_eq!(res.map.breaks, cpu_map.breaks, "m={m}");
+    }
+}
+
+#[test]
+fn missing_values_filled_in_staging() {
+    let Some(dir) = artifacts() else { return };
+    let params = BfastParams::paper_synthetic();
+    let data = ArtificialDataset::new(params.clone(), 600, 77).generate();
+    // punch NaN holes, keeping first/last layers intact for fill
+    let mut holey = data.stack.clone();
+    let m = holey.n_pixels();
+    for px in (0..m).step_by(7) {
+        let t = 1 + px % (params.n_total - 2);
+        holey.data_mut()[t * m + px] = f32::NAN;
+    }
+    let mut runner = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+    )
+    .unwrap();
+    let res = runner.run(&holey, &params).unwrap();
+    // host-side fill then run must give identical results
+    let mut prefilled = holey.clone();
+    bfast::fill::fill_stack(&mut prefilled, 4);
+    let res2 = runner.run(&prefilled, &params).unwrap();
+    assert_eq!(res.map.breaks, res2.map.breaks);
+    assert_eq!(res.map.momax, res2.map.momax);
+}
+
+#[test]
+fn wrong_shape_params_are_rejected() {
+    let Some(dir) = artifacts() else { return };
+    let mut runner = BfastRunner::from_manifest_dir(
+        &dir,
+        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+    )
+    .unwrap();
+    // params shaped differently from the artifact
+    let params = BfastParams::new(100, 50, 25, 3, 23.0, 0.05).unwrap();
+    let stack = bfast::raster::TimeStack::zeros(100, 10);
+    let err = runner.run(&stack, &params).unwrap_err().to_string();
+    assert!(err.contains("shaped"), "{err}");
+}

@@ -1,0 +1,121 @@
+//! Golden-vector tests: every rust implementation against the python
+//! float64 oracle (`python/compile/kernels/ref.py`, exported by
+//! `aot.py --golden` into `artifacts/golden/`).
+
+use bfast::params::BfastParams;
+use bfast::pixel::{DirectBfast, NaiveBfast};
+use bfast::cpu::FusedCpuBfast;
+use bfast::raster::TimeStack;
+use bfast::runtime::bten::{read_bten, Tensor};
+use std::path::PathBuf;
+
+struct Golden {
+    params: BfastParams,
+    t: Vec<f64>,
+    y: Vec<f64>, // (N, m) row-major
+    beta: Vec<f64>,
+    mo: Vec<f64>,
+    momax: Vec<f64>,
+    breaks: Vec<i32>,
+    first: Vec<i32>,
+    m: usize,
+}
+
+fn load() -> Option<Golden> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden");
+    if !dir.join("case0.json").exists() {
+        eprintln!("SKIP golden tests: run `make artifacts` first");
+        return None;
+    }
+    let meta = bfast::json::parse_file(dir.join("case0.json")).unwrap();
+    let g = |k: &str| meta.get(k).unwrap().as_f64().unwrap();
+    let params = BfastParams::with_lambda(
+        g("N") as usize,
+        g("n") as usize,
+        g("h") as usize,
+        g("k") as usize,
+        g("f"),
+        0.05,
+        g("lam"),
+    )
+    .unwrap();
+    let rd = |name: &str| read_bten(dir.join(format!("case0_{name}.bten"))).unwrap();
+    let as_i32 = |t: &Tensor| t.as_i32().unwrap().to_vec();
+    Some(Golden {
+        m: g("m") as usize,
+        params,
+        t: rd("t").as_f64_vec(),
+        y: rd("y").as_f64_vec(),
+        beta: rd("beta").as_f64_vec(),
+        mo: rd("mo").as_f64_vec(),
+        momax: rd("momax").as_f64_vec(),
+        breaks: as_i32(&rd("breaks")),
+        first: as_i32(&rd("first")),
+    })
+}
+
+fn stack_of(g: &Golden) -> TimeStack {
+    let data: Vec<f32> = g.y.iter().map(|&v| v as f32).collect();
+    TimeStack::from_vec(g.params.n_total, g.m, data)
+        .unwrap()
+        .with_time_axis(g.t.clone())
+        .unwrap()
+}
+
+#[test]
+fn direct_matches_python_oracle() {
+    let Some(g) = load() else { return };
+    let d = DirectBfast::new(g.params.clone(), &g.t).unwrap();
+    let n_mon = g.params.n_monitor();
+    for px in 0..g.m {
+        let y: Vec<f64> = (0..g.params.n_total).map(|t| g.y[t * g.m + px]).collect();
+        // beta
+        let beta = d.fit_pixel(&y).unwrap();
+        for (j, &b) in beta.iter().enumerate() {
+            let want = g.beta[j * g.m + px];
+            assert!((b - want).abs() < 1e-8, "px {px} beta[{j}]: {b} vs {want}");
+        }
+        // full mosum process
+        let res = d.run_pixel(&y).unwrap();
+        for i in 0..n_mon {
+            let want = g.mo[i * g.m + px];
+            assert!(
+                (res.mosum[i] - want).abs() < 1e-8,
+                "px {px} mo[{i}]: {} vs {want}",
+                res.mosum[i]
+            );
+        }
+        assert_eq!(res.scan.has_break as i32, g.breaks[px], "px {px} break");
+        assert_eq!(res.scan.first, g.first[px], "px {px} first");
+        assert!((res.scan.momax - g.momax[px]).abs() < 1e-8, "px {px} momax");
+    }
+}
+
+#[test]
+fn naive_matches_python_oracle() {
+    let Some(g) = load() else { return };
+    let stack = stack_of(&g);
+    // f32 storage rounds the inputs; compare breaks/first exactly and
+    // momax with an f32-scale tolerance.
+    let map = NaiveBfast::new(g.params.clone()).run(&stack).unwrap();
+    assert_eq!(map.breaks, g.breaks);
+    assert_eq!(map.first, g.first);
+    for (a, b) in map.momax.iter().zip(&g.momax) {
+        assert!((*a as f64 - b).abs() < 5e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_cpu_matches_python_oracle() {
+    let Some(g) = load() else { return };
+    let stack = stack_of(&g);
+    let (map, _) = FusedCpuBfast::new(g.params.clone(), &g.t)
+        .unwrap()
+        .run(&stack)
+        .unwrap();
+    assert_eq!(map.breaks, g.breaks);
+    assert_eq!(map.first, g.first);
+    for (a, b) in map.momax.iter().zip(&g.momax) {
+        assert!((*a as f64 - b).abs() < 5e-3, "{a} vs {b}");
+    }
+}
