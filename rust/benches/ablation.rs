@@ -13,7 +13,7 @@ use bfast::params::BfastParams;
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("ablation", "pallas-vs-xla, queue depth, fused-vs-phased");
     let params = BfastParams::paper_synthetic();
     let m = scaled_m(100_000);
@@ -21,21 +21,28 @@ fn main() -> anyhow::Result<()> {
     let bench = Bench::quick();
     let mut table = Table::new("ablations (seconds, steady-state)", &["config", "seconds"]);
 
-    // 1. pallas vs xla artifact
-    for name in ["default", "default_xla"] {
-        let mut runner = BfastRunner::from_manifest_dir(
-            "artifacts",
-            RunnerConfig { artifact: Some(name.into()), ..Default::default() },
-        )?;
-        let _ = runner.run(&data.stack, &params)?; // compile
-        let s = bench.run(|| runner.run(&data.stack, &params).unwrap()).secs();
-        println!("kernel={name:<12} {s:.3}s");
-        table.row(vec![format!("kernel:{name}"), Table::num(s)]);
+    // 1. pallas vs xla artifact — only meaningful on the real device
+    // backend; the emulated fallback would measure the same code twice
+    // and record an ablation that never happened.
+    let probe = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    if probe.platform().contains("emulated") {
+        println!("kernel ablation SKIPPED: emulated backend (needs pjrt + artifacts)");
+    } else {
+        for name in ["default", "default_xla"] {
+            let mut runner = BfastRunner::auto(
+                "artifacts",
+                RunnerConfig { artifact: Some(name.into()), ..Default::default() },
+            )?;
+            let _ = runner.run(&data.stack, &params)?; // compile
+            let s = bench.run(|| runner.run(&data.stack, &params).unwrap()).secs();
+            println!("kernel={name:<12} {s:.3}s");
+            table.row(vec![format!("kernel:{name}"), Table::num(s)]);
+        }
     }
 
     // 2. queue depth × staging threads
     for (depth, threads) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2)] {
-        let mut runner = BfastRunner::from_manifest_dir(
+        let mut runner = BfastRunner::auto(
             "artifacts",
             RunnerConfig {
                 artifact: Some("default".into()),
@@ -52,7 +59,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. fused vs phased
     for phased in [false, true] {
-        let mut runner = BfastRunner::from_manifest_dir(
+        let mut runner = BfastRunner::auto(
             "artifacts",
             RunnerConfig {
                 artifact: Some("default".into()),

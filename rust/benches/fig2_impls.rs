@@ -13,13 +13,14 @@ use bfast::pixel::{DirectBfast, NaiveBfast};
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig2", "runtime of BFAST(R/Python/CPU/GPU) analogues vs m");
     let params = BfastParams::paper_synthetic();
     let bench = Bench::quick();
     let naive_cap = 2_000usize;
 
-    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    println!("device backend: {}", runner.platform());
     let mut table = Table::new(
         "fig2: seconds per implementation (naive extrapolated past cap)",
         &["m", "naive_R", "direct_Py", "cpu_multi", "device", "su_direct", "su_cpu", "su_device"],

@@ -14,7 +14,7 @@ use bfast::params::BfastParams;
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig3", "phase breakdown, CPU vs device");
     let params = BfastParams::paper_synthetic();
     let m = scaled_m(100_000);
@@ -28,16 +28,17 @@ fn main() -> anyhow::Result<()> {
     print!("{}", cpu_phases2.table(&format!("(a) BFAST(CPU) phases, m={m}")));
 
     // (b) device phases (instrumented pipeline)
-    let mut runner = BfastRunner::from_manifest_dir(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;
+    println!("device backend: {}", runner.platform());
     let _ = runner.run(&data.stack, &params)?; // warmup (compiles)
     let res = runner.run(&data.stack, &params)?;
     print!("{}", res.phases.table(&format!("(b) BFAST(device) phases, m={m}")));
 
     // fused-path reference (the production configuration)
-    let mut fused_runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let mut fused_runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     let _ = fused_runner.run(&data.stack, &params)?;
     let fres = fused_runner.run(&data.stack, &params)?;
     print!("{}", fres.phases.table("(b') device fused path, same work"));

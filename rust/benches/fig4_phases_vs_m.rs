@@ -9,7 +9,7 @@ use bfast::params::BfastParams;
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig4", "phases vs m");
     let params = BfastParams::paper_synthetic();
     let mut cpu_table = Table::new(
@@ -21,10 +21,11 @@ fn main() -> anyhow::Result<()> {
         &["m", "transfer", "create model", "predictions", "mosum", "detect breaks", "readback"],
     );
 
-    let mut runner = BfastRunner::from_manifest_dir(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;
+    println!("device backend: {}", runner.platform());
     let base = scaled_m(20_000);
     for step in 1..=5usize {
         let m = base * step;

@@ -10,7 +10,7 @@ use bfast::params::BfastParams;
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig5", "influence of k on the phases");
     let m = scaled_m(50_000);
     let mut cpu_table = Table::new(
@@ -22,10 +22,11 @@ fn main() -> anyhow::Result<()> {
         &["k", "transfer", "create model", "predictions", "mosum", "detect breaks", "total"],
     );
 
-    let mut runner = BfastRunner::from_manifest_dir(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;
+    println!("device backend: {}", runner.platform());
     for k in 1..=5usize {
         let params = BfastParams::new(200, 100, 50, k, 23.0, 0.05)?;
         let data = ArtificialDataset::new(params.clone(), m, 42).generate();

@@ -11,17 +11,18 @@ use bfast::params::BfastParams;
 use bfast::report::Table;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig6", "influence of h on MOSUM phase + total");
     let m = scaled_m(50_000);
     let mut table = Table::new(
         "fig6: seconds vs h",
         &["h", "cpu_mosum", "cpu_total", "dev_mosum", "dev_total"],
     );
-    let mut runner = BfastRunner::from_manifest_dir(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;
+    println!("device backend: {}", runner.platform());
     for h in [25usize, 50, 100] {
         let params = BfastParams::new(200, 100, h, 3, 23.0, 0.05)?;
         let data = ArtificialDataset::new(params.clone(), m, 42).generate();

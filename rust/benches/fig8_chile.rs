@@ -11,7 +11,7 @@ use bfast::report::Table;
 use bfast::synth::ChileScene;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     banner("fig8", "Chile scene, chunked runtimes");
     let scale = bench_scale().sqrt();
     let scene = ChileScene::scaled(
@@ -25,10 +25,11 @@ fn main() -> anyhow::Result<()> {
     println!("scene {}x{} = {m} px, N={}", scene.width, scene.height, scene.n_times);
 
     let cpu = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
-    let mut runner = BfastRunner::from_manifest_dir(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { artifact: Some("chile".into()), ..Default::default() },
     )?;
+    println!("device backend: {}", runner.platform());
     // compile warmup on a small slice
     let warm = stack.slice_pixels(0, (m / 6).max(1));
     let _ = runner.run(&warm, &params)?;
@@ -63,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         if parts == 6 {
             dev_full = dev_s;
             cpu_full = cpu_s;
-            anyhow::ensure!(
+            bfast::ensure!(
                 res.map.break_fraction() > 0.95,
                 "expected near-total break coverage (paper: >99%)"
             );

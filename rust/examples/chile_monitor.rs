@@ -17,7 +17,7 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     let scene = ChileScene::scaled(env_usize("CHILE_W", 240), env_usize("CHILE_H", 186), 2017);
     let params = scene.params();
     println!(
@@ -39,12 +39,13 @@ fn main() -> anyhow::Result<()> {
     // Fig. 7 analogue: snapshot layers as PGM heatmaps
     for (tag, ti) in [("a_first", 0usize), ("e_160", 159), ("f_200", 199), ("h_last", 287)] {
         let path = format!("results/chile_snapshot_{tag}.pgm");
-        pgm::write_pgm(&path, stack.layer(ti.min(stack.n_times() - 1)), scene.width, scene.height, 0.0, 0.8)?;
+        let layer = stack.layer(ti.min(stack.n_times() - 1));
+        pgm::write_pgm(&path, layer, scene.width, scene.height, 0.0, 0.8)?;
     }
     println!("wrote results/chile_snapshot_*.pgm (Fig. 7 analogue)");
 
     // Device run over the full scene
-    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     let res = runner.run(&stack, &params)?;
     println!(
         "device: {:.3}s for {} px in {} chunks — {:.2}% breaks (paper: >99%)",
@@ -68,12 +69,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Fig. 9: heatmap of max |MOSUM|
-    let (lo, hi) =
-        pgm::write_pgm_autoscale("results/chile_momax.pgm", &res.map.momax, scene.width, scene.height)?;
+    let momax_path = "results/chile_momax.pgm";
+    let (lo, hi) = pgm::write_pgm_autoscale(momax_path, &res.map.momax, scene.width, scene.height)?;
     println!("wrote results/chile_momax.pgm (Fig. 9 analogue, scale {lo:.1}..{hi:.1})");
 
     // forest blocks must show larger MOSUM magnitudes than desert
-    let (mut forest_sum, mut forest_n, mut desert_sum, mut desert_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+    let (mut forest_sum, mut forest_n) = (0.0f64, 0usize);
+    let (mut desert_sum, mut desert_n) = (0.0f64, 0usize);
     for (px, &f) in truth.is_forest.iter().enumerate() {
         if f {
             forest_sum += res.map.momax[px] as f64;
@@ -86,8 +88,8 @@ fn main() -> anyhow::Result<()> {
     let fm = forest_sum / forest_n as f64;
     let dm = desert_sum / desert_n as f64;
     println!("mean max|MOSUM|: forest {fm:.1}, desert {dm:.1} (paper: forest ≫ desert)");
-    anyhow::ensure!(fm > dm, "forest magnitudes should dominate");
-    anyhow::ensure!(res.map.break_fraction() > 0.95, "expect near-total break coverage");
+    bfast::ensure!(fm > dm, "forest magnitudes should dominate");
+    bfast::ensure!(res.map.break_fraction() > 0.95, "expect near-total break coverage");
     println!("chile_monitor OK");
     Ok(())
 }

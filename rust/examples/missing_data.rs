@@ -12,7 +12,7 @@ use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::fill;
 use bfast::synth::ChileScene;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     let clean_scene = ChileScene::scaled(96, 72, 11);
     let cloudy_scene = ChileScene { cloud_rate: 0.08, ..clean_scene.clone() };
     let params = clean_scene.params();
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         100.0 * nan_count as f64 / cloudy.data().len() as f64
     );
 
-    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
+    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
 
     // Coordinator path: staging-side gap filling (fill_missing = true).
     let res_clean = runner.run(&clean, &params)?;
@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         stats.pixels_with_gaps, stats.missing_values, stats.longest_gap
     );
     let res_prefilled = runner.run(&cloudy, &params)?;
-    anyhow::ensure!(
+    bfast::ensure!(
         res_prefilled.map.breaks == res_cloudy.map.breaks,
         "staging-side fill must equal host-side fill"
     );
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     }
     let rate = agree as f64 / res_clean.len() as f64;
     println!("clean vs cloudy agreement: {:.2}%", 100.0 * rate);
-    anyhow::ensure!(rate > 0.9, "cloud gaps degraded detection too much");
+    bfast::ensure!(rate > 0.9, "cloud gaps degraded detection too much");
     println!("missing_data OK");
     Ok(())
 }

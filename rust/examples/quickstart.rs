@@ -11,7 +11,7 @@ use bfast::cpu::FusedCpuBfast;
 use bfast::params::BfastParams;
 use bfast::synth::ArtificialDataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     // The paper's synthetic benchmark setting (§4.2), small m.
     let params = BfastParams::paper_synthetic();
     println!(
@@ -31,8 +31,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- device pipeline (AOT JAX/Pallas via PJRT) ----------------------
-    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
-    println!("device: {}", runner.runtime().platform());
+    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    println!("device: {}", runner.platform());
     let res = runner.run(&data.stack, &params)?;
     let (tpr, fpr) = data.score(&res.map.breaks);
     println!(
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         res.len(),
         100.0 * agree as f64 / res.len() as f64
     );
-    anyhow::ensure!(
+    bfast::ensure!(
         agree as f64 / res.len() as f64 > 0.999,
         "device and CPU implementations disagree"
     );

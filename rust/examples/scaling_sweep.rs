@@ -23,15 +23,15 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> bfast::error::Result<()> {
     let params = BfastParams::paper_synthetic();
     let m_max = env_usize("SWEEP_M_MAX", 100_000);
     let points = env_usize("SWEEP_POINTS", 5);
     // naive is O(100x) slower; cap its workload like the paper caps R's
     let naive_cap = env_usize("SWEEP_NAIVE_CAP", 4_000);
 
-    let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default())?;
-    println!("device: {}", runner.runtime().platform());
+    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    println!("device: {}", runner.platform());
 
     let mut table = Table::new(
         "fig2: runtime vs m (seconds)",
@@ -68,11 +68,11 @@ fn main() -> anyhow::Result<()> {
 
         // cross-implementation agreement (the correctness part of the
         // end-to-end validation)
-        anyhow::ensure!(
+        bfast::ensure!(
             direct_map.breaks == cpu_map.breaks,
             "direct vs cpu disagreement at m={m}"
         );
-        anyhow::ensure!(
+        bfast::ensure!(
             naive_map.breaks[..] == direct_map.breaks[..naive_m],
             "naive vs direct disagreement at m={m}"
         );
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
             .filter(|(a, b)| a == b)
             .count() as f64
             / m as f64;
-        anyhow::ensure!(agree > 0.999, "device vs cpu agreement {agree} at m={m}");
+        bfast::ensure!(agree > 0.999, "device vs cpu agreement {agree} at m={m}");
 
         println!(
             "m={m:>8}: naive*={naive_s:>8.2}s direct={direct_s:>8.2}s cpu={cpu_s:>7.3}s \

@@ -2,7 +2,7 @@
 //! build). Declarative flag specs with typed getters, auto-generated
 //! `--help`, and subcommand dispatch in `main.rs`.
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{bail, err, Result};
 use std::collections::BTreeMap;
 
 /// One flag specification.
@@ -93,7 +93,7 @@ impl Command {
                     .flags
                     .iter()
                     .find(|f| f.name == name)
-                    .ok_or_else(|| anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                    .ok_or_else(|| err!("unknown flag --{name}\n\n{}", self.usage()))?;
                 if spec.takes_value {
                     let v = match inline {
                         Some(v) => v,
@@ -101,7 +101,7 @@ impl Command {
                             i += 1;
                             args.get(i)
                                 .cloned()
-                                .ok_or_else(|| anyhow!("--{name} needs a value"))?
+                                .ok_or_else(|| err!("--{name} needs a value"))?
                         }
                     };
                     values.insert(name.to_string(), v);
@@ -139,22 +139,22 @@ impl Matches {
         self.values
             .get(name)
             .map(|s| s.as_str())
-            .ok_or_else(|| anyhow!("flag --{name} not set"))
+            .ok_or_else(|| err!("flag --{name} not set"))
     }
 
     pub fn usize(&self, name: &str) -> Result<usize> {
         let s = self.str(name)?;
-        s.parse().map_err(|_| anyhow!("--{name}: expected integer, got {s:?}"))
+        s.parse().map_err(|_| err!("--{name}: expected integer, got {s:?}"))
     }
 
     pub fn u64(&self, name: &str) -> Result<u64> {
         let s = self.str(name)?;
-        s.parse().map_err(|_| anyhow!("--{name}: expected integer, got {s:?}"))
+        s.parse().map_err(|_| err!("--{name}: expected integer, got {s:?}"))
     }
 
     pub fn f64(&self, name: &str) -> Result<f64> {
         let s = self.str(name)?;
-        s.parse().map_err(|_| anyhow!("--{name}: expected number, got {s:?}"))
+        s.parse().map_err(|_| err!("--{name}: expected number, got {s:?}"))
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -168,7 +168,7 @@ impl Matches {
             .map(|p| {
                 p.trim()
                     .parse()
-                    .map_err(|_| anyhow!("--{name}: bad list element {p:?}"))
+                    .map_err(|_| err!("--{name}: bad list element {p:?}"))
             })
             .collect()
     }

@@ -7,7 +7,7 @@
 //! the overlap:
 //!
 //! ```text
-//!   staging workers (CPU threads)          executor thread (owns PJRT)
+//!   staging workers (CPU threads)          executor thread (owns backend)
 //!  ┌───────────────────────────────┐      ┌─────────────────────────────┐
 //!  │ gather chunk px range          │ ───▶ │ transfer → execute → read   │
 //!  │ pad to m_chunk, gap-fill       │ sync │ back, assemble break map    │
@@ -16,29 +16,34 @@
 //!
 //! * the bounded channel (depth = [`RunnerConfig::queue_depth`])
 //!   provides **backpressure**: staging can run at most `depth` chunks
-//!   ahead of the device, bounding memory;
+//!   ahead of the executor, bounding memory;
 //! * chunk buffers are **recycled** through a free-list channel (no
 //!   allocation in the steady state);
-//! * PJRT handles are not `Send`, so the executor thread owns the
-//!   [`DeviceRuntime`] exclusively — the analogue of a CUDA-stream
-//!   owner thread.
+//! * device handles (PJRT) are not `Send`, so the executor thread owns
+//!   the [`ExecutorBackend`] exclusively — the analogue of a
+//!   CUDA-stream owner thread. The emulated backend honours the same
+//!   contract.
 //!
-//! [`BfastRunner`] is the leader API; `phased` mode swaps the fused
-//! executable for the four per-phase executables to reproduce the
-//! paper's phase figures.
+//! [`BfastRunner`] is the leader API; it is backend-agnostic: pass any
+//! [`ExecutorBackend`] to [`BfastRunner::new`], or use the
+//! constructors [`BfastRunner::emulated`] (pure-rust, default build),
+//! `BfastRunner::from_manifest_dir` (PJRT artifacts, feature `pjrt`)
+//! and [`BfastRunner::auto`] (artifacts when available, else
+//! emulated). `phased` mode swaps the fused execution for the
+//! per-phase instrumented one to reproduce the paper's phase figures.
 
+use crate::error::{ensure, Context, Result};
 use crate::fill;
 use crate::metrics::PhaseTimes;
 use crate::params::BfastParams;
 use crate::pixel::{DirectBfast, PixelResult};
 use crate::raster::{BreakMap, ChunkPlan, TimeStack};
-use crate::runtime::{ChunkOutput, DeviceRuntime};
-use anyhow::{ensure, Context, Result};
+use crate::runtime::{ChunkOutput, EmulatedDevice, ExecutorBackend};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// Staging-side phase label (host work before the device sees data).
+/// Staging-side phase label (host work before the executor sees data).
 pub const PHASE_STAGING: &str = "staging (host)";
 
 /// Coordinator configuration.
@@ -51,7 +56,7 @@ pub struct RunnerConfig {
     pub queue_depth: usize,
     /// Staging worker threads.
     pub staging_threads: usize,
-    /// Run the per-phase executables instead of the fused one.
+    /// Run the per-phase instrumented path instead of the fused one.
     pub phased: bool,
     /// Gap-fill NaN observations during staging (paper footnote 2).
     pub fill_missing: bool,
@@ -93,35 +98,61 @@ impl RunResult {
     }
 }
 
-/// The leader: owns the device runtime and drives scene analyses.
+/// The leader: owns the executor backend and drives scene analyses.
 pub struct BfastRunner {
-    rt: DeviceRuntime,
+    backend: Box<dyn ExecutorBackend>,
     pub cfg: RunnerConfig,
 }
 
 impl BfastRunner {
-    /// Open the runtime from an artifact directory (see `make artifacts`).
-    pub fn from_manifest_dir(dir: impl AsRef<std::path::Path>, cfg: RunnerConfig) -> Result<Self> {
+    /// Wrap an arbitrary backend.
+    pub fn new(backend: Box<dyn ExecutorBackend>, cfg: RunnerConfig) -> Result<Self> {
         ensure!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
         ensure!(cfg.staging_threads >= 1, "staging_threads must be >= 1");
-        Ok(Self { rt: DeviceRuntime::new(dir)?, cfg })
+        Ok(Self { backend, cfg })
     }
 
-    pub fn runtime(&self) -> &DeviceRuntime {
-        &self.rt
+    /// Pure-rust emulated backend (the default build's device).
+    pub fn emulated(cfg: RunnerConfig) -> Result<Self> {
+        Self::new(Box::new(EmulatedDevice::new()), cfg)
     }
 
-    /// Pick the artifact for an analysis.
-    fn artifact_name(&self, params: &BfastParams) -> Result<String> {
-        if let Some(name) = &self.cfg.artifact {
-            return Ok(name.clone());
+    /// Open the PJRT runtime from an artifact directory
+    /// (see `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    pub fn from_manifest_dir(dir: impl AsRef<std::path::Path>, cfg: RunnerConfig) -> Result<Self> {
+        Self::new(Box::new(crate::runtime::pjrt::DeviceRuntime::new(dir)?), cfg)
+    }
+
+    /// Best available backend: the PJRT artifact runtime when the
+    /// crate was built with `pjrt`, `dir` holds a manifest *and* the
+    /// device opens (the stub `xla` crate, for instance, cannot) —
+    /// otherwise the emulated device. This is what the CLI, benches
+    /// and examples use so they run in any build.
+    pub fn auto(dir: impl AsRef<std::path::Path>, cfg: RunnerConfig) -> Result<Self> {
+        #[cfg(feature = "pjrt")]
+        {
+            if dir.as_ref().join("manifest.json").exists() {
+                match crate::runtime::pjrt::DeviceRuntime::new(&dir) {
+                    Ok(rt) => return Self::new(Box::new(rt), cfg),
+                    Err(e) => eprintln!(
+                        "bfast: pjrt backend unavailable ({e:#}); falling back to emulated"
+                    ),
+                }
+            }
         }
-        Ok(self
-            .rt
-            .manifest()
-            .find_fused_for(params.n_total, params.n_hist, params.h, params.k)?
-            .name
-            .clone())
+        let _ = &dir;
+        Self::emulated(cfg)
+    }
+
+    /// The backend in use.
+    pub fn backend(&self) -> &dyn ExecutorBackend {
+        &*self.backend
+    }
+
+    /// Human-readable backend/platform description.
+    pub fn platform(&self) -> String {
+        self.backend.platform()
     }
 
     /// Analyse a scene. Streams chunks through the staging → executor
@@ -136,8 +167,10 @@ impl BfastRunner {
             params.n_total
         );
         let t0 = Instant::now();
-        let name = self.artifact_name(params)?;
-        let spec = self.rt.manifest().find(&name, "fused")?.clone();
+        let spec = self
+            .backend
+            .resolve(self.cfg.artifact.as_deref(), params)?;
+        let name = spec.name.clone();
         ensure!(
             spec.n_total == params.n_total
                 && spec.n_hist == params.n_hist
@@ -165,10 +198,9 @@ impl BfastRunner {
         let staging_ns = AtomicUsize::new(0);
         let chunk_len = spec.n_total * spec.m_chunk;
 
-        // Compile before the clock starts ticking per-chunk (one-time;
-        // cached across runs of the same runner).
-        let fused = if self.cfg.phased { None } else { Some(self.rt.fused(&name)?) };
-        let phased = if self.cfg.phased { Some(self.rt.phased(&name)?) } else { None };
+        // Compile/load before the clock starts ticking per-chunk
+        // (one-time; backends cache across runs of the same runner).
+        let mut exec = self.backend.load(&spec, self.cfg.phased)?;
 
         if plan.is_empty() {
             return Ok(RunResult {
@@ -237,22 +269,39 @@ impl BfastRunner {
             }
             drop(full_tx);
 
-            // --- executor (this thread owns the PJRT handles) -----------
+            // --- executor (this thread owns the backend handles) --------
+            // On executor failure, keep draining (and recycling) so the
+            // staging workers can finish and the scope join completes —
+            // bailing out of the loop directly would leave workers
+            // blocked on a full queue / empty free list forever.
             let mut done = 0usize;
+            let mut exec_err = None;
             while let Ok((chunk, buf)) = full_rx.recv() {
-                let out: ChunkOutput = match (&fused, &phased) {
-                    (Some(f), _) => {
-                        f.run_chunk(&t_axis, freq, &buf, lambda, &mut phases)?
+                if exec_err.is_none() {
+                    match exec.run_chunk(&t_axis, freq, &buf, lambda, &mut phases) {
+                        Ok(out) => {
+                            let w = chunk.width();
+                            map.write_at(
+                                chunk.start,
+                                &out.breaks[..w],
+                                &out.first[..w],
+                                &out.momax[..w],
+                            );
+                            done += 1;
+                        }
+                        Err(e) => {
+                            exec_err = Some(e);
+                            // Exhaust the chunk counter so staging
+                            // workers stop after their current chunk
+                            // instead of staging the rest of the scene.
+                            next_chunk.store(plan.len(), Ordering::Relaxed);
+                        }
                     }
-                    (_, Some(p)) => {
-                        p.run_chunk(&t_axis, freq, &buf, lambda, &mut phases)?
-                    }
-                    _ => unreachable!(),
-                };
-                let w = chunk.width();
-                map.write_at(chunk.start, &out.breaks[..w], &out.first[..w], &out.momax[..w]);
-                let _ = free_tx.send(buf); // recycle
-                done += 1;
+                }
+                let _ = free_tx.send(buf); // recycle (also while draining)
+            }
+            if let Some(e) = exec_err {
+                return Err(e);
             }
             ensure!(done == plan.len(), "executor saw {done}/{} chunks", plan.len());
             Ok(())
@@ -321,11 +370,73 @@ fn fill_chunk_columns(buf: &mut [f32], n_times: usize, width: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::PhaseTimes;
+    use crate::runtime::{ArtifactSpec, ChunkExecutor, EmulatedDevice};
+
+    /// Backend whose executor always fails — exercises the mid-run
+    /// error path of the coordinator loop.
+    struct FailingBackend;
+
+    struct FailingExec;
+
+    impl ChunkExecutor for FailingExec {
+        fn run_chunk(
+            &mut self,
+            _t_axis: &[f32],
+            _freq: f32,
+            _y: &[f32],
+            _lambda: f32,
+            _times: &mut PhaseTimes,
+        ) -> Result<ChunkOutput> {
+            crate::bail!("injected executor failure")
+        }
+    }
+
+    impl ExecutorBackend for FailingBackend {
+        fn platform(&self) -> String {
+            "failing (test)".into()
+        }
+
+        fn resolve(&self, artifact: Option<&str>, params: &BfastParams) -> Result<ArtifactSpec> {
+            EmulatedDevice::new().with_m_chunk(8).resolve(artifact, params)
+        }
+
+        fn load<'a>(
+            &'a self,
+            _spec: &ArtifactSpec,
+            _phased: bool,
+        ) -> Result<Box<dyn ChunkExecutor + 'a>> {
+            Ok(Box::new(FailingExec))
+        }
+    }
+
+    #[test]
+    fn executor_error_surfaces_instead_of_deadlocking() {
+        // More chunks than queue_depth + staging_threads so staging
+        // would block forever if the executor bailed without draining.
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 200, 1).generate();
+        let mut runner = BfastRunner::new(
+            Box::new(FailingBackend),
+            RunnerConfig { queue_depth: 1, staging_threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        let err = runner.run(&data.stack, &params).unwrap_err().to_string();
+        assert!(err.contains("injected executor failure"), "{err}");
+    }
 
     #[test]
     fn config_validation() {
         let bad = RunnerConfig { queue_depth: 0, ..Default::default() };
-        assert!(BfastRunner::from_manifest_dir("/nonexistent", bad).is_err());
+        assert!(BfastRunner::emulated(bad).is_err());
+        let bad = RunnerConfig { staging_threads: 0, ..Default::default() };
+        assert!(BfastRunner::emulated(bad).is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_to_emulated() {
+        let r = BfastRunner::auto("/nonexistent/artifacts", RunnerConfig::default()).unwrap();
+        assert!(r.platform().contains("emulated"), "{}", r.platform());
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::mosum;
 use crate::params::BfastParams;
 use crate::raster::{BreakMap, TimeStack};
 use crate::threadpool::{self, SyncSlice};
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
 
 /// Phase names (shared with the coordinator's tables).
 pub const PHASE_MODEL: &str = "create model";

@@ -47,7 +47,7 @@ pub fn design_for(params: &BfastParams) -> Mat {
 /// The paper's fused precomputation (Eq. 8):
 /// `M = (X_h X_hᵀ)⁻¹ X_h ∈ R^{p×n}` with X_h the history columns.
 /// Shared by every pixel of a scene — computed once per analysis.
-pub fn history_pinv(x: &Mat, n_hist: usize) -> anyhow::Result<Mat> {
+pub fn history_pinv(x: &Mat, n_hist: usize) -> crate::error::Result<Mat> {
     let p = x.rows();
     let xh = Mat::from_fn(p, n_hist, |i, j| x[(i, j)]);
     xh.pinv_wide()

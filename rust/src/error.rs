@@ -1,0 +1,219 @@
+//! Crate-local error substrate (replaces `anyhow` for the offline
+//! build — the last external dependency of the default feature set).
+//!
+//! [`BfastError`] is a rendered message plus a stack of context
+//! frames. The surface mirrors the subset of `anyhow` the crate used:
+//!
+//! * `Result<T>` — crate-wide result alias;
+//! * [`bail!`] / [`ensure!`] / [`err!`] — early-return, assertion and
+//!   ad-hoc error construction macros (`err!` is the `anyhow!`
+//!   analogue);
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`.
+//!
+//! Display semantics match `anyhow`: `{}` prints the outermost
+//! message, `{:#}` prints the full chain outermost-first joined with
+//! `": "`.
+
+use std::fmt;
+
+/// Crate-wide result type.
+pub type Result<T, E = BfastError> = std::result::Result<T, E>;
+
+pub use crate::{bail, ensure, err};
+
+/// The crate error: a root cause plus zero or more context frames
+/// (innermost first in `frames`; the *last* frame is outermost).
+pub struct BfastError {
+    root: String,
+    frames: Vec<String>,
+}
+
+impl BfastError {
+    /// Build an error from a rendered message.
+    pub fn msg(message: impl Into<String>) -> Self {
+        Self { root: message.into(), frames: Vec::new() }
+    }
+
+    /// Attach an outer context frame (most recent = outermost).
+    pub fn push_context(mut self, ctx: impl fmt::Display) -> Self {
+        self.frames.push(ctx.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        &self.root
+    }
+
+    /// Context frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().rev().map(String::as_str).chain(std::iter::once(self.root.as_str()))
+    }
+}
+
+impl fmt::Display for BfastError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — full chain: outer: ... : root
+            let mut first = true;
+            for part in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            // `{}` — outermost message only
+            f.write_str(self.frames.last().map(String::as_str).unwrap_or(&self.root))
+        }
+    }
+}
+
+impl fmt::Debug for BfastError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost message, then the cause chain (anyhow-style), so
+        // `unwrap()` panics carry the whole story.
+        write!(f, "{}", self.frames.last().map(String::as_str).unwrap_or(&self.root))?;
+        let mut rest: Vec<&str> = self.chain().skip(1).collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, part) in rest.drain(..).enumerate() {
+                write!(f, "\n    {i}: {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts into a BfastError by rendering its message.
+// (BfastError deliberately does NOT implement std::error::Error, which
+// is what keeps this blanket impl coherent — the same trick anyhow
+// uses.)
+impl<E: std::error::Error> From<E> for BfastError {
+    fn from(e: E) -> Self {
+        BfastError::msg(e.to_string())
+    }
+}
+
+/// Context attachment for `Result` and `Option` (anyhow-compatible
+/// call sites: `.context("...")` / `.with_context(|| format!(...))`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<BfastError>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| BfastError::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| BfastError::msg(f().to_string()))
+    }
+}
+
+/// Construct a [`BfastError`] from a format string (the `anyhow!`
+/// analogue).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::BfastError::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::BfastError::msg(format!($($arg)*)).into())
+    };
+}
+
+/// Return early with a formatted error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        let e = std::fs::read("/definitely/not/a/path").unwrap_err();
+        Err(e.into())
+    }
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e = BfastError::msg("root").push_context("mid").push_context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by") && dbg.contains("root"));
+    }
+
+    #[test]
+    fn std_errors_convert_and_take_context() {
+        let e = fails_io().context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+        let e = err!("ad hoc {}", 7);
+        assert_eq!(e.to_string(), "ad hoc 7");
+    }
+
+    #[test]
+    fn bare_ensure_reports_condition() {
+        fn f() -> Result<()> {
+            let x = 1;
+            ensure!(x == 2);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("x == 2"));
+    }
+}

@@ -14,7 +14,7 @@
 //!   first index of the stable history.
 
 use crate::linalg::Mat;
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
 
 /// Recursive least squares over a fixed design.
 ///
@@ -231,7 +231,9 @@ mod tests {
         let x = design(n);
         let mut nrm = Normal::from_seed(3);
         let y: Vec<f64> = (0..n)
-            .map(|t| 0.3 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin() + 0.02 * nrm.sample())
+            .map(|t| {
+                0.3 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin() + 0.02 * nrm.sample()
+            })
             .collect();
         assert_eq!(roc_history_start(&x, &y, 0.05).unwrap(), 0);
     }

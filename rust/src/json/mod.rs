@@ -5,7 +5,7 @@
 //! Full RFC 8259 value model; numbers are kept as f64 (sufficient for
 //! the shapes/params we store). Object key order is preserved.
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{bail, err, Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -77,7 +77,7 @@ impl Value {
     /// Object member lookup (error if absent).
     pub fn get(&self, key: &str) -> Result<&Value> {
         self.try_get(key)
-            .ok_or_else(|| anyhow!("missing key {key:?} in object"))
+            .ok_or_else(|| err!("missing key {key:?} in object"))
     }
 
     /// Object member lookup (None if absent or not an object).
@@ -330,7 +330,7 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .bytes
                                 .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                                .ok_or_else(|| err!("truncated \\u escape"))?;
                             let code =
                                 u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
                             // Surrogate pairs: only handle BMP + paired surrogates.
@@ -342,7 +342,7 @@ impl<'a> Parser<'a> {
                                     let hex2 = self
                                         .bytes
                                         .get(self.pos + 7..self.pos + 11)
-                                        .ok_or_else(|| anyhow!("truncated surrogate"))?;
+                                        .ok_or_else(|| err!("truncated surrogate"))?;
                                     let lo = u32::from_str_radix(
                                         std::str::from_utf8(hex2)?,
                                         16,
@@ -352,7 +352,7 @@ impl<'a> Parser<'a> {
                                         + (lo - 0xDC00);
                                     s.push(
                                         char::from_u32(c)
-                                            .ok_or_else(|| anyhow!("bad surrogate pair"))?,
+                                            .ok_or_else(|| err!("bad surrogate pair"))?,
                                     );
                                     self.pos += 10;
                                 } else {
@@ -361,7 +361,7 @@ impl<'a> Parser<'a> {
                             } else {
                                 s.push(
                                     char::from_u32(code)
-                                        .ok_or_else(|| anyhow!("bad \\u escape"))?,
+                                        .ok_or_else(|| err!("bad \\u escape"))?,
                                 );
                                 self.pos += 4;
                             }

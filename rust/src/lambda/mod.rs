@@ -24,7 +24,7 @@ use crate::mosum;
 use crate::params::BfastParams;
 use crate::prng::{Normal, Pcg32};
 use crate::threadpool;
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
 
@@ -200,7 +200,8 @@ mod tests {
         // (1-alpha) quantile of sup |MO|/sqrt(log+) must agree.
         let (n, n_tot, h) = (100usize, 200usize, 50usize);
         let reps = 4000;
-        let stats = crate::threadpool::parallel_map(reps, crate::threadpool::default_threads(), |i| {
+        let threads = crate::threadpool::default_threads();
+        let stats = crate::threadpool::parallel_map(reps, threads, |i| {
             let mut nrm = Normal::new(crate::prng::Pcg32::with_stream(99, i as u64));
             let y: Vec<f64> = (0..n_tot).map(|_| nrm.sample()).collect();
             let mean = y[..n].iter().sum::<f64>() / n as f64;

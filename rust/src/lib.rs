@@ -3,45 +3,61 @@
 //! A production reproduction of *"Massively-Parallel Break Detection
 //! for Satellite Data"* (von Mehren et al., 2018): the BFAST(monitor)
 //! structural-change procedure of Verbesselt et al. applied to every
-//! pixel of a satellite image time-series stack, executed through an
-//! AOT-compiled JAX/Pallas pipeline on an XLA/PJRT device, coordinated
-//! from rust.
+//! pixel of a satellite image time-series stack, coordinated from
+//! rust against a pluggable executor backend.
 //!
 //! ## Layers
 //!
 //! * **L3 (this crate)** — the streaming coordinator ([`coordinator`]):
-//!   scene source → gap-fill → chunking → staged device transfer →
-//!   executor → break-map assembly, plus all CPU baselines
-//!   ([`pixel`], [`cpu`]) the paper evaluates against.
+//!   scene source → gap-fill → chunking → staged transfer → executor →
+//!   break-map assembly, plus all CPU baselines ([`pixel`], [`cpu`])
+//!   the paper evaluates against.
+//! * **Backends** ([`runtime`]) — the chunk contract is the
+//!   [`runtime::ExecutorBackend`] trait. Two implementations:
+//!   - [`runtime::EmulatedDevice`] (**default**): a pure-rust device
+//!     emulator executing the batched BFAST pipeline (history OLS fit
+//!     → predictions → MOSUM → break scan) on the [`threadpool`] +
+//!     [`linalg`] substrate. No artifacts, no network, no C deps.
+//!   - `runtime::pjrt::DeviceRuntime` (**feature `pjrt`**): loads the
+//!     AOT HLO artifacts emitted by `python/compile/aot.py` and
+//!     executes them through the `xla` crate's PJRT client.
 //! * **L2/L1 (python/compile)** — the batched BFAST compute graph and
-//!   its Pallas MOSUM kernel, lowered once to `artifacts/*.hlo.txt`.
-//! * **runtime** ([`runtime`]) — loads those artifacts through the
-//!   `xla` crate's PJRT client and executes them from the request path
-//!   (no python anywhere near it).
+//!   its Pallas MOSUM kernel, lowered once to `artifacts/*.hlo.txt`
+//!   (only consumed by the `pjrt` backend).
+//!
+//! ## Backend feature matrix
+//!
+//! | build                      | backend            | needs artifacts | needs network |
+//! |----------------------------|--------------------|-----------------|---------------|
+//! | `cargo build` (default)    | `EmulatedDevice`   | no              | no            |
+//! | `cargo build -F pjrt`      | `DeviceRuntime`    | yes (`make artifacts`) | no (in-tree `xla` stub; link the real crate for hardware) |
+//!
+//! Tier-1 verification: `cargo build --release && cargo test -q`.
 //!
 //! ## Quick start
 //!
-//! ```no_run
+//! ```
 //! use bfast::params::BfastParams;
 //! use bfast::synth::artificial::ArtificialDataset;
 //! use bfast::coordinator::{BfastRunner, RunnerConfig};
 //!
-//! let params = BfastParams::new(200, 100, 50, 3, 23.0, 0.05).unwrap();
-//! let data = ArtificialDataset::new(params.clone(), 10_000, 42).generate();
-//! let mut runner = BfastRunner::from_manifest_dir("artifacts", RunnerConfig::default()).unwrap();
+//! let params = BfastParams::new(60, 40, 20, 2, 12.0, 0.05).unwrap();
+//! let data = ArtificialDataset::new(params.clone(), 500, 42).generate();
+//! let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
 //! let result = runner.run(&data.stack, &params).unwrap();
 //! println!("{} of {} pixels broke", result.break_count(), result.len());
 //! ```
 //!
 //! Substrate modules ([`prng`], [`linalg`], [`json`], [`threadpool`],
-//! [`cli`], [`propcheck`], [`bench_support`]) exist because the build
-//! environment is fully offline — see DESIGN.md §3.
+//! [`cli`], [`propcheck`], [`bench_support`], [`error`]) exist because
+//! the build environment is fully offline — see DESIGN.md §3.
 
 pub mod bench_support;
 pub mod cli;
 pub mod coordinator;
 pub mod cpu;
 pub mod design;
+pub mod error;
 pub mod fill;
 pub mod history;
 pub mod json;
@@ -59,5 +75,4 @@ pub mod runtime;
 pub mod synth;
 pub mod threadpool;
 
-/// Crate-wide result type (anyhow is the only error dependency).
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{BfastError, Context, Result};

@@ -13,7 +13,7 @@ pub mod gemm;
 
 pub use gemm::{par_sgemm, sgemm, sgemm_acc};
 
-use anyhow::{bail, ensure, Result};
+use crate::error::{bail, ensure, Result};
 
 /// Row-major dense f64 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -210,7 +210,14 @@ impl Mat {
 
     /// Solve self · x = b for SPD self via Cholesky (b may be multi-column).
     pub fn solve_spd(&self, b: &Mat) -> Result<Mat> {
-        ensure!(self.rows == b.rows, "solve_spd: {}x{} vs rhs {}x{}", self.rows, self.cols, b.rows, b.cols);
+        ensure!(
+            self.rows == b.rows,
+            "solve_spd: {}x{} vs rhs {}x{}",
+            self.rows,
+            self.cols,
+            b.rows,
+            b.cols
+        );
         let l = self.cholesky()?;
         let n = self.rows;
         let mut x = b.clone();

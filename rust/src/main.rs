@@ -2,8 +2,8 @@
 //! through any of the four implementations, inspect pixels, and print
 //! critical-value tables.
 
-use anyhow::{bail, Result};
 use bfast::cli::Command;
+use bfast::error::{bail, Result};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::cpu::FusedCpuBfast;
 use bfast::params::BfastParams;
@@ -26,9 +26,9 @@ bfast — massively-parallel break detection for satellite data
 USAGE: bfast <command> [flags]   (bfast <command> --help for details)
 
 COMMANDS:
-  info          show artifact manifest + device platform
+  info          show executor backend + artifact manifest
   generate      write a synthetic .bsq stack (artificial or chile)
-  run           analyse a .bsq stack (engine: device|cpu|direct|naive)
+  run           analyse a .bsq stack (engine: device|emulated|cpu|direct|naive)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
 ";
@@ -76,16 +76,30 @@ fn param_flags(c: Command) -> Command {
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {
-    let cmd = Command::new("info", "show artifacts + device")
+    let cmd = Command::new("info", "show backend + artifacts")
         .opt("artifacts", "artifacts", "artifact directory");
     let m = cmd.parse(args)?;
-    let rt = bfast::runtime::DeviceRuntime::new(m.str("artifacts")?)?;
-    println!("platform: {}", rt.platform());
-    println!("artifacts ({}):", rt.manifest().artifacts.len());
-    for a in &rt.manifest().artifacts {
+    let runner = BfastRunner::auto(m.str("artifacts")?, RunnerConfig::default())?;
+    println!("backend: {}", runner.platform());
+    println!(
+        "features: pjrt={}  (default backend: {})",
+        cfg!(feature = "pjrt"),
+        if cfg!(feature = "pjrt") { "device when artifacts exist" } else { "emulated" }
+    );
+    let dir = std::path::Path::new(m.str("artifacts")?);
+    if dir.join("manifest.json").exists() {
+        let man = bfast::runtime::Manifest::load(dir)?;
+        println!("artifacts ({}):", man.artifacts.len());
+        for a in &man.artifacts {
+            println!(
+                "  {:<14} {:<8} N={:<4} n={:<4} h={:<4} k={} m_chunk={:<6} pallas={}",
+                a.name, a.phase, a.n_total, a.n_hist, a.h, a.k, a.m_chunk, a.use_pallas
+            );
+        }
+    } else {
         println!(
-            "  {:<14} {:<8} N={:<4} n={:<4} h={:<4} k={} m_chunk={:<6} pallas={}",
-            a.name, a.phase, a.n_total, a.n_hist, a.h, a.k, a.m_chunk, a.use_pallas
+            "no artifact manifest at {} — analyses run on the emulated backend",
+            dir.display()
         );
     }
     Ok(())
@@ -144,7 +158,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let cmd = param_flags(
         Command::new("run", "analyse a stack")
             .req("input", "input .bsq stack")
-            .opt("engine", "device", "device | cpu | direct | naive")
+            .opt("engine", "device", "device | emulated | cpu | direct | naive")
             .opt("artifacts", "artifacts", "artifact directory (device)")
             .opt("artifact", "", "artifact config name override (device)")
             .opt("queue-depth", "2", "staging queue depth (device)")
@@ -158,7 +172,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let params = params_from(&m)?;
     let t0 = Instant::now();
     let (map, phases) = match m.str("engine")? {
-        "device" => {
+        engine @ ("device" | "emulated") => {
             let mut cfg = RunnerConfig {
                 phased: m.flag("phased"),
                 queue_depth: m.usize("queue-depth")?,
@@ -171,10 +185,24 @@ fn cmd_run(args: &[String]) -> Result<()> {
             if !name.is_empty() {
                 cfg.artifact = Some(name.to_string());
             }
-            let mut runner = BfastRunner::from_manifest_dir(m.str("artifacts")?, cfg)?;
+            let mut runner = if engine == "emulated" {
+                BfastRunner::emulated(cfg)?
+            } else {
+                BfastRunner::auto(m.str("artifacts")?, cfg)?
+            };
+            if engine == "device" && runner.platform().starts_with("emulated") {
+                eprintln!(
+                    "bfast: no device backend available (no artifacts at {:?}); \
+                     running on the emulated backend — use --engine emulated to \
+                     select it explicitly",
+                    m.str("artifacts")?
+                );
+            }
             let res = runner.run(&stack, &params)?;
             println!(
-                "device run: artifact={} chunks={} wall={:.3}s",
+                "{} run: backend={} artifact={} chunks={} wall={:.3}s",
+                engine,
+                runner.platform(),
                 res.artifact,
                 res.chunks,
                 res.wall.as_secs_f64()
@@ -220,15 +248,14 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     let cmd = param_flags(
         Command::new("inspect", "per-pixel detail")
             .req("input", "input .bsq stack")
-            .req("pixel", "pixel index")
-            .opt("artifacts", "artifacts", "artifact directory"),
+            .req("pixel", "pixel index"),
     );
     let m = cmd.parse(args)?;
     let stack = rio::read_stack(m.str("input")?)?;
     let params = params_from(&m)?;
     let px = m.usize("pixel")?;
-    let runner =
-        BfastRunner::from_manifest_dir(m.str("artifacts")?, RunnerConfig::default())?;
+    // inspection is a pure-CPU path; any backend works
+    let runner = BfastRunner::emulated(RunnerConfig::default())?;
     let res = runner.inspect_pixel(&stack, &params, px)?;
     println!(
         "pixel {px}: break={} first={} momax={:.3}",
@@ -253,12 +280,12 @@ fn cmd_lambda(args: &[String]) -> Result<()> {
     let alphas: Vec<f64> = m
         .str("alphas")?
         .split(',')
-        .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad alpha {s:?}")))
+        .map(|s| s.trim().parse().map_err(|_| bfast::err!("bad alpha {s:?}")))
         .collect::<Result<_>>()?;
     let hfracs: Vec<f64> = m
         .str("h-fracs")?
         .split(',')
-        .map(|s| s.trim().parse().map_err(|_| anyhow::anyhow!("bad h/n {s:?}")))
+        .map(|s| s.trim().parse().map_err(|_| bfast::err!("bad h/n {s:?}")))
         .collect::<Result<_>>()?;
     print!("{}", bfast::lambda::table(m.f64("horizon")?, &alphas, &hfracs)?);
     Ok(())

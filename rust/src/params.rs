@@ -1,6 +1,6 @@
 //! BFAST(monitor) hyper-parameters and their validation (paper §2.1).
 
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
 
 /// Parameters of one BFAST(monitor) analysis.
 ///

@@ -22,8 +22,8 @@ pub struct DirectBfast {
 
 impl DirectBfast {
     /// Precompute X, M and the boundary for a given time axis.
-    pub fn new(params: BfastParams, time_axis: &[f64]) -> anyhow::Result<Self> {
-        anyhow::ensure!(
+    pub fn new(params: BfastParams, time_axis: &[f64]) -> crate::error::Result<Self> {
+        crate::ensure!(
             time_axis.len() == params.n_total,
             "time axis length {} != N {}",
             time_axis.len(),
@@ -36,7 +36,7 @@ impl DirectBfast {
     }
 
     /// Analyse one series, reusing the precomputed design quantities.
-    pub fn run_pixel(&self, y: &[f64]) -> anyhow::Result<PixelResult> {
+    pub fn run_pixel(&self, y: &[f64]) -> crate::error::Result<PixelResult> {
         let p = &self.params;
         let beta = self.m.matvec(&y[..p.n_hist])?;
         let yhat = self.xt.matvec(&beta)?;
@@ -49,12 +49,12 @@ impl DirectBfast {
     /// Fitted coefficients for one pixel (analysis/debug API — the
     /// paper's "perform the analysis on the CPU for these specific
     /// time series after learning where the breaks are").
-    pub fn fit_pixel(&self, y: &[f64]) -> anyhow::Result<Vec<f64>> {
+    pub fn fit_pixel(&self, y: &[f64]) -> crate::error::Result<Vec<f64>> {
         self.m.matvec(&y[..self.params.n_hist])
     }
 
     /// Full predictions for one pixel.
-    pub fn predict_pixel(&self, beta: &[f64]) -> anyhow::Result<Vec<f64>> {
+    pub fn predict_pixel(&self, beta: &[f64]) -> crate::error::Result<Vec<f64>> {
         self.xt.matvec(beta)
     }
 
@@ -63,7 +63,7 @@ impl DirectBfast {
     }
 
     /// Analyse a whole stack (single-threaded per-pixel loop).
-    pub fn run(&self, stack: &TimeStack) -> anyhow::Result<BreakMap> {
+    pub fn run(&self, stack: &TimeStack) -> crate::error::Result<BreakMap> {
         let m = stack.n_pixels();
         let mut out = BreakMap::with_capacity(m);
         for px in 0..m {

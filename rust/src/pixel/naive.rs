@@ -25,7 +25,7 @@ impl NaiveBfast {
     }
 
     /// Analyse a single series (allocates everything, every call).
-    pub fn run_pixel(&self, t: &[f64], y: &[f64]) -> anyhow::Result<PixelResult> {
+    pub fn run_pixel(&self, t: &[f64], y: &[f64]) -> crate::error::Result<PixelResult> {
         let p = &self.params;
         // 1. design matrix — rebuilt per pixel (R behaviour)
         let x = design::design_matrix(t, p.freq, p.k);
@@ -46,7 +46,7 @@ impl NaiveBfast {
     }
 
     /// Analyse a whole stack sequentially (single-threaded, like R).
-    pub fn run(&self, stack: &TimeStack) -> anyhow::Result<BreakMap> {
+    pub fn run(&self, stack: &TimeStack) -> crate::error::Result<BreakMap> {
         let m = stack.n_pixels();
         let mut out = BreakMap::with_capacity(m);
         for px in 0..m {

@@ -11,7 +11,7 @@
 
 use super::TimeStack;
 use crate::json::{self, Value};
-use anyhow::{bail, ensure, Context, Result};
+use crate::error::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 

@@ -16,7 +16,7 @@ pub mod pgm;
 
 pub use chunks::{ChunkPlan, PixelChunk};
 
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
 
 /// A scene's worth of time series: `n_times × n_pixels`, time-major.
 #[derive(Clone, Debug, PartialEq)]

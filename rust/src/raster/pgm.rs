@@ -4,7 +4,7 @@
 //! (scene snapshots) and Fig. 9 (max |MOSUM| heatmap). PGM needs no
 //! codec dependencies and opens everywhere.
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 

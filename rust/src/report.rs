@@ -1,7 +1,7 @@
 //! Experiment report emitters — CSV + markdown tables written under
 //! `results/`, consumed by EXPERIMENTS.md.
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -53,7 +53,8 @@ impl Table {
         let mut s = String::new();
         let _ = writeln!(s, "### {}\n", self.title);
         let _ = writeln!(s, "| {} |", self.columns.join(" | "));
-        let _ = writeln!(s, "|{}|", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let seps = self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|");
+        let _ = writeln!(s, "|{seps}|");
         for r in &self.rows {
             let _ = writeln!(s, "| {} |", r.join(" | "));
         }

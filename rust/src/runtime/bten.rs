@@ -4,7 +4,7 @@
 //! Layout: `b"BTEN" | u8 dtype (0=f32, 1=i32, 2=f64) | u8 ndim |
 //! ndim × u32 LE dims | raw LE data`.
 
-use anyhow::{bail, ensure, Context, Result};
+use crate::error::{bail, ensure, Context, Result};
 use std::path::Path;
 
 /// A loaded tensor (data flattened, row-major).

@@ -1,0 +1,341 @@
+//! Pure-rust device emulator — the default [`ExecutorBackend`].
+//!
+//! Executes the exact batched BFAST chunk contract of the AOT device
+//! path (history OLS fit → predictions → MOSUM → break/max-deviation
+//! outputs over a padded time-major `N × m_chunk` chunk) on the
+//! in-tree `threadpool` + `linalg` substrate, by driving the fused
+//! multi-core engine ([`FusedCpuBfast`]) per chunk. The arithmetic is
+//! identical to the scene-wide CPU implementation, so the coordinator
+//! produces bit-identical break maps through this backend — the
+//! cross-backend equivalence tests pin that.
+//!
+//! Phase accounting mirrors the device pipeline: `transfer` is the
+//! host→"device" chunk copy, `fused execute` (or the per-phase names
+//! in phased mode) is the compute, `readback` the output assembly —
+//! so the Fig. 3–6 bench tables render identically against either
+//! backend.
+//!
+//! The emulator is shape-agnostic by default: it synthesizes the
+//! chunk contract from the analysis parameters. [`EmulatedDevice::with_shape`]
+//! pins it to one shape, reproducing the shape-specialisation
+//! constraint of real AOT artifacts (used by tests and by deployments
+//! that want the device-like rejection behaviour).
+
+use super::{
+    ArtifactSpec, ChunkExecutor, ChunkOutput, Dtype, ExecutorBackend, TensorSpec,
+    PHASE_FUSED, PHASE_READBACK, PHASE_TRANSFER,
+};
+use crate::cpu::FusedCpuBfast;
+use crate::error::{ensure, Context, Result};
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::raster::TimeStack;
+use crate::threadpool;
+
+/// Default chunk width (pixels per executed chunk) — matches the
+/// `small`/`default` AOT artifact configurations.
+pub const DEFAULT_M_CHUNK: usize = 1024;
+
+/// The pure-rust emulated device backend.
+#[derive(Clone, Debug)]
+pub struct EmulatedDevice {
+    /// Pixels per chunk (the synthesized contract's `m_chunk`).
+    m_chunk: usize,
+    /// Worker threads for the per-chunk compute.
+    threads: usize,
+    /// Optional pinned (N, n, h, k) contract shape; `None` = adapt to
+    /// whatever the analysis asks for.
+    pinned: Option<(usize, usize, usize, usize)>,
+}
+
+impl Default for EmulatedDevice {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EmulatedDevice {
+    pub fn new() -> Self {
+        Self {
+            m_chunk: DEFAULT_M_CHUNK,
+            threads: threadpool::default_threads(),
+            pinned: None,
+        }
+    }
+
+    /// Override the chunk width (≥ 1).
+    pub fn with_m_chunk(mut self, m_chunk: usize) -> Self {
+        self.m_chunk = m_chunk.max(1);
+        self
+    }
+
+    /// Override the compute thread count (≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Pin the contract to one (N, n, h, k) shape, like a real
+    /// shape-specialised artifact: analyses with other shapes are
+    /// rejected by the coordinator.
+    pub fn with_shape(mut self, n_total: usize, n_hist: usize, h: usize, k: usize) -> Self {
+        self.pinned = Some((n_total, n_hist, h, k));
+        self
+    }
+}
+
+impl ExecutorBackend for EmulatedDevice {
+    fn platform(&self) -> String {
+        format!("emulated (pure-rust, {} threads)", self.threads)
+    }
+
+    fn resolve(&self, artifact: Option<&str>, params: &BfastParams) -> Result<ArtifactSpec> {
+        let (n_total, n_hist, h, k) = self
+            .pinned
+            .unwrap_or((params.n_total, params.n_hist, params.h, params.k));
+        let p = 2 + 2 * k;
+        let mc = self.m_chunk;
+        let f32_spec = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+        };
+        Ok(ArtifactSpec {
+            name: artifact.unwrap_or("emulated").to_string(),
+            phase: "emulated".to_string(),
+            path: std::path::PathBuf::new(),
+            n_total,
+            n_hist,
+            h,
+            k,
+            p,
+            m_chunk: mc,
+            use_pallas: false,
+            inputs: vec![
+                f32_spec("t", vec![n_total]),
+                f32_spec("f", vec![]),
+                f32_spec("y", vec![n_total, mc]),
+                f32_spec("lam", vec![]),
+            ],
+            outputs: vec![
+                TensorSpec { name: "breaks".into(), shape: vec![mc], dtype: Dtype::I32 },
+                TensorSpec { name: "first".into(), shape: vec![mc], dtype: Dtype::I32 },
+                f32_spec("momax", vec![mc]),
+            ],
+        })
+    }
+
+    fn load<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        phased: bool,
+    ) -> Result<Box<dyn ChunkExecutor + 'a>> {
+        ensure!(spec.m_chunk >= 1, "m_chunk must be >= 1, got {}", spec.m_chunk);
+        Ok(Box::new(EmulatedExecutor {
+            spec: spec.clone(),
+            threads: self.threads,
+            phased,
+            state: None,
+        }))
+    }
+}
+
+/// Design-side state built lazily on the first chunk and reused while
+/// (t axis, freq, lambda) stay unchanged — the emulator's analogue of
+/// the compiled-executable cache.
+struct EmState {
+    t_bits: Vec<u32>,
+    freq_bits: u32,
+    lambda_bits: u32,
+    engine: FusedCpuBfast,
+    /// Reused chunk staging buffer shaped (n_total, m_chunk).
+    stack: TimeStack,
+}
+
+struct EmulatedExecutor {
+    spec: ArtifactSpec,
+    threads: usize,
+    phased: bool,
+    state: Option<EmState>,
+}
+
+impl EmulatedExecutor {
+    fn ensure_state(&mut self, t_axis: &[f32], freq: f32, lambda: f32) -> Result<()> {
+        let fresh = match &self.state {
+            Some(st) => {
+                st.freq_bits == freq.to_bits()
+                    && st.lambda_bits == lambda.to_bits()
+                    && st.t_bits.len() == t_axis.len()
+                    && st.t_bits.iter().zip(t_axis).all(|(b, t)| *b == t.to_bits())
+            }
+            None => false,
+        };
+        if fresh {
+            return Ok(());
+        }
+        let spec = &self.spec;
+        let t64: Vec<f64> = t_axis.iter().map(|&v| v as f64).collect();
+        // alpha only labels the analysis here; the boundary is fully
+        // determined by the lambda shipped with each chunk.
+        let params = BfastParams::with_lambda(
+            spec.n_total,
+            spec.n_hist,
+            spec.h,
+            spec.k,
+            freq as f64,
+            0.05,
+            lambda as f64,
+        )?;
+        let engine = FusedCpuBfast::new(params, &t64)?.with_threads(self.threads);
+        // The device contract ships the axis as f32; axes whose steps
+        // fall below f32 resolution collapse here — fail with context
+        // rather than compute on a degenerate design.
+        let stack = TimeStack::zeros(spec.n_total, spec.m_chunk)
+            .with_time_axis(t64)
+            .context("emulated backend: f32-rounded chunk time axis")?;
+        self.state = Some(EmState {
+            t_bits: t_axis.iter().map(|t| t.to_bits()).collect(),
+            freq_bits: freq.to_bits(),
+            lambda_bits: lambda.to_bits(),
+            engine,
+            stack,
+        });
+        Ok(())
+    }
+}
+
+impl ChunkExecutor for EmulatedExecutor {
+    fn run_chunk(
+        &mut self,
+        t_axis: &[f32],
+        freq: f32,
+        y: &[f32],
+        lambda: f32,
+        times: &mut PhaseTimes,
+    ) -> Result<ChunkOutput> {
+        let spec = &self.spec;
+        ensure!(
+            t_axis.len() == spec.n_total,
+            "t axis len {} != N {}",
+            t_axis.len(),
+            spec.n_total
+        );
+        ensure!(
+            y.len() == spec.n_total * spec.m_chunk,
+            "chunk len {} != N*m_chunk {}",
+            y.len(),
+            spec.n_total * spec.m_chunk
+        );
+        self.ensure_state(t_axis, freq, lambda)?;
+        let phased = self.phased;
+        let st = self.state.as_mut().expect("state built above");
+        times.time(PHASE_TRANSFER, || st.stack.data_mut().copy_from_slice(y));
+        let (map, engine_times) = if phased {
+            st.engine.run(&st.stack)?
+        } else {
+            times.time(PHASE_FUSED, || st.engine.run(&st.stack))?
+        };
+        if phased {
+            // Surface the engine's per-phase names (create model /
+            // predictions / residuals / mosum / detect breaks).
+            times.merge(&engine_times);
+        }
+        times.time(PHASE_READBACK, || {
+            Ok(ChunkOutput { breaks: map.breaks, first: map.first, momax: map.momax })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{PHASE_DETECT, PHASE_MODEL};
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap()
+    }
+
+    fn chunk_of(p: &BfastParams, m: usize, mc: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let data = ArtificialDataset::new(p.clone(), m, seed).generate();
+        let mut buf = vec![0.0f32; p.n_total * mc];
+        data.stack.copy_chunk_padded(0, m, mc, 0.0, &mut buf);
+        let t: Vec<f32> = data.stack.time_axis.iter().map(|&v| v as f32).collect();
+        (t, buf)
+    }
+
+    #[test]
+    fn resolve_synthesizes_from_params() {
+        let dev = EmulatedDevice::new().with_m_chunk(256);
+        let p = params();
+        let spec = dev.resolve(None, &p).unwrap();
+        assert_eq!(spec.name, "emulated");
+        assert_eq!((spec.n_total, spec.n_hist, spec.h, spec.k), (60, 40, 20, 2));
+        assert_eq!(spec.m_chunk, 256);
+        assert_eq!(spec.p, 6);
+        let named = dev.resolve(Some("small"), &p).unwrap();
+        assert_eq!(named.name, "small");
+    }
+
+    #[test]
+    fn pinned_shape_ignores_params() {
+        let dev = EmulatedDevice::new().with_shape(200, 100, 50, 3);
+        let spec = dev.resolve(None, &params()).unwrap();
+        assert_eq!((spec.n_total, spec.n_hist, spec.h, spec.k), (200, 100, 50, 3));
+    }
+
+    #[test]
+    fn executor_matches_cpu_engine_and_records_phases() {
+        let p = params();
+        let (m, mc) = (100usize, 128usize);
+        let dev = EmulatedDevice::new().with_m_chunk(mc);
+        let spec = dev.resolve(None, &p).unwrap();
+        let (t, buf) = chunk_of(&p, m, mc, 9);
+
+        // fused mode
+        let mut exec = dev.load(&spec, false).unwrap();
+        let mut times = PhaseTimes::new();
+        let out = exec
+            .run_chunk(&t, p.freq as f32, &buf, p.lambda as f32, &mut times)
+            .unwrap();
+        assert_eq!(out.breaks.len(), mc);
+        for ph in [PHASE_TRANSFER, PHASE_FUSED, PHASE_READBACK] {
+            assert!(times.get(ph).is_some(), "missing phase {ph}");
+        }
+
+        // phased mode records the paper's phase names
+        let mut exec_p = dev.load(&spec, true).unwrap();
+        let mut times_p = PhaseTimes::new();
+        let out_p = exec_p
+            .run_chunk(&t, p.freq as f32, &buf, p.lambda as f32, &mut times_p)
+            .unwrap();
+        for ph in [PHASE_TRANSFER, PHASE_MODEL, PHASE_DETECT] {
+            assert!(times_p.get(ph).is_some(), "missing phase {ph}");
+        }
+        assert_eq!(out.breaks, out_p.breaks);
+
+        // reference: the scene-wide CPU engine on the same pixels
+        let data = ArtificialDataset::new(p.clone(), m, 9).generate();
+        let (cpu_map, _) = FusedCpuBfast::new(p.clone(), &data.stack.time_axis)
+            .unwrap()
+            .run(&data.stack)
+            .unwrap();
+        assert_eq!(&out.breaks[..m], &cpu_map.breaks[..]);
+        assert_eq!(&out.first[..m], &cpu_map.first[..]);
+        for (a, b) in out.momax[..m].iter().zip(&cpu_map.momax) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_chunk_length() {
+        let p = params();
+        let dev = EmulatedDevice::new().with_m_chunk(64);
+        let spec = dev.resolve(None, &p).unwrap();
+        let mut exec = dev.load(&spec, false).unwrap();
+        let t: Vec<f32> = (1..=60).map(|v| v as f32).collect();
+        let y = vec![0.0f32; 10];
+        let mut times = PhaseTimes::new();
+        assert!(exec.run_chunk(&t, 12.0, &y, 2.5, &mut times).is_err());
+    }
+}

@@ -2,7 +2,7 @@
 //! and the rust runtime. Parsed from `artifacts/manifest.json`.
 
 use crate::json::{self, Value};
-use anyhow::{anyhow, ensure, Context, Result};
+use crate::error::{ensure, err, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Dtype of an artifact input/output.
@@ -17,7 +17,7 @@ impl Dtype {
         match s {
             "f32" => Ok(Dtype::F32),
             "i32" => Ok(Dtype::I32),
-            other => Err(anyhow!("unsupported dtype {other:?}")),
+            other => Err(err!("unsupported dtype {other:?}")),
         }
     }
 }
@@ -133,7 +133,7 @@ impl Manifest {
             .iter()
             .find(|a| a.name == name && a.phase == phase)
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no artifact {name}/{phase} in {} (have: {})",
                     self.dir.display(),
                     self.names().join(", ")
@@ -169,7 +169,7 @@ impl Manifest {
             })
             .max_by_key(|a| (a.use_pallas, a.m_chunk))
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no fused artifact for N={n_total} n={n_hist} h={h} k={k}; \
                      add the variant in python/compile/aot.py and re-run `make artifacts`"
                 )

@@ -1,25 +1,39 @@
-//! PJRT runtime — loads the AOT artifacts and executes them on the
-//! request path. Python never runs here: the HLO text emitted once by
-//! `python/compile/aot.py` is parsed, compiled and executed through
-//! the `xla` crate (PJRT C API).
+//! Executor backends — the device boundary of the pipeline.
 //!
-//! The interchange format is HLO **text**: jax ≥ 0.5 serialises
-//! HloModuleProto with 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; `HloModuleProto::from_text_file` reassigns ids.
+//! The coordinator never talks to a device directly; it talks to an
+//! [`ExecutorBackend`] that resolves an analysis shape to a chunk
+//! contract ([`manifest::ArtifactSpec`]) and loads a [`ChunkExecutor`]
+//! that runs padded `N × m_chunk` chunks to [`ChunkOutput`]s. Two
+//! implementations ship:
 //!
-//! PJRT handles are not `Send`; the coordinator owns the runtime on a
-//! single executor thread (the analogue of a CUDA-stream owner) and
-//! feeds it staged chunks through channels.
+//! * [`EmulatedDevice`] (**default build**) — a pure-rust emulator
+//!   executing the same batched BFAST pipeline (history OLS fit →
+//!   predictions → MOSUM → break scan) on the `threadpool` + `linalg`
+//!   substrate. No artifacts, no network, no native deps; every test
+//!   and bench runs against it out of the box.
+//! * [`pjrt::DeviceRuntime`] (**feature `pjrt`**) — loads the AOT HLO
+//!   artifacts emitted by `python/compile/aot.py` and executes them
+//!   through the `xla` crate's PJRT client (see `pjrt` module docs).
+//!
+//! PJRT handles are not `Send`; the coordinator owns whichever backend
+//! on a single executor thread (the analogue of a CUDA-stream owner)
+//! and feeds it staged chunks through channels — the emulator honours
+//! the same single-threaded-executor contract.
 
 pub mod bten;
+pub mod emulated;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+pub use emulated::EmulatedDevice;
 pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{DeviceRuntime, FusedPipeline, PhasedPipeline};
 
+use crate::error::Result;
 use crate::metrics::PhaseTimes;
-use anyhow::{ensure, Context, Result};
-use std::collections::HashMap;
-use std::rc::Rc;
+use crate::params::BfastParams;
 
 /// Phase names used by the device path (Fig. 3(b) analogues).
 pub const PHASE_TRANSFER: &str = "transfer";
@@ -38,231 +52,42 @@ pub struct ChunkOutput {
     pub momax: Vec<f32>,
 }
 
-/// The PJRT device + compiled-executable cache.
-pub struct DeviceRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: std::cell::RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl DeviceRuntime {
-    /// Open the device and load the artifact manifest.
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(&artifact_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT client")?;
-        Ok(Self { client, manifest, cache: Default::default() })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        format!("{} ({})", self.client.platform_name(), self.client.platform_version())
-    }
-
-    /// Compile (or fetch from cache) the executable for (name, phase).
-    pub fn load(&self, name: &str, phase: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        let key = (name.to_string(), phase.to_string());
-        if let Some(exe) = self.cache.borrow().get(&key) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.find(name, phase)?;
-        let proto = xla::HloModuleProto::from_text_file(&spec.path)
-            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}/{phase}"))?,
-        );
-        self.cache.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
-    }
-
-    /// Build the fused single-executable pipeline for a config.
-    pub fn fused(&self, name: &str) -> Result<FusedPipeline<'_>> {
-        let spec = self.manifest.find(name, "fused")?.clone();
-        let exe = self.load(name, "fused")?;
-        let wmat = crate::mosum::window_matrix_f32(spec.n_total, spec.n_hist, spec.h);
-        Ok(FusedPipeline { rt: self, spec, exe, wmat })
-    }
-
-    /// Build the phase-instrumented pipeline for a config.
-    pub fn phased(&self, name: &str) -> Result<PhasedPipeline<'_>> {
-        let spec = self
-            .manifest
-            .find(name, "fused")
-            .or_else(|_| self.manifest.find(name, "fit"))?
-            .clone();
-        let wmat = crate::mosum::window_matrix_f32(spec.n_total, spec.n_hist, spec.h);
-        Ok(PhasedPipeline {
-            spec,
-            wmat,
-            fit: self.load(name, "fit")?,
-            predict: self.load(name, "predict")?,
-            mosum: self.load(name, "mosum")?,
-            detect: self.load(name, "detect")?,
-            rt: self,
-        })
-    }
-
-    fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("host->device transfer")
-    }
-}
-
-/// Decode the (breaks, first, momax) tuple output of fused/detect.
-fn decode_detect_tuple(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<ChunkOutput> {
-    ensure!(!bufs.is_empty() && !bufs[0].is_empty(), "executable produced no output");
-    let lit = bufs[0][0].to_literal_sync()?;
-    let parts = lit.to_tuple()?;
-    ensure!(parts.len() == 3, "expected 3-tuple output, got {}", parts.len());
-    Ok(ChunkOutput {
-        breaks: parts[0].to_vec::<i32>()?,
-        first: parts[1].to_vec::<i32>()?,
-        momax: parts[2].to_vec::<f32>()?,
-    })
-}
-
-/// The production path: one fused executable per chunk.
-pub struct FusedPipeline<'rt> {
-    rt: &'rt DeviceRuntime,
-    pub spec: ArtifactSpec,
-    exe: Rc<xla::PjRtLoadedExecutable>,
-    /// Banded window operator, rebuilt from the manifest shape.
-    wmat: Vec<f32>,
-}
-
-impl FusedPipeline<'_> {
-    /// Execute one padded chunk: `y` is time-major (N × m_chunk).
-    /// Phase accounting: `transfer` (host→device staging of Y and the
-    /// small params), `fused execute`, `readback`.
-    pub fn run_chunk(
-        &self,
-        t_axis: &[f32],
-        freq: f32,
-        y: &[f32],
-        lambda: f32,
-        times: &mut PhaseTimes,
-    ) -> Result<ChunkOutput> {
-        let spec = &self.spec;
-        ensure!(t_axis.len() == spec.n_total, "t axis len {} != N {}", t_axis.len(), spec.n_total);
-        ensure!(
-            y.len() == spec.n_total * spec.m_chunk,
-            "chunk len {} != N*m_chunk {}",
-            y.len(),
-            spec.n_total * spec.m_chunk
-        );
-        let bufs = times.time(PHASE_TRANSFER, || -> Result<_> {
-            Ok([
-                self.rt.to_device_f32(t_axis, &[spec.n_total])?,
-                self.rt.to_device_f32(&[freq], &[])?,
-                self.rt
-                    .to_device_f32(&self.wmat, &[spec.n_monitor(), spec.n_total])?,
-                self.rt.to_device_f32(y, &[spec.n_total, spec.m_chunk])?,
-                self.rt.to_device_f32(&[lambda], &[])?,
-            ])
-        })?;
-        let out = times.time(PHASE_FUSED, || self.exe.execute_b(&bufs))?;
-        times.time(PHASE_READBACK, || decode_detect_tuple(out))
-    }
-}
-
-/// The instrumented path: four executables, one per paper phase —
-/// used by the Fig. 3–6 benches only (the production path is
-/// [`FusedPipeline`]).
+/// A loaded/compiled executor for one chunk contract.
 ///
-/// Intermediates are passed between phases as host literals: CPU PJRT
-/// aliases buffers across `execute_b` calls (donation), which corrupts
-/// reused inputs, so the buffer-resident variant is unsound on this
-/// backend. The literal round-trip cost is charged to the phase that
-/// produced the intermediate — an explicit, measured penalty of phased
-/// mode that the fused path does not pay.
-pub struct PhasedPipeline<'rt> {
-    rt: &'rt DeviceRuntime,
-    pub spec: ArtifactSpec,
-    wmat: Vec<f32>,
-    fit: Rc<xla::PjRtLoadedExecutable>,
-    predict: Rc<xla::PjRtLoadedExecutable>,
-    mosum: Rc<xla::PjRtLoadedExecutable>,
-    detect: Rc<xla::PjRtLoadedExecutable>,
-}
-
-impl PhasedPipeline<'_> {
-    pub fn run_chunk(
-        &self,
+/// `y` is time-major (`n_total × m_chunk`, padded); outputs cover the
+/// full padded width — the coordinator discards pad columns. `&mut`
+/// because executors may lazily build / cache design-side state on
+/// first use (the emulator) or own non-reentrant device handles.
+pub trait ChunkExecutor {
+    fn run_chunk(
+        &mut self,
         t_axis: &[f32],
         freq: f32,
         y: &[f32],
         lambda: f32,
         times: &mut PhaseTimes,
-    ) -> Result<ChunkOutput> {
-        let spec = &self.spec;
-        let (n, nh, mc) = (spec.n_total, spec.n_hist, spec.m_chunk);
-        ensure!(y.len() == n * mc, "chunk len {} != N*m_chunk {}", y.len(), n * mc);
-        let _ = self.rt; // runtime keeps the client (and executables) alive
-        // transfer: exactly what the paper ships to the device — the
-        // design-side scalars + the full Y (plus its history prefix,
-        // which the fit module consumes directly).
-        let (t_lit, f_lit, w_lit, y_lit, lam_lit, yh_lit) =
-            times.time(PHASE_TRANSFER, || -> Result<_> {
-                Ok((
-                    lit_f32(t_axis, &[n])?,
-                    xla::Literal::scalar(freq),
-                    lit_f32(&self.wmat, &[n - nh, n])?,
-                    lit_f32(y, &[n, mc])?,
-                    xla::Literal::scalar(lambda),
-                    lit_f32(&y[..nh * mc], &[nh, mc])?,
-                ))
-            })?;
-        let beta = times.time(PHASE_MODEL, || -> Result<_> {
-            tuple1_literal(self.fit.execute(&[&t_lit, &f_lit, &yh_lit])?)
-        })?;
-        let yhat = times.time(PHASE_PREDICT, || -> Result<_> {
-            tuple1_literal(self.predict.execute(&[&t_lit, &f_lit, &beta])?)
-        })?;
-        let mo = times.time(PHASE_MOSUM, || -> Result<_> {
-            tuple1_literal(self.mosum.execute(&[&w_lit, &y_lit, &yhat])?)
-        })?;
-        let out = times.time(PHASE_DETECT, || self.detect.execute(&[&mo, &lam_lit]))?;
-        times.time(PHASE_READBACK, || decode_detect_tuple(out))
-    }
+    ) -> Result<ChunkOutput>;
 }
 
-/// Build an f32 literal of the given shape from a host slice.
-fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
-        .context("building literal")
-}
+/// A device backend: resolves analysis shapes to chunk contracts and
+/// loads executors for them.
+pub trait ExecutorBackend {
+    /// Human-readable platform description (CLI `info`, logs).
+    fn platform(&self) -> String;
 
-/// Unwrap a 1-tuple executable output into a host literal.
-fn tuple1_literal(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<xla::Literal> {
-    ensure!(!bufs.is_empty() && !bufs[0].is_empty(), "no output");
-    let lit = bufs[0][0].to_literal_sync()?;
-    let mut parts = lit.to_tuple()?;
-    ensure!(parts.len() == 1, "expected 1-tuple, got {}", parts.len());
-    Ok(parts.pop().unwrap())
-}
+    /// Resolve the chunk contract for an analysis: pick (or
+    /// synthesize) the artifact matching `params`, optionally forced
+    /// by name. The returned spec's shape may disagree with `params`
+    /// when the backend is shape-specialised — the coordinator
+    /// rejects such runs.
+    fn resolve(&self, artifact: Option<&str>, params: &BfastParams) -> Result<ArtifactSpec>;
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// Artifacts are produced by `make artifacts`; most runtime tests
-    /// live in `rust/tests/` (integration). Here: graceful failure.
-    #[test]
-    fn missing_dir_is_clean_error() {
-        let err = match DeviceRuntime::new("/nonexistent/artifacts") {
-            Err(e) => e,
-            Ok(_) => panic!("expected error"),
-        };
-        let msg = format!("{err:#}");
-        assert!(msg.contains("manifest.json"), "{msg}");
-    }
+    /// Compile/load the executor for a resolved spec. `phased` selects
+    /// the per-phase instrumented path (paper Figs. 3–6) over the
+    /// fused production path.
+    fn load<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        phased: bool,
+    ) -> Result<Box<dyn ChunkExecutor + 'a>>;
 }

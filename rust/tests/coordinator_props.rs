@@ -1,9 +1,11 @@
 //! Property-based integration tests on coordinator/stack invariants
 //! (using the in-tree `propcheck` substrate — see DESIGN.md §3).
 
+use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::params::BfastParams;
 use bfast::propcheck::property;
 use bfast::raster::{BreakMap, ChunkPlan, TimeStack};
+use bfast::runtime::EmulatedDevice;
 use bfast::synth::ArtificialDataset;
 
 #[test]
@@ -17,7 +19,8 @@ fn prop_chunked_assembly_reconstructs_any_map() {
         let plan = ChunkPlan::new(m, mc);
         // reference data
         let breaks: Vec<i32> = (0..m).map(|i| (i % 3 == 0) as i32).collect();
-        let first: Vec<i32> = (0..m).map(|i| if i % 3 == 0 { (i % 40) as i32 } else { -1 }).collect();
+        let first: Vec<i32> =
+            (0..m).map(|i| if i % 3 == 0 { (i % 40) as i32 } else { -1 }).collect();
         let momax: Vec<f32> = (0..m).map(|i| i as f32 * 0.5).collect();
         let mut order: Vec<usize> = (0..plan.len()).collect();
         // deterministic shuffle from the generator
@@ -28,7 +31,12 @@ fn prop_chunked_assembly_reconstructs_any_map() {
         let mut map = BreakMap::zeros(m);
         for idx in order {
             let c = plan.get(idx);
-            map.write_at(c.start, &breaks[c.start..c.end], &first[c.start..c.end], &momax[c.start..c.end]);
+            map.write_at(
+                c.start,
+                &breaks[c.start..c.end],
+                &first[c.start..c.end],
+                &momax[c.start..c.end],
+            );
         }
         if map.breaks != breaks || map.first != first || map.momax != momax {
             return Err(format!("m={m} mc={mc}: assembled map differs"));
@@ -62,7 +70,9 @@ fn prop_chunk_copy_roundtrip_with_padding() {
                     9.5
                 };
                 if got != want {
-                    return Err(format!("n={n} m={m} [{start},{end}) pad={padded} at ({t},{j}): {got} vs {want}"));
+                    return Err(format!(
+                        "n={n} m={m} [{start},{end}) pad={padded} at ({t},{j}): {got} vs {want}"
+                    ));
                 }
             }
         }
@@ -110,6 +120,38 @@ fn prop_cpu_engine_invariant_to_thread_count() {
         let (m4, _) = e4.run(&data.stack).map_err(|e| e.to_string())?;
         if m1.breaks != m4.breaks || m1.momax != m4.momax {
             return Err(format!("m={m} seed={seed}: thread count changed results"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_emulated_pipeline_equals_cpu_engine() {
+    // The full coordinated pipeline (staging, chunking, padding,
+    // out-of-order assembly) over the emulated backend must reproduce
+    // the scene-wide fused CPU engine bit-for-bit, for any scene size
+    // and chunk width.
+    let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+    property("emulated pipeline == cpu engine", 10, |g| {
+        let m = g.usize(1..=900);
+        let mc = g.usize(1..=300);
+        let seed = g.u32(0..=9999) as u64;
+        let data = ArtificialDataset::new(params.clone(), m, seed).generate();
+        let backend = Box::new(EmulatedDevice::new().with_m_chunk(mc));
+        let mut runner = BfastRunner::new(backend, RunnerConfig::default())
+            .map_err(|e| e.to_string())?;
+        let res = runner.run(&data.stack, &params).map_err(|e| e.to_string())?;
+        if res.chunks != m.div_ceil(mc) {
+            return Err(format!("m={m} mc={mc}: {} chunks", res.chunks));
+        }
+        let engine = bfast::cpu::FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+            .map_err(|e| e.to_string())?;
+        let (cpu_map, _) = engine.run(&data.stack).map_err(|e| e.to_string())?;
+        if res.map.breaks != cpu_map.breaks
+            || res.map.first != cpu_map.first
+            || res.map.momax != cpu_map.momax
+        {
+            return Err(format!("m={m} mc={mc} seed={seed}: pipeline diverged from engine"));
         }
         Ok(())
     });

@@ -1,0 +1,92 @@
+//! Cross-backend equivalence (the paper's Fig. 2 implementations):
+//! the coordinated [`EmulatedDevice`] pipeline, the per-pixel
+//! [`DirectBfast`] reference and the fused multi-core
+//! [`FusedCpuBfast`] must agree on break maps for seeded synthetic
+//! scenes — tolerance-based on the continuous statistic, exact on the
+//! discrete outputs.
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::pixel::DirectBfast;
+use bfast::synth::ArtificialDataset;
+
+fn params() -> BfastParams {
+    BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap()
+}
+
+#[test]
+fn three_implementations_agree_on_artificial_scene() {
+    let p = params();
+    let data = ArtificialDataset::new(p.clone(), 1337, 5).generate();
+
+    // 1. coordinated emulated pipeline (chunked, staged, padded)
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let res = runner.run(&data.stack, &p).unwrap();
+
+    // 2. fused multi-core CPU engine (scene-wide)
+    let (cpu_map, _) = FusedCpuBfast::new(p.clone(), &data.stack.time_axis)
+        .unwrap()
+        .run(&data.stack)
+        .unwrap();
+
+    // 3. per-pixel f64 reference
+    let direct_map = DirectBfast::new(p.clone(), &data.stack.time_axis)
+        .unwrap()
+        .run(&data.stack)
+        .unwrap();
+
+    // emulated and cpu share the f32 arithmetic: exact agreement
+    assert_eq!(res.map.breaks, cpu_map.breaks, "emulated vs cpu breaks");
+    assert_eq!(res.map.first, cpu_map.first, "emulated vs cpu first");
+    // the f64 reference may flip boundary-grazing pixels: tolerance
+    let mism = mismatches(&res.map.breaks, &direct_map.breaks);
+    assert!(mism as f64 <= 0.001 * res.len() as f64, "emulated vs direct: {mism} flips");
+    for (i, ((a, b), c)) in res
+        .map
+        .momax
+        .iter()
+        .zip(&cpu_map.momax)
+        .zip(&direct_map.momax)
+        .enumerate()
+    {
+        assert!((a - b).abs() < 1e-5, "px {i}: emulated {a} vs cpu {b}");
+        assert!((a - c).abs() < 2e-3, "px {i}: emulated {a} vs direct {c}");
+    }
+}
+
+fn mismatches(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+#[test]
+fn agreement_holds_across_seeds_and_sizes() {
+    let p = params();
+    for (m, seed) in [(1usize, 0u64), (97, 1), (512, 2), (1025, 3)] {
+        let data = ArtificialDataset::new(p.clone(), m, seed).generate();
+        let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+        let res = runner.run(&data.stack, &p).unwrap();
+        let direct_map = DirectBfast::new(p.clone(), &data.stack.time_axis)
+            .unwrap()
+            .run(&data.stack)
+            .unwrap();
+        let mism = mismatches(&res.map.breaks, &direct_map.breaks);
+        assert!(mism <= 1 + m / 1000, "m={m} seed={seed}: {mism} flips vs f64 reference");
+    }
+}
+
+#[test]
+fn detection_quality_matches_ground_truth_through_the_pipeline() {
+    // Strong injected breaks: the full coordinated pipeline must find
+    // them all (TPR = 1) with few false alarms — same contract the
+    // per-pixel baseline pins in its unit tests.
+    let p = BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 6.0).unwrap();
+    let data = ArtificialDataset::new(p.clone(), 400, 1)
+        .with_noise(0.005, 0.5)
+        .generate();
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let res = runner.run(&data.stack, &p).unwrap();
+    let (tpr, fpr) = data.score(&res.map.breaks);
+    assert_eq!(tpr, 1.0, "all injected breaks found");
+    assert!(fpr < 0.2, "fpr {fpr}");
+}

@@ -1,42 +1,36 @@
-//! Integration tests over the AOT device pipeline: the rust runtime
-//! executing the JAX/Pallas HLO artifacts must agree with the CPU
-//! implementations on every workload shape, in both fused and phased
-//! modes. Requires `make artifacts`.
+//! Integration tests over the coordinated executor pipeline.
+//!
+//! The default build exercises the pure-rust [`EmulatedDevice`]
+//! backend — the coordinator's staging/chunking/assembly must agree
+//! with the scene-wide CPU implementations on every workload shape, in
+//! both fused and phased modes, with no artifacts and no network.
+//! The PJRT artifact tests live in the `pjrt_artifacts` module at the
+//! bottom (feature `pjrt` + `make artifacts`).
 
 use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::cpu::FusedCpuBfast;
 use bfast::params::BfastParams;
+use bfast::runtime::EmulatedDevice;
 use bfast::synth::{ArtificialDataset, ChileScene};
-use std::path::PathBuf;
-
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP device tests: run `make artifacts` first");
-        None
-    }
-}
 
 fn agree(a: &[i32], b: &[i32]) -> f64 {
     a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len().max(1) as f64
 }
 
 #[test]
-fn fused_device_equals_cpu_on_synthetic() {
-    let Some(dir) = artifacts() else { return };
+fn fused_emulated_equals_cpu_on_synthetic() {
     let params = BfastParams::paper_synthetic();
-    // m chosen to exercise multiple chunks + a padded tail (small
-    // artifact has m_chunk = 1024)
+    // m chosen to exercise multiple chunks + a padded tail (default
+    // emulated contract has m_chunk = 1024)
     let data = ArtificialDataset::new(params.clone(), 2500, 17).generate();
-    let mut runner = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
-    )
+    let mut runner = BfastRunner::emulated(RunnerConfig {
+        artifact: Some("small".into()),
+        ..Default::default()
+    })
     .unwrap();
     let res = runner.run(&data.stack, &params).unwrap();
     assert_eq!(res.chunks, 3); // 1024+1024+452(padded)
+    assert_eq!(res.artifact, "small");
     let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
         .unwrap()
         .run(&data.stack)
@@ -49,20 +43,12 @@ fn fused_device_equals_cpu_on_synthetic() {
 }
 
 #[test]
-fn phased_equals_fused_device() {
-    let Some(dir) = artifacts() else { return };
+fn phased_equals_fused_emulated() {
     let params = BfastParams::paper_synthetic();
     let data = ArtificialDataset::new(params.clone(), 1500, 3).generate();
-    let mut fused = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
-    )
-    .unwrap();
-    let mut phased = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), phased: true, ..Default::default() },
-    )
-    .unwrap();
+    let mut fused = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let mut phased =
+        BfastRunner::emulated(RunnerConfig { phased: true, ..Default::default() }).unwrap();
     let rf = fused.run(&data.stack, &params).unwrap();
     let rp = phased.run(&data.stack, &params).unwrap();
     assert_eq!(rf.map.breaks, rp.map.breaks);
@@ -71,37 +57,39 @@ fn phased_equals_fused_device() {
     for ph in ["transfer", "create model", "predictions", "mosum", "detect breaks"] {
         assert!(rp.phases.get(ph).is_some(), "missing phase {ph:?}");
     }
+    // fused mode records the production phases
+    for ph in ["transfer", "fused execute", "readback"] {
+        assert!(rf.phases.get(ph).is_some(), "missing phase {ph:?}");
+    }
 }
 
 #[test]
-fn pallas_and_xla_variants_agree() {
-    let Some(dir) = artifacts() else { return };
+fn custom_chunk_width_changes_plan_not_results() {
     let params = BfastParams::paper_synthetic();
-    let data = ArtificialDataset::new(params.clone(), 900, 5).generate();
-    let run = |name: &str| {
-        let mut r = BfastRunner::from_manifest_dir(
-            &dir,
-            RunnerConfig { artifact: Some(name.into()), ..Default::default() },
-        )
-        .unwrap();
+    let data = ArtificialDataset::new(params.clone(), 700, 11).generate();
+    let run_mc = |mc: usize| {
+        let backend = Box::new(EmulatedDevice::new().with_m_chunk(mc));
+        let mut r = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
         r.run(&data.stack, &params).unwrap()
     };
-    let a = run("default"); // pallas kernel
-    let b = run("default_xla"); // plain-XLA ablation
+    let a = run_mc(256); // 3 chunks
+    let b = run_mc(1024); // 1 chunk
+    assert_eq!(a.chunks, 3);
+    assert_eq!(b.chunks, 1);
     assert_eq!(a.map.breaks, b.map.breaks);
     assert_eq!(a.map.first, b.map.first);
+    assert_eq!(a.map.momax, b.map.momax);
 }
 
 #[test]
-fn chile_artifact_runs_irregular_axis() {
-    let Some(dir) = artifacts() else { return };
+fn chile_scene_irregular_axis() {
     let scene = ChileScene::scaled(48, 40, 23);
     let params = scene.params();
     let (stack, _) = scene.generate();
-    let mut runner = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("chile".into()), ..Default::default() },
-    )
+    let mut runner = BfastRunner::emulated(RunnerConfig {
+        artifact: Some("chile".into()),
+        ..Default::default()
+    })
     .unwrap();
     let res = runner.run(&stack, &params).unwrap();
     let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &stack.time_axis)
@@ -109,7 +97,8 @@ fn chile_artifact_runs_irregular_axis() {
         .run(&stack)
         .unwrap();
     // Irregular axis + strong injected events: near-total agreement
-    // (f32 vs f64 borderline pixels allowed at the margin).
+    // (the emulator sees the f32-rounded axis, CPU the f64 one —
+    // borderline pixels allowed at the margin).
     let rate = agree(&res.map.breaks, &cpu_map.breaks);
     assert!(rate > 0.995, "chile agreement {rate}");
     assert!(res.map.break_fraction() > 0.95, "paper: >99% breaks");
@@ -117,20 +106,15 @@ fn chile_artifact_runs_irregular_axis() {
 
 #[test]
 fn queue_depth_and_threads_do_not_change_results() {
-    let Some(dir) = artifacts() else { return };
     let params = BfastParams::paper_synthetic();
     let data = ArtificialDataset::new(params.clone(), 3100, 9).generate();
     let mut outs = Vec::new();
     for (depth, threads) in [(1, 1), (2, 2), (4, 3)] {
-        let mut runner = BfastRunner::from_manifest_dir(
-            &dir,
-            RunnerConfig {
-                artifact: Some("small".into()),
-                queue_depth: depth,
-                staging_threads: threads,
-                ..Default::default()
-            },
-        )
+        let mut runner = BfastRunner::emulated(RunnerConfig {
+            queue_depth: depth,
+            staging_threads: threads,
+            ..Default::default()
+        })
         .unwrap();
         outs.push(runner.run(&data.stack, &params).unwrap());
     }
@@ -143,13 +127,8 @@ fn queue_depth_and_threads_do_not_change_results() {
 
 #[test]
 fn single_pixel_and_exact_chunk_sizes() {
-    let Some(dir) = artifacts() else { return };
     let params = BfastParams::paper_synthetic();
-    let mut runner = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
-    )
-    .unwrap();
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     for m in [1usize, 1023, 1024, 1025, 2048] {
         let data = ArtificialDataset::new(params.clone(), m, 31).generate();
         let res = runner.run(&data.stack, &params).unwrap();
@@ -163,8 +142,17 @@ fn single_pixel_and_exact_chunk_sizes() {
 }
 
 #[test]
+fn empty_scene_runs_clean() {
+    let params = BfastParams::paper_synthetic();
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let stack = bfast::raster::TimeStack::zeros(params.n_total, 0);
+    let res = runner.run(&stack, &params).unwrap();
+    assert_eq!(res.chunks, 0);
+    assert!(res.is_empty());
+}
+
+#[test]
 fn missing_values_filled_in_staging() {
-    let Some(dir) = artifacts() else { return };
     let params = BfastParams::paper_synthetic();
     let data = ArtificialDataset::new(params.clone(), 600, 77).generate();
     // punch NaN holes, keeping first/last layers intact for fill
@@ -174,11 +162,7 @@ fn missing_values_filled_in_staging() {
         let t = 1 + px % (params.n_total - 2);
         holey.data_mut()[t * m + px] = f32::NAN;
     }
-    let mut runner = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
-    )
-    .unwrap();
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let res = runner.run(&holey, &params).unwrap();
     // host-side fill then run must give identical results
     let mut prefilled = holey.clone();
@@ -189,16 +173,98 @@ fn missing_values_filled_in_staging() {
 }
 
 #[test]
-fn wrong_shape_params_are_rejected() {
-    let Some(dir) = artifacts() else { return };
-    let mut runner = BfastRunner::from_manifest_dir(
-        &dir,
-        RunnerConfig { artifact: Some("small".into()), ..Default::default() },
-    )
-    .unwrap();
-    // params shaped differently from the artifact
+fn wrong_shape_params_are_rejected_by_pinned_backend() {
+    // A backend pinned to one contract shape (like a real AOT
+    // artifact) must reject analyses with a different shape.
+    let backend = Box::new(EmulatedDevice::new().with_shape(200, 100, 50, 3));
+    let mut runner = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
     let params = BfastParams::new(100, 50, 25, 3, 23.0, 0.05).unwrap();
     let stack = bfast::raster::TimeStack::zeros(100, 10);
     let err = runner.run(&stack, &params).unwrap_err().to_string();
     assert!(err.contains("shaped"), "{err}");
+}
+
+#[test]
+fn layer_mismatch_rejected() {
+    let params = BfastParams::paper_synthetic();
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let stack = bfast::raster::TimeStack::zeros(10, 4);
+    assert!(runner.run(&stack, &params).is_err());
+}
+
+/// Artifact-backed PJRT tests (need `--features pjrt` + `make
+/// artifacts`; skip silently when the manifest is absent).
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("SKIP device tests: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn fused_device_equals_cpu_on_synthetic() {
+        let Some(dir) = artifacts() else { return };
+        let params = BfastParams::paper_synthetic();
+        let data = ArtificialDataset::new(params.clone(), 2500, 17).generate();
+        let mut runner = BfastRunner::from_manifest_dir(
+            &dir,
+            RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+        )
+        .unwrap();
+        let res = runner.run(&data.stack, &params).unwrap();
+        let (cpu_map, _) = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)
+            .unwrap()
+            .run(&data.stack)
+            .unwrap();
+        assert_eq!(res.map.breaks, cpu_map.breaks);
+        assert_eq!(res.map.first, cpu_map.first);
+    }
+
+    #[test]
+    fn pallas_and_xla_variants_agree() {
+        let Some(dir) = artifacts() else { return };
+        let params = BfastParams::paper_synthetic();
+        let data = ArtificialDataset::new(params.clone(), 900, 5).generate();
+        let run = |name: &str| {
+            let mut r = BfastRunner::from_manifest_dir(
+                &dir,
+                RunnerConfig { artifact: Some(name.into()), ..Default::default() },
+            )
+            .unwrap();
+            r.run(&data.stack, &params).unwrap()
+        };
+        let a = run("default"); // pallas kernel
+        let b = run("default_xla"); // plain-XLA ablation
+        assert_eq!(a.map.breaks, b.map.breaks);
+        assert_eq!(a.map.first, b.map.first);
+    }
+
+    #[test]
+    fn phased_device_equals_fused_device() {
+        let Some(dir) = artifacts() else { return };
+        let params = BfastParams::paper_synthetic();
+        let data = ArtificialDataset::new(params.clone(), 1500, 3).generate();
+        let mut fused = BfastRunner::from_manifest_dir(
+            &dir,
+            RunnerConfig { artifact: Some("small".into()), ..Default::default() },
+        )
+        .unwrap();
+        let mut phased = BfastRunner::from_manifest_dir(
+            &dir,
+            RunnerConfig { artifact: Some("small".into()), phased: true, ..Default::default() },
+        )
+        .unwrap();
+        let rf = fused.run(&data.stack, &params).unwrap();
+        let rp = phased.run(&data.stack, &params).unwrap();
+        assert_eq!(rf.map.breaks, rp.map.breaks);
+        assert_eq!(rf.map.first, rp.map.first);
+    }
 }

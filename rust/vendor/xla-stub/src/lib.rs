@@ -1,0 +1,156 @@
+//! Offline stub of the `xla` (PJRT) crate surface used by bfast.
+//!
+//! Compiles with zero dependencies so `--features pjrt` still resolves
+//! in an air-gapped build; every device operation fails cleanly at
+//! runtime with [`Error`]. Swap this path dependency for the real
+//! crate to execute on hardware (see README.md).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (std::error::Error + Send + Sync).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(op: &str) -> Self {
+        Error(format!(
+            "xla stub: {op} is unavailable — this binary was built against the \
+             offline xla-stub crate; link the real `xla` crate to use PJRT devices"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of device buffers/literals (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+    F64,
+}
+
+/// Parsed HLO module (never actually constructed by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let _ = path.as_ref();
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Host literal (tensor value).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Self {
+        Literal(())
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        Err(Error::stub("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+}
+
+/// Device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client/device handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn platform_version(&self) -> String {
+        "offline".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::stub("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_with_stub_message() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("/x").is_err());
+        assert!(Literal::scalar(1.0).to_tuple().is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+    }
+}
