@@ -1,0 +1,143 @@
+"""Generate the committed golden-vector fixtures for the rust suite.
+
+``aot.py --golden`` exports oracle vectors into ``artifacts/golden/``,
+which only exists after an artifact build — so offline CI used to skip
+the golden tests entirely. This standalone script (numpy only, no jax)
+derives small fixtures from the same float64 oracle (``kernels/ref.py``)
+and writes them to ``rust/tests/data/golden/``, where they are
+committed and always available:
+
+* ``case0`` — breaking series (0.5 shift on the last 40% of even pixels)
+* ``case1`` — stable series (no shift; the oracle must report 0 breaks)
+* ``case2`` — gappy series: random cloud holes, one leading-gap pixel
+  and one entirely-missing pixel. ``y`` is stored *raw* (NaNs included);
+  the oracle runs on the forward/backward-filled series, mirroring the
+  rust staging fill. The all-NaN pixel keeps the scan semantics every
+  rust engine implements: breaks=0, first=-1, momax=0.
+
+Inputs are quantised to float32 before the oracle runs so the rust
+engines (which store scenes as f32) see bit-identical inputs.
+
+Usage:  python3 python/compile/golden_fixtures.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from kernels import ref  # noqa: E402
+
+OUT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "tests", "data", "golden"
+)
+
+
+def write_bten(path: str, arr: np.ndarray) -> None:
+    """b"BTEN" | u8 dtype (0=f32,1=i32,2=f64) | u8 ndim | dims u32 | LE data."""
+    arr = np.ascontiguousarray(arr)
+    code = {np.dtype("float32"): 0, np.dtype("int32"): 1, np.dtype("float64"): 2}[arr.dtype]
+    with open(path, "wb") as fh:
+        fh.write(b"BTEN")
+        fh.write(struct.pack("<BB", code, arr.ndim))
+        for d in arr.shape:
+            fh.write(struct.pack("<I", d))
+        fh.write(arr.tobytes())
+
+
+def fill_series(y: np.ndarray) -> np.ndarray:
+    """Forward fill then backward fill (rust ``fill::fill_series``).
+
+    An entirely-NaN series is returned unchanged, as in rust.
+    """
+    y = y.copy()
+    last = np.nan
+    for i in range(len(y)):
+        if np.isnan(y[i]):
+            if not np.isnan(last):
+                y[i] = last
+        else:
+            last = y[i]
+    nxt = np.nan
+    for i in range(len(y) - 1, -1, -1):
+        if np.isnan(y[i]):
+            if not np.isnan(nxt):
+                y[i] = nxt
+        else:
+            nxt = y[i]
+    return y
+
+
+def emit_case(idx: int, name: str, Y_raw: np.ndarray, t, *, f, n, h, k, lam) -> None:
+    N, m = Y_raw.shape
+    Y_filled = np.stack([fill_series(Y_raw[:, i]) for i in range(m)], axis=1)
+    breaks, first, momax, MO = ref.bfast_ref(Y_filled, t, f=f, n=n, h=h, k=k, lam=lam)
+    # an all-NaN series scans to the defined no-break result in rust
+    all_nan = np.isnan(Y_raw).all(axis=0)
+    momax = np.where(all_nan, 0.0, momax)
+    assert (breaks[all_nan] == 0).all() and (first[all_nan] == -1).all()
+    X = ref.design_matrix(t, f, k)
+    beta = np.stack([ref.fit_history(X, Y_filled[:, i], n) for i in range(m)], axis=1)
+    meta = dict(name=name, N=N, n=n, h=h, k=k, f=f, lam=lam, m=m)
+    with open(os.path.join(OUT, f"case{idx}.json"), "w") as fh:
+        json.dump(meta, fh, indent=1)
+    for tname, arr, dt in [
+        ("t", t, "float64"),
+        ("y", Y_raw, "float64"),  # raw: NaN gaps preserved
+        ("beta", beta, "float64"),
+        ("mo", MO, "float64"),
+        ("momax", momax, "float64"),
+        ("breaks", breaks, "int32"),
+        ("first", first, "int32"),
+    ]:
+        write_bten(os.path.join(OUT, f"case{idx}_{tname}.bten"), np.asarray(arr, dtype=dt))
+    nb = int(breaks.sum())
+    print(f"case{idx} ({name}): m={m}, {nb} breaking pixels")
+
+
+def main() -> None:
+    os.makedirs(OUT, exist_ok=True)
+    N, n, h, k, f = 60, 40, 20, 2, 12.0
+    t = np.arange(1, N + 1, dtype=np.float64)
+
+    def base(m: int, seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        y = 0.05 * np.sin(2 * np.pi * t[:, None] / f) + 0.01 * rng.standard_normal((N, m))
+        return y
+
+    def quantise(y: np.ndarray) -> np.ndarray:
+        return y.astype(np.float32).astype(np.float64)
+
+    # case0: breaking — the aot.py --golden recipe
+    y0 = base(6, 7)
+    y0[int(N * 0.6):, ::2] += 0.5
+    y0 = quantise(y0)
+    emit_case(0, "breaking", y0, t, f=f, n=n, h=h, k=k, lam=2.5)
+
+    # case1: stable — lambda above the finite-sample null quantile;
+    # the oracle must report no breaks at all (asserted)
+    y1 = quantise(base(4, 8))
+    b1, *_ = ref.bfast_ref(y1, t, f=f, n=n, h=h, k=k, lam=6.0)
+    assert b1.sum() == 0, "case1 must be break-free"
+    emit_case(1, "stable", y1, t, f=f, n=n, h=h, k=k, lam=6.0)
+
+    # case2: gappy — cloud holes + leading gap + one dead pixel
+    m2 = 7
+    y2 = base(m2, 9)
+    y2[int(N * 0.6):, ::2] += 0.5
+    rng = np.random.default_rng(10)
+    holes = rng.random((N, 5)) < 0.08  # pixels 0..4: random dropouts
+    y2[:, :5] = np.where(holes, np.nan, y2[:, :5])
+    y2[:7, 5] = np.nan      # pixel 5: leading gap (backward fill)
+    y2[:, 6] = np.nan       # pixel 6: never reports
+    y2 = quantise(y2)
+    emit_case(2, "gappy", y2, t, f=f, n=n, h=h, k=k, lam=2.5)
+
+
+if __name__ == "__main__":
+    main()

@@ -257,7 +257,7 @@ impl BfastRunner {
                             &mut buf,
                         );
                         if fill_missing {
-                            fill_chunk_columns(&mut buf, spec.n_total, chunk.padded);
+                            fill::fill_columns(&mut buf, spec.n_total, chunk.padded);
                         }
                         staging_ns
                             .fetch_add(s0.elapsed().as_nanos() as usize, Ordering::Relaxed);
@@ -320,6 +320,44 @@ impl BfastRunner {
         })
     }
 
+    /// Open an incremental [`MonitorSession`] over an initial archive:
+    /// the staged history pass runs once, sharded with the same chunk
+    /// plan this runner's backend resolves for the analysis shape, and
+    /// subsequent layers are absorbed by `session.ingest` in O(m·p)
+    /// with no refit. The session's break map after ingesting layers
+    /// `n+1..=N` is bit-identical to [`BfastRunner::run`] on the full
+    /// N-layer stack (pinned by `tests/monitor.rs`).
+    pub fn start_monitor(
+        &self,
+        stack: &TimeStack,
+        params: &BfastParams,
+    ) -> Result<crate::monitor::MonitorSession> {
+        let spec = self.backend.resolve(self.cfg.artifact.as_deref(), params)?;
+        ensure!(
+            spec.n_total == params.n_total
+                && spec.n_hist == params.n_hist
+                && spec.h == params.h
+                && spec.k == params.k,
+            "artifact {} is shaped (N={}, n={}, h={}, k={}) but params are \
+             (N={}, n={}, h={}, k={})",
+            spec.name,
+            spec.n_total,
+            spec.n_hist,
+            spec.h,
+            spec.k,
+            params.n_total,
+            params.n_hist,
+            params.h,
+            params.k
+        );
+        let cfg = crate::monitor::MonitorConfig {
+            m_chunk: spec.m_chunk,
+            threads: crate::threadpool::default_threads(),
+            fill_missing: self.cfg.fill_missing,
+        };
+        crate::monitor::MonitorSession::start(stack, params, cfg)
+    }
+
     /// Post-hoc inspection of a single pixel on the CPU — the paper's
     /// workflow for analysing intermediaries (residuals, MOSUM) of
     /// interesting pixels after the device pass located the breaks.
@@ -339,31 +377,6 @@ impl BfastRunner {
             *a = b as f64;
         }
         direct.run_pixel(&y).context("inspect pixel")
-    }
-}
-
-/// Forward/backward fill each column of a time-major chunk in place.
-fn fill_chunk_columns(buf: &mut [f32], n_times: usize, width: usize) {
-    debug_assert_eq!(buf.len(), n_times * width);
-    // Fast path: no NaN anywhere (bulk scan is vectorisable).
-    if !buf.iter().any(|v| v.is_nan()) {
-        return;
-    }
-    let mut series = vec![0.0f32; n_times];
-    for col in 0..width {
-        let mut has_nan = false;
-        for t in 0..n_times {
-            let v = buf[t * width + col];
-            series[t] = v;
-            has_nan |= v.is_nan();
-        }
-        if !has_nan {
-            continue;
-        }
-        fill::fill_series(&mut series);
-        for t in 0..n_times {
-            buf[t * width + col] = series[t];
-        }
     }
 }
 
@@ -434,23 +447,26 @@ mod tests {
     }
 
     #[test]
+    fn start_monitor_matches_run_on_same_stack() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 300, 7).generate();
+        let mut runner = BfastRunner::new(
+            Box::new(EmulatedDevice::new().with_m_chunk(64)),
+            RunnerConfig::default(),
+        )
+        .unwrap();
+        let session = runner.start_monitor(&data.stack, &params).unwrap();
+        let res = runner.run(&data.stack, &params).unwrap();
+        let map = session.break_map();
+        assert_eq!(map.breaks, res.map.breaks);
+        assert_eq!(map.first, res.map.first);
+        assert_eq!(map.momax, res.map.momax);
+    }
+
+    #[test]
     fn auto_falls_back_to_emulated() {
         let r = BfastRunner::auto("/nonexistent/artifacts", RunnerConfig::default()).unwrap();
         assert!(r.platform().contains("emulated"), "{}", r.platform());
     }
 
-    #[test]
-    fn fill_chunk_handles_columns_independently() {
-        // 3 times × 2 cols; col 0 has a gap, col 1 complete
-        let mut buf = vec![1.0, 10.0, f32::NAN, 20.0, 3.0, 30.0];
-        fill_chunk_columns(&mut buf, 3, 2);
-        assert_eq!(buf, vec![1.0, 10.0, 1.0, 20.0, 3.0, 30.0]);
-    }
-
-    #[test]
-    fn fill_chunk_noop_when_complete() {
-        let mut buf = vec![1.0f32; 12];
-        fill_chunk_columns(&mut buf, 3, 4);
-        assert_eq!(buf, vec![1.0f32; 12]);
-    }
 }

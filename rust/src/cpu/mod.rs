@@ -15,6 +15,14 @@
 //! The five named phases match Fig. 3(a)/4(a)/5/6 of the paper; a
 //! [`PhaseTimes`] is returned alongside the results so the benches can
 //! print the same breakdowns.
+//!
+//! **Bit-identity contract:** `monitor::MonitorSession` replicates
+//! this engine's arithmetic (GEMM accumulation order, the f64
+//! sigma/acc accumulation sequences, the f32 truncation points) in
+//! its `prime` and per-pixel rebuild paths so that incremental ingest
+//! reproduces a fresh run exactly. Any change to the numerics here —
+//! loop order, blocking, precision — must be mirrored there;
+//! `tests/monitor.rs` fails loudly on any drift.
 
 use crate::design;
 use crate::linalg;

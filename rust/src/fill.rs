@@ -73,6 +73,35 @@ pub fn series_stats(y: &[f32]) -> (usize, usize) {
     (missing, longest)
 }
 
+/// Forward/backward fill each column of a time-major buffer
+/// (`n_times × width`) in place — the staging-side gap handling shared
+/// by the coordinator's chunk workers and the monitor session's
+/// history pass. Per-column arithmetic is exactly [`fill_series`], so
+/// the result is independent of how a scene is chunked.
+pub fn fill_columns(buf: &mut [f32], n_times: usize, width: usize) {
+    debug_assert_eq!(buf.len(), n_times * width);
+    // Fast path: no NaN anywhere (bulk scan is vectorisable).
+    if !buf.iter().any(|v| v.is_nan()) {
+        return;
+    }
+    let mut series = vec![0.0f32; n_times];
+    for col in 0..width {
+        let mut has_nan = false;
+        for t in 0..n_times {
+            let v = buf[t * width + col];
+            series[t] = v;
+            has_nan |= v.is_nan();
+        }
+        if !has_nan {
+            continue;
+        }
+        fill_series(&mut series);
+        for t in 0..n_times {
+            buf[t * width + col] = series[t];
+        }
+    }
+}
+
 /// Fill every pixel of a stack in place (parallel over pixels).
 /// Stacks are time-major (`N × m`), so per-pixel series are strided;
 /// each worker gathers, fills, and scatters its pixel range.
@@ -149,6 +178,21 @@ mod tests {
     fn stats_longest_gap() {
         let y = [1.0, f32::NAN, f32::NAN, 2.0, f32::NAN, f32::NAN, f32::NAN, 3.0];
         assert_eq!(series_stats(&y), (5, 3));
+    }
+
+    #[test]
+    fn fill_columns_handles_columns_independently() {
+        // 3 times × 2 cols; col 0 has a gap, col 1 complete
+        let mut buf = vec![1.0, 10.0, f32::NAN, 20.0, 3.0, 30.0];
+        fill_columns(&mut buf, 3, 2);
+        assert_eq!(buf, vec![1.0, 10.0, 1.0, 20.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn fill_columns_noop_when_complete() {
+        let mut buf = vec![1.0f32; 12];
+        fill_columns(&mut buf, 3, 4);
+        assert_eq!(buf, vec![1.0f32; 12]);
     }
 
     #[test]

@@ -133,42 +133,72 @@ pub fn rec_cusum_lambda(alpha: f64) -> f64 {
     }
 }
 
-/// ROC: reverse-ordered CUSUM history selection.
+/// ROC: reverse-ordered CUSUM history selection, amortised across a
+/// scene.
 ///
-/// Runs the recursive CUSUM on the *reversed* history period (from the
-/// monitoring start backwards) and returns the 0-based index where the
-/// stable history begins: the sample just after the latest boundary
-/// crossing, or 0 if the whole history is stable.
-///
-/// `x` is the (p × n_hist) design of the candidate history,
-/// `y` the candidate history observations (chronological order).
-pub fn roc_history_start(x: &Mat, y: &[f64], alpha: f64) -> Result<usize> {
-    let p = x.rows();
-    let n = y.len();
-    ensure!(x.cols() == n, "design/history length mismatch");
-    if n <= 2 * p + 2 {
-        return Ok(0); // too short to test — keep everything
+/// The reversed candidate-history design and the critical value are
+/// shared by every pixel, so a scene-wide scan (the monitor session's
+/// `--roc` pre-pass) builds one scanner and calls [`RocScanner::scan`]
+/// per series instead of re-deriving the design m times.
+pub struct RocScanner {
+    xr: Mat,
+    lam: f64,
+    p: usize,
+    n: usize,
+}
+
+impl RocScanner {
+    /// `x` is the (p × n_hist) design of the candidate history (in
+    /// chronological order); `alpha` the BDE significance level.
+    pub fn new(x: &Mat, alpha: f64) -> Result<Self> {
+        let p = x.rows();
+        let n = x.cols();
+        ensure!(n >= 1, "empty candidate history");
+        let xr = Mat::from_fn(p, n, |i, j| x[(i, n - 1 - j)]);
+        Ok(Self { xr, lam: rec_cusum_lambda(alpha), p, n })
     }
-    // reverse both
-    let yr: Vec<f64> = y.iter().rev().copied().collect();
-    let xr = Mat::from_fn(p, n, |i, j| x[(i, n - 1 - j)]);
-    let cus = rec_cusum(&xr, &yr)?;
-    let lam = rec_cusum_lambda(alpha);
-    let m = cus.len() as f64;
-    let mut crossing: Option<usize> = None; // index into cus (reversed axis)
-    for (j, &v) in cus.iter().enumerate() {
-        let s = (j + 1) as f64 / m;
-        if v.abs() > lam * (1.0 + 2.0 * s) {
-            crossing = Some(j);
-            break; // first crossing in reverse order = latest in time
+
+    /// Candidate-history length the scanner was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Scan one series (chronological order, length n_hist): returns
+    /// the 0-based index where the stable history begins — the sample
+    /// just after the latest boundary crossing, or 0 if the whole
+    /// history is stable.
+    pub fn scan(&self, y: &[f64]) -> Result<usize> {
+        let (p, n) = (self.p, self.n);
+        ensure!(y.len() == n, "history has {} samples, scanner expects {}", y.len(), n);
+        if n <= 2 * p + 2 {
+            return Ok(0); // too short to test — keep everything
         }
+        let yr: Vec<f64> = y.iter().rev().copied().collect();
+        let cus = rec_cusum(&self.xr, &yr)?;
+        let m = cus.len() as f64;
+        let mut crossing: Option<usize> = None; // index into cus (reversed axis)
+        for (j, &v) in cus.iter().enumerate() {
+            let s = (j + 1) as f64 / m;
+            if v.abs() > self.lam * (1.0 + 2.0 * s) {
+                crossing = Some(j);
+                break; // first crossing in reverse order = latest in time
+            }
+        }
+        Ok(match crossing {
+            // cus index j corresponds to reversed position p + j, i.e.
+            // chronological index n - 1 - (p + j); history starts after it
+            Some(j) => n - (p + j),
+            None => 0,
+        })
     }
-    Ok(match crossing {
-        // cus index j corresponds to reversed position p + j, i.e.
-        // chronological index n - 1 - (p + j); history starts after it
-        Some(j) => n - (p + j),
-        None => 0,
-    })
+}
+
+/// One-shot ROC scan (see [`RocScanner`]): `x` is the (p × n_hist)
+/// design of the candidate history, `y` the candidate history
+/// observations (chronological order).
+pub fn roc_history_start(x: &Mat, y: &[f64], alpha: f64) -> Result<usize> {
+    ensure!(x.cols() == y.len(), "design/history length mismatch");
+    RocScanner::new(x, alpha)?.scan(y)
 }
 
 #[cfg(test)]
@@ -272,5 +302,28 @@ mod tests {
     fn rec_cusum_shape_errors() {
         let x = design(10);
         assert!(rec_cusum(&x, &[0.0; 4]).is_err());
+    }
+
+    #[test]
+    fn scanner_reused_across_series() {
+        let n = 120;
+        let x = design(n);
+        let scanner = RocScanner::new(&x, 0.05).unwrap();
+        assert_eq!(scanner.n(), n);
+        let mut nrm = Normal::from_seed(11);
+        for shift_at in [30usize, 60] {
+            let y: Vec<f64> = (0..n)
+                .map(|t| {
+                    let base = if t < shift_at { 2.0 } else { 0.0 };
+                    base + 0.1 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin()
+                        + 0.03 * nrm.sample()
+                })
+                .collect();
+            let a = scanner.scan(&y).unwrap();
+            let b = roc_history_start(&x, &y, 0.05).unwrap();
+            assert_eq!(a, b, "scanner vs one-shot at shift {shift_at}");
+            assert!(a > 0, "shift at {shift_at} must cut the history");
+        }
+        assert!(scanner.scan(&[0.0; 5]).is_err());
     }
 }

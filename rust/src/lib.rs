@@ -11,7 +11,9 @@
 //! * **L3 (this crate)** — the streaming coordinator ([`coordinator`]):
 //!   scene source → gap-fill → chunking → staged transfer → executor →
 //!   break-map assembly, plus all CPU baselines ([`pixel`], [`cpu`])
-//!   the paper evaluates against.
+//!   the paper evaluates against, and the incremental [`monitor`]
+//!   subsystem that keeps per-pixel rolling state between satellite
+//!   revisits instead of recomputing whole scenes.
 //! * **Backends** ([`runtime`]) — the chunk contract is the
 //!   [`runtime::ExecutorBackend`] trait. Two implementations:
 //!   - [`runtime::EmulatedDevice`] (**default**): a pure-rust device
@@ -48,6 +50,52 @@
 //! println!("{} of {} pixels broke", result.break_count(), result.len());
 //! ```
 //!
+//! ## Monitoring workflow (near-real-time ingest)
+//!
+//! A fresh `run` refits every pixel from scratch; operationally a new
+//! layer arrives every 8–16 days and only the monitor period grows.
+//! [`monitor::MonitorSession`] runs the history pass once, then
+//! absorbs one layer at a time in O(m·p) — bit-identical to a fresh
+//! run over the grown archive at every step:
+//!
+//! ```
+//! use bfast::params::BfastParams;
+//! use bfast::synth::artificial::ArtificialDataset;
+//! use bfast::coordinator::{BfastRunner, RunnerConfig};
+//!
+//! let full = BfastParams::new(60, 40, 20, 2, 12.0, 0.05).unwrap();
+//! let gen = ArtificialDataset::new(full.clone(), 200, 42);
+//! let data = gen.generate();
+//!
+//! // 1. one-time history pass over the archive as of layer 41
+//! let init = data.stack.prefix(41).unwrap();
+//! let mut p0 = full.clone();
+//! p0.n_total = 41;
+//! let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+//! let mut session = runner.start_monitor(&init, &p0).unwrap();
+//!
+//! // 2. ingest each new acquisition as it arrives (here: streamed)
+//! for (t, layer) in gen.stream().skip(41) {
+//!     let delta = session.ingest(t, &layer).unwrap();
+//!     if !delta.new_breaks.is_empty() {
+//!         println!("t={t}: {} new breaks", delta.new_breaks.len());
+//!     }
+//! }
+//! assert_eq!(session.n_seen(), 60);
+//!
+//! // 3. persist / resume across process restarts
+//! let dir = std::env::temp_dir().join("bfast-doc-session");
+//! session.save(&dir).unwrap();
+//! let resumed = bfast::monitor::MonitorSession::load(&dir, 4).unwrap();
+//! assert_eq!(resumed.break_count(), session.break_count());
+//! # std::fs::remove_dir_all(dir).ok();
+//! ```
+//!
+//! The state directory holds `session.json` plus `state_*.bten`
+//! tensors (β̂, σ̂√n, the last-h residual ring, MOSUM accumulator,
+//! break scan, forward-fill values); the CLI front-end is
+//! `bfast monitor --state dir/` (see README).
+//!
 //! Substrate modules ([`prng`], [`linalg`], [`json`], [`threadpool`],
 //! [`cli`], [`propcheck`], [`bench_support`], [`error`]) exist because
 //! the build environment is fully offline — see DESIGN.md §3.
@@ -64,6 +112,7 @@ pub mod json;
 pub mod lambda;
 pub mod linalg;
 pub mod metrics;
+pub mod monitor;
 pub mod mosum;
 pub mod params;
 pub mod pixel;

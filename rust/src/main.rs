@@ -3,9 +3,10 @@
 //! critical-value tables.
 
 use bfast::cli::Command;
-use bfast::error::{bail, Result};
+use bfast::error::{bail, ensure, Result};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::cpu::FusedCpuBfast;
+use bfast::monitor::{self, MonitorConfig, MonitorSession};
 use bfast::params::BfastParams;
 use bfast::pixel::{DirectBfast, NaiveBfast};
 use bfast::raster::{io as rio, pgm};
@@ -29,6 +30,8 @@ COMMANDS:
   info          show executor backend + artifact manifest
   generate      write a synthetic .bsq stack (artificial or chile)
   run           analyse a .bsq stack (engine: device|emulated|cpu|direct|naive)
+  monitor       incremental session: one-time history pass, then ingest
+                new layers (.bsq/.pgm) with no refit (--state dir/)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
 ";
@@ -43,6 +46,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "info" => cmd_info(rest),
         "generate" => cmd_generate(rest),
         "run" => cmd_run(rest),
+        "monitor" => cmd_monitor(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
         "--help" | "-h" | "help" => {
@@ -242,6 +246,225 @@ fn cmd_run(args: &[String]) -> Result<()> {
         println!("wrote {pgm_path} (scale {lo:.2}..{hi:.2})");
     }
     Ok(())
+}
+
+fn cmd_monitor(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "monitor",
+        "incremental monitoring session: `--init archive.bsq` runs the one-time \
+         history pass (N is taken from the archive), positional .bsq/.pgm files \
+         are ingested layer by layer; state persists under --state",
+    )
+    .req("state", "session state directory")
+    .opt("init", "", "initialise the session from this .bsq archive")
+    .opt("init-layers", "0", "prime on only the first K layers of --init (0 = all)")
+    .opt("n-hist", "100", "stable history length n (init)")
+    .opt("h", "50", "MOSUM bandwidth (init)")
+    .opt("k", "3", "harmonic terms (init)")
+    .opt("freq", "23", "observations per period f (init)")
+    .opt("alpha", "0.05", "significance level (init)")
+    .opt("m-chunk", "1024", "pixels per chunk of the staged passes (init)")
+    .opt("threads", "0", "worker threads, 0 = auto")
+    .opt("t", "", "acquisition time of the first ingested .pgm layer")
+    .opt("dt", "16", "time step between successive .pgm layers")
+    .opt("momax-pgm", "", "write the running max|MOSUM| heatmap here")
+    .opt("roc-quantile", "1.0", "quantile of per-pixel ROC starts (with --roc)")
+    .switch("roc", "trim the unstable history with a reverse-ordered CUSUM scan (init)")
+    .switch("no-fill", "disable forward/backward gap filling (init)")
+    .switch("status", "print session status and exit");
+    let m = cmd.parse(args)?;
+    let state_dir = m.str("state")?.to_string();
+    let threads = match m.usize("threads")? {
+        0 => bfast::threadpool::default_threads(),
+        n => n,
+    };
+
+    let mut session = if m.str("init")?.is_empty() {
+        // resuming: every init-only flag would be silently ignored —
+        // reject non-default values instead of dropping them
+        for (flag, default) in [
+            ("init-layers", "0"),
+            ("n-hist", "100"),
+            ("h", "50"),
+            ("k", "3"),
+            ("freq", "23"),
+            ("alpha", "0.05"),
+            ("m-chunk", "1024"),
+            ("roc-quantile", "1.0"),
+        ] {
+            ensure!(
+                m.str(flag)? == default,
+                "--{flag} only applies with --init; the resumed session keeps its saved \
+                 configuration"
+            );
+        }
+        ensure!(
+            !m.flag("roc") && !m.flag("no-fill"),
+            "--roc/--no-fill only apply with --init; the resumed session keeps its saved \
+             configuration"
+        );
+        let s = MonitorSession::load(&state_dir, threads)?;
+        println!(
+            "resumed session from {state_dir}: {} px, {} layers (n={}, h={}, k={}), \
+             {} breaks so far",
+            s.n_pixels(),
+            s.n_seen(),
+            s.params().n_hist,
+            s.params().h,
+            s.params().k,
+            s.break_count()
+        );
+        s
+    } else {
+        ensure!(
+            !std::path::Path::new(&state_dir).join("session.json").exists(),
+            "{state_dir} already holds a session; --init would destroy its accumulated \
+             state — remove the directory or choose another --state to start over"
+        );
+        let mut stack = rio::read_stack(m.str("init")?)?;
+        let keep = m.usize("init-layers")?;
+        if keep > 0 {
+            stack = stack.prefix(keep)?;
+        }
+        let mut params = BfastParams::new(
+            stack.n_times(),
+            m.usize("n-hist")?,
+            m.usize("h")?,
+            m.usize("k")?,
+            m.f64("freq")?,
+            m.f64("alpha")?,
+        )?;
+        if m.flag("roc") {
+            let sel = monitor::roc_select(&stack, &params, m.f64("roc-quantile")?, threads)?;
+            println!(
+                "ROC scan: stable history starts at layer {} (quantile {} of {} pixels)",
+                sel.chosen,
+                m.str("roc-quantile")?,
+                sel.starts.len()
+            );
+            let (trimmed, adjusted) = monitor::apply_roc(&stack, &params, sel.chosen)?;
+            stack = trimmed;
+            params = adjusted;
+        }
+        let cfg = MonitorConfig {
+            m_chunk: m.usize("m-chunk")?,
+            threads,
+            fill_missing: !m.flag("no-fill"),
+        };
+        let t0 = Instant::now();
+        let s = MonitorSession::start(&stack, &params, cfg)?;
+        println!(
+            "primed session: {} px, {} layers (n={}, h={}, k={}, lambda={:.3}) in {:.3}s; \
+             {} breaks in the initial archive",
+            s.n_pixels(),
+            s.n_seen(),
+            params.n_hist,
+            params.h,
+            params.k,
+            s.params().lambda,
+            t0.elapsed().as_secs_f64(),
+            s.break_count()
+        );
+        s
+    };
+
+    if m.flag("status") {
+        ensure!(
+            m.positional.is_empty(),
+            "--status does not ingest: drop it to absorb {:?}",
+            m.positional
+        );
+        session.save(&state_dir)?; // persists a freshly-primed session too
+        println!(
+            "state {state_dir}: {} px, {} layers, last t={:.3}, {} breaks ({:.2}%)",
+            session.n_pixels(),
+            session.n_seen(),
+            session.time_axis().last().copied().unwrap_or(f64::NAN),
+            session.break_count(),
+            100.0 * session.break_count() as f64 / session.n_pixels().max(1) as f64
+        );
+        return Ok(());
+    }
+
+    // ingest positional layer files (.bsq archives or single .pgm layers)
+    let mut deltas = Vec::new();
+    let mut next_pgm_t = match m.str("t")? {
+        "" => None,
+        s => Some(s.parse::<f64>().map_err(|_| bfast::err!("--t: expected number, got {s:?}"))?),
+    };
+    let pgm_dt = m.f64("dt")?;
+    for file in &m.positional {
+        if file.ends_with(".pgm") {
+            let t = next_pgm_t.ok_or_else(|| {
+                bfast::err!("--t is required to ingest .pgm layers (they carry no time axis)")
+            })?;
+            let (w, h, values) = pgm::read_pgm(file)?;
+            ensure!(
+                w * h == session.n_pixels(),
+                "{file}: {w}x{h} layer does not match the session's {} pixels",
+                session.n_pixels()
+            );
+            let d = session.ingest(t, &values)?;
+            next_pgm_t = Some(t + pgm_dt);
+            deltas.push(d);
+        } else {
+            let stack = rio::read_stack(file)?;
+            let skipped = stack.n_times();
+            let new = session.ingest_stack(&stack)?;
+            let skipped = skipped - new.len();
+            if skipped > 0 {
+                println!("{file}: skipped {skipped} already-seen layers");
+            }
+            deltas.extend(new);
+        }
+    }
+    for d in &deltas {
+        let head: Vec<String> =
+            d.new_breaks.iter().take(8).map(|px| px_label(*px, &session)).collect();
+        println!(
+            "layer {} (t={:.3}): +{} new breaks, {} total{}{}",
+            d.layer,
+            d.t,
+            d.new_breaks.len(),
+            d.total_breaks,
+            if head.is_empty() { "" } else { " — " },
+            head.join(", ")
+        );
+    }
+    if !deltas.is_empty() {
+        print!(
+            "{}",
+            bfast::report::monitor_delta_table(&deltas, session.n_pixels()).to_console()
+        );
+    }
+
+    let pgm_path = m.str("momax-pgm")?;
+    if !pgm_path.is_empty() {
+        let map = session.break_map();
+        let (w, h) = match session.geometry() {
+            (Some(w), Some(h)) => (w, h),
+            _ => (map.momax.len(), 1),
+        };
+        let (lo, hi) = pgm::write_pgm_autoscale(pgm_path, &map.momax, w, h)?;
+        println!("wrote {pgm_path} (scale {lo:.2}..{hi:.2})");
+    }
+
+    session.save(&state_dir)?;
+    println!(
+        "saved session to {state_dir}: {} layers, {} breaks",
+        session.n_seen(),
+        session.break_count()
+    );
+    Ok(())
+}
+
+/// Pixel label for delta reporting: `(x, y)` when the scene has
+/// geometry, the flat index otherwise.
+fn px_label(px: usize, session: &MonitorSession) -> String {
+    match session.geometry() {
+        (Some(w), Some(_)) if w > 0 => format!("({}, {})", px % w, px / w),
+        _ => px.to_string(),
+    }
 }
 
 fn cmd_inspect(args: &[String]) -> Result<()> {

@@ -1,0 +1,940 @@
+//! Incremental monitoring sessions — the near-real-time workload the
+//! paper's speed makes practical.
+//!
+//! A fresh [`crate::coordinator::BfastRunner::run`] refits the history
+//! OLS model and replays the full MOSUM for every pixel on every
+//! invocation. Operationally, though, a new satellite layer arrives
+//! every 8–16 days and only the monitor period grows: the history fit
+//! is fixed. A [`MonitorSession`] runs the one-time **history pass**
+//! (β̂, σ̂ and, where requested, a ROC-trimmed stable history) through
+//! the same staged chunk plan the coordinator uses, then caches the
+//! per-pixel rolling state —
+//!
+//! * β̂ (p × m, f32) and σ̂√n (f64) from the history fit,
+//! * the last-`h` residual window (the MOSUM ring),
+//! * the rolling accumulator `acc`, running `momax` and the
+//!   first-break index,
+//! * the forward-fill value for gap handling (paper footnote 2) —
+//!
+//! so [`MonitorSession::ingest`] advances every pixel in **O(m·p)**
+//! with no refit. The arithmetic replicates `cpu::FusedCpuBfast` (and
+//! therefore the coordinated pipeline over any backend that matches
+//! it) operation-for-operation — f32 GEMM accumulation order included —
+//! so after ingesting layers `n+1..=N` the session's break map is
+//! **bit-identical** to a fresh coordinated run at N, at every prefix.
+//! The equivalence is pinned by `tests/monitor.rs`.
+//!
+//! Sessions persist to a state directory (`session.json` +
+//! `state_*.bten` tensors) and resume exactly; see the README's
+//! monitoring-workflow section and the `bfast monitor` CLI.
+
+use crate::design;
+use crate::error::{ensure, Context, Result};
+use crate::fill;
+use crate::history::RocScanner;
+use crate::json::{self, Value};
+use crate::linalg;
+use crate::mosum;
+use crate::params::BfastParams;
+use crate::raster::{BreakMap, ChunkPlan, TimeStack};
+use crate::runtime::bten::{read_bten, write_bten, Tensor};
+use crate::threadpool::{self, SyncSlice};
+use std::path::Path;
+
+/// State-file schema version (bump on layout changes).
+const STATE_VERSION: f64 = 1.0;
+
+/// Session tuning. `m_chunk` shards both the history pass and each
+/// ingest across the threadpool with the same pixel-range chunk plan
+/// the coordinator uses; `fill_missing` mirrors
+/// [`crate::coordinator::RunnerConfig::fill_missing`] and must match
+/// the runs the session is compared against.
+#[derive(Clone, Debug)]
+pub struct MonitorConfig {
+    /// Pixels per chunk (the coordinator's chunk-plan width).
+    pub m_chunk: usize,
+    /// Worker threads for the history pass and per-layer updates.
+    pub threads: usize,
+    /// Forward/backward-fill NaN observations (paper footnote 2).
+    pub fill_missing: bool,
+}
+
+impl Default for MonitorConfig {
+    fn default() -> Self {
+        Self {
+            m_chunk: crate::runtime::emulated::DEFAULT_M_CHUNK,
+            threads: threadpool::default_threads(),
+            fill_missing: true,
+        }
+    }
+}
+
+/// What one ingested layer changed.
+#[derive(Clone, Debug)]
+pub struct IngestDelta {
+    /// 0-based row index of the ingested layer in the grown stack.
+    pub layer: usize,
+    /// Acquisition time (after the chunk contract's f32 rounding).
+    pub t: f64,
+    /// 0-based monitor index of the layer (t = n + 1 + monitor_index).
+    pub monitor_index: usize,
+    /// Pixels that became broken with this layer's ingest. Usually
+    /// their first crossing is at `monitor_index`; a late-reporting
+    /// pixel whose rebuilt (backfilled) history crosses earlier is
+    /// still reported here, on the layer that revealed it.
+    pub new_breaks: Vec<usize>,
+    /// Total broken pixels after this layer.
+    pub total_breaks: usize,
+}
+
+/// Result of a scene-wide ROC (reverse-ordered CUSUM) pre-pass.
+#[derive(Clone, Debug)]
+pub struct RocSelection {
+    /// Per-pixel 0-based index where the stable history begins.
+    pub starts: Vec<usize>,
+    /// The start chosen at the requested quantile (shared by the
+    /// batched fit — the paper's pipeline uses one n per scene).
+    pub chosen: usize,
+}
+
+/// An incremental BFAST(monitor) session. See module docs.
+pub struct MonitorSession {
+    /// Analysis parameters with the chunk contract's f32 rounding
+    /// applied to `freq`/`lambda`; `n_total` tracks the layers seen.
+    params: BfastParams,
+    cfg: MonitorConfig,
+    m: usize,
+    width: Option<usize>,
+    height: Option<usize>,
+    /// f32-rounded acquisition times of every layer seen.
+    axis: Vec<f64>,
+    /// Xᵀ rows (n_seen × p, f32) — grows one row per ingest.
+    xt: Vec<f32>,
+    /// M = (X_h X_hᵀ)⁻¹ X_h (p × n_hist, f32) — fixed after start.
+    m_f32: Vec<f32>,
+    /// β̂ (p × m, f32).
+    beta: Vec<f32>,
+    /// σ̂√n per pixel (Eq. 3 denominator).
+    sigma_denom: Vec<f64>,
+    /// Rolling MOSUM accumulator per pixel.
+    acc: Vec<f64>,
+    /// Last-h residual rows (h × m, f32); row r lives at slot r % h.
+    ring: Vec<f32>,
+    /// Running max |MO_t| per pixel.
+    momax: Vec<f32>,
+    /// First-crossing monitor index per pixel, -1 when unbroken.
+    first: Vec<i32>,
+    /// Last valid (non-NaN) raw observation per pixel; NaN when the
+    /// pixel has never reported (forward-fill state).
+    last_valid: Vec<f32>,
+}
+
+/// Shared read-only context for rebuilding one pixel's state from a
+/// constant-valued filled series (the backfill case: a pixel whose
+/// first valid observation arrives mid-monitoring).
+struct RebuildCtx<'a> {
+    params: &'a BfastParams,
+    xt: &'a [f32],
+    m_f32: &'a [f32],
+}
+
+/// One pixel's rebuilt state.
+struct PixelState {
+    beta: Vec<f32>,
+    sigma_denom: f64,
+    acc: f64,
+    momax: f32,
+    first: i32,
+    resids: Vec<f32>,
+}
+
+impl RebuildCtx<'_> {
+    /// Replay the engine's arithmetic over a series that is `y0` at
+    /// every row `0..n_rows` (what forward/backward fill yields for a
+    /// pixel whose first valid value just arrived).
+    fn rebuild_constant(&self, y0: f32, n_rows: usize) -> PixelState {
+        let p = self.params.p();
+        let n = self.params.n_hist;
+        let h = self.params.h;
+        // β̂: per-element dot in the GEMM's accumulation order
+        // (k ascending, zero entries skipped — see linalg::gemm).
+        let mut beta = vec![0.0f32; p];
+        for (i, b) in beta.iter_mut().enumerate() {
+            let mut c = 0.0f32;
+            for &av in &self.m_f32[i * n..(i + 1) * n] {
+                if av == 0.0 {
+                    continue;
+                }
+                c += av * y0;
+            }
+            *b = c;
+        }
+        // predictions + residuals, row by row
+        let mut resids = vec![0.0f32; n_rows];
+        for (t, r) in resids.iter_mut().enumerate() {
+            let mut yh = 0.0f32;
+            for (j, &av) in self.xt[t * p..(t + 1) * p].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                yh += av * beta[j];
+            }
+            *r = y0 - yh;
+        }
+        // σ̂√n from the history rows
+        let mut ss = 0.0f64;
+        for &r in &resids[..n] {
+            ss += (r as f64) * (r as f64);
+        }
+        let sigma_denom = (ss / self.params.dof() as f64).sqrt() * (n as f64).sqrt();
+        // initial MOSUM window, then roll + scan through every monitor
+        // row already covered
+        let mut acc = 0.0f64;
+        for &r in &resids[n + 1 - h..=n] {
+            acc += r as f64;
+        }
+        let mut momax = 0.0f32;
+        let mut first = -1i32;
+        for ti in 0..n_rows - n {
+            let mo = if ti == 0 {
+                (acc / sigma_denom) as f32
+            } else {
+                mosum::rolling_step(&mut acc, sigma_denom, resids[n + ti], resids[n + ti - h])
+            };
+            let a = mo.abs();
+            if a > momax {
+                momax = a;
+            }
+            if first < 0 && a > mosum::boundary_at(self.params, ti) as f32 {
+                first = ti as i32;
+            }
+        }
+        PixelState { beta, sigma_denom, acc, momax, first, resids }
+    }
+}
+
+impl MonitorSession {
+    /// Run the one-time history pass over an initial archive and open
+    /// the session. `stack` must hold `params.n_total` layers with at
+    /// least one monitor layer (`n_total > n_hist`); the resulting
+    /// state is exactly what a fresh coordinated run produces at this
+    /// prefix.
+    pub fn start(stack: &TimeStack, params: &BfastParams, cfg: MonitorConfig) -> Result<Self> {
+        params.validate()?;
+        ensure!(cfg.m_chunk >= 1, "m_chunk must be >= 1");
+        ensure!(
+            stack.n_times() == params.n_total,
+            "stack has {} layers, params expect N={}",
+            stack.n_times(),
+            params.n_total
+        );
+        // The chunk contract ships freq/lambda/t as f32 — apply the
+        // same rounding so the session agrees with the pipeline.
+        let params = BfastParams::with_lambda(
+            params.n_total,
+            params.n_hist,
+            params.h,
+            params.k,
+            (params.freq as f32) as f64,
+            params.alpha,
+            (params.lambda as f32) as f64,
+        )?;
+        let axis: Vec<f64> = stack.time_axis.iter().map(|&v| (v as f32) as f64).collect();
+        ensure!(
+            axis.windows(2).all(|w| w[1] > w[0]),
+            "monitor session: time axis collapses under f32 rounding"
+        );
+        let x = design::design_matrix(&axis, params.freq, params.k);
+        let m_f32 = design::history_pinv(&x, params.n_hist)?.to_f32();
+        let xt = x.transpose().to_f32();
+
+        let m = stack.n_pixels();
+        let mut session = Self {
+            m,
+            width: stack.width,
+            height: stack.height,
+            axis,
+            xt,
+            m_f32,
+            beta: vec![0.0; params.p() * m],
+            sigma_denom: vec![0.0; m],
+            acc: vec![0.0; m],
+            ring: vec![0.0; params.h * m],
+            momax: vec![0.0; m],
+            first: vec![-1; m],
+            last_valid: vec![f32::NAN; m],
+            params,
+            cfg,
+        };
+        session.prime(stack);
+        Ok(session)
+    }
+
+    /// The staged history pass: gather → gap-fill → batched fit →
+    /// rolling MOSUM + scan, chunk by chunk across the threadpool
+    /// (same chunk plan as the coordinator's staging workers).
+    fn prime(&mut self, stack: &TimeStack) {
+        let p = self.params.p();
+        let (n0, n, h) = (self.params.n_total, self.params.n_hist, self.params.h);
+        let m = self.m;
+        let dof = self.params.dof() as f64;
+        let sqrt_n = (n as f64).sqrt();
+        let plan = ChunkPlan::new(m, self.cfg.m_chunk);
+        let params = &self.params;
+        let (m_f32, xt) = (&self.m_f32, &self.xt);
+        let fill_missing = self.cfg.fill_missing;
+
+        let beta_v = SyncSlice::new(&mut self.beta);
+        let sigma_v = SyncSlice::new(&mut self.sigma_denom);
+        let acc_v = SyncSlice::new(&mut self.acc);
+        let ring_v = SyncSlice::new(&mut self.ring);
+        let momax_v = SyncSlice::new(&mut self.momax);
+        let first_v = SyncSlice::new(&mut self.first);
+        let lv_v = SyncSlice::new(&mut self.last_valid);
+
+        threadpool::parallel_ranges(plan.len(), 1, self.cfg.threads, |c0, c1| {
+            for ci in c0..c1 {
+                let chunk = plan.get(ci);
+                let (start, w) = (chunk.start, chunk.width());
+                let mut buf = vec![0.0f32; n0 * w];
+                stack.copy_chunk_padded(start, chunk.end, w, 0.0, &mut buf);
+                // forward-fill state from the *raw* chunk
+                for j in 0..w {
+                    let mut lv = f32::NAN;
+                    for t in (0..n0).rev() {
+                        let v = buf[t * w + j];
+                        if !v.is_nan() {
+                            lv = v;
+                            break;
+                        }
+                    }
+                    unsafe { lv_v.write(start + j, lv) };
+                }
+                if fill_missing {
+                    fill::fill_columns(&mut buf, n0, w);
+                }
+                // batched fit + predictions (engine phases 1–3)
+                let mut beta_c = vec![0.0f32; p * w];
+                linalg::sgemm(p, n, w, m_f32, &buf[..n * w], &mut beta_c);
+                let mut resid = vec![0.0f32; n0 * w];
+                linalg::sgemm(n0, p, w, xt, &beta_c, &mut resid);
+                for (r, &y) in resid.iter_mut().zip(&buf) {
+                    *r = y - *r;
+                }
+                // σ̂√n + rolling MOSUM + break scan (engine phases 4–5)
+                let mut sigma = vec![0.0f64; w];
+                for t in 0..n {
+                    let row = &resid[t * w..(t + 1) * w];
+                    for (sg, &r) in sigma.iter_mut().zip(row) {
+                        *sg += (r as f64) * (r as f64);
+                    }
+                }
+                for sg in sigma.iter_mut() {
+                    *sg = (*sg / dof).sqrt() * sqrt_n;
+                }
+                let mut acc = vec![0.0f64; w];
+                for t in n + 1 - h..=n {
+                    let row = &resid[t * w..(t + 1) * w];
+                    for (a, &r) in acc.iter_mut().zip(row) {
+                        *a += r as f64;
+                    }
+                }
+                let mut momax = vec![0.0f32; w];
+                let mut first = vec![-1i32; w];
+                for ti in 0..n0 - n {
+                    let b = mosum::boundary_at(params, ti) as f32;
+                    for j in 0..w {
+                        let mo = if ti == 0 {
+                            (acc[j] / sigma[j]) as f32
+                        } else {
+                            mosum::rolling_step(
+                                &mut acc[j],
+                                sigma[j],
+                                resid[(n + ti) * w + j],
+                                resid[(n + ti - h) * w + j],
+                            )
+                        };
+                        let a = mo.abs();
+                        if a > momax[j] {
+                            momax[j] = a;
+                        }
+                        if first[j] < 0 && a > b {
+                            first[j] = ti as i32;
+                        }
+                    }
+                }
+                // scatter chunk state into the session arrays
+                for j in 0..w {
+                    unsafe {
+                        sigma_v.write(start + j, sigma[j]);
+                        acc_v.write(start + j, acc[j]);
+                        momax_v.write(start + j, momax[j]);
+                        first_v.write(start + j, first[j]);
+                    }
+                }
+                for i in 0..p {
+                    for j in 0..w {
+                        unsafe { beta_v.write(i * m + start + j, beta_c[i * w + j]) };
+                    }
+                }
+                for row in n0 - h..n0 {
+                    for j in 0..w {
+                        unsafe { ring_v.write((row % h) * m + start + j, resid[row * w + j]) };
+                    }
+                }
+            }
+        });
+    }
+
+    /// Ingest one acquisition layer at time `t`, advancing every pixel
+    /// in O(p) without refitting. Returns what changed.
+    pub fn ingest(&mut self, t: f64, layer: &[f32]) -> Result<IngestDelta> {
+        ensure!(
+            layer.len() == self.m,
+            "layer has {} values, session monitors {} pixels",
+            layer.len(),
+            self.m
+        );
+        let t_r = (t as f32) as f64;
+        let last = *self.axis.last().expect("session holds >= n+1 layers");
+        ensure!(
+            t_r > last,
+            "layer time {t} does not extend the series (last = {last}, f32-rounded)"
+        );
+        // extend the design one row
+        let x1 = design::design_matrix(&[t_r], self.params.freq, self.params.k);
+        let p = self.params.p();
+        for i in 0..p {
+            self.xt.push(x1[(i, 0)] as f32);
+        }
+        self.axis.push(t_r);
+        self.params.n_total = self.axis.len();
+
+        let r = self.axis.len() - 1; // new 0-based row index
+        let (n, h, m) = (self.params.n_hist, self.params.h, self.m);
+        let ti = r - n;
+        let slot = r % h;
+        let bound = mosum::boundary_at(&self.params, ti) as f32;
+        let fill_missing = self.cfg.fill_missing;
+        let plan_grain = self.cfg.m_chunk;
+        let threads = self.cfg.threads;
+        // Snapshot which pixels were already broken: a late-reporting
+        // pixel's rebuilt history can cross at an *earlier* monitor
+        // index than ti, and must still surface in this layer's delta.
+        let was_broken: Vec<bool> = self.first.iter().map(|&f| f >= 0).collect();
+
+        {
+            let params = &self.params;
+            let ctx = RebuildCtx { params, xt: &self.xt, m_f32: &self.m_f32 };
+            let xrow = &self.xt[r * p..(r + 1) * p];
+            let beta_v = SyncSlice::new(&mut self.beta);
+            let sigma_v = SyncSlice::new(&mut self.sigma_denom);
+            let acc_v = SyncSlice::new(&mut self.acc);
+            let ring_v = SyncSlice::new(&mut self.ring);
+            let momax_v = SyncSlice::new(&mut self.momax);
+            let first_v = SyncSlice::new(&mut self.first);
+            let lv_v = SyncSlice::new(&mut self.last_valid);
+
+            threadpool::parallel_ranges(m, plan_grain, threads, |s, e| {
+                for px in s..e {
+                    let raw = layer[px];
+                    let lv = unsafe { lv_v.read(px) };
+                    let v = if raw.is_nan() {
+                        if fill_missing {
+                            lv // forward fill (NaN while the pixel is blank)
+                        } else {
+                            raw
+                        }
+                    } else {
+                        if fill_missing && lv.is_nan() {
+                            // First valid value ever: a fresh run would
+                            // have backfilled the whole prefix with it —
+                            // rebuild this pixel's state from that
+                            // constant series, exactly.
+                            let st = ctx.rebuild_constant(raw, r + 1);
+                            for (j, &b) in st.beta.iter().enumerate() {
+                                unsafe { beta_v.write(j * m + px, b) };
+                            }
+                            unsafe {
+                                sigma_v.write(px, st.sigma_denom);
+                                acc_v.write(px, st.acc);
+                                momax_v.write(px, st.momax);
+                                first_v.write(px, st.first);
+                                lv_v.write(px, raw);
+                            }
+                            for row in r + 1 - h..=r {
+                                unsafe {
+                                    ring_v.write((row % h) * m + px, st.resids[row]);
+                                }
+                            }
+                            continue;
+                        }
+                        unsafe { lv_v.write(px, raw) };
+                        raw
+                    };
+                    // prediction for the new row (GEMM-order dot)
+                    let mut yh = 0.0f32;
+                    for (j, &av) in xrow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        yh += av * unsafe { beta_v.read(j * m + px) };
+                    }
+                    let resid = v - yh;
+                    let old = unsafe { ring_v.read(slot * m + px) };
+                    let mut acc = unsafe { acc_v.read(px) };
+                    let mo =
+                        mosum::rolling_step(&mut acc, unsafe { sigma_v.read(px) }, resid, old);
+                    unsafe { acc_v.write(px, acc) };
+                    let a = mo.abs();
+                    if a > unsafe { momax_v.read(px) } {
+                        unsafe { momax_v.write(px, a) };
+                    }
+                    if unsafe { first_v.read(px) } < 0 && a > bound {
+                        unsafe { first_v.write(px, ti as i32) };
+                    }
+                    unsafe { ring_v.write(slot * m + px, resid) };
+                }
+            });
+        }
+
+        let new_breaks: Vec<usize> = self
+            .first
+            .iter()
+            .enumerate()
+            .filter(|&(px, &f)| f >= 0 && !was_broken[px])
+            .map(|(px, _)| px)
+            .collect();
+        Ok(IngestDelta {
+            layer: r,
+            t: t_r,
+            monitor_index: ti,
+            new_breaks,
+            total_breaks: self.break_count(),
+        })
+    }
+
+    /// Ingest every layer of `stack` whose time extends the session
+    /// (layers at or before the last seen time are skipped — re-feeding
+    /// a grown archive is the expected CLI workflow).
+    pub fn ingest_stack(&mut self, stack: &TimeStack) -> Result<Vec<IngestDelta>> {
+        ensure!(
+            stack.n_pixels() == self.m,
+            "stack has {} pixels, session monitors {}",
+            stack.n_pixels(),
+            self.m
+        );
+        let last = *self.axis.last().expect("session holds layers");
+        let mut deltas = Vec::new();
+        for (tidx, &t) in stack.time_axis.iter().enumerate() {
+            if ((t as f32) as f64) <= last {
+                continue;
+            }
+            deltas.push(self.ingest(t, stack.layer(tidx))?);
+        }
+        Ok(deltas)
+    }
+
+    // -- accessors -------------------------------------------------------
+
+    /// Analysis parameters (f32-rounded freq/λ; `n_total` = layers seen).
+    pub fn params(&self) -> &BfastParams {
+        &self.params
+    }
+
+    /// Layers consumed so far (history + monitor).
+    pub fn n_seen(&self) -> usize {
+        self.axis.len()
+    }
+
+    pub fn n_pixels(&self) -> usize {
+        self.m
+    }
+
+    /// Scene geometry, when the initial stack carried one.
+    pub fn geometry(&self) -> (Option<usize>, Option<usize>) {
+        (self.width, self.height)
+    }
+
+    /// f32-rounded acquisition times of every layer seen.
+    pub fn time_axis(&self) -> &[f64] {
+        &self.axis
+    }
+
+    /// Broken pixels so far.
+    pub fn break_count(&self) -> usize {
+        self.first.iter().filter(|&&f| f >= 0).count()
+    }
+
+    /// The current break map — bit-identical to a fresh coordinated
+    /// run over the same (grown) archive.
+    pub fn break_map(&self) -> BreakMap {
+        BreakMap {
+            breaks: self.first.iter().map(|&f| (f >= 0) as i32).collect(),
+            first: self.first.clone(),
+            momax: self.momax.clone(),
+        }
+    }
+
+    // -- persistence -----------------------------------------------------
+
+    /// Save the session to a state directory (`session.json` +
+    /// `state_*.bten`). Resuming via [`MonitorSession::load`] restores
+    /// the exact state: ingest after a round-trip is bit-identical to
+    /// an uninterrupted session.
+    ///
+    /// The write is staged: everything lands in a `<dir>.tmp` sibling
+    /// first and the directories are swapped at the end, so a crash
+    /// mid-save can never leave a mixed-generation state directory
+    /// (whose tensors mostly have n-independent shapes and would load
+    /// without complaint).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        // normalise away trailing separators so the staging siblings
+        // ("<dir>.tmp"/"<dir>.old") never land *inside* the target
+        let dir: std::path::PathBuf = dir.as_ref().components().collect();
+        let dir = dir.as_path();
+        let sibling = |suffix: &str| {
+            let mut s = dir.as_os_str().to_os_string();
+            s.push(suffix);
+            std::path::PathBuf::from(s)
+        };
+        let tmp = sibling(".tmp");
+        let old = sibling(".old");
+        if tmp.exists() {
+            std::fs::remove_dir_all(&tmp)
+                .with_context(|| format!("clearing stale {}", tmp.display()))?;
+        }
+        if old.exists() {
+            std::fs::remove_dir_all(&old)
+                .with_context(|| format!("clearing stale {}", old.display()))?;
+        }
+        self.write_state_files(&tmp)?;
+        if dir.exists() {
+            std::fs::rename(dir, &old)
+                .with_context(|| format!("retiring previous state {}", dir.display()))?;
+        }
+        std::fs::rename(&tmp, dir)
+            .with_context(|| format!("activating new state {}", dir.display()))?;
+        std::fs::remove_dir_all(&old).ok(); // best-effort cleanup
+        Ok(())
+    }
+
+    fn write_state_files(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating state dir {}", dir.display()))?;
+        let p = self.params.p();
+        let (n, h) = (self.params.n_hist, self.params.h);
+        let mut meta = vec![
+            ("version", Value::Num(STATE_VERSION)),
+            ("n_seen", Value::Num(self.axis.len() as f64)),
+            ("n_hist", Value::Num(n as f64)),
+            ("h", Value::Num(h as f64)),
+            ("k", Value::Num(self.params.k as f64)),
+            ("freq", Value::Num(self.params.freq)),
+            ("alpha", Value::Num(self.params.alpha)),
+            ("lambda", Value::Num(self.params.lambda)),
+            ("m", Value::Num(self.m as f64)),
+            ("m_chunk", Value::Num(self.cfg.m_chunk as f64)),
+            ("fill_missing", Value::Bool(self.cfg.fill_missing)),
+        ];
+        if let (Some(w), Some(hh)) = (self.width, self.height) {
+            meta.push(("width", Value::Num(w as f64)));
+            meta.push(("height", Value::Num(hh as f64)));
+        }
+        std::fs::write(dir.join("session.json"), Value::obj(meta).to_string_pretty())
+            .with_context(|| format!("writing {}", dir.join("session.json").display()))?;
+        let wr = |name: &str, t: &Tensor| write_bten(dir.join(name), t);
+        wr(
+            "state_axis.bten",
+            &Tensor::F64 { shape: vec![self.axis.len()], data: self.axis.clone() },
+        )?;
+        wr("state_beta.bten", &Tensor::F32 { shape: vec![p, self.m], data: self.beta.clone() })?;
+        wr(
+            "state_sigma.bten",
+            &Tensor::F64 { shape: vec![self.m], data: self.sigma_denom.clone() },
+        )?;
+        wr("state_acc.bten", &Tensor::F64 { shape: vec![self.m], data: self.acc.clone() })?;
+        wr("state_ring.bten", &Tensor::F32 { shape: vec![h, self.m], data: self.ring.clone() })?;
+        wr("state_momax.bten", &Tensor::F32 { shape: vec![self.m], data: self.momax.clone() })?;
+        wr("state_first.bten", &Tensor::I32 { shape: vec![self.m], data: self.first.clone() })?;
+        wr(
+            "state_last_valid.bten",
+            &Tensor::F32 { shape: vec![self.m], data: self.last_valid.clone() },
+        )?;
+        Ok(())
+    }
+
+    /// Resume a session from a state directory written by
+    /// [`MonitorSession::save`]. `threads` tunes this process only;
+    /// the analysis state is taken verbatim from disk (the design-side
+    /// matrices are rebuilt deterministically from the saved axis).
+    pub fn load(dir: impl AsRef<Path>, threads: usize) -> Result<Self> {
+        let dir = dir.as_ref();
+        let meta = json::parse_file(dir.join("session.json"))
+            .with_context(|| format!("loading session from {}", dir.display()))?;
+        let version = meta.get("version")?.as_f64()?;
+        ensure!(version == STATE_VERSION, "unsupported session state version {version}");
+        let n_seen = meta.get("n_seen")?.as_usize()?;
+        let m = meta.get("m")?.as_usize()?;
+        let params = BfastParams::with_lambda(
+            n_seen,
+            meta.get("n_hist")?.as_usize()?,
+            meta.get("h")?.as_usize()?,
+            meta.get("k")?.as_usize()?,
+            meta.get("freq")?.as_f64()?,
+            meta.get("alpha")?.as_f64()?,
+            meta.get("lambda")?.as_f64()?,
+        )?;
+        let cfg = MonitorConfig {
+            m_chunk: meta.get("m_chunk")?.as_usize()?.max(1),
+            threads: threads.max(1),
+            fill_missing: meta.get("fill_missing")?.as_bool()?,
+        };
+        let (width, height) = match (meta.try_get("width"), meta.try_get("height")) {
+            (Some(w), Some(h)) => (Some(w.as_usize()?), Some(h.as_usize()?)),
+            _ => (None, None),
+        };
+        let rd = |name: &str, want: &[usize]| -> Result<Tensor> {
+            let t = read_bten(dir.join(name))?;
+            ensure!(
+                t.shape() == want,
+                "{name}: state tensor is {:?}, session expects {:?}",
+                t.shape(),
+                want
+            );
+            Ok(t)
+        };
+        let p = params.p();
+        let (n_hist, h) = (params.n_hist, params.h);
+        let axis = rd("state_axis.bten", &[n_seen])?.as_f64()?.to_vec();
+        ensure!(
+            axis.windows(2).all(|w| w[1] > w[0]),
+            "saved time axis is not strictly increasing"
+        );
+        let beta = rd("state_beta.bten", &[p, m])?.as_f32()?.to_vec();
+        let sigma_denom = rd("state_sigma.bten", &[m])?.as_f64()?.to_vec();
+        let acc = rd("state_acc.bten", &[m])?.as_f64()?.to_vec();
+        let ring = rd("state_ring.bten", &[h, m])?.as_f32()?.to_vec();
+        let momax = rd("state_momax.bten", &[m])?.as_f32()?.to_vec();
+        let first = rd("state_first.bten", &[m])?.as_i32()?.to_vec();
+        let last_valid = rd("state_last_valid.bten", &[m])?.as_f32()?.to_vec();
+        // design-side matrices are pure functions of (axis, freq, k)
+        let x = design::design_matrix(&axis, params.freq, params.k);
+        let m_f32 = design::history_pinv(&x, n_hist)?.to_f32();
+        let xt = x.transpose().to_f32();
+        Ok(Self {
+            params,
+            cfg,
+            m,
+            width,
+            height,
+            axis,
+            xt,
+            m_f32,
+            beta,
+            sigma_denom,
+            acc,
+            ring,
+            momax,
+            first,
+            last_valid,
+        })
+    }
+}
+
+/// Scene-wide ROC pre-pass: scan every pixel's candidate history with
+/// the reverse-ordered CUSUM and pick the stable-history start at the
+/// given quantile of the per-pixel starts (1.0 = the most conservative
+/// start that satisfies every pixel). Gaps are filled within the
+/// history window first. The scan is advisory: apply it with
+/// [`apply_roc`] before starting a session.
+pub fn roc_select(
+    stack: &TimeStack,
+    params: &BfastParams,
+    quantile: f64,
+    threads: usize,
+) -> Result<RocSelection> {
+    params.validate()?;
+    ensure!(
+        stack.n_times() >= params.n_hist,
+        "stack has {} layers, history needs {}",
+        stack.n_times(),
+        params.n_hist
+    );
+    ensure!((0.0..=1.0).contains(&quantile), "quantile must be in [0, 1], got {quantile}");
+    let n = params.n_hist;
+    let xh = design::design_matrix(&stack.time_axis[..n], params.freq, params.k);
+    let scanner = RocScanner::new(&xh, params.alpha)?;
+    let m = stack.n_pixels();
+    let starts = threadpool::parallel_map(m, threads.max(1), |px| {
+        let mut hist: Vec<f32> = (0..n).map(|t| stack.layer(t)[px]).collect();
+        fill::fill_series(&mut hist);
+        let y: Vec<f64> = hist.iter().map(|&v| v as f64).collect();
+        // length always matches the scanner; NaN histories scan to 0
+        scanner.scan(&y).unwrap_or(0)
+    });
+    let chosen = if m == 0 {
+        0
+    } else {
+        let mut sorted = starts.clone();
+        sorted.sort_unstable();
+        sorted[((quantile * (m - 1) as f64).round() as usize).min(m - 1)]
+    };
+    Ok(RocSelection { starts, chosen })
+}
+
+/// Apply a ROC selection: drop the unstable leading layers and shrink
+/// the history accordingly (λ is re-derived from α for the new h/n).
+/// Errors when the trimmed history can no longer support the analysis
+/// (h or p exceed the stable span).
+pub fn apply_roc(
+    stack: &TimeStack,
+    params: &BfastParams,
+    start: usize,
+) -> Result<(TimeStack, BfastParams)> {
+    if start == 0 {
+        return Ok((stack.clone(), params.clone()));
+    }
+    ensure!(
+        start < params.n_hist,
+        "ROC start {start} consumes the whole {}-layer history",
+        params.n_hist
+    );
+    let n_new = params.n_hist - start;
+    ensure!(
+        params.h <= n_new,
+        "ROC-trimmed history ({n_new} layers) is shorter than the MOSUM bandwidth h={}; \
+         re-run with a smaller h",
+        params.h
+    );
+    ensure!(
+        n_new > params.p(),
+        "ROC-trimmed history ({n_new} layers) cannot fit p={} regressors",
+        params.p()
+    );
+    let trimmed = stack.slice_layers(start)?;
+    let new_params = BfastParams::new(
+        params.n_total - start,
+        n_new,
+        params.h,
+        params.k,
+        params.freq,
+        params.alpha,
+    )
+    .context("ROC-trimmed analysis parameters")?;
+    Ok((trimmed, new_params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap()
+    }
+
+    fn scene(m: usize, seed: u64) -> crate::synth::artificial::GeneratedData {
+        ArtificialDataset::new(params(), m, seed).generate()
+    }
+
+    #[test]
+    fn start_validates_shapes() {
+        let p = params();
+        let data = scene(16, 1);
+        let short = data.stack.prefix(40).unwrap();
+        assert!(MonitorSession::start(&short, &p, MonitorConfig::default()).is_err());
+        let bad_cfg = MonitorConfig { m_chunk: 0, ..Default::default() };
+        assert!(MonitorSession::start(&data.stack, &p, bad_cfg).is_err());
+    }
+
+    #[test]
+    fn ingest_validates_inputs() {
+        let p = params();
+        let data = scene(8, 2);
+        let init = data.stack.prefix(40).unwrap();
+        let p40 = BfastParams::with_lambda(40, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+        let mut s = MonitorSession::start(&init, &p40, MonitorConfig::default()).unwrap();
+        assert!(s.ingest(41.0, &[0.0; 3]).is_err()); // wrong arity
+        assert!(s.ingest(40.0, &[0.0; 8]).is_err()); // does not extend
+        let d = s.ingest(41.0, data.stack.layer(40)).unwrap();
+        assert_eq!(d.layer, 40);
+        assert_eq!(d.monitor_index, 4);
+        assert_eq!(s.n_seen(), 41);
+    }
+
+    #[test]
+    fn ingest_stack_skips_seen_layers() {
+        let p = params();
+        let data = scene(12, 3);
+        let init = data.stack.prefix(40).unwrap();
+        let p40 = BfastParams::with_lambda(40, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+        let mut s = MonitorSession::start(&init, &p40, MonitorConfig::default()).unwrap();
+        let deltas = s.ingest_stack(&data.stack).unwrap();
+        assert_eq!(deltas.len(), 8); // 48 layers, 40 already seen
+        assert_eq!(s.n_seen(), 48);
+        // feeding the same archive again is a no-op
+        assert!(s.ingest_stack(&data.stack).unwrap().is_empty());
+    }
+
+    #[test]
+    fn save_load_roundtrip_restores_state() {
+        let p = params();
+        let data = scene(32, 4);
+        let s = MonitorSession::start(&data.stack, &p, MonitorConfig::default()).unwrap();
+        let dir = std::env::temp_dir().join(format!("bfast_mon_{}", std::process::id()));
+        s.save(&dir).unwrap();
+        let back = MonitorSession::load(&dir, 2).unwrap();
+        assert_eq!(back.n_seen(), s.n_seen());
+        assert_eq!(back.n_pixels(), s.n_pixels());
+        assert_eq!(back.axis, s.axis);
+        assert_eq!(back.beta, s.beta);
+        assert_eq!(back.sigma_denom, s.sigma_denom);
+        assert_eq!(back.acc, s.acc);
+        assert_eq!(back.ring, s.ring);
+        assert_eq!(back.momax, s.momax);
+        assert_eq!(back.first, s.first);
+        assert_eq!(back.xt, s.xt);
+        assert_eq!(back.m_f32, s.m_f32);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roc_select_trims_unstable_history() {
+        // level shift inside the candidate history → positive start
+        let p = BfastParams::with_lambda(140, 120, 24, 1, 12.0, 0.05, 3.0).unwrap();
+        let mut stack = TimeStack::zeros(140, 4);
+        let mut nrm = crate::prng::Normal::from_seed(5);
+        for px in 0..4 {
+            for t in 0..140 {
+                let base = if t < 40 { 2.0 } else { 0.0 };
+                let v = base
+                    + 0.1 * (2.0 * std::f64::consts::PI * t as f64 / 12.0).sin()
+                    + 0.03 * nrm.sample();
+                stack.data_mut()[t * 4 + px] = v as f32;
+            }
+        }
+        let sel = roc_select(&stack, &p, 1.0, 2).unwrap();
+        assert_eq!(sel.starts.len(), 4);
+        assert!(sel.chosen > 20 && sel.chosen < 70, "chosen {}", sel.chosen);
+        let (trimmed, np) = apply_roc(&stack, &p, sel.chosen).unwrap();
+        assert_eq!(trimmed.n_times(), 140 - sel.chosen);
+        assert_eq!(np.n_hist, 120 - sel.chosen);
+        assert_eq!(np.h, 24);
+        // a selection that leaves too little history errors out
+        assert!(apply_roc(&stack, &p, 119).is_err());
+        assert!(apply_roc(&stack, &p, 120).is_err());
+    }
+
+    #[test]
+    fn stable_scene_roc_keeps_everything() {
+        // no injected break anywhere — the candidate history is stable
+        let p = params();
+        let data = ArtificialDataset::new(p.clone(), 6, 6).with_noise(0.01, 0.0).generate();
+        let sel = roc_select(&data.stack, &p, 1.0, 2).unwrap();
+        assert_eq!(sel.chosen, 0);
+        let (same, np) = apply_roc(&data.stack, &p, 0).unwrap();
+        assert_eq!(same.n_times(), data.stack.n_times());
+        assert_eq!(np.n_hist, p.n_hist);
+    }
+}

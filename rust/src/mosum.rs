@@ -48,10 +48,32 @@ pub fn log_plus(x: f64) -> f64 {
 
 /// Boundary b_t = λ √(log₊ (t/n)) for t = n+1..N (Eq. 4).
 pub fn boundary(params: &BfastParams) -> Vec<f64> {
+    (0..params.n_monitor()).map(|ti| boundary_at(params, ti)).collect()
+}
+
+/// One Eq. (4) boundary value at 0-based monitor index `ti`
+/// (i.e. t = n + 1 + ti). Incremental consumers — the monitor
+/// session extends the boundary one layer at a time — must agree
+/// bit-for-bit with [`boundary`], so both share this kernel.
+pub fn boundary_at(params: &BfastParams, ti: usize) -> f64 {
     let n = params.n_hist as f64;
-    (params.n_hist + 1..=params.n_total)
-        .map(|t| params.lambda * log_plus(t as f64 / n).sqrt())
-        .collect()
+    let t = params.n_hist + 1 + ti;
+    params.lambda * log_plus(t as f64 / n).sqrt()
+}
+
+/// One rolling MOSUM update in the fused engine's mixed precision:
+/// the f64 accumulator absorbs the f32 residual difference
+/// (`acc += add − sub`, Alg. 3 lines 22–27) and the normalised value
+/// is truncated to f32 exactly as the batched engines store it.
+/// `denom` is σ̂√n. This is the per-pixel form of the update inside
+/// `cpu::FusedCpuBfast`'s vectorised MOSUM phase; the agreement is
+/// pinned bit-for-bit by the monitor-session equivalence tests, which
+/// is what lets `monitor::MonitorSession` advance one layer at a time
+/// without refitting.
+#[inline]
+pub fn rolling_step(acc: &mut f64, denom: f64, add: f32, sub: f32) -> f32 {
+    *acc += add as f64 - sub as f64;
+    (*acc / denom) as f32
 }
 
 /// Banded window-sum operator W ∈ R^{(N−n)×N}, row-major f32:
@@ -172,6 +194,32 @@ mod tests {
         let none = scan_breaks(&[0.1, 0.2], &[2.0, 2.0]);
         assert!(!none.has_break);
         assert_eq!(none.first, -1);
+    }
+
+    #[test]
+    fn boundary_at_matches_boundary() {
+        let p = BfastParams::with_lambda(300, 100, 50, 3, 23.0, 0.05, 2.5).unwrap();
+        let b = boundary(&p);
+        for (ti, &v) in b.iter().enumerate() {
+            assert_eq!(v, boundary_at(&p, ti), "ti={ti}");
+        }
+    }
+
+    #[test]
+    fn rolling_step_tracks_window_sums() {
+        let p = params();
+        let mut nrm = Normal::from_seed(7);
+        let r: Vec<f32> = (0..p.n_total).map(|_| nrm.sample() as f32).collect();
+        let denom = 3.7f64;
+        // start from the initial window ending at t = n+1
+        let (n, h) = (p.n_hist, p.h);
+        let mut acc: f64 = r[n + 1 - h..=n].iter().map(|&v| v as f64).sum();
+        for t in n + 1..p.n_total {
+            let mo = rolling_step(&mut acc, denom, r[t], r[t - h]);
+            let direct: f64 = r[t + 1 - h..=t].iter().map(|&v| v as f64).sum();
+            assert!((acc - direct).abs() < 1e-9, "t={t}: {acc} vs {direct}");
+            assert_eq!(mo, (acc / denom) as f32);
+        }
     }
 
     #[test]

@@ -162,6 +162,66 @@ impl TimeStack {
         }
     }
 
+    /// Append one acquisition layer (all pixels at a new time `t`).
+    /// `t` must extend the time axis strictly; `layer` holds one value
+    /// per pixel. This is the monitoring-session growth path: only the
+    /// monitor period grows, one layer per satellite revisit.
+    pub fn push_layer(&mut self, t: f64, layer: &[f32]) -> Result<()> {
+        ensure!(
+            layer.len() == self.n_pixels,
+            "layer has {} values, stack has {} pixels",
+            layer.len(),
+            self.n_pixels
+        );
+        if let Some(&last) = self.time_axis.last() {
+            ensure!(t > last, "layer time {t} does not extend the axis (last = {last})");
+        }
+        self.data.extend_from_slice(layer);
+        self.time_axis.push(t);
+        self.n_times += 1;
+        Ok(())
+    }
+
+    /// The first `n_times` layers as a new stack (copies) — the
+    /// "archive as of layer k" view used to compare incremental
+    /// monitoring against fresh full runs.
+    pub fn prefix(&self, n_times: usize) -> Result<TimeStack> {
+        ensure!(
+            n_times >= 1 && n_times <= self.n_times,
+            "prefix of {} layers from a {}-layer stack",
+            n_times,
+            self.n_times
+        );
+        Ok(Self {
+            n_times,
+            n_pixels: self.n_pixels,
+            width: self.width,
+            height: self.height,
+            time_axis: self.time_axis[..n_times].to_vec(),
+            data: self.data[..n_times * self.n_pixels].to_vec(),
+        })
+    }
+
+    /// Drop the first `from` layers (copies) — ROC-trimmed history:
+    /// when the stable-history scan finds a break inside the candidate
+    /// history, the layers before it are discarded entirely.
+    pub fn slice_layers(&self, from: usize) -> Result<TimeStack> {
+        ensure!(
+            from < self.n_times,
+            "cannot drop {} of {} layers",
+            from,
+            self.n_times
+        );
+        Ok(Self {
+            n_times: self.n_times - from,
+            n_pixels: self.n_pixels,
+            width: self.width,
+            height: self.height,
+            time_axis: self.time_axis[from..].to_vec(),
+            data: self.data[from * self.n_pixels..].to_vec(),
+        })
+    }
+
     /// View of a pixel range as a new stack (copies).
     pub fn slice_pixels(&self, start: usize, end: usize) -> TimeStack {
         let w = end - start;
@@ -279,6 +339,40 @@ mod tests {
         assert!(s.clone().with_time_axis(vec![1.0, 2.0, 3.0, 4.0]).is_ok());
         assert!(s.clone().with_time_axis(vec![1.0, 2.0]).is_err());
         assert!(s.with_time_axis(vec![1.0, 3.0, 2.0, 4.0]).is_err());
+    }
+
+    #[test]
+    fn push_layer_grows_stack() {
+        let mut s = TimeStack::zeros(2, 3);
+        s.push_layer(3.0, &[7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(s.n_times(), 3);
+        assert_eq!(s.layer(2), &[7.0, 8.0, 9.0]);
+        assert_eq!(s.time_axis, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.series(1), vec![0.0, 0.0, 8.0]);
+        // wrong arity and non-increasing time rejected
+        assert!(s.push_layer(4.0, &[1.0]).is_err());
+        assert!(s.push_layer(3.0, &[1.0, 2.0, 3.0]).is_err());
+        assert!(s.push_layer(2.5, &[1.0, 2.0, 3.0]).is_err());
+    }
+
+    #[test]
+    fn prefix_and_slice_layers() {
+        let mut s = TimeStack::zeros(4, 2).with_geometry(2, 1).unwrap();
+        for (i, v) in s.data_mut().iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let p = s.prefix(2).unwrap();
+        assert_eq!(p.n_times(), 2);
+        assert_eq!(p.time_axis, vec![1.0, 2.0]);
+        assert_eq!(p.data(), &s.data()[..4]);
+        assert_eq!((p.width, p.height), (Some(2), Some(1)));
+        let tail = s.slice_layers(3).unwrap();
+        assert_eq!(tail.n_times(), 1);
+        assert_eq!(tail.time_axis, vec![4.0]);
+        assert_eq!(tail.data(), &s.data()[6..]);
+        assert!(s.prefix(0).is_err());
+        assert!(s.prefix(5).is_err());
+        assert!(s.slice_layers(4).is_err());
     }
 
     #[test]

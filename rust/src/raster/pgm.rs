@@ -1,10 +1,12 @@
-//! Grayscale heatmap export (binary PGM, P5).
+//! Grayscale heatmap import/export (binary PGM, P5).
 //!
-//! Used to render the paper's image figures from our outputs: Fig. 7
-//! (scene snapshots) and Fig. 9 (max |MOSUM| heatmap). PGM needs no
-//! codec dependencies and opens everywhere.
+//! Used to render the paper's image figures from our outputs — Fig. 7
+//! (scene snapshots) and Fig. 9 (max |MOSUM| heatmap) — and, on the
+//! read side, to ingest single acquisition layers into a monitoring
+//! session (`bfast monitor`). PGM needs no codec dependencies and
+//! opens everywhere.
 
-use crate::error::{Context, Result};
+use crate::error::{bail, ensure, Context, Result};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
@@ -66,6 +68,68 @@ pub fn write_pgm_autoscale(
     Ok((lo, hi))
 }
 
+/// Read a binary PGM (P5, 8-bit) as one raster layer, mapping pixel
+/// values linearly `[0, maxval] → [0, 1]`. Returns
+/// `(width, height, values)` row-major. This is the inverse of
+/// [`write_pgm`] up to the 8-bit quantisation (NaN is not
+/// representable in PGM; gaps must come in via `.bsq`).
+pub fn read_pgm(path: impl AsRef<Path>) -> Result<(usize, usize, Vec<f32>)> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    ensure!(bytes.starts_with(b"P5"), "{}: not a binary PGM (P5)", path.display());
+    // Header: "P5" <ws> width <ws> height <ws> maxval <single ws> data.
+    // Comments (# …) may appear between tokens.
+    let mut pos = 2usize;
+    let mut fields = [0usize; 3];
+    for field in fields.iter_mut() {
+        // skip whitespace and comment lines
+        loop {
+            while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < bytes.len() && bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        let start = pos;
+        while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+            pos += 1;
+        }
+        ensure!(pos > start, "{}: malformed PGM header", path.display());
+        *field = std::str::from_utf8(&bytes[start..pos])
+            .expect("ascii digits")
+            .parse()
+            .map_err(|_| crate::err!("{}: bad PGM header number", path.display()))?;
+    }
+    let [width, height, maxval] = fields;
+    ensure!(width >= 1 && height >= 1, "{}: empty PGM", path.display());
+    if maxval == 0 || maxval > 255 {
+        bail!("{}: unsupported maxval {maxval} (8-bit only)", path.display());
+    }
+    // exactly one whitespace byte separates maxval from the payload
+    ensure!(
+        pos < bytes.len() && bytes[pos].is_ascii_whitespace(),
+        "{}: truncated PGM",
+        path.display()
+    );
+    pos += 1;
+    let payload = &bytes[pos..];
+    ensure!(
+        payload.len() == width * height,
+        "{}: expected {} pixels, found {} bytes",
+        path.display(),
+        width * height,
+        payload.len()
+    );
+    let scale = 1.0f32 / maxval as f32;
+    Ok((width, height, payload.iter().map(|&b| b as f32 * scale).collect()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +144,31 @@ mod tests {
         assert!(text.starts_with("P5\n2 2\n"));
         let pixels = &bytes[bytes.len() - 4..];
         assert_eq!(pixels, &[0, 128, 255, 0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_roundtrips_written_pgm() {
+        let path = std::env::temp_dir().join(format!("bfast_pgm_rt_{}.pgm", std::process::id()));
+        let vals = vec![0.0f32, 0.25, 0.5, 0.75, 1.0, 0.1];
+        write_pgm(&path, &vals, 3, 2, 0.0, 1.0).unwrap();
+        let (w, h, back) = read_pgm(&path).unwrap();
+        assert_eq!((w, h), (3, 2));
+        assert_eq!(back.len(), 6);
+        for (a, b) in back.iter().zip(&vals) {
+            // 8-bit quantisation: within half a grey level
+            assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("bfast_pgm_bad_{}.pgm", std::process::id()));
+        std::fs::write(&path, b"P6\n1 1\n255\n.").unwrap();
+        assert!(read_pgm(&path).is_err());
+        std::fs::write(&path, b"P5\n2 2\n255\n..").unwrap(); // short payload
+        assert!(read_pgm(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 

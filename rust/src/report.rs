@@ -1,7 +1,9 @@
 //! Experiment report emitters — CSV + markdown tables written under
-//! `results/`, consumed by EXPERIMENTS.md.
+//! `results/`, consumed by EXPERIMENTS.md — plus the monitoring
+//! session's per-layer delta summary.
 
 use crate::error::{Context, Result};
+use crate::monitor::IngestDelta;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
@@ -98,6 +100,32 @@ impl Table {
     }
 }
 
+/// Summarise a monitoring session's ingests as a table: one row per
+/// layer with its acquisition time, monitor index, newly-broken pixel
+/// count and the running break total/fraction.
+pub fn monitor_delta_table(deltas: &[IngestDelta], n_pixels: usize) -> Table {
+    let mut t = Table::new(
+        "monitor ingest deltas",
+        &["layer", "t", "monitor_idx", "new_breaks", "total_breaks", "break_pct"],
+    );
+    for d in deltas {
+        let pct = if n_pixels > 0 {
+            100.0 * d.total_breaks as f64 / n_pixels as f64
+        } else {
+            0.0
+        };
+        t.row(vec![
+            d.layer.to_string(),
+            Table::num(d.t),
+            d.monitor_index.to_string(),
+            d.new_breaks.len().to_string(),
+            d.total_breaks.to_string(),
+            format!("{pct:.2}"),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +169,32 @@ mod tests {
     fn arity_checked() {
         let mut t = t();
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn delta_table_renders_rows() {
+        let deltas = vec![
+            IngestDelta {
+                layer: 40,
+                t: 41.0,
+                monitor_index: 4,
+                new_breaks: vec![1, 5, 9],
+                total_breaks: 3,
+            },
+            IngestDelta {
+                layer: 41,
+                t: 42.0,
+                monitor_index: 5,
+                new_breaks: vec![],
+                total_breaks: 3,
+            },
+        ];
+        let t = monitor_delta_table(&deltas, 100);
+        assert_eq!(t.rows.len(), 2);
+        let con = t.to_console();
+        assert!(con.contains("monitor ingest deltas"));
+        assert!(con.contains("3.00"), "{con}");
+        let csv = t.to_csv();
+        assert!(csv.starts_with("layer,t,monitor_idx,new_breaks,total_breaks,break_pct"));
     }
 }

@@ -1,5 +1,6 @@
-//! `.bten` tensor container reader — golden-vector interchange with
-//! the python oracle (written by `aot.py --golden`).
+//! `.bten` tensor container reader/writer — golden-vector interchange
+//! with the python oracle (written by `aot.py --golden` and
+//! `golden_fixtures.py`) and the monitor session's persisted state.
 //!
 //! Layout: `b"BTEN" | u8 dtype (0=f32, 1=i32, 2=f64) | u8 ndim |
 //! ndim × u32 LE dims | raw LE data`.
@@ -38,6 +39,77 @@ impl Tensor {
             _ => bail!("tensor is not i32"),
         }
     }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match self {
+            Tensor::F64 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f64"),
+        }
+    }
+
+    fn dtype_code(&self) -> u8 {
+        match self {
+            Tensor::F32 { .. } => 0,
+            Tensor::I32 { .. } => 1,
+            Tensor::F64 { .. } => 2,
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+            Tensor::F64 { data, .. } => data.len(),
+        }
+    }
+}
+
+/// Write one `.bten` file (exact round-trip through [`read_bten`],
+/// including NaN payloads — monitor state relies on this).
+pub fn write_bten(path: impl AsRef<Path>, tensor: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    let shape = tensor.shape();
+    let count: usize = shape.iter().product();
+    ensure!(
+        count == tensor.element_count(),
+        "tensor shape {:?} does not match {} elements",
+        shape,
+        tensor.element_count()
+    );
+    ensure!(shape.len() <= u8::MAX as usize, "too many dims");
+    let mut bytes = Vec::with_capacity(6 + 4 * shape.len() + count * 8);
+    bytes.extend_from_slice(b"BTEN");
+    bytes.push(tensor.dtype_code());
+    bytes.push(shape.len() as u8);
+    for &d in shape {
+        ensure!(d <= u32::MAX as usize, "dim {d} exceeds u32");
+        bytes.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    match tensor {
+        Tensor::F32 { data, .. } => {
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tensor::I32 { data, .. } => {
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Tensor::F64 { data, .. } => {
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
 }
 
 /// Read one `.bten` file.
@@ -119,6 +191,33 @@ mod tests {
         let d: Vec<u8> = [2.5f64].iter().flat_map(|v| v.to_le_bytes()).collect();
         write_case(&p, 2, &[1], &d);
         assert_eq!(read_bten(&p).unwrap().as_f64_vec(), vec![2.5]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn write_read_roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("bfast_bten_rt_{}.bten", std::process::id()));
+        let f = Tensor::F32 { shape: vec![2, 3], data: vec![1.5, -0.0, f32::NAN, 3.0, 4.0, 5.0] };
+        write_bten(&p, &f).unwrap();
+        let back = read_bten(&p).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        let data = back.as_f32().unwrap();
+        for (a, b) in data.iter().zip(f.as_f32().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 payload must round-trip bitwise");
+        }
+        let i = Tensor::I32 { shape: vec![3], data: vec![-1, 0, i32::MAX] };
+        write_bten(&p, &i).unwrap();
+        assert_eq!(read_bten(&p).unwrap().as_i32().unwrap(), &[-1, 0, i32::MAX]);
+        let d = Tensor::F64 { shape: vec![2], data: vec![f64::NAN, 2.25] };
+        write_bten(&p, &d).unwrap();
+        let back = read_bten(&p).unwrap();
+        let vals = back.as_f64().unwrap();
+        assert!(vals[0].is_nan());
+        assert_eq!(vals[1], 2.25);
+        // shape mismatch rejected
+        let bad = Tensor::F32 { shape: vec![4], data: vec![0.0; 3] };
+        assert!(write_bten(&p, &bad).is_err());
         std::fs::remove_file(p).ok();
     }
 

@@ -89,6 +89,69 @@ impl ArtificialDataset {
     }
 }
 
+impl ArtificialDataset {
+    /// Stream the same dataset one acquisition layer at a time — the
+    /// near-real-time shape a monitoring session consumes. Layer `t`
+    /// of the stream is bit-identical to row `t` of
+    /// [`ArtificialDataset::generate`]'s stack (each pixel draws from
+    /// the same per-pixel PRNG stream, in the same order), so an
+    /// ingest-driven analysis can be checked against the batch one.
+    pub fn stream(&self) -> LayerStream {
+        let n = self.params.n_total;
+        let f = self.params.freq;
+        let season: Vec<f64> = (1..=n)
+            .map(|t| self.amplitude * (2.0 * std::f64::consts::PI * t as f64 / f).sin())
+            .collect();
+        LayerStream {
+            rngs: (0..self.m)
+                .map(|px| Normal::new(Pcg32::with_stream(self.seed, px as u64)))
+                .collect(),
+            season,
+            break_from: ((1.0 - self.break_tail) * n as f64).floor() as usize,
+            noise_sd: self.noise_sd,
+            break_shift: self.break_shift,
+            t: 0,
+        }
+    }
+}
+
+/// Iterator over `(time, layer)` pairs emitted by
+/// [`ArtificialDataset::stream`]; times follow the regular 1..=N axis.
+pub struct LayerStream {
+    rngs: Vec<Normal>,
+    season: Vec<f64>,
+    break_from: usize,
+    noise_sd: f64,
+    break_shift: f64,
+    t: usize,
+}
+
+impl Iterator for LayerStream {
+    type Item = (f64, Vec<f32>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.t >= self.season.len() {
+            return None;
+        }
+        let t = self.t;
+        let sv = self.season[t];
+        let layer: Vec<f32> = self
+            .rngs
+            .iter_mut()
+            .enumerate()
+            .map(|(px, nrm)| {
+                let mut v = sv + self.noise_sd * nrm.sample();
+                if px % 2 == 0 && t >= self.break_from {
+                    v += self.break_shift;
+                }
+                v as f32
+            })
+            .collect();
+        self.t += 1;
+        Some(((t + 1) as f64, layer))
+    }
+}
+
 impl GeneratedData {
     /// Detection quality against the generator's ground truth.
     pub fn score(&self, breaks: &[i32]) -> (f64, f64) {
@@ -159,6 +222,27 @@ mod tests {
         let min = s.iter().cloned().fold(f32::MAX, f32::min);
         assert!((max as f64 - 0.05).abs() < 0.01, "max {max}");
         assert!((min as f64 + 0.05).abs() < 0.01, "min {min}");
+    }
+
+    #[test]
+    fn stream_matches_batch_generation_bitwise() {
+        let d = small();
+        let g = d.generate();
+        let mut n_layers = 0;
+        for (ti, (t, layer)) in d.stream().enumerate() {
+            assert_eq!(t, g.stack.time_axis[ti]);
+            assert_eq!(layer.len(), d.m);
+            for (px, &v) in layer.iter().enumerate() {
+                let want = g.stack.layer(ti)[px];
+                assert_eq!(
+                    v.to_bits(),
+                    want.to_bits(),
+                    "layer {ti} px {px}: {v} vs {want}"
+                );
+            }
+            n_layers += 1;
+        }
+        assert_eq!(n_layers, d.params.n_total);
     }
 
     #[test]

@@ -158,6 +158,37 @@ fn prop_emulated_pipeline_equals_cpu_engine() {
 }
 
 #[test]
+fn break_map_deterministic_across_scheduling_grid() {
+    // The break map must be a pure function of (scene, params): a full
+    // grid of queue_depth × staging_threads × backend m_chunk settings
+    // on the same synthetic scene yields bitwise-identical results —
+    // chunking, padding, backpressure and out-of-order completion are
+    // scheduling details, never arithmetic ones.
+    let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+    let data = ArtificialDataset::new(params.clone(), 700, 11).generate();
+    let run = |queue_depth: usize, staging_threads: usize, m_chunk: usize| {
+        let backend = Box::new(EmulatedDevice::new().with_m_chunk(m_chunk));
+        let cfg = RunnerConfig { queue_depth, staging_threads, ..Default::default() };
+        let mut runner = BfastRunner::new(backend, cfg).unwrap();
+        runner.run(&data.stack, &params).unwrap().map
+    };
+    let reference = run(2, 2, 1024);
+    assert!(reference.break_count() > 0, "scene must exercise both outcomes");
+    assert!(reference.break_count() < reference.len());
+    for &queue_depth in &[1usize, 2, 4] {
+        for &staging_threads in &[1usize, 2, 5] {
+            for &m_chunk in &[1usize, 37, 256, 1024] {
+                let map = run(queue_depth, staging_threads, m_chunk);
+                let ctx = format!("qd={queue_depth} st={staging_threads} mc={m_chunk}");
+                assert_eq!(map.breaks, reference.breaks, "{ctx}: breaks");
+                assert_eq!(map.first, reference.first, "{ctx}: first");
+                assert_eq!(map.momax, reference.momax, "{ctx}: momax");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_fill_idempotent_and_gap_free() {
     property("fill idempotent", 60, |g| {
         let n = g.usize(2..=50);

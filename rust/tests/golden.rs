@@ -1,18 +1,35 @@
 //! Golden-vector tests: every rust implementation against the python
-//! float64 oracle (`python/compile/kernels/ref.py`, exported by
-//! `aot.py --golden` into `artifacts/golden/`).
+//! float64 oracle (`python/compile/kernels/ref.py`).
+//!
+//! Two fixture sources are combined:
+//!
+//! * `tests/data/golden/` — small committed cases emitted by
+//!   `python/compile/golden_fixtures.py` (breaking, stable, gappy).
+//!   These are always present, so the golden suite runs in offline CI
+//!   instead of self-skipping.
+//! * `artifacts/golden/` — the larger vectors from `aot.py --golden`,
+//!   picked up in addition whenever an artifact build exists.
+//!
+//! Gappy cases store `y` raw (NaN gaps included); the oracle ran on
+//! the forward/backward-filled series, so the rust side applies its
+//! own fill first — which also pins that both fills agree. An
+//! entirely-missing pixel must produce the defined no-break result
+//! (breaks=0, first=-1, momax=0) everywhere.
 
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
 use bfast::params::BfastParams;
 use bfast::pixel::{DirectBfast, NaiveBfast};
-use bfast::cpu::FusedCpuBfast;
 use bfast::raster::TimeStack;
 use bfast::runtime::bten::{read_bten, Tensor};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 struct Golden {
+    label: String,
     params: BfastParams,
     t: Vec<f64>,
-    y: Vec<f64>, // (N, m) row-major
+    /// (N, m) row-major, raw — NaN marks missing observations.
+    y: Vec<f64>,
     beta: Vec<f64>,
     mo: Vec<f64>,
     momax: Vec<f64>,
@@ -21,14 +38,14 @@ struct Golden {
     m: usize,
 }
 
-fn load() -> Option<Golden> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden");
-    if !dir.join("case0.json").exists() {
-        eprintln!("SKIP golden tests: run `make artifacts` first");
-        return None;
-    }
-    let meta = bfast::json::parse_file(dir.join("case0.json")).unwrap();
+fn load_case(dir: &Path, idx: usize) -> Golden {
+    let meta = bfast::json::parse_file(dir.join(format!("case{idx}.json"))).unwrap();
     let g = |k: &str| meta.get(k).unwrap().as_f64().unwrap();
+    let name = meta
+        .try_get("name")
+        .and_then(|v| v.as_str().ok())
+        .unwrap_or("unnamed")
+        .to_string();
     let params = BfastParams::with_lambda(
         g("N") as usize,
         g("n") as usize,
@@ -39,9 +56,10 @@ fn load() -> Option<Golden> {
         g("lam"),
     )
     .unwrap();
-    let rd = |name: &str| read_bten(dir.join(format!("case0_{name}.bten"))).unwrap();
+    let rd = |tname: &str| read_bten(dir.join(format!("case{idx}_{tname}.bten"))).unwrap();
     let as_i32 = |t: &Tensor| t.as_i32().unwrap().to_vec();
-    Some(Golden {
+    Golden {
+        label: format!("{}/case{idx} ({name})", dir.display()),
         m: g("m") as usize,
         params,
         t: rd("t").as_f64_vec(),
@@ -51,7 +69,30 @@ fn load() -> Option<Golden> {
         momax: rd("momax").as_f64_vec(),
         breaks: as_i32(&rd("breaks")),
         first: as_i32(&rd("first")),
-    })
+    }
+}
+
+/// All available cases: the committed in-tree fixtures (mandatory)
+/// plus any artifact-backed ones.
+fn load_all() -> Vec<Golden> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut cases = Vec::new();
+    for (dir, required) in
+        [(root.join("tests/data/golden"), true), (root.join("artifacts/golden"), false)]
+    {
+        let mut idx = 0;
+        while dir.join(format!("case{idx}.json")).exists() {
+            cases.push(load_case(&dir, idx));
+            idx += 1;
+        }
+        assert!(
+            !required || idx > 0,
+            "committed golden fixtures missing from {} — run \
+             python3 python/compile/golden_fixtures.py",
+            dir.display()
+        );
+    }
+    cases
 }
 
 fn stack_of(g: &Golden) -> TimeStack {
@@ -62,60 +103,134 @@ fn stack_of(g: &Golden) -> TimeStack {
         .unwrap()
 }
 
+/// Forward/backward fill in f64 (the oracle-side gap handling; the
+/// fixture values are f32-representable so this matches the rust f32
+/// fill exactly).
+fn fill_f64(y: &mut [f64]) {
+    let mut last = f64::NAN;
+    for v in y.iter_mut() {
+        if v.is_nan() {
+            if !last.is_nan() {
+                *v = last;
+            }
+        } else {
+            last = *v;
+        }
+    }
+    let mut next = f64::NAN;
+    for v in y.iter_mut().rev() {
+        if v.is_nan() {
+            if !next.is_nan() {
+                *v = next;
+            }
+        } else {
+            next = *v;
+        }
+    }
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || (a - b).abs() < tol
+}
+
+#[test]
+fn golden_fixtures_present_in_tree() {
+    // the offline suite must never be empty again
+    let n_cases = load_all().len();
+    assert!(n_cases >= 3, "expected >= 3 committed cases, found {n_cases}");
+}
+
 #[test]
 fn direct_matches_python_oracle() {
-    let Some(g) = load() else { return };
-    let d = DirectBfast::new(g.params.clone(), &g.t).unwrap();
-    let n_mon = g.params.n_monitor();
-    for px in 0..g.m {
-        let y: Vec<f64> = (0..g.params.n_total).map(|t| g.y[t * g.m + px]).collect();
-        // beta
-        let beta = d.fit_pixel(&y).unwrap();
-        for (j, &b) in beta.iter().enumerate() {
-            let want = g.beta[j * g.m + px];
-            assert!((b - want).abs() < 1e-8, "px {px} beta[{j}]: {b} vs {want}");
-        }
-        // full mosum process
-        let res = d.run_pixel(&y).unwrap();
-        for i in 0..n_mon {
-            let want = g.mo[i * g.m + px];
+    for g in load_all() {
+        let d = DirectBfast::new(g.params.clone(), &g.t).unwrap();
+        let n_mon = g.params.n_monitor();
+        for px in 0..g.m {
+            let mut y: Vec<f64> =
+                (0..g.params.n_total).map(|t| g.y[t * g.m + px]).collect();
+            fill_f64(&mut y);
+            // beta
+            let beta = d.fit_pixel(&y).unwrap();
+            for (j, &b) in beta.iter().enumerate() {
+                let want = g.beta[j * g.m + px];
+                assert!(
+                    close(b, want, 1e-8),
+                    "{} px {px} beta[{j}]: {b} vs {want}",
+                    g.label
+                );
+            }
+            // full mosum process
+            let res = d.run_pixel(&y).unwrap();
+            for i in 0..n_mon {
+                let want = g.mo[i * g.m + px];
+                assert!(
+                    close(res.mosum[i], want, 1e-8),
+                    "{} px {px} mo[{i}]: {} vs {want}",
+                    g.label,
+                    res.mosum[i]
+                );
+            }
+            assert_eq!(
+                res.scan.has_break as i32, g.breaks[px],
+                "{} px {px} break",
+                g.label
+            );
+            assert_eq!(res.scan.first, g.first[px], "{} px {px} first", g.label);
             assert!(
-                (res.mosum[i] - want).abs() < 1e-8,
-                "px {px} mo[{i}]: {} vs {want}",
-                res.mosum[i]
+                close(res.scan.momax, g.momax[px], 1e-8),
+                "{} px {px} momax: {} vs {}",
+                g.label,
+                res.scan.momax,
+                g.momax[px]
             );
         }
-        assert_eq!(res.scan.has_break as i32, g.breaks[px], "px {px} break");
-        assert_eq!(res.scan.first, g.first[px], "px {px} first");
-        assert!((res.scan.momax - g.momax[px]).abs() < 1e-8, "px {px} momax");
     }
 }
 
 #[test]
 fn naive_matches_python_oracle() {
-    let Some(g) = load() else { return };
-    let stack = stack_of(&g);
-    // f32 storage rounds the inputs; compare breaks/first exactly and
-    // momax with an f32-scale tolerance.
-    let map = NaiveBfast::new(g.params.clone()).run(&stack).unwrap();
-    assert_eq!(map.breaks, g.breaks);
-    assert_eq!(map.first, g.first);
-    for (a, b) in map.momax.iter().zip(&g.momax) {
-        assert!((*a as f64 - b).abs() < 5e-3, "{a} vs {b}");
+    for g in load_all() {
+        let mut stack = stack_of(&g);
+        bfast::fill::fill_stack(&mut stack, 4);
+        // f32 storage rounds intermediates; compare breaks/first
+        // exactly and momax with an f32-scale tolerance.
+        let map = NaiveBfast::new(g.params.clone()).run(&stack).unwrap();
+        assert_eq!(map.breaks, g.breaks, "{} breaks", g.label);
+        assert_eq!(map.first, g.first, "{} first", g.label);
+        for (px, (a, b)) in map.momax.iter().zip(&g.momax).enumerate() {
+            assert!(close(*a as f64, *b, 5e-3), "{} px {px}: {a} vs {b}", g.label);
+        }
     }
 }
 
 #[test]
 fn fused_cpu_matches_python_oracle() {
-    let Some(g) = load() else { return };
-    let stack = stack_of(&g);
-    let (map, _) = FusedCpuBfast::new(g.params.clone(), &g.t)
-        .unwrap()
-        .run(&stack)
-        .unwrap();
-    assert_eq!(map.breaks, g.breaks);
-    assert_eq!(map.first, g.first);
-    for (a, b) in map.momax.iter().zip(&g.momax) {
-        assert!((*a as f64 - b).abs() < 5e-3, "{a} vs {b}");
+    for g in load_all() {
+        let mut stack = stack_of(&g);
+        bfast::fill::fill_stack(&mut stack, 4);
+        let (map, _) = FusedCpuBfast::new(g.params.clone(), &g.t)
+            .unwrap()
+            .run(&stack)
+            .unwrap();
+        assert_eq!(map.breaks, g.breaks, "{} breaks", g.label);
+        assert_eq!(map.first, g.first, "{} first", g.label);
+        for (px, (a, b)) in map.momax.iter().zip(&g.momax).enumerate() {
+            assert!(close(*a as f64, *b, 5e-3), "{} px {px}: {a} vs {b}", g.label);
+        }
+    }
+}
+
+#[test]
+fn emulated_pipeline_matches_python_oracle() {
+    // the full coordinated pipeline, raw (gappy) input: staging fills
+    for g in load_all() {
+        let stack = stack_of(&g);
+        let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+        let res = runner.run(&stack, &g.params).unwrap();
+        assert_eq!(res.map.breaks, g.breaks, "{} breaks", g.label);
+        assert_eq!(res.map.first, g.first, "{} first", g.label);
+        for (px, (a, b)) in res.map.momax.iter().zip(&g.momax).enumerate() {
+            assert!(close(*a as f64, *b, 5e-3), "{} px {px}: {a} vs {b}", g.label);
+        }
     }
 }

@@ -1,0 +1,262 @@
+//! Monitor-session equivalence suite: ingesting layers `n+1..=N` one
+//! at a time must reproduce a fresh coordinated `BfastRunner::run`
+//! **bit-identically at every prefix length** — on clean scenes and on
+//! gappy ones (cloud holes, leading gaps, dead pixels, and a pixel
+//! whose first valid observation only arrives mid-monitoring). Plus:
+//! save/resume exactness and the defined all-NaN no-break contract
+//! across every engine.
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::cpu::FusedCpuBfast;
+use bfast::monitor::{MonitorConfig, MonitorSession};
+use bfast::params::BfastParams;
+use bfast::pixel::{DirectBfast, NaiveBfast};
+use bfast::prng::Pcg32;
+use bfast::raster::{BreakMap, TimeStack};
+use bfast::runtime::EmulatedDevice;
+use bfast::synth::ArtificialDataset;
+
+fn base_params() -> BfastParams {
+    // N = 52 total; sessions prime at 41 and ingest the remaining 11
+    BfastParams::with_lambda(52, 40, 16, 2, 12.0, 0.05, 2.5).unwrap()
+}
+
+fn params_at(base: &BfastParams, n_total: usize) -> BfastParams {
+    BfastParams::with_lambda(
+        n_total,
+        base.n_hist,
+        base.h,
+        base.k,
+        base.freq,
+        base.alpha,
+        base.lambda,
+    )
+    .unwrap()
+}
+
+/// Fresh coordinated run over a prefix of the archive.
+fn fresh_map(stack: &TimeStack, params: &BfastParams, m_chunk: usize) -> BreakMap {
+    let backend = EmulatedDevice::new().with_m_chunk(m_chunk);
+    let mut runner =
+        BfastRunner::new(Box::new(backend), RunnerConfig::default()).unwrap();
+    runner.run(stack, params).unwrap().map
+}
+
+/// Bitwise break-map equality (momax compared as bits so that
+/// identically-NaN statistics also count as equal).
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: momax differs at px {px}: {x} vs {y}"
+        );
+    }
+}
+
+/// Session primed on the first `n0` layers, then fed layer by layer;
+/// after each ingest the break map must equal a fresh coordinated run
+/// over the same prefix, bit for bit.
+fn check_prefix_equivalence(stack: &TimeStack, base: &BfastParams, n0: usize, ctx: &str) {
+    let init = stack.prefix(n0).unwrap();
+    let cfg = MonitorConfig { m_chunk: 32, threads: 3, fill_missing: true };
+    let mut session = MonitorSession::start(&init, &params_at(base, n0), cfg).unwrap();
+    assert_maps_identical(
+        &session.break_map(),
+        &fresh_map(&init, &params_at(base, n0), 64),
+        &format!("{ctx}: prime at {n0}"),
+    );
+    let mut running = session.break_count();
+    for nt in n0 + 1..=stack.n_times() {
+        let delta = session
+            .ingest(stack.time_axis[nt - 1], stack.layer(nt - 1))
+            .unwrap();
+        assert_eq!(delta.layer, nt - 1);
+        assert_eq!(delta.monitor_index, nt - 1 - base.n_hist);
+        let prefix = stack.prefix(nt).unwrap();
+        assert_maps_identical(
+            &session.break_map(),
+            &fresh_map(&prefix, &params_at(base, nt), 64),
+            &format!("{ctx}: prefix {nt}"),
+        );
+        // every break must be announced in exactly one delta — even
+        // retroactive crossings revealed by a late-reporting pixel
+        running += delta.new_breaks.len();
+        assert_eq!(delta.total_breaks, running, "{ctx}: delta accounting at {nt}");
+        assert_eq!(delta.total_breaks, session.break_map().break_count());
+    }
+}
+
+#[test]
+fn clean_scene_ingest_equals_fresh_runs_at_every_prefix() {
+    let base = base_params();
+    let data = ArtificialDataset::new(base.clone(), 137, 21).generate();
+    check_prefix_equivalence(&data.stack, &base, base.n_hist + 1, "clean");
+}
+
+/// Clean scene, but primed on a larger initial archive (mid-monitor).
+#[test]
+fn late_session_start_equals_fresh_runs() {
+    let base = base_params();
+    let data = ArtificialDataset::new(base.clone(), 77, 22).generate();
+    check_prefix_equivalence(&data.stack, &base, 47, "late-start");
+}
+
+/// Gappy scene: random cloud holes, a leading gap, an entirely-dead
+/// pixel and a pixel that only starts reporting mid-monitoring (its
+/// backfilled history must be rebuilt exactly).
+fn gappy_scene(base: &BfastParams, m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(base.clone(), m, seed).generate();
+    let n_t = data.stack.n_times();
+    let mut rng = Pcg32::with_stream(seed, 0x6A77);
+    {
+        let d = data.stack.data_mut();
+        // ~6% random holes on the first half of the pixels
+        for px in 0..m / 2 {
+            for t in 0..n_t {
+                if rng.uniform() < 0.06 {
+                    d[t * m + px] = f32::NAN;
+                }
+            }
+        }
+        // leading gap (backward fill inside the initial archive)
+        for t in 0..6 {
+            d[t * m + (m - 3)] = f32::NAN;
+        }
+        // dead pixel: never reports
+        for t in 0..n_t {
+            d[t * m + (m - 2)] = f32::NAN;
+        }
+        // late pixel: silent until layer 46 (0-based), then reports —
+        // a fresh run backfills its whole history from that value
+        for t in 0..46 {
+            d[t * m + (m - 1)] = f32::NAN;
+        }
+    }
+    data.stack
+}
+
+#[test]
+fn gappy_scene_ingest_equals_fresh_runs_at_every_prefix() {
+    let base = base_params();
+    let stack = gappy_scene(&base, 90, 5);
+    check_prefix_equivalence(&stack, &base, base.n_hist + 1, "gappy");
+}
+
+#[test]
+fn gappy_scene_second_seed_still_equivalent() {
+    let base = base_params();
+    let stack = gappy_scene(&base, 61, 17);
+    check_prefix_equivalence(&stack, &base, base.n_hist + 2, "gappy-2");
+}
+
+#[test]
+fn save_resume_is_bit_exact_mid_stream() {
+    let base = base_params();
+    let stack = gappy_scene(&base, 53, 9);
+    let n0 = base.n_hist + 1;
+    let init = stack.prefix(n0).unwrap();
+    let cfg = MonitorConfig { m_chunk: 16, threads: 2, fill_missing: true };
+    let mut live = MonitorSession::start(&init, &params_at(&base, n0), cfg).unwrap();
+
+    // advance both: `live` runs straight through; `resumed` is saved
+    // and reloaded halfway
+    let dir = std::env::temp_dir().join(format!("bfast_monresume_{}", std::process::id()));
+    let split = 47;
+    for nt in n0 + 1..=split {
+        live.ingest(stack.time_axis[nt - 1], stack.layer(nt - 1)).unwrap();
+    }
+    live.save(&dir).unwrap();
+    let mut resumed = MonitorSession::load(&dir, 4).unwrap();
+    assert_eq!(resumed.n_seen(), split);
+    for nt in split + 1..=stack.n_times() {
+        let (t, layer) = (stack.time_axis[nt - 1], stack.layer(nt - 1));
+        live.ingest(t, layer).unwrap();
+        resumed.ingest(t, layer).unwrap();
+        assert_maps_identical(
+            &live.break_map(),
+            &resumed.break_map(),
+            &format!("resumed vs live at {nt}"),
+        );
+    }
+    // and both equal the fresh run over the full archive
+    assert_maps_identical(
+        &live.break_map(),
+        &fresh_map(&stack, &params_at(&base, stack.n_times()), 64),
+        "resumed stream vs fresh full run",
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn streamed_synth_layers_drive_a_session_to_the_batch_answer() {
+    // generator stream → ingest == generator batch → fresh run
+    let base = base_params();
+    let gen = ArtificialDataset::new(base.clone(), 64, 33);
+    let data = gen.generate();
+    let n0 = base.n_hist + 1;
+    let init = data.stack.prefix(n0).unwrap();
+    let mut session =
+        MonitorSession::start(&init, &params_at(&base, n0), MonitorConfig::default())
+            .unwrap();
+    for (t, layer) in gen.stream().skip(n0) {
+        session.ingest(t, &layer).unwrap();
+    }
+    assert_eq!(session.n_seen(), base.n_total);
+    assert_maps_identical(
+        &session.break_map(),
+        &fresh_map(&data.stack, &base, 1024),
+        "streamed ingest vs batch",
+    );
+}
+
+#[test]
+fn all_nan_pixel_yields_defined_no_break_through_every_engine() {
+    // An entirely-missing series (fill leaves it NaN) must produce
+    // breaks=0, first=-1, momax=0.0 — not NaN-poisoned output — in
+    // every implementation, coordinated or not.
+    let p = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+    let mut data = ArtificialDataset::new(p.clone(), 9, 3).generate();
+    let dead = 4usize;
+    for t in 0..48 {
+        data.stack.data_mut()[t * 9 + dead] = f32::NAN;
+    }
+    let stack = &data.stack;
+
+    let check = |label: &str, breaks: i32, first: i32, momax: f32| {
+        assert_eq!(breaks, 0, "{label}: dead pixel flagged as break");
+        assert_eq!(first, -1, "{label}: dead pixel has a first-crossing");
+        assert!(momax.is_finite(), "{label}: momax poisoned: {momax}");
+        assert_eq!(momax, 0.0, "{label}: momax should be 0, got {momax}");
+    };
+
+    let direct = DirectBfast::new(p.clone(), &stack.time_axis).unwrap().run(stack).unwrap();
+    check("direct", direct.breaks[dead], direct.first[dead], direct.momax[dead]);
+
+    let naive = NaiveBfast::new(p.clone()).run(stack).unwrap();
+    check("naive", naive.breaks[dead], naive.first[dead], naive.momax[dead]);
+
+    let (fused, _) = FusedCpuBfast::new(p.clone(), &stack.time_axis)
+        .unwrap()
+        .run(stack)
+        .unwrap();
+    check("fused cpu", fused.breaks[dead], fused.first[dead], fused.momax[dead]);
+
+    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let res = runner.run(stack, &p).unwrap();
+    check("emulated pipeline", res.map.breaks[dead], res.map.first[dead], res.map.momax[dead]);
+
+    let session = MonitorSession::start(stack, &p, MonitorConfig::default()).unwrap();
+    let map = session.break_map();
+    check("monitor session", map.breaks[dead], map.first[dead], map.momax[dead]);
+
+    // and the healthy pixels still carry finite statistics everywhere
+    for px in 0..9 {
+        if px != dead {
+            assert!(res.map.momax[px].is_finite() && res.map.momax[px] > 0.0);
+        }
+    }
+}
