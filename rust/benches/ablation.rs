@@ -29,7 +29,7 @@ fn main() -> bfast::error::Result<()> {
         println!("kernel ablation SKIPPED: emulated backend (needs pjrt + artifacts)");
     } else {
         for name in ["default", "default_xla"] {
-            let mut runner = BfastRunner::auto(
+            let runner = BfastRunner::auto(
                 "artifacts",
                 RunnerConfig { artifact: Some(name.into()), ..Default::default() },
             )?;
@@ -42,7 +42,7 @@ fn main() -> bfast::error::Result<()> {
 
     // 2. queue depth × staging threads
     for (depth, threads) in [(1usize, 1usize), (2, 1), (4, 1), (2, 2)] {
-        let mut runner = BfastRunner::auto(
+        let runner = BfastRunner::auto(
             "artifacts",
             RunnerConfig {
                 artifact: Some("default".into()),
@@ -59,7 +59,7 @@ fn main() -> bfast::error::Result<()> {
 
     // 3. fused vs phased
     for phased in [false, true] {
-        let mut runner = BfastRunner::auto(
+        let runner = BfastRunner::auto(
             "artifacts",
             RunnerConfig {
                 artifact: Some("default".into()),

@@ -19,7 +19,7 @@ fn main() -> bfast::error::Result<()> {
     let bench = Bench::quick();
     let naive_cap = 2_000usize;
 
-    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     println!("device backend: {}", runner.platform());
     let mut table = Table::new(
         "fig2: seconds per implementation (naive extrapolated past cap)",

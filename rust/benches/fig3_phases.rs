@@ -28,7 +28,7 @@ fn main() -> bfast::error::Result<()> {
     print!("{}", cpu_phases2.table(&format!("(a) BFAST(CPU) phases, m={m}")));
 
     // (b) device phases (instrumented pipeline)
-    let mut runner = BfastRunner::auto(
+    let runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;

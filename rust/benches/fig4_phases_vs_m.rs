@@ -21,7 +21,7 @@ fn main() -> bfast::error::Result<()> {
         &["m", "transfer", "create model", "predictions", "mosum", "detect breaks", "readback"],
     );
 
-    let mut runner = BfastRunner::auto(
+    let runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;

@@ -22,7 +22,7 @@ fn main() -> bfast::error::Result<()> {
         &["k", "transfer", "create model", "predictions", "mosum", "detect breaks", "total"],
     );
 
-    let mut runner = BfastRunner::auto(
+    let runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;

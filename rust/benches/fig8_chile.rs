@@ -25,7 +25,7 @@ fn main() -> bfast::error::Result<()> {
     println!("scene {}x{} = {m} px, N={}", scene.width, scene.height, scene.n_times);
 
     let cpu = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
-    let mut runner = BfastRunner::auto(
+    let runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { artifact: Some("chile".into()), ..Default::default() },
     )?;

@@ -45,7 +45,7 @@ fn main() -> bfast::error::Result<()> {
     println!("wrote results/chile_snapshot_*.pgm (Fig. 7 analogue)");
 
     // Device run over the full scene
-    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     let res = runner.run(&stack, &params)?;
     println!(
         "device: {:.3}s for {} px in {} chunks — {:.2}% breaks (paper: >99%)",

@@ -29,7 +29,7 @@ fn main() -> bfast::error::Result<()> {
         100.0 * nan_count as f64 / cloudy.data().len() as f64
     );
 
-    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
 
     // Coordinator path: staging-side gap filling (fill_missing = true).
     let res_clean = runner.run(&clean, &params)?;

@@ -31,7 +31,7 @@ fn main() -> bfast::error::Result<()> {
     );
 
     // --- device pipeline (AOT JAX/Pallas via PJRT) ----------------------
-    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     println!("device: {}", runner.platform());
     let res = runner.run(&data.stack, &params)?;
     let (tpr, fpr) = data.score(&res.map.breaks);

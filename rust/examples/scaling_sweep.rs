@@ -30,7 +30,7 @@ fn main() -> bfast::error::Result<()> {
     // naive is O(100x) slower; cap its workload like the paper caps R's
     let naive_cap = env_usize("SWEEP_NAIVE_CAP", 4_000);
 
-    let mut runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     println!("device: {}", runner.platform());
 
     let mut table = Table::new(

@@ -99,19 +99,25 @@ impl RunResult {
 }
 
 /// The leader: owns the executor backend and drives scene analyses.
-pub struct BfastRunner {
-    backend: Box<dyn ExecutorBackend>,
+///
+/// Generic over how the backend is stored so the *shareability* of a
+/// runner follows its backend: the default `BfastRunner` erases to
+/// `dyn ExecutorBackend` (PJRT device handles are thread-confined),
+/// while [`SharedBfastRunner`] erases to
+/// `dyn ExecutorBackend + Send + Sync` and can sit behind one `Arc`
+/// serving many worker threads — the serving layer's shared runner.
+/// Every analysis entry point takes `&self`.
+pub struct BfastRunner<B: ?Sized + ExecutorBackend = dyn ExecutorBackend> {
     pub cfg: RunnerConfig,
+    backend: Box<B>,
 }
 
-impl BfastRunner {
-    /// Wrap an arbitrary backend.
-    pub fn new(backend: Box<dyn ExecutorBackend>, cfg: RunnerConfig) -> Result<Self> {
-        ensure!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
-        ensure!(cfg.staging_threads >= 1, "staging_threads must be >= 1");
-        Ok(Self { backend, cfg })
-    }
+/// A runner whose backend may be used from any thread (the emulated
+/// device qualifies; PJRT does not). `bfast serve` hands one of these
+/// to its HTTP and scheduler workers behind a single `Arc`.
+pub type SharedBfastRunner = BfastRunner<dyn ExecutorBackend + Send + Sync>;
 
+impl BfastRunner {
     /// Pure-rust emulated backend (the default build's device).
     pub fn emulated(cfg: RunnerConfig) -> Result<Self> {
         Self::new(Box::new(EmulatedDevice::new()), cfg)
@@ -144,10 +150,27 @@ impl BfastRunner {
         let _ = &dir;
         Self::emulated(cfg)
     }
+}
+
+impl SharedBfastRunner {
+    /// Emulated backend behind a thread-shareable runner (see
+    /// [`SharedBfastRunner`]).
+    pub fn emulated_shared(cfg: RunnerConfig) -> Result<Self> {
+        Self::new(Box::new(EmulatedDevice::new()), cfg)
+    }
+}
+
+impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
+    /// Wrap an arbitrary backend.
+    pub fn new(backend: Box<B>, cfg: RunnerConfig) -> Result<Self> {
+        ensure!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+        ensure!(cfg.staging_threads >= 1, "staging_threads must be >= 1");
+        Ok(Self { backend, cfg })
+    }
 
     /// The backend in use.
-    pub fn backend(&self) -> &dyn ExecutorBackend {
-        &*self.backend
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 
     /// Human-readable backend/platform description.
@@ -158,7 +181,20 @@ impl BfastRunner {
     /// Analyse a scene. Streams chunks through the staging → executor
     /// pipeline; returns the assembled break map plus phase timings
     /// (executor phases + accumulated staging time).
-    pub fn run(&mut self, stack: &TimeStack, params: &BfastParams) -> Result<RunResult> {
+    pub fn run(&self, stack: &TimeStack, params: &BfastParams) -> Result<RunResult> {
+        self.run_with_progress(stack, params, |_, _| {})
+    }
+
+    /// [`BfastRunner::run`] with a completion callback: after every
+    /// executed chunk, `progress(chunks_done, chunks_total)` fires on
+    /// the executor thread — the serving layer's job scheduler feeds
+    /// its `running/{progress}` status from it.
+    pub fn run_with_progress(
+        &self,
+        stack: &TimeStack,
+        params: &BfastParams,
+        progress: impl Fn(usize, usize),
+    ) -> Result<RunResult> {
         params.validate()?;
         ensure!(
             stack.n_times() == params.n_total,
@@ -288,6 +324,7 @@ impl BfastRunner {
                                 &out.momax[..w],
                             );
                             done += 1;
+                            progress(done, plan.len());
                         }
                         Err(e) => {
                             exec_err = Some(e);
@@ -429,7 +466,7 @@ mod tests {
         // would block forever if the executor bailed without draining.
         let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
         let data = crate::synth::ArtificialDataset::new(params.clone(), 200, 1).generate();
-        let mut runner = BfastRunner::new(
+        let runner = BfastRunner::new(
             Box::new(FailingBackend),
             RunnerConfig { queue_depth: 1, staging_threads: 2, ..Default::default() },
         )
@@ -450,7 +487,7 @@ mod tests {
     fn start_monitor_matches_run_on_same_stack() {
         let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
         let data = crate::synth::ArtificialDataset::new(params.clone(), 300, 7).generate();
-        let mut runner = BfastRunner::new(
+        let runner = BfastRunner::new(
             Box::new(EmulatedDevice::new().with_m_chunk(64)),
             RunnerConfig::default(),
         )

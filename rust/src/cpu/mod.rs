@@ -16,13 +16,14 @@
 //! [`PhaseTimes`] is returned alongside the results so the benches can
 //! print the same breakdowns.
 //!
-//! **Bit-identity contract:** `monitor::MonitorSession` replicates
-//! this engine's arithmetic (GEMM accumulation order, the f64
-//! sigma/acc accumulation sequences, the f32 truncation points) in
-//! its `prime` and per-pixel rebuild paths so that incremental ingest
-//! reproduces a fresh run exactly. Any change to the numerics here —
-//! loop order, blocking, precision — must be mirrored there;
-//! `tests/monitor.rs` fails loudly on any drift.
+//! **Bit-identity contract:** this engine is the *single definition*
+//! of the scene arithmetic. `monitor::MonitorSession` no longer
+//! re-derives it: both its one-time history pass and its per-pixel
+//! backfill rebuild call [`FusedCpuBfast::run_with_state`] and adopt
+//! the engine's final rolling state ([`RollingState`]: β̂, σ̂√n, the
+//! MOSUM accumulator and the last-`h` residual ring) verbatim, so the
+//! numerics cannot drift between a fresh run and an incremental
+//! session. `tests/monitor.rs` still pins the equivalence end to end.
 
 use crate::design;
 use crate::linalg;
@@ -42,6 +43,24 @@ pub const PHASE_DETECT: &str = "detect breaks";
 
 /// Pixel-block width for the vectorised MOSUM/detect phases.
 const BLOCK: usize = 512;
+
+/// The engine's final rolling state after the monitor scan — exactly
+/// the per-pixel quantities an incremental `monitor::MonitorSession`
+/// needs to keep advancing layer by layer without a refit. Emitted by
+/// [`FusedCpuBfast::run_with_state`]; `momax`/`first` live in the
+/// returned [`BreakMap`].
+#[derive(Clone, Debug, Default)]
+pub struct RollingState {
+    /// β̂ (p × m, f32) from the history fit.
+    pub beta: Vec<f32>,
+    /// σ̂√n per pixel (the Eq. 3 denominator).
+    pub sigma_denom: Vec<f64>,
+    /// Final MOSUM window sum per pixel (the rolling accumulator).
+    pub acc: Vec<f64>,
+    /// Last-`h` residual rows (h × m, f32); stack row `r` lives at
+    /// slot `r % h` — the session's ring convention.
+    pub ring: Vec<f32>,
+}
 
 /// Fused multi-core BFAST over whole scenes.
 pub struct FusedCpuBfast {
@@ -81,6 +100,27 @@ impl FusedCpuBfast {
 
     /// Full scene analysis; returns the break map and phase timings.
     pub fn run(&self, stack: &TimeStack) -> Result<(BreakMap, PhaseTimes)> {
+        let (map, times, _) = self.run_inner(stack, false)?;
+        Ok((map, times))
+    }
+
+    /// Full scene analysis that also emits the engine's final rolling
+    /// state — what `monitor::MonitorSession` primes from (and rebuilds
+    /// late-reporting pixels with), so the incremental path consumes
+    /// this arithmetic instead of re-deriving it.
+    pub fn run_with_state(
+        &self,
+        stack: &TimeStack,
+    ) -> Result<(BreakMap, PhaseTimes, RollingState)> {
+        let (map, times, state) = self.run_inner(stack, true)?;
+        Ok((map, times, state.expect("state requested")))
+    }
+
+    fn run_inner(
+        &self,
+        stack: &TimeStack,
+        want_state: bool,
+    ) -> Result<(BreakMap, PhaseTimes, Option<RollingState>)> {
         let p = &self.params;
         ensure!(
             stack.n_times() == p.n_total,
@@ -92,7 +132,7 @@ impl FusedCpuBfast {
         let m = stack.n_pixels();
         let mut times = PhaseTimes::new();
         if m == 0 {
-            return Ok((BreakMap::zeros(0), times));
+            return Ok((BreakMap::zeros(0), times, want_state.then(RollingState::default)));
         }
         let y = stack.data();
 
@@ -115,7 +155,8 @@ impl FusedCpuBfast {
         times.time(PHASE_PREDICT, || {
             linalg::par_sgemm(self.threads, n_total, preg, m, &self.xt_f32, &beta, &mut yhat);
         });
-        drop(beta);
+        // past this point β̂ is only needed for the emitted state
+        let beta = want_state.then_some(beta);
 
         // 3. residuals: R = Y − Ŷ (reuse the yhat buffer)
         let mut resid = yhat;
@@ -132,8 +173,12 @@ impl FusedCpuBfast {
         // 4. MOSUMs: (N − n) × m, vectorised across pixel blocks
         let n_mon = p.n_monitor();
         let mut mo = vec![0.0f32; n_mon * m];
+        let mut sigma_state = vec![0.0f64; if want_state { m } else { 0 }];
+        let mut acc_state = vec![0.0f64; if want_state { m } else { 0 }];
         times.time(PHASE_MOSUM, || {
             let view = SyncSlice::new(&mut mo);
+            let sigma_view = SyncSlice::new(&mut sigma_state);
+            let acc_view = SyncSlice::new(&mut acc_state);
             let dof = p.dof() as f64;
             let h = p.h;
             threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
@@ -172,7 +217,26 @@ impl FusedCpuBfast {
                         unsafe { view.write(ti * m + s + j, (a / sg) as f32) };
                     }
                 }
+                if want_state {
+                    for j in 0..w {
+                        unsafe {
+                            sigma_view.write(s + j, sigma[j]);
+                            acc_view.write(s + j, acc[j]);
+                        }
+                    }
+                }
             });
+        });
+        // the last-h residual rows, slotted the way the session's ring
+        // expects (stack row r at slot r % h)
+        let ring = want_state.then(|| {
+            let h = p.h;
+            let mut ring = vec![0.0f32; h * m];
+            for row in n_total - h..n_total {
+                let slot = row % h;
+                ring[slot * m..(slot + 1) * m].copy_from_slice(&resid[row * m..(row + 1) * m]);
+            }
+            ring
         });
         drop(resid);
 
@@ -208,7 +272,13 @@ impl FusedCpuBfast {
                 }
             });
         });
-        Ok((map, times))
+        let state = want_state.then(|| RollingState {
+            beta: beta.expect("beta retained"),
+            sigma_denom: sigma_state,
+            acc: acc_state,
+            ring: ring.expect("ring captured"),
+        });
+        Ok((map, times, state))
     }
 }
 
@@ -258,6 +328,30 @@ mod tests {
         assert_eq!(m1.breaks, m8.breaks);
         assert_eq!(m1.first, m8.first);
         assert_eq!(m1.momax, m8.momax);
+    }
+
+    #[test]
+    fn run_with_state_matches_run_and_reports_consistent_state() {
+        let p = params();
+        let data = ArtificialDataset::new(p.clone(), 64, 9).generate();
+        let eng = FusedCpuBfast::new(p.clone(), &data.stack.time_axis).unwrap();
+        let (plain, _) = eng.run(&data.stack).unwrap();
+        let (map, _, st) = eng.run_with_state(&data.stack).unwrap();
+        assert_eq!(map.breaks, plain.breaks);
+        assert_eq!(map.first, plain.first);
+        assert_eq!(map.momax, plain.momax);
+        let m = data.stack.n_pixels();
+        assert_eq!(st.beta.len(), p.p() * m);
+        assert_eq!(st.sigma_denom.len(), m);
+        assert_eq!(st.acc.len(), m);
+        assert_eq!(st.ring.len(), p.h * m);
+        // the accumulator must equal the last window sum divided out in
+        // the final MOSUM value: acc/σ̂√n truncated to f32 is the last
+        // mo row, whose |.| can never exceed the reported momax
+        for px in 0..m {
+            let last_mo = ((st.acc[px] / st.sigma_denom[px]) as f32).abs();
+            assert!(last_mo <= map.momax[px], "px {px}: {last_mo} > {}", map.momax[px]);
+        }
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //!
 //! Full RFC 8259 value model; numbers are kept as f64 (sufficient for
 //! the shapes/params we store). Object key order is preserved.
+//!
+//! One deliberate extension beyond RFC 8259: non-finite numbers
+//! serialise as the literals `NaN`, `Infinity` and `-Infinity` (the
+//! same dialect Python's `json` emits) and parse back exactly, so
+//! momax/β̂ statistics survive a serialize→parse round-trip the way
+//! the `bten` container already guarantees bit-wise.
 
 use crate::error::{bail, err, Context, Result};
 use std::collections::BTreeMap;
@@ -179,7 +185,15 @@ impl Value {
 }
 
 fn write_num(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
+    if n.is_nan() {
+        out.push_str("NaN");
+    } else if n == f64::INFINITY {
+        out.push_str("Infinity");
+    } else if n == f64::NEG_INFINITY {
+        out.push_str("-Infinity");
+    } else if n == 0.0 && n.is_sign_negative() {
+        out.push_str("-0.0"); // the i64 shortcut would drop the sign
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -263,6 +277,8 @@ impl<'a> Parser<'a> {
             Some(b't') => self.literal("true", Value::Bool(true)),
             Some(b'f') => self.literal("false", Value::Bool(false)),
             Some(b'n') => self.literal("null", Value::Null),
+            Some(b'N') => self.literal("NaN", Value::Num(f64::NAN)),
+            Some(b'I') => self.literal("Infinity", Value::Num(f64::INFINITY)),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}", other.map(|b| b as char), self.pos),
         }
@@ -281,6 +297,9 @@ impl<'a> Parser<'a> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
+            if self.peek() == Some(b'I') {
+                return self.literal("Infinity", Value::Num(f64::NEG_INFINITY));
+            }
         }
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
@@ -489,6 +508,34 @@ mod tests {
             assert_eq!(parse(s).unwrap().as_f64().unwrap(), want, "{s}");
         }
         assert!(parse("01abc").is_err());
+    }
+
+    #[test]
+    fn non_finite_f32_fields_roundtrip() {
+        // NaN/±inf momax/beta statistics must survive serialize→parse
+        // (as bten already guarantees bit-wise)
+        let momax = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.5, -0.0];
+        let v = Value::obj(vec![
+            ("momax", Value::arr_num(&momax.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            ("beta", Value::Num(f64::NEG_INFINITY)),
+        ]);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = parse(&text).unwrap();
+            let arr = back.get("momax").unwrap().as_arr().unwrap();
+            assert_eq!(arr.len(), momax.len());
+            for (got, &want) in arr.iter().zip(&momax) {
+                let got = got.as_f64().unwrap() as f32;
+                assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want} in {text}");
+            }
+            assert_eq!(back.get("beta").unwrap().as_f64().unwrap(), f64::NEG_INFINITY);
+        }
+        // bare literals parse; lookalikes don't
+        assert!(parse("NaN").unwrap().as_f64().unwrap().is_nan());
+        assert_eq!(parse("Infinity").unwrap().as_f64().unwrap(), f64::INFINITY);
+        assert_eq!(parse("-Infinity").unwrap().as_f64().unwrap(), f64::NEG_INFINITY);
+        for bad in ["Nan", "Inf", "-Inf", "NaNx", "+Infinity"] {
+            assert!(parse(bad).is_err(), "{bad:?} should fail");
+        }
     }
 
     #[test]

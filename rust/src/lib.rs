@@ -8,6 +8,12 @@
 //!
 //! ## Layers
 //!
+//! * **L4 ([`serve`])** — the break-detection service: a
+//!   zero-dependency HTTP/1.1 front-end (`bfast serve`) with a bounded
+//!   job scheduler ([`serve::queue`]) and a persistent registry of
+//!   live monitor sessions ([`serve::registry`]), sharing one runner
+//!   across its worker threads. Break maps served over the wire are
+//!   bit-identical to direct runs (`tests/serve.rs`).
 //! * **L3 (this crate)** — the streaming coordinator ([`coordinator`]):
 //!   scene source → gap-fill → chunking → staged transfer → executor →
 //!   break-map assembly, plus all CPU baselines ([`pixel`], [`cpu`])
@@ -45,7 +51,7 @@
 //!
 //! let params = BfastParams::new(60, 40, 20, 2, 12.0, 0.05).unwrap();
 //! let data = ArtificialDataset::new(params.clone(), 500, 42).generate();
-//! let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+//! let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
 //! let result = runner.run(&data.stack, &params).unwrap();
 //! println!("{} of {} pixels broke", result.break_count(), result.len());
 //! ```
@@ -121,6 +127,7 @@ pub mod propcheck;
 pub mod raster;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod synth;
 pub mod threadpool;
 

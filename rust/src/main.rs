@@ -6,10 +6,13 @@ use bfast::cli::Command;
 use bfast::error::{bail, ensure, Result};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::cpu::FusedCpuBfast;
+use bfast::json;
 use bfast::monitor::{self, MonitorConfig, MonitorSession};
 use bfast::params::BfastParams;
 use bfast::pixel::{DirectBfast, NaiveBfast};
 use bfast::raster::{io as rio, pgm};
+use bfast::runtime::bten::{bten_to_bytes, Tensor};
+use bfast::serve::{http as shttp, ServeConfig, Server};
 use bfast::synth::{ArtificialDataset, ChileScene};
 use std::time::Instant;
 
@@ -32,6 +35,9 @@ COMMANDS:
   run           analyse a .bsq stack (engine: device|emulated|cpu|direct|naive)
   monitor       incremental session: one-time history pass, then ingest
                 new layers (.bsq/.pgm) with no refit (--state dir/)
+  serve         break-detection service: HTTP API, bounded job queue,
+                live monitor sessions (--addr host:port --state dir/)
+  client        talk to a running server (health | submit | ingest | ...)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
 ";
@@ -47,6 +53,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "generate" => cmd_generate(rest),
         "run" => cmd_run(rest),
         "monitor" => cmd_monitor(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
         "--help" | "-h" | "help" => {
@@ -189,7 +197,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             if !name.is_empty() {
                 cfg.artifact = Some(name.to_string());
             }
-            let mut runner = if engine == "emulated" {
+            let runner = if engine == "emulated" {
                 BfastRunner::emulated(cfg)?
             } else {
                 BfastRunner::auto(m.str("artifacts")?, cfg)?
@@ -465,6 +473,254 @@ fn px_label(px: usize, session: &MonitorSession) -> String {
         (Some(w), Some(_)) if w > 0 => format!("({}, {})", px % w, px / w),
         _ => px.to_string(),
     }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "serve",
+        "run the break-detection service: an HTTP API over a bounded job \
+         scheduler and live monitor sessions (see the README's Serving section)",
+    )
+    .opt("addr", "127.0.0.1:7878", "listen address (host:port; port 0 = ephemeral)")
+    .opt("state", "", "state directory: sessions persist and resume from here")
+    .opt("http-threads", "0", "HTTP worker threads (0 = auto)")
+    .opt("job-workers", "1", "scheduler workers driving analysis runs")
+    .opt("queue", "32", "job queue capacity (further submissions get 429)")
+    .opt("max-body-mb", "256", "largest accepted request body (MiB)");
+    let m = cmd.parse(args)?;
+    let cfg = ServeConfig {
+        addr: m.str("addr")?.to_string(),
+        state_dir: match m.str("state")? {
+            "" => None,
+            s => Some(s.into()),
+        },
+        http_threads: m.usize("http-threads")?,
+        job_workers: m.usize("job-workers")?,
+        queue_capacity: m.usize("queue")?,
+        max_body: m.usize("max-body-mb")? << 20,
+        runner: RunnerConfig::default(),
+    };
+    let state_desc = cfg
+        .state_dir
+        .as_ref()
+        .map(|p| p.display().to_string())
+        .unwrap_or_else(|| "(in-memory)".into());
+    let server = Server::start(cfg)?;
+    println!(
+        "bfast serve: listening on http://{} (queue {}, state {state_desc}); \
+         POST /shutdown stops it",
+        server.addr(),
+        m.usize("queue")?
+    );
+    server.wait()
+}
+
+fn client_params_query(m: &bfast::cli::Matches) -> Result<String> {
+    Ok(format!(
+        "?n-hist={}&h={}&k={}&freq={}&alpha={}",
+        m.usize("n-hist")?,
+        m.usize("h")?,
+        m.usize("k")?,
+        m.f64("freq")?,
+        m.f64("alpha")?
+    ))
+}
+
+/// Fail on non-2xx, surfacing the server's error JSON.
+fn expect_ok(resp: (u16, Vec<u8>)) -> Result<Vec<u8>> {
+    let (status, body) = resp;
+    ensure!(
+        (200..300).contains(&status),
+        "HTTP {status}: {}",
+        String::from_utf8_lossy(&body).trim()
+    );
+    Ok(body)
+}
+
+fn client_print_or_write(body: &[u8], out: &str) -> Result<()> {
+    if out.is_empty() {
+        print!("{}", String::from_utf8_lossy(body));
+    } else {
+        std::fs::write(out, body)?;
+        println!("wrote {out} ({} bytes)", body.len());
+    }
+    Ok(())
+}
+
+fn client_wait_for_job(addr: &str, job: usize) -> Result<()> {
+    loop {
+        let body = expect_ok(shttp::roundtrip(addr, "GET", &format!("/v1/runs/{job}"), "", &[])?)?;
+        let v = json::parse(std::str::from_utf8(&body)?.trim())?;
+        match v.get("status")?.as_str()? {
+            "done" => {
+                println!(
+                    "job {job} done: {} of {} pixels broke in {:.3}s",
+                    v.get("breaks")?.as_usize()?,
+                    v.get("pixels")?.as_usize()?,
+                    v.get("wall_s")?.as_f64()?
+                );
+                return Ok(());
+            }
+            "failed" => bail!("job {job} failed: {}", v.get("error")?.as_str()?),
+            _ => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+}
+
+fn cmd_client(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "client",
+        "HTTP client for a running `bfast serve`. Positional action: \
+         health | metrics | jobs | submit | status | map | session-init | \
+         session | ingest | session-map | shutdown",
+    )
+    .opt("addr", "127.0.0.1:7878", "server address (host:port)")
+    .opt("input", "", "input file (.bsq scene; .bten/.pgm layer for ingest)")
+    .opt("job", "0", "job id (status / map)")
+    .opt("name", "", "session name")
+    .opt("t", "", "acquisition time of the ingested layer")
+    .opt("out", "", "write the response payload here instead of stdout")
+    .opt("n-hist", "100", "stable history length n (submit / session-init)")
+    .opt("h", "50", "MOSUM bandwidth (submit / session-init)")
+    .opt("k", "3", "harmonic terms (submit / session-init)")
+    .opt("freq", "23", "observations per period f (submit / session-init)")
+    .opt("alpha", "0.05", "significance level (submit / session-init)")
+    .opt("init-layers", "0", "prime on only the first K layers (session-init)")
+    .switch("wait", "poll until the submitted job finishes (submit)")
+    .switch("pgm", "fetch the break map as a PGM heatmap (map / session-map)");
+    let m = cmd.parse(args)?;
+    let action = m.positional.first().map(|s| s.as_str()).unwrap_or("health");
+    let addr = m.str("addr")?;
+    let name = m.str("name")?;
+    let need_name = || -> Result<&str> {
+        ensure!(!name.is_empty(), "--name is required for {action}");
+        Ok(name)
+    };
+    let need_input = || -> Result<Vec<u8>> {
+        let input = m.str("input")?;
+        ensure!(!input.is_empty(), "--input is required for {action}");
+        Ok(std::fs::read(input)?)
+    };
+    let fmt_suffix = if m.flag("pgm") { "?format=pgm" } else { "" };
+    match action {
+        "health" => {
+            let body = expect_ok(shttp::roundtrip(addr, "GET", "/healthz", "", &[])?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "metrics" => {
+            let body = expect_ok(shttp::roundtrip(addr, "GET", "/metrics", "", &[])?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "jobs" => {
+            let body = expect_ok(shttp::roundtrip(addr, "GET", "/v1/runs", "", &[])?)?;
+            let v = json::parse(std::str::from_utf8(&body)?.trim())?;
+            let rows: Vec<(u64, String, f64)> = v
+                .get("jobs")?
+                .as_arr()?
+                .iter()
+                .map(|j| {
+                    Ok((
+                        j.get("job")?.as_usize()? as u64,
+                        j.get("status")?.as_str()?.to_string(),
+                        j.get("progress")?.as_f64()?,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            print!("{}", bfast::report::jobs_table(&rows).to_console());
+        }
+        "submit" => {
+            let bytes = need_input()?;
+            let path = format!("/v1/runs{}", client_params_query(&m)?);
+            let body = expect_ok(shttp::roundtrip(
+                addr,
+                "POST",
+                &path,
+                "application/octet-stream",
+                &bytes,
+            )?)?;
+            let v = json::parse(std::str::from_utf8(&body)?.trim())?;
+            let job = v.get("job")?.as_usize()?;
+            println!("submitted job {job}");
+            if m.flag("wait") {
+                client_wait_for_job(addr, job)?;
+            }
+        }
+        "status" => {
+            let job = m.usize("job")?;
+            let body =
+                expect_ok(shttp::roundtrip(addr, "GET", &format!("/v1/runs/{job}"), "", &[])?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "map" => {
+            let job = m.usize("job")?;
+            let path = format!("/v1/runs/{job}/map{fmt_suffix}");
+            let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
+            client_print_or_write(&body, m.str("out")?)?;
+        }
+        "session-init" => {
+            let name = need_name()?;
+            let bytes = need_input()?;
+            let mut path = format!("/v1/sessions/{name}{}", client_params_query(&m)?);
+            if m.usize("init-layers")? > 0 {
+                path.push_str(&format!("&init-layers={}", m.usize("init-layers")?));
+            }
+            let body = expect_ok(shttp::roundtrip(
+                addr,
+                "POST",
+                &path,
+                "application/octet-stream",
+                &bytes,
+            )?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "session" => {
+            let name = need_name()?;
+            let body = expect_ok(shttp::roundtrip(
+                addr,
+                "GET",
+                &format!("/v1/sessions/{name}"),
+                "",
+                &[],
+            )?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "ingest" => {
+            let name = need_name()?;
+            let t: f64 = m
+                .str("t")?
+                .parse()
+                .map_err(|_| bfast::err!("--t must be the layer's acquisition time"))?;
+            let input = m.str("input")?;
+            ensure!(!input.is_empty(), "--input is required for ingest");
+            let bytes = if input.ends_with(".pgm") {
+                let (_, _, values) = pgm::read_pgm(input)?;
+                bten_to_bytes(&Tensor::F32 { shape: vec![values.len()], data: values })?
+            } else {
+                std::fs::read(input)?
+            };
+            let path = format!("/v1/sessions/{name}/ingest?t={t}");
+            let body = expect_ok(shttp::roundtrip(
+                addr,
+                "POST",
+                &path,
+                "application/octet-stream",
+                &bytes,
+            )?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "session-map" => {
+            let name = need_name()?;
+            let path = format!("/v1/sessions/{name}/map{fmt_suffix}");
+            let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
+            client_print_or_write(&body, m.str("out")?)?;
+        }
+        "shutdown" => {
+            let body = expect_ok(shttp::roundtrip(addr, "POST", "/shutdown", "", &[])?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        other => bail!("unknown client action {other:?}\n\n{}", cmd.usage()),
+    }
+    Ok(())
 }
 
 fn cmd_inspect(args: &[String]) -> Result<()> {

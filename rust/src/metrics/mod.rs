@@ -55,6 +55,19 @@ impl PhaseTimes {
         }
     }
 
+    /// Render the phases as Prometheus text-format gauge lines, one
+    /// per phase: `name{phase="create model"} 1.234567` (seconds).
+    /// Consumed by the serving layer's `/metrics` endpoint.
+    pub fn to_prometheus(&self, name: &str) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (n, d) in self.iter() {
+            let label = n.replace('\\', "\\\\").replace('"', "\\\"");
+            let _ = writeln!(s, "{name}{{phase=\"{label}\"}} {:.6}", d.as_secs_f64());
+        }
+        s
+    }
+
     /// Render the per-phase table (seconds + share of total).
     pub fn table(&self, title: &str) -> String {
         use std::fmt::Write;
@@ -131,6 +144,17 @@ mod tests {
         assert!(t.contains("alpha"));
         assert!(t.contains("75.0%"));
         assert!(t.contains("TOTAL"));
+    }
+
+    #[test]
+    fn prometheus_lines_are_labelled_and_escaped() {
+        let mut p = PhaseTimes::new();
+        p.add("create model", Duration::from_millis(1500));
+        p.add("weird \"phase\"", Duration::from_millis(250));
+        let text = p.to_prometheus("bfast_run_phase_seconds");
+        assert!(text.contains("bfast_run_phase_seconds{phase=\"create model\"} 1.500000"));
+        assert!(text.contains("phase=\"weird \\\"phase\\\"\""));
+        assert_eq!(text.lines().count(), 2);
     }
 
     #[test]

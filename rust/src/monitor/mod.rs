@@ -17,26 +17,28 @@
 //! * the forward-fill value for gap handling (paper footnote 2) —
 //!
 //! so [`MonitorSession::ingest`] advances every pixel in **O(m·p)**
-//! with no refit. The arithmetic replicates `cpu::FusedCpuBfast` (and
-//! therefore the coordinated pipeline over any backend that matches
-//! it) operation-for-operation — f32 GEMM accumulation order included —
-//! so after ingesting layers `n+1..=N` the session's break map is
-//! **bit-identical** to a fresh coordinated run at N, at every prefix.
-//! The equivalence is pinned by `tests/monitor.rs`.
+//! with no refit. The history pass and the backfill rebuild of
+//! late-reporting pixels *are* `cpu::FusedCpuBfast` — the session
+//! calls [`crate::cpu::FusedCpuBfast::run_with_state`] and adopts the
+//! engine's final rolling state verbatim, so there is one definition
+//! of the scene arithmetic and after ingesting layers `n+1..=N` the
+//! session's break map is **bit-identical** to a fresh coordinated
+//! run at N, at every prefix. The equivalence is pinned by
+//! `tests/monitor.rs`.
 //!
 //! Sessions persist to a state directory (`session.json` +
 //! `state_*.bten` tensors) and resume exactly; see the README's
 //! monitoring-workflow section and the `bfast monitor` CLI.
 
+use crate::cpu::FusedCpuBfast;
 use crate::design;
 use crate::error::{ensure, Context, Result};
 use crate::fill;
 use crate::history::RocScanner;
 use crate::json::{self, Value};
-use crate::linalg;
 use crate::mosum;
 use crate::params::BfastParams;
-use crate::raster::{BreakMap, ChunkPlan, TimeStack};
+use crate::raster::{BreakMap, TimeStack};
 use crate::runtime::bten::{read_bten, write_bten, Tensor};
 use crate::threadpool::{self, SyncSlice};
 use std::path::Path;
@@ -44,14 +46,14 @@ use std::path::Path;
 /// State-file schema version (bump on layout changes).
 const STATE_VERSION: f64 = 1.0;
 
-/// Session tuning. `m_chunk` shards both the history pass and each
-/// ingest across the threadpool with the same pixel-range chunk plan
-/// the coordinator uses; `fill_missing` mirrors
+/// Session tuning. `m_chunk` grains each ingest across the
+/// threadpool (the history pass runs through the fused engine, which
+/// blocks internally); `fill_missing` mirrors
 /// [`crate::coordinator::RunnerConfig::fill_missing`] and must match
 /// the runs the session is compared against.
 #[derive(Clone, Debug)]
 pub struct MonitorConfig {
-    /// Pixels per chunk (the coordinator's chunk-plan width).
+    /// Pixels per ingest work range (the coordinator's chunk width).
     pub m_chunk: usize,
     /// Worker threads for the history pass and per-layer updates.
     pub threads: usize,
@@ -87,6 +89,19 @@ pub struct IngestDelta {
     pub total_breaks: usize,
 }
 
+impl IngestDelta {
+    /// JSON form for the serving API (`POST /v1/sessions/{name}/ingest`).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("layer", Value::Num(self.layer as f64)),
+            ("t", Value::Num(self.t)),
+            ("monitor_index", Value::Num(self.monitor_index as f64)),
+            ("new_breaks", Value::arr_usize(&self.new_breaks)),
+            ("total_breaks", Value::Num(self.total_breaks as f64)),
+        ])
+    }
+}
+
 /// Result of a scene-wide ROC (reverse-ordered CUSUM) pre-pass.
 #[derive(Clone, Debug)]
 pub struct RocSelection {
@@ -110,8 +125,6 @@ pub struct MonitorSession {
     axis: Vec<f64>,
     /// Xᵀ rows (n_seen × p, f32) — grows one row per ingest.
     xt: Vec<f32>,
-    /// M = (X_h X_hᵀ)⁻¹ X_h (p × n_hist, f32) — fixed after start.
-    m_f32: Vec<f32>,
     /// β̂ (p × m, f32).
     beta: Vec<f32>,
     /// σ̂√n per pixel (Eq. 3 denominator).
@@ -127,90 +140,6 @@ pub struct MonitorSession {
     /// Last valid (non-NaN) raw observation per pixel; NaN when the
     /// pixel has never reported (forward-fill state).
     last_valid: Vec<f32>,
-}
-
-/// Shared read-only context for rebuilding one pixel's state from a
-/// constant-valued filled series (the backfill case: a pixel whose
-/// first valid observation arrives mid-monitoring).
-struct RebuildCtx<'a> {
-    params: &'a BfastParams,
-    xt: &'a [f32],
-    m_f32: &'a [f32],
-}
-
-/// One pixel's rebuilt state.
-struct PixelState {
-    beta: Vec<f32>,
-    sigma_denom: f64,
-    acc: f64,
-    momax: f32,
-    first: i32,
-    resids: Vec<f32>,
-}
-
-impl RebuildCtx<'_> {
-    /// Replay the engine's arithmetic over a series that is `y0` at
-    /// every row `0..n_rows` (what forward/backward fill yields for a
-    /// pixel whose first valid value just arrived).
-    fn rebuild_constant(&self, y0: f32, n_rows: usize) -> PixelState {
-        let p = self.params.p();
-        let n = self.params.n_hist;
-        let h = self.params.h;
-        // β̂: per-element dot in the GEMM's accumulation order
-        // (k ascending, zero entries skipped — see linalg::gemm).
-        let mut beta = vec![0.0f32; p];
-        for (i, b) in beta.iter_mut().enumerate() {
-            let mut c = 0.0f32;
-            for &av in &self.m_f32[i * n..(i + 1) * n] {
-                if av == 0.0 {
-                    continue;
-                }
-                c += av * y0;
-            }
-            *b = c;
-        }
-        // predictions + residuals, row by row
-        let mut resids = vec![0.0f32; n_rows];
-        for (t, r) in resids.iter_mut().enumerate() {
-            let mut yh = 0.0f32;
-            for (j, &av) in self.xt[t * p..(t + 1) * p].iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                yh += av * beta[j];
-            }
-            *r = y0 - yh;
-        }
-        // σ̂√n from the history rows
-        let mut ss = 0.0f64;
-        for &r in &resids[..n] {
-            ss += (r as f64) * (r as f64);
-        }
-        let sigma_denom = (ss / self.params.dof() as f64).sqrt() * (n as f64).sqrt();
-        // initial MOSUM window, then roll + scan through every monitor
-        // row already covered
-        let mut acc = 0.0f64;
-        for &r in &resids[n + 1 - h..=n] {
-            acc += r as f64;
-        }
-        let mut momax = 0.0f32;
-        let mut first = -1i32;
-        for ti in 0..n_rows - n {
-            let mo = if ti == 0 {
-                (acc / sigma_denom) as f32
-            } else {
-                mosum::rolling_step(&mut acc, sigma_denom, resids[n + ti], resids[n + ti - h])
-            };
-            let a = mo.abs();
-            if a > momax {
-                momax = a;
-            }
-            if first < 0 && a > mosum::boundary_at(self.params, ti) as f32 {
-                first = ti as i32;
-            }
-        }
-        PixelState { beta, sigma_denom, acc, momax, first, resids }
-    }
 }
 
 impl MonitorSession {
@@ -244,8 +173,10 @@ impl MonitorSession {
             axis.windows(2).all(|w| w[1] > w[0]),
             "monitor session: time axis collapses under f32 rounding"
         );
+        // the history pseudo-inverse lives inside the fused engine
+        // (prime / rebuild construct it on demand); the session only
+        // keeps the prediction rows Xᵀ for the O(p) ingest step
         let x = design::design_matrix(&axis, params.freq, params.k);
-        let m_f32 = design::history_pinv(&x, params.n_hist)?.to_f32();
         let xt = x.transpose().to_f32();
 
         let m = stack.n_pixels();
@@ -255,7 +186,6 @@ impl MonitorSession {
             height: stack.height,
             axis,
             xt,
-            m_f32,
             beta: vec![0.0; params.p() * m],
             sigma_denom: vec![0.0; m],
             acc: vec![0.0; m],
@@ -266,124 +196,43 @@ impl MonitorSession {
             params,
             cfg,
         };
-        session.prime(stack);
+        session.prime(stack)?;
         Ok(session)
     }
 
-    /// The staged history pass: gather → gap-fill → batched fit →
-    /// rolling MOSUM + scan, chunk by chunk across the threadpool
-    /// (same chunk plan as the coordinator's staging workers).
-    fn prime(&mut self, stack: &TimeStack) {
-        let p = self.params.p();
-        let (n0, n, h) = (self.params.n_total, self.params.n_hist, self.params.h);
+    /// The one-time history pass: record the forward-fill state from
+    /// the raw archive, gap-fill a scene copy, then run the fused
+    /// engine once and adopt its final rolling state — the engine is
+    /// the single definition of the arithmetic, so prime cannot drift
+    /// from a fresh run.
+    fn prime(&mut self, stack: &TimeStack) -> Result<()> {
+        let n0 = self.params.n_total;
         let m = self.m;
-        let dof = self.params.dof() as f64;
-        let sqrt_n = (n as f64).sqrt();
-        let plan = ChunkPlan::new(m, self.cfg.m_chunk);
-        let params = &self.params;
-        let (m_f32, xt) = (&self.m_f32, &self.xt);
-        let fill_missing = self.cfg.fill_missing;
-
-        let beta_v = SyncSlice::new(&mut self.beta);
-        let sigma_v = SyncSlice::new(&mut self.sigma_denom);
-        let acc_v = SyncSlice::new(&mut self.acc);
-        let ring_v = SyncSlice::new(&mut self.ring);
-        let momax_v = SyncSlice::new(&mut self.momax);
-        let first_v = SyncSlice::new(&mut self.first);
-        let lv_v = SyncSlice::new(&mut self.last_valid);
-
-        threadpool::parallel_ranges(plan.len(), 1, self.cfg.threads, |c0, c1| {
-            for ci in c0..c1 {
-                let chunk = plan.get(ci);
-                let (start, w) = (chunk.start, chunk.width());
-                let mut buf = vec![0.0f32; n0 * w];
-                stack.copy_chunk_padded(start, chunk.end, w, 0.0, &mut buf);
-                // forward-fill state from the *raw* chunk
-                for j in 0..w {
-                    let mut lv = f32::NAN;
-                    for t in (0..n0).rev() {
-                        let v = buf[t * w + j];
-                        if !v.is_nan() {
-                            lv = v;
-                            break;
-                        }
-                    }
-                    unsafe { lv_v.write(start + j, lv) };
-                }
-                if fill_missing {
-                    fill::fill_columns(&mut buf, n0, w);
-                }
-                // batched fit + predictions (engine phases 1–3)
-                let mut beta_c = vec![0.0f32; p * w];
-                linalg::sgemm(p, n, w, m_f32, &buf[..n * w], &mut beta_c);
-                let mut resid = vec![0.0f32; n0 * w];
-                linalg::sgemm(n0, p, w, xt, &beta_c, &mut resid);
-                for (r, &y) in resid.iter_mut().zip(&buf) {
-                    *r = y - *r;
-                }
-                // σ̂√n + rolling MOSUM + break scan (engine phases 4–5)
-                let mut sigma = vec![0.0f64; w];
-                for t in 0..n {
-                    let row = &resid[t * w..(t + 1) * w];
-                    for (sg, &r) in sigma.iter_mut().zip(row) {
-                        *sg += (r as f64) * (r as f64);
-                    }
-                }
-                for sg in sigma.iter_mut() {
-                    *sg = (*sg / dof).sqrt() * sqrt_n;
-                }
-                let mut acc = vec![0.0f64; w];
-                for t in n + 1 - h..=n {
-                    let row = &resid[t * w..(t + 1) * w];
-                    for (a, &r) in acc.iter_mut().zip(row) {
-                        *a += r as f64;
-                    }
-                }
-                let mut momax = vec![0.0f32; w];
-                let mut first = vec![-1i32; w];
-                for ti in 0..n0 - n {
-                    let b = mosum::boundary_at(params, ti) as f32;
-                    for j in 0..w {
-                        let mo = if ti == 0 {
-                            (acc[j] / sigma[j]) as f32
-                        } else {
-                            mosum::rolling_step(
-                                &mut acc[j],
-                                sigma[j],
-                                resid[(n + ti) * w + j],
-                                resid[(n + ti - h) * w + j],
-                            )
-                        };
-                        let a = mo.abs();
-                        if a > momax[j] {
-                            momax[j] = a;
-                        }
-                        if first[j] < 0 && a > b {
-                            first[j] = ti as i32;
-                        }
-                    }
-                }
-                // scatter chunk state into the session arrays
-                for j in 0..w {
-                    unsafe {
-                        sigma_v.write(start + j, sigma[j]);
-                        acc_v.write(start + j, acc[j]);
-                        momax_v.write(start + j, momax[j]);
-                        first_v.write(start + j, first[j]);
-                    }
-                }
-                for i in 0..p {
-                    for j in 0..w {
-                        unsafe { beta_v.write(i * m + start + j, beta_c[i * w + j]) };
-                    }
-                }
-                for row in n0 - h..n0 {
-                    for j in 0..w {
-                        unsafe { ring_v.write((row % h) * m + start + j, resid[row * w + j]) };
-                    }
+        let raw = stack.data();
+        self.last_valid = threadpool::parallel_map(m, self.cfg.threads, |px| {
+            for t in (0..n0).rev() {
+                let v = raw[t * m + px];
+                if !v.is_nan() {
+                    return v;
                 }
             }
+            f32::NAN
         });
+        let mut data = raw.to_vec();
+        if self.cfg.fill_missing {
+            fill::fill_columns(&mut data, n0, m);
+        }
+        let filled = TimeStack::from_vec(n0, m, data)?;
+        let engine =
+            FusedCpuBfast::new(self.params.clone(), &self.axis)?.with_threads(self.cfg.threads);
+        let (map, _times, state) = engine.run_with_state(&filled)?;
+        self.beta = state.beta;
+        self.sigma_denom = state.sigma_denom;
+        self.acc = state.acc;
+        self.ring = state.ring;
+        self.momax = map.momax;
+        self.first = map.first;
+        Ok(())
     }
 
     /// Ingest one acquisition layer at time `t`, advancing every pixel
@@ -423,9 +272,47 @@ impl MonitorSession {
         // index than ti, and must still surface in this layer's delta.
         let was_broken: Vec<bool> = self.first.iter().map(|&f| f >= 0).collect();
 
+        // Pixels whose first valid value ever arrives with this layer:
+        // a fresh run would have backfilled their whole prefix with it.
+        // Rebuild them through the engine itself — one batched run over
+        // a constant-column stack — and adopt its state, exactly as
+        // prime does (column independence of the GEMM keeps each pixel
+        // bit-identical to a scene-wide fresh run).
+        if fill_missing {
+            let fresh: Vec<usize> = layer
+                .iter()
+                .enumerate()
+                .filter(|&(px, &raw)| !raw.is_nan() && self.last_valid[px].is_nan())
+                .map(|(px, _)| px)
+                .collect();
+            if !fresh.is_empty() {
+                let f = fresh.len();
+                let mut data = vec![0.0f32; (r + 1) * f];
+                for (c, &px) in fresh.iter().enumerate() {
+                    for row in 0..r + 1 {
+                        data[row * f + c] = layer[px];
+                    }
+                }
+                let series = TimeStack::from_vec(r + 1, f, data)?;
+                let engine = FusedCpuBfast::new(self.params.clone(), &self.axis)?
+                    .with_threads(self.cfg.threads);
+                let (map, _times, st) = engine.run_with_state(&series)?;
+                for (c, &px) in fresh.iter().enumerate() {
+                    for j in 0..p {
+                        self.beta[j * m + px] = st.beta[j * f + c];
+                    }
+                    self.sigma_denom[px] = st.sigma_denom[c];
+                    self.acc[px] = st.acc[c];
+                    self.momax[px] = map.momax[c];
+                    self.first[px] = map.first[c];
+                    for slot in 0..h {
+                        self.ring[slot * m + px] = st.ring[slot * f + c];
+                    }
+                }
+            }
+        }
+
         {
-            let params = &self.params;
-            let ctx = RebuildCtx { params, xt: &self.xt, m_f32: &self.m_f32 };
             let xrow = &self.xt[r * p..(r + 1) * p];
             let beta_v = SyncSlice::new(&mut self.beta);
             let sigma_v = SyncSlice::new(&mut self.sigma_denom);
@@ -447,26 +334,10 @@ impl MonitorSession {
                         }
                     } else {
                         if fill_missing && lv.is_nan() {
-                            // First valid value ever: a fresh run would
-                            // have backfilled the whole prefix with it —
-                            // rebuild this pixel's state from that
-                            // constant series, exactly.
-                            let st = ctx.rebuild_constant(raw, r + 1);
-                            for (j, &b) in st.beta.iter().enumerate() {
-                                unsafe { beta_v.write(j * m + px, b) };
-                            }
-                            unsafe {
-                                sigma_v.write(px, st.sigma_denom);
-                                acc_v.write(px, st.acc);
-                                momax_v.write(px, st.momax);
-                                first_v.write(px, st.first);
-                                lv_v.write(px, raw);
-                            }
-                            for row in r + 1 - h..=r {
-                                unsafe {
-                                    ring_v.write((row % h) * m + px, st.resids[row]);
-                                }
-                            }
+                            // first valid value ever — already rebuilt
+                            // through the engine above; only the fill
+                            // state still needs recording
+                            unsafe { lv_v.write(px, raw) };
                             continue;
                         }
                         unsafe { lv_v.write(px, raw) };
@@ -705,7 +576,7 @@ impl MonitorSession {
             Ok(t)
         };
         let p = params.p();
-        let (n_hist, h) = (params.n_hist, params.h);
+        let h = params.h;
         let axis = rd("state_axis.bten", &[n_seen])?.as_f64()?.to_vec();
         ensure!(
             axis.windows(2).all(|w| w[1] > w[0]),
@@ -718,9 +589,10 @@ impl MonitorSession {
         let momax = rd("state_momax.bten", &[m])?.as_f32()?.to_vec();
         let first = rd("state_first.bten", &[m])?.as_i32()?.to_vec();
         let last_valid = rd("state_last_valid.bten", &[m])?.as_f32()?.to_vec();
-        // design-side matrices are pure functions of (axis, freq, k)
+        // design-side state is a pure function of (axis, freq, k); the
+        // history pseudo-inverse is not kept (the engine rebuilds it
+        // when a backfill rebuild needs one)
         let x = design::design_matrix(&axis, params.freq, params.k);
-        let m_f32 = design::history_pinv(&x, n_hist)?.to_f32();
         let xt = x.transpose().to_f32();
         Ok(Self {
             params,
@@ -730,7 +602,6 @@ impl MonitorSession {
             height,
             axis,
             xt,
-            m_f32,
             beta,
             sigma_denom,
             acc,
@@ -895,7 +766,6 @@ mod tests {
         assert_eq!(back.momax, s.momax);
         assert_eq!(back.first, s.first);
         assert_eq!(back.xt, s.xt);
-        assert_eq!(back.m_f32, s.m_f32);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -11,15 +11,12 @@
 
 use super::TimeStack;
 use crate::json::{self, Value};
-use crate::error::{bail, ensure, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use crate::error::{ensure, Context, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"BSQ1";
 
-/// Write a stack to a `.bsq` file.
-pub fn write_stack(path: impl AsRef<Path>, stack: &TimeStack) -> Result<()> {
-    let path = path.as_ref();
+fn header_text(stack: &TimeStack) -> String {
     let mut header = vec![
         ("n_times", Value::Num(stack.n_times() as f64)),
         ("n_pixels", Value::Num(stack.n_pixels() as f64)),
@@ -29,44 +26,33 @@ pub fn write_stack(path: impl AsRef<Path>, stack: &TimeStack) -> Result<()> {
         header.push(("width", Value::Num(w as f64)));
         header.push(("height", Value::Num(h as f64)));
     }
-    let htext = Value::obj(header).to_string_compact();
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
-    w.write_all(&(htext.len() as u32).to_le_bytes())?;
-    w.write_all(htext.as_bytes())?;
-    // bulk f32 LE write
-    let data = stack.data();
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    #[cfg(target_endian = "big")]
-    compile_error!("bsq writer assumes little-endian host");
-    w.write_all(bytes)?;
-    w.flush()?;
-    Ok(())
+    Value::obj(header).to_string_compact()
 }
 
-/// Read a stack from a `.bsq` file.
-pub fn read_stack(path: impl AsRef<Path>) -> Result<TimeStack> {
-    let path = path.as_ref();
-    let file = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut r = BufReader::new(file);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{}: not a BSQ1 file", path.display());
+/// Serialise a stack into the `.bsq` byte layout (the serving API
+/// ships stacks as request bodies; files are just these bytes).
+pub fn stack_to_bytes(stack: &TimeStack) -> Vec<u8> {
+    let htext = header_text(stack);
+    let data = stack.data();
+    let mut out = Vec::with_capacity(8 + htext.len() + data.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+    out.extend_from_slice(htext.as_bytes());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    let mut hlen = [0u8; 4];
-    r.read_exact(&mut hlen)?;
-    let hlen = u32::from_le_bytes(hlen) as usize;
+    out
+}
+
+/// Parse a stack from `.bsq` bytes. `label` names the source in
+/// errors (a path, a request, …).
+pub fn stack_from_bytes(bytes: &[u8], label: &str) -> Result<TimeStack> {
+    ensure!(bytes.len() >= 8 && &bytes[..4] == MAGIC, "{label}: not a BSQ1 stream");
+    let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
     ensure!(hlen < 64 << 20, "unreasonable header length {hlen}");
-    let mut htext = vec![0u8; hlen];
-    r.read_exact(&mut htext)?;
-    let header = json::parse(std::str::from_utf8(&htext)?)
-        .with_context(|| format!("{}: bad header", path.display()))?;
+    ensure!(bytes.len() >= 8 + hlen, "{label}: truncated header");
+    let header = json::parse(std::str::from_utf8(&bytes[8..8 + hlen])?)
+        .with_context(|| format!("{label}: bad header"))?;
     let n_times = header.get("n_times")?.as_usize()?;
     let n_pixels = header.get("n_pixels")?.as_usize()?;
     let taxis: Vec<f64> = header
@@ -75,17 +61,15 @@ pub fn read_stack(path: impl AsRef<Path>) -> Result<TimeStack> {
         .iter()
         .map(|v| v.as_f64())
         .collect::<Result<_>>()?;
-    let mut bytes = Vec::new();
-    r.read_to_end(&mut bytes)?;
+    let payload = &bytes[8 + hlen..];
     ensure!(
-        bytes.len() == n_times * n_pixels * 4,
-        "{}: expected {} data bytes, found {}",
-        path.display(),
+        payload.len() == n_times * n_pixels * 4,
+        "{label}: expected {} data bytes, found {}",
         n_times * n_pixels * 4,
-        bytes.len()
+        payload.len()
     );
     let mut data = vec![0.0f32; n_times * n_pixels];
-    for (i, ch) in bytes.chunks_exact(4).enumerate() {
+    for (i, ch) in payload.chunks_exact(4).enumerate() {
         data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
     }
     let mut stack = TimeStack::from_vec(n_times, n_pixels, data)?.with_time_axis(taxis)?;
@@ -93,6 +77,39 @@ pub fn read_stack(path: impl AsRef<Path>) -> Result<TimeStack> {
         stack = stack.with_geometry(w.as_usize()?, h.as_usize()?)?;
     }
     Ok(stack)
+}
+
+/// Write a stack to a `.bsq` file. Streams the payload in bounded
+/// chunks — unlike [`stack_to_bytes`], peak memory stays O(chunk)
+/// above the stack itself, so scene-scale exports don't double RSS.
+pub fn write_stack(path: impl AsRef<Path>, stack: &TimeStack) -> Result<()> {
+    use std::io::Write as _;
+    let path = path.as_ref();
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    let htext = header_text(stack);
+    w.write_all(MAGIC)?;
+    w.write_all(&(htext.len() as u32).to_le_bytes())?;
+    w.write_all(htext.as_bytes())?;
+    let mut buf = Vec::with_capacity(4 << 16);
+    for chunk in stack.data().chunks(1 << 16) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a stack from a `.bsq` file.
+pub fn read_stack(path: impl AsRef<Path>) -> Result<TimeStack> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    stack_from_bytes(&bytes, &path.display().to_string())
 }
 
 #[cfg(test)]
@@ -134,6 +151,22 @@ mod tests {
         write_stack(&path, &s).unwrap();
         assert_eq!(read_stack(&path).unwrap().time_axis, vec![18.0, 50.5, 99.25]);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_without_touching_disk() {
+        let mut s = TimeStack::zeros(3, 4);
+        s.data_mut()[5] = f32::NAN;
+        s.data_mut()[7] = -2.5;
+        let bytes = stack_to_bytes(&s);
+        let back = stack_from_bytes(&bytes, "test").unwrap();
+        assert_eq!(back.n_times(), 3);
+        assert_eq!(back.n_pixels(), 4);
+        for (a, b) in back.data().iter().zip(s.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(stack_from_bytes(&bytes[..bytes.len() - 1], "test").is_err());
+        assert!(stack_from_bytes(b"BS", "test").is_err());
     }
 
     #[test]

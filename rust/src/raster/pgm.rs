@@ -7,8 +7,45 @@
 //! opens everywhere.
 
 use crate::error::{bail, ensure, Context, Result};
-use std::io::{BufWriter, Write};
 use std::path::Path;
+
+/// Encode `values` (row-major, `width × height`) as 8-bit PGM bytes,
+/// linearly mapping `[lo, hi]` → [0, 255]. NaN renders as 0. The
+/// serving API returns these bytes directly; files are just them.
+pub fn encode_pgm(values: &[f32], width: usize, height: usize, lo: f32, hi: f32) -> Vec<u8> {
+    assert_eq!(values.len(), width * height, "pgm: size mismatch");
+    let header = format!("P5\n{width} {height}\n255\n");
+    let mut out = Vec::with_capacity(header.len() + values.len());
+    out.extend_from_slice(header.as_bytes());
+    let span = if hi > lo { hi - lo } else { 1.0 };
+    for &v in values {
+        let b = if v.is_nan() {
+            0u8
+        } else {
+            (((v - lo) / span).clamp(0.0, 1.0) * 255.0).round() as u8
+        };
+        out.push(b);
+    }
+    out
+}
+
+/// The finite min/max of the data (0..1 when nothing is finite) —
+/// the auto-scale range used by [`write_pgm_autoscale`].
+pub fn autoscale_range(values: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() {
+        (0.0, 1.0)
+    } else {
+        (lo, hi)
+    }
+}
 
 /// Write `values` (row-major, `width × height`) as an 8-bit PGM,
 /// linearly mapping `[lo, hi]` → [0, 255]. NaN renders as 0.
@@ -20,29 +57,9 @@ pub fn write_pgm(
     lo: f32,
     hi: f32,
 ) -> Result<()> {
-    assert_eq!(values.len(), width * height, "pgm: size mismatch");
     let path = path.as_ref();
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(file);
-    write!(w, "P5\n{width} {height}\n255\n")?;
-    let span = if hi > lo { hi - lo } else { 1.0 };
-    let mut row = Vec::with_capacity(width);
-    for y in 0..height {
-        row.clear();
-        for x in 0..width {
-            let v = values[y * width + x];
-            let b = if v.is_nan() {
-                0u8
-            } else {
-                (((v - lo) / span).clamp(0.0, 1.0) * 255.0).round() as u8
-            };
-            row.push(b);
-        }
-        w.write_all(&row)?;
-    }
-    w.flush()?;
-    Ok(())
+    std::fs::write(path, encode_pgm(values, width, height, lo, hi))
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 /// Convenience: auto-scale to the finite min/max of the data.
@@ -52,18 +69,7 @@ pub fn write_pgm_autoscale(
     width: usize,
     height: usize,
 ) -> Result<(f32, f32)> {
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &v in values {
-        if v.is_finite() {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-    }
-    if !lo.is_finite() {
-        lo = 0.0;
-        hi = 1.0;
-    }
+    let (lo, hi) = autoscale_range(values);
     write_pgm(path, values, width, height, lo, hi)?;
     Ok((lo, hi))
 }

@@ -126,6 +126,20 @@ pub fn monitor_delta_table(deltas: &[IngestDelta], n_pixels: usize) -> Table {
     t
 }
 
+/// Render `bfast client jobs` output: one row per job with its
+/// status and progress, as returned by `GET /v1/runs`.
+pub fn jobs_table(jobs: &[(u64, String, f64)]) -> Table {
+    let mut t = Table::new("analysis jobs", &["job", "status", "progress_pct"]);
+    for (id, status, progress) in jobs {
+        t.row(vec![
+            id.to_string(),
+            status.clone(),
+            format!("{:.1}", 100.0 * progress),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,6 +183,15 @@ mod tests {
     fn arity_checked() {
         let mut t = t();
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn jobs_table_renders_progress() {
+        let t = jobs_table(&[(1, "done".into(), 1.0), (2, "running".into(), 0.25)]);
+        let con = t.to_console();
+        assert!(con.contains("analysis jobs"));
+        assert!(con.contains("100.0"));
+        assert!(con.contains("25.0"));
     }
 
     #[test]

@@ -71,10 +71,10 @@ impl Tensor {
     }
 }
 
-/// Write one `.bten` file (exact round-trip through [`read_bten`],
-/// including NaN payloads — monitor state relies on this).
-pub fn write_bten(path: impl AsRef<Path>, tensor: &Tensor) -> Result<()> {
-    let path = path.as_ref();
+/// Serialise one tensor into `.bten` bytes (exact round-trip through
+/// [`bten_from_bytes`], including NaN payloads — monitor state and
+/// the serving API's layer-ingest bodies rely on this).
+pub fn bten_to_bytes(tensor: &Tensor) -> Result<Vec<u8>> {
     let shape = tensor.shape();
     let count: usize = shape.iter().product();
     ensure!(
@@ -109,19 +109,17 @@ pub fn write_bten(path: impl AsRef<Path>, tensor: &Tensor) -> Result<()> {
             }
         }
     }
-    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+    Ok(bytes)
 }
 
-/// Read one `.bten` file.
-pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
-    let path = path.as_ref();
-    let bytes =
-        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    ensure!(bytes.len() >= 6 && &bytes[..4] == b"BTEN", "{}: bad magic", path.display());
+/// Parse one tensor from `.bten` bytes. `label` names the source in
+/// errors (a path, a request body, …).
+pub fn bten_from_bytes(bytes: &[u8], label: &str) -> Result<Tensor> {
+    ensure!(bytes.len() >= 6 && &bytes[..4] == b"BTEN", "{label}: bad magic");
     let dtype = bytes[4];
     let ndim = bytes[5] as usize;
     let mut off = 6;
-    ensure!(bytes.len() >= off + 4 * ndim, "{}: truncated dims", path.display());
+    ensure!(bytes.len() >= off + 4 * ndim, "{label}: truncated dims");
     let mut shape = Vec::with_capacity(ndim);
     for _ in 0..ndim {
         shape.push(u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize);
@@ -131,7 +129,7 @@ pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
     let payload = &bytes[off..];
     match dtype {
         0 => {
-            ensure!(payload.len() == count * 4, "{}: f32 payload size", path.display());
+            ensure!(payload.len() == count * 4, "{label}: f32 payload size");
             let data = payload
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -139,7 +137,7 @@ pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
             Ok(Tensor::F32 { shape, data })
         }
         1 => {
-            ensure!(payload.len() == count * 4, "{}: i32 payload size", path.display());
+            ensure!(payload.len() == count * 4, "{label}: i32 payload size");
             let data = payload
                 .chunks_exact(4)
                 .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
@@ -147,15 +145,31 @@ pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
             Ok(Tensor::I32 { shape, data })
         }
         2 => {
-            ensure!(payload.len() == count * 8, "{}: f64 payload size", path.display());
+            ensure!(payload.len() == count * 8, "{label}: f64 payload size");
             let data = payload
                 .chunks_exact(8)
                 .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
                 .collect();
             Ok(Tensor::F64 { shape, data })
         }
-        other => bail!("{}: unknown dtype code {other}", path.display()),
+        other => bail!("{label}: unknown dtype code {other}"),
     }
+}
+
+/// Write one `.bten` file (exact round-trip through [`read_bten`],
+/// including NaN payloads — monitor state relies on this).
+pub fn write_bten(path: impl AsRef<Path>, tensor: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    let bytes = bten_to_bytes(tensor)?;
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Read one `.bten` file.
+pub fn read_bten(path: impl AsRef<Path>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    bten_from_bytes(&bytes, &path.display().to_string())
 }
 
 #[cfg(test)]

@@ -1,0 +1,389 @@
+//! Minimal HTTP/1.1 substrate (replaces hyper/axum for the offline
+//! build): request parsing, response writing, a one-shot client for
+//! `bfast client`/tests, percent decoding and base64 — everything the
+//! serving layer needs on plain `std::net` sockets.
+//!
+//! Deliberately small: one request per connection (`Connection:
+//! close`), `Content-Length` bodies only (no chunked encoding), ASCII
+//! headers. That is all the break-detection API requires, and it
+//! keeps the parser easy to audit.
+
+use crate::error::{bail, ensure, err, Context, Result};
+use crate::json::Value;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Largest accepted request head (request line + headers).
+pub const MAX_HEADER: usize = 64 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Percent-decoded path (`/v1/runs/7/map`).
+    pub path: String,
+    /// Percent-decoded query pairs in order of appearance.
+    pub query: Vec<(String, String)>,
+    /// Header (name, value) pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First query value for `key`, if present.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The Content-Type header ("" when absent).
+    pub fn content_type(&self) -> &str {
+        self.header("content-type").unwrap_or("")
+    }
+}
+
+/// An HTTP response ready to serialise.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, value: &Value) -> Response {
+        let mut body = value.to_string_compact().into_bytes();
+        body.push(b'\n');
+        Response { status, content_type: "application/json".into(), body }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8".into(), body: body.into() }
+    }
+
+    pub fn bytes(status: u16, content_type: &str, body: Vec<u8>) -> Response {
+        Response { status, content_type: content_type.into(), body }
+    }
+
+    /// A JSON error envelope: `{"error": "..."}`.
+    pub fn error(status: u16, message: &str) -> Response {
+        Response::json(status, &Value::obj(vec![("error", Value::Str(message.into()))]))
+    }
+}
+
+/// Reason phrases for the statuses the API uses.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Read and parse one request. Bodies are bounded by `max_body`
+/// (413-worthy errors surface as `Err`).
+pub fn read_request(stream: &mut impl Read, max_body: usize) -> Result<Request> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        ensure!(buf.len() <= MAX_HEADER, "request head exceeds {MAX_HEADER} bytes");
+        let n = stream.read(&mut tmp)?;
+        ensure!(n > 0, "connection closed mid-header");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end]).context("non-UTF-8 request head")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or_else(|| err!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| err!("malformed request line {request_line:?}"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| err!("malformed request line {request_line:?}"))?;
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    ensure!(version.starts_with("HTTP/1."), "unsupported protocol {version:?}");
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| err!("malformed header line {line:?}"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let content_length = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| err!("bad Content-Length {v:?}"))?,
+    };
+    ensure!(
+        content_length <= max_body,
+        "request body of {content_length} bytes exceeds the {max_body}-byte limit"
+    );
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+
+    let (path, query) = parse_target(target)?;
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Serialise one response (`Connection: close` — one request per
+/// connection keeps the server trivially correct under load).
+pub fn write_response(stream: &mut impl Write, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One client round-trip (the `bfast client` subcommand, the tests
+/// and the CI smoke step): connect, send `method path` with the given
+/// body, return `(status, response body)`.
+pub fn roundtrip(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?; // server closes after one response
+    parse_response(&raw)
+}
+
+/// Split a raw HTTP response into (status, body).
+pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let pos = find_subslice(raw, b"\r\n\r\n").ok_or_else(|| err!("malformed HTTP response"))?;
+    let head = std::str::from_utf8(&raw[..pos]).context("non-UTF-8 response head")?;
+    let status_line = head.lines().next().ok_or_else(|| err!("empty response"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .ok_or_else(|| err!("malformed status line {status_line:?}"))?
+        .parse()
+        .map_err(|_| err!("bad status in {status_line:?}"))?;
+    Ok((status, raw[pos + 4..].to_vec()))
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if hay.len() < needle.len() {
+        return None;
+    }
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn parse_target(target: &str) -> Result<(String, Vec<(String, String)>)> {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let mut pairs = Vec::new();
+    for part in query.split('&') {
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once('=').unwrap_or((part, ""));
+        pairs.push((percent_decode(k)?, percent_decode(v)?));
+    }
+    Ok((percent_decode(path)?, pairs))
+}
+
+/// Decode `%XX` escapes (and `+` as space) — enough for curl-built
+/// query strings.
+pub fn percent_decode(s: &str) -> Result<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes
+                    .get(i + 1..i + 3)
+                    .ok_or_else(|| err!("truncated %-escape in {s:?}"))?;
+                let v = u8::from_str_radix(std::str::from_utf8(hex)?, 16)
+                    .map_err(|_| err!("bad %-escape in {s:?}"))?;
+                out.push(v);
+                i += 3;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).map_err(|_| err!("%-escapes in {s:?} are not UTF-8"))
+}
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 (with padding) — the JSON layer-ingest transport.
+pub fn base64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Inverse of [`base64_encode`]; whitespace is ignored.
+pub fn base64_decode(text: &str) -> Result<Vec<u8>> {
+    fn val(c: u8) -> Result<u32> {
+        Ok(match c {
+            b'A'..=b'Z' => (c - b'A') as u32,
+            b'a'..=b'z' => (c - b'a' + 26) as u32,
+            b'0'..=b'9' => (c - b'0' + 52) as u32,
+            b'+' => 62,
+            b'/' => 63,
+            other => bail!("invalid base64 byte {other:#04x}"),
+        })
+    }
+    let bytes: Vec<u8> = text.bytes().filter(|b| !b.is_ascii_whitespace()).collect();
+    ensure!(bytes.len() % 4 == 0, "base64 length {} is not a multiple of 4", bytes.len());
+    let groups = bytes.len() / 4;
+    let mut out = Vec::with_capacity(groups * 3);
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        let pads = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        ensure!(pads <= 2, "too much base64 padding");
+        ensure!(pads == 0 || i == groups - 1, "misplaced base64 padding");
+        ensure!(
+            !chunk[..4 - pads].contains(&b'='),
+            "misplaced base64 padding"
+        );
+        let mut n = 0u32;
+        for &c in &chunk[..4 - pads] {
+            n = (n << 6) | val(c)?;
+        }
+        n <<= 6 * pads as u32;
+        let b = n.to_be_bytes();
+        out.push(b[1]);
+        if pads < 2 {
+            out.push(b[2]);
+        }
+        if pads < 1 {
+            out.push(b[3]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_query_and_body() {
+        let raw = b"POST /v1/sessions/alpha/ingest?t=41.5&format=json HTTP/1.1\r\n\
+                    Host: x\r\nContent-Type: application/json\r\nContent-Length: 9\r\n\r\n\
+                    {\"t\": 1}!extra";
+        let req = read_request(&mut Cursor::new(&raw[..]), 1 << 20).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/sessions/alpha/ingest");
+        assert_eq!(req.query_get("t"), Some("41.5"));
+        assert_eq!(req.query_get("format"), Some("json"));
+        assert_eq!(req.query_get("missing"), None);
+        assert_eq!(req.content_type(), "application/json");
+        assert_eq!(req.body, b"{\"t\": 1}!"); // pipelined bytes ignored
+    }
+
+    #[test]
+    fn rejects_oversized_body_and_garbage() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 100\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&raw[..]), 10).is_err());
+        assert!(read_request(&mut Cursor::new(&b"garbage"[..]), 10).is_err());
+        let raw = b"GET /x SPDY/9\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&raw[..]), 10).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_parse_response() {
+        let resp = Response::error(429, "queue full");
+        let mut wire = Vec::new();
+        write_response(&mut wire, &resp).unwrap();
+        let (status, body) = parse_response(&wire).unwrap();
+        assert_eq!(status, 429);
+        let v = crate::json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "queue full");
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Connection: close"));
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c%2Fd").unwrap(), "a b c/d");
+        assert_eq!(percent_decode("plain").unwrap(), "plain");
+        assert!(percent_decode("bad%2").is_err());
+        assert!(percent_decode("bad%zz").is_err());
+    }
+
+    #[test]
+    fn base64_roundtrip_all_lengths() {
+        for len in 0..40usize {
+            let data: Vec<u8> =
+                (0..len as u8).map(|b| b.wrapping_mul(37).wrapping_add(5)).collect();
+            let enc = base64_encode(&data);
+            assert_eq!(enc.len() % 4, 0);
+            assert_eq!(base64_decode(&enc).unwrap(), data, "len {len}");
+        }
+        assert_eq!(base64_encode(b"Man"), "TWFu");
+        assert_eq!(base64_encode(b"Ma"), "TWE=");
+        assert_eq!(base64_decode("TWE=").unwrap(), b"Ma");
+        for bad in ["TQ", "====", "T===", "=AAA", "TW=u", "T!Fu"] {
+            assert!(base64_decode(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,570 @@
+//! `bfast serve` — the break-detection service: a zero-dependency
+//! HTTP/1.1 server (hand-rolled on `std::net::TcpListener`, requests
+//! fanned out on the [`crate::threadpool::WorkerPool`]) in front of a
+//! bounded [`queue::JobQueue`] of analysis jobs and a persistent
+//! [`registry::SessionRegistry`] of live monitor sessions.
+//!
+//! The paper's point is that BFAST at device speed turns scene
+//! analysis into an interactive operation; this layer serves that
+//! capability: submit a scene, poll its job, fetch the break map —
+//! or keep a named session open and POST each satellite revisit as it
+//! arrives, getting the break/momax delta back in milliseconds. One
+//! [`SharedBfastRunner`] is shared by every worker thread.
+//!
+//! ## API
+//!
+//! | method & path                      | body            | reply |
+//! |------------------------------------|-----------------|-------|
+//! | `GET  /healthz`                    | —               | status JSON |
+//! | `GET  /metrics`                    | —               | Prometheus text |
+//! | `POST /v1/runs?n-hist=..&h=..`     | `.bsq` bytes    | 202 `{job}` or 429 |
+//! | `GET  /v1/runs`                    | —               | job list |
+//! | `GET  /v1/runs/{id}`               | —               | status + progress |
+//! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM |
+//! | `POST /v1/sessions/{name}?n-hist=..` | `.bsq` bytes  | 201 summary |
+//! | `GET  /v1/sessions[/{name}]`       | —               | list / summary |
+//! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or JSON `{t, layer_b64}` | ingest delta |
+//! | `GET  /v1/sessions/{name}/map[?format=pgm]` | —      | break map JSON / PGM |
+//! | `POST /shutdown`                   | —               | 200, then graceful stop |
+//!
+//! Every returned break map is **bit-identical** to a direct
+//! [`BfastRunner::run`](crate::coordinator::BfastRunner::run) of the
+//! same scene, and sessions resume bit-exactly across server restarts
+//! — both pinned over real sockets by `tests/serve.rs`.
+
+pub mod http;
+pub mod queue;
+pub mod registry;
+
+use crate::coordinator::{RunnerConfig, SharedBfastRunner};
+use crate::error::{bail, ensure, err, Context, Result};
+use crate::json::{self, Value};
+use crate::monitor::MonitorSession;
+use crate::params::BfastParams;
+use crate::raster::{io as rio, pgm, BreakMap};
+use crate::runtime::bten::{bten_from_bytes, Tensor};
+use crate::threadpool::{self, WorkerPool};
+use http::{Request, Response};
+use queue::{JobQueue, JobRecord, JobSpec, JobState, Scheduler, SubmitError};
+use registry::SessionRegistry;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server configuration (`bfast serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Session state directory; `None` = in-memory sessions only.
+    pub state_dir: Option<PathBuf>,
+    /// HTTP worker threads (0 = auto).
+    pub http_threads: usize,
+    /// Scheduler workers driving analysis runs (each run is itself
+    /// parallel, so 1–2 saturates the machine).
+    pub job_workers: usize,
+    /// Bounded job-queue capacity; submissions beyond it get 429.
+    pub queue_capacity: usize,
+    /// Largest accepted request body, in bytes.
+    pub max_body: usize,
+    /// Coordinator configuration for the shared runner.
+    pub runner: RunnerConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            state_dir: None,
+            http_threads: 0,
+            job_workers: 1,
+            queue_capacity: 32,
+            max_body: 256 << 20,
+            runner: RunnerConfig::default(),
+        }
+    }
+}
+
+struct ServerState {
+    addr: SocketAddr,
+    runner: Arc<SharedBfastRunner>,
+    queue: Arc<JobQueue>,
+    registry: SessionRegistry,
+    started: Instant,
+    max_body: usize,
+    shutdown: AtomicBool,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// A running `bfast serve` instance. [`Server::start`] returns once
+/// the socket is listening; requests are then served until
+/// `POST /shutdown` or [`Server::stop`], both of which drain the job
+/// queue, finish in-flight connections and persist every session
+/// before the accept thread exits.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: std::thread::JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind, resume persisted sessions, spawn the scheduler and HTTP
+    /// workers, and start accepting.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let http_threads = if cfg.http_threads == 0 {
+            threadpool::default_threads().clamp(2, 16)
+        } else {
+            cfg.http_threads
+        };
+        let runner = Arc::new(SharedBfastRunner::emulated_shared(cfg.runner.clone())?);
+        let queue = Arc::new(JobQueue::new(cfg.queue_capacity));
+        let registry =
+            SessionRegistry::open(cfg.state_dir.clone(), threadpool::default_threads())?;
+        let scheduler =
+            Scheduler::start(Arc::clone(&queue), Arc::clone(&runner), cfg.job_workers);
+        let state = Arc::new(ServerState {
+            addr,
+            runner,
+            queue,
+            registry,
+            started: Instant::now(),
+            max_body: cfg.max_body,
+            shutdown: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::spawn(move || {
+            let mut pool = WorkerPool::new(http_threads);
+            for conn in listener.incoming() {
+                if accept_state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let st = Arc::clone(&accept_state);
+                if pool.execute(move || handle_connection(stream, &st)).is_err() {
+                    break;
+                }
+            }
+            // graceful teardown: stop intake, drain accepted jobs,
+            // finish in-flight connections, persist sessions
+            accept_state.queue.shutdown();
+            scheduler.join();
+            pool.shutdown();
+            if let Err(e) = accept_state.registry.save_all() {
+                eprintln!("bfast serve: persisting sessions on shutdown: {e:#}");
+            }
+        });
+        Ok(Server { addr, state, accept })
+    }
+
+    /// The bound address (resolves an ephemeral port request).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the server shuts down (`POST /shutdown` or
+    /// [`Server::stop`] from another handle).
+    pub fn wait(self) -> Result<()> {
+        self.accept
+            .join()
+            .map_err(|_| err!("serve accept loop panicked"))
+    }
+
+    /// Trigger a graceful shutdown and wait for it to complete.
+    pub fn stop(self) -> Result<()> {
+        trigger_shutdown(&self.state);
+        self.wait()
+    }
+}
+
+/// Flag the shutdown and poke the accept loop out of `incoming()`.
+fn trigger_shutdown(state: &ServerState) {
+    state.shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(state.addr);
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let resp = match http::read_request(&mut stream, state.max_body) {
+        Ok(req) => route(&req, state),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    if resp.status >= 400 {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = http::write_response(&mut stream, &resp); // client may be gone
+}
+
+fn route(req: &Request, state: &ServerState) -> Response {
+    let path = req.path.clone();
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics(state),
+        ("POST", ["shutdown"]) => {
+            trigger_shutdown(state);
+            Response::json(
+                200,
+                &Value::obj(vec![("status", Value::Str("shutting down".into()))]),
+            )
+        }
+        ("POST", ["v1", "runs"]) => submit_run(req, state),
+        ("GET", ["v1", "runs"]) => list_runs(state),
+        ("GET", ["v1", "runs", id]) => run_status(id, state),
+        ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
+        ("GET", ["v1", "sessions"]) => list_sessions(state),
+        ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
+        ("GET", ["v1", "sessions", name]) => session_status(name, state),
+        ("POST", ["v1", "sessions", name, "ingest"]) => session_ingest(req, name, state),
+        ("GET", ["v1", "sessions", name, "map"]) => session_map(req, name, state),
+        (method, _) => Response::error(404, &format!("no route for {method} {}", req.path)),
+    }
+}
+
+// -- simple endpoints ----------------------------------------------------
+
+fn healthz(state: &ServerState) -> Response {
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("status", Value::Str("ok".into())),
+            ("backend", Value::Str(state.runner.platform())),
+            ("uptime_s", Value::Num(state.started.elapsed().as_secs_f64())),
+            ("sessions", Value::Num(state.registry.len() as f64)),
+            ("queue_depth", Value::Num(state.queue.depth() as f64)),
+        ]),
+    )
+}
+
+fn metrics(state: &ServerState) -> Response {
+    use std::fmt::Write as _;
+    let stats = state.queue.stats();
+    let mut out = String::new();
+    let _ = writeln!(out, "bfast_uptime_seconds {:.3}", state.started.elapsed().as_secs_f64());
+    let _ = writeln!(out, "bfast_http_requests_total {}", state.requests.load(Ordering::Relaxed));
+    let _ = writeln!(out, "bfast_http_errors_total {}", state.errors.load(Ordering::Relaxed));
+    let _ = writeln!(out, "bfast_jobs_submitted_total {}", stats.submitted);
+    let _ = writeln!(out, "bfast_jobs_rejected_total {}", stats.rejected);
+    let _ = writeln!(out, "bfast_jobs_queued {}", stats.queued);
+    let _ = writeln!(out, "bfast_jobs_running {}", stats.running);
+    let _ = writeln!(out, "bfast_jobs_done {}", stats.done);
+    let _ = writeln!(out, "bfast_jobs_failed {}", stats.failed);
+    let _ = writeln!(out, "bfast_queue_capacity {}", state.queue.capacity());
+    let _ = writeln!(out, "bfast_sessions {}", state.registry.len());
+    let _ = writeln!(
+        out,
+        "bfast_session_layers_ingested_total {}",
+        state.registry.layers_ingested()
+    );
+    out.push_str(&stats.phases.to_prometheus("bfast_run_phase_seconds"));
+    Response::text(200, &out)
+}
+
+// -- run endpoints -------------------------------------------------------
+
+fn q_usize(req: &Request, key: &str, default: usize) -> Result<usize> {
+    match req.query_get(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| err!("query {key}={s:?} is not an integer")),
+    }
+}
+
+fn q_f64(req: &Request, key: &str, default: f64) -> Result<f64> {
+    match req.query_get(key) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| err!("query {key}={s:?} is not a number")),
+    }
+}
+
+/// Analysis parameters from the query string (defaults mirror the
+/// CLI's `run` command; N comes from the uploaded stack).
+fn params_from_query(req: &Request, n_total: usize) -> Result<BfastParams> {
+    BfastParams::new(
+        n_total,
+        q_usize(req, "n-hist", 100)?,
+        q_usize(req, "h", 50)?,
+        q_usize(req, "k", 3)?,
+        q_f64(req, "freq", 23.0)?,
+        q_f64(req, "alpha", 0.05)?,
+    )
+}
+
+fn submit_run(req: &Request, state: &ServerState) -> Response {
+    let stack = match rio::stack_from_bytes(&req.body, "request body") {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let params = match params_from_query(req, stack.n_times()) {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match state.queue.submit(JobSpec { stack, params }) {
+        Ok(id) => Response::json(
+            202,
+            &Value::obj(vec![
+                ("job", Value::Num(id as f64)),
+                ("status", Value::Str("queued".into())),
+            ]),
+        ),
+        Err(SubmitError::Full { capacity }) => Response::error(
+            429,
+            &format!("job queue is full ({capacity} pending); retry later"),
+        ),
+        Err(SubmitError::ShuttingDown) => Response::error(503, "server is shutting down"),
+    }
+}
+
+fn job_json(rec: &JobRecord) -> Value {
+    let mut fields = vec![
+        ("job", Value::Num(rec.id as f64)),
+        ("status", Value::Str(rec.state.label().into())),
+        ("progress", Value::Num(rec.state.progress())),
+        ("pixels", Value::Num(rec.pixels as f64)),
+    ];
+    match &rec.state {
+        JobState::Running { chunks_done, chunks_total } => {
+            fields.push(("chunks_done", Value::Num(*chunks_done as f64)));
+            fields.push(("chunks_total", Value::Num(*chunks_total as f64)));
+        }
+        JobState::Failed { error } => fields.push(("error", Value::Str(error.clone()))),
+        _ => {}
+    }
+    if let Some(res) = &rec.result {
+        fields.push(("breaks", Value::Num(res.map.break_count() as f64)));
+        fields.push(("chunks", Value::Num(res.chunks as f64)));
+        fields.push(("artifact", Value::Str(res.artifact.clone())));
+        fields.push(("wall_s", Value::Num(res.wall.as_secs_f64())));
+    }
+    Value::obj(fields)
+}
+
+fn list_runs(state: &ServerState) -> Response {
+    let jobs = state.queue.jobs();
+    let arr = jobs
+        .into_iter()
+        .map(|(id, st)| {
+            Value::obj(vec![
+                ("job", Value::Num(id as f64)),
+                ("status", Value::Str(st.label().into())),
+                ("progress", Value::Num(st.progress())),
+            ])
+        })
+        .collect();
+    Response::json(200, &Value::obj(vec![("jobs", Value::Arr(arr))]))
+}
+
+fn parse_id(seg: &str) -> Result<u64> {
+    seg.parse().map_err(|_| err!("job id {seg:?} must be an integer"))
+}
+
+fn run_status(id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match state.queue.with_record(id, job_json) {
+        Some(v) => Response::json(200, &v),
+        None => Response::error(404, &format!("no job {id}")),
+    }
+}
+
+fn run_map(req: &Request, id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let resp = state.queue.with_record(id, |rec| match (&rec.state, &rec.result) {
+        (JobState::Done, Some(res)) => map_response(req, &res.map, rec.width, rec.height),
+        (JobState::Failed { error }, _) => {
+            Response::error(409, &format!("job {id} failed: {error}"))
+        }
+        _ => Response::error(409, &format!("job {id} is not finished")),
+    });
+    resp.unwrap_or_else(|| Response::error(404, &format!("no job {id}")))
+}
+
+/// Break map as JSON, or as a momax-heatmap PGM with `?format=pgm`.
+fn map_response(
+    req: &Request,
+    map: &BreakMap,
+    width: Option<usize>,
+    height: Option<usize>,
+) -> Response {
+    match req.query_get("format") {
+        Some("pgm") => {
+            let (w, h) = match (width, height) {
+                (Some(w), Some(h)) => (w, h),
+                _ => (map.len(), 1),
+            };
+            let (lo, hi) = pgm::autoscale_range(&map.momax);
+            Response::bytes(
+                200,
+                "image/x-portable-graymap",
+                pgm::encode_pgm(&map.momax, w, h, lo, hi),
+            )
+        }
+        Some(other) if other != "json" => {
+            Response::error(400, &format!("unknown format {other:?} (json|pgm)"))
+        }
+        _ => Response::json(200, &map_json(map, width, height)),
+    }
+}
+
+fn map_json(map: &BreakMap, width: Option<usize>, height: Option<usize>) -> Value {
+    let mut fields = vec![("pixels", Value::Num(map.len() as f64))];
+    if let (Some(w), Some(h)) = (width, height) {
+        fields.push(("width", Value::Num(w as f64)));
+        fields.push(("height", Value::Num(h as f64)));
+    }
+    fields.push((
+        "breaks",
+        Value::Arr(map.breaks.iter().map(|&b| Value::Num(b as f64)).collect()),
+    ));
+    fields.push((
+        "first",
+        Value::Arr(map.first.iter().map(|&f| Value::Num(f as f64)).collect()),
+    ));
+    fields.push((
+        "momax",
+        Value::Arr(map.momax.iter().map(|&x| Value::Num(x as f64)).collect()),
+    ));
+    Value::obj(fields)
+}
+
+// -- session endpoints ---------------------------------------------------
+
+fn session_summary(name: &str, s: &MonitorSession) -> Value {
+    let mut fields = vec![
+        ("name", Value::Str(name.to_string())),
+        ("pixels", Value::Num(s.n_pixels() as f64)),
+        ("layers_seen", Value::Num(s.n_seen() as f64)),
+        ("n_hist", Value::Num(s.params().n_hist as f64)),
+        ("h", Value::Num(s.params().h as f64)),
+        ("k", Value::Num(s.params().k as f64)),
+        ("lambda", Value::Num(s.params().lambda)),
+        ("last_t", Value::Num(s.time_axis().last().copied().unwrap_or(f64::NAN))),
+        ("breaks", Value::Num(s.break_count() as f64)),
+    ];
+    if let (Some(w), Some(h)) = s.geometry() {
+        fields.push(("width", Value::Num(w as f64)));
+        fields.push(("height", Value::Num(h as f64)));
+    }
+    Value::obj(fields)
+}
+
+fn list_sessions(state: &ServerState) -> Response {
+    let arr = state.registry.names().into_iter().map(Value::Str).collect();
+    Response::json(200, &Value::obj(vec![("sessions", Value::Arr(arr))]))
+}
+
+fn create_session(req: &Request, name: &str, state: &ServerState) -> Response {
+    if !registry::valid_name(name) {
+        return Response::error(
+            400,
+            &format!("invalid session name {name:?} (use [A-Za-z0-9_-], at most 64 chars)"),
+        );
+    }
+    let built = || -> Result<MonitorSession> {
+        let mut stack = rio::stack_from_bytes(&req.body, "request body")?;
+        let init_layers = q_usize(req, "init-layers", 0)?;
+        if init_layers > 0 {
+            stack = stack.prefix(init_layers)?;
+        }
+        let params = params_from_query(req, stack.n_times())?;
+        state.runner.start_monitor(&stack, &params)
+    };
+    let session = match built() {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let summary = session_summary(name, &session);
+    match state.registry.insert(name, session) {
+        Ok(()) => Response::json(201, &summary),
+        Err(e) => Response::error(409, &format!("{e:#}")),
+    }
+}
+
+fn session_status(name: &str, state: &ServerState) -> Response {
+    match state.registry.with_session(name, |s| session_summary(name, s)) {
+        Ok(v) => Response::json(200, &v),
+        Err(e) => Response::error(404, &format!("{e:#}")),
+    }
+}
+
+fn session_map(req: &Request, name: &str, state: &ServerState) -> Response {
+    match state.registry.with_session(name, |s| (s.break_map(), s.geometry())) {
+        Ok((map, (w, h))) => map_response(req, &map, w, h),
+        Err(e) => Response::error(404, &format!("{e:#}")),
+    }
+}
+
+fn session_ingest(req: &Request, name: &str, state: &ServerState) -> Response {
+    if !state.registry.contains(name) {
+        return Response::error(404, &format!("no session named {name:?}"));
+    }
+    let parsed = if req.content_type().to_ascii_lowercase().starts_with("application/json") {
+        parse_json_layer(req)
+    } else {
+        parse_bten_layer(req)
+    };
+    let (t, layer) = match parsed {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match state.registry.ingest(name, t, &layer) {
+        Ok(delta) => Response::json(200, &delta.to_json()),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+/// Octet-stream ingest: the body is a `.bten` f32 tensor, the
+/// acquisition time rides in `?t=`.
+fn parse_bten_layer(req: &Request) -> Result<(f64, Vec<f32>)> {
+    let t: f64 = req
+        .query_get("t")
+        .ok_or_else(|| err!("query parameter t is required for bten ingest"))?
+        .parse()
+        .map_err(|_| err!("query t is not a number"))?;
+    match bten_from_bytes(&req.body, "request body")? {
+        Tensor::F32 { data, .. } => Ok((t, data)),
+        other => bail!("layer tensor must be f32 (got shape {:?})", other.shape()),
+    }
+}
+
+/// JSON ingest: `{"t": 61.0, "layer_b64": "<base64 of f32 LE values>"}`.
+fn parse_json_layer(req: &Request) -> Result<(f64, Vec<f32>)> {
+    let v = json::parse(std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?)?;
+    let t = v.get("t")?.as_f64()?;
+    let bytes = http::base64_decode(v.get("layer_b64")?.as_str()?)?;
+    ensure!(
+        bytes.len() % 4 == 0,
+        "layer_b64 must decode to little-endian f32 values"
+    );
+    let layer = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((t, layer))
+}
+
+// ServerState crosses into pool workers behind an Arc — assert the
+// shared pieces really are thread-safe (compile-time only).
+#[allow(dead_code)]
+fn assert_thread_safe() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<SharedBfastRunner>();
+    assert_send_sync::<JobQueue>();
+    assert_send_sync::<SessionRegistry>();
+    assert_send_sync::<ServerState>();
+}

@@ -1,0 +1,401 @@
+//! The job scheduler behind `POST /v1/runs`: a **bounded FIFO** of
+//! analysis jobs with per-job status, and a small worker pool that
+//! drains it through one shared [`SharedBfastRunner`].
+//!
+//! Backpressure is explicit: once `capacity` jobs are waiting,
+//! [`JobQueue::submit`] refuses with [`SubmitError::Full`] and the
+//! HTTP layer answers 429 — the queue never grows without bound under
+//! a traffic spike. Each run is internally parallel (staging workers +
+//! executor), so a scheduler worker count of 1–2 keeps the machine
+//! saturated without oversubscribing it.
+//!
+//! Shutdown is graceful end to end: [`JobQueue::shutdown`] stops
+//! intake and wakes the workers, which finish every job already
+//! accepted before [`Scheduler::join`] returns.
+
+use crate::coordinator::{RunResult, SharedBfastRunner};
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::raster::TimeStack;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One analysis job: a scene plus its (validated) parameters.
+pub struct JobSpec {
+    pub stack: TimeStack,
+    pub params: BfastParams,
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    Running { chunks_done: usize, chunks_total: usize },
+    Done,
+    Failed { error: String },
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running { .. } => "running",
+            JobState::Done => "done",
+            JobState::Failed { .. } => "failed",
+        }
+    }
+
+    /// Fraction complete in [0, 1] (chunks executed / planned).
+    pub fn progress(&self) -> f64 {
+        match self {
+            JobState::Queued => 0.0,
+            JobState::Running { chunks_done, chunks_total } => {
+                if *chunks_total == 0 {
+                    0.0
+                } else {
+                    *chunks_done as f64 / *chunks_total as f64
+                }
+            }
+            JobState::Done | JobState::Failed { .. } => 1.0,
+        }
+    }
+}
+
+/// Everything the API needs to answer status/map queries for one job.
+pub struct JobRecord {
+    pub id: u64,
+    pub state: JobState,
+    /// Scene geometry recorded at submission (PGM rendering).
+    pub width: Option<usize>,
+    pub height: Option<usize>,
+    pub pixels: usize,
+    pub result: Option<RunResult>,
+}
+
+/// Why a submission was refused.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded FIFO is at capacity — the HTTP 429 signal.
+    Full { capacity: usize },
+    /// The queue is shutting down — HTTP 503.
+    ShuttingDown,
+}
+
+/// Counter snapshot for `/metrics`.
+pub struct QueueStats {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub failed: usize,
+    /// Engine phase times accumulated across every completed run.
+    pub phases: PhaseTimes,
+}
+
+/// Finished-job records retained for status/map queries. The oldest
+/// finished records beyond this are evicted — each one holds a full
+/// break map, so retention must be bounded for a long-lived server
+/// (pending/running jobs are never evicted).
+pub const MAX_FINISHED_RECORDS: usize = 256;
+
+struct QueueInner {
+    pending: VecDeque<(u64, JobSpec)>,
+    records: BTreeMap<u64, JobRecord>,
+    next_id: u64,
+    shutdown: bool,
+    submitted: u64,
+    rejected: u64,
+    phases: PhaseTimes,
+}
+
+impl QueueInner {
+    fn evict_finished(&mut self) {
+        let finished: Vec<u64> = self
+            .records
+            .iter()
+            .filter(|(_, r)| matches!(r.state, JobState::Done | JobState::Failed { .. }))
+            .map(|(&id, _)| id)
+            .collect();
+        if finished.len() > MAX_FINISHED_RECORDS {
+            // BTreeMap iterates id-ascending, so the front is oldest
+            for id in &finished[..finished.len() - MAX_FINISHED_RECORDS] {
+                self.records.remove(id);
+            }
+        }
+    }
+}
+
+/// Bounded FIFO of analysis jobs. See module docs.
+pub struct JobQueue {
+    capacity: usize,
+    inner: Mutex<QueueInner>,
+    ready: Condvar,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity: capacity.max(1),
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                records: BTreeMap::new(),
+                next_id: 1,
+                shutdown: false,
+                submitted: 0,
+                rejected: 0,
+                phases: PhaseTimes::new(),
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Enqueue a job; `Err(Full)` is the 429 backpressure signal.
+    pub fn submit(&self, spec: JobSpec) -> std::result::Result<u64, SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if inner.pending.len() >= self.capacity {
+            inner.rejected += 1;
+            return Err(SubmitError::Full { capacity: self.capacity });
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.submitted += 1;
+        inner.records.insert(
+            id,
+            JobRecord {
+                id,
+                state: JobState::Queued,
+                width: spec.stack.width,
+                height: spec.stack.height,
+                pixels: spec.stack.n_pixels(),
+                result: None,
+            },
+        );
+        inner.pending.push_back((id, spec));
+        drop(inner);
+        self.ready.notify_one();
+        Ok(id)
+    }
+
+    /// Blocking pop for scheduler workers; marks the job running.
+    /// Returns `None` only once the queue is shut down *and* drained.
+    fn next_job(&self) -> Option<(u64, JobSpec)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some((id, spec)) = inner.pending.pop_front() {
+                if let Some(rec) = inner.records.get_mut(&id) {
+                    rec.state = JobState::Running { chunks_done: 0, chunks_total: 0 };
+                }
+                return Some((id, spec));
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    fn set_progress(&self, id: u64, done: usize, total: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.records.get_mut(&id) {
+            rec.state = JobState::Running { chunks_done: done, chunks_total: total };
+        }
+    }
+
+    fn complete(&self, id: u64, result: RunResult) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.phases.merge(&result.phases);
+        if let Some(rec) = inner.records.get_mut(&id) {
+            rec.state = JobState::Done;
+            rec.result = Some(result);
+        }
+        inner.evict_finished();
+    }
+
+    fn fail(&self, id: u64, error: String) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.records.get_mut(&id) {
+            rec.state = JobState::Failed { error };
+        }
+        inner.evict_finished();
+    }
+
+    /// Read one job's record under the lock.
+    pub fn with_record<T>(&self, id: u64, f: impl FnOnce(&JobRecord) -> T) -> Option<T> {
+        let inner = self.inner.lock().unwrap();
+        inner.records.get(&id).map(f)
+    }
+
+    /// `(id, state)` of every retained job, in submission order
+    /// (finished records beyond [`MAX_FINISHED_RECORDS`] are evicted).
+    pub fn jobs(&self) -> Vec<(u64, JobState)> {
+        let inner = self.inner.lock().unwrap();
+        inner.records.values().map(|r| (r.id, r.state.clone())).collect()
+    }
+
+    /// Jobs waiting for a worker.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// Counters + per-state tallies + accumulated phase times.
+    pub fn stats(&self) -> QueueStats {
+        let inner = self.inner.lock().unwrap();
+        let mut stats = QueueStats {
+            submitted: inner.submitted,
+            rejected: inner.rejected,
+            queued: 0,
+            running: 0,
+            done: 0,
+            failed: 0,
+            phases: inner.phases.clone(),
+        };
+        for r in inner.records.values() {
+            match &r.state {
+                JobState::Queued => stats.queued += 1,
+                JobState::Running { .. } => stats.running += 1,
+                JobState::Done => stats.done += 1,
+                JobState::Failed { .. } => stats.failed += 1,
+            }
+        }
+        stats
+    }
+
+    /// Stop accepting work and wake every worker; jobs already
+    /// accepted still run to completion before the workers exit.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.ready.notify_all();
+    }
+}
+
+/// Scheduler workers draining the queue through one shared runner.
+pub struct Scheduler {
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn start(
+        queue: Arc<JobQueue>,
+        runner: Arc<SharedBfastRunner>,
+        workers: usize,
+    ) -> Scheduler {
+        let workers = (0..workers.max(1))
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let runner = Arc::clone(&runner);
+                std::thread::spawn(move || {
+                    while let Some((id, spec)) = queue.next_job() {
+                        // contain panics: a panicking run must mark its
+                        // job failed, not kill the worker (with the
+                        // default single worker that would stall the
+                        // whole queue, jobs stuck in "running" forever)
+                        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            runner.run_with_progress(&spec.stack, &spec.params, |done, total| {
+                                queue.set_progress(id, done, total)
+                            })
+                        }));
+                        match res {
+                            Ok(Ok(r)) => queue.complete(id, r),
+                            Ok(Err(e)) => queue.fail(id, format!("{e:#}")),
+                            Err(_) => queue.fail(id, "analysis panicked".to_string()),
+                        }
+                    }
+                })
+            })
+            .collect();
+        Scheduler { workers }
+    }
+
+    /// Join every worker (call after [`JobQueue::shutdown`]).
+    pub fn join(self) {
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunnerConfig;
+    use crate::synth::ArtificialDataset;
+
+    fn spec(m: usize, seed: u64) -> JobSpec {
+        let params = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+        let stack = ArtificialDataset::new(params.clone(), m, seed).generate().stack;
+        JobSpec { stack, params }
+    }
+
+    #[test]
+    fn backpressure_rejects_submissions_beyond_capacity() {
+        // no scheduler attached: the queue fills deterministically
+        let q = JobQueue::new(2);
+        assert!(q.submit(spec(4, 1)).is_ok());
+        assert!(q.submit(spec(4, 2)).is_ok());
+        match q.submit(spec(4, 3)) {
+            Err(SubmitError::Full { capacity }) => assert_eq!(capacity, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+        let stats = q.stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.queued, 2);
+        q.shutdown();
+        match q.submit(spec(4, 4)) {
+            Err(SubmitError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scheduler_drains_jobs_and_records_results() {
+        let q = Arc::new(JobQueue::new(8));
+        let runner =
+            Arc::new(SharedBfastRunner::emulated_shared(RunnerConfig::default()).unwrap());
+        let ids: Vec<u64> = (0..3).map(|i| q.submit(spec(40, i)).unwrap()).collect();
+        let sched = Scheduler::start(Arc::clone(&q), runner, 2);
+        q.shutdown(); // graceful: accepted jobs still run
+        sched.join();
+        for id in ids {
+            let (label, breaks) = q
+                .with_record(id, |rec| {
+                    (rec.state.label(), rec.result.as_ref().map(|r| r.map.len()))
+                })
+                .unwrap();
+            assert_eq!(label, "done", "job {id}");
+            assert_eq!(breaks, Some(40), "job {id}");
+        }
+        let stats = q.stats();
+        assert_eq!(stats.done, 3);
+        assert_eq!(stats.failed, 0);
+        assert!(stats.phases.total().as_secs_f64() >= 0.0);
+    }
+
+    #[test]
+    fn failed_jobs_carry_their_error() {
+        let q = Arc::new(JobQueue::new(4));
+        let runner =
+            Arc::new(SharedBfastRunner::emulated_shared(RunnerConfig::default()).unwrap());
+        // params/stack mismatch surfaces as a failed job, not a panic
+        let params = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+        let stack = crate::raster::TimeStack::zeros(10, 4);
+        let id = q.submit(JobSpec { stack, params }).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner, 1);
+        q.shutdown();
+        sched.join();
+        let state = q.with_record(id, |rec| rec.state.clone()).unwrap();
+        match state {
+            JobState::Failed { error } => assert!(error.contains("10"), "{error}"),
+            other => panic!("expected failure, got {other:?}"),
+        }
+    }
+}

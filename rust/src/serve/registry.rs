@@ -1,0 +1,213 @@
+//! The multi-tenant session registry: named, long-lived
+//! [`MonitorSession`]s that HTTP clients create, feed one layer at a
+//! time and query for break/momax deltas — the PR 2 near-real-time
+//! ingest loop made network-reachable.
+//!
+//! Every session sits behind its own mutex, so concurrent clients'
+//! requests against one session serialise cleanly while different
+//! sessions proceed in parallel. With a state directory configured,
+//! each session persists under `<dir>/<name>/` through the monitor
+//! session's staged save, and [`SessionRegistry::open`] resumes every
+//! one of them — a killed-and-restarted server continues **bit-exact**
+//! after the last acknowledged ingest (the save/load contract pinned
+//! by `tests/monitor.rs`, exercised over sockets by `tests/serve.rs`).
+
+use crate::error::{ensure, err, Context, Result};
+use crate::monitor::{IngestDelta, MonitorSession};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Session names become path components under the state directory —
+/// keep them boring: `[A-Za-z0-9_-]`, at most 64 bytes.
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+}
+
+/// Registry of named monitor sessions. See module docs.
+pub struct SessionRegistry {
+    state_dir: Option<PathBuf>,
+    sessions: Mutex<BTreeMap<String, Arc<Mutex<MonitorSession>>>>,
+    ingested: AtomicU64,
+}
+
+impl SessionRegistry {
+    /// Open a registry. With a state directory, every
+    /// `<dir>/<name>/session.json` is resumed (`threads` tunes the
+    /// resumed sessions' ingest sharding in this process only).
+    pub fn open(state_dir: Option<PathBuf>, threads: usize) -> Result<Self> {
+        let mut sessions = BTreeMap::new();
+        if let Some(dir) = &state_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating state dir {}", dir.display()))?;
+            for entry in std::fs::read_dir(dir)
+                .with_context(|| format!("scanning state dir {}", dir.display()))?
+            {
+                let entry = entry?;
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if !valid_name(&name) {
+                    continue; // staging siblings (*.tmp / *.old), strays
+                }
+                if !entry.path().join("session.json").exists() {
+                    continue;
+                }
+                let session = MonitorSession::load(entry.path(), threads)
+                    .with_context(|| format!("resuming session {name:?}"))?;
+                sessions.insert(name, Arc::new(Mutex::new(session)));
+            }
+        }
+        Ok(Self {
+            state_dir,
+            sessions: Mutex::new(sessions),
+            ingested: AtomicU64::new(0),
+        })
+    }
+
+    /// Register (and persist) a freshly primed session.
+    pub fn insert(&self, name: &str, session: MonitorSession) -> Result<()> {
+        ensure!(
+            valid_name(name),
+            "invalid session name {name:?} (use [A-Za-z0-9_-], at most 64 chars)"
+        );
+        let arc = Arc::new(Mutex::new(session));
+        {
+            let mut map = self.sessions.lock().unwrap();
+            ensure!(!map.contains_key(name), "session {name:?} already exists");
+            map.insert(name.to_string(), Arc::clone(&arc));
+        }
+        if let Err(e) = self.persist(name, &arc) {
+            self.sessions.lock().unwrap().remove(name);
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.sessions.lock().unwrap().contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.sessions.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Layers ingested through this registry since it opened.
+    pub fn layers_ingested(&self) -> u64 {
+        self.ingested.load(Ordering::Relaxed)
+    }
+
+    fn get(&self, name: &str) -> Result<Arc<Mutex<MonitorSession>>> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| err!("no session named {name:?}"))
+    }
+
+    /// Run `f` with the named session locked — the serialisation point
+    /// that keeps concurrent clients' reads consistent with ingests.
+    pub fn with_session<T>(&self, name: &str, f: impl FnOnce(&MonitorSession) -> T) -> Result<T> {
+        let arc = self.get(name)?;
+        let guard = arc.lock().unwrap();
+        Ok(f(&guard))
+    }
+
+    /// Ingest one layer into the named session, persisting the grown
+    /// state before returning — a killed-and-restarted server resumes
+    /// exactly after the last acknowledged ingest.
+    pub fn ingest(&self, name: &str, t: f64, layer: &[f32]) -> Result<IngestDelta> {
+        let arc = self.get(name)?;
+        let mut guard = arc.lock().unwrap();
+        let delta = guard.ingest(t, layer)?;
+        if let Some(dir) = &self.state_dir {
+            guard
+                .save(dir.join(name))
+                .with_context(|| format!("persisting session {name:?}"))?;
+        }
+        self.ingested.fetch_add(1, Ordering::Relaxed);
+        Ok(delta)
+    }
+
+    fn persist(&self, name: &str, session: &Arc<Mutex<MonitorSession>>) -> Result<()> {
+        if let Some(dir) = &self.state_dir {
+            session
+                .lock()
+                .unwrap()
+                .save(dir.join(name))
+                .with_context(|| format!("persisting session {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Persist every session (the shutdown path; each ingest already
+    /// saved, so this only matters for just-created idle sessions).
+    pub fn save_all(&self) -> Result<()> {
+        let map = self.sessions.lock().unwrap();
+        for (name, arc) in map.iter() {
+            self.persist(name, arc)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::MonitorConfig;
+    use crate::params::BfastParams;
+    use crate::synth::ArtificialDataset;
+
+    fn session(m: usize, seed: u64) -> MonitorSession {
+        let params = BfastParams::with_lambda(44, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = ArtificialDataset::new(params.clone(), m, seed).generate();
+        MonitorSession::start(&data.stack, &params, MonitorConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn name_validation() {
+        for good in ["a", "forest-2026", "Tile_007", &"x".repeat(64)] {
+            assert!(valid_name(good), "{good:?}");
+        }
+        for bad in ["", "a/b", "..", "a b", "é", &"x".repeat(65)] {
+            assert!(!valid_name(bad), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn insert_rejects_duplicates_and_bad_names() {
+        let reg = SessionRegistry::open(None, 2).unwrap();
+        reg.insert("alpha", session(6, 1)).unwrap();
+        assert!(reg.contains("alpha"));
+        assert!(reg.insert("alpha", session(6, 2)).is_err());
+        assert!(reg.insert("../evil", session(6, 3)).is_err());
+        assert_eq!(reg.names(), vec!["alpha".to_string()]);
+    }
+
+    #[test]
+    fn state_dir_roundtrip_resumes_sessions() {
+        let dir = std::env::temp_dir().join(format!("bfast_reg_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        {
+            let reg = SessionRegistry::open(Some(dir.clone()), 2).unwrap();
+            reg.insert("tile-1", session(8, 4)).unwrap();
+            reg.insert("tile-2", session(5, 5)).unwrap();
+        }
+        let reg = SessionRegistry::open(Some(dir.clone()), 2).unwrap();
+        assert_eq!(reg.names(), vec!["tile-1".to_string(), "tile-2".to_string()]);
+        let px = reg.with_session("tile-2", |s| s.n_pixels()).unwrap();
+        assert_eq!(px, 5);
+        assert!(reg.with_session("missing", |_| ()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,7 +7,9 @@
 //! threads: a static chunk grid pulled from an atomic counter, so load
 //! imbalance self-corrects without work-stealing machinery.
 
+use crate::error::{err, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 /// Number of worker threads to use: `BFAST_THREADS` env override or
 /// the machine's available parallelism.
@@ -72,6 +74,79 @@ where
         }
     });
     out
+}
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent FIFO worker pool for task fan-out (the `serve`
+/// front-end hands every accepted connection to one). Unlike
+/// [`parallel_ranges`] — scoped, data-parallel, borrows its input —
+/// jobs here are `'static` closures queued through a channel, and
+/// [`WorkerPool::shutdown`] is **graceful**: it closes the queue,
+/// lets the workers drain every job already submitted, and joins
+/// them before returning.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<PoolJob>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (at least one) sharing one FIFO queue.
+    pub fn new(threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // take the next job while holding the lock, run it
+                    // after releasing (a panicking job must not poison
+                    // the queue for its siblings)
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    match job {
+                        // contain panics: a panicking job must not
+                        // shrink the pool (the serve front-end would
+                        // otherwise bleed workers until the accept
+                        // loop dies)
+                        Ok(job) => {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                        }
+                        Err(_) => break, // queue closed: drained + done
+                    }
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue one job. Fails only after [`WorkerPool::shutdown`].
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| err!("worker pool is shut down"))?;
+        tx.send(Box::new(job)).map_err(|_| err!("worker pool workers have exited"))
+    }
+
+    /// Graceful shutdown: close the queue, drain what was already
+    /// submitted, join every worker. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closing the sender ends every recv loop
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 /// Split a mutable slice into disjoint per-index cells that different
@@ -187,6 +262,42 @@ mod tests {
             }
         });
         assert!(data.iter().enumerate().all(|(i, &x)| x == i as u32));
+    }
+
+    #[test]
+    fn worker_pool_drains_all_jobs_on_shutdown() {
+        let mut pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let hits = Arc::clone(&hits);
+            pool.execute(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.shutdown(); // graceful: every queued job runs first
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert!(pool.execute(|| {}).is_err(), "execute after shutdown must fail");
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_jobs_at_full_strength() {
+        // a single-worker pool proves the panicking job did not kill
+        // its worker: the follow-up jobs must still run on it
+        let mut pool = WorkerPool::new(1);
+        let hits = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            let _ = pool.execute(|| panic!("job panic must not kill the pool"));
+        }
+        for _ in 0..10 {
+            let hits = Arc::clone(&hits);
+            pool.execute(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
     }
 
     #[test]

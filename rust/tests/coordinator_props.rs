@@ -138,7 +138,7 @@ fn prop_emulated_pipeline_equals_cpu_engine() {
         let seed = g.u32(0..=9999) as u64;
         let data = ArtificialDataset::new(params.clone(), m, seed).generate();
         let backend = Box::new(EmulatedDevice::new().with_m_chunk(mc));
-        let mut runner = BfastRunner::new(backend, RunnerConfig::default())
+        let runner = BfastRunner::new(backend, RunnerConfig::default())
             .map_err(|e| e.to_string())?;
         let res = runner.run(&data.stack, &params).map_err(|e| e.to_string())?;
         if res.chunks != m.div_ceil(mc) {
@@ -169,7 +169,7 @@ fn break_map_deterministic_across_scheduling_grid() {
     let run = |queue_depth: usize, staging_threads: usize, m_chunk: usize| {
         let backend = Box::new(EmulatedDevice::new().with_m_chunk(m_chunk));
         let cfg = RunnerConfig { queue_depth, staging_threads, ..Default::default() };
-        let mut runner = BfastRunner::new(backend, cfg).unwrap();
+        let runner = BfastRunner::new(backend, cfg).unwrap();
         runner.run(&data.stack, &params).unwrap().map
     };
     let reference = run(2, 2, 1024);

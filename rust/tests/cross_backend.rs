@@ -21,7 +21,7 @@ fn three_implementations_agree_on_artificial_scene() {
     let data = ArtificialDataset::new(p.clone(), 1337, 5).generate();
 
     // 1. coordinated emulated pipeline (chunked, staged, padded)
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let res = runner.run(&data.stack, &p).unwrap();
 
     // 2. fused multi-core CPU engine (scene-wide)
@@ -64,7 +64,7 @@ fn agreement_holds_across_seeds_and_sizes() {
     let p = params();
     for (m, seed) in [(1usize, 0u64), (97, 1), (512, 2), (1025, 3)] {
         let data = ArtificialDataset::new(p.clone(), m, seed).generate();
-        let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+        let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
         let res = runner.run(&data.stack, &p).unwrap();
         let direct_map = DirectBfast::new(p.clone(), &data.stack.time_axis)
             .unwrap()
@@ -84,7 +84,7 @@ fn detection_quality_matches_ground_truth_through_the_pipeline() {
     let data = ArtificialDataset::new(p.clone(), 400, 1)
         .with_noise(0.005, 0.5)
         .generate();
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let res = runner.run(&data.stack, &p).unwrap();
     let (tpr, fpr) = data.score(&res.map.breaks);
     assert_eq!(tpr, 1.0, "all injected breaks found");

@@ -23,7 +23,7 @@ fn fused_emulated_equals_cpu_on_synthetic() {
     // m chosen to exercise multiple chunks + a padded tail (default
     // emulated contract has m_chunk = 1024)
     let data = ArtificialDataset::new(params.clone(), 2500, 17).generate();
-    let mut runner = BfastRunner::emulated(RunnerConfig {
+    let runner = BfastRunner::emulated(RunnerConfig {
         artifact: Some("small".into()),
         ..Default::default()
     })
@@ -69,7 +69,7 @@ fn custom_chunk_width_changes_plan_not_results() {
     let data = ArtificialDataset::new(params.clone(), 700, 11).generate();
     let run_mc = |mc: usize| {
         let backend = Box::new(EmulatedDevice::new().with_m_chunk(mc));
-        let mut r = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
+        let r = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
         r.run(&data.stack, &params).unwrap()
     };
     let a = run_mc(256); // 3 chunks
@@ -86,7 +86,7 @@ fn chile_scene_irregular_axis() {
     let scene = ChileScene::scaled(48, 40, 23);
     let params = scene.params();
     let (stack, _) = scene.generate();
-    let mut runner = BfastRunner::emulated(RunnerConfig {
+    let runner = BfastRunner::emulated(RunnerConfig {
         artifact: Some("chile".into()),
         ..Default::default()
     })
@@ -110,7 +110,7 @@ fn queue_depth_and_threads_do_not_change_results() {
     let data = ArtificialDataset::new(params.clone(), 3100, 9).generate();
     let mut outs = Vec::new();
     for (depth, threads) in [(1, 1), (2, 2), (4, 3)] {
-        let mut runner = BfastRunner::emulated(RunnerConfig {
+        let runner = BfastRunner::emulated(RunnerConfig {
             queue_depth: depth,
             staging_threads: threads,
             ..Default::default()
@@ -128,7 +128,7 @@ fn queue_depth_and_threads_do_not_change_results() {
 #[test]
 fn single_pixel_and_exact_chunk_sizes() {
     let params = BfastParams::paper_synthetic();
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     for m in [1usize, 1023, 1024, 1025, 2048] {
         let data = ArtificialDataset::new(params.clone(), m, 31).generate();
         let res = runner.run(&data.stack, &params).unwrap();
@@ -144,7 +144,7 @@ fn single_pixel_and_exact_chunk_sizes() {
 #[test]
 fn empty_scene_runs_clean() {
     let params = BfastParams::paper_synthetic();
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let stack = bfast::raster::TimeStack::zeros(params.n_total, 0);
     let res = runner.run(&stack, &params).unwrap();
     assert_eq!(res.chunks, 0);
@@ -162,7 +162,7 @@ fn missing_values_filled_in_staging() {
         let t = 1 + px % (params.n_total - 2);
         holey.data_mut()[t * m + px] = f32::NAN;
     }
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let res = runner.run(&holey, &params).unwrap();
     // host-side fill then run must give identical results
     let mut prefilled = holey.clone();
@@ -177,7 +177,7 @@ fn wrong_shape_params_are_rejected_by_pinned_backend() {
     // A backend pinned to one contract shape (like a real AOT
     // artifact) must reject analyses with a different shape.
     let backend = Box::new(EmulatedDevice::new().with_shape(200, 100, 50, 3));
-    let mut runner = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::new(backend, RunnerConfig::default()).unwrap();
     let params = BfastParams::new(100, 50, 25, 3, 23.0, 0.05).unwrap();
     let stack = bfast::raster::TimeStack::zeros(100, 10);
     let err = runner.run(&stack, &params).unwrap_err().to_string();
@@ -187,7 +187,7 @@ fn wrong_shape_params_are_rejected_by_pinned_backend() {
 #[test]
 fn layer_mismatch_rejected() {
     let params = BfastParams::paper_synthetic();
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let stack = bfast::raster::TimeStack::zeros(10, 4);
     assert!(runner.run(&stack, &params).is_err());
 }
@@ -214,7 +214,7 @@ mod pjrt_artifacts {
         let Some(dir) = artifacts() else { return };
         let params = BfastParams::paper_synthetic();
         let data = ArtificialDataset::new(params.clone(), 2500, 17).generate();
-        let mut runner = BfastRunner::from_manifest_dir(
+        let runner = BfastRunner::from_manifest_dir(
             &dir,
             RunnerConfig { artifact: Some("small".into()), ..Default::default() },
         )
@@ -234,7 +234,7 @@ mod pjrt_artifacts {
         let params = BfastParams::paper_synthetic();
         let data = ArtificialDataset::new(params.clone(), 900, 5).generate();
         let run = |name: &str| {
-            let mut r = BfastRunner::from_manifest_dir(
+            let r = BfastRunner::from_manifest_dir(
                 &dir,
                 RunnerConfig { artifact: Some(name.into()), ..Default::default() },
             )

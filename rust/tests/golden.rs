@@ -225,7 +225,7 @@ fn emulated_pipeline_matches_python_oracle() {
     // the full coordinated pipeline, raw (gappy) input: staging fills
     for g in load_all() {
         let stack = stack_of(&g);
-        let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+        let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
         let res = runner.run(&stack, &g.params).unwrap();
         assert_eq!(res.map.breaks, g.breaks, "{} breaks", g.label);
         assert_eq!(res.map.first, g.first, "{} first", g.label);

@@ -37,7 +37,7 @@ fn params_at(base: &BfastParams, n_total: usize) -> BfastParams {
 /// Fresh coordinated run over a prefix of the archive.
 fn fresh_map(stack: &TimeStack, params: &BfastParams, m_chunk: usize) -> BreakMap {
     let backend = EmulatedDevice::new().with_m_chunk(m_chunk);
-    let mut runner =
+    let runner =
         BfastRunner::new(Box::new(backend), RunnerConfig::default()).unwrap();
     runner.run(stack, params).unwrap().map
 }
@@ -245,7 +245,7 @@ fn all_nan_pixel_yields_defined_no_break_through_every_engine() {
         .unwrap();
     check("fused cpu", fused.breaks[dead], fused.first[dead], fused.momax[dead]);
 
-    let mut runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+    let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
     let res = runner.run(stack, &p).unwrap();
     check("emulated pipeline", res.map.breaks[dead], res.map.first[dead], res.map.momax[dead]);
 

@@ -1,0 +1,445 @@
+//! `bfast serve` integration suite — everything over real loopback
+//! sockets: break maps served by the API must be **bit-identical** to
+//! direct `BfastRunner::run`s of the same scenes, 64 concurrent
+//! clients must each get that bit-identical answer, one session must
+//! serialise concurrent readers against live ingests, and a
+//! killed-and-restarted server must resume its monitor sessions
+//! bit-exactly from the state directory.
+
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{io as rio, BreakMap, TimeStack};
+use bfast::runtime::bten::{bten_to_bytes, Tensor};
+use bfast::serve::http::{base64_encode, roundtrip};
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Analysis shape shared by every test: N=48, n=36, h=12, k=1.
+const PQ: &str = "?n-hist=36&h=12&k=1&freq=12&alpha=0.05";
+
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(params_new(48), m, seed).generate();
+    if m >= 8 {
+        let d = data.stack.data_mut();
+        for t in 0..48 {
+            d[t * m] = f32::NAN; // dead pixel
+        }
+        for t in 10..14 {
+            d[t * m + 3] = f32::NAN; // cloud hole
+        }
+    }
+    data.stack
+}
+
+fn start_server(state_dir: Option<std::path::PathBuf>, queue: usize, workers: usize) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        state_dir,
+        http_threads: 8,
+        job_workers: workers,
+        queue_capacity: queue,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn post(addr: &str, path: &str, content_type: &str, body: &[u8]) -> (u16, Vec<u8>) {
+    roundtrip(addr, "POST", path, content_type, body).unwrap()
+}
+
+fn parse_json(body: &[u8]) -> json::Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+fn parse_map(body: &[u8]) -> BreakMap {
+    let v = parse_json(body);
+    let ints = |key: &str| -> Vec<i32> {
+        v.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect()
+    };
+    let momax = v
+        .get("momax")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    BreakMap { breaks: ints("breaks"), first: ints("first"), momax }
+}
+
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: momax differs at px {px}: {x} vs {y}");
+    }
+}
+
+fn wait_job(addr: &str, id: u64) -> json::Value {
+    for _ in 0..1500 {
+        let (status, body) = get(addr, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        match v.get("status").unwrap().as_str().unwrap() {
+            "done" => return v,
+            "failed" => panic!("job {id} failed: {}", String::from_utf8_lossy(&body)),
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    panic!("job {id} did not finish in time");
+}
+
+#[test]
+fn healthz_metrics_and_unknown_routes() {
+    let server = start_server(None, 4, 1);
+    let addr = server.addr().to_string();
+    let (status, body) = get(&addr, "/healthz");
+    assert_eq!(status, 200);
+    let v = parse_json(&body);
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert!(v.get("backend").unwrap().as_str().unwrap().contains("emulated"));
+
+    let (status, body) = get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("bfast_uptime_seconds"), "{text}");
+    assert!(text.contains("bfast_queue_capacity 4"), "{text}");
+
+    let (status, _) = get(&addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, _) = post(&addr, "/healthz", "", &[]);
+    assert_eq!(status, 404); // wrong method
+    let (status, _) = post(&addr, "/v1/runs", "application/octet-stream", b"not a stack");
+    assert_eq!(status, 400);
+    server.stop().unwrap();
+}
+
+#[test]
+fn submitted_run_matches_direct_run_bitwise() {
+    let stack = scene(200, 7);
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(&stack, &params_new(48))
+        .unwrap()
+        .map;
+
+    let server = start_server(None, 4, 1);
+    let addr = server.addr().to_string();
+    let (status, body) = post(
+        &addr,
+        &format!("/v1/runs{PQ}"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    );
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64;
+    let done = wait_job(&addr, id);
+    assert_eq!(done.get("pixels").unwrap().as_usize().unwrap(), 200);
+
+    let (status, body) = get(&addr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "served map vs direct run");
+
+    // the momax heatmap renders as a valid PGM too
+    let (status, body) = get(&addr, &format!("/v1/runs/{id}/map?format=pgm"));
+    assert_eq!(status, 200);
+    assert!(body.starts_with(b"P5\n"), "not a PGM");
+    server.stop().unwrap();
+}
+
+/// Acceptance: ≥ 64 concurrent connections, every returned break map
+/// bit-identical to a fresh single-threaded run of the same scene.
+#[test]
+fn sixty_four_concurrent_clients_get_bit_identical_maps() {
+    let stack = scene(64, 21);
+    let reference = Arc::new(
+        BfastRunner::emulated(RunnerConfig::default())
+            .unwrap()
+            .run(&stack, &params_new(48))
+            .unwrap()
+            .map,
+    );
+    let bytes = Arc::new(rio::stack_to_bytes(&stack));
+
+    let server = start_server(None, 64, 2);
+    let addr = server.addr().to_string();
+    let handles: Vec<_> = (0..64)
+        .map(|i| {
+            let addr = addr.clone();
+            let bytes = Arc::clone(&bytes);
+            let reference = Arc::clone(&reference);
+            std::thread::spawn(move || {
+                // submit (retrying politely on 429 backpressure)
+                let id = loop {
+                    let (status, body) = post(
+                        &addr,
+                        &format!("/v1/runs{PQ}"),
+                        "application/octet-stream",
+                        &bytes,
+                    );
+                    match status {
+                        202 => {
+                            break parse_json(&body).get("job").unwrap().as_usize().unwrap()
+                                as u64
+                        }
+                        429 => std::thread::sleep(Duration::from_millis(10)),
+                        other => {
+                            panic!("client {i}: HTTP {other}: {}", String::from_utf8_lossy(&body))
+                        }
+                    }
+                };
+                wait_job(&addr, id);
+                let (status, body) = get(&addr, &format!("/v1/runs/{id}/map"));
+                assert_eq!(status, 200, "client {i}");
+                assert_maps_identical(&parse_map(&body), &reference, &format!("client {i}"));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop().unwrap();
+}
+
+#[test]
+fn monitor_session_over_loopback_matches_direct_run() {
+    let stack = scene(90, 5);
+    let server = start_server(None, 4, 1);
+    let addr = server.addr().to_string();
+
+    // prime on the first 37 layers of the archive
+    let (status, body) = post(
+        &addr,
+        &format!("/v1/sessions/tile-a{PQ}&init-layers=37"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    );
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    let summary = parse_json(&body);
+    assert_eq!(summary.get("layers_seen").unwrap().as_usize().unwrap(), 37);
+    // the session derives λ at init (horizon 37/36); a fresh run must
+    // use the same λ to be comparable across the grown archive
+    let lambda = summary.get("lambda").unwrap().as_f64().unwrap();
+
+    // duplicate name → 409; bad name → 400
+    let (status, _) = post(
+        &addr,
+        &format!("/v1/sessions/tile-a{PQ}&init-layers=37"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    );
+    assert_eq!(status, 409);
+    let (status, _) = post(&addr, "/v1/sessions/..evil", "application/octet-stream", &[]);
+    assert_eq!(status, 400);
+
+    // ingest the remaining layers, alternating wire formats
+    for i in 37..48 {
+        let t = stack.time_axis[i];
+        let layer = stack.layer(i);
+        let (status, body) = if i % 2 == 0 {
+            let tensor = Tensor::F32 { shape: vec![layer.len()], data: layer.to_vec() };
+            post(
+                &addr,
+                &format!("/v1/sessions/tile-a/ingest?t={t}"),
+                "application/octet-stream",
+                &bten_to_bytes(&tensor).unwrap(),
+            )
+        } else {
+            let bytes: Vec<u8> = layer.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let doc = format!(
+                "{{\"t\": {t}, \"layer_b64\": \"{}\"}}",
+                base64_encode(&bytes)
+            );
+            post(
+                &addr,
+                "/v1/sessions/tile-a/ingest",
+                "application/json",
+                doc.as_bytes(),
+            )
+        };
+        assert_eq!(status, 200, "layer {i}: {}", String::from_utf8_lossy(&body));
+        let delta = parse_json(&body);
+        assert_eq!(delta.get("layer").unwrap().as_usize().unwrap(), i);
+    }
+
+    // re-feeding an already-seen time must fail cleanly
+    let tensor = Tensor::F32 { shape: vec![90], data: stack.layer(47).to_vec() };
+    let (status, _) = post(
+        &addr,
+        &format!("/v1/sessions/tile-a/ingest?t={}", stack.time_axis[47]),
+        "application/octet-stream",
+        &bten_to_bytes(&tensor).unwrap(),
+    );
+    assert_eq!(status, 400);
+
+    // the grown session's map equals a fresh run over the full archive
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(
+            &stack,
+            &BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, lambda).unwrap(),
+        )
+        .unwrap()
+        .map;
+    let (status, body) = get(&addr, "/v1/sessions/tile-a/map");
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "session map vs fresh run");
+    server.stop().unwrap();
+}
+
+/// ≥ 8 threads hammering one session while it ingests: every response
+/// parses, and the registry's per-session lock keeps reads consistent.
+#[test]
+fn concurrent_clients_hammer_one_session() {
+    let stack = scene(48, 13);
+    let server = start_server(None, 4, 1);
+    let addr = server.addr().to_string();
+    let (status, body) = post(
+        &addr,
+        &format!("/v1/sessions/busy{PQ}&init-layers=37"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    );
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    let lambda = parse_json(&body).get("lambda").unwrap().as_f64().unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let (status, body) = get(&addr, "/v1/sessions/busy");
+                    assert_eq!(status, 200, "reader {i}");
+                    let v = parse_json(&body);
+                    let seen = v.get("layers_seen").unwrap().as_usize().unwrap();
+                    assert!((37..=48).contains(&seen), "reader {i}: layers_seen {seen}");
+                    let (status, body) = get(&addr, "/v1/sessions/busy/map");
+                    assert_eq!(status, 200, "reader {i}");
+                    let map = parse_map(&body);
+                    assert_eq!(map.breaks.len(), 48, "reader {i}");
+                    reads += 1;
+                }
+                assert!(reads > 0, "reader {i} never completed a read");
+            })
+        })
+        .collect();
+
+    for i in 37..48 {
+        let tensor = Tensor::F32 { shape: vec![48], data: stack.layer(i).to_vec() };
+        let (status, _) = post(
+            &addr,
+            &format!("/v1/sessions/busy/ingest?t={}", stack.time_axis[i]),
+            "application/octet-stream",
+            &bten_to_bytes(&tensor).unwrap(),
+        );
+        assert_eq!(status, 200, "layer {i}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        r.join().unwrap();
+    }
+
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(
+            &stack,
+            &BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, lambda).unwrap(),
+        )
+        .unwrap()
+        .map;
+    let (_, body) = get(&addr, "/v1/sessions/busy/map");
+    assert_maps_identical(&parse_map(&body), &reference, "hammered session final map");
+    server.stop().unwrap();
+}
+
+/// Acceptance: a killed-and-restarted server resumes its monitor
+/// sessions bit-exactly from the state directory.
+#[test]
+fn restarted_server_resumes_sessions_bit_exactly() {
+    let dir = std::env::temp_dir().join(format!("bfast_serve_state_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let stack = scene(70, 29);
+
+    // first server: prime + ingest the first half of the monitor period
+    let server = start_server(Some(dir.clone()), 4, 1);
+    let addr = server.addr().to_string();
+    let (status, body) = post(
+        &addr,
+        &format!("/v1/sessions/tile-r{PQ}&init-layers=37"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    );
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    let lambda = parse_json(&body).get("lambda").unwrap().as_f64().unwrap();
+    for i in 37..42 {
+        let tensor = Tensor::F32 { shape: vec![70], data: stack.layer(i).to_vec() };
+        let (status, _) = post(
+            &addr,
+            &format!("/v1/sessions/tile-r/ingest?t={}", stack.time_axis[i]),
+            "application/octet-stream",
+            &bten_to_bytes(&tensor).unwrap(),
+        );
+        assert_eq!(status, 200, "layer {i}");
+    }
+    // graceful stop over the wire, like an operator would
+    let (status, _) = post(&addr, "/shutdown", "", &[]);
+    assert_eq!(status, 200);
+    server.wait().unwrap();
+
+    // second server, same state dir: the session is back, resumes
+    let server = start_server(Some(dir.clone()), 4, 1);
+    let addr = server.addr().to_string();
+    let (status, body) = get(&addr, "/v1/sessions");
+    assert_eq!(status, 200);
+    let names = parse_json(&body);
+    let names = names.get("sessions").unwrap().as_arr().unwrap();
+    assert_eq!(names.len(), 1);
+    assert_eq!(names[0].as_str().unwrap(), "tile-r");
+    for i in 42..48 {
+        let tensor = Tensor::F32 { shape: vec![70], data: stack.layer(i).to_vec() };
+        let (status, _) = post(
+            &addr,
+            &format!("/v1/sessions/tile-r/ingest?t={}", stack.time_axis[i]),
+            "application/octet-stream",
+            &bten_to_bytes(&tensor).unwrap(),
+        );
+        assert_eq!(status, 200, "layer {i}");
+    }
+
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(
+            &stack,
+            &BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, lambda).unwrap(),
+        )
+        .unwrap()
+        .map;
+    let (status, body) = get(&addr, "/v1/sessions/tile-r/map");
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "resumed session vs fresh run");
+    server.stop().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
