@@ -1,11 +1,14 @@
-//! Quickstart: generate a small artificial scene, run it through the
-//! AOT device pipeline, cross-check against the multi-core CPU
-//! implementation, and inspect one broken pixel.
+//! Quickstart: generate a small artificial scene, describe the
+//! analysis as one `bfast::api::AnalysisRequest` (the same object a
+//! server submit posts), execute it through the AOT device pipeline,
+//! cross-check against the multi-core CPU implementation, and inspect
+//! one broken pixel.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use bfast::api::{AnalysisRequest, EngineSpec, JobHandle, ParamSpec, SceneSource};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
 use bfast::cpu::FusedCpuBfast;
 use bfast::params::BfastParams;
@@ -30,22 +33,28 @@ fn main() -> bfast::error::Result<()> {
         data.truth.iter().filter(|&&t| t).count()
     );
 
-    // --- device pipeline (AOT JAX/Pallas via PJRT) ----------------------
-    let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
-    println!("device: {}", runner.platform());
-    let res = runner.run(&data.stack, &params)?;
+    // --- device pipeline, through the front door ------------------------
+    // the request is self-describing: `req.to_json_string()` is exactly
+    // what `bfast client submit` would POST to a serve instance
+    let mut req = AnalysisRequest::new(SceneSource::Inline(data.stack.clone()));
+    req.params = ParamSpec::from_params(&params);
+    req.engine = EngineSpec::Device { artifacts: "artifacts".into(), artifact: None };
+    let res = req.execute(&JobHandle::new())?;
+    println!("device: {}", res.engine);
     let (tpr, fpr) = data.score(&res.map.breaks);
     println!(
         "device: {} breaks / {} px in {:.3}s ({} chunks, artifact {})  TPR={:.3} FPR={:.3}",
-        res.break_count(),
-        res.len(),
+        res.map.break_count(),
+        res.map.len(),
         res.wall.as_secs_f64(),
         res.chunks,
         res.artifact,
         tpr,
         fpr
     );
-    print!("{}", res.phases.table("device phases"));
+    if let Some(phases) = &res.phases {
+        print!("{}", phases.table("device phases"));
+    }
 
     // --- multi-core CPU cross-check -------------------------------------
     let cpu = FusedCpuBfast::new(params.clone(), &data.stack.time_axis)?;
@@ -63,16 +72,17 @@ fn main() -> bfast::error::Result<()> {
         .count();
     println!(
         "device/cpu agreement: {agree}/{} ({:.4}%)",
-        res.len(),
-        100.0 * agree as f64 / res.len() as f64
+        res.map.len(),
+        100.0 * agree as f64 / res.map.len() as f64
     );
     bfast::ensure!(
-        agree as f64 / res.len() as f64 > 0.999,
+        agree as f64 / res.map.len() as f64 > 0.999,
         "device and CPU implementations disagree"
     );
 
     // --- per-pixel inspection (the paper's post-hoc workflow) -----------
     if let Some(px) = res.map.breaks.iter().position(|&b| b != 0) {
+        let runner = BfastRunner::emulated(RunnerConfig::default())?;
         let detail = runner.inspect_pixel(&data.stack, &params, px)?;
         println!(
             "pixel {px}: first crossing at monitor step {} (t={}), momax={:.2}",

@@ -1,0 +1,1172 @@
+//! The **front door**: one typed request/response vocabulary shared by
+//! the library, the CLI, the HTTP server and `bfast client`.
+//!
+//! Before this module, every entry point described "an analysis" in its
+//! own terms — the CLI hand-assembled `BfastParams` + `RunnerConfig`
+//! per subcommand, the serve queue had its own job struct, and the wire
+//! used query strings. An [`AnalysisRequest`] is now the only way work
+//! enters the system, which makes every request **self-describing**
+//! (it can be logged, persisted, forwarded or replayed verbatim) and
+//! **pixel-range-partitionable** (see [`ChunkSpec::pixel_range`]) —
+//! the precondition for sharding one scene across several serve
+//! instances.
+//!
+//! * [`AnalysisRequest`] — scene source + parameters + engine +
+//!   chunking + outputs; executed via [`AnalysisRequest::execute`]
+//!   (builds the engine the request names) or
+//!   [`AnalysisRequest::execute_on`] (a host-provided runner — the
+//!   serving path).
+//! * [`SessionRequest`] / [`SessionInit`] / [`SessionIngest`] — the
+//!   monitor-session vocabulary (prime once, ingest one layer at a
+//!   time).
+//! * [`JobHandle`] — progress observation plus cooperative
+//!   cancellation: its [`CancelToken`] is threaded through the
+//!   coordinator's chunk loop, so a cancelled analysis stops at the
+//!   next chunk boundary instead of running to completion.
+//!
+//! ## v1 wire schema
+//!
+//! [`AnalysisRequest::to_json`] *is* the canonical on-the-wire and
+//! on-disk job description (`POST /v1/runs` with
+//! `Content-Type: application/json`):
+//!
+//! ```json
+//! {
+//!   "v": 1,
+//!   "source":   {"kind": "inline", "bsq_b64": "<base64 .bsq bytes>"}
+//!               | {"kind": "path", "path": "scene.bsq"},
+//!   "params":   {"n_total": 48, "n_hist": 36, "h": 12, "k": 1,
+//!                "freq": 12, "alpha": 0.05, "lambda": 3.0},
+//!   "engine":   {"kind": "emulated"}
+//!               | {"kind": "device", "artifacts": "artifacts", "artifact": "small"}
+//!               | {"kind": "cpu"} | {"kind": "direct"} | {"kind": "naive"},
+//!   "chunking": {"queue_depth": 2, "staging_threads": 0, "phased": false,
+//!                "fill_missing": true, "pixel_range": [0, 1024]},
+//!   "outputs":  {"momax_pgm": "momax.pgm", "timings": false}
+//! }
+//! ```
+//!
+//! Every section except `source` is optional and defaults as above
+//! (`params.n_total`/`params.lambda` absent = derive from the scene /
+//! the critical-value table; `pixel_range` absent = the whole scene).
+//! `path` sources are for the CLI/library and trusted shard fan-out;
+//! the public serve endpoints refuse them (see [`SceneSource`]).
+//! `engine` and `chunking` are resolved by the *executing host*: a
+//! server analyses with its own shared runner regardless of the
+//! requested engine — break maps are bit-identical across backends by
+//! construction (pinned by `tests/cross_backend.rs`).
+//!
+//! Session requests are tagged the same way: `{"kind": "init",
+//! "source": ..., "params": ..., "init_layers": 37}` and
+//! `{"kind": "ingest", "t": 61.0, "layer_b64": "<base64 f32 LE>"}`.
+
+use crate::cli::{Command, Matches};
+use crate::coordinator::{BfastRunner, RunnerConfig};
+use crate::cpu::FusedCpuBfast;
+use crate::error::{bail, ensure, err, BfastError, Context, Result};
+use crate::json::Value;
+use crate::metrics::PhaseTimes;
+use crate::monitor::{MonitorConfig, MonitorSession};
+use crate::params::BfastParams;
+use crate::pixel::{DirectBfast, NaiveBfast};
+use crate::raster::{io as rio, BreakMap, TimeStack};
+use crate::runtime::ExecutorBackend;
+use crate::b64::{base64_decode, base64_encode};
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// -- cancellation --------------------------------------------------------
+
+/// Root-cause message of a cancelled analysis (see [`cancelled`]).
+pub const CANCELLED_MSG: &str = "analysis cancelled";
+
+/// The error a cancelled analysis returns.
+pub fn cancelled() -> BfastError {
+    BfastError::msg(CANCELLED_MSG)
+}
+
+/// Does this error mean "the caller cancelled", as opposed to a
+/// failure? (The serve scheduler maps it to the `cancelled` job state
+/// rather than `failed`.)
+pub fn is_cancelled(e: &BfastError) -> bool {
+    e.root_cause() == CANCELLED_MSG
+}
+
+/// Cooperative cancellation flag, shareable across threads. The
+/// coordinator checks it at every chunk boundary; once set, the
+/// in-flight run returns [`cancelled`] instead of completing.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Live observation of one submitted analysis: chunk progress plus a
+/// [`CancelToken`]. Clones share state — the serve queue keeps one
+/// clone in the job record while the scheduler worker drives another.
+#[derive(Clone, Debug, Default)]
+pub struct JobHandle {
+    cancel: CancelToken,
+    progress: Arc<(AtomicUsize, AtomicUsize)>,
+}
+
+impl JobHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation of the job this handle observes.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// The token the executing runner polls.
+    pub fn cancel_token(&self) -> &CancelToken {
+        &self.cancel
+    }
+
+    /// Record chunk progress (called by the executing side).
+    pub fn set_progress(&self, done: usize, total: usize) {
+        self.progress.1.store(total, Ordering::Relaxed);
+        self.progress.0.store(done, Ordering::Relaxed);
+    }
+
+    /// `(chunks_done, chunks_total)` of the observed run; `(0, 0)`
+    /// before the chunk plan is known.
+    pub fn progress(&self) -> (usize, usize) {
+        (
+            self.progress.0.load(Ordering::Relaxed),
+            self.progress.1.load(Ordering::Relaxed),
+        )
+    }
+}
+
+// -- JSON field helpers --------------------------------------------------
+
+fn get_usize_or(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.try_get(key) {
+        None => Ok(default),
+        Some(x) => x.as_usize().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_f64_or(v: &Value, key: &str, default: f64) -> Result<f64> {
+    match v.try_get(key) {
+        None => Ok(default),
+        Some(x) => x.as_f64().with_context(|| format!("field {key:?}")),
+    }
+}
+
+fn get_bool_or(v: &Value, key: &str, default: bool) -> Result<bool> {
+    match v.try_get(key) {
+        None => Ok(default),
+        Some(x) => x.as_bool().with_context(|| format!("field {key:?}")),
+    }
+}
+
+// -- parameters ----------------------------------------------------------
+
+/// Analysis parameters as a *request* states them — everything a
+/// [`BfastParams`] needs except what the scene itself provides.
+/// `n_total: None` takes N from the scene; `lambda: None` derives the
+/// critical value from the built-in table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub n_total: Option<usize>,
+    pub n_hist: usize,
+    pub h: usize,
+    pub k: usize,
+    pub freq: f64,
+    pub alpha: f64,
+    pub lambda: Option<f64>,
+}
+
+impl Default for ParamSpec {
+    fn default() -> Self {
+        Self {
+            n_total: None,
+            n_hist: 100,
+            h: 50,
+            k: 3,
+            freq: 23.0,
+            alpha: 0.05,
+            lambda: None,
+        }
+    }
+}
+
+impl ParamSpec {
+    /// Pin every field from concrete parameters (λ included, so a
+    /// replayed request reproduces the same boundary bit-for-bit).
+    pub fn from_params(p: &BfastParams) -> Self {
+        Self {
+            n_total: Some(p.n_total),
+            n_hist: p.n_hist,
+            h: p.h,
+            k: p.k,
+            freq: p.freq,
+            alpha: p.alpha,
+            lambda: Some(p.lambda),
+        }
+    }
+
+    /// Resolve against a scene with `scene_layers` acquisitions.
+    pub fn resolve(&self, scene_layers: usize) -> Result<BfastParams> {
+        if let Some(n) = self.n_total {
+            ensure!(
+                n == scene_layers,
+                "scene has {scene_layers} layers but the request pins N={n}"
+            );
+        }
+        match self.lambda {
+            Some(l) => BfastParams::with_lambda(
+                scene_layers,
+                self.n_hist,
+                self.h,
+                self.k,
+                self.freq,
+                self.alpha,
+                l,
+            ),
+            None => BfastParams::new(
+                scene_layers,
+                self.n_hist,
+                self.h,
+                self.k,
+                self.freq,
+                self.alpha,
+            ),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = Vec::new();
+        if let Some(n) = self.n_total {
+            fields.push(("n_total", Value::Num(n as f64)));
+        }
+        fields.push(("n_hist", Value::Num(self.n_hist as f64)));
+        fields.push(("h", Value::Num(self.h as f64)));
+        fields.push(("k", Value::Num(self.k as f64)));
+        fields.push(("freq", Value::Num(self.freq)));
+        fields.push(("alpha", Value::Num(self.alpha)));
+        if let Some(l) = self.lambda {
+            fields.push(("lambda", Value::Num(l)));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = ParamSpec::default();
+        Ok(Self {
+            n_total: match v.try_get("n_total") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(x.as_usize().context("field \"n_total\"")?),
+            },
+            n_hist: get_usize_or(v, "n_hist", d.n_hist)?,
+            h: get_usize_or(v, "h", d.h)?,
+            k: get_usize_or(v, "k", d.k)?,
+            freq: get_f64_or(v, "freq", d.freq)?,
+            alpha: get_f64_or(v, "alpha", d.alpha)?,
+            lambda: match v.try_get("lambda") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(x.as_f64().context("field \"lambda\"")?),
+            },
+        })
+    }
+}
+
+// -- scene source --------------------------------------------------------
+
+/// Where the scene comes from. `Inline` travels with the request (the
+/// wire form — serialised as base64 `.bsq` bytes); `Path` is read by
+/// the executing host — the CLI form, and the form a trusted sharding
+/// coordinator hands to workers that mount shared storage. The public
+/// serve endpoints refuse `Path` sources (a remote caller must not be
+/// able to make the server read arbitrary local files).
+#[derive(Clone, Debug)]
+pub enum SceneSource {
+    Inline(TimeStack),
+    Path(String),
+}
+
+impl SceneSource {
+    /// Materialise the scene (borrowing the inline form).
+    pub fn load(&self) -> Result<Cow<'_, TimeStack>> {
+        match self {
+            SceneSource::Inline(s) => Ok(Cow::Borrowed(s)),
+            SceneSource::Path(p) => Ok(Cow::Owned(rio::read_stack(p)?)),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            SceneSource::Inline(s) => Value::obj(vec![
+                ("kind", Value::Str("inline".into())),
+                ("bsq_b64", Value::Str(base64_encode(&rio::stack_to_bytes(s)))),
+            ]),
+            SceneSource::Path(p) => Value::obj(vec![
+                ("kind", Value::Str("path".into())),
+                ("path", Value::Str(p.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "inline" => {
+                let bytes = base64_decode(v.get("bsq_b64")?.as_str()?)?;
+                Ok(SceneSource::Inline(rio::stack_from_bytes(&bytes, "inline scene")?))
+            }
+            "path" => Ok(SceneSource::Path(v.get("path")?.as_str()?.to_string())),
+            other => bail!("unknown scene source kind {other:?} (inline|path)"),
+        }
+    }
+}
+
+// -- engine --------------------------------------------------------------
+
+/// Which implementation runs the analysis. The coordinator engines
+/// (`Device`, `Emulated`) stream chunks and honour progress +
+/// cancellation; the reference engines (`Cpu`, `Direct`, `Naive`) are
+/// the paper's comparison ladder and run scene-at-once.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum EngineSpec {
+    Device { artifacts: String, artifact: Option<String> },
+    #[default]
+    Emulated,
+    Cpu,
+    Direct,
+    Naive,
+}
+
+impl EngineSpec {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineSpec::Device { .. } => "device",
+            EngineSpec::Emulated => "emulated",
+            EngineSpec::Cpu => "cpu",
+            EngineSpec::Direct => "direct",
+            EngineSpec::Naive => "naive",
+        }
+    }
+
+    /// Parse the CLI's `--engine` / `--artifacts` / `--artifact` trio.
+    pub fn from_flags(engine: &str, artifacts: &str, artifact: &str) -> Result<Self> {
+        Ok(match engine {
+            "device" => EngineSpec::Device {
+                artifacts: artifacts.to_string(),
+                artifact: if artifact.is_empty() { None } else { Some(artifact.to_string()) },
+            },
+            "emulated" => EngineSpec::Emulated,
+            "cpu" => EngineSpec::Cpu,
+            "direct" => EngineSpec::Direct,
+            "naive" => EngineSpec::Naive,
+            other => bail!("unknown engine {other:?} (device|emulated|cpu|direct|naive)"),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            EngineSpec::Device { artifacts, artifact } => {
+                let mut fields = vec![
+                    ("kind", Value::Str("device".into())),
+                    ("artifacts", Value::Str(artifacts.clone())),
+                ];
+                if let Some(a) = artifact {
+                    fields.push(("artifact", Value::Str(a.clone())));
+                }
+                Value::obj(fields)
+            }
+            other => Value::obj(vec![("kind", Value::Str(other.label().into()))]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "device" => Ok(EngineSpec::Device {
+                artifacts: match v.try_get("artifacts") {
+                    None | Some(Value::Null) => "artifacts".to_string(),
+                    Some(x) => x.as_str()?.to_string(),
+                },
+                artifact: match v.try_get("artifact") {
+                    None | Some(Value::Null) => None,
+                    Some(x) => Some(x.as_str()?.to_string()),
+                },
+            }),
+            "emulated" => Ok(EngineSpec::Emulated),
+            "cpu" => Ok(EngineSpec::Cpu),
+            "direct" => Ok(EngineSpec::Direct),
+            "naive" => Ok(EngineSpec::Naive),
+            other => bail!("unknown engine kind {other:?}"),
+        }
+    }
+}
+
+// -- chunking ------------------------------------------------------------
+
+/// How the scene is streamed: the coordinator knobs plus the pixel
+/// range this request covers. `pixel_range: Some((a, b))` analyses
+/// only pixels `[a, b)` — a sharding coordinator splits one scene into
+/// several requests that differ *only* here.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkSpec {
+    /// Bounded staging→executor queue depth (≥ 1).
+    pub queue_depth: usize,
+    /// Staging worker threads (0 = auto).
+    pub staging_threads: usize,
+    /// Run the per-phase instrumented executables.
+    pub phased: bool,
+    /// Gap-fill NaN observations during staging.
+    pub fill_missing: bool,
+    /// Restrict the analysis to pixels `[start, end)`.
+    pub pixel_range: Option<(usize, usize)>,
+}
+
+impl Default for ChunkSpec {
+    fn default() -> Self {
+        Self {
+            queue_depth: 2,
+            staging_threads: 0,
+            phased: false,
+            fill_missing: true,
+            pixel_range: None,
+        }
+    }
+}
+
+impl ChunkSpec {
+    /// Lower to a coordinator configuration.
+    pub fn runner_config(&self, artifact: Option<String>) -> RunnerConfig {
+        let mut cfg = RunnerConfig {
+            artifact,
+            queue_depth: self.queue_depth,
+            phased: self.phased,
+            fill_missing: self.fill_missing,
+            ..RunnerConfig::default()
+        };
+        if self.staging_threads > 0 {
+            cfg.staging_threads = self.staging_threads;
+        }
+        cfg
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("queue_depth", Value::Num(self.queue_depth as f64)),
+            ("staging_threads", Value::Num(self.staging_threads as f64)),
+            ("phased", Value::Bool(self.phased)),
+            ("fill_missing", Value::Bool(self.fill_missing)),
+        ];
+        if let Some((a, b)) = self.pixel_range {
+            fields.push(("pixel_range", Value::arr_usize(&[a, b])));
+        }
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = ChunkSpec::default();
+        let pixel_range = match v.try_get("pixel_range") {
+            None | Some(Value::Null) => None,
+            Some(x) => {
+                let arr = x.as_arr().context("field \"pixel_range\"")?;
+                ensure!(arr.len() == 2, "pixel_range must be [start, end]");
+                Some((arr[0].as_usize()?, arr[1].as_usize()?))
+            }
+        };
+        Ok(Self {
+            queue_depth: get_usize_or(v, "queue_depth", d.queue_depth)?,
+            staging_threads: get_usize_or(v, "staging_threads", d.staging_threads)?,
+            phased: get_bool_or(v, "phased", d.phased)?,
+            fill_missing: get_bool_or(v, "fill_missing", d.fill_missing)?,
+            pixel_range,
+        })
+    }
+}
+
+// -- outputs -------------------------------------------------------------
+
+/// What the caller wants back beyond the break map.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct OutputSpec {
+    /// Render the max-|MOSUM| heatmap PGM here (CLI-side).
+    pub momax_pgm: Option<String>,
+    /// Print/collect the phase breakdown.
+    pub timings: bool,
+}
+
+impl OutputSpec {
+    pub fn to_json(&self) -> Value {
+        let mut fields = Vec::new();
+        if let Some(p) = &self.momax_pgm {
+            fields.push(("momax_pgm", Value::Str(p.clone())));
+        }
+        fields.push(("timings", Value::Bool(self.timings)));
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            momax_pgm: match v.try_get("momax_pgm") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(x.as_str()?.to_string()),
+            },
+            timings: get_bool_or(v, "timings", false)?,
+        })
+    }
+}
+
+// -- the analysis request ------------------------------------------------
+
+/// One break-detection analysis, fully described. This is the only
+/// unit of work the system accepts: the CLI parses its flags into one,
+/// the server queues them, `bfast client submit` posts one, and the
+/// library executes them directly.
+#[derive(Clone, Debug)]
+pub struct AnalysisRequest {
+    pub source: SceneSource,
+    pub params: ParamSpec,
+    pub engine: EngineSpec,
+    pub chunking: ChunkSpec,
+    pub outputs: OutputSpec,
+}
+
+impl AnalysisRequest {
+    /// A request over `source` with every other section defaulted.
+    pub fn new(source: SceneSource) -> Self {
+        Self {
+            source,
+            params: ParamSpec::default(),
+            engine: EngineSpec::default(),
+            chunking: ChunkSpec::default(),
+            outputs: OutputSpec::default(),
+        }
+    }
+
+    /// Cheap admission check — everything that can be verified without
+    /// copying scene data or touching the filesystem. The serve layer
+    /// runs this at submit time so an invalid request is a 400 at the
+    /// door, not a queued job that fails minutes later (`Path` sources
+    /// defer to execution, where the file is actually read).
+    pub fn validate(&self) -> Result<()> {
+        if let SceneSource::Inline(s) = &self.source {
+            if let Some((start, end)) = self.chunking.pixel_range {
+                ensure!(
+                    start < end && end <= s.n_pixels(),
+                    "pixel_range [{start}, {end}) out of bounds for {} pixels",
+                    s.n_pixels()
+                );
+            }
+            self.params.resolve(s.n_times())?;
+        }
+        Ok(())
+    }
+
+    /// Materialise the (pixel-range-sliced) scene and concrete
+    /// parameters this request describes.
+    pub fn resolve(&self) -> Result<(Cow<'_, TimeStack>, BfastParams)> {
+        let mut stack = self.source.load()?;
+        if let Some((start, end)) = self.chunking.pixel_range {
+            ensure!(
+                start < end && end <= stack.n_pixels(),
+                "pixel_range [{start}, {end}) out of bounds for {} pixels",
+                stack.n_pixels()
+            );
+            stack = Cow::Owned(stack.slice_pixels(start, end));
+        }
+        let params = self.params.resolve(stack.n_times())?;
+        Ok((stack, params))
+    }
+
+    /// Execute with the engine the request names, constructing it
+    /// here. Coordinator engines report per-chunk progress through
+    /// `handle` and stop at the next chunk boundary once
+    /// [`JobHandle::cancel`] is called; the scene-at-once reference
+    /// engines check the token only before starting.
+    pub fn execute(&self, handle: &JobHandle) -> Result<AnalysisResponse> {
+        match &self.engine {
+            EngineSpec::Device { artifacts, artifact } => {
+                let cfg = self.chunking.runner_config(artifact.clone());
+                let runner = BfastRunner::auto(artifacts, cfg)?;
+                if runner.platform().starts_with("emulated") {
+                    eprintln!(
+                        "bfast: no device backend available (no artifacts at {artifacts:?}); \
+                         running on the emulated backend — request engine \"emulated\" to \
+                         select it explicitly"
+                    );
+                }
+                self.execute_on(&runner, handle)
+            }
+            EngineSpec::Emulated => {
+                let runner = BfastRunner::emulated(self.chunking.runner_config(None))?;
+                self.execute_on(&runner, handle)
+            }
+            EngineSpec::Cpu | EngineSpec::Direct | EngineSpec::Naive => {
+                if handle.is_cancelled() {
+                    return Err(cancelled());
+                }
+                let (stack, params) = self.resolve()?;
+                let stack = &*stack;
+                let t0 = Instant::now();
+                handle.set_progress(0, 1);
+                let (map, phases) = match self.engine {
+                    EngineSpec::Cpu => {
+                        let eng = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
+                        let (map, times) = eng.run(stack)?;
+                        (map, Some(times))
+                    }
+                    EngineSpec::Direct => (
+                        DirectBfast::new(params.clone(), &stack.time_axis)?.run(stack)?,
+                        None,
+                    ),
+                    _ => (NaiveBfast::new(params.clone()).run(stack)?, None),
+                };
+                handle.set_progress(1, 1);
+                Ok(AnalysisResponse {
+                    map,
+                    params,
+                    phases,
+                    chunks: 1,
+                    artifact: self.engine.label().to_string(),
+                    engine: self.engine.label().to_string(),
+                    wall: t0.elapsed(),
+                    width: stack.width,
+                    height: stack.height,
+                })
+            }
+        }
+    }
+
+    /// Execute on a host-provided coordinator runner — the serving
+    /// path, where one shared runner drains the whole job queue. The
+    /// request's `engine`/`chunking` performance knobs are the host's
+    /// prerogative here; `source`, `params` and `pixel_range` are
+    /// honoured (break maps are backend-invariant, so the answer is
+    /// the same bits either way).
+    pub fn execute_on<B: ?Sized + ExecutorBackend>(
+        &self,
+        runner: &BfastRunner<B>,
+        handle: &JobHandle,
+    ) -> Result<AnalysisResponse> {
+        let (stack, params) = self.resolve()?;
+        let res = runner.run_with_progress(
+            &stack,
+            &params,
+            handle.cancel_token(),
+            |done, total| handle.set_progress(done, total),
+        )?;
+        Ok(AnalysisResponse {
+            map: res.map,
+            params,
+            phases: Some(res.phases),
+            chunks: res.chunks,
+            artifact: res.artifact,
+            engine: runner.platform(),
+            wall: res.wall,
+            width: stack.width,
+            height: stack.height,
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("v", Value::Num(1.0)),
+            ("source", self.source.to_json()),
+            ("params", self.params.to_json()),
+            ("engine", self.engine.to_json()),
+            ("chunking", self.chunking.to_json()),
+            ("outputs", self.outputs.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(ver) = v.try_get("v") {
+            let ver = ver.as_usize().context("field \"v\"")?;
+            ensure!(ver == 1, "unsupported request version {ver} (this build speaks v1)");
+        }
+        Ok(Self {
+            source: SceneSource::from_json(v.get("source").context("analysis request")?)?,
+            params: match v.try_get("params") {
+                None | Some(Value::Null) => ParamSpec::default(),
+                Some(x) => ParamSpec::from_json(x)?,
+            },
+            engine: match v.try_get("engine") {
+                None | Some(Value::Null) => EngineSpec::default(),
+                Some(x) => EngineSpec::from_json(x)?,
+            },
+            chunking: match v.try_get("chunking") {
+                None | Some(Value::Null) => ChunkSpec::default(),
+                Some(x) => ChunkSpec::from_json(x)?,
+            },
+            outputs: match v.try_get("outputs") {
+                None | Some(Value::Null) => OutputSpec::default(),
+                Some(x) => OutputSpec::from_json(x)?,
+            },
+        })
+    }
+
+    /// Compact JSON — the exact bytes `bfast client submit` posts.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&crate::json::parse(text)?)
+    }
+}
+
+/// What an executed [`AnalysisRequest`] returns, whichever front door
+/// it entered through.
+#[derive(Debug)]
+pub struct AnalysisResponse {
+    pub map: BreakMap,
+    /// The concrete parameters the run used (λ resolved).
+    pub params: BfastParams,
+    /// Phase breakdown (engines that instrument one).
+    pub phases: Option<PhaseTimes>,
+    pub chunks: usize,
+    pub artifact: String,
+    /// Executing backend description.
+    pub engine: String,
+    pub wall: Duration,
+    /// Scene geometry, when the (unsliced) scene carried one.
+    pub width: Option<usize>,
+    pub height: Option<usize>,
+}
+
+// -- session requests ----------------------------------------------------
+
+/// Prime a monitor session: the one-time staged history pass over an
+/// initial archive (`POST /v1/sessions/{name}`, `bfast monitor
+/// --init`, or [`SessionInit::start_on`] in-process).
+#[derive(Clone, Debug)]
+pub struct SessionInit {
+    pub source: SceneSource,
+    pub params: ParamSpec,
+    /// Prime on only the first K layers of the source (0 = all).
+    pub init_layers: usize,
+}
+
+impl SessionInit {
+    pub fn new(source: SceneSource) -> Self {
+        Self { source, params: ParamSpec::default(), init_layers: 0 }
+    }
+
+    /// Materialise the (possibly truncated) initial archive and the
+    /// concrete parameters. Borrows an inline scene when no truncation
+    /// is needed — no double-RSS copy of a scene the request already
+    /// holds.
+    pub fn resolve(&self) -> Result<(Cow<'_, TimeStack>, BfastParams)> {
+        let mut stack = self.source.load()?;
+        if self.init_layers > 0 {
+            stack = Cow::Owned(stack.prefix(self.init_layers)?);
+        }
+        let params = self.params.resolve(stack.n_times())?;
+        Ok((stack, params))
+    }
+
+    /// Prime through a runner (chunk plan from its backend) — the
+    /// serving path.
+    pub fn start_on<B: ?Sized + ExecutorBackend>(
+        &self,
+        runner: &BfastRunner<B>,
+    ) -> Result<MonitorSession> {
+        let (stack, params) = self.resolve()?;
+        runner.start_monitor(&stack, &params)
+    }
+
+    /// Prime with explicit chunking — the CLI path, which exposes
+    /// `--m-chunk`/`--threads` directly.
+    pub fn start_local(
+        &self,
+        m_chunk: usize,
+        threads: usize,
+        fill_missing: bool,
+    ) -> Result<MonitorSession> {
+        let (stack, params) = self.resolve()?;
+        MonitorSession::start(&stack, &params, MonitorConfig { m_chunk, threads, fill_missing })
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("kind", Value::Str("init".into())),
+            ("source", self.source.to_json()),
+            ("params", self.params.to_json()),
+            ("init_layers", Value::Num(self.init_layers as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(k) = v.try_get("kind") {
+            ensure!(k.as_str()? == "init", "expected a session init request");
+        }
+        Ok(Self {
+            source: SceneSource::from_json(v.get("source").context("session init")?)?,
+            params: match v.try_get("params") {
+                None | Some(Value::Null) => ParamSpec::default(),
+                Some(x) => ParamSpec::from_json(x)?,
+            },
+            init_layers: get_usize_or(v, "init_layers", 0)?,
+        })
+    }
+}
+
+/// Feed one acquisition layer into a live session
+/// (`POST /v1/sessions/{name}/ingest`). The JSON form is
+/// `{"kind": "ingest", "t": 61.0, "layer_b64": "<base64 f32 LE>"}` —
+/// `kind` may be omitted on the ingest endpoint, which only accepts
+/// this shape.
+#[derive(Clone, Debug)]
+pub struct SessionIngest {
+    /// Acquisition time (must extend the session's time axis).
+    pub t: f64,
+    /// One value per pixel.
+    pub values: Vec<f32>,
+}
+
+impl SessionIngest {
+    pub fn to_json(&self) -> Value {
+        let bytes: Vec<u8> = self.values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Value::obj(vec![
+            ("kind", Value::Str("ingest".into())),
+            ("t", Value::Num(self.t)),
+            ("layer_b64", Value::Str(base64_encode(&bytes))),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(k) = v.try_get("kind") {
+            ensure!(k.as_str()? == "ingest", "expected a session ingest request");
+        }
+        let t = v.get("t")?.as_f64()?;
+        let bytes = base64_decode(v.get("layer_b64")?.as_str()?)?;
+        ensure!(
+            bytes.len() % 4 == 0,
+            "layer_b64 must decode to little-endian f32 values"
+        );
+        let values = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { t, values })
+    }
+}
+
+/// The monitor-session vocabulary: init or ingest, dispatched on the
+/// JSON `kind` tag.
+#[derive(Clone, Debug)]
+pub enum SessionRequest {
+    Init(SessionInit),
+    Ingest(SessionIngest),
+}
+
+impl SessionRequest {
+    pub fn to_json(&self) -> Value {
+        match self {
+            SessionRequest::Init(i) => i.to_json(),
+            SessionRequest::Ingest(g) => g.to_json(),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "init" => Ok(SessionRequest::Init(SessionInit::from_json(v)?)),
+            "ingest" => Ok(SessionRequest::Ingest(SessionIngest::from_json(v)?)),
+            other => bail!("unknown session request kind {other:?} (init|ingest)"),
+        }
+    }
+}
+
+// -- the CLI front door --------------------------------------------------
+
+/// Shared analysis-parameter flags (`run`, `generate`, `inspect`).
+pub fn param_flags(c: Command) -> Command {
+    c.opt("n-total", "200", "series length N")
+        .opt("n-hist", "100", "stable history length n")
+        .opt("h", "50", "MOSUM bandwidth")
+        .opt("k", "3", "harmonic terms")
+        .opt("freq", "23", "observations per period f")
+        .opt("alpha", "0.05", "significance level")
+}
+
+/// The `bfast run` flag surface. Lives here (not in `main.rs`) so the
+/// front-door equivalence tests can drive the *same* flags→request
+/// parsing the binary uses.
+pub fn run_command() -> Command {
+    param_flags(
+        Command::new("run", "analyse a stack")
+            .req("input", "input .bsq stack")
+            .opt("engine", "device", "device | emulated | cpu | direct | naive")
+            .opt("artifacts", "artifacts", "artifact directory (device)")
+            .opt("artifact", "", "artifact config name override (device)")
+            .opt("queue-depth", "2", "staging queue depth (device)")
+            .opt("staging-threads", "0", "staging threads, 0 = auto (device)")
+            .opt("pixels", "", "analyse only the pixel range START:END")
+            .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
+            .switch("phased", "run the per-phase executables (instrumented)")
+            .switch("timings", "print the phase breakdown"),
+    )
+}
+
+/// Parse `bfast run` flags into the one request type.
+pub fn run_request_from_args(args: &[String]) -> Result<AnalysisRequest> {
+    run_request_from_matches(&run_command().parse(args)?)
+}
+
+/// Build an [`AnalysisRequest`] from parsed `bfast run` matches.
+pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
+    let pixel_range = match m.str("pixels")? {
+        "" => None,
+        s => {
+            let (a, b) = s
+                .split_once(':')
+                .ok_or_else(|| err!("--pixels expects START:END, got {s:?}"))?;
+            let start = a
+                .trim()
+                .parse()
+                .map_err(|_| err!("--pixels: bad start {a:?}"))?;
+            let end = b
+                .trim()
+                .parse()
+                .map_err(|_| err!("--pixels: bad end {b:?}"))?;
+            Some((start, end))
+        }
+    };
+    Ok(AnalysisRequest {
+        source: SceneSource::Path(m.str("input")?.to_string()),
+        params: ParamSpec {
+            n_total: Some(m.usize("n-total")?),
+            n_hist: m.usize("n-hist")?,
+            h: m.usize("h")?,
+            k: m.usize("k")?,
+            freq: m.f64("freq")?,
+            alpha: m.f64("alpha")?,
+            lambda: None,
+        },
+        engine: EngineSpec::from_flags(
+            m.str("engine")?,
+            m.str("artifacts")?,
+            m.str("artifact")?,
+        )?,
+        chunking: ChunkSpec {
+            queue_depth: m.usize("queue-depth")?,
+            staging_threads: m.usize("staging-threads")?,
+            phased: m.flag("phased"),
+            fill_missing: true,
+            pixel_range,
+        },
+        outputs: OutputSpec {
+            momax_pgm: match m.str("momax-pgm")? {
+                "" => None,
+                p => Some(p.to_string()),
+            },
+            timings: m.flag("timings"),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::ArtificialDataset;
+
+    fn small_stack(m: usize, seed: u64) -> TimeStack {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        ArtificialDataset::new(params, m, seed).generate().stack
+    }
+
+    #[test]
+    fn cancel_token_and_handle() {
+        let h = JobHandle::new();
+        assert!(!h.is_cancelled());
+        assert_eq!(h.progress(), (0, 0));
+        h.set_progress(3, 10);
+        let h2 = h.clone();
+        assert_eq!(h2.progress(), (3, 10));
+        h2.cancel();
+        assert!(h.is_cancelled() && h.cancel_token().is_cancelled());
+        assert!(is_cancelled(&cancelled()));
+        assert!(!is_cancelled(&err!("something else")));
+    }
+
+    #[test]
+    fn param_spec_resolves_and_roundtrips() {
+        let spec = ParamSpec { n_hist: 36, h: 12, k: 1, freq: 12.0, ..Default::default() };
+        let p = spec.resolve(48).unwrap();
+        assert_eq!((p.n_total, p.n_hist, p.h, p.k), (48, 36, 12, 1));
+        assert!(p.lambda > 0.0);
+        // pinned λ reproduces exactly
+        let pinned = ParamSpec::from_params(&p);
+        assert_eq!(pinned.resolve(48).unwrap(), p);
+        // pinned N guards against the wrong scene
+        assert!(pinned.resolve(50).is_err());
+        // JSON round-trip
+        let back = ParamSpec::from_json(&pinned.to_json()).unwrap();
+        assert_eq!(back, pinned);
+        // defaults fill absent fields
+        let d = ParamSpec::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, ParamSpec::default());
+    }
+
+    #[test]
+    fn nan_bearing_params_survive_the_wire() {
+        // a NaN λ must round-trip through JSON bit-for-bit (the
+        // request stays serialisable even when it will fail to resolve)
+        let spec = ParamSpec { lambda: Some(f64::NAN), ..Default::default() };
+        let text = spec.to_json().to_string_compact();
+        let back = ParamSpec::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert!(back.lambda.unwrap().is_nan());
+        assert!(back.resolve(200).is_err()); // NaN λ is not a valid critical value
+    }
+
+    #[test]
+    fn engine_and_chunk_specs_roundtrip() {
+        let engines = [
+            EngineSpec::Device { artifacts: "arts".into(), artifact: Some("small".into()) },
+            EngineSpec::Device { artifacts: "arts".into(), artifact: None },
+            EngineSpec::Emulated,
+            EngineSpec::Cpu,
+            EngineSpec::Direct,
+            EngineSpec::Naive,
+        ];
+        for e in engines {
+            let back = EngineSpec::from_json(&e.to_json()).unwrap();
+            assert_eq!(back, e);
+        }
+        assert!(EngineSpec::from_flags("quantum", "a", "").is_err());
+
+        let c = ChunkSpec { pixel_range: Some((4, 9)), queue_depth: 3, ..Default::default() };
+        let back = ChunkSpec::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        let d = ChunkSpec::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, ChunkSpec::default());
+    }
+
+    #[test]
+    fn analysis_request_roundtrips_with_nan_scene() {
+        let mut stack = small_stack(6, 7);
+        stack.data_mut()[3] = f32::NAN; // wire must preserve missing obs
+        let scene_bytes = rio::stack_to_bytes(&stack);
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+        req.params.n_hist = 24;
+        req.params.h = 8;
+        req.params.k = 1;
+        req.params.freq = 12.0;
+        req.chunking.pixel_range = Some((1, 5));
+        req.outputs.momax_pgm = Some("x.pgm".into());
+        let text = req.to_json_string();
+        let back = AnalysisRequest::from_json_str(&text).unwrap();
+        assert_eq!(back.params, req.params);
+        assert_eq!(back.engine, req.engine);
+        assert_eq!(back.chunking, req.chunking);
+        assert_eq!(back.outputs, req.outputs);
+        match &back.source {
+            SceneSource::Inline(s) => {
+                assert_eq!(rio::stack_to_bytes(s), scene_bytes, "scene bytes must be bit-exact");
+            }
+            other => panic!("expected inline source, got {other:?}"),
+        }
+        // and the round-trip is a fixed point
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn pixel_range_resolve_slices_and_validates() {
+        let stack = small_stack(10, 3);
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack.clone()));
+        req.params = ParamSpec {
+            n_hist: 24,
+            h: 8,
+            k: 1,
+            freq: 12.0,
+            ..Default::default()
+        };
+        req.chunking.pixel_range = Some((2, 7));
+        let (sliced, params) = req.resolve().unwrap();
+        assert_eq!(sliced.n_pixels(), 5);
+        assert_eq!(params.n_total, 40);
+        for p in 0..5 {
+            assert_eq!(sliced.series(p), stack.series(2 + p));
+        }
+        req.chunking.pixel_range = Some((7, 11));
+        assert!(req.resolve().is_err());
+        req.chunking.pixel_range = Some((4, 4));
+        assert!(req.resolve().is_err());
+    }
+
+    #[test]
+    fn session_requests_roundtrip() {
+        let stack = small_stack(5, 11);
+        let init = SessionInit {
+            source: SceneSource::Inline(stack),
+            params: ParamSpec { n_hist: 24, h: 8, k: 1, freq: 12.0, ..Default::default() },
+            init_layers: 30,
+        };
+        let v = SessionRequest::Init(init.clone()).to_json();
+        match SessionRequest::from_json(&v).unwrap() {
+            SessionRequest::Init(back) => {
+                assert_eq!(back.init_layers, 30);
+                assert_eq!(back.params, init.params);
+            }
+            other => panic!("expected init, got {other:?}"),
+        }
+
+        let ing = SessionIngest { t: 41.5, values: vec![1.0, f32::NAN, -0.5] };
+        let v = SessionRequest::Ingest(ing.clone()).to_json();
+        match SessionRequest::from_json(&v).unwrap() {
+            SessionRequest::Ingest(back) => {
+                assert_eq!(back.t, 41.5);
+                assert_eq!(back.values.len(), 3);
+                for (a, b) in back.values.iter().zip(&ing.values) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected ingest, got {other:?}"),
+        }
+        assert!(SessionRequest::from_json(&Value::obj(vec![(
+            "kind",
+            Value::Str("reset".into())
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn cli_flags_build_the_same_request_as_the_library() {
+        let args: Vec<String> = [
+            "--input", "scene.bsq", "--engine", "emulated", "--n-total", "48", "--n-hist",
+            "36", "--h", "12", "--k", "1", "--freq", "12", "--pixels", "3:9",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let req = run_request_from_args(&args).unwrap();
+        match &req.source {
+            SceneSource::Path(p) => assert_eq!(p, "scene.bsq"),
+            other => panic!("expected path source, got {other:?}"),
+        }
+        assert_eq!(req.engine, EngineSpec::Emulated);
+        assert_eq!(req.params.n_total, Some(48));
+        assert_eq!(req.chunking.pixel_range, Some((3, 9)));
+        // malformed pixel ranges are rejected at parse time
+        let bad: Vec<String> =
+            ["--input", "s.bsq", "--pixels", "oops"].iter().map(|s| s.to_string()).collect();
+        assert!(run_request_from_args(&bad).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Standard base64 (with padding) — the binary-payload transport of
+//! the `bfast::api` wire forms (inline `.bsq` scenes, f32 layers) and
+//! the serving layer's JSON ingest. Lives below both so the front
+//! door does not depend on the HTTP substrate
+//! (`serve::http` re-exports these for compatibility).
+
+use crate::error::{bail, ensure, Result};
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 (with padding).
+pub fn base64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from_be_bytes([0, b[0], b[1], b[2]]);
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Inverse of [`base64_encode`]; whitespace is ignored.
+pub fn base64_decode(text: &str) -> Result<Vec<u8>> {
+    fn val(c: u8) -> Result<u32> {
+        Ok(match c {
+            b'A'..=b'Z' => (c - b'A') as u32,
+            b'a'..=b'z' => (c - b'a' + 26) as u32,
+            b'0'..=b'9' => (c - b'0' + 52) as u32,
+            b'+' => 62,
+            b'/' => 63,
+            other => bail!("invalid base64 byte {other:#04x}"),
+        })
+    }
+    let bytes: Vec<u8> = text.bytes().filter(|b| !b.is_ascii_whitespace()).collect();
+    ensure!(bytes.len() % 4 == 0, "base64 length {} is not a multiple of 4", bytes.len());
+    let groups = bytes.len() / 4;
+    let mut out = Vec::with_capacity(groups * 3);
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        let pads = chunk.iter().rev().take_while(|&&c| c == b'=').count();
+        ensure!(pads <= 2, "too much base64 padding");
+        ensure!(pads == 0 || i == groups - 1, "misplaced base64 padding");
+        ensure!(
+            !chunk[..4 - pads].contains(&b'='),
+            "misplaced base64 padding"
+        );
+        let mut n = 0u32;
+        for &c in &chunk[..4 - pads] {
+            n = (n << 6) | val(c)?;
+        }
+        n <<= 6 * pads as u32;
+        let b = n.to_be_bytes();
+        out.push(b[1]);
+        if pads < 2 {
+            out.push(b[2]);
+        }
+        if pads < 1 {
+            out.push(b[3]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base64_roundtrip_all_lengths() {
+        for len in 0..40usize {
+            let data: Vec<u8> =
+                (0..len as u8).map(|b| b.wrapping_mul(37).wrapping_add(5)).collect();
+            let enc = base64_encode(&data);
+            assert_eq!(enc.len() % 4, 0);
+            assert_eq!(base64_decode(&enc).unwrap(), data, "len {len}");
+        }
+        assert_eq!(base64_encode(b"Man"), "TWFu");
+        assert_eq!(base64_encode(b"Ma"), "TWE=");
+        assert_eq!(base64_decode("TWE=").unwrap(), b"Ma");
+        for bad in ["TQ", "====", "T===", "=AAA", "TW=u", "T!Fu"] {
+            assert!(base64_decode(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -32,6 +32,7 @@
 //! emulated). `phased` mode swaps the fused execution for the
 //! per-phase instrumented one to reproduce the paper's phase figures.
 
+use crate::api::CancelToken;
 use crate::error::{ensure, Context, Result};
 use crate::fill;
 use crate::metrics::PhaseTimes;
@@ -182,20 +183,28 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
     /// pipeline; returns the assembled break map plus phase timings
     /// (executor phases + accumulated staging time).
     pub fn run(&self, stack: &TimeStack, params: &BfastParams) -> Result<RunResult> {
-        self.run_with_progress(stack, params, |_, _| {})
+        self.run_with_progress(stack, params, &CancelToken::new(), |_, _| {})
     }
 
-    /// [`BfastRunner::run`] with a completion callback: after every
-    /// executed chunk, `progress(chunks_done, chunks_total)` fires on
-    /// the executor thread — the serving layer's job scheduler feeds
-    /// its `running/{progress}` status from it.
+    /// [`BfastRunner::run`] with progress observation and cooperative
+    /// cancellation: after every executed chunk,
+    /// `progress(chunks_done, chunks_total)` fires on the executor
+    /// thread (the serving layer's job scheduler feeds its
+    /// `running/{progress}` status from it), and `cancel` is checked
+    /// at every chunk boundary — once set, the run stops staging,
+    /// drains in-flight chunks and returns
+    /// [`crate::api::cancelled`] instead of a result.
     pub fn run_with_progress(
         &self,
         stack: &TimeStack,
         params: &BfastParams,
+        cancel: &CancelToken,
         progress: impl Fn(usize, usize),
     ) -> Result<RunResult> {
         params.validate()?;
+        if cancel.is_cancelled() {
+            return Err(crate::api::cancelled());
+        }
         ensure!(
             stack.n_times() == params.n_total,
             "stack has {} layers, params expect N={}",
@@ -313,6 +322,11 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
             let mut done = 0usize;
             let mut exec_err = None;
             while let Ok((chunk, buf)) = full_rx.recv() {
+                if exec_err.is_none() && cancel.is_cancelled() {
+                    exec_err = Some(crate::api::cancelled());
+                    // same early-stop contract as the failure path
+                    next_chunk.store(plan.len(), Ordering::Relaxed);
+                }
                 if exec_err.is_none() {
                     match exec.run_chunk(&t_axis, freq, &buf, lambda, &mut phases) {
                         Ok(out) => {

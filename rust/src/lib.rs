@@ -8,13 +8,24 @@
 //!
 //! ## Layers
 //!
+//! * **Front door ([`api`])** — the typed request/response facade
+//!   every entry point speaks: [`api::AnalysisRequest`] (scene source
+//!   + params + engine + chunking + outputs, with a canonical JSON
+//!   wire form) and [`api::SessionRequest`] for monitor init/ingest,
+//!   executed under an [`api::JobHandle`] (progress observation +
+//!   cooperative cancellation). The CLI parses flags into it, the
+//!   server queues it, `bfast client` posts it, the library executes
+//!   it — one vocabulary, so a request can be logged, forwarded,
+//!   replayed, or split by pixel range across shards.
 //! * **L4 ([`serve`])** — the break-detection service: a
-//!   zero-dependency HTTP/1.1 front-end (`bfast serve`) with a bounded
-//!   job scheduler ([`serve::queue`]) and a persistent registry of
-//!   live monitor sessions ([`serve::registry`]), sharing one runner
-//!   across its worker threads. Break maps served over the wire are
-//!   bit-identical to direct runs (`tests/serve.rs`).
-//! * **L3 (this crate)** — the streaming coordinator ([`coordinator`]):
+//!   zero-dependency keep-alive HTTP/1.1 front-end (`bfast serve`)
+//!   with a bounded job scheduler ([`serve::queue`], cancellation via
+//!   `DELETE /v1/runs/{id}`, finished-record eviction policy) and a
+//!   persistent registry of live monitor sessions
+//!   ([`serve::registry`]), sharing one runner across its worker
+//!   threads. Break maps served over the wire are bit-identical to
+//!   direct runs (`tests/serve.rs`, `tests/api.rs`).
+//! * **L3 ([`coordinator`])** — the streaming coordinator:
 //!   scene source → gap-fill → chunking → staged transfer → executor →
 //!   break-map assembly, plus all CPU baselines ([`pixel`], [`cpu`])
 //!   the paper evaluates against, and the incremental [`monitor`]
@@ -44,17 +55,37 @@
 //!
 //! ## Quick start
 //!
+//! Describe the analysis once, as an [`api::AnalysisRequest`], and
+//! execute it — the same request could be posted verbatim to a
+//! `bfast serve` instance (`POST /v1/runs`, `Content-Type:
+//! application/json`) and would produce the same bits:
+//!
 //! ```
+//! use bfast::api::{AnalysisRequest, EngineSpec, JobHandle, SceneSource};
 //! use bfast::params::BfastParams;
 //! use bfast::synth::artificial::ArtificialDataset;
-//! use bfast::coordinator::{BfastRunner, RunnerConfig};
 //!
 //! let params = BfastParams::new(60, 40, 20, 2, 12.0, 0.05).unwrap();
 //! let data = ArtificialDataset::new(params.clone(), 500, 42).generate();
-//! let runner = BfastRunner::emulated(RunnerConfig::default()).unwrap();
-//! let result = runner.run(&data.stack, &params).unwrap();
-//! println!("{} of {} pixels broke", result.break_count(), result.len());
+//!
+//! let mut req = AnalysisRequest::new(SceneSource::Inline(data.stack));
+//! req.params = bfast::api::ParamSpec::from_params(&params);
+//! req.engine = EngineSpec::Emulated;
+//!
+//! let handle = JobHandle::new(); // progress + cancellation
+//! let result = req.execute(&handle).unwrap();
+//! println!("{} of {} pixels broke", result.map.break_count(), result.map.len());
+//! assert_eq!(handle.progress().0, handle.progress().1); // all chunks ran
+//!
+//! // the request itself is the wire/job description:
+//! let wire = req.to_json_string();
+//! let replay = AnalysisRequest::from_json_str(&wire).unwrap();
+//! # let _ = replay;
 //! ```
+//!
+//! The long-form coordinator API ([`coordinator::BfastRunner`])
+//! remains available underneath for callers that manage their own
+//! backends and stacks.
 //!
 //! ## Monitoring workflow (near-real-time ingest)
 //!
@@ -106,6 +137,8 @@
 //! [`cli`], [`propcheck`], [`bench_support`], [`error`]) exist because
 //! the build environment is fully offline — see DESIGN.md §3.
 
+pub mod api;
+pub mod b64;
 pub mod bench_support;
 pub mod cli;
 pub mod coordinator;

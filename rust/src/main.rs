@@ -1,20 +1,20 @@
-//! `bfast` — the leader binary: generate data, run break detection
-//! through any of the four implementations, inspect pixels, and print
-//! critical-value tables.
+//! `bfast` — the leader binary. Every subcommand is a thin shell over
+//! the [`bfast::api`] front door: `run` parses its flags into an
+//! `AnalysisRequest` and executes it, `client submit` posts the same
+//! JSON the library speaks, `monitor --init` builds a `SessionInit`.
 
+use bfast::api::{self, JobHandle};
 use bfast::cli::Command;
 use bfast::error::{bail, ensure, Result};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
-use bfast::cpu::FusedCpuBfast;
 use bfast::json;
-use bfast::monitor::{self, MonitorConfig, MonitorSession};
+use bfast::monitor::{self, MonitorSession};
 use bfast::params::BfastParams;
-use bfast::pixel::{DirectBfast, NaiveBfast};
 use bfast::raster::{io as rio, pgm};
 use bfast::runtime::bten::{bten_to_bytes, Tensor};
 use bfast::serve::{http as shttp, ServeConfig, Server};
 use bfast::synth::{ArtificialDataset, ChileScene};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,7 +37,7 @@ COMMANDS:
                 new layers (.bsq/.pgm) with no refit (--state dir/)
   serve         break-detection service: HTTP API, bounded job queue,
                 live monitor sessions (--addr host:port --state dir/)
-  client        talk to a running server (health | submit | ingest | ...)
+  client        talk to a running server (health | submit | cancel | ingest | ...)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
 ";
@@ -78,14 +78,7 @@ fn params_from(m: &bfast::cli::Matches) -> Result<BfastParams> {
     )
 }
 
-fn param_flags(c: Command) -> Command {
-    c.opt("n-total", "200", "series length N")
-        .opt("n-hist", "100", "stable history length n")
-        .opt("h", "50", "MOSUM bandwidth")
-        .opt("k", "3", "harmonic terms")
-        .opt("freq", "23", "observations per period f")
-        .opt("alpha", "0.05", "significance level")
-}
+use bfast::api::param_flags;
 
 fn cmd_info(args: &[String]) -> Result<()> {
     let cmd = Command::new("info", "show backend + artifacts")
@@ -167,90 +160,38 @@ fn cmd_generate(args: &[String]) -> Result<()> {
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let cmd = param_flags(
-        Command::new("run", "analyse a stack")
-            .req("input", "input .bsq stack")
-            .opt("engine", "device", "device | emulated | cpu | direct | naive")
-            .opt("artifacts", "artifacts", "artifact directory (device)")
-            .opt("artifact", "", "artifact config name override (device)")
-            .opt("queue-depth", "2", "staging queue depth (device)")
-            .opt("staging-threads", "0", "staging threads, 0 = auto (device)")
-            .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
-            .switch("phased", "run the per-phase executables (instrumented)")
-            .switch("timings", "print the phase breakdown"),
+    // the whole command is one trip through the front door: flags →
+    // AnalysisRequest → execute (bit-identical to a wire submit of the
+    // same request — pinned by tests/api.rs)
+    let req = api::run_request_from_args(args)?;
+    let res = req.execute(&JobHandle::new())?;
+    println!(
+        "{} run: engine={} artifact={} chunks={} wall={:.3}s",
+        req.engine.label(),
+        res.engine,
+        res.artifact,
+        res.chunks,
+        res.wall.as_secs_f64()
     );
-    let m = cmd.parse(args)?;
-    let stack = rio::read_stack(m.str("input")?)?;
-    let params = params_from(&m)?;
-    let t0 = Instant::now();
-    let (map, phases) = match m.str("engine")? {
-        engine @ ("device" | "emulated") => {
-            let mut cfg = RunnerConfig {
-                phased: m.flag("phased"),
-                queue_depth: m.usize("queue-depth")?,
-                ..Default::default()
-            };
-            if m.usize("staging-threads")? > 0 {
-                cfg.staging_threads = m.usize("staging-threads")?;
-            }
-            let name = m.str("artifact")?;
-            if !name.is_empty() {
-                cfg.artifact = Some(name.to_string());
-            }
-            let runner = if engine == "emulated" {
-                BfastRunner::emulated(cfg)?
-            } else {
-                BfastRunner::auto(m.str("artifacts")?, cfg)?
-            };
-            if engine == "device" && runner.platform().starts_with("emulated") {
-                eprintln!(
-                    "bfast: no device backend available (no artifacts at {:?}); \
-                     running on the emulated backend — use --engine emulated to \
-                     select it explicitly",
-                    m.str("artifacts")?
-                );
-            }
-            let res = runner.run(&stack, &params)?;
-            println!(
-                "{} run: backend={} artifact={} chunks={} wall={:.3}s",
-                engine,
-                runner.platform(),
-                res.artifact,
-                res.chunks,
-                res.wall.as_secs_f64()
-            );
-            (res.map, Some(res.phases))
-        }
-        "cpu" => {
-            let eng = FusedCpuBfast::new(params.clone(), &stack.time_axis)?;
-            let (map, times) = eng.run(&stack)?;
-            (map, Some(times))
-        }
-        "direct" => (DirectBfast::new(params.clone(), &stack.time_axis)?.run(&stack)?, None),
-        "naive" => (NaiveBfast::new(params.clone()).run(&stack)?, None),
-        other => bail!("unknown engine {other:?}"),
-    };
-    let wall = t0.elapsed();
     println!(
         "{} pixels, {} breaks ({:.2}%) in {:.3}s  [lambda={:.3}]",
-        map.len(),
-        map.break_count(),
-        100.0 * map.break_fraction(),
-        wall.as_secs_f64(),
-        params.lambda
+        res.map.len(),
+        res.map.break_count(),
+        100.0 * res.map.break_fraction(),
+        res.wall.as_secs_f64(),
+        res.params.lambda
     );
-    if m.flag("timings") {
-        if let Some(p) = &phases {
+    if req.outputs.timings {
+        if let Some(p) = &res.phases {
             print!("{}", p.table("phase breakdown"));
         }
     }
-    let pgm_path = m.str("momax-pgm")?;
-    if !pgm_path.is_empty() {
-        let (w, h) = match (stack.width, stack.height) {
+    if let Some(pgm_path) = &req.outputs.momax_pgm {
+        let (w, h) = match (res.width, res.height) {
             (Some(w), Some(h)) => (w, h),
-            _ => (map.len(), 1),
+            _ => (res.map.len(), 1),
         };
-        let (lo, hi) = pgm::write_pgm_autoscale(pgm_path, &map.momax, w, h)?;
+        let (lo, hi) = pgm::write_pgm_autoscale(pgm_path, &res.map.momax, w, h)?;
         println!("wrote {pgm_path} (scale {lo:.2}..{hi:.2})");
     }
     Ok(())
@@ -354,13 +295,15 @@ fn cmd_monitor(args: &[String]) -> Result<()> {
             stack = trimmed;
             params = adjusted;
         }
-        let cfg = MonitorConfig {
-            m_chunk: m.usize("m-chunk")?,
-            threads,
-            fill_missing: !m.flag("no-fill"),
+        // through the front door: the primed session is described by
+        // the same SessionInit the serve API accepts
+        let init = api::SessionInit {
+            source: api::SceneSource::Inline(stack),
+            params: api::ParamSpec::from_params(&params),
+            init_layers: 0, // prefix/ROC trims already applied above
         };
         let t0 = Instant::now();
-        let s = MonitorSession::start(&stack, &params, cfg)?;
+        let s = init.start_local(m.usize("m-chunk")?, threads, !m.flag("no-fill"))?;
         println!(
             "primed session: {} px, {} layers (n={}, h={}, k={}, lambda={:.3}) in {:.3}s; \
              {} breaks in the initial archive",
@@ -486,7 +429,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("http-threads", "0", "HTTP worker threads (0 = auto)")
     .opt("job-workers", "1", "scheduler workers driving analysis runs")
     .opt("queue", "32", "job queue capacity (further submissions get 429)")
-    .opt("max-body-mb", "256", "largest accepted request body (MiB)");
+    .opt("max-body-mb", "256", "largest accepted request body (MiB)")
+    .opt("finished-cap", "256", "finished job records kept for status/map queries")
+    .opt("finished-max-age-s", "3600", "seconds a finished job record is retained (0 = no age limit)");
     let m = cmd.parse(args)?;
     let cfg = ServeConfig {
         addr: m.str("addr")?.to_string(),
@@ -498,6 +443,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         job_workers: m.usize("job-workers")?,
         queue_capacity: m.usize("queue")?,
         max_body: m.usize("max-body-mb")? << 20,
+        finished_cap: m.usize("finished-cap")?,
+        finished_max_age: Duration::from_secs(m.u64("finished-max-age-s")?),
         runner: RunnerConfig::default(),
     };
     let state_desc = cfg
@@ -515,15 +462,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     server.wait()
 }
 
-fn client_params_query(m: &bfast::cli::Matches) -> Result<String> {
-    Ok(format!(
-        "?n-hist={}&h={}&k={}&freq={}&alpha={}",
-        m.usize("n-hist")?,
-        m.usize("h")?,
-        m.usize("k")?,
-        m.f64("freq")?,
-        m.f64("alpha")?
-    ))
+fn client_param_spec(m: &bfast::cli::Matches) -> Result<api::ParamSpec> {
+    Ok(api::ParamSpec {
+        n_total: None,
+        n_hist: m.usize("n-hist")?,
+        h: m.usize("h")?,
+        k: m.usize("k")?,
+        freq: m.f64("freq")?,
+        alpha: m.f64("alpha")?,
+        lambda: None,
+    })
 }
 
 /// Fail on non-2xx, surfacing the server's error JSON.
@@ -571,12 +519,12 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "client",
         "HTTP client for a running `bfast serve`. Positional action: \
-         health | metrics | jobs | submit | status | map | session-init | \
-         session | ingest | session-map | shutdown",
+         health | metrics | jobs | submit | status | cancel | map | \
+         session-init | session | ingest | session-map | shutdown",
     )
     .opt("addr", "127.0.0.1:7878", "server address (host:port)")
     .opt("input", "", "input file (.bsq scene; .bten/.pgm layer for ingest)")
-    .opt("job", "0", "job id (status / map)")
+    .opt("job", "0", "job id (status / cancel / map)")
     .opt("name", "", "session name")
     .opt("t", "", "acquisition time of the ingested layer")
     .opt("out", "", "write the response payload here instead of stdout")
@@ -629,14 +577,18 @@ fn cmd_client(args: &[String]) -> Result<()> {
             print!("{}", bfast::report::jobs_table(&rows).to_console());
         }
         "submit" => {
+            // post exactly what the library executes: the canonical
+            // AnalysisRequest JSON (scene inline)
             let bytes = need_input()?;
-            let path = format!("/v1/runs{}", client_params_query(&m)?);
+            let stack = rio::stack_from_bytes(&bytes, m.str("input")?)?;
+            let mut analysis = api::AnalysisRequest::new(api::SceneSource::Inline(stack));
+            analysis.params = client_param_spec(&m)?;
             let body = expect_ok(shttp::roundtrip(
                 addr,
                 "POST",
-                &path,
-                "application/octet-stream",
-                &bytes,
+                "/v1/runs",
+                "application/json",
+                analysis.to_json_string().as_bytes(),
             )?)?;
             let v = json::parse(std::str::from_utf8(&body)?.trim())?;
             let job = v.get("job")?.as_usize()?;
@@ -651,6 +603,17 @@ fn cmd_client(args: &[String]) -> Result<()> {
                 expect_ok(shttp::roundtrip(addr, "GET", &format!("/v1/runs/{job}"), "", &[])?)?;
             print!("{}", String::from_utf8_lossy(&body));
         }
+        "cancel" => {
+            let job = m.usize("job")?;
+            let body = expect_ok(shttp::roundtrip(
+                addr,
+                "DELETE",
+                &format!("/v1/runs/{job}"),
+                "",
+                &[],
+            )?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
         "map" => {
             let job = m.usize("job")?;
             let path = format!("/v1/runs/{job}/map{fmt_suffix}");
@@ -660,16 +623,20 @@ fn cmd_client(args: &[String]) -> Result<()> {
         "session-init" => {
             let name = need_name()?;
             let bytes = need_input()?;
-            let mut path = format!("/v1/sessions/{name}{}", client_params_query(&m)?);
-            if m.usize("init-layers")? > 0 {
-                path.push_str(&format!("&init-layers={}", m.usize("init-layers")?));
-            }
+            let init = api::SessionInit {
+                source: api::SceneSource::Inline(rio::stack_from_bytes(
+                    &bytes,
+                    m.str("input")?,
+                )?),
+                params: client_param_spec(&m)?,
+                init_layers: m.usize("init-layers")?,
+            };
             let body = expect_ok(shttp::roundtrip(
                 addr,
                 "POST",
-                &path,
-                "application/octet-stream",
-                &bytes,
+                &format!("/v1/sessions/{name}"),
+                "application/json",
+                init.to_json().to_string_compact().as_bytes(),
             )?)?;
             print!("{}", String::from_utf8_lossy(&body));
         }

@@ -17,15 +17,23 @@
 //! |------------------------------------|-----------------|-------|
 //! | `GET  /healthz`                    | —               | status JSON |
 //! | `GET  /metrics`                    | —               | Prometheus text |
-//! | `POST /v1/runs?n-hist=..&h=..`     | `.bsq` bytes    | 202 `{job}` or 429 |
+//! | `POST /v1/runs`                    | [`AnalysisRequest`] JSON, or `.bsq` bytes + `?n-hist=..` | 202 `{job}` or 429 |
 //! | `GET  /v1/runs`                    | —               | job list |
 //! | `GET  /v1/runs/{id}`               | —               | status + progress |
+//! | `DELETE /v1/runs/{id}`             | —               | cancel (200/404/409) |
 //! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM |
-//! | `POST /v1/sessions/{name}?n-hist=..` | `.bsq` bytes  | 201 summary |
+//! | `POST /v1/sessions/{name}`         | [`SessionInit`] JSON, or `.bsq` bytes + `?n-hist=..` | 201 summary |
 //! | `GET  /v1/sessions[/{name}]`       | —               | list / summary |
-//! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or JSON `{t, layer_b64}` | ingest delta |
+//! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or [`SessionIngest`] JSON | ingest delta |
 //! | `GET  /v1/sessions/{name}/map[?format=pgm]` | —      | break map JSON / PGM |
 //! | `POST /shutdown`                   | —               | 200, then graceful stop |
+//!
+//! The JSON bodies are the canonical `bfast::api` wire schema (see
+//! [`crate::api`]) — `bfast client submit` posts exactly the
+//! [`AnalysisRequest`] the library executes; the query-string +
+//! raw-bytes forms are curl-friendly sugar that the handlers lower
+//! into the same types. Connections are kept alive across requests
+//! (HTTP/1.1 semantics; honour `Connection: close`).
 //!
 //! Every returned break map is **bit-identical** to a direct
 //! [`BfastRunner::run`](crate::coordinator::BfastRunner::run) of the
@@ -36,22 +44,28 @@ pub mod http;
 pub mod queue;
 pub mod registry;
 
+use crate::api::{AnalysisRequest, ParamSpec, SceneSource, SessionIngest, SessionInit};
 use crate::coordinator::{RunnerConfig, SharedBfastRunner};
-use crate::error::{bail, ensure, err, Context, Result};
+use crate::error::{bail, err, Context, Result};
 use crate::json::{self, Value};
 use crate::monitor::MonitorSession;
-use crate::params::BfastParams;
 use crate::raster::{io as rio, pgm, BreakMap};
 use crate::runtime::bten::{bten_from_bytes, Tensor};
 use crate::threadpool::{self, WorkerPool};
 use http::{Request, Response};
-use queue::{JobQueue, JobRecord, JobSpec, JobState, Scheduler, SubmitError};
+use queue::{
+    CancelOutcome, EvictionPolicy, JobQueue, JobRecord, JobState, Scheduler, SubmitError,
+};
 use registry::SessionRegistry;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Cap on requests served over one keep-alive connection (bounds how
+/// long a single socket can monopolise a pool worker).
+const MAX_REQUESTS_PER_CONN: usize = 1024;
 
 /// Server configuration (`bfast serve` flags).
 #[derive(Clone, Debug)]
@@ -69,12 +83,19 @@ pub struct ServeConfig {
     pub queue_capacity: usize,
     /// Largest accepted request body, in bytes.
     pub max_body: usize,
+    /// Finished job records retained for status/map queries (count cap
+    /// of the eviction policy; each record holds a full break map).
+    pub finished_cap: usize,
+    /// Longest a finished job record is retained (age cap of the
+    /// eviction policy; zero = no age limit, count cap only).
+    pub finished_max_age: Duration,
     /// Coordinator configuration for the shared runner.
     pub runner: RunnerConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
+        let policy = EvictionPolicy::default();
         Self {
             addr: "127.0.0.1:7878".into(),
             state_dir: None,
@@ -82,6 +103,8 @@ impl Default for ServeConfig {
             job_workers: 1,
             queue_capacity: 32,
             max_body: 256 << 20,
+            finished_cap: policy.max_finished,
+            finished_max_age: policy.max_age,
             runner: RunnerConfig::default(),
         }
     }
@@ -123,7 +146,10 @@ impl Server {
             cfg.http_threads
         };
         let runner = Arc::new(SharedBfastRunner::emulated_shared(cfg.runner.clone())?);
-        let queue = Arc::new(JobQueue::new(cfg.queue_capacity));
+        let queue = Arc::new(JobQueue::with_policy(
+            cfg.queue_capacity,
+            EvictionPolicy { max_finished: cfg.finished_cap, max_age: cfg.finished_max_age },
+        ));
         let registry =
             SessionRegistry::open(cfg.state_dir.clone(), threadpool::default_threads())?;
         let scheduler =
@@ -190,18 +216,50 @@ fn trigger_shutdown(state: &ServerState) {
     let _ = TcpStream::connect(state.addr);
 }
 
-fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+fn handle_connection(stream: TcpStream, state: &ServerState) {
     let _ = stream.set_nodelay(true);
-    state.requests.fetch_add(1, Ordering::Relaxed);
-    let resp = match http::read_request(&mut stream, state.max_body) {
-        Ok(req) => route(&req, state),
-        Err(e) => Response::error(400, &format!("{e:#}")),
-    };
-    if resp.status >= 400 {
-        state.errors.fetch_add(1, Ordering::Relaxed);
+    // one read buffer per connection, reused across keep-alive
+    // requests: read_request stays byte-precise without per-byte
+    // syscalls, and pipelined bytes carry over to the next iteration
+    let mut reader = std::io::BufReader::new(stream);
+    let mut served = 0usize;
+    loop {
+        // generous timeout for the first request, shorter for idle
+        // keep-alive waits so one quiet socket can't pin a pool worker
+        // (an expired idle wait surfaces as Ok(None), a clean close)
+        let timeout = if served == 0 { Duration::from_secs(30) } else { Duration::from_secs(5) };
+        let _ = reader.get_ref().set_read_timeout(Some(timeout));
+        let req = match http::read_request(&mut reader, state.max_body) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // client closed (or went idle) between requests
+            Err(e) => {
+                // malformed or oversized request: answer 400 and close
+                state.requests.fetch_add(1, Ordering::Relaxed);
+                state.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(
+                    reader.get_mut(),
+                    &Response::error(400, &format!("{e:#}")),
+                    false,
+                );
+                break;
+            }
+        };
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = route(&req, state);
+        if resp.status >= 400 {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        served += 1;
+        let keep = req.keep_alive()
+            && served < MAX_REQUESTS_PER_CONN
+            && !state.shutdown.load(Ordering::SeqCst);
+        if http::write_response(reader.get_mut(), &resp, keep).is_err() {
+            break; // client may be gone
+        }
+        if !keep {
+            break;
+        }
     }
-    let _ = http::write_response(&mut stream, &resp); // client may be gone
 }
 
 fn route(req: &Request, state: &ServerState) -> Response {
@@ -220,6 +278,7 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("POST", ["v1", "runs"]) => submit_run(req, state),
         ("GET", ["v1", "runs"]) => list_runs(state),
         ("GET", ["v1", "runs", id]) => run_status(id, state),
+        ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
@@ -254,11 +313,20 @@ fn metrics(state: &ServerState) -> Response {
     let _ = writeln!(out, "bfast_http_errors_total {}", state.errors.load(Ordering::Relaxed));
     let _ = writeln!(out, "bfast_jobs_submitted_total {}", stats.submitted);
     let _ = writeln!(out, "bfast_jobs_rejected_total {}", stats.rejected);
+    let _ = writeln!(out, "bfast_jobs_evicted_total {}", stats.evicted);
     let _ = writeln!(out, "bfast_jobs_queued {}", stats.queued);
     let _ = writeln!(out, "bfast_jobs_running {}", stats.running);
     let _ = writeln!(out, "bfast_jobs_done {}", stats.done);
     let _ = writeln!(out, "bfast_jobs_failed {}", stats.failed);
+    let _ = writeln!(out, "bfast_jobs_cancelled {}", stats.cancelled);
     let _ = writeln!(out, "bfast_queue_capacity {}", state.queue.capacity());
+    let policy = state.queue.policy();
+    let _ = writeln!(out, "bfast_finished_records_cap {}", policy.max_finished);
+    let _ = writeln!(
+        out,
+        "bfast_finished_max_age_seconds {:.3}",
+        policy.max_age.as_secs_f64()
+    );
     let _ = writeln!(out, "bfast_sessions {}", state.registry.len());
     let _ = writeln!(
         out,
@@ -288,28 +356,60 @@ fn q_f64(req: &Request, key: &str, default: f64) -> Result<f64> {
 }
 
 /// Analysis parameters from the query string (defaults mirror the
-/// CLI's `run` command; N comes from the uploaded stack).
-fn params_from_query(req: &Request, n_total: usize) -> Result<BfastParams> {
-    BfastParams::new(
-        n_total,
-        q_usize(req, "n-hist", 100)?,
-        q_usize(req, "h", 50)?,
-        q_usize(req, "k", 3)?,
-        q_f64(req, "freq", 23.0)?,
-        q_f64(req, "alpha", 0.05)?,
-    )
+/// CLI's `run` command; N comes from the scene at execution time).
+fn params_from_query(req: &Request) -> Result<ParamSpec> {
+    let d = ParamSpec::default();
+    Ok(ParamSpec {
+        n_total: None,
+        n_hist: q_usize(req, "n-hist", d.n_hist)?,
+        h: q_usize(req, "h", d.h)?,
+        k: q_usize(req, "k", d.k)?,
+        freq: q_f64(req, "freq", d.freq)?,
+        alpha: q_f64(req, "alpha", d.alpha)?,
+        lambda: None,
+    })
+}
+
+/// Remote callers must ship the scene with the request: honouring a
+/// `path` source would let any client make the server read arbitrary
+/// local files (the path form is for the CLI and for trusted
+/// shard-fanout deployments with shared storage, not the open wire).
+fn reject_path_source(source: &SceneSource) -> Result<()> {
+    match source {
+        SceneSource::Path(p) => {
+            bail!("scene source {p:?} is a path; the wire only accepts inline scenes")
+        }
+        SceneSource::Inline(_) => Ok(()),
+    }
+}
+
+/// Lower either submit body form into the one request type: a JSON
+/// body *is* an [`AnalysisRequest`]; raw `.bsq` bytes + query params
+/// are sugar for an inline request.
+fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
+    let analysis = if req.is_json() {
+        let text = std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?;
+        let ar = AnalysisRequest::from_json_str(text)?;
+        reject_path_source(&ar.source)?;
+        ar
+    } else {
+        let stack = rio::stack_from_bytes(&req.body, "request body")?;
+        let mut ar = AnalysisRequest::new(SceneSource::Inline(stack));
+        ar.params = params_from_query(req)?;
+        ar
+    };
+    // reject bad params / pixel ranges with a 400 at the door instead
+    // of a 202 whose job fails later (and meanwhile eats queue slots)
+    analysis.validate()?;
+    Ok(analysis)
 }
 
 fn submit_run(req: &Request, state: &ServerState) -> Response {
-    let stack = match rio::stack_from_bytes(&req.body, "request body") {
-        Ok(s) => s,
+    let analysis = match analysis_request_from(req) {
+        Ok(a) => a,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
-    let params = match params_from_query(req, stack.n_times()) {
-        Ok(p) => p,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
-    };
-    match state.queue.submit(JobSpec { stack, params }) {
+    match state.queue.submit(analysis) {
         Ok(id) => Response::json(
             202,
             &Value::obj(vec![
@@ -329,13 +429,16 @@ fn job_json(rec: &JobRecord) -> Value {
     let mut fields = vec![
         ("job", Value::Num(rec.id as f64)),
         ("status", Value::Str(rec.state.label().into())),
-        ("progress", Value::Num(rec.state.progress())),
-        ("pixels", Value::Num(rec.pixels as f64)),
+        ("progress", Value::Num(rec.progress())),
     ];
+    if let Some(px) = rec.pixels {
+        fields.push(("pixels", Value::Num(px as f64)));
+    }
+    let (chunks_done, chunks_total) = rec.handle.progress();
     match &rec.state {
-        JobState::Running { chunks_done, chunks_total } => {
-            fields.push(("chunks_done", Value::Num(*chunks_done as f64)));
-            fields.push(("chunks_total", Value::Num(*chunks_total as f64)));
+        JobState::Running | JobState::Cancelled => {
+            fields.push(("chunks_done", Value::Num(chunks_done as f64)));
+            fields.push(("chunks_total", Value::Num(chunks_total as f64)));
         }
         JobState::Failed { error } => fields.push(("error", Value::Str(error.clone()))),
         _ => {}
@@ -344,6 +447,8 @@ fn job_json(rec: &JobRecord) -> Value {
         fields.push(("breaks", Value::Num(res.map.break_count() as f64)));
         fields.push(("chunks", Value::Num(res.chunks as f64)));
         fields.push(("artifact", Value::Str(res.artifact.clone())));
+        fields.push(("engine", Value::Str(res.engine.clone())));
+        fields.push(("lambda", Value::Num(res.params.lambda)));
         fields.push(("wall_s", Value::Num(res.wall.as_secs_f64())));
     }
     Value::obj(fields)
@@ -353,11 +458,11 @@ fn list_runs(state: &ServerState) -> Response {
     let jobs = state.queue.jobs();
     let arr = jobs
         .into_iter()
-        .map(|(id, st)| {
+        .map(|(id, st, progress)| {
             Value::obj(vec![
                 ("job", Value::Num(id as f64)),
                 ("status", Value::Str(st.label().into())),
-                ("progress", Value::Num(st.progress())),
+                ("progress", Value::Num(progress)),
             ])
         })
         .collect();
@@ -379,6 +484,29 @@ fn run_status(id_seg: &str, state: &ServerState) -> Response {
     }
 }
 
+/// `DELETE /v1/runs/{id}` — cooperative cancellation: a queued job is
+/// withdrawn immediately, a running one stops at its next chunk
+/// boundary (poll the job status for the transition to `cancelled`).
+fn cancel_run(id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match state.queue.cancel(id) {
+        CancelOutcome::Cancelled => Response::json(
+            200,
+            &Value::obj(vec![
+                ("job", Value::Num(id as f64)),
+                ("status", Value::Str("cancelling".into())),
+            ]),
+        ),
+        CancelOutcome::AlreadyFinished => {
+            Response::error(409, &format!("job {id} already finished"))
+        }
+        CancelOutcome::NotFound => Response::error(404, &format!("no job {id}")),
+    }
+}
+
 fn run_map(req: &Request, id_seg: &str, state: &ServerState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
@@ -389,6 +517,7 @@ fn run_map(req: &Request, id_seg: &str, state: &ServerState) -> Response {
         (JobState::Failed { error }, _) => {
             Response::error(409, &format!("job {id} failed: {error}"))
         }
+        (JobState::Cancelled, _) => Response::error(409, &format!("job {id} was cancelled")),
         _ => Response::error(409, &format!("job {id} is not finished")),
     });
     resp.unwrap_or_else(|| Response::error(404, &format!("no job {id}")))
@@ -476,13 +605,20 @@ fn create_session(req: &Request, name: &str, state: &ServerState) -> Response {
         );
     }
     let built = || -> Result<MonitorSession> {
-        let mut stack = rio::stack_from_bytes(&req.body, "request body")?;
-        let init_layers = q_usize(req, "init-layers", 0)?;
-        if init_layers > 0 {
-            stack = stack.prefix(init_layers)?;
-        }
-        let params = params_from_query(req, stack.n_times())?;
-        state.runner.start_monitor(&stack, &params)
+        let init = if req.is_json() {
+            let text = std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?;
+            let init = SessionInit::from_json(&json::parse(text)?)?;
+            reject_path_source(&init.source)?;
+            init
+        } else {
+            let stack = rio::stack_from_bytes(&req.body, "request body")?;
+            SessionInit {
+                source: SceneSource::Inline(stack),
+                params: params_from_query(req)?,
+                init_layers: q_usize(req, "init-layers", 0)?,
+            }
+        };
+        init.start_on(state.runner.as_ref())
     };
     let session = match built() {
         Ok(s) => s,
@@ -513,16 +649,16 @@ fn session_ingest(req: &Request, name: &str, state: &ServerState) -> Response {
     if !state.registry.contains(name) {
         return Response::error(404, &format!("no session named {name:?}"));
     }
-    let parsed = if req.content_type().to_ascii_lowercase().starts_with("application/json") {
+    let parsed = if req.is_json() {
         parse_json_layer(req)
     } else {
         parse_bten_layer(req)
     };
-    let (t, layer) = match parsed {
+    let ingest = match parsed {
         Ok(v) => v,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
-    match state.registry.ingest(name, t, &layer) {
+    match state.registry.ingest(name, ingest.t, &ingest.values) {
         Ok(delta) => Response::json(200, &delta.to_json()),
         Err(e) => Response::error(400, &format!("{e:#}")),
     }
@@ -530,32 +666,22 @@ fn session_ingest(req: &Request, name: &str, state: &ServerState) -> Response {
 
 /// Octet-stream ingest: the body is a `.bten` f32 tensor, the
 /// acquisition time rides in `?t=`.
-fn parse_bten_layer(req: &Request) -> Result<(f64, Vec<f32>)> {
+fn parse_bten_layer(req: &Request) -> Result<SessionIngest> {
     let t: f64 = req
         .query_get("t")
         .ok_or_else(|| err!("query parameter t is required for bten ingest"))?
         .parse()
         .map_err(|_| err!("query t is not a number"))?;
     match bten_from_bytes(&req.body, "request body")? {
-        Tensor::F32 { data, .. } => Ok((t, data)),
+        Tensor::F32 { data, .. } => Ok(SessionIngest { t, values: data }),
         other => bail!("layer tensor must be f32 (got shape {:?})", other.shape()),
     }
 }
 
-/// JSON ingest: `{"t": 61.0, "layer_b64": "<base64 of f32 LE values>"}`.
-fn parse_json_layer(req: &Request) -> Result<(f64, Vec<f32>)> {
+/// JSON ingest — the [`SessionIngest`] wire form.
+fn parse_json_layer(req: &Request) -> Result<SessionIngest> {
     let v = json::parse(std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?)?;
-    let t = v.get("t")?.as_f64()?;
-    let bytes = http::base64_decode(v.get("layer_b64")?.as_str()?)?;
-    ensure!(
-        bytes.len() % 4 == 0,
-        "layer_b64 must decode to little-endian f32 values"
-    );
-    let layer = bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
-    Ok((t, layer))
+    SessionIngest::from_json(&v)
 }
 
 // ServerState crosses into pool workers behind an Arc — assert the

@@ -1,6 +1,12 @@
 //! The job scheduler behind `POST /v1/runs`: a **bounded FIFO** of
-//! analysis jobs with per-job status, and a small worker pool that
-//! drains it through one shared [`SharedBfastRunner`].
+//! [`AnalysisRequest`]s with per-job status, and a small worker pool
+//! that drains it through one shared [`SharedBfastRunner`].
+//!
+//! The queue speaks the `bfast::api` vocabulary end to end: what it
+//! stores *is* the wire/job description (no private job struct), each
+//! record carries the request's [`JobHandle`] so progress is observed
+//! and cancellation ([`JobQueue::cancel`], `DELETE /v1/runs/{id}`)
+//! reaches a running analysis at its next chunk boundary.
 //!
 //! Backpressure is explicit: once `capacity` jobs are waiting,
 //! [`JobQueue::submit`] refuses with [`SubmitError::Full`] and the
@@ -9,55 +15,46 @@
 //! executor), so a scheduler worker count of 1–2 keeps the machine
 //! saturated without oversubscribing it.
 //!
+//! Finished records (each holds a full break map) are retained under a
+//! configurable [`EvictionPolicy`] — a count cap plus a maximum age —
+//! so a long-lived server's memory stays bounded no matter the traffic
+//! shape. Pending/running jobs are never evicted.
+//!
 //! Shutdown is graceful end to end: [`JobQueue::shutdown`] stops
 //! intake and wakes the workers, which finish every job already
 //! accepted before [`Scheduler::join`] returns.
 
-use crate::coordinator::{RunResult, SharedBfastRunner};
+use crate::api::{self, AnalysisRequest, AnalysisResponse, JobHandle};
+use crate::coordinator::SharedBfastRunner;
 use crate::metrics::PhaseTimes;
-use crate::params::BfastParams;
-use crate::raster::TimeStack;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
-
-/// One analysis job: a scene plus its (validated) parameters.
-pub struct JobSpec {
-    pub stack: TimeStack,
-    pub params: BfastParams,
-}
+use std::time::{Duration, Instant};
 
 /// Lifecycle of a job.
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobState {
     Queued,
-    Running { chunks_done: usize, chunks_total: usize },
+    Running,
     Done,
     Failed { error: String },
+    Cancelled,
 }
 
 impl JobState {
     pub fn label(&self) -> &'static str {
         match self {
             JobState::Queued => "queued",
-            JobState::Running { .. } => "running",
+            JobState::Running => "running",
             JobState::Done => "done",
             JobState::Failed { .. } => "failed",
+            JobState::Cancelled => "cancelled",
         }
     }
 
-    /// Fraction complete in [0, 1] (chunks executed / planned).
-    pub fn progress(&self) -> f64 {
-        match self {
-            JobState::Queued => 0.0,
-            JobState::Running { chunks_done, chunks_total } => {
-                if *chunks_total == 0 {
-                    0.0
-                } else {
-                    *chunks_done as f64 / *chunks_total as f64
-                }
-            }
-            JobState::Done | JobState::Failed { .. } => 1.0,
-        }
+    /// Terminal states (the ones the eviction policy may reap).
+    pub fn is_finished(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed { .. } | JobState::Cancelled)
     }
 }
 
@@ -65,11 +62,36 @@ impl JobState {
 pub struct JobRecord {
     pub id: u64,
     pub state: JobState,
-    /// Scene geometry recorded at submission (PGM rendering).
+    /// Progress + cancellation of this job (shared with the worker).
+    pub handle: JobHandle,
+    /// Scene geometry recorded at submission (PGM rendering); known
+    /// only for inline scenes until the run resolves the source.
     pub width: Option<usize>,
     pub height: Option<usize>,
-    pub pixels: usize,
-    pub result: Option<RunResult>,
+    pub pixels: Option<usize>,
+    pub result: Option<AnalysisResponse>,
+    /// When the job reached a terminal state (age-based eviction).
+    pub finished_at: Option<Instant>,
+}
+
+impl JobRecord {
+    /// Fraction complete in [0, 1] (chunks executed / planned). Only
+    /// `Done` reports 1.0; a cancelled or failed job reports how far
+    /// it actually got, consistent with its `chunks_done/chunks_total`.
+    pub fn progress(&self) -> f64 {
+        match &self.state {
+            JobState::Queued => 0.0,
+            JobState::Done => 1.0,
+            _ => {
+                let (done, total) = self.handle.progress();
+                if total == 0 {
+                    0.0
+                } else {
+                    done as f64 / total as f64
+                }
+            }
+        }
+    }
 }
 
 /// Why a submission was refused.
@@ -81,46 +103,92 @@ pub enum SubmitError {
     ShuttingDown,
 }
 
+/// What [`JobQueue::cancel`] achieved.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Cancellation took effect (immediately for a queued job; at the
+    /// next chunk boundary for a running one).
+    Cancelled,
+    /// The job already reached a terminal state — HTTP 409.
+    AlreadyFinished,
+    /// No such job — HTTP 404.
+    NotFound,
+}
+
+/// Retention of finished job records: keep at most `max_finished`, and
+/// none older than `max_age` since finishing (`max_age` of zero means
+/// *no age limit* — only the count cap applies). Both limits apply;
+/// pending/running jobs are exempt.
+#[derive(Clone, Debug)]
+pub struct EvictionPolicy {
+    pub max_finished: usize,
+    pub max_age: Duration,
+}
+
+impl Default for EvictionPolicy {
+    fn default() -> Self {
+        Self { max_finished: 256, max_age: Duration::from_secs(3600) }
+    }
+}
+
 /// Counter snapshot for `/metrics`.
 pub struct QueueStats {
     pub submitted: u64,
     pub rejected: u64,
+    /// Finished records reaped by the eviction policy.
+    pub evicted: u64,
     pub queued: usize,
     pub running: usize,
     pub done: usize,
     pub failed: usize,
+    pub cancelled: usize,
     /// Engine phase times accumulated across every completed run.
     pub phases: PhaseTimes,
 }
 
-/// Finished-job records retained for status/map queries. The oldest
-/// finished records beyond this are evicted — each one holds a full
-/// break map, so retention must be bounded for a long-lived server
-/// (pending/running jobs are never evicted).
-pub const MAX_FINISHED_RECORDS: usize = 256;
-
 struct QueueInner {
-    pending: VecDeque<(u64, JobSpec)>,
+    pending: VecDeque<(u64, AnalysisRequest)>,
     records: BTreeMap<u64, JobRecord>,
     next_id: u64,
     shutdown: bool,
     submitted: u64,
     rejected: u64,
+    evicted: u64,
     phases: PhaseTimes,
 }
 
 impl QueueInner {
-    fn evict_finished(&mut self) {
-        let finished: Vec<u64> = self
-            .records
-            .iter()
-            .filter(|(_, r)| matches!(r.state, JobState::Done | JobState::Failed { .. }))
-            .map(|(&id, _)| id)
-            .collect();
-        if finished.len() > MAX_FINISHED_RECORDS {
+    /// Apply the eviction policy (called whenever the lock is already
+    /// held and the record set may have changed).
+    fn evict_finished(&mut self, policy: &EvictionPolicy) {
+        let now = Instant::now();
+        let mut finished: Vec<u64> = Vec::new();
+        let mut expired: Vec<u64> = Vec::new();
+        for (&id, rec) in &self.records {
+            if !rec.state.is_finished() {
+                continue;
+            }
+            // max_age zero = unlimited (the natural CLI spelling for
+            // "keep until the count cap evicts it")
+            let old = !policy.max_age.is_zero()
+                && rec
+                    .finished_at
+                    .is_some_and(|at| now.duration_since(at) >= policy.max_age);
+            if old {
+                expired.push(id);
+            } else {
+                finished.push(id);
+            }
+        }
+        for id in expired {
+            self.records.remove(&id);
+            self.evicted += 1;
+        }
+        if finished.len() > policy.max_finished {
             // BTreeMap iterates id-ascending, so the front is oldest
-            for id in &finished[..finished.len() - MAX_FINISHED_RECORDS] {
+            for id in &finished[..finished.len() - policy.max_finished] {
                 self.records.remove(id);
+                self.evicted += 1;
             }
         }
     }
@@ -129,14 +197,20 @@ impl QueueInner {
 /// Bounded FIFO of analysis jobs. See module docs.
 pub struct JobQueue {
     capacity: usize,
+    policy: EvictionPolicy,
     inner: Mutex<QueueInner>,
     ready: Condvar,
 }
 
 impl JobQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, EvictionPolicy::default())
+    }
+
+    pub fn with_policy(capacity: usize, policy: EvictionPolicy) -> Self {
         Self {
             capacity: capacity.max(1),
+            policy: EvictionPolicy { max_finished: policy.max_finished.max(1), ..policy },
             inner: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
                 records: BTreeMap::new(),
@@ -144,6 +218,7 @@ impl JobQueue {
                 shutdown: false,
                 submitted: 0,
                 rejected: 0,
+                evicted: 0,
                 phases: PhaseTimes::new(),
             }),
             ready: Condvar::new(),
@@ -154,8 +229,12 @@ impl JobQueue {
         self.capacity
     }
 
-    /// Enqueue a job; `Err(Full)` is the 429 backpressure signal.
-    pub fn submit(&self, spec: JobSpec) -> std::result::Result<u64, SubmitError> {
+    pub fn policy(&self) -> &EvictionPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request; `Err(Full)` is the 429 backpressure signal.
+    pub fn submit(&self, req: AnalysisRequest) -> std::result::Result<u64, SubmitError> {
         let mut inner = self.inner.lock().unwrap();
         if inner.shutdown {
             return Err(SubmitError::ShuttingDown);
@@ -164,6 +243,10 @@ impl JobQueue {
             inner.rejected += 1;
             return Err(SubmitError::Full { capacity: self.capacity });
         }
+        let (width, height, pixels) = match &req.source {
+            api::SceneSource::Inline(s) => (s.width, s.height, Some(s.n_pixels())),
+            _ => (None, None, None),
+        };
         let id = inner.next_id;
         inner.next_id += 1;
         inner.submitted += 1;
@@ -172,28 +255,33 @@ impl JobQueue {
             JobRecord {
                 id,
                 state: JobState::Queued,
-                width: spec.stack.width,
-                height: spec.stack.height,
-                pixels: spec.stack.n_pixels(),
+                handle: JobHandle::new(),
+                width,
+                height,
+                pixels,
                 result: None,
+                finished_at: None,
             },
         );
-        inner.pending.push_back((id, spec));
+        inner.pending.push_back((id, req));
+        inner.evict_finished(&self.policy); // lazy age sweep
         drop(inner);
         self.ready.notify_one();
         Ok(id)
     }
 
-    /// Blocking pop for scheduler workers; marks the job running.
-    /// Returns `None` only once the queue is shut down *and* drained.
-    fn next_job(&self) -> Option<(u64, JobSpec)> {
+    /// Blocking pop for scheduler workers; marks the job running and
+    /// hands back its handle. Returns `None` only once the queue is
+    /// shut down *and* drained.
+    fn next_job(&self) -> Option<(u64, AnalysisRequest, JobHandle)> {
         let mut inner = self.inner.lock().unwrap();
         loop {
-            if let Some((id, spec)) = inner.pending.pop_front() {
+            if let Some((id, req)) = inner.pending.pop_front() {
                 if let Some(rec) = inner.records.get_mut(&id) {
-                    rec.state = JobState::Running { chunks_done: 0, chunks_total: 0 };
+                    rec.state = JobState::Running;
+                    return Some((id, req, rec.handle.clone()));
                 }
-                return Some((id, spec));
+                continue; // record gone (cannot happen: pending jobs are never evicted)
             }
             if inner.shutdown {
                 return None;
@@ -202,42 +290,93 @@ impl JobQueue {
         }
     }
 
-    fn set_progress(&self, id: u64, done: usize, total: usize) {
+    fn complete(&self, id: u64, result: AnalysisResponse) {
         let mut inner = self.inner.lock().unwrap();
-        if let Some(rec) = inner.records.get_mut(&id) {
-            rec.state = JobState::Running { chunks_done: done, chunks_total: total };
+        if let Some(p) = &result.phases {
+            inner.phases.merge(p);
         }
-    }
-
-    fn complete(&self, id: u64, result: RunResult) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.phases.merge(&result.phases);
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Done;
+            // the run's own view wins: a pixel_range request analyses a
+            // slice, whose map no longer matches the submitted scene's
+            // geometry (PGM rendering would assert on the mismatch)
+            rec.pixels = Some(result.map.len());
+            rec.width = result.width;
+            rec.height = result.height;
             rec.result = Some(result);
+            rec.finished_at = Some(Instant::now());
         }
-        inner.evict_finished();
+        inner.evict_finished(&self.policy);
     }
 
     fn fail(&self, id: u64, error: String) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Failed { error };
+            rec.finished_at = Some(Instant::now());
         }
-        inner.evict_finished();
+        inner.evict_finished(&self.policy);
     }
 
-    /// Read one job's record under the lock.
+    /// The worker observed the run stop on a cancelled token.
+    fn mark_cancelled(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.records.get_mut(&id) {
+            rec.state = JobState::Cancelled;
+            rec.finished_at = Some(Instant::now());
+        }
+        inner.evict_finished(&self.policy);
+    }
+
+    /// Cancel a job: a queued one is removed from the FIFO and marked
+    /// immediately; a running one has its token set and stops at the
+    /// next chunk boundary (the record transitions when the worker
+    /// observes the cancelled run).
+    pub fn cancel(&self, id: u64) -> CancelOutcome {
+        let mut inner = self.inner.lock().unwrap();
+        let state = match inner.records.get(&id) {
+            None => return CancelOutcome::NotFound,
+            Some(rec) => rec.state.clone(),
+        };
+        match state {
+            JobState::Queued => {
+                inner.pending.retain(|(pid, _)| *pid != id);
+                if let Some(rec) = inner.records.get_mut(&id) {
+                    rec.handle.cancel();
+                    rec.state = JobState::Cancelled;
+                    rec.finished_at = Some(Instant::now());
+                }
+                CancelOutcome::Cancelled
+            }
+            JobState::Running => {
+                if let Some(rec) = inner.records.get(&id) {
+                    rec.handle.cancel();
+                }
+                CancelOutcome::Cancelled
+            }
+            _ => CancelOutcome::AlreadyFinished,
+        }
+    }
+
+    /// Read one job's record under the lock. Sweeps the eviction
+    /// policy first, so an idle server's expired records disappear on
+    /// read, not only at the next submit/terminal event.
     pub fn with_record<T>(&self, id: u64, f: impl FnOnce(&JobRecord) -> T) -> Option<T> {
-        let inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        inner.evict_finished(&self.policy);
         inner.records.get(&id).map(f)
     }
 
-    /// `(id, state)` of every retained job, in submission order
-    /// (finished records beyond [`MAX_FINISHED_RECORDS`] are evicted).
-    pub fn jobs(&self) -> Vec<(u64, JobState)> {
-        let inner = self.inner.lock().unwrap();
-        inner.records.values().map(|r| (r.id, r.state.clone())).collect()
+    /// `(id, state, progress)` of every retained job, in submission
+    /// order (finished records are reaped per the eviction policy).
+    pub fn jobs(&self) -> Vec<(u64, JobState, f64)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.evict_finished(&self.policy);
+        inner
+            .records
+            .values()
+            .map(|r| (r.id, r.state.clone(), r.progress()))
+            .collect()
     }
 
     /// Jobs waiting for a worker.
@@ -245,24 +384,29 @@ impl JobQueue {
         self.inner.lock().unwrap().pending.len()
     }
 
-    /// Counters + per-state tallies + accumulated phase times.
+    /// Counters + per-state tallies + accumulated phase times (age
+    /// sweep included, like the other read paths).
     pub fn stats(&self) -> QueueStats {
-        let inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        inner.evict_finished(&self.policy);
         let mut stats = QueueStats {
             submitted: inner.submitted,
             rejected: inner.rejected,
+            evicted: inner.evicted,
             queued: 0,
             running: 0,
             done: 0,
             failed: 0,
+            cancelled: 0,
             phases: inner.phases.clone(),
         };
         for r in inner.records.values() {
             match &r.state {
                 JobState::Queued => stats.queued += 1,
-                JobState::Running { .. } => stats.running += 1,
+                JobState::Running => stats.running += 1,
                 JobState::Done => stats.done += 1,
                 JobState::Failed { .. } => stats.failed += 1,
+                JobState::Cancelled => stats.cancelled += 1,
             }
         }
         stats
@@ -292,18 +436,17 @@ impl Scheduler {
                 let queue = Arc::clone(&queue);
                 let runner = Arc::clone(&runner);
                 std::thread::spawn(move || {
-                    while let Some((id, spec)) = queue.next_job() {
+                    while let Some((id, req, handle)) = queue.next_job() {
                         // contain panics: a panicking run must mark its
                         // job failed, not kill the worker (with the
                         // default single worker that would stall the
                         // whole queue, jobs stuck in "running" forever)
                         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            runner.run_with_progress(&spec.stack, &spec.params, |done, total| {
-                                queue.set_progress(id, done, total)
-                            })
+                            req.execute_on(runner.as_ref(), &handle)
                         }));
                         match res {
                             Ok(Ok(r)) => queue.complete(id, r),
+                            Ok(Err(e)) if api::is_cancelled(&e) => queue.mark_cancelled(id),
                             Ok(Err(e)) => queue.fail(id, format!("{e:#}")),
                             Err(_) => queue.fail(id, "analysis panicked".to_string()),
                         }
@@ -325,22 +468,30 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{ParamSpec, SceneSource};
     use crate::coordinator::RunnerConfig;
+    use crate::params::BfastParams;
     use crate::synth::ArtificialDataset;
 
-    fn spec(m: usize, seed: u64) -> JobSpec {
+    fn request(m: usize, seed: u64) -> AnalysisRequest {
         let params = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
         let stack = ArtificialDataset::new(params.clone(), m, seed).generate().stack;
-        JobSpec { stack, params }
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+        req.params = ParamSpec::from_params(&params);
+        req
+    }
+
+    fn runner() -> Arc<SharedBfastRunner> {
+        Arc::new(SharedBfastRunner::emulated_shared(RunnerConfig::default()).unwrap())
     }
 
     #[test]
     fn backpressure_rejects_submissions_beyond_capacity() {
         // no scheduler attached: the queue fills deterministically
         let q = JobQueue::new(2);
-        assert!(q.submit(spec(4, 1)).is_ok());
-        assert!(q.submit(spec(4, 2)).is_ok());
-        match q.submit(spec(4, 3)) {
+        assert!(q.submit(request(4, 1)).is_ok());
+        assert!(q.submit(request(4, 2)).is_ok());
+        match q.submit(request(4, 3)) {
             Err(SubmitError::Full { capacity }) => assert_eq!(capacity, 2),
             other => panic!("expected Full, got {other:?}"),
         }
@@ -350,7 +501,7 @@ mod tests {
         assert_eq!(stats.rejected, 1);
         assert_eq!(stats.queued, 2);
         q.shutdown();
-        match q.submit(spec(4, 4)) {
+        match q.submit(request(4, 4)) {
             Err(SubmitError::ShuttingDown) => {}
             other => panic!("expected ShuttingDown, got {other:?}"),
         }
@@ -359,20 +510,18 @@ mod tests {
     #[test]
     fn scheduler_drains_jobs_and_records_results() {
         let q = Arc::new(JobQueue::new(8));
-        let runner =
-            Arc::new(SharedBfastRunner::emulated_shared(RunnerConfig::default()).unwrap());
-        let ids: Vec<u64> = (0..3).map(|i| q.submit(spec(40, i)).unwrap()).collect();
-        let sched = Scheduler::start(Arc::clone(&q), runner, 2);
+        let ids: Vec<u64> = (0..3).map(|i| q.submit(request(40, i)).unwrap()).collect();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 2);
         q.shutdown(); // graceful: accepted jobs still run
         sched.join();
         for id in ids {
-            let (label, breaks) = q
+            let (label, pixels) = q
                 .with_record(id, |rec| {
                     (rec.state.label(), rec.result.as_ref().map(|r| r.map.len()))
                 })
                 .unwrap();
             assert_eq!(label, "done", "job {id}");
-            assert_eq!(breaks, Some(40), "job {id}");
+            assert_eq!(pixels, Some(40), "job {id}");
         }
         let stats = q.stats();
         assert_eq!(stats.done, 3);
@@ -383,13 +532,13 @@ mod tests {
     #[test]
     fn failed_jobs_carry_their_error() {
         let q = Arc::new(JobQueue::new(4));
-        let runner =
-            Arc::new(SharedBfastRunner::emulated_shared(RunnerConfig::default()).unwrap());
         // params/stack mismatch surfaces as a failed job, not a panic
         let params = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap();
         let stack = crate::raster::TimeStack::zeros(10, 4);
-        let id = q.submit(JobSpec { stack, params }).unwrap();
-        let sched = Scheduler::start(Arc::clone(&q), runner, 1);
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+        req.params = ParamSpec::from_params(&params);
+        let id = q.submit(req).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
         q.shutdown();
         sched.join();
         let state = q.with_record(id, |rec| rec.state.clone()).unwrap();
@@ -397,5 +546,116 @@ mod tests {
             JobState::Failed { error } => assert!(error.contains("10"), "{error}"),
             other => panic!("expected failure, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn queued_job_cancels_immediately_and_deterministically() {
+        // no scheduler: both jobs stay queued
+        let q = Arc::new(JobQueue::new(8));
+        let keep = q.submit(request(8, 1)).unwrap();
+        let kill = q.submit(request(8, 2)).unwrap();
+        assert_eq!(q.cancel(kill), CancelOutcome::Cancelled);
+        assert_eq!(q.depth(), 1);
+        assert_eq!(q.with_record(kill, |r| r.state.clone()).unwrap(), JobState::Cancelled);
+        // idempotence + unknown ids
+        assert_eq!(q.cancel(kill), CancelOutcome::AlreadyFinished);
+        assert_eq!(q.cancel(999), CancelOutcome::NotFound);
+        // the surviving job still runs to completion
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        assert_eq!(q.with_record(keep, |r| r.state.label()).unwrap(), "done");
+        let stats = q.stats();
+        assert_eq!((stats.done, stats.cancelled), (1, 1));
+    }
+
+    #[test]
+    fn running_job_stops_before_completing_all_chunks() {
+        // a wide scene (default m_chunk 1024 → ~96 chunks) so the run
+        // is mid-flight long enough to cancel deterministically
+        let q = Arc::new(JobQueue::new(2));
+        let id = q.submit(request(96 * 1024, 5)).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        // wait until at least one chunk has executed
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let (state, (done, _)) = q
+                .with_record(id, |r| (r.state.clone(), r.handle.progress()))
+                .unwrap();
+            if state == JobState::Running && done >= 1 {
+                break;
+            }
+            assert!(
+                !state.is_finished(),
+                "job finished before the test could cancel it ({state:?})"
+            );
+            assert!(Instant::now() < deadline, "job never started running");
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        assert_eq!(q.cancel(id), CancelOutcome::Cancelled);
+        q.shutdown();
+        sched.join();
+        let (state, (done, total)) = q
+            .with_record(id, |r| (r.state.clone(), r.handle.progress()))
+            .unwrap();
+        assert_eq!(state, JobState::Cancelled);
+        assert!(total > 1, "scene should span many chunks, got {total}");
+        assert!(
+            done < total,
+            "cancelled job must stop early, but executed {done}/{total} chunks"
+        );
+    }
+
+    #[test]
+    fn eviction_policy_count_cap() {
+        let q = Arc::new(JobQueue::with_policy(
+            8,
+            EvictionPolicy { max_finished: 2, max_age: Duration::from_secs(3600) },
+        ));
+        let ids: Vec<u64> = (0..4).map(|i| q.submit(request(4, i)).unwrap()).collect();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        // single worker drains in FIFO order → the two oldest are gone
+        assert!(q.with_record(ids[0], |_| ()).is_none());
+        assert!(q.with_record(ids[1], |_| ()).is_none());
+        assert!(q.with_record(ids[2], |_| ()).is_some());
+        assert!(q.with_record(ids[3], |_| ()).is_some());
+        assert_eq!(q.stats().evicted, 2);
+        assert_eq!(q.jobs().len(), 2);
+    }
+
+    #[test]
+    fn eviction_policy_max_age() {
+        let q = Arc::new(JobQueue::with_policy(
+            8,
+            EvictionPolicy { max_finished: 100, max_age: Duration::from_millis(40) },
+        ));
+        let id = q.submit(request(4, 9)).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        // fresh record still served...
+        assert!(q.with_record(id, |_| ()).is_some());
+        // ...and reaped by the read-path sweep once it has aged out,
+        // even with no further queue mutations (idle-server contract)
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(q.with_record(id, |_| ()).is_none());
+        assert_eq!(q.stats().evicted, 1);
+    }
+
+    #[test]
+    fn zero_max_age_means_no_age_limit() {
+        let q = Arc::new(JobQueue::with_policy(
+            8,
+            EvictionPolicy { max_finished: 100, max_age: Duration::ZERO },
+        ));
+        let id = q.submit(request(4, 11)).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.with_record(id, |r| r.state.label()).unwrap(), "done");
+        assert_eq!(q.stats().evicted, 0);
     }
 }

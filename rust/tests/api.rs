@@ -1,0 +1,386 @@
+//! Front-door integration suite: the same [`AnalysisRequest`] must
+//! yield **bit-identical** break maps through every entry point —
+//! library execute, CLI flag parsing, and a wire submit to a live
+//! server — round-trip exactly through its canonical JSON form, slice
+//! pixel ranges consistently, and stop early when cancelled (both via
+//! the in-process [`CancelToken`] and `DELETE /v1/runs/{id}`).
+
+use bfast::api::{
+    self, AnalysisRequest, CancelToken, EngineSpec, JobHandle, ParamSpec, SceneSource,
+};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{io as rio, BreakMap, TimeStack};
+use bfast::runtime::EmulatedDevice;
+use bfast::serve::http::roundtrip;
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Analysis shape shared by the tests: N=48, n=36, h=12, k=1.
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn param_spec() -> ParamSpec {
+    ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    }
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(params_new(48), m, seed).generate();
+    if m >= 8 {
+        let d = data.stack.data_mut();
+        for t in 0..48 {
+            d[t * m] = f32::NAN; // dead pixel
+        }
+        for t in 10..14 {
+            d[t * m + 3] = f32::NAN; // cloud hole
+        }
+    }
+    data.stack
+}
+
+fn parse_json(body: &[u8]) -> json::Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+fn parse_map(body: &[u8]) -> BreakMap {
+    let v = parse_json(body);
+    let ints = |key: &str| -> Vec<i32> {
+        v.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect()
+    };
+    let momax = v
+        .get("momax")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    BreakMap { breaks: ints("breaks"), first: ints("first"), momax }
+}
+
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: momax differs at px {px}: {x} vs {y}");
+    }
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn wait_job(addr: &str, id: u64) -> json::Value {
+    for _ in 0..3000 {
+        let (status, body) = get(addr, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        match v.get("status").unwrap().as_str().unwrap() {
+            "done" => return v,
+            "failed" | "cancelled" => {
+                panic!("job {id} ended early: {}", String::from_utf8_lossy(&body))
+            }
+            _ => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    panic!("job {id} did not finish in time");
+}
+
+/// Acceptance: CLI flags, a library call, and a wire submit of the
+/// same request produce bit-identical break maps.
+#[test]
+fn front_door_equivalence_cli_library_wire() {
+    let stack = scene(150, 31);
+    let path = std::env::temp_dir().join(format!("bfast_api_eq_{}.bsq", std::process::id()));
+    rio::write_stack(&path, &stack).unwrap();
+
+    // 1. library: an in-memory request, executed directly
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack.clone()));
+    req.params = param_spec();
+    req.engine = EngineSpec::Emulated;
+    let lib_map = req.execute(&JobHandle::new()).unwrap().map;
+
+    // 2. CLI: the exact flags→request parsing `bfast run` uses
+    let args: Vec<String> = [
+        "--input",
+        path.to_str().unwrap(),
+        "--engine",
+        "emulated",
+        "--n-total",
+        "48",
+        "--n-hist",
+        "36",
+        "--h",
+        "12",
+        "--k",
+        "1",
+        "--freq",
+        "12",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let cli_req = api::run_request_from_args(&args).unwrap();
+    let cli_map = cli_req.execute(&JobHandle::new()).unwrap().map;
+
+    // 3. wire: POST the canonical JSON to a live server
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+    let (status, body) = roundtrip(
+        &addr,
+        "POST",
+        "/v1/runs",
+        "application/json",
+        req.to_json_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64;
+    wait_job(&addr, id);
+    let (status, body) = get(&addr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    let wire_map = parse_map(&body);
+
+    // the wire refuses path sources: a remote caller must not be able
+    // to make the server read local files
+    let mut path_req = req.clone();
+    path_req.source = SceneSource::Path("/etc/hosts".into());
+    let (status, _) = roundtrip(
+        &addr,
+        "POST",
+        "/v1/runs",
+        "application/json",
+        path_req.to_json_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "path scene source must be rejected on the wire");
+    server.stop().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_maps_identical(&lib_map, &cli_map, "library vs CLI front door");
+    assert_maps_identical(&lib_map, &wire_map, "library vs wire front door");
+}
+
+/// The wire form is a fixed point: serialize → parse → serialize is
+/// byte-identical, NaN observations and all.
+#[test]
+fn wire_form_is_a_fixed_point_including_nans() {
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(12, 5)));
+    req.params = param_spec();
+    req.params.lambda = Some(3.25);
+    req.chunking.pixel_range = Some((2, 10));
+    req.outputs.timings = true;
+    let text = req.to_json_string();
+    let back = AnalysisRequest::from_json_str(&text).unwrap();
+    assert_eq!(back.to_json_string(), text);
+}
+
+/// Acceptance: a cancelled run observably stops before completing all
+/// chunks — the CancelToken is honoured at chunk boundaries.
+#[test]
+fn cancelled_run_stops_before_completing_all_chunks() {
+    let params = params_new(48);
+    let stack = scene(256, 9); // 32 chunks at m_chunk = 8
+    let runner = BfastRunner::new(
+        Box::new(EmulatedDevice::new().with_m_chunk(8)),
+        RunnerConfig::default(),
+    )
+    .unwrap();
+    let cancel = CancelToken::new();
+    let executed = AtomicUsize::new(0);
+    let err = runner
+        .run_with_progress(&stack, &params, &cancel, |done, total| {
+            assert_eq!(total, 32);
+            executed.store(done, Ordering::SeqCst);
+            if done == 1 {
+                cancel.cancel(); // cancel mid-run, from the progress hook
+            }
+        })
+        .unwrap_err();
+    assert!(api::is_cancelled(&err), "expected a cancellation, got: {err:#}");
+    let done = executed.load(Ordering::SeqCst);
+    assert!(
+        done >= 1 && done < 32,
+        "cancelled run must stop early, but executed {done}/32 chunks"
+    );
+
+    // an already-cancelled token refuses to start at all
+    let pre = CancelToken::new();
+    pre.cancel();
+    let err = runner
+        .run_with_progress(&stack, &params, &pre, |_, _| panic!("must not execute"))
+        .unwrap_err();
+    assert!(api::is_cancelled(&err));
+
+    // and an untouched token runs to completion as before
+    let full = runner.run(&stack, &params).unwrap();
+    assert_eq!(full.chunks, 32);
+}
+
+/// `pixel_range` in the request equals slicing the scene by hand —
+/// the partitioning contract a sharding coordinator relies on.
+#[test]
+fn pixel_range_request_matches_manual_slice() {
+    let stack = scene(120, 17);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack.clone()));
+    req.params = param_spec();
+    req.engine = EngineSpec::Emulated;
+    req.chunking.pixel_range = Some((25, 80));
+    let ranged = req.execute(&JobHandle::new()).unwrap();
+    assert_eq!(ranged.map.len(), 55);
+
+    let manual = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(&stack.slice_pixels(25, 80), &params_new(48))
+        .unwrap();
+    assert_maps_identical(&ranged.map, &manual.map, "pixel_range vs manual slice");
+}
+
+/// `DELETE /v1/runs/{id}` over the wire: a queued job is withdrawn and
+/// lands in the `cancelled` state; repeat deletes 409, unknown ids 404.
+#[test]
+fn wire_cancel_via_delete() {
+    let big = rio::stack_to_bytes(&scene(60_000, 3));
+    const PQ: &str = "?n-hist=36&h=12&k=1&freq=12&alpha=0.05";
+
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        job_workers: 1,
+        queue_capacity: 8,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let submit = |body: &[u8]| -> u64 {
+        let (status, resp) = roundtrip(
+            &addr,
+            "POST",
+            &format!("/v1/runs{PQ}"),
+            "application/octet-stream",
+            body,
+        )
+        .unwrap();
+        assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+        parse_json(&resp).get("job").unwrap().as_usize().unwrap() as u64
+    };
+
+    // the first big job occupies the single worker; the second waits
+    let running = submit(&big);
+    let victim = submit(&big);
+
+    let (status, body) = roundtrip(&addr, "DELETE", &format!("/v1/runs/{victim}"), "", &[]).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+
+    // the victim reaches the cancelled state without running its chunks
+    let mut cancelled = false;
+    for _ in 0..3000 {
+        let (status, body) = get(&addr, &format!("/v1/runs/{victim}"));
+        assert_eq!(status, 200);
+        let v = parse_json(&body);
+        match v.get("status").unwrap().as_str().unwrap() {
+            "cancelled" => {
+                cancelled = true;
+                break;
+            }
+            "done" => panic!("victim ran to completion despite the DELETE"),
+            _ => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    assert!(cancelled, "victim never reached the cancelled state");
+
+    // terminal-state semantics
+    let (status, _) = roundtrip(&addr, "DELETE", &format!("/v1/runs/{victim}"), "", &[]).unwrap();
+    assert_eq!(status, 409, "cancelling a cancelled job");
+    let (status, _) = roundtrip(&addr, "DELETE", "/v1/runs/9999", "", &[]).unwrap();
+    assert_eq!(status, 404, "cancelling an unknown job");
+    let (status, _) = get(&addr, &format!("/v1/runs/{victim}/map"));
+    assert_eq!(status, 409, "map of a cancelled job");
+
+    // the surviving job is unaffected
+    wait_job(&addr, running);
+
+    let (status, body) = get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("bfast_jobs_cancelled 1"), "{text}");
+    assert!(text.contains("bfast_finished_records_cap"), "{text}");
+    server.stop().unwrap();
+}
+
+/// A `SessionInit` posted as JSON primes the same session the raw
+/// `.bsq` + query form does (summary fields line up).
+#[test]
+fn session_init_json_matches_query_form() {
+    let stack = scene(40, 23);
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let init = api::SessionInit {
+        source: SceneSource::Inline(stack.clone()),
+        params: ParamSpec { n_total: None, ..param_spec() },
+        init_layers: 37,
+    };
+    let (status, body) = roundtrip(
+        &addr,
+        "POST",
+        "/v1/sessions/json-tile",
+        "application/json",
+        init.to_json().to_string_compact().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    let a = parse_json(&body);
+
+    let (status, body) = roundtrip(
+        &addr,
+        "POST",
+        "/v1/sessions/query-tile?n-hist=36&h=12&k=1&freq=12&alpha=0.05&init-layers=37",
+        "application/octet-stream",
+        &rio::stack_to_bytes(&stack),
+    )
+    .unwrap();
+    assert_eq!(status, 201, "{}", String::from_utf8_lossy(&body));
+    let b = parse_json(&body);
+
+    for key in ["pixels", "layers_seen", "n_hist", "h", "k", "breaks"] {
+        assert_eq!(
+            a.get(key).unwrap().as_usize().unwrap(),
+            b.get(key).unwrap().as_usize().unwrap(),
+            "summary field {key}"
+        );
+    }
+    assert_eq!(
+        a.get("lambda").unwrap().as_f64().unwrap().to_bits(),
+        b.get("lambda").unwrap().as_f64().unwrap().to_bits(),
+        "derived lambda"
+    );
+    server.stop().unwrap();
+}

@@ -11,7 +11,7 @@ use bfast::json;
 use bfast::params::BfastParams;
 use bfast::raster::{io as rio, BreakMap, TimeStack};
 use bfast::runtime::bten::{bten_to_bytes, Tensor};
-use bfast::serve::http::{base64_encode, roundtrip};
+use bfast::serve::http::{base64_encode, read_response, roundtrip};
 use bfast::serve::{ServeConfig, Server};
 use bfast::synth::ArtificialDataset;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -108,6 +108,52 @@ fn wait_job(addr: &str, id: u64) -> json::Value {
     panic!("job {id} did not finish in time");
 }
 
+/// ROADMAP item: HTTP/1.1 keep-alive — N sequential requests over ONE
+/// socket, each answered in full; `Connection: close` ends the
+/// exchange with a server-side close.
+#[test]
+fn keep_alive_serves_many_requests_on_one_socket() {
+    use std::io::{Read, Write};
+    let server = start_server(None, 4, 1);
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..5 {
+        stream
+            .write_all(b"GET /healthz HTTP/1.1\r\nHost: bfast\r\nContent-Length: 0\r\n\r\n")
+            .unwrap();
+        let (status, body) = read_response(&mut stream).unwrap();
+        assert_eq!(status, 200, "request {i} on the shared socket");
+        let v = parse_json(&body);
+        assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok", "request {i}");
+    }
+    // Connection: close ends the exchange: one reply, then EOF
+    stream
+        .write_all(
+            b"GET /healthz HTTP/1.1\r\nHost: bfast\r\nConnection: close\r\n\
+              Content-Length: 0\r\n\r\n",
+        )
+        .unwrap();
+    let (status, _) = read_response(&mut stream).unwrap();
+    assert_eq!(status, 200);
+    let mut rest = Vec::new();
+    let n = stream.read_to_end(&mut rest).unwrap();
+    assert_eq!(n, 0, "server must close after Connection: close");
+
+    // every request on the shared socket was counted individually
+    let (status, body) = get(&server.addr().to_string(), "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let total: u64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("bfast_http_requests_total "))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(total >= 7, "expected ≥7 counted requests, metrics say {total}");
+    server.stop().unwrap();
+}
+
 #[test]
 fn healthz_metrics_and_unknown_routes() {
     let server = start_server(None, 4, 1);
@@ -130,6 +176,15 @@ fn healthz_metrics_and_unknown_routes() {
     assert_eq!(status, 404); // wrong method
     let (status, _) = post(&addr, "/v1/runs", "application/octet-stream", b"not a stack");
     assert_eq!(status, 400);
+    // invalid analysis parameters are refused at the door (400), not
+    // accepted as a job that only fails later
+    let (status, body) = post(
+        &addr,
+        "/v1/runs?h=0",
+        "application/octet-stream",
+        &rio::stack_to_bytes(&scene(8, 3)),
+    );
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
     server.stop().unwrap();
 }
 
