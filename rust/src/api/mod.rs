@@ -42,7 +42,8 @@
 //!               | {"kind": "cpu"} | {"kind": "direct"} | {"kind": "naive"},
 //!   "chunking": {"queue_depth": 2, "staging_threads": 0, "phased": false,
 //!                "fill_missing": true, "pixel_range": [0, 1024]},
-//!   "outputs":  {"momax_pgm": "momax.pgm", "timings": false}
+//!   "outputs":  {"momax_pgm": "momax.pgm", "result_json": "res.json",
+//!                "timings": false}
 //! }
 //! ```
 //!
@@ -59,23 +60,35 @@
 //! Session requests are tagged the same way: `{"kind": "init",
 //! "source": ..., "params": ..., "init_layers": 37}` and
 //! `{"kind": "ingest", "t": 61.0, "layer_b64": "<base64 f32 LE>"}`.
+//!
+//! The **response half** mirrors this design: every front door hands
+//! back an [`AnalysisResult`] with its own canonical v1 JSON envelope
+//! (break map as lossless base64 `.bten` tensors — served by
+//! `GET /v1/runs/{id}/result`), and a sharded fan-out's per-range
+//! [`PartialResult`]s reassemble into the identical bits via their
+//! associative [`PartialResult::merge`]. See [`result`] for the
+//! result-side schema and [`crate::shard`] for the fan-out
+//! coordinator built on top.
+
+pub mod result;
+
+pub use result::{AnalysisResult, PartialResult};
 
 use crate::cli::{Command, Matches};
 use crate::coordinator::{BfastRunner, RunnerConfig};
 use crate::cpu::FusedCpuBfast;
 use crate::error::{bail, ensure, err, BfastError, Context, Result};
 use crate::json::Value;
-use crate::metrics::PhaseTimes;
 use crate::monitor::{MonitorConfig, MonitorSession};
 use crate::params::BfastParams;
 use crate::pixel::{DirectBfast, NaiveBfast};
-use crate::raster::{io as rio, BreakMap, TimeStack};
+use crate::raster::{io as rio, TimeStack};
 use crate::runtime::ExecutorBackend;
 use crate::b64::{base64_decode, base64_encode};
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 // -- cancellation --------------------------------------------------------
 
@@ -508,6 +521,9 @@ impl ChunkSpec {
 pub struct OutputSpec {
     /// Render the max-|MOSUM| heatmap PGM here (CLI-side).
     pub momax_pgm: Option<String>,
+    /// Write the canonical v1 [`AnalysisResult`] JSON envelope here
+    /// (CLI-side) — the same bytes `GET /v1/runs/{id}/result` serves.
+    pub result_json: Option<String>,
     /// Print/collect the phase breakdown.
     pub timings: bool,
 }
@@ -518,16 +534,23 @@ impl OutputSpec {
         if let Some(p) = &self.momax_pgm {
             fields.push(("momax_pgm", Value::Str(p.clone())));
         }
+        if let Some(p) = &self.result_json {
+            fields.push(("result_json", Value::Str(p.clone())));
+        }
         fields.push(("timings", Value::Bool(self.timings)));
         Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<Self> {
+        let opt_str = |key: &str| -> Result<Option<String>> {
+            match v.try_get(key) {
+                None | Some(Value::Null) => Ok(None),
+                Some(x) => Ok(Some(x.as_str()?.to_string())),
+            }
+        };
         Ok(Self {
-            momax_pgm: match v.try_get("momax_pgm") {
-                None | Some(Value::Null) => None,
-                Some(x) => Some(x.as_str()?.to_string()),
-            },
+            momax_pgm: opt_str("momax_pgm")?,
+            result_json: opt_str("result_json")?,
             timings: get_bool_or(v, "timings", false)?,
         })
     }
@@ -600,7 +623,7 @@ impl AnalysisRequest {
     /// `handle` and stop at the next chunk boundary once
     /// [`JobHandle::cancel`] is called; the scene-at-once reference
     /// engines check the token only before starting.
-    pub fn execute(&self, handle: &JobHandle) -> Result<AnalysisResponse> {
+    pub fn execute(&self, handle: &JobHandle) -> Result<AnalysisResult> {
         match &self.engine {
             EngineSpec::Device { artifacts, artifact } => {
                 let cfg = self.chunking.runner_config(artifact.clone());
@@ -639,7 +662,7 @@ impl AnalysisRequest {
                     _ => (NaiveBfast::new(params.clone()).run(stack)?, None),
                 };
                 handle.set_progress(1, 1);
-                Ok(AnalysisResponse {
+                Ok(AnalysisResult {
                     map,
                     params,
                     phases,
@@ -664,7 +687,7 @@ impl AnalysisRequest {
         &self,
         runner: &BfastRunner<B>,
         handle: &JobHandle,
-    ) -> Result<AnalysisResponse> {
+    ) -> Result<AnalysisResult> {
         let (stack, params) = self.resolve()?;
         let res = runner.run_with_progress(
             &stack,
@@ -672,7 +695,7 @@ impl AnalysisRequest {
             handle.cancel_token(),
             |done, total| handle.set_progress(done, total),
         )?;
-        Ok(AnalysisResponse {
+        Ok(AnalysisResult {
             map: res.map,
             params,
             phases: Some(res.phases),
@@ -730,25 +753,6 @@ impl AnalysisRequest {
     pub fn from_json_str(text: &str) -> Result<Self> {
         Self::from_json(&crate::json::parse(text)?)
     }
-}
-
-/// What an executed [`AnalysisRequest`] returns, whichever front door
-/// it entered through.
-#[derive(Debug)]
-pub struct AnalysisResponse {
-    pub map: BreakMap,
-    /// The concrete parameters the run used (λ resolved).
-    pub params: BfastParams,
-    /// Phase breakdown (engines that instrument one).
-    pub phases: Option<PhaseTimes>,
-    pub chunks: usize,
-    pub artifact: String,
-    /// Executing backend description.
-    pub engine: String,
-    pub wall: Duration,
-    /// Scene geometry, when the (unsliced) scene carried one.
-    pub width: Option<usize>,
-    pub height: Option<usize>,
 }
 
 // -- session requests ----------------------------------------------------
@@ -920,6 +924,7 @@ pub fn run_command() -> Command {
             .opt("staging-threads", "0", "staging threads, 0 = auto (device)")
             .opt("pixels", "", "analyse only the pixel range START:END")
             .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
+            .opt("result-json", "", "write the v1 result envelope JSON here")
             .switch("phased", "run the per-phase executables (instrumented)")
             .switch("timings", "print the phase breakdown"),
     )
@@ -930,10 +935,11 @@ pub fn run_request_from_args(args: &[String]) -> Result<AnalysisRequest> {
     run_request_from_matches(&run_command().parse(args)?)
 }
 
-/// Build an [`AnalysisRequest`] from parsed `bfast run` matches.
-pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
-    let pixel_range = match m.str("pixels")? {
-        "" => None,
+/// Parse a `--pixels START:END` flag value ("" = the whole scene) —
+/// shared by `bfast run` and `bfast shard`.
+pub fn parse_pixel_range(s: &str) -> Result<Option<(usize, usize)>> {
+    match s {
+        "" => Ok(None),
         s => {
             let (a, b) = s
                 .split_once(':')
@@ -946,20 +952,49 @@ pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
                 .trim()
                 .parse()
                 .map_err(|_| err!("--pixels: bad end {b:?}"))?;
-            Some((start, end))
+            Ok(Some((start, end)))
         }
+    }
+}
+
+/// The [`param_flags`] values as a [`ParamSpec`] with N pinned —
+/// shared by every subcommand that carries the analysis-parameter
+/// flag set (`run`, `shard`), so a new parameter flag is parsed in
+/// exactly one place.
+pub fn param_spec_from_matches(m: &Matches) -> Result<ParamSpec> {
+    Ok(ParamSpec {
+        n_total: Some(m.usize("n-total")?),
+        n_hist: m.usize("n-hist")?,
+        h: m.usize("h")?,
+        k: m.usize("k")?,
+        freq: m.f64("freq")?,
+        alpha: m.f64("alpha")?,
+        lambda: None,
+    })
+}
+
+/// The `--momax-pgm`/`--result-json`/`--timings` flag trio as an
+/// [`OutputSpec`] ("" = not requested) — shared by `run` and `shard`.
+pub fn outputs_from_matches(m: &Matches) -> Result<OutputSpec> {
+    let opt = |flag: &str| -> Result<Option<String>> {
+        Ok(match m.str(flag)? {
+            "" => None,
+            p => Some(p.to_string()),
+        })
     };
+    Ok(OutputSpec {
+        momax_pgm: opt("momax-pgm")?,
+        result_json: opt("result-json")?,
+        timings: m.flag("timings"),
+    })
+}
+
+/// Build an [`AnalysisRequest`] from parsed `bfast run` matches.
+pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
+    let pixel_range = parse_pixel_range(m.str("pixels")?)?;
     Ok(AnalysisRequest {
         source: SceneSource::Path(m.str("input")?.to_string()),
-        params: ParamSpec {
-            n_total: Some(m.usize("n-total")?),
-            n_hist: m.usize("n-hist")?,
-            h: m.usize("h")?,
-            k: m.usize("k")?,
-            freq: m.f64("freq")?,
-            alpha: m.f64("alpha")?,
-            lambda: None,
-        },
+        params: param_spec_from_matches(m)?,
         engine: EngineSpec::from_flags(
             m.str("engine")?,
             m.str("artifacts")?,
@@ -972,13 +1007,7 @@ pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
             fill_missing: true,
             pixel_range,
         },
-        outputs: OutputSpec {
-            momax_pgm: match m.str("momax-pgm")? {
-                "" => None,
-                p => Some(p.to_string()),
-            },
-            timings: m.flag("timings"),
-        },
+        outputs: outputs_from_matches(m)?,
     })
 }
 

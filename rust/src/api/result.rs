@@ -1,0 +1,446 @@
+//! The **response half** of the front door: what an executed
+//! [`AnalysisRequest`](super::AnalysisRequest) returns, in a form that
+//! travels as well as the request does.
+//!
+//! * [`AnalysisResult`] — the one result type every entry point hands
+//!   back: library execute, `bfast run`, `GET /v1/runs/{id}/result`
+//!   and `bfast client result`. Like the request, it has a canonical
+//!   versioned JSON wire form ([`AnalysisResult::to_json`]), so a
+//!   result can be stored, forwarded, diffed, or reassembled from
+//!   shards without loss.
+//! * [`PartialResult`] — one shard's result tagged with the pixel
+//!   range it covers. [`PartialResult::merge`] is **associative**:
+//!   adjacent shards combine in any grouping, and
+//!   [`PartialResult::assemble`] folds a whole fan-out back into the
+//!   full-scene result **bit-exactly** (pinned by `tests/shard.rs`).
+//!
+//! ## v1 wire schema
+//!
+//! ```json
+//! {
+//!   "v": 1,
+//!   "pixels": 150,
+//!   "width": 10, "height": 15,
+//!   "params":  {"n_total": 48, "n_hist": 36, "h": 12, "k": 1,
+//!               "freq": 12, "alpha": 0.05, "lambda": 3.0},
+//!   "engine":   "emulated (threadpool)",
+//!   "artifact": "emulated-auto",
+//!   "chunks":   3,
+//!   "wall_ns":  123456789,
+//!   "phases":   {"create model": 1200300, "mosum": 450600},
+//!   "map": {
+//!     "breaks_b64": "<base64 .bten i32[pixels]>",
+//!     "first_b64":  "<base64 .bten i32[pixels]>",
+//!     "momax_b64":  "<base64 .bten f32[pixels]>"
+//!   }
+//! }
+//! ```
+//!
+//! `width`/`height` and `phases` are optional; `params` is the pinned
+//! form (every field present, λ resolved) so a parsed result carries
+//! the exact parameters the run used. The break map rides as three
+//! base64 `.bten` tensors — a **lossless binary payload** (f32 `momax`
+//! round-trips bit-for-bit, NaNs included), unlike the float-array
+//! sugar of `GET .../map`. Durations are integer nanoseconds so
+//! serialize → parse → serialize is byte-identical. A
+//! [`PartialResult`] wraps the same envelope as
+//! `{"v": 1, "pixel_range": [a, b], "result": {...}}`.
+
+use super::ParamSpec;
+use crate::b64::{base64_decode, base64_encode};
+use crate::error::{bail, ensure, Context, Result};
+use crate::json::Value;
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::raster::BreakMap;
+use crate::runtime::bten::{bten_from_bytes, bten_to_bytes, Tensor};
+use std::time::Duration;
+
+/// What an executed [`AnalysisRequest`](super::AnalysisRequest)
+/// returns, whichever front door it entered through. See the module
+/// docs for the canonical v1 JSON wire form.
+#[derive(Clone, Debug)]
+pub struct AnalysisResult {
+    pub map: BreakMap,
+    /// The concrete parameters the run used (λ resolved).
+    pub params: BfastParams,
+    /// Phase breakdown (engines that instrument one).
+    pub phases: Option<PhaseTimes>,
+    pub chunks: usize,
+    pub artifact: String,
+    /// Executing backend description.
+    pub engine: String,
+    pub wall: Duration,
+    /// Scene geometry, when the (unsliced) scene carried one.
+    pub width: Option<usize>,
+    pub height: Option<usize>,
+}
+
+/// One break-map field as a base64 `.bten` tensor (1-D, so the shape
+/// always matches and encoding cannot fail).
+fn tensor_b64(t: Tensor) -> Value {
+    Value::Str(base64_encode(
+        &bten_to_bytes(&t).expect("1-D map tensor is always encodable"),
+    ))
+}
+
+fn map_to_json(map: &BreakMap) -> Value {
+    Value::obj(vec![
+        (
+            "breaks_b64",
+            tensor_b64(Tensor::I32 { shape: vec![map.breaks.len()], data: map.breaks.clone() }),
+        ),
+        (
+            "first_b64",
+            tensor_b64(Tensor::I32 { shape: vec![map.first.len()], data: map.first.clone() }),
+        ),
+        (
+            "momax_b64",
+            tensor_b64(Tensor::F32 { shape: vec![map.momax.len()], data: map.momax.clone() }),
+        ),
+    ])
+}
+
+fn map_from_json(v: &Value) -> Result<BreakMap> {
+    let tensor = |key: &str| -> Result<Tensor> {
+        let bytes = base64_decode(v.get(key)?.as_str()?)?;
+        bten_from_bytes(&bytes, key)
+    };
+    let i32_field = |key: &str| -> Result<Vec<i32>> {
+        match tensor(key)? {
+            Tensor::I32 { data, .. } => Ok(data),
+            other => bail!("{key} must be an i32 tensor (got shape {:?})", other.shape()),
+        }
+    };
+    let momax = match tensor("momax_b64")? {
+        Tensor::F32 { data, .. } => data,
+        other => bail!("momax_b64 must be an f32 tensor (got shape {:?})", other.shape()),
+    };
+    let map = BreakMap { breaks: i32_field("breaks_b64")?, first: i32_field("first_b64")?, momax };
+    ensure!(
+        map.breaks.len() == map.first.len() && map.first.len() == map.momax.len(),
+        "map fields disagree on pixel count ({} / {} / {})",
+        map.breaks.len(),
+        map.first.len(),
+        map.momax.len()
+    );
+    Ok(map)
+}
+
+impl AnalysisResult {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("v", Value::Num(1.0)),
+            ("pixels", Value::Num(self.map.len() as f64)),
+        ];
+        if let (Some(w), Some(h)) = (self.width, self.height) {
+            fields.push(("width", Value::Num(w as f64)));
+            fields.push(("height", Value::Num(h as f64)));
+        }
+        fields.push(("params", ParamSpec::from_params(&self.params).to_json()));
+        fields.push(("engine", Value::Str(self.engine.clone())));
+        fields.push(("artifact", Value::Str(self.artifact.clone())));
+        fields.push(("chunks", Value::Num(self.chunks as f64)));
+        fields.push(("wall_ns", Value::Num(self.wall.as_nanos() as f64)));
+        if let Some(p) = &self.phases {
+            fields.push(("phases", p.to_json()));
+        }
+        fields.push(("map", map_to_json(&self.map)));
+        Value::obj(fields)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(ver) = v.try_get("v") {
+            let ver = ver.as_usize().context("field \"v\"")?;
+            ensure!(ver == 1, "unsupported result version {ver} (this build speaks v1)");
+        }
+        let spec = ParamSpec::from_json(v.get("params").context("analysis result")?)?;
+        let n_total = spec.n_total.context("result params must pin n_total")?;
+        let params = spec.resolve(n_total)?;
+        let map = map_from_json(v.get("map").context("analysis result")?)?;
+        let pixels = super::get_usize_or(v, "pixels", map.len())?;
+        ensure!(
+            pixels == map.len(),
+            "result claims {pixels} pixels but the map holds {}",
+            map.len()
+        );
+        let dim = |key: &str| -> Result<Option<usize>> {
+            match v.try_get(key) {
+                None | Some(Value::Null) => Ok(None),
+                Some(x) => Ok(Some(x.as_usize().with_context(|| format!("field {key:?}"))?)),
+            }
+        };
+        let wall_ns = v.get("wall_ns").context("analysis result")?.as_f64()?;
+        ensure!(
+            wall_ns.is_finite() && wall_ns >= 0.0,
+            "wall_ns must be a non-negative duration, got {wall_ns}"
+        );
+        Ok(Self {
+            map,
+            params,
+            phases: match v.try_get("phases") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(PhaseTimes::from_json(x)?),
+            },
+            chunks: super::get_usize_or(v, "chunks", 0)?,
+            artifact: v.get("artifact")?.as_str()?.to_string(),
+            engine: v.get("engine")?.as_str()?.to_string(),
+            wall: Duration::from_nanos(wall_ns as u64),
+            width: dim("width")?,
+            height: dim("height")?,
+        })
+    }
+
+    /// Compact JSON — the exact bytes `GET /v1/runs/{id}/result`
+    /// serves.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&crate::json::parse(text)?)
+    }
+}
+
+/// One shard's result: an [`AnalysisResult`] over the pixel slice
+/// `[pixel_range.0, pixel_range.1)` of the full scene. Produced by the
+/// [`shard`](crate::shard) coordinator (which knows each sub-request's
+/// range) and folded back together with [`PartialResult::merge`] /
+/// [`PartialResult::assemble`].
+#[derive(Clone, Debug)]
+pub struct PartialResult {
+    /// The pixel range this shard covers, in full-scene coordinates.
+    pub pixel_range: (usize, usize),
+    pub result: AnalysisResult,
+}
+
+impl PartialResult {
+    /// Wrap one shard's result; the map must be exactly as wide as the
+    /// range it claims to cover.
+    pub fn new(pixel_range: (usize, usize), result: AnalysisResult) -> Result<Self> {
+        let (start, end) = pixel_range;
+        ensure!(start < end, "shard pixel_range [{start}, {end}) is empty");
+        ensure!(
+            result.map.len() == end - start,
+            "shard map holds {} pixels but claims the range [{start}, {end})",
+            result.map.len()
+        );
+        Ok(Self { pixel_range, result })
+    }
+
+    /// Combine with the shard immediately to the right. This operation
+    /// is **associative** — `(a ⊕ b) ⊕ c` equals `a ⊕ (b ⊕ c)` — so an
+    /// assembler may fold shard results in any grouping as they
+    /// arrive. Map fields concatenate (bit-exact), `chunks` add,
+    /// `wall` takes the max (shards run in parallel), phase times
+    /// accumulate, and both shards must have been analysed under
+    /// identical resolved parameters.
+    pub fn merge(self, other: PartialResult) -> Result<PartialResult> {
+        ensure!(
+            self.pixel_range.1 == other.pixel_range.0,
+            "shards [{}, {}) and [{}, {}) are not adjacent",
+            self.pixel_range.0,
+            self.pixel_range.1,
+            other.pixel_range.0,
+            other.pixel_range.1
+        );
+        ensure!(
+            self.result.params == other.result.params,
+            "shards were analysed under different parameters"
+        );
+        let mut r = self.result;
+        let o = other.result;
+        r.map.breaks.extend_from_slice(&o.map.breaks);
+        r.map.first.extend_from_slice(&o.map.first);
+        r.map.momax.extend_from_slice(&o.map.momax);
+        r.chunks += o.chunks;
+        r.wall = r.wall.max(o.wall);
+        r.phases = match (r.phases, o.phases) {
+            (Some(mut a), Some(b)) => {
+                a.merge(&b);
+                Some(a)
+            }
+            (a, b) => a.or(b),
+        };
+        if r.engine != o.engine {
+            r.engine = format!("{} + {}", r.engine, o.engine);
+        }
+        if r.artifact != o.artifact {
+            r.artifact = format!("{} + {}", r.artifact, o.artifact);
+        }
+        // a pixel strip of a scene has no rectangular geometry of its
+        // own; the coordinator reattaches it once the scene is whole
+        r.width = None;
+        r.height = None;
+        Ok(PartialResult {
+            pixel_range: (self.pixel_range.0, other.pixel_range.1),
+            result: r,
+        })
+    }
+
+    /// Fold a whole fan-out back together: sort by range start, then
+    /// [`merge`](PartialResult::merge) left to right (any grouping
+    /// would give the same bits — merge is associative). Errors if the
+    /// ranges leave a gap or overlap.
+    pub fn assemble(parts: Vec<PartialResult>) -> Result<PartialResult> {
+        ensure!(!parts.is_empty(), "no shard results to assemble");
+        let mut parts = parts;
+        parts.sort_by_key(|p| p.pixel_range.0);
+        let mut iter = parts.into_iter();
+        let mut acc = iter.next().expect("non-empty");
+        for p in iter {
+            acc = acc.merge(p)?;
+        }
+        Ok(acc)
+    }
+
+    /// Finish assembly into the full-scene result: the merged range
+    /// must cover `[0, pixels)` exactly; scene geometry (dropped while
+    /// merging strips) is reattached.
+    pub fn into_full(
+        self,
+        pixels: usize,
+        width: Option<usize>,
+        height: Option<usize>,
+    ) -> Result<AnalysisResult> {
+        ensure!(
+            self.pixel_range == (0, pixels),
+            "assembled shards cover [{}, {}) of a {pixels}-pixel scene",
+            self.pixel_range.0,
+            self.pixel_range.1
+        );
+        let mut r = self.result;
+        r.width = width;
+        r.height = height;
+        Ok(r)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("v", Value::Num(1.0)),
+            (
+                "pixel_range",
+                Value::arr_usize(&[self.pixel_range.0, self.pixel_range.1]),
+            ),
+            ("result", self.result.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let arr = v.get("pixel_range")?.as_arr().context("field \"pixel_range\"")?;
+        ensure!(arr.len() == 2, "pixel_range must be [start, end]");
+        Self::new(
+            (arr[0].as_usize()?, arr[1].as_usize()?),
+            AnalysisResult::from_json(v.get("result").context("partial result")?)?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(pixels: usize, seed: u32) -> AnalysisResult {
+        let mut map = BreakMap::zeros(pixels);
+        for p in 0..pixels {
+            map.breaks[p] = ((p as u32 + seed) % 3 == 0) as i32;
+            map.first[p] = if map.breaks[p] != 0 { p as i32 } else { -1 };
+            map.momax[p] = (p as f32 + seed as f32) * 0.25;
+        }
+        let mut phases = PhaseTimes::new();
+        phases.add("mosum", Duration::from_nanos(1000 + seed as u64));
+        AnalysisResult {
+            map,
+            params: BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 3.0).unwrap(),
+            phases: Some(phases),
+            chunks: 2,
+            artifact: "emulated-auto".into(),
+            engine: "emulated (threadpool)".into(),
+            wall: Duration::from_nanos(5_000_123),
+            width: None,
+            height: None,
+        }
+    }
+
+    #[test]
+    fn result_json_is_a_fixed_point_including_nan_momax() {
+        let mut res = result(7, 1);
+        res.map.momax[3] = f32::NAN; // dead pixel: momax must survive bitwise
+        res.width = Some(7);
+        res.height = Some(1);
+        let text = res.to_json_string();
+        let back = AnalysisResult::from_json_str(&text).unwrap();
+        assert_eq!(back.map.breaks, res.map.breaks);
+        assert_eq!(back.map.first, res.map.first);
+        for (a, b) in back.map.momax.iter().zip(&res.map.momax) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.params, res.params);
+        assert_eq!(back.wall, res.wall);
+        assert_eq!((back.width, back.height), (Some(7), Some(1)));
+        assert_eq!(back.to_json_string(), text);
+    }
+
+    #[test]
+    fn result_json_rejects_inconsistent_documents() {
+        let res = result(4, 0);
+        let good = res.to_json_string();
+        // wrong version
+        let bad = good.replacen("\"v\":1", "\"v\":2", 1);
+        assert!(AnalysisResult::from_json_str(&bad).is_err());
+        // pixels disagreeing with the map payload
+        let bad = good.replacen("\"pixels\":4", "\"pixels\":5", 1);
+        assert!(AnalysisResult::from_json_str(&bad).is_err());
+        // params without a pinned n_total cannot resolve
+        let bad = good.replacen("\"n_total\":48,", "", 1);
+        assert!(AnalysisResult::from_json_str(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_concatenates_and_is_associative() {
+        let a = PartialResult::new((0, 7), result(7, 1)).unwrap();
+        let b = PartialResult::new((7, 8), result(1, 2)).unwrap();
+        let c = PartialResult::new((8, 12), result(4, 3)).unwrap();
+        let left = a.clone().merge(b.clone()).unwrap().merge(c.clone()).unwrap();
+        let right = a.clone().merge(b.clone().merge(c.clone()).unwrap()).unwrap();
+        assert_eq!(left.pixel_range, (0, 12));
+        assert_eq!(left.to_json().to_string_compact(), right.to_json().to_string_compact());
+        // assembly accepts any order and reproduces the same bits
+        let assembled = PartialResult::assemble(vec![c, a, b]).unwrap();
+        assert_eq!(
+            assembled.to_json().to_string_compact(),
+            left.to_json().to_string_compact()
+        );
+        let full = assembled.into_full(12, Some(4), Some(3)).unwrap();
+        assert_eq!((full.width, full.height), (Some(4), Some(3)));
+        assert_eq!(full.chunks, 6);
+    }
+
+    #[test]
+    fn merge_rejects_gaps_overlaps_and_mismatched_params() {
+        let a = PartialResult::new((0, 4), result(4, 1)).unwrap();
+        let gap = PartialResult::new((5, 8), result(3, 1)).unwrap();
+        assert!(a.clone().merge(gap).is_err());
+        let overlap = PartialResult::new((3, 8), result(5, 1)).unwrap();
+        assert!(a.clone().merge(overlap).is_err());
+        let mut other = result(3, 1);
+        other.params = BfastParams::with_lambda(48, 36, 12, 1, 12.0, 0.05, 4.0).unwrap();
+        let mismatched = PartialResult::new((4, 7), other).unwrap();
+        assert!(a.clone().merge(mismatched).is_err());
+        // wrong-width maps and empty ranges are refused at construction
+        assert!(PartialResult::new((0, 3), result(4, 1)).is_err());
+        assert!(PartialResult::new((2, 2), result(0, 1)).is_err());
+        assert!(PartialResult::assemble(vec![]).is_err());
+        // incomplete coverage cannot become a full result
+        assert!(a.into_full(8, None, None).is_err());
+    }
+
+    #[test]
+    fn partial_result_json_roundtrips() {
+        let p = PartialResult::new((3, 10), result(7, 5)).unwrap();
+        let text = p.to_json().to_string_compact();
+        let back = PartialResult::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.pixel_range, (3, 10));
+        assert_eq!(back.to_json().to_string_compact(), text);
+    }
+}

@@ -16,7 +16,19 @@
 //!   cooperative cancellation). The CLI parses flags into it, the
 //!   server queues it, `bfast client` posts it, the library executes
 //!   it — one vocabulary, so a request can be logged, forwarded,
-//!   replayed, or split by pixel range across shards.
+//!   replayed, or split by pixel range across shards. The **back
+//!   door matches**: every run returns an [`api::AnalysisResult`]
+//!   with its own canonical v1 envelope (lossless `.bten` map
+//!   payload, served by `GET /v1/runs/{id}/result`), and per-shard
+//!   [`api::PartialResult`]s merge associatively back into the
+//!   full-scene bits.
+//! * **L5 ([`shard`])** — the fleet layer: `bfast shard` splits one
+//!   request by pixel range, fans the slices out across N serve
+//!   workers over keep-alive sockets, streams per-shard progress
+//!   into one aggregate `JobHandle`, propagates cancellation as a
+//!   `DELETE` fan-out, retries failed shards on surviving workers,
+//!   and merges the partial results **bit-identically** to a direct
+//!   single-process run (`tests/shard.rs`).
 //! * **L4 ([`serve`])** — the break-detection service: a
 //!   zero-dependency keep-alive HTTP/1.1 front-end (`bfast serve`)
 //!   with a bounded job scheduler ([`serve::queue`], cancellation via
@@ -161,6 +173,7 @@ pub mod raster;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod synth;
 pub mod threadpool;
 

@@ -37,6 +37,8 @@ COMMANDS:
                 new layers (.bsq/.pgm) with no refit (--state dir/)
   serve         break-detection service: HTTP API, bounded job queue,
                 live monitor sessions (--addr host:port --state dir/)
+  shard         fan one analysis out across several serve workers and
+                merge the shard maps bit-exactly (--workers a:p,b:p)
   client        talk to a running server (health | submit | cancel | ingest | ...)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
@@ -54,6 +56,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "run" => cmd_run(rest),
         "monitor" => cmd_monitor(rest),
         "serve" => cmd_serve(rest),
+        "shard" => cmd_shard(rest),
         "client" => cmd_client(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
@@ -186,7 +189,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
             print!("{}", p.table("phase breakdown"));
         }
     }
-    if let Some(pgm_path) = &req.outputs.momax_pgm {
+    write_outputs(&req.outputs, &res)?;
+    Ok(())
+}
+
+/// Honour the request's `outputs` section (shared by `run` and
+/// `shard`): momax PGM heatmap and/or the v1 result envelope.
+fn write_outputs(outputs: &bfast::api::OutputSpec, res: &bfast::api::AnalysisResult) -> Result<()> {
+    if let Some(pgm_path) = &outputs.momax_pgm {
         let (w, h) = match (res.width, res.height) {
             (Some(w), Some(h)) => (w, h),
             _ => (res.map.len(), 1),
@@ -194,6 +204,42 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let (lo, hi) = pgm::write_pgm_autoscale(pgm_path, &res.map.momax, w, h)?;
         println!("wrote {pgm_path} (scale {lo:.2}..{hi:.2})");
     }
+    if let Some(json_path) = &outputs.result_json {
+        let text = res.to_json_string();
+        std::fs::write(json_path, text.as_bytes())?;
+        println!("wrote {json_path} ({} bytes, v1 result envelope)", text.len());
+    }
+    Ok(())
+}
+
+fn cmd_shard(args: &[String]) -> Result<()> {
+    let m = bfast::shard::shard_command().parse(args)?;
+    let (req, workers, opts) = bfast::shard::shard_args_from_matches(&m)?;
+    let handle = JobHandle::new();
+    let run = bfast::shard::run_sharded(&req, &workers, &opts, &handle)?;
+    let res = &run.result;
+    println!(
+        "sharded run: {} shards on {} workers, engine={} chunks={} wall={:.3}s",
+        run.shards.len(),
+        workers.len(),
+        res.engine,
+        res.chunks,
+        res.wall.as_secs_f64()
+    );
+    println!(
+        "{} pixels, {} breaks ({:.2}%)  [lambda={:.3}]",
+        res.map.len(),
+        res.map.break_count(),
+        100.0 * res.map.break_fraction(),
+        res.params.lambda
+    );
+    print!("{}", bfast::report::shard_table(&run.shards).to_console());
+    if req.outputs.timings {
+        if let Some(p) = &res.phases {
+            print!("{}", p.table("merged phase breakdown"));
+        }
+    }
+    write_outputs(&req.outputs, res)?;
     Ok(())
 }
 
@@ -474,13 +520,14 @@ fn client_param_spec(m: &bfast::cli::Matches) -> Result<api::ParamSpec> {
     })
 }
 
-/// Fail on non-2xx, surfacing the server's error JSON.
+/// Fail on non-2xx, surfacing the message from the server's uniform
+/// `{"error": {...}}` envelope.
 fn expect_ok(resp: (u16, Vec<u8>)) -> Result<Vec<u8>> {
     let (status, body) = resp;
     ensure!(
         (200..300).contains(&status),
         "HTTP {status}: {}",
-        String::from_utf8_lossy(&body).trim()
+        shttp::error_message(&body)
     );
     Ok(body)
 }
@@ -519,12 +566,12 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "client",
         "HTTP client for a running `bfast serve`. Positional action: \
-         health | metrics | jobs | submit | status | cancel | map | \
+         health | metrics | jobs | submit | status | cancel | map | result | \
          session-init | session | ingest | session-map | shutdown",
     )
     .opt("addr", "127.0.0.1:7878", "server address (host:port)")
     .opt("input", "", "input file (.bsq scene; .bten/.pgm layer for ingest)")
-    .opt("job", "0", "job id (status / cancel / map)")
+    .opt("job", "0", "job id (status / cancel / map / result)")
     .opt("name", "", "session name")
     .opt("t", "", "acquisition time of the ingested layer")
     .opt("out", "", "write the response payload here instead of stdout")
@@ -578,17 +625,20 @@ fn cmd_client(args: &[String]) -> Result<()> {
         }
         "submit" => {
             // post exactly what the library executes: the canonical
-            // AnalysisRequest JSON (scene inline)
+            // AnalysisRequest JSON (scene inline). A 429 from a full
+            // queue is retried with bounded exponential backoff,
+            // honouring the server's Retry-After hint.
             let bytes = need_input()?;
             let stack = rio::stack_from_bytes(&bytes, m.str("input")?)?;
             let mut analysis = api::AnalysisRequest::new(api::SceneSource::Inline(stack));
             analysis.params = client_param_spec(&m)?;
-            let body = expect_ok(shttp::roundtrip(
+            let body = expect_ok(shttp::roundtrip_retry(
                 addr,
                 "POST",
                 "/v1/runs",
                 "application/json",
                 analysis.to_json_string().as_bytes(),
+                8,
             )?)?;
             let v = json::parse(std::str::from_utf8(&body)?.trim())?;
             let job = v.get("job")?.as_usize()?;
@@ -617,6 +667,14 @@ fn cmd_client(args: &[String]) -> Result<()> {
         "map" => {
             let job = m.usize("job")?;
             let path = format!("/v1/runs/{job}/map{fmt_suffix}");
+            let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
+            client_print_or_write(&body, m.str("out")?)?;
+        }
+        "result" => {
+            // the canonical v1 AnalysisResult envelope — lossless,
+            // replayable, and what the shard coordinator merges
+            let job = m.usize("job")?;
+            let path = format!("/v1/runs/{job}/result");
             let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
             client_print_or_write(&body, m.str("out")?)?;
         }

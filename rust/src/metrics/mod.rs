@@ -55,6 +55,36 @@ impl PhaseTimes {
         }
     }
 
+    /// JSON object form for the v1 result envelope: one key per phase
+    /// in insertion order, durations as **integer nanoseconds** so the
+    /// round-trip through [`PhaseTimes::from_json`] is exact (seconds
+    /// as f64 would re-round through `Duration::from_secs_f64`).
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::Obj(
+            self.entries
+                .iter()
+                .map(|(n, d)| (n.clone(), crate::json::Value::Num(d.as_nanos() as f64)))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> crate::error::Result<Self> {
+        let crate::json::Value::Obj(pairs) = v else {
+            crate::bail!("phase times must be an object of {{name: nanos}}");
+        };
+        use crate::error::Context as _;
+        let mut out = PhaseTimes::new();
+        for (name, ns) in pairs {
+            let ns = ns.as_f64().with_context(|| format!("phase {name:?}"))?;
+            crate::ensure!(
+                ns.is_finite() && ns >= 0.0,
+                "phase {name:?} has invalid duration {ns}"
+            );
+            out.add(name, Duration::from_nanos(ns as u64));
+        }
+        Ok(out)
+    }
+
     /// Render the phases as Prometheus text-format gauge lines, one
     /// per phase: `name{phase="create model"} 1.234567` (seconds).
     /// Consumed by the serving layer's `/metrics` endpoint.
@@ -155,6 +185,26 @@ mod tests {
         assert!(text.contains("bfast_run_phase_seconds{phase=\"create model\"} 1.500000"));
         assert!(text.contains("phase=\"weird \\\"phase\\\"\""));
         assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact_and_ordered() {
+        let mut p = PhaseTimes::new();
+        p.add("create model", Duration::from_nanos(1_234_567_891));
+        p.add("transfer", Duration::from_nanos(7));
+        let text = p.to_json().to_string_compact();
+        let back = PhaseTimes::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.get("create model"), Some(Duration::from_nanos(1_234_567_891)));
+        assert_eq!(back.get("transfer"), Some(Duration::from_nanos(7)));
+        let names: Vec<_> = back.iter().map(|(n, _)| n.to_string()).collect();
+        assert_eq!(names, vec!["create model", "transfer"]);
+        // serialize → parse → serialize is a fixed point
+        assert_eq!(back.to_json().to_string_compact(), text);
+        // malformed inputs rejected
+        assert!(PhaseTimes::from_json(&crate::json::parse("[1]").unwrap()).is_err());
+        assert!(
+            PhaseTimes::from_json(&crate::json::parse("{\"x\": -1}").unwrap()).is_err()
+        );
     }
 
     #[test]

@@ -126,6 +126,28 @@ pub fn monitor_delta_table(deltas: &[IngestDelta], n_pixels: usize) -> Table {
     t
 }
 
+/// Render `bfast shard` output: one row per shard with the pixel
+/// range it covered, the worker that completed it, how many
+/// placements it took (>1 = a retry rescued it), and the shard's
+/// chunk count and wall time.
+pub fn shard_table(shards: &[crate::shard::ShardReport]) -> Table {
+    let mut t = Table::new(
+        "shard placements",
+        &["shard", "pixels", "worker", "attempts", "chunks", "wall_s"],
+    );
+    for s in shards {
+        t.row(vec![
+            s.shard.to_string(),
+            format!("[{}, {})", s.pixel_range.0, s.pixel_range.1),
+            s.worker.clone(),
+            s.attempts.to_string(),
+            s.chunks.to_string(),
+            format!("{:.3}", s.wall.as_secs_f64()),
+        ]);
+    }
+    t
+}
+
 /// Render `bfast client jobs` output: one row per job with its
 /// status and progress, as returned by `GET /v1/runs`.
 pub fn jobs_table(jobs: &[(u64, String, f64)]) -> Table {
@@ -183,6 +205,35 @@ mod tests {
     fn arity_checked() {
         let mut t = t();
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn shard_table_renders_placements() {
+        let shards = vec![
+            crate::shard::ShardReport {
+                shard: 0,
+                pixel_range: (0, 50),
+                worker: "127.0.0.1:7901".into(),
+                attempts: 1,
+                chunks: 4,
+                wall: std::time::Duration::from_millis(1500),
+            },
+            crate::shard::ShardReport {
+                shard: 1,
+                pixel_range: (50, 101),
+                worker: "127.0.0.1:7902".into(),
+                attempts: 2,
+                chunks: 5,
+                wall: std::time::Duration::from_millis(900),
+            },
+        ];
+        let t = shard_table(&shards);
+        assert_eq!(t.rows.len(), 2);
+        let con = t.to_console();
+        assert!(con.contains("shard placements"));
+        assert!(con.contains("[50, 101)"), "{con}");
+        assert!(con.contains("127.0.0.1:7902"), "{con}");
+        assert!(con.contains("1.500"), "{con}");
     }
 
     #[test]

@@ -13,11 +13,15 @@
 
 use crate::error::{ensure, err, Context, Result};
 use crate::json::Value;
-use std::io::{Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 /// Largest accepted request head (request line + headers).
 pub const MAX_HEADER: usize = 64 * 1024;
+
+/// One parsed response: (status, lowercased headers, body).
+pub type ResponseParts = (u16, Vec<(String, String)>, Vec<u8>);
 
 /// A parsed HTTP request.
 #[derive(Clone, Debug)]
@@ -74,6 +78,9 @@ impl Request {
 pub struct Response {
     pub status: u16,
     pub content_type: String,
+    /// Extra headers beyond the always-present Content-Type /
+    /// Content-Length / Connection trio (e.g. `Retry-After` on 429).
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
@@ -81,21 +88,72 @@ impl Response {
     pub fn json(status: u16, value: &Value) -> Response {
         let mut body = value.to_string_compact().into_bytes();
         body.push(b'\n');
-        Response { status, content_type: "application/json".into(), body }
+        Response {
+            status,
+            content_type: "application/json".into(),
+            headers: Vec::new(),
+            body,
+        }
     }
 
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain; charset=utf-8".into(), body: body.into() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8".into(),
+            headers: Vec::new(),
+            body: body.into(),
+        }
     }
 
     pub fn bytes(status: u16, content_type: &str, body: Vec<u8>) -> Response {
-        Response { status, content_type: content_type.into(), body }
+        Response { status, content_type: content_type.into(), headers: Vec::new(), body }
     }
 
-    /// A JSON error envelope: `{"error": "..."}`.
-    pub fn error(status: u16, message: &str) -> Response {
-        Response::json(status, &Value::obj(vec![("error", Value::Str(message.into()))]))
+    /// Attach an extra response header (builder-style).
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
     }
+
+    /// The uniform JSON error envelope **every** non-2xx wire response
+    /// carries: `{"error": {"status": N, "message": "..."}}`. Clients
+    /// can always parse `.error.message` regardless of which handler
+    /// refused them. Use [`error_envelope`] directly to add extra
+    /// fields (e.g. `retry_after_s` on a 429).
+    pub fn json_error(status: u16, message: &str) -> Response {
+        Response::json(status, &error_envelope(status, message, &[]))
+    }
+}
+
+/// Extract the human-readable message from an error-envelope body;
+/// falls back to the raw (lossy-UTF-8) body for anything that is not
+/// the `{"error": {...}}` shape — so callers can surface *any*
+/// server's refusal in one line.
+pub fn error_message(body: &[u8]) -> String {
+    let text = String::from_utf8_lossy(body).trim().to_string();
+    if let Ok(v) = crate::json::parse(&text) {
+        if let Ok(msg) = v
+            .get("error")
+            .and_then(|e| e.get("message"))
+            .and_then(|m| m.as_str())
+        {
+            return msg.to_string();
+        }
+    }
+    text
+}
+
+/// Build the `{"error": {...}}` envelope body, with optional extra
+/// fields inside the `error` object.
+pub fn error_envelope(status: u16, message: &str, extra: &[(&str, Value)]) -> Value {
+    let mut fields = vec![
+        ("status", Value::Num(status as f64)),
+        ("message", Value::Str(message.into())),
+    ];
+    for (k, v) in extra {
+        fields.push((*k, v.clone()));
+    }
+    Value::obj(vec![("error", Value::obj(fields))])
 }
 
 /// Reason phrases for the statuses the API uses.
@@ -180,14 +238,21 @@ pub fn read_request(stream: &mut impl Read, max_body: usize) -> Result<Option<Re
 /// header: the serving layer keeps the socket open between requests
 /// unless the client asked to close (or the server is shutting down).
 pub fn write_response(stream: &mut impl Write, resp: &Response, keep_alive: bool) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
         resp.status,
         status_text(resp.status),
         resp.content_type,
         resp.body.len(),
-        if keep_alive { "keep-alive" } else { "close" }
     );
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()?;
@@ -241,20 +306,33 @@ fn parse_status_line(head: &str) -> Result<u16> {
         .map_err(|_| err!("bad status in {status_line:?}"))
 }
 
-/// Content-Length declared in a head (0 when absent).
-fn head_content_length(head: &str) -> Result<usize> {
-    let mut content_length = 0usize;
-    for line in head.lines().skip(1) {
-        if let Some((k, v)) = line.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| err!("bad Content-Length {v:?}"))?;
-            }
-        }
+/// Header (name, value) pairs from a head's continuation lines, names
+/// lowercased — shared by response parsing wherever the caller needs
+/// more than the status (e.g. `Retry-After` on a 429).
+fn head_headers(head: &str) -> Vec<(String, String)> {
+    head.lines()
+        .skip(1)
+        .filter_map(|line| line.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect()
+}
+
+/// Content-Length among parsed headers (0 when absent).
+fn headers_content_length(headers: &[(String, String)]) -> Result<usize> {
+    match headers.iter().find(|(k, _)| k == "content-length") {
+        None => Ok(0),
+        Some((_, v)) => v.parse().map_err(|_| err!("bad Content-Length {v:?}")),
     }
-    Ok(content_length)
+}
+
+/// The `Retry-After` header as a duration, when present and parseable
+/// (integer seconds form only — all this API ever sends).
+pub fn retry_after(headers: &[(String, String)]) -> Option<Duration> {
+    headers
+        .iter()
+        .find(|(k, _)| k == "retry-after")
+        .and_then(|(_, v)| v.parse::<u64>().ok())
+        .map(Duration::from_secs)
 }
 
 /// Read exactly one response off a keep-alive connection — the head
@@ -263,15 +341,22 @@ fn head_content_length(head: &str) -> Result<usize> {
 /// `BufReader` — reused across calls — to avoid per-byte reads on a
 /// raw socket.) Returns `(status, body)`.
 pub fn read_response(stream: &mut impl Read) -> Result<(u16, Vec<u8>)> {
+    read_response_parts(stream).map(|(status, _, body)| (status, body))
+}
+
+/// [`read_response`], plus the parsed response headers (names
+/// lowercased) for callers that need e.g. `Retry-After`.
+pub fn read_response_parts(stream: &mut impl Read) -> Result<ResponseParts> {
     let head_bytes = read_head(stream, "response")?
         .ok_or_else(|| err!("connection closed before a response arrived"))?;
     let head = std::str::from_utf8(&head_bytes).context("non-UTF-8 response head")?;
     let status = parse_status_line(head)?;
-    let mut body = vec![0u8; head_content_length(head)?];
+    let headers = head_headers(head);
+    let mut body = vec![0u8; headers_content_length(&headers)?];
     stream
         .read_exact(&mut body)
         .context("connection closed mid-body")?;
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 /// One client round-trip (the `bfast client` subcommand, the tests
@@ -284,6 +369,17 @@ pub fn roundtrip(
     content_type: &str,
     body: &[u8],
 ) -> Result<(u16, Vec<u8>)> {
+    parse_response(&roundtrip_raw(addr, method, path, content_type, body)?)
+}
+
+/// The raw bytes of a one-shot `Connection: close` exchange.
+fn roundtrip_raw(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> Result<Vec<u8>> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     let head = format!(
@@ -296,14 +392,118 @@ pub fn roundtrip(
     stream.flush()?;
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw)?; // server closes after one response
-    parse_response(&raw)
+    Ok(raw)
 }
+
+/// A **keep-alive** HTTP/1.1 client connection: one socket, many
+/// request/response exchanges. This is the transport the shard
+/// coordinator drives per worker (submit → poll → poll → … → result
+/// without re-handshaking), and what long-lived operator tooling
+/// should prefer over one-shot [`roundtrip`]s.
+pub struct Client {
+    addr: String,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        Ok(Client { addr: addr.to_string(), reader: BufReader::new(stream) })
+    }
+
+    /// The address this connection was opened against.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One exchange on the kept-alive socket; errors leave the
+    /// connection unusable (reconnect to retry).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<u8>)> {
+        self.request_parts(method, path, content_type, body)
+            .map(|(status, _, body)| (status, body))
+    }
+
+    /// [`Client::request`], plus the response headers (names
+    /// lowercased) — e.g. for `Retry-After` on a 429.
+    pub fn request_parts(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<ResponseParts> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        read_response_parts(&mut self.reader)
+    }
+}
+
+/// [`roundtrip`] with polite 429 handling: when the server answers
+/// `429 Too Many Requests`, sleep — honouring its `Retry-After` header
+/// — and try again, with **bounded exponential backoff** (at most
+/// `attempts` tries, delays capped at [`BACKOFF_CAP`]). Any other
+/// status (and the final 429) is returned to the caller as-is;
+/// transport errors are not retried.
+pub fn roundtrip_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+    attempts: usize,
+) -> Result<(u16, Vec<u8>)> {
+    let attempts = attempts.max(1);
+    let mut attempt = 0;
+    loop {
+        let raw = roundtrip_raw(addr, method, path, content_type, body)?;
+        let (status, headers, resp_body) = parse_response_parts(&raw)?;
+        if status != 429 || attempt + 1 >= attempts {
+            return Ok((status, resp_body));
+        }
+        std::thread::sleep(backoff_delay(attempt, retry_after(&headers)));
+        attempt += 1;
+    }
+}
+
+/// Delay before retry number `attempt` (0-based): exponential from
+/// 100 ms, raised to the server's `Retry-After` hint when that is
+/// longer, and never above [`BACKOFF_CAP`].
+pub fn backoff_delay(attempt: usize, retry_after: Option<Duration>) -> Duration {
+    let exp = Duration::from_millis(100u64.saturating_mul(1 << attempt.min(10)));
+    retry_after.map_or(exp, |hint| hint.max(exp)).min(BACKOFF_CAP)
+}
+
+/// Longest single backoff sleep [`roundtrip_retry`] will take.
+pub const BACKOFF_CAP: Duration = Duration::from_secs(5);
 
 /// Split a raw HTTP response into (status, body).
 pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>)> {
+    parse_response_parts(raw).map(|(status, _, body)| (status, body))
+}
+
+/// Split a raw HTTP response into (status, headers, body) — header
+/// names lowercased.
+pub fn parse_response_parts(raw: &[u8]) -> Result<ResponseParts> {
     let pos = find_subslice(raw, b"\r\n\r\n").ok_or_else(|| err!("malformed HTTP response"))?;
     let head = std::str::from_utf8(&raw[..pos]).context("non-UTF-8 response head")?;
-    Ok((parse_status_line(head)?, raw[pos + 4..].to_vec()))
+    Ok((parse_status_line(head)?, head_headers(head), raw[pos + 4..].to_vec()))
 }
 
 fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
@@ -428,16 +628,54 @@ mod tests {
 
     #[test]
     fn response_roundtrips_through_parse_response() {
-        let resp = Response::error(429, "queue full");
+        let resp = Response::json_error(429, "queue full").with_header("Retry-After", "2");
         let mut wire = Vec::new();
         write_response(&mut wire, &resp, false).unwrap();
-        let (status, body) = parse_response(&wire).unwrap();
+        let (status, headers, body) = parse_response_parts(&wire).unwrap();
         assert_eq!(status, 429);
+        // the uniform envelope: {"error": {"status": ..., "message": ...}}
         let v = crate::json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
-        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "queue full");
+        let env = v.get("error").unwrap();
+        assert_eq!(env.get("status").unwrap().as_usize().unwrap(), 429);
+        assert_eq!(env.get("message").unwrap().as_str().unwrap(), "queue full");
+        // extra headers travel, and retry_after() finds them
+        assert_eq!(retry_after(&headers), Some(Duration::from_secs(2)));
         let text = String::from_utf8(wire).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
         assert!(text.contains("Connection: close"));
+    }
+
+    #[test]
+    fn error_envelope_takes_extra_fields() {
+        let v = error_envelope(429, "full", &[("retry_after_s", Value::Num(1.0))]);
+        let env = v.get("error").unwrap();
+        assert_eq!(env.get("retry_after_s").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(env.get("message").unwrap().as_str().unwrap(), "full");
+    }
+
+    #[test]
+    fn backoff_delay_honours_hint_and_caps() {
+        // pure exponential when the server gave no hint
+        assert_eq!(backoff_delay(0, None), Duration::from_millis(100));
+        assert_eq!(backoff_delay(2, None), Duration::from_millis(400));
+        // the hint is a floor, not a ceiling...
+        assert_eq!(backoff_delay(0, Some(Duration::from_secs(1))), Duration::from_secs(1));
+        assert_eq!(
+            backoff_delay(5, Some(Duration::from_secs(1))),
+            Duration::from_millis(3200)
+        );
+        // ...and everything stays under the cap
+        assert_eq!(backoff_delay(9, Some(Duration::from_secs(60))), BACKOFF_CAP);
+        assert_eq!(backoff_delay(usize::MAX, None), BACKOFF_CAP);
+    }
+
+    #[test]
+    fn retry_after_parses_only_integer_seconds() {
+        let hdrs = |v: &str| vec![("retry-after".to_string(), v.to_string())];
+        assert_eq!(retry_after(&hdrs("3")), Some(Duration::from_secs(3)));
+        assert_eq!(retry_after(&hdrs("soon")), None);
+        assert_eq!(retry_after(&[]), None);
     }
 
     #[test]

@@ -17,11 +17,12 @@
 //! |------------------------------------|-----------------|-------|
 //! | `GET  /healthz`                    | —               | status JSON |
 //! | `GET  /metrics`                    | —               | Prometheus text |
-//! | `POST /v1/runs`                    | [`AnalysisRequest`] JSON, or `.bsq` bytes + `?n-hist=..` | 202 `{job}` or 429 |
+//! | `POST /v1/runs`                    | [`AnalysisRequest`] JSON, or `.bsq` bytes + `?n-hist=..` | 202 `{job}` or 429 + `Retry-After` |
 //! | `GET  /v1/runs`                    | —               | job list |
 //! | `GET  /v1/runs/{id}`               | —               | status + progress |
 //! | `DELETE /v1/runs/{id}`             | —               | cancel (200/404/409) |
-//! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM |
+//! | `GET  /v1/runs/{id}/result`        | —               | canonical v1 [`crate::api::AnalysisResult`] JSON |
+//! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM (sugar) |
 //! | `POST /v1/sessions/{name}`         | [`SessionInit`] JSON, or `.bsq` bytes + `?n-hist=..` | 201 summary |
 //! | `GET  /v1/sessions[/{name}]`       | —               | list / summary |
 //! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or [`SessionIngest`] JSON | ingest delta |
@@ -30,10 +31,16 @@
 //!
 //! The JSON bodies are the canonical `bfast::api` wire schema (see
 //! [`crate::api`]) — `bfast client submit` posts exactly the
-//! [`AnalysisRequest`] the library executes; the query-string +
-//! raw-bytes forms are curl-friendly sugar that the handlers lower
-//! into the same types. Connections are kept alive across requests
-//! (HTTP/1.1 semantics; honour `Connection: close`).
+//! [`AnalysisRequest`] the library executes and `/result` serves
+//! exactly the [`crate::api::AnalysisResult`] it returns; the
+//! query-string + raw-bytes + `/map` forms are curl-friendly sugar
+//! that the handlers lower into (or render from) the same types.
+//! Every non-2xx response is the uniform JSON error envelope
+//! `{"error": {"status": .., "message": ..}}`
+//! ([`http::Response::json_error`]); a 429 additionally carries a
+//! `Retry-After` header (and `retry_after_s` envelope field) that
+//! polite clients back off on. Connections are kept alive across
+//! requests (HTTP/1.1 semantics; honour `Connection: close`).
 //!
 //! Every returned break map is **bit-identical** to a direct
 //! [`BfastRunner::run`](crate::coordinator::BfastRunner::run) of the
@@ -238,7 +245,7 @@ fn handle_connection(stream: TcpStream, state: &ServerState) {
                 state.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = http::write_response(
                     reader.get_mut(),
-                    &Response::error(400, &format!("{e:#}")),
+                    &Response::json_error(400, &format!("{e:#}")),
                     false,
                 );
                 break;
@@ -280,12 +287,13 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("GET", ["v1", "runs", id]) => run_status(id, state),
         ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
+        ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
         ("GET", ["v1", "sessions", name]) => session_status(name, state),
         ("POST", ["v1", "sessions", name, "ingest"]) => session_ingest(req, name, state),
         ("GET", ["v1", "sessions", name, "map"]) => session_map(req, name, state),
-        (method, _) => Response::error(404, &format!("no route for {method} {}", req.path)),
+        (method, _) => Response::json_error(404, &format!("no route for {method} {}", req.path)),
     }
 }
 
@@ -407,7 +415,7 @@ fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
 fn submit_run(req: &Request, state: &ServerState) -> Response {
     let analysis = match analysis_request_from(req) {
         Ok(a) => a,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     match state.queue.submit(analysis) {
         Ok(id) => Response::json(
@@ -417,13 +425,27 @@ fn submit_run(req: &Request, state: &ServerState) -> Response {
                 ("status", Value::Str("queued".into())),
             ]),
         ),
-        Err(SubmitError::Full { capacity }) => Response::error(
+        // 429 carries the retry hint twice: the standard Retry-After
+        // header, and `retry_after_s` inside the error envelope for
+        // body-only clients. `bfast client submit` and the shard
+        // coordinator back off on it instead of failing outright.
+        Err(SubmitError::Full { capacity }) => Response::json(
             429,
-            &format!("job queue is full ({capacity} pending); retry later"),
-        ),
-        Err(SubmitError::ShuttingDown) => Response::error(503, "server is shutting down"),
+            &http::error_envelope(
+                429,
+                &format!("job queue is full ({capacity} pending); retry later"),
+                &[("retry_after_s", Value::Num(RETRY_AFTER_S as f64))],
+            ),
+        )
+        .with_header("Retry-After", &RETRY_AFTER_S.to_string()),
+        Err(SubmitError::ShuttingDown) => Response::json_error(503, "server is shutting down"),
     }
 }
+
+/// The backoff hint a full queue advertises. One second: long enough
+/// for a queue slot to open under normal drain rates, short enough
+/// that a polite client barely notices.
+const RETRY_AFTER_S: u64 = 1;
 
 fn job_json(rec: &JobRecord) -> Value {
     let mut fields = vec![
@@ -476,11 +498,11 @@ fn parse_id(seg: &str) -> Result<u64> {
 fn run_status(id_seg: &str, state: &ServerState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     match state.queue.with_record(id, job_json) {
         Some(v) => Response::json(200, &v),
-        None => Response::error(404, &format!("no job {id}")),
+        None => Response::json_error(404, &format!("no job {id}")),
     }
 }
 
@@ -490,7 +512,7 @@ fn run_status(id_seg: &str, state: &ServerState) -> Response {
 fn cancel_run(id_seg: &str, state: &ServerState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     match state.queue.cancel(id) {
         CancelOutcome::Cancelled => Response::json(
@@ -501,26 +523,50 @@ fn cancel_run(id_seg: &str, state: &ServerState) -> Response {
             ]),
         ),
         CancelOutcome::AlreadyFinished => {
-            Response::error(409, &format!("job {id} already finished"))
+            Response::json_error(409, &format!("job {id} already finished"))
         }
-        CancelOutcome::NotFound => Response::error(404, &format!("no job {id}")),
+        CancelOutcome::NotFound => Response::json_error(404, &format!("no job {id}")),
     }
 }
 
 fn run_map(req: &Request, id_seg: &str, state: &ServerState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     let resp = state.queue.with_record(id, |rec| match (&rec.state, &rec.result) {
         (JobState::Done, Some(res)) => map_response(req, &res.map, rec.width, rec.height),
         (JobState::Failed { error }, _) => {
-            Response::error(409, &format!("job {id} failed: {error}"))
+            Response::json_error(409, &format!("job {id} failed: {error}"))
         }
-        (JobState::Cancelled, _) => Response::error(409, &format!("job {id} was cancelled")),
-        _ => Response::error(409, &format!("job {id} is not finished")),
+        (JobState::Cancelled, _) => Response::json_error(409, &format!("job {id} was cancelled")),
+        _ => Response::json_error(409, &format!("job {id} is not finished")),
     });
-    resp.unwrap_or_else(|| Response::error(404, &format!("no job {id}")))
+    resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
+}
+
+/// `GET /v1/runs/{id}/result` — the canonical v1
+/// [`crate::api::AnalysisResult`] envelope: pinned parameters, phase
+/// times, and the break map as a **lossless** base64 `.bten` payload.
+/// This is the back door's typed counterpart of `POST /v1/runs` (and
+/// what the shard coordinator fetches per worker); the `/map` routes
+/// stay as float-array / PGM sugar over the same record.
+fn run_result(id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let resp = state.queue.with_record(id, |rec| match (&rec.state, &rec.result) {
+        (JobState::Done, Some(res)) => Response::json(200, &res.to_json()),
+        (JobState::Failed { error }, _) => {
+            Response::json_error(409, &format!("job {id} failed: {error}"))
+        }
+        (JobState::Cancelled, _) => {
+            Response::json_error(409, &format!("job {id} was cancelled"))
+        }
+        _ => Response::json_error(409, &format!("job {id} is not finished")),
+    });
+    resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
 }
 
 /// Break map as JSON, or as a momax-heatmap PGM with `?format=pgm`.
@@ -544,7 +590,7 @@ fn map_response(
             )
         }
         Some(other) if other != "json" => {
-            Response::error(400, &format!("unknown format {other:?} (json|pgm)"))
+            Response::json_error(400, &format!("unknown format {other:?} (json|pgm)"))
         }
         _ => Response::json(200, &map_json(map, width, height)),
     }
@@ -599,7 +645,7 @@ fn list_sessions(state: &ServerState) -> Response {
 
 fn create_session(req: &Request, name: &str, state: &ServerState) -> Response {
     if !registry::valid_name(name) {
-        return Response::error(
+        return Response::json_error(
             400,
             &format!("invalid session name {name:?} (use [A-Za-z0-9_-], at most 64 chars)"),
         );
@@ -622,32 +668,32 @@ fn create_session(req: &Request, name: &str, state: &ServerState) -> Response {
     };
     let session = match built() {
         Ok(s) => s,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     let summary = session_summary(name, &session);
     match state.registry.insert(name, session) {
         Ok(()) => Response::json(201, &summary),
-        Err(e) => Response::error(409, &format!("{e:#}")),
+        Err(e) => Response::json_error(409, &format!("{e:#}")),
     }
 }
 
 fn session_status(name: &str, state: &ServerState) -> Response {
     match state.registry.with_session(name, |s| session_summary(name, s)) {
         Ok(v) => Response::json(200, &v),
-        Err(e) => Response::error(404, &format!("{e:#}")),
+        Err(e) => Response::json_error(404, &format!("{e:#}")),
     }
 }
 
 fn session_map(req: &Request, name: &str, state: &ServerState) -> Response {
     match state.registry.with_session(name, |s| (s.break_map(), s.geometry())) {
         Ok((map, (w, h))) => map_response(req, &map, w, h),
-        Err(e) => Response::error(404, &format!("{e:#}")),
+        Err(e) => Response::json_error(404, &format!("{e:#}")),
     }
 }
 
 fn session_ingest(req: &Request, name: &str, state: &ServerState) -> Response {
     if !state.registry.contains(name) {
-        return Response::error(404, &format!("no session named {name:?}"));
+        return Response::json_error(404, &format!("no session named {name:?}"));
     }
     let parsed = if req.is_json() {
         parse_json_layer(req)
@@ -656,11 +702,11 @@ fn session_ingest(req: &Request, name: &str, state: &ServerState) -> Response {
     };
     let ingest = match parsed {
         Ok(v) => v,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     match state.registry.ingest(name, ingest.t, &ingest.values) {
         Ok(delta) => Response::json(200, &delta.to_json()),
-        Err(e) => Response::error(400, &format!("{e:#}")),
+        Err(e) => Response::json_error(400, &format!("{e:#}")),
     }
 }
 

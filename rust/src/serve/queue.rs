@@ -24,7 +24,7 @@
 //! intake and wakes the workers, which finish every job already
 //! accepted before [`Scheduler::join`] returns.
 
-use crate::api::{self, AnalysisRequest, AnalysisResponse, JobHandle};
+use crate::api::{self, AnalysisRequest, AnalysisResult, JobHandle};
 use crate::coordinator::SharedBfastRunner;
 use crate::metrics::PhaseTimes;
 use std::collections::{BTreeMap, VecDeque};
@@ -69,7 +69,7 @@ pub struct JobRecord {
     pub width: Option<usize>,
     pub height: Option<usize>,
     pub pixels: Option<usize>,
-    pub result: Option<AnalysisResponse>,
+    pub result: Option<AnalysisResult>,
     /// When the job reached a terminal state (age-based eviction).
     pub finished_at: Option<Instant>,
 }
@@ -290,7 +290,7 @@ impl JobQueue {
         }
     }
 
-    fn complete(&self, id: u64, result: AnalysisResponse) {
+    fn complete(&self, id: u64, result: AnalysisResult) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(p) = &result.phases {
             inner.phases.merge(p);

@@ -1,0 +1,577 @@
+//! Sharded fan-out: one analysis, many `bfast serve` workers.
+//!
+//! The paper's thesis is that break detection scales by partitioning
+//! the scene across parallel compute; PR 4 made every
+//! [`AnalysisRequest`] pixel-range-partitionable for exactly this
+//! moment. This module is the coordinator that turns one process into
+//! a fleet:
+//!
+//! ```text
+//!            ┌─ slice [0, m/2)   ──POST──▶ worker A ──▶ PartialResult ─┐
+//!  request ──┤                                                         ├─ merge ─▶ AnalysisResult
+//!            └─ slice [m/2, m)   ──POST──▶ worker B ──▶ PartialResult ─┘
+//! ```
+//!
+//! * [`split`] partitions a request by pixel range — the shards differ
+//!   **only** in `chunking.pixel_range`, so
+//!   `merge(split(req, k))` is bit-identical to the unsharded run
+//!   (property-pinned in `tests/shard.rs` for k ∈ {1, 2, 3, 7}).
+//! * [`run_sharded`] drives the fan-out over real sockets on the
+//!   keep-alive [`http::Client`]: submit each slice (backing off on
+//!   429 `Retry-After`), stream per-shard chunk progress into **one
+//!   aggregate [`JobHandle`]**, propagate cancellation as a
+//!   `DELETE /v1/runs/{id}` fan-out to every in-flight shard, retry a
+//!   failed shard on a surviving worker, fetch each worker's
+//!   `GET /v1/runs/{id}/result`, and fold the [`PartialResult`]s back
+//!   into the full-scene [`AnalysisResult`] — bit-identical to a
+//!   direct `BfastRunner::run` of the same scene.
+//!
+//! The CLI front-end is `bfast shard --workers a:port,b:port --input
+//! scene.bsq` (see the README's "Sharded serving" walkthrough).
+
+use crate::api::{
+    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, OutputSpec,
+    ParamSpec, PartialResult, SceneSource,
+};
+use crate::cli::{Command, Matches};
+use crate::error::{bail, ensure, err, Context, Result};
+use crate::json;
+use crate::raster::TimeStack;
+use crate::serve::http::{self, Client};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Fan-out knobs (`bfast shard` flags).
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// Shard count; 0 = one shard per worker.
+    pub shards: usize,
+    /// Per-shard job status poll interval.
+    pub poll: Duration,
+    /// Placement attempts per shard across workers (0 = one per
+    /// worker): attempt `n` for shard `i` goes to worker
+    /// `(i + n) % workers`, so a retry always lands on a *different*
+    /// (surviving) worker when there is one.
+    pub attempts: usize,
+    /// Bounded 429-backoff tries per placement.
+    pub submit_attempts: usize,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            shards: 0,
+            poll: Duration::from_millis(50),
+            attempts: 0,
+            submit_attempts: 8,
+        }
+    }
+}
+
+/// How one shard fared (the `bfast shard` report table).
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Full-scene pixel range this shard covered.
+    pub pixel_range: (usize, usize),
+    /// The worker that completed it.
+    pub worker: String,
+    /// Placements tried (1 = the first worker succeeded).
+    pub attempts: usize,
+    pub chunks: usize,
+    pub wall: Duration,
+}
+
+/// What [`run_sharded`] returns: the merged full-scene result plus the
+/// per-shard placement report.
+#[derive(Debug)]
+pub struct ShardedRun {
+    pub result: AnalysisResult,
+    pub shards: Vec<ShardReport>,
+}
+
+/// Partition `[0, pixels)` into at most `k` contiguous ranges, sized
+/// within one pixel of each other. Shards that would be empty (k >
+/// pixels) are omitted — every returned range is non-empty.
+pub fn split_ranges(pixels: usize, k: usize) -> Vec<(usize, usize)> {
+    if pixels == 0 {
+        return Vec::new();
+    }
+    let k = k.clamp(1, pixels);
+    let base = pixels / k;
+    let extra = pixels % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let width = base + usize::from(i < extra);
+        out.push((start, start + width));
+        start += width;
+    }
+    debug_assert_eq!(start, pixels);
+    out
+}
+
+/// Split one request into at most `k` requests that differ **only** in
+/// `chunking.pixel_range` — the partition contract from the request
+/// schema. The shards cover the request's own effective range (its
+/// existing `pixel_range`, or the whole scene), in order, without gaps
+/// or overlap; would-be-empty shards are omitted. Executing every
+/// shard and [`PartialResult::assemble`]-ing the outputs reproduces
+/// the unsharded run bit-for-bit (`tests/shard.rs`).
+pub fn split(req: &AnalysisRequest, k: usize) -> Result<Vec<AnalysisRequest>> {
+    ensure!(k >= 1, "cannot split a request into 0 shards");
+    let scene = req.source.load()?;
+    let (base_start, base_end) = match req.chunking.pixel_range {
+        Some((a, b)) => {
+            ensure!(
+                a < b && b <= scene.n_pixels(),
+                "pixel_range [{a}, {b}) out of bounds for {} pixels",
+                scene.n_pixels()
+            );
+            (a, b)
+        }
+        None => (0, scene.n_pixels()),
+    };
+    Ok(split_ranges(base_end - base_start, k)
+        .into_iter()
+        .map(|(a, b)| {
+            let mut sub = req.clone();
+            sub.chunking.pixel_range = Some((base_start + a, base_start + b));
+            sub
+        })
+        .collect())
+}
+
+/// Fan one request out across `workers` (serve addresses) and merge
+/// the shard results into the full-scene [`AnalysisResult`] —
+/// bit-identical to a direct run of the same request. `handle` is the
+/// one aggregate [`JobHandle`]: per-shard chunk progress streams into
+/// it, and cancelling it DELETEs every in-flight shard job and returns
+/// [`api::cancelled`].
+///
+/// As with any wire submit, each worker executes under its *own*
+/// runner configuration (`AnalysisRequest::execute_on` semantics) —
+/// the request's chunking travels for the record, but a worker started
+/// with non-default streaming knobs is that operator's choice. The
+/// bit-identity contract is pinned against workers running the stock
+/// configuration.
+pub fn run_sharded(
+    req: &AnalysisRequest,
+    workers: &[String],
+    opts: &ShardOptions,
+    handle: &JobHandle,
+) -> Result<ShardedRun> {
+    ensure!(!workers.is_empty(), "no workers to shard across");
+    let (stack, params) = req.resolve()?;
+    let pixels = stack.n_pixels();
+    ensure!(pixels > 0, "scene has no pixels");
+    // pin every parameter (λ included) coordinator-side, so all shards
+    // — and any retried placement — analyse under identical numbers
+    let pinned = ParamSpec::from_params(&params);
+    let k = if opts.shards == 0 { workers.len() } else { opts.shards };
+    let ranges = split_ranges(pixels, k);
+    let attempts = if opts.attempts == 0 { workers.len() } else { opts.attempts };
+
+    // (chunks_done, chunks_total) per shard, summed into the handle
+    let cells: Vec<(AtomicUsize, AtomicUsize)> =
+        ranges.iter().map(|_| Default::default()).collect();
+    let stack = &*stack;
+    let cells = &cells;
+    let outcomes: Vec<Result<(PartialResult, ShardReport)>> = std::thread::scope(|scope| {
+        let threads: Vec<_> = ranges
+            .iter()
+            .enumerate()
+            .map(|(idx, &range)| {
+                let pinned = pinned.clone();
+                let engine = &req.engine;
+                let chunking = &req.chunking;
+                scope.spawn(move || {
+                    run_one_shard(
+                        idx,
+                        range,
+                        stack,
+                        pinned,
+                        engine,
+                        chunking,
+                        workers,
+                        attempts,
+                        opts,
+                        handle,
+                        cells,
+                    )
+                })
+            })
+            .collect();
+        threads
+            .into_iter()
+            .map(|t| {
+                t.join()
+                    .unwrap_or_else(|_| Err(err!("shard worker thread panicked")))
+            })
+            .collect()
+    });
+
+    let mut parts = Vec::with_capacity(outcomes.len());
+    let mut reports = Vec::with_capacity(outcomes.len());
+    let mut cancelled = handle.is_cancelled();
+    let mut first_err = None;
+    for (idx, outcome) in outcomes.into_iter().enumerate() {
+        match outcome {
+            Ok((partial, report)) => {
+                parts.push(partial);
+                reports.push(report);
+            }
+            Err(e) if api::is_cancelled(&e) => cancelled = true,
+            Err(e) => {
+                first_err.get_or_insert(e.push_context(format!("shard {idx}")));
+            }
+        }
+    }
+    if cancelled {
+        return Err(api::cancelled());
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let result = PartialResult::assemble(parts)?.into_full(pixels, stack.width, stack.height)?;
+    Ok(ShardedRun { result, shards: reports })
+}
+
+/// Publish the sum of all shards' progress cells into the aggregate
+/// handle. Racy across shard threads, but each racer writes a
+/// self-consistent (done, total) snapshot — good enough for a
+/// progress bar, and the final write (all shards done) is exact.
+fn publish_progress(handle: &JobHandle, cells: &[(AtomicUsize, AtomicUsize)]) {
+    let done = cells.iter().map(|c| c.0.load(Ordering::Relaxed)).sum();
+    let total = cells.iter().map(|c| c.1.load(Ordering::Relaxed)).sum();
+    handle.set_progress(done, total);
+}
+
+#[allow(clippy::too_many_arguments)] // internal plumbing of run_sharded
+fn run_one_shard(
+    idx: usize,
+    range: (usize, usize),
+    stack: &TimeStack,
+    params: ParamSpec,
+    engine: &EngineSpec,
+    chunking: &ChunkSpec,
+    workers: &[String],
+    attempts: usize,
+    opts: &ShardOptions,
+    handle: &JobHandle,
+    cells: &[(AtomicUsize, AtomicUsize)],
+) -> Result<(PartialResult, ShardReport)> {
+    // The wire form ships only this shard's pixel strip (bandwidth and
+    // worker memory ∝ m/k). Slicing here instead of forwarding the
+    // full scene + pixel_range is bit-equivalent — pinned by the
+    // `pixel_range` / `slice_pixels` test in tests/api.rs. The
+    // request's chunking travels with pixel_range cleared (the slice
+    // already applied it); like any wire submit, the worker's own
+    // runner config governs the streaming knobs at execution.
+    let mut chunking = chunking.clone();
+    chunking.pixel_range = None;
+    let sub = AnalysisRequest {
+        source: SceneSource::Inline(stack.slice_pixels(range.0, range.1)),
+        params,
+        engine: engine.clone(),
+        chunking,
+        outputs: OutputSpec::default(),
+    };
+    let body = sub.to_json_string();
+    drop(sub); // the JSON carries the slice; don't hold it twice
+    let mut errors: Vec<String> = Vec::new();
+    for attempt in 0..attempts.max(1) {
+        if handle.is_cancelled() {
+            return Err(api::cancelled());
+        }
+        let worker = &workers[(idx + attempt) % workers.len()];
+        match drive_worker(worker, &body, idx, range, opts, handle, cells) {
+            Ok((partial, chunks, wall)) => {
+                return Ok((
+                    partial,
+                    ShardReport {
+                        shard: idx,
+                        pixel_range: range,
+                        worker: worker.clone(),
+                        attempts: attempt + 1,
+                        chunks,
+                        wall,
+                    },
+                ));
+            }
+            Err(e) if api::is_cancelled(&e) => return Err(e),
+            Err(e) => {
+                errors.push(format!("{worker}: {e:#}"));
+                // a fresh placement starts from zero chunks
+                cells[idx].0.store(0, Ordering::Relaxed);
+                cells[idx].1.store(0, Ordering::Relaxed);
+                publish_progress(handle, cells);
+            }
+        }
+    }
+    bail!(
+        "pixels [{}, {}) failed on every worker tried — {}",
+        range.0,
+        range.1,
+        errors.join("; ")
+    )
+}
+
+/// One placement: submit the shard to `worker`, poll it to completion
+/// (streaming progress, honouring cancellation), fetch the typed
+/// result. Any transport or job failure is an `Err` — the caller
+/// re-places the shard on the next worker.
+fn drive_worker(
+    worker: &str,
+    body: &str,
+    idx: usize,
+    range: (usize, usize),
+    opts: &ShardOptions,
+    handle: &JobHandle,
+    cells: &[(AtomicUsize, AtomicUsize)],
+) -> Result<(PartialResult, usize, Duration)> {
+    let mut client = Client::connect(worker)?;
+
+    // submit, backing off politely while the worker's queue is full
+    let mut submit_attempt = 0;
+    let job = loop {
+        if handle.is_cancelled() {
+            return Err(api::cancelled());
+        }
+        let (status, headers, resp) =
+            client.request_parts("POST", "/v1/runs", "application/json", body.as_bytes())?;
+        match status {
+            202 => {
+                let v = json::parse(std::str::from_utf8(&resp)?.trim())?;
+                break v.get("job")?.as_usize()? as u64;
+            }
+            429 if submit_attempt + 1 < opts.submit_attempts.max(1) => {
+                std::thread::sleep(http::backoff_delay(
+                    submit_attempt,
+                    http::retry_after(&headers),
+                ));
+                submit_attempt += 1;
+            }
+            _ => bail!("submit: HTTP {status}: {}", http::error_message(&resp)),
+        }
+    };
+
+    // The job is live on the worker from here on: any failure below
+    // best-effort-DELETEs it before handing the shard to the next
+    // worker, so a re-placed shard doesn't leave an orphan computing
+    // the same pixels (and squatting on the old worker's queue).
+    let out = poll_and_fetch(&mut client, worker, job, idx, range, opts, handle, cells);
+    if out.as_ref().is_err_and(|e| !api::is_cancelled(e)) {
+        let fresh = Client::connect(worker); // the old socket may be dead
+        if let Ok(mut c) = fresh {
+            let _ = c.request("DELETE", &format!("/v1/runs/{job}"), "", &[]);
+        }
+    }
+    out
+}
+
+/// Poll one submitted job to completion and fetch its typed result.
+/// Split from [`drive_worker`] so its caller can reap the job on any
+/// failure path.
+#[allow(clippy::too_many_arguments)] // internal plumbing of drive_worker
+fn poll_and_fetch(
+    client: &mut Client,
+    worker: &str,
+    job: u64,
+    idx: usize,
+    range: (usize, usize),
+    opts: &ShardOptions,
+    handle: &JobHandle,
+    cells: &[(AtomicUsize, AtomicUsize)],
+) -> Result<(PartialResult, usize, Duration)> {
+    // reconnect once per round if the keep-alive socket dies under us
+    // (per-connection request caps, worker restarts mid-poll)
+    let get = |client: &mut Client, path: &str| -> Result<(u16, Vec<u8>)> {
+        match client.request("GET", path, "", &[]) {
+            Ok(out) => Ok(out),
+            Err(_) => {
+                *client = Client::connect(worker)?;
+                client.request("GET", path, "", &[])
+            }
+        }
+    };
+    let status_path = format!("/v1/runs/{job}");
+    loop {
+        if handle.is_cancelled() {
+            // DELETE fan-out: stop this shard's job on the worker
+            // (best-effort — the job may have just finished)
+            let _ = client.request("DELETE", &status_path, "", &[]);
+            return Err(api::cancelled());
+        }
+        let (status, resp) = get(client, &status_path)?;
+        ensure!(
+            status == 200,
+            "polling job {job}: HTTP {status}: {}",
+            http::error_message(&resp)
+        );
+        let v = json::parse(std::str::from_utf8(&resp)?.trim())?;
+        match v.get("status")?.as_str()? {
+            "done" => break,
+            "failed" => bail!(
+                "job {job} failed: {}",
+                v.try_get("error").and_then(|e| e.as_str().ok()).unwrap_or("(no error)")
+            ),
+            "cancelled" => bail!("job {job} was cancelled on the worker"),
+            _ => {
+                if let (Some(done), Some(total)) =
+                    (v.try_get("chunks_done"), v.try_get("chunks_total"))
+                {
+                    cells[idx].0.store(done.as_usize()?, Ordering::Relaxed);
+                    cells[idx].1.store(total.as_usize()?, Ordering::Relaxed);
+                    publish_progress(handle, cells);
+                }
+                std::thread::sleep(opts.poll);
+            }
+        }
+    }
+
+    // the typed back door: the canonical v1 result envelope
+    let (status, resp) = get(client, &format!("/v1/runs/{job}/result"))?;
+    ensure!(
+        status == 200,
+        "fetching result of job {job}: HTTP {status}: {}",
+        http::error_message(&resp)
+    );
+    let result = AnalysisResult::from_json_str(
+        std::str::from_utf8(&resp).context("non-UTF-8 result body")?.trim(),
+    )?;
+    cells[idx].0.store(result.chunks, Ordering::Relaxed);
+    cells[idx].1.store(result.chunks, Ordering::Relaxed);
+    publish_progress(handle, cells);
+    let (chunks, wall) = (result.chunks, result.wall);
+    Ok((PartialResult::new(range, result)?, chunks, wall))
+}
+
+// -- the CLI front door --------------------------------------------------
+
+/// The `bfast shard` flag surface (mirrors `bfast run`, plus the
+/// worker fleet).
+pub fn shard_command() -> Command {
+    api::param_flags(
+        Command::new("shard", "fan one analysis out across serve workers and merge")
+            .req("input", "input .bsq stack")
+            .req("workers", "comma-separated worker addresses (host:port,...)")
+            .opt("shards", "0", "shard count (0 = one per worker)")
+            .opt("pixels", "", "analyse only the pixel range START:END")
+            .opt("poll-ms", "50", "per-shard job status poll interval (ms)")
+            .opt("attempts", "0", "placement attempts per shard (0 = one per worker)")
+            .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
+            .opt("result-json", "", "write the merged v1 result envelope JSON here")
+            .switch("timings", "print the merged phase breakdown"),
+    )
+}
+
+/// Parse `bfast shard` flags into (request, workers, options).
+pub fn shard_args_from_matches(
+    m: &Matches,
+) -> Result<(AnalysisRequest, Vec<String>, ShardOptions)> {
+    let workers: Vec<String> = m
+        .str("workers")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    ensure!(!workers.is_empty(), "--workers needs at least one host:port address");
+    let mut req = AnalysisRequest::new(SceneSource::Path(m.str("input")?.to_string()));
+    req.params = api::param_spec_from_matches(m)?;
+    req.chunking.pixel_range = api::parse_pixel_range(m.str("pixels")?)?;
+    req.outputs = api::outputs_from_matches(m)?;
+    let opts = ShardOptions {
+        shards: m.usize("shards")?,
+        poll: Duration::from_millis(m.u64("poll-ms")?),
+        attempts: m.usize("attempts")?,
+        ..ShardOptions::default()
+    };
+    Ok((req, workers, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::BfastParams;
+    use crate::synth::ArtificialDataset;
+
+    #[test]
+    fn split_ranges_balances_and_skips_empties() {
+        assert_eq!(split_ranges(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+        assert_eq!(split_ranges(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
+        // k > pixels: one single-pixel shard each, empties omitted
+        assert_eq!(split_ranges(2, 7), vec![(0, 1), (1, 2)]);
+        assert_eq!(split_ranges(1, 3), vec![(0, 1)]);
+        assert_eq!(split_ranges(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(split_ranges(5, 1), vec![(0, 5)]);
+        // exhaustive contiguity/coverage over a small grid
+        for pixels in 1..40usize {
+            for k in 1..10usize {
+                let r = split_ranges(pixels, k);
+                assert_eq!(r.first().unwrap().0, 0);
+                assert_eq!(r.last().unwrap().1, pixels);
+                assert_eq!(r.len(), k.min(pixels));
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap at {w:?}");
+                }
+                assert!(r.iter().all(|(a, b)| a < b), "empty shard in {r:?}");
+                let widths: Vec<usize> = r.iter().map(|(a, b)| b - a).collect();
+                let (lo, hi) =
+                    (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+                assert!(hi - lo <= 1, "unbalanced split {widths:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_requests_differ_only_in_pixel_range() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let stack = ArtificialDataset::new(params.clone(), 11, 3).generate().stack;
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+        req.params = ParamSpec::from_params(&params);
+        let shards = split(&req, 4).unwrap();
+        assert_eq!(shards.len(), 4);
+        let ranges: Vec<_> = shards.iter().map(|s| s.chunking.pixel_range.unwrap()).collect();
+        assert_eq!(ranges, vec![(0, 3), (3, 6), (6, 9), (9, 11)]);
+        for s in &shards {
+            assert_eq!(s.params, req.params);
+            assert_eq!(s.engine, req.engine);
+            assert_eq!(s.chunking.queue_depth, req.chunking.queue_depth);
+        }
+        // an existing pixel_range is what gets partitioned
+        req.chunking.pixel_range = Some((2, 7));
+        let ranges: Vec<_> = split(&req, 2)
+            .unwrap()
+            .iter()
+            .map(|s| s.chunking.pixel_range.unwrap())
+            .collect();
+        assert_eq!(ranges, vec![(2, 5), (5, 7)]);
+        // out-of-bounds base ranges are rejected
+        req.chunking.pixel_range = Some((7, 20));
+        assert!(split(&req, 2).is_err());
+    }
+
+    #[test]
+    fn shard_flags_parse() {
+        let args: Vec<String> = [
+            "--input", "scene.bsq", "--workers", "127.0.0.1:7901, 127.0.0.1:7902",
+            "--n-total", "48", "--n-hist", "36", "--h", "12", "--k", "1", "--freq", "12",
+            "--shards", "5", "--pixels", "3:9", "--poll-ms", "10",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let m = shard_command().parse(&args).unwrap();
+        let (req, workers, opts) = shard_args_from_matches(&m).unwrap();
+        assert_eq!(workers, vec!["127.0.0.1:7901", "127.0.0.1:7902"]);
+        assert_eq!(opts.shards, 5);
+        assert_eq!(opts.poll, Duration::from_millis(10));
+        assert_eq!(req.params.n_total, Some(48));
+        assert_eq!(req.chunking.pixel_range, Some((3, 9)));
+        let empty: Vec<String> =
+            ["--input", "s.bsq", "--workers", " , "].iter().map(|s| s.to_string()).collect();
+        let m = shard_command().parse(&empty).unwrap();
+        assert!(shard_args_from_matches(&m).is_err());
+    }
+}

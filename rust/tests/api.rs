@@ -331,6 +331,52 @@ fn wire_cancel_via_delete() {
     server.stop().unwrap();
 }
 
+/// The typed back door: `GET /v1/runs/{id}/result` serves the
+/// canonical v1 envelope, parseable into an [`api::AnalysisResult`]
+/// bit-identical to the library's own `execute` — and the wire bytes
+/// are a serialization fixed point.
+#[test]
+fn wire_result_envelope_matches_library_execute() {
+    let stack = scene(80, 41);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let lib = req.execute(&JobHandle::new()).unwrap();
+
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+    let (status, body) = roundtrip(
+        &addr,
+        "POST",
+        "/v1/runs",
+        "application/json",
+        req.to_json_string().as_bytes(),
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64;
+    wait_job(&addr, id);
+
+    let (status, body) = get(&addr, &format!("/v1/runs/{id}/result"));
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let text = std::str::from_utf8(&body).unwrap().trim();
+    let wire = api::AnalysisResult::from_json_str(text).unwrap();
+    assert_maps_identical(&wire.map, &lib.map, "wire result vs library execute");
+    assert_eq!(wire.params, lib.params, "resolved params must travel exactly");
+    assert_eq!(wire.chunks, lib.chunks);
+    assert_eq!(wire.engine, lib.engine);
+    // parse → serialize reproduces the served bytes
+    assert_eq!(wire.to_json_string(), text);
+
+    // unknown jobs 404; sugar and canonical routes serve the same map
+    let (status, _) = get(&addr, "/v1/runs/999/result");
+    assert_eq!(status, 404);
+    server.stop().unwrap();
+}
+
 /// A `SessionInit` posted as JSON primes the same session the raw
 /// `.bsq` + query form does (summary fields line up).
 #[test]

@@ -154,6 +154,73 @@ fn keep_alive_serves_many_requests_on_one_socket() {
     server.stop().unwrap();
 }
 
+/// Satellite: a full queue answers 429 with a `Retry-After` header
+/// and the uniform `{"error": {...}}` envelope (retry hint included),
+/// and a polite `roundtrip_retry` submission eventually lands once
+/// the queue drains instead of failing outright.
+#[test]
+fn full_queue_answers_429_with_retry_after_and_backoff_succeeds() {
+    use bfast::serve::http::{self, Client};
+    let server = start_server(None, 1, 1); // queue capacity 1
+    let addr = server.addr().to_string();
+    let body = rio::stack_to_bytes(&scene(10_000, 3));
+
+    // fill: keep submitting on one keep-alive socket until the bounded
+    // queue refuses (the worker pops the first job; the next occupies
+    // the single queue slot)
+    let mut client = Client::connect(&addr).unwrap();
+    let mut refused = None;
+    for _ in 0..10 {
+        let (status, headers, resp) = client
+            .request_parts(
+                "POST",
+                &format!("/v1/runs{PQ}"),
+                "application/octet-stream",
+                &body,
+            )
+            .unwrap();
+        match status {
+            202 => continue,
+            429 => {
+                refused = Some((headers, resp));
+                break;
+            }
+            other => panic!("unexpected HTTP {other}"),
+        }
+    }
+    let (headers, resp) = refused.expect("queue never filled up");
+    assert_eq!(http::retry_after(&headers), Some(Duration::from_secs(1)));
+    let v = parse_json(&resp);
+    let env = v.get("error").unwrap();
+    assert_eq!(env.get("status").unwrap().as_usize().unwrap(), 429);
+    assert!(
+        env.get("message").unwrap().as_str().unwrap().contains("full"),
+        "{resp:?}"
+    );
+    assert_eq!(env.get("retry_after_s").unwrap().as_usize().unwrap(), 1);
+
+    // error envelopes are uniform across paths: a 404 carries one too
+    let (status, resp) = get(&addr, "/v1/runs/12345");
+    assert_eq!(status, 404);
+    let env = parse_json(&resp);
+    let env = env.get("error").unwrap();
+    assert_eq!(env.get("status").unwrap().as_usize().unwrap(), 404);
+    assert_eq!(http::error_message(&resp), "no job 12345");
+
+    // the polite client backs off and eventually gets its 202
+    let (status, resp) = http::roundtrip_retry(
+        &addr,
+        "POST",
+        &format!("/v1/runs{PQ}"),
+        "application/octet-stream",
+        &body,
+        8,
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&resp));
+    server.stop().unwrap();
+}
+
 #[test]
 fn healthz_metrics_and_unknown_routes() {
     let server = start_server(None, 4, 1);

@@ -1,0 +1,290 @@
+//! Sharded fan-out suite — the acceptance contract of the shard
+//! layer: `merge(split(req, k))` must be **bit-identical** to the
+//! unsharded run (property-pinned for k ∈ {1, 2, 3, 7}, including
+//! single-pixel shards, k > pixels, and a scene whose pixel count does
+//! not divide evenly), and a real fan-out across ≥ 2 live-socket serve
+//! workers must reproduce a direct `BfastRunner::run` bit-for-bit —
+//! including when a worker is dead (shard retried on a survivor) and
+//! when the aggregate handle is cancelled mid-run (DELETE fan-out).
+
+use bfast::api::{
+    self, AnalysisRequest, EngineSpec, JobHandle, ParamSpec, PartialResult, SceneSource,
+};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{BreakMap, TimeStack};
+use bfast::serve::http::roundtrip;
+use bfast::serve::{ServeConfig, Server};
+use bfast::shard::{self, ShardOptions};
+use bfast::synth::ArtificialDataset;
+use std::time::{Duration, Instant};
+
+/// Analysis shape shared by every test: N=48, n=36, h=12, k=1.
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn param_spec() -> ParamSpec {
+    ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    }
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(params_new(48), m, seed).generate();
+    if m >= 8 {
+        let d = data.stack.data_mut();
+        for t in 0..48 {
+            d[t * m] = f32::NAN; // dead pixel
+        }
+        for t in 10..14 {
+            d[t * m + 3] = f32::NAN; // cloud hole
+        }
+    }
+    data.stack
+}
+
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: momax differs at px {px}: {x} vs {y}");
+    }
+}
+
+fn start_worker() -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn fast_opts() -> ShardOptions {
+    ShardOptions { poll: Duration::from_millis(5), ..Default::default() }
+}
+
+/// Satellite: `merge(split(req, k))` is bit-identical to the unsharded
+/// run for k ∈ {1, 2, 3, 7} — across a single-pixel scene (shards
+/// beyond the pixel count are omitted), a 5-pixel scene under k=7, and
+/// a 101-pixel scene (with NaN holes) that no k divides evenly.
+#[test]
+fn merge_of_split_is_bit_identical_to_unsharded_run() {
+    for &(m, seed) in &[(1usize, 5u64), (5, 9), (101, 17)] {
+        let mut req = AnalysisRequest::new(SceneSource::Inline(scene(m, seed)));
+        req.params = param_spec();
+        req.engine = EngineSpec::Emulated;
+        let whole = req.execute(&JobHandle::new()).unwrap();
+        for k in [1usize, 2, 3, 7] {
+            let shards = shard::split(&req, k).unwrap();
+            assert_eq!(shards.len(), k.min(m), "m={m} k={k}");
+            let parts: Vec<PartialResult> = shards
+                .iter()
+                .map(|s| {
+                    let range = s.chunking.pixel_range.unwrap();
+                    PartialResult::new(range, s.execute(&JobHandle::new()).unwrap()).unwrap()
+                })
+                .collect();
+            let merged = PartialResult::assemble(parts)
+                .unwrap()
+                .into_full(m, None, None)
+                .unwrap();
+            assert_maps_identical(&merged.map, &whole.map, &format!("m={m} k={k}"));
+            assert_eq!(merged.params, whole.params, "m={m} k={k}: params");
+        }
+    }
+}
+
+/// Splitting a request that already carries a pixel range partitions
+/// *that* range, and the reassembly matches the unsharded ranged run.
+#[test]
+fn split_of_ranged_request_matches_ranged_run() {
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(60, 23)));
+    req.params = param_spec();
+    req.engine = EngineSpec::Emulated;
+    req.chunking.pixel_range = Some((13, 44));
+    let whole = req.execute(&JobHandle::new()).unwrap();
+    let parts: Vec<PartialResult> = shard::split(&req, 3)
+        .unwrap()
+        .iter()
+        .map(|s| {
+            // shard ranges are absolute scene coordinates; the
+            // assembled result lives in the ranged run's [0, 31) space
+            let (a, b) = s.chunking.pixel_range.unwrap();
+            assert!((13..=44).contains(&a) && a < b && b <= 44);
+            PartialResult::new((a - 13, b - 13), s.execute(&JobHandle::new()).unwrap())
+                .unwrap()
+        })
+        .collect();
+    let merged = PartialResult::assemble(parts)
+        .unwrap()
+        .into_full(31, None, None)
+        .unwrap();
+    assert_maps_identical(&merged.map, &whole.map, "ranged split");
+}
+
+/// Acceptance: a sharded run across two real-socket serve workers is
+/// bit-identical to a direct single-process `BfastRunner::run`, the
+/// work actually lands on both workers, geometry is reattached, and
+/// the aggregate handle ends at 100% progress.
+#[test]
+fn two_worker_sharded_run_matches_direct_run() {
+    let stack = scene(150, 31).with_geometry(15, 10).unwrap();
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(&stack, &params_new(48))
+        .unwrap()
+        .map;
+
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let workers = vec![w1.addr().to_string(), w2.addr().to_string()];
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let handle = JobHandle::new();
+    let run = shard::run_sharded(&req, &workers, &fast_opts(), &handle).unwrap();
+
+    assert_eq!(run.shards.len(), 2);
+    let mut placed: Vec<&str> = run.shards.iter().map(|s| s.worker.as_str()).collect();
+    placed.sort_unstable();
+    let mut expected: Vec<&str> = workers.iter().map(|w| w.as_str()).collect();
+    expected.sort_unstable();
+    assert_eq!(placed, expected, "both workers must carry a shard");
+    assert!(run.shards.iter().all(|s| s.attempts == 1));
+
+    assert_maps_identical(&run.result.map, &reference, "sharded vs direct");
+    assert_eq!((run.result.width, run.result.height), (Some(15), Some(10)));
+    let (done, total) = handle.progress();
+    assert_eq!(done, total);
+    assert!(total >= 2, "aggregate progress should span both shards' chunks");
+
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
+
+/// Acceptance: a shard placed on a dead worker is retried on a
+/// surviving one, and the merged map is still bit-identical.
+#[test]
+fn failed_shard_retries_on_surviving_worker() {
+    let stack = scene(120, 7);
+    let reference = BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(&stack, &params_new(48))
+        .unwrap()
+        .map;
+
+    // a dead address: bind an ephemeral port, then drop the listener
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let live = start_worker();
+    let workers = vec![dead.clone(), live.addr().to_string()];
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let run = shard::run_sharded(&req, &workers, &fast_opts(), &JobHandle::new()).unwrap();
+
+    // shard 0's first placement (the dead worker) failed; the retry
+    // landed on the survivor
+    let rescued = run.shards.iter().find(|s| s.shard == 0).unwrap();
+    assert_eq!(rescued.attempts, 2, "shard 0 must have been re-placed");
+    assert_eq!(rescued.worker, live.addr().to_string());
+    assert_maps_identical(&run.result.map, &reference, "retried shard fan-out");
+
+    // with every worker dead, the failure is reported, not hung
+    let err = shard::run_sharded(
+        &req,
+        &[dead],
+        &ShardOptions { attempts: 2, ..fast_opts() },
+        &JobHandle::new(),
+    )
+    .unwrap_err();
+    assert!(!api::is_cancelled(&err), "dead fleet must fail, not cancel: {err:#}");
+
+    live.stop().unwrap();
+}
+
+/// Acceptance: cancelling the aggregate `JobHandle` mid-run stops the
+/// coordinator with `api::cancelled` and DELETE-fans-out to the
+/// workers — their jobs reach the `cancelled` state without running to
+/// completion.
+#[test]
+fn mid_run_cancellation_fans_out_deletes() {
+    let stack = scene(100_000, 3); // ~49 chunks per worker at m_chunk 1024
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let workers = vec![w1.addr().to_string(), w2.addr().to_string()];
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+
+    let handle = JobHandle::new();
+    let coord_handle = handle.clone();
+    let coordinator = std::thread::spawn(move || {
+        shard::run_sharded(&req, &workers, &fast_opts(), &coord_handle)
+    });
+
+    // wait until *every* worker has its shard mid-run (≥ 1 chunk
+    // executed), so the cancel provably interrupts in-flight work on
+    // both, then pull the plug on the whole fan-out
+    for addr in [w1.addr().to_string(), w2.addr().to_string()] {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let (status, body) = roundtrip(&addr, "GET", "/v1/runs", "", &[]).unwrap();
+            assert_eq!(status, 200);
+            let v = json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+            let mid_run = v.get("jobs").unwrap().as_arr().unwrap().iter().any(|j| {
+                j.get("status").unwrap().as_str().unwrap() == "running"
+                    && j.get("progress").unwrap().as_f64().unwrap() > 0.0
+            });
+            if mid_run {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{addr}: shard never started executing chunks"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    handle.cancel();
+    let err = coordinator.join().unwrap().unwrap_err();
+    assert!(api::is_cancelled(&err), "expected cancellation, got: {err:#}");
+
+    // every worker's job lands in `cancelled` — never `done`
+    for addr in [w1.addr().to_string(), w2.addr().to_string()] {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let (status, body) = roundtrip(&addr, "GET", "/v1/runs", "", &[]).unwrap();
+            assert_eq!(status, 200);
+            let v = json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+            let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+            assert!(!jobs.is_empty(), "{addr}: shard job was never submitted");
+            let states: Vec<&str> = jobs
+                .iter()
+                .map(|j| j.get("status").unwrap().as_str().unwrap())
+                .collect();
+            assert!(
+                !states.contains(&"done"),
+                "{addr}: a shard ran to completion despite the cancel ({states:?})"
+            );
+            if states.iter().all(|s| *s == "cancelled") {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{addr}: jobs never reached cancelled ({states:?})"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
