@@ -18,7 +18,7 @@ fn main() -> bfast::error::Result<()> {
     let params = BfastParams::paper_synthetic();
     let m = scaled_m(100_000);
     let data = ArtificialDataset::new(params.clone(), m, 42).generate();
-    let bench = Bench::quick();
+    let bench = Bench::quick().from_env();
     let mut table = Table::new("ablations (seconds, steady-state)", &["config", "seconds"]);
 
     // 1. pallas vs xla artifact — only meaningful on the real device

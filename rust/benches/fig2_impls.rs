@@ -16,7 +16,7 @@ use bfast::synth::ArtificialDataset;
 fn main() -> bfast::error::Result<()> {
     banner("fig2", "runtime of BFAST(R/Python/CPU/GPU) analogues vs m");
     let params = BfastParams::paper_synthetic();
-    let bench = Bench::quick();
+    let bench = Bench::quick().from_env();
     let naive_cap = 2_000usize;
 
     let runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;

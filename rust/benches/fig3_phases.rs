@@ -38,7 +38,7 @@ fn main() -> bfast::error::Result<()> {
     print!("{}", res.phases.table(&format!("(b) BFAST(device) phases, m={m}")));
 
     // fused-path reference (the production configuration)
-    let mut fused_runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
+    let fused_runner = BfastRunner::auto("artifacts", RunnerConfig::default())?;
     let _ = fused_runner.run(&data.stack, &params)?;
     let fres = fused_runner.run(&data.stack, &params)?;
     print!("{}", fres.phases.table("(b') device fused path, same work"));

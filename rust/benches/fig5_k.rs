@@ -22,7 +22,7 @@ fn main() -> bfast::error::Result<()> {
         &["k", "transfer", "create model", "predictions", "mosum", "detect breaks", "total"],
     );
 
-    let runner = BfastRunner::auto(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;

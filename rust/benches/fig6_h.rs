@@ -18,7 +18,7 @@ fn main() -> bfast::error::Result<()> {
         "fig6: seconds vs h",
         &["h", "cpu_mosum", "cpu_total", "dev_mosum", "dev_total"],
     );
-    let runner = BfastRunner::auto(
+    let mut runner = BfastRunner::auto(
         "artifacts",
         RunnerConfig { phased: true, ..Default::default() },
     )?;

@@ -1,0 +1,772 @@
+//! `bfast bench` — the pinned perf-trajectory harness.
+//!
+//! The paper's claim is a speed number; this module makes the repo's
+//! own speed numbers first-class artifacts. It runs the fig2/fig3
+//! scenes (fixed seeds, pinned `BFAST_BENCH_SCALE`, warmup + N
+//! trials) against the named engines, collects wall and per-phase
+//! integer-ns medians via [`PhaseTimes`], and emits a canonical JSON
+//! report (`BENCH_PR6.json` et seq.) carrying an environment
+//! fingerprint — host threads, cargo profile, git rev, scale — so a
+//! later PR's `bench diff OLD.json NEW.json` is an apples-to-apples
+//! regression check.
+//!
+//! The JSON form follows the `api` discipline: `to_json` → `from_json`
+//! is an exact round-trip and serialisation is a fixed point, so
+//! committed reports can be schema-validated in CI without touching
+//! timings.
+
+use crate::coordinator::{BfastRunner, RunnerConfig};
+use crate::cpu::FusedCpuBfast;
+use crate::error::{bail, ensure, Context, Result};
+use crate::json::{self, Value};
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::pixel::DirectBfast;
+use crate::raster::TimeStack;
+use crate::synth::ArtificialDataset;
+use std::time::{Duration, Instant};
+
+/// Schema version of the emitted report.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Engine names accepted by the harness (`--engines`).
+pub const ENGINE_FUSED: &str = "fused-cpu";
+pub const ENGINE_DIRECT: &str = "direct";
+pub const ENGINE_EMULATED: &str = "emulated";
+pub const ENGINE_EMULATED_PHASED: &str = "emulated-phased";
+
+/// Fingerprint `source` for reports emitted by this harness. Reports
+/// measured by other instruments (e.g. the committed kernel-replica
+/// trajectory) must label themselves differently so a diff between
+/// unlike sources is visibly unlike.
+pub const SOURCE_HARNESS: &str = "bfast-bench";
+
+/// Environment fingerprint carried by every report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub host_threads: usize,
+    pub cargo_profile: String,
+    pub git_rev: String,
+    pub scale: f64,
+    pub warmup: usize,
+    pub trials: usize,
+    /// What produced the numbers (see [`SOURCE_HARNESS`]).
+    pub source: String,
+}
+
+impl Fingerprint {
+    pub fn current(cfg: &BenchConfig) -> Self {
+        Self {
+            host_threads: crate::threadpool::default_threads(),
+            cargo_profile: cargo_profile().to_string(),
+            git_rev: git_rev(),
+            scale: cfg.scale,
+            warmup: cfg.warmup,
+            trials: cfg.trials,
+            source: SOURCE_HARNESS.to_string(),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("host_threads", Value::Num(self.host_threads as f64)),
+            ("cargo_profile", Value::Str(self.cargo_profile.clone())),
+            ("git_rev", Value::Str(self.git_rev.clone())),
+            ("scale", Value::Num(self.scale)),
+            ("warmup", Value::Num(self.warmup as f64)),
+            ("trials", Value::Num(self.trials as f64)),
+            ("source", Value::Str(self.source.clone())),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            host_threads: v.get("host_threads")?.as_usize()?,
+            cargo_profile: v.get("cargo_profile")?.as_str()?.to_string(),
+            git_rev: v.get("git_rev")?.as_str()?.to_string(),
+            scale: v.get("scale")?.as_f64()?,
+            warmup: v.get("warmup")?.as_usize()?,
+            trials: v.get("trials")?.as_usize()?,
+            source: v.get("source")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The cargo profile this binary was built under.
+pub fn cargo_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
+    }
+}
+
+/// Short git revision of the enclosing checkout: walk up from the
+/// current directory to `.git/HEAD`, follow one `ref:` indirection
+/// (loose ref, then `packed-refs`). `"unknown"` when not in a repo —
+/// the report stays emittable from an exported tarball.
+pub fn git_rev() -> String {
+    fn short(h: &str) -> String {
+        h.chars().take(12).collect()
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    for _ in 0..16 {
+        let head = dir.join(".git").join("HEAD");
+        if let Ok(txt) = std::fs::read_to_string(&head) {
+            let txt = txt.trim();
+            let Some(rf) = txt.strip_prefix("ref: ") else {
+                return short(txt); // detached HEAD: the hash itself
+            };
+            if let Ok(h) = std::fs::read_to_string(dir.join(".git").join(rf)) {
+                return short(h.trim());
+            }
+            if let Ok(packed) = std::fs::read_to_string(dir.join(".git").join("packed-refs")) {
+                for line in packed.lines() {
+                    if let Some(hash) = line.trim_end().strip_suffix(rf) {
+                        return short(hash.trim());
+                    }
+                }
+            }
+            return "unknown".to_string();
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    "unknown".to_string()
+}
+
+/// One benchmark scene (paper figure analogue).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub params: BfastParams,
+    /// Pixel count at scale 1.0 (scaled by [`BenchConfig::scale`]).
+    pub base_m: usize,
+    pub seed: u64,
+    pub engines: &'static [&'static str],
+}
+
+/// The pinned scenario set. Names, seeds and shapes are part of the
+/// trajectory contract: changing them breaks comparability and must
+/// re-baseline.
+pub fn scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "fig2",
+            about: "paper-shaped synthetic scene, implementation comparison",
+            params: BfastParams::paper_synthetic(),
+            base_m: 20_000,
+            seed: 42,
+            engines: &[ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED],
+        },
+        Scenario {
+            name: "fig3",
+            about: "per-phase breakdown through the coordinated pipeline",
+            params: BfastParams::paper_synthetic(),
+            base_m: 50_000,
+            seed: 42,
+            engines: &[ENGINE_FUSED, ENGINE_EMULATED_PHASED],
+        },
+    ]
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub scale: f64,
+    pub warmup: usize,
+    pub trials: usize,
+    /// Scenario-name filter; empty = all.
+    pub scenarios: Vec<String>,
+    /// Engine-name filter; empty = each scenario's full set.
+    pub engines: Vec<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            scale: crate::bench_support::bench_scale(),
+            warmup: 1,
+            trials: 5,
+            scenarios: Vec::new(),
+            engines: Vec::new(),
+        }
+    }
+}
+
+/// Timings of one engine on one scenario (all integer nanoseconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineResult {
+    pub engine: String,
+    /// Wall time of every measured trial, in run order.
+    pub trials_ns: Vec<u64>,
+    pub median_ns: u64,
+    pub min_ns: u64,
+    /// Median per-phase breakdown, in the engine's phase order.
+    pub phases_ns: Vec<(String, u64)>,
+}
+
+impl EngineResult {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("engine", Value::Str(self.engine.clone())),
+            (
+                "trials_ns",
+                Value::Arr(self.trials_ns.iter().map(|&t| Value::Num(t as f64)).collect()),
+            ),
+            ("median_ns", Value::Num(self.median_ns as f64)),
+            ("min_ns", Value::Num(self.min_ns as f64)),
+            (
+                "phases_ns",
+                Value::Obj(
+                    self.phases_ns
+                        .iter()
+                        .map(|(n, ns)| (n.clone(), Value::Num(*ns as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let trials_ns = v
+            .get("trials_ns")?
+            .as_arr()?
+            .iter()
+            .map(|t| Ok(t.as_usize()? as u64))
+            .collect::<Result<Vec<_>>>()?;
+        let phases_ns = v
+            .get("phases_ns")?
+            .as_obj()?
+            .iter()
+            .map(|(n, ns)| Ok((n.clone(), ns.as_usize()? as u64)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            engine: v.get("engine")?.as_str()?.to_string(),
+            trials_ns,
+            median_ns: v.get("median_ns")?.as_usize()? as u64,
+            min_ns: v.get("min_ns")?.as_usize()? as u64,
+            phases_ns,
+        })
+    }
+}
+
+/// All engine timings for one scenario at one scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub scenario: String,
+    pub about: String,
+    pub m: usize,
+    pub n_total: usize,
+    pub n_hist: usize,
+    pub h: usize,
+    pub k: usize,
+    pub seed: u64,
+    pub engines: Vec<EngineResult>,
+}
+
+impl ScenarioResult {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("scenario", Value::Str(self.scenario.clone())),
+            ("about", Value::Str(self.about.clone())),
+            ("m", Value::Num(self.m as f64)),
+            ("n_total", Value::Num(self.n_total as f64)),
+            ("n_hist", Value::Num(self.n_hist as f64)),
+            ("h", Value::Num(self.h as f64)),
+            ("k", Value::Num(self.k as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+            ("engines", Value::Arr(self.engines.iter().map(|e| e.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            scenario: v.get("scenario")?.as_str()?.to_string(),
+            about: v.get("about")?.as_str()?.to_string(),
+            m: v.get("m")?.as_usize()?,
+            n_total: v.get("n_total")?.as_usize()?,
+            n_hist: v.get("n_hist")?.as_usize()?,
+            h: v.get("h")?.as_usize()?,
+            k: v.get("k")?.as_usize()?,
+            seed: v.get("seed")?.as_usize()? as u64,
+            engines: v
+                .get("engines")?
+                .as_arr()?
+                .iter()
+                .map(EngineResult::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+/// A full harness report: the unit `bench diff` compares.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub version: u64,
+    pub fingerprint: Fingerprint,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::Num(self.version as f64)),
+            ("fingerprint", self.fingerprint.to_json()),
+            ("scenarios", Value::Arr(self.scenarios.iter().map(|s| s.to_json()).collect())),
+        ])
+    }
+
+    /// Canonical serialised form (pretty, stable key order; a fixed
+    /// point of parse → serialise).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let version = v.get("version")?.as_usize()? as u64;
+        ensure!(
+            version == SCHEMA_VERSION,
+            "bench report schema v{version} unsupported (this build reads v{SCHEMA_VERSION})"
+        );
+        Ok(Self {
+            version,
+            fingerprint: Fingerprint::from_json(v.get("fingerprint")?)
+                .context("bench report fingerprint")?,
+            scenarios: v
+                .get("scenarios")?
+                .as_arr()?
+                .iter()
+                .map(ScenarioResult::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        Self::from_json(&json::parse(s)?)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let txt = std::fs::read_to_string(path)
+            .with_context(|| format!("read bench report {}", path.display()))?;
+        Self::from_json_str(&txt).with_context(|| format!("parse bench report {}", path.display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json_string() + "\n")
+            .with_context(|| format!("write bench report {}", path.display()))
+    }
+
+    /// Human-readable summary of the report.
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let f = &self.fingerprint;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "bench report v{} | source={} profile={} rev={} threads={} scale={} \
+             warmup={} trials={}",
+            self.version,
+            f.source,
+            f.cargo_profile,
+            f.git_rev,
+            f.host_threads,
+            f.scale,
+            f.warmup,
+            f.trials
+        );
+        for sc in &self.scenarios {
+            let _ = writeln!(
+                s,
+                "{} (m={}, N={}, n={}, h={}, k={}, seed={}): {}",
+                sc.scenario, sc.m, sc.n_total, sc.n_hist, sc.h, sc.k, sc.seed, sc.about
+            );
+            for er in &sc.engines {
+                let _ = writeln!(
+                    s,
+                    "  {:<16} median {:>13} ns   min {:>13} ns",
+                    er.engine, er.median_ns, er.min_ns
+                );
+                for (ph, ns) in &er.phases_ns {
+                    let _ = writeln!(s, "      {ph:<24} {ns:>13} ns");
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Run the full (filtered) scenario grid.
+pub fn run_all(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut out = Vec::new();
+    for sc in scenarios() {
+        if !cfg.scenarios.is_empty() && !cfg.scenarios.iter().any(|s| s == sc.name) {
+            continue;
+        }
+        out.push(run_scenario(&sc, cfg)?);
+    }
+    ensure!(
+        !out.is_empty(),
+        "no scenario matched the filter (known: {})",
+        scenarios().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+    );
+    Ok(BenchReport {
+        version: SCHEMA_VERSION,
+        fingerprint: Fingerprint::current(cfg),
+        scenarios: out,
+    })
+}
+
+/// Run one scenario: generate the scene once, build each engine once,
+/// then warmup + trials per engine.
+pub fn run_scenario(sc: &Scenario, cfg: &BenchConfig) -> Result<ScenarioResult> {
+    let m = ((sc.base_m as f64 * cfg.scale) as usize).max(16);
+    let p = &sc.params;
+    let data = ArtificialDataset::new(p.clone(), m, sc.seed).generate();
+    let mut engines = Vec::new();
+    for &name in sc.engines {
+        if !cfg.engines.is_empty() && !cfg.engines.iter().any(|e| e == name) {
+            continue;
+        }
+        let mut run = engine_runner(name, p, &data.stack)?;
+        for _ in 0..cfg.warmup {
+            let _ = run()?;
+        }
+        let mut trials_ns = Vec::with_capacity(cfg.trials.max(1));
+        let mut per_phase: Vec<(String, Vec<u64>)> = Vec::new();
+        for _ in 0..cfg.trials.max(1) {
+            let (wall, phases, n_breaks) = run()?;
+            crate::bench_support::black_box(n_breaks);
+            trials_ns.push(wall.as_nanos() as u64);
+            for (ph, d) in phases.iter() {
+                let ns = d.as_nanos() as u64;
+                match per_phase.iter_mut().find(|(n, _)| n == ph) {
+                    Some((_, v)) => v.push(ns),
+                    None => per_phase.push((ph.to_string(), vec![ns])),
+                }
+            }
+        }
+        let median_ns = median_u64(&mut trials_ns.clone());
+        let min_ns = *trials_ns.iter().min().expect("at least one trial");
+        let phases_ns = per_phase
+            .into_iter()
+            .map(|(n, mut v)| (n, median_u64(&mut v)))
+            .collect();
+        engines.push(EngineResult { engine: name.to_string(), trials_ns, median_ns, min_ns, phases_ns });
+    }
+    Ok(ScenarioResult {
+        scenario: sc.name.to_string(),
+        about: sc.about.to_string(),
+        m,
+        n_total: p.n_total,
+        n_hist: p.n_hist,
+        h: p.h,
+        k: p.k,
+        seed: sc.seed,
+        engines,
+    })
+}
+
+/// Build the measured closure for one engine. Construction (design
+/// matrices, runner state) happens once, outside the trial clock —
+/// trials measure steady-state scene analysis.
+#[allow(clippy::type_complexity)]
+fn engine_runner<'a>(
+    name: &str,
+    p: &'a BfastParams,
+    stack: &'a TimeStack,
+) -> Result<Box<dyn FnMut() -> Result<(Duration, PhaseTimes, usize)> + 'a>> {
+    match name {
+        ENGINE_FUSED => {
+            let eng = FusedCpuBfast::new(p.clone(), &stack.time_axis)?;
+            Ok(Box::new(move || {
+                let t0 = Instant::now();
+                let (map, times) = eng.run(stack)?;
+                Ok((t0.elapsed(), times, map.break_count()))
+            }))
+        }
+        ENGINE_DIRECT => {
+            let eng = DirectBfast::new(p.clone(), &stack.time_axis)?;
+            Ok(Box::new(move || {
+                let t0 = Instant::now();
+                let map = eng.run(stack)?;
+                Ok((t0.elapsed(), PhaseTimes::new(), map.break_count()))
+            }))
+        }
+        ENGINE_EMULATED => {
+            let runner = BfastRunner::emulated(RunnerConfig::default())?;
+            Ok(Box::new(move || {
+                let t0 = Instant::now();
+                let res = runner.run(stack, p)?;
+                Ok((t0.elapsed(), res.phases, res.map.break_count()))
+            }))
+        }
+        ENGINE_EMULATED_PHASED => {
+            let runner =
+                BfastRunner::emulated(RunnerConfig { phased: true, ..Default::default() })?;
+            Ok(Box::new(move || {
+                let t0 = Instant::now();
+                let res = runner.run(stack, p)?;
+                Ok((t0.elapsed(), res.phases, res.map.break_count()))
+            }))
+        }
+        other => bail!(
+            "unknown engine {other:?} (known: {ENGINE_FUSED}, {ENGINE_DIRECT}, \
+             {ENGINE_EMULATED}, {ENGINE_EMULATED_PHASED})"
+        ),
+    }
+}
+
+/// One comparable (scenario, engine) pair in a diff.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub scenario: String,
+    pub engine: String,
+    pub base_ns: u64,
+    pub new_ns: u64,
+    /// base/new: > 1 is faster, < 1 is slower.
+    pub speedup: f64,
+}
+
+/// `bench diff` result: matched rows plus anything incomparable.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+    /// (scenario, engine) pairs present in base but absent or
+    /// incomparable (different m) in new.
+    pub missing: Vec<String>,
+}
+
+impl DiffReport {
+    /// Rows slower than `1 + tolerance` (e.g. 0.1 = flag >10% slower).
+    pub fn regressions(&self, tolerance: f64) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| r.speedup < 1.0 / (1.0 + tolerance)).collect()
+    }
+
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{:<10} {:<16} {:>13} {:>13} {:>9}",
+            "scenario", "engine", "base ns", "new ns", "speedup"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{:<10} {:<16} {:>13} {:>13} {:>8.2}x",
+                r.scenario, r.engine, r.base_ns, r.new_ns, r.speedup
+            );
+        }
+        for m in &self.missing {
+            let _ = writeln!(s, "! {m}");
+        }
+        s
+    }
+}
+
+/// Compare two reports by (scenario, engine) median wall time.
+pub fn diff(base: &BenchReport, new: &BenchReport) -> DiffReport {
+    let mut out = DiffReport::default();
+    for sc in &base.scenarios {
+        let Some(nsc) = new.scenarios.iter().find(|s| s.scenario == sc.scenario) else {
+            out.missing.push(format!("scenario {:?} absent from new report", sc.scenario));
+            continue;
+        };
+        for er in &sc.engines {
+            let Some(ner) = nsc.engines.iter().find(|e| e.engine == er.engine) else {
+                out.missing
+                    .push(format!("{}/{} absent from new report", sc.scenario, er.engine));
+                continue;
+            };
+            if sc.m != nsc.m {
+                out.missing.push(format!(
+                    "{}/{}: m {} vs {} — incomparable (different scale?)",
+                    sc.scenario, er.engine, sc.m, nsc.m
+                ));
+                continue;
+            }
+            let speedup = if ner.median_ns > 0 {
+                er.median_ns as f64 / ner.median_ns as f64
+            } else {
+                f64::INFINITY
+            };
+            out.rows.push(DiffRow {
+                scenario: sc.scenario.clone(),
+                engine: er.engine.clone(),
+                base_ns: er.median_ns,
+                new_ns: ner.median_ns,
+                speedup,
+            });
+        }
+    }
+    out
+}
+
+/// Fixed seed for chunk-width autotuning runs.
+pub const TUNE_SEED: u64 = 42;
+
+/// Default chunk-width candidates for [`tune_m_chunk`].
+pub const TUNE_CANDIDATES: &[usize] = &[256, 512, 1024, 2048, 4096];
+
+/// Measure the coordinated emulated pipeline at each candidate
+/// `m_chunk` (1 warmup + `trials` measured runs each) and return
+/// `(best, [(candidate, median_ns)])`. The winner is what
+/// `RunnerConfig::m_chunk` should be seeded with on this host.
+pub fn tune_m_chunk(
+    params: &BfastParams,
+    m: usize,
+    candidates: &[usize],
+    trials: usize,
+) -> Result<(usize, Vec<(usize, u64)>)> {
+    ensure!(!candidates.is_empty(), "no m_chunk candidates to tune over");
+    let data = ArtificialDataset::new(params.clone(), m, TUNE_SEED).generate();
+    let mut measured = Vec::with_capacity(candidates.len());
+    for &mc in candidates {
+        ensure!(mc >= 1, "m_chunk candidate must be >= 1, got {mc}");
+        let runner =
+            BfastRunner::emulated(RunnerConfig { m_chunk: Some(mc), ..Default::default() })?;
+        let _ = runner.run(&data.stack, params)?; // warmup
+        let mut walls = Vec::with_capacity(trials.max(1));
+        for _ in 0..trials.max(1) {
+            let t0 = Instant::now();
+            let res = runner.run(&data.stack, params)?;
+            crate::bench_support::black_box(res.map.break_count());
+            walls.push(t0.elapsed().as_nanos() as u64);
+        }
+        measured.push((mc, median_u64(&mut walls)));
+    }
+    let best = measured.iter().min_by_key(|&&(_, ns)| ns).map(|&(mc, _)| mc).expect("non-empty");
+    Ok((best, measured))
+}
+
+/// Integer median (lower-biased mean of the middle pair for even n).
+fn median_u64(xs: &mut [u64]) -> u64 {
+    assert!(!xs.is_empty());
+    xs.sort_unstable();
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        let (a, b) = (xs[n / 2 - 1], xs[n / 2]);
+        a / 2 + b / 2 + (a % 2 + b % 2) / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        BenchReport {
+            version: SCHEMA_VERSION,
+            fingerprint: Fingerprint {
+                host_threads: 8,
+                cargo_profile: "release".into(),
+                git_rev: "abc123def456".into(),
+                scale: 0.25,
+                warmup: 1,
+                trials: 5,
+                source: SOURCE_HARNESS.into(),
+            },
+            scenarios: vec![ScenarioResult {
+                scenario: "fig2".into(),
+                about: "test".into(),
+                m: 5000,
+                n_total: 200,
+                n_hist: 100,
+                h: 50,
+                k: 3,
+                seed: 42,
+                engines: vec![EngineResult {
+                    engine: ENGINE_FUSED.into(),
+                    trials_ns: vec![120, 100, 110],
+                    median_ns: 110,
+                    min_ns: 100,
+                    phases_ns: vec![("create model".into(), 40), ("mosum".into(), 30)],
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_a_fixed_point() {
+        let r = sample_report();
+        let s1 = r.to_json_string();
+        let back = BenchReport::from_json_str(&s1).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json_string(), s1, "serialise is a fixed point");
+        // phase order survives
+        assert_eq!(back.scenarios[0].engines[0].phases_ns[0].0, "create model");
+    }
+
+    #[test]
+    fn rejects_unknown_schema_version() {
+        let mut r = sample_report();
+        r.version = SCHEMA_VERSION + 1;
+        let err = BenchReport::from_json_str(&r.to_json_string()).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn diff_matches_pairs_and_flags_missing() {
+        let base = sample_report();
+        let mut new = sample_report();
+        new.scenarios[0].engines[0].median_ns = 55; // 2x faster
+        let d = diff(&base, &new);
+        assert_eq!(d.rows.len(), 1);
+        assert!((d.rows[0].speedup - 2.0).abs() < 1e-9, "{}", d.rows[0].speedup);
+        assert!(d.missing.is_empty());
+        assert!(d.regressions(0.1).is_empty());
+
+        // slower new run is a regression
+        new.scenarios[0].engines[0].median_ns = 200;
+        let d = diff(&base, &new);
+        assert_eq!(d.regressions(0.1).len(), 1);
+
+        // m mismatch is incomparable, engine absence is reported
+        new.scenarios[0].engines[0].median_ns = 110;
+        new.scenarios[0].m = 1;
+        let d = diff(&base, &new);
+        assert!(d.rows.is_empty());
+        assert_eq!(d.missing.len(), 1, "{:?}", d.missing);
+        new.scenarios.clear();
+        let d = diff(&base, &new);
+        assert_eq!(d.missing.len(), 1);
+        assert!(d.table().contains('!'));
+    }
+
+    #[test]
+    fn median_u64_odd_even() {
+        assert_eq!(median_u64(&mut [3, 1, 2]), 2);
+        assert_eq!(median_u64(&mut [4, 1, 2, 3]), 2);
+        assert_eq!(median_u64(&mut [7]), 7);
+        assert_eq!(median_u64(&mut [u64::MAX, u64::MAX]), u64::MAX);
+    }
+
+    #[test]
+    fn fingerprint_smoke() {
+        assert!(matches!(cargo_profile(), "debug" | "release"));
+        let rev = git_rev();
+        assert!(!rev.is_empty() && rev.len() <= 12, "{rev}");
+        let f = Fingerprint::current(&BenchConfig::default());
+        assert_eq!(f.source, SOURCE_HARNESS);
+        assert!(f.host_threads >= 1);
+    }
+
+    #[test]
+    fn scenario_names_are_unique_and_engines_known() {
+        let known = [ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED, ENGINE_EMULATED_PHASED];
+        let scs = scenarios();
+        for (i, a) in scs.iter().enumerate() {
+            assert!(scs[i + 1..].iter().all(|b| b.name != a.name), "dup {}", a.name);
+            for e in a.engines {
+                assert!(known.contains(e), "unknown engine {e}");
+            }
+        }
+    }
+}

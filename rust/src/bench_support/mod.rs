@@ -8,6 +8,7 @@
 //! the bench wall time.
 
 use crate::metrics;
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.
@@ -52,6 +53,24 @@ impl Bench {
         Self { warmup: 1, max_samples: 3, min_samples: 2, budget: Duration::from_secs(10) }
     }
 
+    /// Apply `BFAST_BENCH_WARMUP` / `BFAST_BENCH_TRIALS` env overrides
+    /// (the `bfast bench` harness pins both for reproducible runs).
+    /// A trial override sets `min_samples == max_samples`, so the
+    /// measured sample count is exact — the time budget cannot stop a
+    /// pinned run short.
+    pub fn from_env(mut self) -> Self {
+        if let Some(w) = parse_env_usize("BFAST_BENCH_WARMUP") {
+            self.warmup = w;
+        }
+        if let Some(t) = parse_env_usize("BFAST_BENCH_TRIALS") {
+            let t = t.max(1);
+            self.max_samples = t;
+            self.min_samples = t;
+            self.budget = Duration::from_secs(u64::MAX / 4);
+        }
+        self
+    }
+
     /// Measure `f` (its return value is black-boxed).
     pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Measurement {
         for _ in 0..self.warmup {
@@ -88,20 +107,38 @@ pub fn black_box<T>(x: T) -> T {
 pub fn banner(fig: &str, what: &str) {
     println!("\n=== {fig}: {what} ===");
     println!(
-        "host threads={} | BFAST_BENCH_SCALE={}",
+        "host threads={} | BFAST_BENCH_SCALE={} | profile={} | rev={}",
         crate::threadpool::default_threads(),
-        bench_scale()
+        bench_scale(),
+        crate::bench::cargo_profile(),
+        crate::bench::git_rev(),
     );
+}
+
+/// Parse one positive-usize env override; garbage/absent = `None`.
+fn parse_env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|s| s.trim().parse().ok())
 }
 
 /// Global scale factor for bench workloads (`BFAST_BENCH_SCALE`, default
 /// 1.0 = paper-shaped but laptop-sized workloads; crank up to approach
 /// the paper's m = 10⁶).
+///
+/// Read **once** per process and latched in a `OnceLock`: every
+/// consumer — across harness trials, bench targets and threads — sees
+/// the same value even if the environment mutates mid-run (the old
+/// per-call read let a `set_var`/`remove_var` race tear the scale
+/// between a bench's warmup and its samples).
 pub fn bench_scale() -> f64 {
-    std::env::var("BFAST_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .filter(|&v| v > 0.0)
+    static SCALE: OnceLock<f64> = OnceLock::new();
+    *SCALE.get_or_init(|| parse_scale(std::env::var("BFAST_BENCH_SCALE").ok().as_deref()))
+}
+
+/// Pure parse of a `BFAST_BENCH_SCALE` value (split out so the
+/// semantics stay unit-testable despite the process-global latch).
+fn parse_scale(raw: Option<&str>) -> f64 {
+    raw.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|v| v.is_finite() && *v > 0.0)
         .unwrap_or(1.0)
 }
 
@@ -136,9 +173,44 @@ mod tests {
     }
 
     #[test]
-    fn scale_default_is_one() {
+    fn parse_scale_handles_defaults_and_garbage() {
+        assert_eq!(parse_scale(None), 1.0);
+        assert_eq!(parse_scale(Some("")), 1.0);
+        assert_eq!(parse_scale(Some("bogus")), 1.0);
+        assert_eq!(parse_scale(Some("0")), 1.0);
+        assert_eq!(parse_scale(Some("-2")), 1.0);
+        assert_eq!(parse_scale(Some("inf")), 1.0);
+        assert_eq!(parse_scale(Some("NaN")), 1.0);
+        assert_eq!(parse_scale(Some("0.25")), 0.25);
+        assert_eq!(parse_scale(Some(" 2 ")), 2.0);
+    }
+
+    #[test]
+    fn scale_is_read_once_per_process() {
+        // Latch whatever the process started with, then mutate the
+        // env: the latched value must not move (the race this fixes).
+        let first = bench_scale();
+        std::env::set_var("BFAST_BENCH_SCALE", "1e9");
+        assert_eq!(bench_scale(), first);
         std::env::remove_var("BFAST_BENCH_SCALE");
-        assert_eq!(bench_scale(), 1.0);
-        assert_eq!(scaled_m(1000), 1000);
+        assert_eq!(bench_scale(), first);
+        assert_eq!(scaled_m(1000), ((1000.0 * first) as usize).max(16));
+    }
+
+    #[test]
+    fn from_env_overrides_trials_and_warmup() {
+        // run serially with env mutation contained to this test
+        std::env::set_var("BFAST_BENCH_WARMUP", "0");
+        std::env::set_var("BFAST_BENCH_TRIALS", "2");
+        let b = Bench::quick().from_env();
+        assert_eq!(b.warmup, 0);
+        assert_eq!(b.max_samples, 2);
+        assert_eq!(b.min_samples, 2);
+        std::env::remove_var("BFAST_BENCH_WARMUP");
+        std::env::remove_var("BFAST_BENCH_TRIALS");
+        let m = b.run(|| std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(m.samples, 2, "pinned trial count is exact");
+        let c = Bench::quick().from_env();
+        assert_eq!(c.warmup, Bench::quick().warmup, "no env = no override");
     }
 }

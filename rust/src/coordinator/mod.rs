@@ -61,6 +61,13 @@ pub struct RunnerConfig {
     pub phased: bool,
     /// Gap-fill NaN observations during staging (paper footnote 2).
     pub fill_missing: bool,
+    /// Override the backend-resolved chunk width (pixels per executed
+    /// chunk). Only honoured by backends whose
+    /// [`ExecutorBackend::flexible_chunk`] is `true`; shape-specialised
+    /// artifact backends reject the override. `None` = use whatever
+    /// the backend resolves. Typically seeded from
+    /// `bench::tune_m_chunk` measurements.
+    pub m_chunk: Option<usize>,
 }
 
 impl Default for RunnerConfig {
@@ -71,6 +78,7 @@ impl Default for RunnerConfig {
             staging_threads: (crate::threadpool::default_threads() / 2).max(1),
             phased: false,
             fill_missing: true,
+            m_chunk: None,
         }
     }
 }
@@ -179,6 +187,23 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
         self.backend.platform()
     }
 
+    /// Apply [`RunnerConfig::m_chunk`] to a resolved spec, if set.
+    /// Fails when the backend runs shape-specialised artifacts (its
+    /// chunk width is baked into the compiled executable).
+    fn apply_chunk_override(&self, spec: &mut crate::runtime::ArtifactSpec) -> Result<()> {
+        if let Some(mc) = self.cfg.m_chunk {
+            ensure!(mc >= 1, "m_chunk override must be >= 1");
+            ensure!(
+                self.backend.flexible_chunk(),
+                "backend {} runs shape-specialised artifacts; its m_chunk cannot be \
+                 overridden",
+                self.backend.platform()
+            );
+            spec.m_chunk = mc;
+        }
+        Ok(())
+    }
+
     /// Analyse a scene. Streams chunks through the staging → executor
     /// pipeline; returns the assembled break map plus phase timings
     /// (executor phases + accumulated staging time).
@@ -212,7 +237,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
             params.n_total
         );
         let t0 = Instant::now();
-        let spec = self
+        let mut spec = self
             .backend
             .resolve(self.cfg.artifact.as_deref(), params)?;
         let name = spec.name.clone();
@@ -232,6 +257,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
             params.h,
             params.k
         );
+        self.apply_chunk_override(&mut spec)?;
         let m = stack.n_pixels();
         let plan = ChunkPlan::new(m, spec.m_chunk);
         let t_axis: Vec<f32> = stack.time_axis.iter().map(|&v| v as f32).collect();
@@ -383,7 +409,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
         stack: &TimeStack,
         params: &BfastParams,
     ) -> Result<crate::monitor::MonitorSession> {
-        let spec = self.backend.resolve(self.cfg.artifact.as_deref(), params)?;
+        let mut spec = self.backend.resolve(self.cfg.artifact.as_deref(), params)?;
         ensure!(
             spec.n_total == params.n_total
                 && spec.n_hist == params.n_hist
@@ -401,6 +427,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
             params.h,
             params.k
         );
+        self.apply_chunk_override(&mut spec)?;
         let cfg = crate::monitor::MonitorConfig {
             m_chunk: spec.m_chunk,
             threads: crate::threadpool::default_threads(),
@@ -520,4 +547,49 @@ mod tests {
         assert!(r.platform().contains("emulated"), "{}", r.platform());
     }
 
+    #[test]
+    fn m_chunk_override_applies_to_flexible_backend() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 100, 3).generate();
+        let base = BfastRunner::emulated(RunnerConfig::default()).unwrap();
+        let want = base.run(&data.stack, &params).unwrap();
+        let runner = BfastRunner::emulated(RunnerConfig {
+            m_chunk: Some(7),
+            ..Default::default()
+        })
+        .unwrap();
+        let res = runner.run(&data.stack, &params).unwrap();
+        assert_eq!(res.chunks, 100usize.div_ceil(7), "override drives the chunk plan");
+        // chunk geometry never changes the arithmetic
+        assert_eq!(res.map.breaks, want.map.breaks);
+        assert_eq!(res.map.first, want.map.first);
+        let same = res
+            .map
+            .momax
+            .iter()
+            .zip(&want.map.momax)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "momax must be bit-identical across chunk widths");
+    }
+
+    #[test]
+    fn m_chunk_override_rejected_by_shape_specialised_backend() {
+        // FailingBackend leaves flexible_chunk at its default (false):
+        // the override must be refused before any chunk runs.
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 20, 1).generate();
+        let runner = BfastRunner::new(
+            Box::new(FailingBackend),
+            RunnerConfig { m_chunk: Some(16), ..Default::default() },
+        )
+        .unwrap();
+        let err = runner.run(&data.stack, &params).unwrap_err().to_string();
+        assert!(err.contains("cannot be overridden"), "{err}");
+        let bad = BfastRunner::emulated(RunnerConfig {
+            m_chunk: Some(0),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(bad.run(&data.stack, &params).is_err(), "m_chunk=0 must be rejected");
+    }
 }

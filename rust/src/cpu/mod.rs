@@ -33,6 +33,8 @@ use crate::params::BfastParams;
 use crate::raster::{BreakMap, TimeStack};
 use crate::threadpool::{self, SyncSlice};
 use crate::error::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// Phase names (shared with the coordinator's tables).
 pub const PHASE_MODEL: &str = "create model";
@@ -170,18 +172,33 @@ impl FusedCpuBfast {
             });
         });
 
-        // 4. MOSUMs: (N − n) × m, vectorised across pixel blocks
+        // 4+5. MOSUMs + detect, fused: every pixel block computes its
+        // rolling statistics into a block-local strip (n_mon × w) and
+        // scans that strip for breaks while it is still cache-hot — the
+        // scene-wide (N − n) × m MOSUM matrix never materialises, which
+        // removes one full write + read of n_mon·m floats through
+        // memory. Arithmetic per element is unchanged (same expressions
+        // in the same order), so results stay bit-identical to the
+        // two-pass formulation. Wall time is split between the two
+        // phases in proportion to per-thread kernel time so the
+        // five-phase breakdown (Figs. 3–6) survives the fusion.
         let n_mon = p.n_monitor();
-        let mut mo = vec![0.0f32; n_mon * m];
         let mut sigma_state = vec![0.0f64; if want_state { m } else { 0 }];
         let mut acc_state = vec![0.0f64; if want_state { m } else { 0 }];
-        times.time(PHASE_MOSUM, || {
-            let view = SyncSlice::new(&mut mo);
+        let mut map = BreakMap::zeros(m);
+        let mosum_ns = AtomicU64::new(0);
+        let detect_ns = AtomicU64::new(0);
+        let pass = {
+            let started = Instant::now();
             let sigma_view = SyncSlice::new(&mut sigma_state);
             let acc_view = SyncSlice::new(&mut acc_state);
+            let vb = SyncSlice::new(&mut map.breaks);
+            let vf = SyncSlice::new(&mut map.first);
+            let vm = SyncSlice::new(&mut map.momax);
             let dof = p.dof() as f64;
             let h = p.h;
             threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
+                let t0 = Instant::now();
                 let w = e - s;
                 let mut sigma = vec![0.0f64; w];
                 let mut acc = vec![0.0f64; w];
@@ -203,18 +220,25 @@ impl FusedCpuBfast {
                         *a += r as f64;
                     }
                 }
-                for (j, (&a, &sg)) in acc.iter().zip(&sigma).enumerate() {
-                    unsafe { view.write(s + j, (a / sg) as f32) };
+                let mut strip = vec![0.0f32; n_mon * w];
+                {
+                    let (row0, _) = strip.split_at_mut(w);
+                    for ((o, &a), &sg) in row0.iter_mut().zip(&acc).zip(&sigma) {
+                        *o = (a / sg) as f32;
+                    }
                 }
-                // rolling update: t = n+2..N (1-based) → row index t-1
+                // rolling update: t = n+2..N (1-based) → row index t-1;
+                // accumulator advance and normalised write fused into a
+                // single pass over the block
                 for ti in 1..n_mon {
                     let add = &resid[(n_hist + ti) * m + s..(n_hist + ti) * m + e];
                     let sub = &resid[(n_hist + ti - h) * m + s..(n_hist + ti - h) * m + e];
-                    for ((a, &ad), &su) in acc.iter_mut().zip(add).zip(sub) {
+                    let out = &mut strip[ti * w..(ti + 1) * w];
+                    for ((((o, a), &ad), &su), &sg) in
+                        out.iter_mut().zip(acc.iter_mut()).zip(add).zip(sub).zip(&sigma)
+                    {
                         *a += ad as f64 - su as f64;
-                    }
-                    for (j, (&a, &sg)) in acc.iter().zip(&sigma).enumerate() {
-                        unsafe { view.write(ti * m + s + j, (a / sg) as f32) };
+                        *o = (*a / sg) as f32;
                     }
                 }
                 if want_state {
@@ -225,34 +249,13 @@ impl FusedCpuBfast {
                         }
                     }
                 }
-            });
-        });
-        // the last-h residual rows, slotted the way the session's ring
-        // expects (stack row r at slot r % h)
-        let ring = want_state.then(|| {
-            let h = p.h;
-            let mut ring = vec![0.0f32; h * m];
-            for row in n_total - h..n_total {
-                let slot = row % h;
-                ring[slot * m..(slot + 1) * m].copy_from_slice(&resid[row * m..(row + 1) * m]);
-            }
-            ring
-        });
-        drop(resid);
-
-        // 5. detect breaks
-        let mut map = BreakMap::zeros(m);
-        times.time(PHASE_DETECT, || {
-            let vb = SyncSlice::new(&mut map.breaks);
-            let vf = SyncSlice::new(&mut map.first);
-            let vm = SyncSlice::new(&mut map.momax);
-            threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
-                let w = e - s;
+                let t1 = Instant::now();
+                // detect: scan the still-hot strip
                 let mut momax = vec![0.0f32; w];
                 let mut first = vec![-1i32; w];
                 for ti in 0..n_mon {
                     let b = self.bound[ti] as f32;
-                    let row = &mo[ti * m + s..ti * m + e];
+                    let row = &strip[ti * w..(ti + 1) * w];
                     for (j, &v) in row.iter().enumerate() {
                         let a = v.abs();
                         if a > momax[j] {
@@ -270,8 +273,32 @@ impl FusedCpuBfast {
                         vm.write(s + j, momax[j]);
                     }
                 }
+                let t2 = Instant::now();
+                mosum_ns.fetch_add((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
+                detect_ns.fetch_add((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
             });
+            started.elapsed()
+        };
+        let (mn, dn) = (mosum_ns.load(Ordering::Relaxed), detect_ns.load(Ordering::Relaxed));
+        let detect_wall = if mn + dn > 0 {
+            pass.mul_f64(dn as f64 / (mn + dn) as f64)
+        } else {
+            std::time::Duration::ZERO
+        };
+        times.add(PHASE_MOSUM, pass.saturating_sub(detect_wall));
+        times.add(PHASE_DETECT, detect_wall);
+        // the last-h residual rows, slotted the way the session's ring
+        // expects (stack row r at slot r % h)
+        let ring = want_state.then(|| {
+            let h = p.h;
+            let mut ring = vec![0.0f32; h * m];
+            for row in n_total - h..n_total {
+                let slot = row % h;
+                ring[slot * m..(slot + 1) * m].copy_from_slice(&resid[row * m..(row + 1) * m]);
+            }
+            ring
         });
+        drop(resid);
         let state = want_state.then(|| RollingState {
             beta: beta.expect("beta retained"),
             sigma_denom: sigma_state,

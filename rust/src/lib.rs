@@ -151,6 +151,7 @@
 
 pub mod api;
 pub mod b64;
+pub mod bench;
 pub mod bench_support;
 pub mod cli;
 pub mod coordinator;

@@ -4,6 +4,7 @@
 //! JSON the library speaks, `monitor --init` builds a `SessionInit`.
 
 use bfast::api::{self, JobHandle};
+use bfast::bench;
 use bfast::cli::Command;
 use bfast::error::{bail, ensure, Result};
 use bfast::coordinator::{BfastRunner, RunnerConfig};
@@ -42,6 +43,8 @@ COMMANDS:
   client        talk to a running server (health | submit | cancel | ingest | ...)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
+  bench         perf trajectory: run the pinned fig2/fig3 scenarios,
+                diff two reports, validate report JSON, tune m_chunk
 ";
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -60,6 +63,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "client" => cmd_client(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
+        "bench" => cmd_bench(rest),
         "--help" | "-h" | "help" => {
             print!("{TOPLEVEL}");
             Ok(())
@@ -792,5 +796,127 @@ fn cmd_lambda(args: &[String]) -> Result<()> {
         .map(|s| s.trim().parse().map_err(|_| bfast::err!("bad h/n {s:?}")))
         .collect::<Result<_>>()?;
     print!("{}", bfast::lambda::table(m.f64("horizon")?, &alphas, &hfracs)?);
+    Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "bench",
+        "perf trajectory harness\n\nACTIONS:\n  run                 measure the pinned scenarios (default action)\n  diff BASE.json NEW.json\n                      compare two reports (NEW relative to BASE)\n  check FILE.json...  validate schema + canonical round-trip\n  tune                measure m_chunk candidates on the emulated engine",
+    )
+    .opt("out", "", "run: write the report JSON here")
+    .opt("scale", "0", "run: workload scale; 0 = BFAST_BENCH_SCALE (default 1.0)")
+    .opt("trials", "5", "run/tune: measured trials per engine")
+    .opt("warmup", "1", "run: unmeasured warmup runs per engine")
+    .opt("scenarios", "", "run: comma-separated scenario filter (e.g. fig2)")
+    .opt("engines", "", "run: comma-separated engine filter (e.g. fused-cpu,emulated)")
+    .opt(
+        "fail-threshold",
+        "0",
+        "diff: fail when a pair is more than this fraction slower (0 = report only)",
+    )
+    .opt("m", "4096", "tune: pixel count for tuning runs")
+    .opt("candidates", "", "tune: comma-separated m_chunk candidates (default built-in set)");
+    let m = cmd.parse(args)?;
+    let action = m.positional.first().map(|s| s.as_str()).unwrap_or("run");
+    let csv = |s: &str| -> Vec<String> {
+        s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect()
+    };
+    match action {
+        "run" => {
+            let mut cfg = bench::BenchConfig::default();
+            let scale = m.f64("scale")?;
+            if scale > 0.0 {
+                cfg.scale = scale;
+            }
+            cfg.trials = m.usize("trials")?.max(1);
+            cfg.warmup = m.usize("warmup")?;
+            cfg.scenarios = csv(m.str("scenarios")?);
+            cfg.engines = csv(m.str("engines")?);
+            let report = bench::run_all(&cfg)?;
+            print!("{}", report.table());
+            let out = m.str("out")?;
+            if !out.is_empty() {
+                report.save(out)?;
+                println!("wrote {out}");
+            }
+        }
+        "diff" => {
+            ensure!(
+                m.positional.len() == 3,
+                "usage: bfast bench diff BASE.json NEW.json\n\n{}",
+                cmd.usage()
+            );
+            let base = bench::BenchReport::load(&m.positional[1])?;
+            let new = bench::BenchReport::load(&m.positional[2])?;
+            if base.fingerprint.source != new.fingerprint.source {
+                println!(
+                    "note: comparing across sources ({} vs {})",
+                    base.fingerprint.source, new.fingerprint.source
+                );
+            }
+            let d = bench::diff(&base, &new);
+            print!("{}", d.table());
+            let thr = m.f64("fail-threshold")?;
+            if thr > 0.0 {
+                let regs = d.regressions(thr);
+                ensure!(
+                    regs.is_empty(),
+                    "{} regression(s) beyond {:.1}%: {}",
+                    regs.len(),
+                    thr * 100.0,
+                    regs.iter()
+                        .map(|r| format!("{}/{} {:.2}x", r.scenario, r.engine, r.speedup))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+        }
+        "check" => {
+            ensure!(
+                m.positional.len() >= 2,
+                "usage: bfast bench check FILE.json...\n\n{}",
+                cmd.usage()
+            );
+            for f in &m.positional[1..] {
+                let report = bench::BenchReport::load(f)?;
+                let canon = report.to_json_string();
+                let back = bench::BenchReport::from_json_str(&canon)
+                    .map_err(|e| bfast::err!("{f}: canonical form does not re-parse: {e}"))?;
+                ensure!(
+                    back.to_json_string() == canon,
+                    "{f}: to_json -> from_json is not a fixed point"
+                );
+                println!(
+                    "{f}: ok (schema v{}, {} scenario(s), source {})",
+                    report.version,
+                    report.scenarios.len(),
+                    report.fingerprint.source
+                );
+            }
+        }
+        "tune" => {
+            let raw = m.str("candidates")?;
+            let cands: Vec<usize> = if raw.trim().is_empty() {
+                bench::TUNE_CANDIDATES.to_vec()
+            } else {
+                m.usize_list("candidates")?
+            };
+            let params = BfastParams::paper_synthetic();
+            let pixels = m.usize("m")?;
+            let trials = m.usize("trials")?.max(1);
+            println!(
+                "tuning m_chunk over {cands:?} (m={pixels}, {trials} trial(s), seed {})",
+                bench::TUNE_SEED
+            );
+            let (best, rows) = bench::tune_m_chunk(&params, pixels, &cands, trials)?;
+            for (mc, ns) in &rows {
+                let mark = if *mc == best { "  <-- best" } else { "" };
+                println!("  m_chunk {mc:>6}: median {:>12} ns{mark}", ns);
+            }
+            println!("best m_chunk for this host: {best}");
+        }
+        other => bail!("unknown bench action {other:?}\n\n{}", cmd.usage()),
+    }
     Ok(())
 }

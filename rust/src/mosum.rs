@@ -28,9 +28,12 @@ pub fn mosum_process(residuals: &[f64], params: &BfastParams) -> Vec<f64> {
     // initial window: ends at t = n+1 (0-based residuals n-h+1 ..= n)
     let mut acc: f64 = residuals[n + 1 - h..=n].iter().sum();
     out.push(acc / denom);
-    for t in n + 2..=params.n_total {
-        // slide: drop r_{t-h-1}, add r_t   (1-based) — 0-based below
-        acc += residuals[t - 1] - residuals[t - 1 - h];
+    // slide for t = n+2..=N: drop r_{t-h-1}, add r_t (1-based). The
+    // paired iterators walk the 0-based add/sub rows in lock-step with
+    // no per-step indexing; `acc += add - sub` keeps the f64 op order
+    // of the indexed formulation, so values are bit-identical.
+    for (&add, &sub) in residuals[n + 1..].iter().zip(&residuals[n + 1 - h..]) {
+        acc += add - sub;
         out.push(acc / denom);
     }
     out

@@ -138,6 +138,12 @@ impl ExecutorBackend for EmulatedDevice {
             state: None,
         }))
     }
+
+    /// The emulator runs any chunk width: the coordinator may override
+    /// the resolved `m_chunk` (chunk autotuning).
+    fn flexible_chunk(&self) -> bool {
+        true
+    }
 }
 
 /// Design-side state built lazily on the first chunk and reused while

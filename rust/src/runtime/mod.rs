@@ -90,4 +90,14 @@ pub trait ExecutorBackend {
         spec: &ArtifactSpec,
         phased: bool,
     ) -> Result<Box<dyn ChunkExecutor + 'a>>;
+
+    /// Whether the backend accepts an arbitrary `m_chunk` after
+    /// [`ExecutorBackend::resolve`]. Shape-specialised AOT artifacts
+    /// (the PJRT path) are compiled for one chunk width and cannot;
+    /// the emulator can run any width. When `true`, the coordinator
+    /// may override the resolved spec's `m_chunk` (e.g. from the
+    /// bench harness's chunk autotuner).
+    fn flexible_chunk(&self) -> bool {
+        false
+    }
 }

@@ -1,0 +1,195 @@
+//! Integration tests for the `bfast bench` harness: the scenario grid
+//! runs end to end at a tiny scale, the emitted report is a canonical
+//! JSON fixed point, `diff` pairs results correctly, the chunk-width
+//! tuner works, and the committed trajectory files stay loadable by
+//! the current schema.
+
+use bfast::bench::{
+    self, BenchConfig, BenchReport, DiffRow, EngineResult, Fingerprint, ScenarioResult,
+    ENGINE_EMULATED, ENGINE_FUSED, SCHEMA_VERSION, SOURCE_HARNESS,
+};
+use bfast::params::BfastParams;
+
+/// Smallest honest config: scale floors m at 16, two exact trials.
+fn tiny_cfg() -> BenchConfig {
+    BenchConfig {
+        scale: 1e-9,
+        warmup: 0,
+        trials: 2,
+        scenarios: vec!["fig2".into()],
+        engines: vec![ENGINE_FUSED.into(), ENGINE_EMULATED.into()],
+    }
+}
+
+#[test]
+fn harness_runs_fig2_and_emits_canonical_json() {
+    let report = bench::run_all(&tiny_cfg()).unwrap();
+    assert_eq!(report.version, SCHEMA_VERSION);
+    assert_eq!(report.fingerprint.source, SOURCE_HARNESS);
+    assert_eq!(report.fingerprint.trials, 2);
+    assert_eq!(report.scenarios.len(), 1);
+
+    let sc = &report.scenarios[0];
+    assert_eq!(sc.scenario, "fig2");
+    assert_eq!(sc.m, 16, "1e-9 scale must clamp to the floor");
+    assert_eq!(sc.n_total, 200);
+    assert_eq!(sc.seed, 42);
+    let names: Vec<&str> = sc.engines.iter().map(|e| e.engine.as_str()).collect();
+    assert_eq!(names, [ENGINE_FUSED, ENGINE_EMULATED]);
+    for er in &sc.engines {
+        assert_eq!(er.trials_ns.len(), 2, "{}: pinned trial count", er.engine);
+        assert!(er.min_ns <= er.median_ns, "{}", er.engine);
+        assert!(er.trials_ns.iter().all(|&t| t > 0), "{}", er.engine);
+    }
+    // the fused engine reports all five pipeline phases
+    let fused = &sc.engines[0];
+    let phases: Vec<&str> = fused.phases_ns.iter().map(|(n, _)| n.as_str()).collect();
+    for want in ["create model", "predictions", "residuals", "mosum", "detect breaks"] {
+        assert!(phases.contains(&want), "missing phase {want:?} in {phases:?}");
+    }
+
+    // canonical form: parse → serialise is a fixed point, and the
+    // parsed value equals the original struct
+    let canon = report.to_json_string();
+    let back = BenchReport::from_json_str(&canon).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.to_json_string(), canon);
+}
+
+#[test]
+fn save_and_load_round_trip_through_a_file() {
+    let report = bench::run_all(&BenchConfig {
+        engines: vec![ENGINE_EMULATED.into()],
+        ..tiny_cfg()
+    })
+    .unwrap();
+    let path = std::env::temp_dir().join("bfast_bench_harness_roundtrip.json");
+    report.save(&path).unwrap();
+    let loaded = BenchReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, report);
+}
+
+#[test]
+fn unknown_scenario_is_rejected_and_full_engine_set_runs() {
+    let err = bench::run_all(&BenchConfig {
+        scenarios: vec!["fig99".into()],
+        ..tiny_cfg()
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("no scenario"), "{err}");
+
+    let err = bench::run_scenario(
+        &bench::scenarios()[0],
+        &BenchConfig { scale: 1e-9, warmup: 0, trials: 1, scenarios: vec![], engines: vec![] },
+    )
+    .map(|_| ())
+    .err();
+    assert!(err.is_none(), "full engine set must run");
+}
+
+fn fake_report(engine: &str, median_ns: u64, m: usize) -> BenchReport {
+    BenchReport {
+        version: SCHEMA_VERSION,
+        fingerprint: Fingerprint {
+            host_threads: 4,
+            cargo_profile: "release".into(),
+            git_rev: "deadbeef0000".into(),
+            scale: 1.0,
+            warmup: 1,
+            trials: 5,
+            source: SOURCE_HARNESS.into(),
+        },
+        scenarios: vec![ScenarioResult {
+            scenario: "fig2".into(),
+            about: "test".into(),
+            m,
+            n_total: 200,
+            n_hist: 100,
+            h: 50,
+            k: 3,
+            seed: 42,
+            engines: vec![EngineResult {
+                engine: engine.into(),
+                trials_ns: vec![median_ns],
+                median_ns,
+                min_ns: median_ns,
+                phases_ns: vec![],
+            }],
+        }],
+    }
+}
+
+#[test]
+fn diff_reports_speedups_and_regressions() {
+    let base = fake_report(ENGINE_FUSED, 2_000_000, 20_000);
+    let new = fake_report(ENGINE_FUSED, 1_000_000, 20_000);
+    let d = bench::diff(&base, &new);
+    assert_eq!(d.missing, Vec::<String>::new());
+    assert_eq!(d.rows.len(), 1);
+    let DiffRow { speedup, base_ns, new_ns, .. } = d.rows[0].clone();
+    assert_eq!((base_ns, new_ns), (2_000_000, 1_000_000));
+    assert!((speedup - 2.0).abs() < 1e-12);
+    assert!(d.regressions(0.05).is_empty(), "a 2x speedup is not a regression");
+
+    // the other direction trips the regression gate
+    let d = bench::diff(&new, &base);
+    assert_eq!(d.regressions(0.05).len(), 1);
+    // ... unless tolerance covers it
+    assert!(d.regressions(1.5).is_empty());
+}
+
+#[test]
+fn diff_flags_unpaired_and_incomparable_results() {
+    let base = fake_report(ENGINE_FUSED, 1_000, 20_000);
+    // engine missing from the new report
+    let new = fake_report(ENGINE_EMULATED, 1_000, 20_000);
+    let d = bench::diff(&base, &new);
+    assert!(d.rows.is_empty());
+    assert!(!d.missing.is_empty());
+
+    // same engine but different m: not comparable
+    let new = fake_report(ENGINE_FUSED, 1_000, 40_000);
+    let d = bench::diff(&base, &new);
+    assert!(d.rows.is_empty());
+    assert!(d.missing.iter().any(|s| s.contains("incomparable")), "{:?}", d.missing);
+}
+
+#[test]
+fn tune_m_chunk_picks_a_candidate_and_measures_all() {
+    let p = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 2.5).unwrap();
+    let (best, rows) = bench::tune_m_chunk(&p, 64, &[16, 64], 1).unwrap();
+    assert_eq!(rows.len(), 2);
+    assert!(rows.iter().any(|&(mc, _)| mc == best));
+    assert!(rows.iter().all(|&(_, ns)| ns > 0));
+}
+
+/// The committed trajectory files must stay readable by the current
+/// schema — this is the contract `bench diff BENCH_PR6_BASELINE.json
+/// BENCH_PR6.json` and future PRs depend on. (Test cwd is `rust/`.)
+#[test]
+fn committed_trajectory_files_are_schema_valid() {
+    for path in ["../BENCH_PR6_BASELINE.json", "../BENCH_PR6.json"] {
+        let report = BenchReport::load(path).unwrap();
+        assert_eq!(report.version, SCHEMA_VERSION, "{path}");
+        assert!(!report.scenarios.is_empty(), "{path}");
+        // measured outside the harness: provenance must say so
+        assert_eq!(report.fingerprint.source, "kernel-replica-c", "{path}");
+        let canon = report.to_json_string();
+        assert_eq!(BenchReport::from_json_str(&canon).unwrap(), report, "{path}");
+    }
+    // and the pair must demonstrate the PR's fig2 fused-CPU speedup
+    let base = BenchReport::load("../BENCH_PR6_BASELINE.json").unwrap();
+    let new = BenchReport::load("../BENCH_PR6.json").unwrap();
+    let d = bench::diff(&base, &new);
+    let fused = d
+        .rows
+        .iter()
+        .find(|r| r.scenario == "fig2" && r.engine == ENGINE_FUSED)
+        .expect("fig2 fused-cpu pair present");
+    assert!(
+        fused.speedup >= 1.3,
+        "pinned trajectory: fig2 fused-cpu must show >= 1.3x (got {:.2}x)",
+        fused.speedup
+    );
+}

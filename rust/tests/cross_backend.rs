@@ -90,3 +90,61 @@ fn detection_quality_matches_ground_truth_through_the_pipeline() {
     assert_eq!(tpr, 1.0, "all injected breaks found");
     assert!(fpr < 0.2, "fpr {fpr}");
 }
+
+/// The optimised engines must agree **bitwise** — not just within
+/// tolerance — regardless of how the coordinator slices the pixel
+/// axis. Chunk geometry is pure bookkeeping: each pixel's arithmetic
+/// is independent, so the tiled GEMM, the fused MOSUM+detect pass and
+/// the emulated device path may not let tile or chunk boundaries leak
+/// into the results. Uses a fig2-shaped scene with an f32-exact λ so
+/// the emulated backend's f32 λ round-trip is lossless.
+#[test]
+fn optimized_engines_agree_bitwise_across_chunk_geometries() {
+    use bfast::runtime::EmulatedDevice;
+
+    let p = BfastParams::with_lambda(200, 100, 50, 3, 23.0, 0.05, 2.5).unwrap();
+    let m = 777usize; // not a multiple of anything interesting
+    let data = ArtificialDataset::new(p.clone(), m, 42).generate();
+
+    let (cpu_map, _) = FusedCpuBfast::new(p.clone(), &data.stack.time_axis)
+        .unwrap()
+        .run(&data.stack)
+        .unwrap();
+
+    // the f64 per-pixel reference stays within the usual tolerance
+    let direct_map = DirectBfast::new(p.clone(), &data.stack.time_axis)
+        .unwrap()
+        .run(&data.stack)
+        .unwrap();
+    let mism = mismatches(&cpu_map.breaks, &direct_map.breaks);
+    assert!(mism as f64 <= 0.001 * m as f64, "cpu vs direct: {mism} flips");
+
+    // chunk widths straddling m, the default, and an odd width
+    for mc in [64usize, 301, 1024] {
+        let runner = BfastRunner::new(
+            Box::new(EmulatedDevice::new().with_m_chunk(mc)),
+            RunnerConfig::default(),
+        )
+        .unwrap();
+        let res = runner.run(&data.stack, &p).unwrap();
+        assert_eq!(res.map.breaks, cpu_map.breaks, "m_chunk={mc}: breaks");
+        assert_eq!(res.map.first, cpu_map.first, "m_chunk={mc}: first");
+        for (i, (a, b)) in res.map.momax.iter().zip(&cpu_map.momax).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "m_chunk={mc} px {i}: momax bits");
+        }
+    }
+
+    // the RunnerConfig override path must be equally invisible
+    let runner = BfastRunner::emulated(RunnerConfig {
+        m_chunk: Some(97),
+        ..Default::default()
+    })
+    .unwrap();
+    let res = runner.run(&data.stack, &p).unwrap();
+    assert_eq!(res.chunks, m.div_ceil(97), "override reaches the chunk plan");
+    assert_eq!(res.map.breaks, cpu_map.breaks, "m_chunk override: breaks");
+    assert_eq!(res.map.first, cpu_map.first, "m_chunk override: first");
+    for (i, (a, b)) in res.map.momax.iter().zip(&cpu_map.momax).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "override px {i}: momax bits");
+    }
+}

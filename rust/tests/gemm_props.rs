@@ -1,0 +1,178 @@
+//! Property suite pinning the tiled GEMM micro-kernel (`linalg::gemm`)
+//! to the naive triple-loop oracle — **bitwise**, not approximately.
+//!
+//! The tiled kernel (MR=4 row micro-tile, KC k-blocking, NC column
+//! panels) is only allowed to reorder *which* C elements are touched
+//! when; per element the k-updates must apply in increasing-p order
+//! with the seed's zero-skip (`av == 0.0` skips the whole row update,
+//! so `-0.0` is skipped and NaN `av` is not), each as a plain
+//! f32 mul-then-add. That invariant makes every result bit-identical
+//! to this oracle, which is what the engine-equivalence tests and the
+//! monitor/shard bit-exactness contracts rest on.
+
+use bfast::linalg::gemm::{par_sgemm, sgemm, sgemm_acc};
+use bfast::propcheck::{property, Gen};
+
+/// The semantic contract spelled as the obvious triple loop.
+fn oracle(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Matrix fill biased toward the values the zero-skip cares about:
+/// ~25% exact 0.0 plus -0.0 / NaN / ±inf spikes among ordinary finite
+/// entries.
+fn special_matrix(g: &mut Gen, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match g.u32(0..=19) {
+            0..=4 => 0.0,
+            5 => -0.0,
+            6 => f32::NAN,
+            7 => f32::INFINITY,
+            8 => f32::NEG_INFINITY,
+            _ => g.f64(-2.0, 2.0) as f32,
+        })
+        .collect()
+}
+
+/// Deterministic variant for the fixed tile-boundary shapes.
+fn det_matrix(len: usize, salt: u64) -> Vec<f32> {
+    let mut s = salt.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let r = (s >> 33) as u32;
+            match r % 16 {
+                0 | 1 | 2 => 0.0,
+                3 => -0.0,
+                4 => f32::NAN,
+                5 => f32::INFINITY,
+                _ => ((r % 1000) as f32 - 500.0) / 250.0,
+            }
+        })
+        .collect()
+}
+
+/// Bit-level view (NaN-safe equality).
+fn bits(c: &[f32]) -> Vec<u32> {
+    c.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn sgemm_matches_oracle_bitwise_over_random_shapes() {
+    property("sgemm = oracle (bitwise)", 60, |g| {
+        let (m, k, n) = (g.usize(1..=40), g.usize(1..=260), g.usize(1..=70));
+        let a = special_matrix(g, m * k);
+        let b = special_matrix(g, k * n);
+        let mut got = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut got);
+        let mut want = vec![0.0f32; m * n];
+        oracle(m, k, n, &a, &b, &mut want);
+        if bits(&got) != bits(&want) {
+            return Err(format!("m={m} k={k} n={n}: tiled kernel diverges from oracle"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sgemm_acc_accumulates_onto_prefill_bitwise() {
+    property("sgemm_acc = oracle over prefilled C", 40, |g| {
+        let (m, k, n) = (g.usize(1..=24), g.usize(1..=140), g.usize(1..=48));
+        let a = special_matrix(g, m * k);
+        let b = special_matrix(g, k * n);
+        let prefill: Vec<f32> = (0..m * n).map(|_| g.f64(-1.0, 1.0) as f32).collect();
+        let mut got = prefill.clone();
+        sgemm_acc(m, k, n, &a, &b, &mut got);
+        let mut want = prefill;
+        oracle(m, k, n, &a, &b, &mut want);
+        if bits(&got) != bits(&want) {
+            return Err(format!("m={m} k={k} n={n}: acc variant diverges from oracle"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn par_sgemm_is_bitwise_deterministic_across_thread_counts() {
+    property("par_sgemm bitwise == serial for any thread count", 25, |g| {
+        let (m, k, n) = (g.usize(1..=60), g.usize(1..=100), g.usize(1..=40));
+        let a = special_matrix(g, m * k);
+        let b = special_matrix(g, k * n);
+        let mut serial = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut serial);
+        let want = bits(&serial);
+        for threads in [1usize, 2, 3, 5, 8] {
+            let mut par = vec![0.0f32; m * n];
+            par_sgemm(threads, m, k, n, &a, &b, &mut par);
+            if bits(&par) != want {
+                return Err(format!("m={m} k={k} n={n} threads={threads}: parallel differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every edge the tiling can get wrong: shapes straddling the MR=4 row
+/// micro-tile, the KC=128 k-block, and small odd primes of each.
+#[test]
+fn tile_boundary_shapes_match_oracle() {
+    let mut salt = 0u64;
+    for &k in &[1usize, 13, 127, 128, 129] {
+        for &m in &[1usize, 3, 4, 5, 7, 13] {
+            for &n in &[1usize, 31] {
+                salt += 1;
+                let a = det_matrix(m * k, salt);
+                let b = det_matrix(k * n, salt ^ 0xabcd);
+                let mut got = vec![0.0f32; m * n];
+                sgemm(m, k, n, &a, &b, &mut got);
+                let mut want = vec![0.0f32; m * n];
+                oracle(m, k, n, &a, &b, &mut want);
+                assert_eq!(bits(&got), bits(&want), "m={m} k={k} n={n}");
+            }
+        }
+    }
+}
+
+/// Shapes straddling the NC=4096 serial column panel.
+#[test]
+fn column_panel_boundaries_match_oracle() {
+    for &n in &[4095usize, 4096, 4097] {
+        let (m, k) = (5usize, 7usize);
+        let a = det_matrix(m * k, n as u64);
+        let b = det_matrix(k * n, (n as u64) << 1);
+        let mut got = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut got);
+        let mut want = vec![0.0f32; m * n];
+        oracle(m, k, n, &a, &b, &mut want);
+        assert_eq!(bits(&got), bits(&want), "n={n}");
+    }
+}
+
+/// Shapes straddling the 2048-column parallel panel of `par_sgemm`.
+#[test]
+fn parallel_panel_boundaries_match_serial() {
+    for &n in &[2047usize, 2048, 2049] {
+        let (m, k) = (6usize, 5usize);
+        let a = det_matrix(m * k, n as u64 ^ 0x55);
+        let b = det_matrix(k * n, n as u64 ^ 0xaa);
+        let mut serial = vec![0.0f32; m * n];
+        sgemm(m, k, n, &a, &b, &mut serial);
+        for threads in [2usize, 4] {
+            let mut par = vec![0.0f32; m * n];
+            par_sgemm(threads, m, k, n, &a, &b, &mut par);
+            assert_eq!(bits(&par), bits(&serial), "n={n} threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Known-answer vectors for the MOSUM kernels (`bfast::mosum`) plus
+//! the NaN contracts the fused engine relies on. Fixtures use exactly
+//! representable values (small integers, powers of two) so every
+//! assertion can be **bitwise** — these pins are what lets the
+//! optimised engine loops be rewritten without moving a single ulp.
+
+use bfast::cpu::FusedCpuBfast;
+use bfast::mosum::{
+    boundary, boundary_at, mosum_process, rolling_step, scan_breaks, sigma_hat,
+    window_matrix_f32, BreakScan,
+};
+use bfast::params::BfastParams;
+use bfast::raster::TimeStack;
+use bfast::synth::ArtificialDataset;
+
+/// N=12, n=8, h=4, k=1 (p=4, dof=4, 4 monitor steps) — small enough
+/// to hand-compute every window.
+fn tiny() -> BfastParams {
+    BfastParams::with_lambda(12, 8, 4, 1, 4.0, 0.05, 2.0).unwrap()
+}
+
+#[test]
+fn mosum_process_hand_computed_integer_fixture() {
+    let p = tiny();
+    // residuals r_1..r_12 = 1..12 (exact in f64)
+    let r: Vec<f64> = (1..=12).map(|v| v as f64).collect();
+
+    // σ̂ = sqrt(Σ_{1..8} v² / dof) = sqrt(204/4)
+    let want_sigma = (204.0f64 / 4.0).sqrt();
+    assert_eq!(sigma_hat(&r, &p).to_bits(), want_sigma.to_bits());
+
+    // window sums of h=4 ending at t=9..12: 6+7+8+9=30, then rolling
+    // +10-6, +11-7, +12-8 → 34, 38, 42. All integers → the rolling
+    // accumulator is exact and the only rounding is the final divide.
+    let denom = want_sigma * 8.0f64.sqrt();
+    let mo = mosum_process(&r, &p);
+    assert_eq!(mo.len(), 4);
+    for (got, want_sum) in mo.iter().zip([30.0f64, 34.0, 38.0, 42.0]) {
+        assert_eq!(got.to_bits(), (want_sum / denom).to_bits());
+    }
+}
+
+#[test]
+fn rolling_step_binary_fixture_and_truncation() {
+    // all powers of two: no rounding anywhere
+    let mut acc = 1.5f64;
+    let got = rolling_step(&mut acc, 2.0, 0.25, 0.5);
+    assert_eq!(acc, 1.25);
+    assert_eq!(got, 0.625f32);
+
+    // the f64 accumulator absorbs f32 inputs exactly
+    let mut acc = 0.0f64;
+    let got = rolling_step(&mut acc, 1.0, 3.0, 1.0);
+    assert_eq!(acc, 2.0);
+    assert_eq!(got, 2.0f32);
+}
+
+#[test]
+fn rolling_step_nan_poisons_the_accumulator_for_good() {
+    let mut acc = 1.0f64;
+    let got = rolling_step(&mut acc, 2.0, f32::NAN, 0.5);
+    assert!(got.is_nan());
+    assert!(acc.is_nan());
+    // finite later updates cannot un-poison it — this is what makes a
+    // NaN residual inside the ring suppress every later window
+    let got = rolling_step(&mut acc, 2.0, 1.0, 1.0);
+    assert!(got.is_nan() && acc.is_nan());
+}
+
+#[test]
+fn boundary_at_pins_both_log_plus_branches() {
+    let p = BfastParams::with_lambda(300, 100, 50, 3, 23.0, 0.05, 2.5).unwrap();
+    // t/n ≤ e → log₊ = 1 → boundary is exactly λ
+    assert_eq!(boundary_at(&p, 0).to_bits(), 2.5f64.to_bits());
+    // t = 272 → t/n = 2.72 > e → λ·sqrt(ln(t/n))
+    let want = 2.5 * (272.0f64 / 100.0).ln().sqrt();
+    assert_eq!(boundary_at(&p, 171).to_bits(), want.to_bits());
+    // the vector form shares the kernel bit-for-bit
+    let b = boundary(&p);
+    assert_eq!(b.len(), p.n_monitor());
+    assert_eq!(b[0].to_bits(), boundary_at(&p, 0).to_bits());
+    assert_eq!(b[171].to_bits(), boundary_at(&p, 171).to_bits());
+}
+
+#[test]
+fn scan_breaks_known_vectors() {
+    // crossing at index 1; momax from a non-crossing later value
+    let s = scan_breaks(&[1.0, -3.0, 2.0, -3.5], &[2.0, 2.0, 4.0, 4.0]);
+    assert_eq!(s, BreakScan { has_break: true, first: 1, momax: 3.5 });
+
+    // touching the boundary is not a crossing (strict >)
+    let s = scan_breaks(&[2.0], &[2.0]);
+    assert_eq!(s, BreakScan { has_break: false, first: -1, momax: 2.0 });
+
+    // empty monitor period
+    let s = scan_breaks(&[], &[]);
+    assert_eq!(s, BreakScan { has_break: false, first: -1, momax: 0.0 });
+}
+
+#[test]
+fn scan_breaks_nan_never_crosses_or_scores() {
+    // NaN compares false against both the boundary and the running
+    // max, so a NaN-laden process can still break on its finite values
+    let s = scan_breaks(&[f64::NAN, 3.0], &[2.0, 2.0]);
+    assert_eq!(s, BreakScan { has_break: true, first: 1, momax: 3.0 });
+
+    // ... and an all-NaN process reports no break at all
+    let s = scan_breaks(&[f64::NAN, f64::NAN], &[2.0, 2.0]);
+    assert_eq!(s, BreakScan { has_break: false, first: -1, momax: 0.0 });
+}
+
+#[test]
+fn nan_inside_the_monitor_ring_suppresses_later_windows_only() {
+    let p = tiny();
+    let mut r: Vec<f64> = (1..=12).map(|v| v as f64).collect();
+    r[10] = f64::NAN; // r_11, inside the monitor period
+    let mo = mosum_process(&r, &p);
+    // windows ending at t=9,10 predate the NaN
+    assert!(mo[0].is_finite() && mo[1].is_finite());
+    // every window containing r_11 is poisoned
+    assert!(mo[2].is_nan() && mo[3].is_nan());
+}
+
+#[test]
+fn all_nan_pixel_reports_no_break_end_to_end() {
+    let p = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 2.5).unwrap();
+    let data = ArtificialDataset::new(p.clone(), 64, 9).generate();
+    let mut stack = TimeStack::from_vec(
+        data.stack.n_times(),
+        data.stack.n_pixels(),
+        data.stack.data().to_vec(),
+    )
+    .unwrap();
+    let m = stack.n_pixels();
+    for t in 0..stack.n_times() {
+        stack.layer_mut(t)[5] = f32::NAN; // pixel 5: nothing but gaps
+    }
+    let engine = FusedCpuBfast::new(p, &stack.time_axis).unwrap();
+    let (map, _) = engine.run(&stack).unwrap();
+    assert_eq!(map.breaks[5], 0, "all-NaN pixel must not break");
+    assert_eq!(map.first[5], -1);
+    // neighbours are untouched by the poisoned pixel
+    let (clean, _) = engine.run(&data.stack).unwrap();
+    for px in (0..m).filter(|&px| px != 5) {
+        assert_eq!(map.breaks[px], clean.breaks[px], "pixel {px}");
+        assert_eq!(map.momax[px].to_bits(), clean.momax[px].to_bits(), "pixel {px}");
+    }
+}
+
+#[test]
+fn window_matrix_exact_band_structure() {
+    // N=6, n=4, h=2 → 2 monitor rows; row i has ones at columns
+    // n+i-h+1 ..= n+i
+    let w = window_matrix_f32(6, 4, 2);
+    #[rustfmt::skip]
+    let want: Vec<f32> = vec![
+        0.0, 0.0, 0.0, 1.0, 1.0, 0.0,
+        0.0, 0.0, 0.0, 0.0, 1.0, 1.0,
+    ];
+    assert_eq!(w, want);
+}

@@ -1,0 +1,494 @@
+/* kernel_replica.c — measured provenance for BENCH_PR6_BASELINE.json
+ * and BENCH_PR6.json.
+ *
+ * The repo's CI runners are too noisy (and too varied) to pin absolute
+ * numbers, so the committed perf-trajectory files are measured with
+ * this standalone C replica of the two kernel formulations the PR
+ * changes, compiled the way rustc compiles the Rust loops:
+ *
+ *     gcc -O3 -ffp-contract=off -o kernel_replica kernel_replica.c -lm
+ *
+ * (-ffp-contract=off because the Rust kernels never fuse mul+add; no
+ * -ffast-math because the NaN/zero-skip semantics are load-bearing.)
+ *
+ * "seed" mirrors the pre-PR kernels line for line:
+ *   - GEMM: per-row ikj, KC=128 k-blocking, zero-skip, 2048-col panels
+ *     (par_sgemm with one thread);
+ *   - MOSUM: two passes — phase 4 materialises the full n_mon × m f32
+ *     MOSUM matrix (per 512-pixel block: sigma, initial window,
+ *     rolling accumulator advance + row write), phase 5 re-reads that
+ *     matrix to scan boundaries.
+ *
+ * "opt" mirrors the post-PR kernels:
+ *   - GEMM: MR=4 register tile sharing each streamed B row across four
+ *     C rows (fast path when all four A values are nonzero, per-row
+ *     skip otherwise), scalar tail, same KC/panel blocking;
+ *   - MOSUM: fused — each 512-pixel block rolls its statistics into a
+ *     block-local n_mon × w strip and scans it for breaks while hot;
+ *     the scene-wide MOSUM matrix never materialises.
+ *
+ * Before timing anything the program proves the two formulations are
+ * bit-identical (memcmp on raw f32/i32 output, NaN / -0.0 / exact-zero
+ * laden inputs included) — the same contract rust/tests/gemm_props.rs
+ * and tests/cross_backend.rs enforce on the Rust side.
+ *
+ * Then it times the full five-phase fig2 (m=20000) and fig3 (m=50000)
+ * fused-CPU pipelines for both variants: 1 warmup + 5 trials,
+ * per-phase nanoseconds, single core. Output lines are parsed by
+ * tools/make_bench_json.py into the committed reports.
+ */
+
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define KC 128
+#define MR 4
+#define PANEL 2048 /* par_sgemm column panel */
+#define BLOCK 512  /* MOSUM pixel-block width */
+
+static uint64_t now_ns(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (uint64_t)ts.tv_sec * 1000000000ull + (uint64_t)ts.tv_nsec;
+}
+
+/* --- deterministic data (LCG; fixed seeds, like the Rust Pcg32 use) -- */
+
+static uint64_t rng_state = 42;
+static uint32_t rnd32(void) {
+    rng_state = rng_state * 6364136223846793005ull + 1442695040888963407ull;
+    return (uint32_t)(rng_state >> 33);
+}
+static float frand(float lo, float hi) {
+    return lo + (hi - lo) * ((float)(rnd32() & 0xffffff) / 16777216.0f);
+}
+
+/* ------------------------- GEMM: seed kernel ------------------------ */
+/* per-row ikj with KC blocking and the av == 0.0f skip; one column
+ * panel [j0, j0+nb) of C. */
+static void gemm_cols_seed(int m, int k, int n, const float *a, const float *b,
+                           float *c, int j0, int nb) {
+    for (int i = 0; i < m; i++) {
+        float *crow = &c[(size_t)i * n + j0];
+        for (int j = 0; j < nb; j++) crow[j] = 0.0f;
+        for (int pc = 0; pc < k; pc += KC) {
+            int kb = k - pc < KC ? k - pc : KC;
+            const float *arow = &a[(size_t)i * k + pc];
+            for (int p = 0; p < kb; p++) {
+                float av = arow[p];
+                if (av == 0.0f) continue;
+                const float *brow = &b[(size_t)(pc + p) * n + j0];
+                for (int j = 0; j < nb; j++) crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/* ---------------------- GEMM: optimised kernel ---------------------- */
+/* MR=4 micro-tile: four C rows share every streamed B row; fast path
+ * when all four A values are nonzero, per-row zero-skip otherwise;
+ * scalar tail identical to the seed row loop. */
+static void gemm_cols_opt(int m, int k, int n, const float *a, const float *b,
+                          float *c, int j0, int nb) {
+    int i = 0;
+    while (i < m) {
+        if (i + MR > m) {
+            for (int r = i; r < m; r++) {
+                float *crow = &c[(size_t)r * n + j0];
+                for (int j = 0; j < nb; j++) crow[j] = 0.0f;
+                for (int pc = 0; pc < k; pc += KC) {
+                    int kb = k - pc < KC ? k - pc : KC;
+                    const float *arow = &a[(size_t)r * k + pc];
+                    for (int p = 0; p < kb; p++) {
+                        float av = arow[p];
+                        if (av == 0.0f) continue;
+                        const float *brow = &b[(size_t)(pc + p) * n + j0];
+                        for (int j = 0; j < nb; j++) crow[j] += av * brow[j];
+                    }
+                }
+            }
+            break;
+        }
+        float *c0 = &c[(size_t)(i + 0) * n + j0];
+        float *c1 = &c[(size_t)(i + 1) * n + j0];
+        float *c2 = &c[(size_t)(i + 2) * n + j0];
+        float *c3 = &c[(size_t)(i + 3) * n + j0];
+        for (int j = 0; j < nb; j++) c0[j] = c1[j] = c2[j] = c3[j] = 0.0f;
+        for (int pc = 0; pc < k; pc += KC) {
+            int kb = k - pc < KC ? k - pc : KC;
+            const float *a0 = &a[(size_t)(i + 0) * k + pc];
+            const float *a1 = &a[(size_t)(i + 1) * k + pc];
+            const float *a2 = &a[(size_t)(i + 2) * k + pc];
+            const float *a3 = &a[(size_t)(i + 3) * k + pc];
+            for (int p = 0; p < kb; p++) {
+                float v0 = a0[p], v1 = a1[p], v2 = a2[p], v3 = a3[p];
+                const float *brow = &b[(size_t)(pc + p) * n + j0];
+                if (v0 != 0.0f && v1 != 0.0f && v2 != 0.0f && v3 != 0.0f) {
+                    for (int j = 0; j < nb; j++) {
+                        float bv = brow[j];
+                        c0[j] += v0 * bv;
+                        c1[j] += v1 * bv;
+                        c2[j] += v2 * bv;
+                        c3[j] += v3 * bv;
+                    }
+                } else {
+                    float *cr[MR] = {c0, c1, c2, c3};
+                    float vv[MR] = {v0, v1, v2, v3};
+                    for (int r = 0; r < MR; r++) {
+                        float v = vv[r];
+                        if (v == 0.0f) continue;
+                        float *crow = cr[r];
+                        for (int j = 0; j < nb; j++) crow[j] += v * brow[j];
+                    }
+                }
+            }
+        }
+        i += MR;
+    }
+}
+
+typedef void (*gemm_cols_fn)(int, int, int, const float *, const float *,
+                             float *, int, int);
+
+/* par_sgemm with one thread: sequential 2048-column panels. */
+static void gemm(gemm_cols_fn f, int m, int k, int n, const float *a,
+                 const float *b, float *c) {
+    for (int j0 = 0; j0 < n; j0 += PANEL) {
+        int nb = n - j0 < PANEL ? n - j0 : PANEL;
+        f(m, k, n, a, b, c, j0, nb);
+    }
+}
+
+/* --------------------------- MOSUM + detect ------------------------- */
+
+typedef struct {
+    int m, n_total, n_hist, h, n_mon, p;
+    double *bound; /* n_mon boundary values */
+} Scene;
+
+/* seed: phase 4 writes the full n_mon × m MOSUM matrix, phase 5
+ * re-reads it.  Returns per-phase ns via out params. */
+static void mosum_detect_seed(const Scene *sc, const float *resid, float *mo,
+                              float *momax, int *first, int *breaks,
+                              uint64_t *mosum_ns, uint64_t *detect_ns) {
+    int m = sc->m, n = sc->n_hist, h = sc->h, n_mon = sc->n_mon;
+    double dof = (double)(n - sc->p);
+    uint64_t t0 = now_ns();
+    for (int s = 0; s < m; s += BLOCK) {
+        int e = s + BLOCK < m ? s + BLOCK : m;
+        int w = e - s;
+        double sigma[BLOCK], acc[BLOCK];
+        for (int j = 0; j < w; j++) sigma[j] = 0.0;
+        for (int t = 0; t < n; t++) {
+            const float *row = &resid[(size_t)t * m + s];
+            for (int j = 0; j < w; j++)
+                sigma[j] += (double)row[j] * (double)row[j];
+        }
+        double sqrt_n = sqrt((double)n);
+        for (int j = 0; j < w; j++) sigma[j] = sqrt(sigma[j] / dof) * sqrt_n;
+        for (int j = 0; j < w; j++) acc[j] = 0.0;
+        for (int t = n + 1 - h; t <= n; t++) {
+            const float *row = &resid[(size_t)t * m + s];
+            for (int j = 0; j < w; j++) acc[j] += (double)row[j];
+        }
+        for (int j = 0; j < w; j++)
+            mo[(size_t)0 * m + s + j] = (float)(acc[j] / sigma[j]);
+        for (int ti = 1; ti < n_mon; ti++) {
+            const float *add = &resid[(size_t)(n + ti) * m + s];
+            const float *sub = &resid[(size_t)(n + ti - h) * m + s];
+            for (int j = 0; j < w; j++)
+                acc[j] += (double)add[j] - (double)sub[j];
+            for (int j = 0; j < w; j++)
+                mo[(size_t)ti * m + s + j] = (float)(acc[j] / sigma[j]);
+        }
+    }
+    uint64_t t1 = now_ns();
+    for (int s = 0; s < m; s += BLOCK) {
+        int e = s + BLOCK < m ? s + BLOCK : m;
+        int w = e - s;
+        float mx[BLOCK];
+        int fs[BLOCK];
+        for (int j = 0; j < w; j++) mx[j] = 0.0f;
+        for (int j = 0; j < w; j++) fs[j] = -1;
+        for (int ti = 0; ti < n_mon; ti++) {
+            float bnd = (float)sc->bound[ti];
+            const float *row = &mo[(size_t)ti * m + s];
+            for (int j = 0; j < w; j++) {
+                float a = fabsf(row[j]);
+                if (a > mx[j]) mx[j] = a;
+                if (fs[j] < 0 && a > bnd) fs[j] = ti;
+            }
+        }
+        for (int j = 0; j < w; j++) {
+            breaks[s + j] = fs[j] >= 0 ? 1 : 0;
+            first[s + j] = fs[j];
+            momax[s + j] = mx[j];
+        }
+    }
+    *mosum_ns = t1 - t0;
+    *detect_ns = now_ns() - t1;
+}
+
+/* opt: fused — block-local strip, detect scans it while cache-hot. */
+static void mosum_detect_opt(const Scene *sc, const float *resid, float *strip,
+                             float *momax, int *first, int *breaks,
+                             uint64_t *mosum_ns, uint64_t *detect_ns) {
+    int m = sc->m, n = sc->n_hist, h = sc->h, n_mon = sc->n_mon;
+    double dof = (double)(n - sc->p);
+    uint64_t mns = 0, dns = 0;
+    for (int s = 0; s < m; s += BLOCK) {
+        uint64_t t0 = now_ns();
+        int e = s + BLOCK < m ? s + BLOCK : m;
+        int w = e - s;
+        double sigma[BLOCK], acc[BLOCK];
+        for (int j = 0; j < w; j++) sigma[j] = 0.0;
+        for (int t = 0; t < n; t++) {
+            const float *row = &resid[(size_t)t * m + s];
+            for (int j = 0; j < w; j++)
+                sigma[j] += (double)row[j] * (double)row[j];
+        }
+        double sqrt_n = sqrt((double)n);
+        for (int j = 0; j < w; j++) sigma[j] = sqrt(sigma[j] / dof) * sqrt_n;
+        for (int j = 0; j < w; j++) acc[j] = 0.0;
+        for (int t = n + 1 - h; t <= n; t++) {
+            const float *row = &resid[(size_t)t * m + s];
+            for (int j = 0; j < w; j++) acc[j] += (double)row[j];
+        }
+        for (int j = 0; j < w; j++)
+            strip[(size_t)0 * w + j] = (float)(acc[j] / sigma[j]);
+        for (int ti = 1; ti < n_mon; ti++) {
+            const float *add = &resid[(size_t)(n + ti) * m + s];
+            const float *sub = &resid[(size_t)(n + ti - h) * m + s];
+            float *out = &strip[(size_t)ti * w];
+            for (int j = 0; j < w; j++) {
+                acc[j] += (double)add[j] - (double)sub[j];
+                out[j] = (float)(acc[j] / sigma[j]);
+            }
+        }
+        uint64_t t1 = now_ns();
+        float mx[BLOCK];
+        int fs[BLOCK];
+        for (int j = 0; j < w; j++) mx[j] = 0.0f;
+        for (int j = 0; j < w; j++) fs[j] = -1;
+        for (int ti = 0; ti < n_mon; ti++) {
+            float bnd = (float)sc->bound[ti];
+            const float *row = &strip[(size_t)ti * w];
+            for (int j = 0; j < w; j++) {
+                float a = fabsf(row[j]);
+                if (a > mx[j]) mx[j] = a;
+                if (fs[j] < 0 && a > bnd) fs[j] = ti;
+            }
+        }
+        for (int j = 0; j < w; j++) {
+            breaks[s + j] = fs[j] >= 0 ? 1 : 0;
+            first[s + j] = fs[j];
+            momax[s + j] = mx[j];
+        }
+        uint64_t t2 = now_ns();
+        mns += t1 - t0;
+        dns += t2 - t1;
+    }
+    *mosum_ns = mns;
+    *detect_ns = dns;
+}
+
+/* ------------------------ bitwise validation ------------------------ */
+
+/* special-value-laden fill: exact zeros, -0.0, NaN, ±inf among finite */
+static void fill_special(float *v, size_t len) {
+    for (size_t i = 0; i < len; i++) {
+        uint32_t r = rnd32() % 16;
+        if (r <= 2)
+            v[i] = 0.0f;
+        else if (r == 3)
+            v[i] = -0.0f;
+        else if (r == 4)
+            v[i] = NAN;
+        else if (r == 5)
+            v[i] = INFINITY;
+        else
+            v[i] = frand(-2.0f, 2.0f);
+    }
+}
+
+static int validate_gemm(void) {
+    int shapes[][3] = {{1, 1, 1},    {3, 5, 7},     {4, 128, 31},
+                       {5, 129, 33}, {7, 127, 40},  {8, 100, 2049},
+                       {13, 260, 70}, {6, 5, 2047},  {200, 8, 1031}};
+    int bad = 0;
+    for (size_t s = 0; s < sizeof(shapes) / sizeof(shapes[0]); s++) {
+        int m = shapes[s][0], k = shapes[s][1], n = shapes[s][2];
+        float *a = malloc((size_t)m * k * sizeof(float));
+        float *b = malloc((size_t)k * n * sizeof(float));
+        float *c1 = malloc((size_t)m * n * sizeof(float));
+        float *c2 = malloc((size_t)m * n * sizeof(float));
+        fill_special(a, (size_t)m * k);
+        fill_special(b, (size_t)k * n);
+        gemm(gemm_cols_seed, m, k, n, a, b, c1);
+        gemm(gemm_cols_opt, m, k, n, a, b, c2);
+        if (memcmp(c1, c2, (size_t)m * n * sizeof(float)) != 0) {
+            printf("VALIDATE gemm m=%d k=%d n=%d MISMATCH\n", m, k, n);
+            bad = 1;
+        }
+        free(a); free(b); free(c1); free(c2);
+    }
+    if (!bad) printf("VALIDATE gemm seed==opt bitwise over %zu shapes ok\n",
+                     sizeof(shapes) / sizeof(shapes[0]));
+    return bad;
+}
+
+static double log_plus(double x) { return x <= M_E ? 1.0 : log(x); }
+
+static Scene make_scene(int m, int n_total, int n_hist, int h, int p,
+                        double lambda) {
+    Scene sc = {m, n_total, n_hist, h, n_total - n_hist, p, NULL};
+    sc.bound = malloc((size_t)sc.n_mon * sizeof(double));
+    for (int ti = 0; ti < sc.n_mon; ti++) {
+        double t = (double)(n_hist + ti + 1);
+        sc.bound[ti] = lambda * sqrt(log_plus(t / (double)n_hist));
+    }
+    return sc;
+}
+
+static int validate_mosum(void) {
+    Scene sc = make_scene(1337, 200, 100, 50, 8, 2.5);
+    size_t rm = (size_t)sc.n_total * sc.m;
+    float *resid = malloc(rm * sizeof(float));
+    for (size_t i = 0; i < rm; i++) resid[i] = frand(-1.5f, 1.5f);
+    /* NaN gaps: a few all-NaN pixels and scattered single-layer gaps */
+    for (int t = 0; t < sc.n_total; t++) resid[(size_t)t * sc.m + 7] = NAN;
+    for (int g = 0; g < 500; g++)
+        resid[((size_t)(rnd32() % sc.n_total)) * sc.m + rnd32() % sc.m] = NAN;
+
+    float *mo = malloc((size_t)sc.n_mon * sc.m * sizeof(float));
+    float *strip = malloc((size_t)sc.n_mon * BLOCK * sizeof(float));
+    float *mx1 = malloc(sc.m * sizeof(float)), *mx2 = malloc(sc.m * sizeof(float));
+    int *f1 = malloc(sc.m * sizeof(int)), *f2 = malloc(sc.m * sizeof(int));
+    int *b1 = malloc(sc.m * sizeof(int)), *b2 = malloc(sc.m * sizeof(int));
+    uint64_t x, y;
+    mosum_detect_seed(&sc, resid, mo, mx1, f1, b1, &x, &y);
+    mosum_detect_opt(&sc, resid, strip, mx2, f2, b2, &x, &y);
+    int bad = memcmp(mx1, mx2, sc.m * sizeof(float)) ||
+              memcmp(f1, f2, sc.m * sizeof(int)) ||
+              memcmp(b1, b2, sc.m * sizeof(int));
+    printf(bad ? "VALIDATE mosum seed vs opt MISMATCH\n"
+               : "VALIDATE mosum seed==opt bitwise (momax/first/breaks, NaN-laden) ok\n");
+    free(resid); free(mo); free(strip);
+    free(mx1); free(mx2); free(f1); free(f2); free(b1); free(b2);
+    free(sc.bound);
+    return bad;
+}
+
+/* ------------------------- pipeline timing -------------------------- */
+
+typedef struct {
+    uint64_t model, predict, resid, mosum, detect;
+} PhaseNs;
+
+static void run_pipeline(int variant_opt, const Scene *sc, const float *y,
+                         const float *mmat, const float *xt, PhaseNs *ph) {
+    int m = sc->m, N = sc->n_total, n = sc->n_hist, p = sc->p;
+    gemm_cols_fn f = variant_opt ? gemm_cols_opt : gemm_cols_seed;
+
+    float *beta = malloc((size_t)p * m * sizeof(float));
+    float *yhat = malloc((size_t)N * m * sizeof(float));
+
+    uint64_t t0 = now_ns();
+    gemm(f, p, n, m, mmat, y, beta); /* create model: uses Y[:n] rows */
+    uint64_t t1 = now_ns();
+    gemm(f, N, p, m, xt, beta, yhat); /* predictions */
+    uint64_t t2 = now_ns();
+    float *resid = yhat; /* reuse, like the Rust engine */
+    for (size_t i = 0; i < (size_t)N * m; i++) resid[i] = y[i] - resid[i];
+    uint64_t t3 = now_ns();
+
+    float *momax = malloc(m * sizeof(float));
+    int *first = malloc(m * sizeof(int));
+    int *breaks = malloc(m * sizeof(int));
+    uint64_t mns, dns;
+    if (variant_opt) {
+        float *strip = malloc((size_t)sc->n_mon * BLOCK * sizeof(float));
+        mosum_detect_opt(sc, resid, strip, momax, first, breaks, &mns, &dns);
+        free(strip);
+    } else {
+        float *mo = malloc((size_t)sc->n_mon * m * sizeof(float));
+        mosum_detect_seed(sc, resid, mo, momax, first, breaks, &mns, &dns);
+        free(mo);
+    }
+    ph->model = t1 - t0;
+    ph->predict = t2 - t1;
+    ph->resid = t3 - t2;
+    ph->mosum = mns;
+    ph->detect = dns;
+    free(beta); free(yhat); free(momax); free(first); free(breaks);
+}
+
+static void time_scenario(const char *name, int m) {
+    /* paper_synthetic: N=200 n=100 h=50 k=3 → p = 2 + 2k = 8 */
+    int N = 200, n = 100, h = 50, k = 3, p = 2 + 2 * k;
+    Scene sc = make_scene(m, N, n, h, p, 2.5);
+
+    /* seasonal scene + noise + NaN gaps, like ArtificialDataset */
+    rng_state = 42;
+    float *y = malloc((size_t)N * m * sizeof(float));
+    for (int t = 0; t < N; t++) {
+        float tv = (float)(t + 1);
+        for (int j = 0; j < m; j++) {
+            float s = sinf(2.0f * (float)M_PI * tv / 23.0f + (float)(j % 7));
+            y[(size_t)t * m + j] = s + frand(-0.3f, 0.3f);
+        }
+    }
+    for (int g = 0; g < m / 20; g++) /* ~5% of pixels get one gap */
+        y[((size_t)(rnd32() % N)) * m + rnd32() % m] = NAN;
+
+    /* design-shaped operands: M (p × n), Xᵀ (N × p) with intercept 1 */
+    float *mmat = malloc((size_t)p * n * sizeof(float));
+    for (size_t i = 0; i < (size_t)p * n; i++) mmat[i] = frand(-0.1f, 0.1f);
+    float *xt = malloc((size_t)N * p * sizeof(float));
+    for (int t = 0; t < N; t++) {
+        float tv = (float)(t + 1);
+        xt[(size_t)t * p + 0] = 1.0f;
+        xt[(size_t)t * p + 1] = tv;
+        for (int q = 1; q <= k; q++) {
+            float ang = 2.0f * (float)M_PI * (float)q * tv / 23.0f;
+            xt[(size_t)t * p + 2 * q] = sinf(ang);
+            xt[(size_t)t * p + 2 * q + 1] = cosf(ang);
+        }
+    }
+
+    for (int variant = 0; variant < 2; variant++) {
+        const char *vn = variant ? "opt" : "seed";
+        PhaseNs ph;
+        run_pipeline(variant, &sc, y, mmat, xt, &ph); /* warmup */
+        for (int trial = 0; trial < 5; trial++) {
+            run_pipeline(variant, &sc, y, mmat, xt, &ph);
+            uint64_t total =
+                ph.model + ph.predict + ph.resid + ph.mosum + ph.detect;
+            printf("RESULT variant=%s scenario=%s m=%d trial=%d "
+                   "model=%llu predict=%llu resid=%llu mosum=%llu "
+                   "detect=%llu total=%llu\n",
+                   vn, name, m, trial, (unsigned long long)ph.model,
+                   (unsigned long long)ph.predict,
+                   (unsigned long long)ph.resid,
+                   (unsigned long long)ph.mosum,
+                   (unsigned long long)ph.detect,
+                   (unsigned long long)total);
+            fflush(stdout);
+        }
+    }
+    free(y); free(mmat); free(xt); free(sc.bound);
+}
+
+int main(void) {
+    if (validate_gemm() || validate_mosum()) {
+        fprintf(stderr, "bitwise validation FAILED — refusing to time\n");
+        return 1;
+    }
+    time_scenario("fig2", 20000);
+    time_scenario("fig3", 50000);
+    return 0;
+}

@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Turn `kernel_replica` RESULT lines into the committed trajectory
+reports (BENCH_PR6_BASELINE.json from the seed variant, BENCH_PR6.json
+from the optimised one).
+
+The output is byte-identical to the Rust `BenchReport::save` canonical
+form: `json.dumps(indent=1)` matches the in-tree pretty writer (newline
++ one space per nesting level, `"key": value`), and whole-number floats
+are emitted as ints the way `write_num` does.
+
+Usage: kernel_replica | python3 tools/make_bench_json.py <git_rev> <outdir>
+"""
+
+import json
+import sys
+
+SCENARIOS = {
+    "fig2": {
+        "about": "paper-shaped synthetic scene, implementation comparison",
+        "n_total": 200, "n_hist": 100, "h": 50, "k": 3, "seed": 42,
+    },
+    "fig3": {
+        "about": "per-phase breakdown through the coordinated pipeline",
+        "n_total": 200, "n_hist": 100, "h": 50, "k": 3, "seed": 42,
+    },
+}
+PHASES = [
+    ("model", "create model"),
+    ("predict", "predictions"),
+    ("resid", "residuals"),
+    ("mosum", "mosum"),
+    ("detect", "detect breaks"),
+]
+
+
+def median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2] if len(xs) % 2 else (xs[len(xs) // 2 - 1] + xs[len(xs) // 2]) // 2
+
+
+def main():
+    git_rev, outdir = sys.argv[1], sys.argv[2]
+    # runs[variant][scenario] = {"m": int, "trials": [dict per trial]}
+    runs = {}
+    for line in sys.stdin:
+        if not line.startswith("RESULT "):
+            continue
+        kv = dict(f.split("=", 1) for f in line.split()[1:])
+        sc = runs.setdefault(kv["variant"], {}).setdefault(
+            kv["scenario"], {"m": int(kv["m"]), "trials": []})
+        sc["trials"].append({k: int(kv[k]) for k, _ in PHASES} | {"total": int(kv["total"])})
+
+    out_names = {"seed": "BENCH_PR6_BASELINE.json", "opt": "BENCH_PR6.json"}
+    for variant, fname in out_names.items():
+        scenarios = []
+        for name, meta in SCENARIOS.items():
+            sc = runs[variant][name]
+            totals = [t["total"] for t in sc["trials"]]
+            scenarios.append({
+                "scenario": name,
+                "about": meta["about"],
+                "m": sc["m"],
+                "n_total": meta["n_total"],
+                "n_hist": meta["n_hist"],
+                "h": meta["h"],
+                "k": meta["k"],
+                "seed": meta["seed"],
+                "engines": [{
+                    "engine": "fused-cpu",
+                    "trials_ns": totals,
+                    "median_ns": median(totals),
+                    "min_ns": min(totals),
+                    "phases_ns": {
+                        label: median([t[key] for t in sc["trials"]])
+                        for key, label in PHASES
+                    },
+                }],
+            })
+        report = {
+            "version": 1,
+            "fingerprint": {
+                "host_threads": 1,
+                "cargo_profile": "release",
+                "git_rev": git_rev,
+                "scale": 1,
+                "warmup": 1,
+                "trials": 5,
+                "source": "kernel-replica-c",
+            },
+            "scenarios": scenarios,
+        }
+        path = f"{outdir}/{fname}"
+        with open(path, "w") as f:
+            f.write(json.dumps(report, indent=1) + "\n")
+        fig2 = scenarios[0]["engines"][0]
+        print(f"{path}: fig2 fused-cpu median {fig2['median_ns']} ns")
+
+
+if __name__ == "__main__":
+    main()
