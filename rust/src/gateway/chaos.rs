@@ -1,0 +1,331 @@
+//! Deterministic fault injection for the fleet tests: a TCP forwarder
+//! that sits between a coordinator and one worker and misbehaves *on
+//! command*.
+//!
+//! The gateway's recovery paths — dead worker, slow worker, half-open
+//! connection, black-holed poll — are all triggered by network
+//! behaviour, which ordinary tests can only provoke by racing real
+//! processes. [`ChaosProxy`] makes the network itself scriptable: a
+//! test registers the proxy's address as the worker, lets traffic flow
+//! ([`Mode::Forward`]), and then flips the mode at a chosen moment
+//! (e.g. once the worker reports chunk progress) to murder the link
+//! deterministically:
+//!
+//! * [`Mode::Forward`] — transparent byte pump, both directions.
+//! * [`Mode::Delay`] — forward, but only after holding each new
+//!   connection for a fixed latency (slow ≠ dead).
+//! * [`Mode::Blackhole`] — accept and read, never answer: the
+//!   harshest failure, detectable only by timeout.
+//! * [`Mode::Drop`] — accept and immediately close: a fast, clean
+//!   connection refusal as seen by a keep-alive client.
+//!
+//! [`ChaosProxy::kill_connections`] additionally severs every
+//! *existing* connection (a generation counter each pump thread
+//! watches), so a test can let a submit succeed and then cut the
+//! socket mid-poll — the classic half-open failure.
+//!
+//! The proxy is test infrastructure, but it lives in-tree (not under
+//! `#[cfg(test)]`) so both integration suites (`tests/gateway.rs`,
+//! `tests/chaos.rs`) and any operator who wants to rehearse fleet
+//! failure drills can use it.
+
+use crate::error::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How the proxy treats each **new** connection (sampled at accept).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Transparent forwarding.
+    Forward,
+    /// Hold each new connection this long before forwarding.
+    Delay(Duration),
+    /// Accept, read and discard, never reply.
+    Blackhole,
+    /// Accept and close immediately.
+    Drop,
+}
+
+struct ProxyState {
+    upstream: String,
+    mode: Mutex<Mode>,
+    /// Bumped by [`ChaosProxy::kill_connections`]; pump threads exit
+    /// when the generation moves past the one they were born into.
+    generation: AtomicU64,
+    shutdown: AtomicBool,
+    connections: AtomicUsize,
+}
+
+/// A scriptable TCP forwarder — see the module docs.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    state: Arc<ProxyState>,
+    accept: std::thread::JoinHandle<()>,
+}
+
+/// Pump tick: how often a blocked read re-checks shutdown/generation.
+const TICK: Duration = Duration::from_millis(25);
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port forwarding to `upstream` (in
+    /// [`Mode::Forward`]) and start accepting.
+    pub fn start(upstream: &str) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("binding chaos proxy")?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ProxyState {
+            upstream: upstream.to_string(),
+            mode: Mutex::new(Mode::Forward),
+            generation: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            connections: AtomicUsize::new(0),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                accept_state.connections.fetch_add(1, Ordering::Relaxed);
+                let st = Arc::clone(&accept_state);
+                // one (pair of) thread(s) per connection: test-scale
+                // traffic, no pool needed
+                std::thread::spawn(move || handle(stream, &st));
+            }
+        });
+        Ok(ChaosProxy { addr, state, accept })
+    }
+
+    /// The address tests hand out as "the worker".
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Switch behaviour for **new** connections (existing pumps keep
+    /// flowing — pair with [`ChaosProxy::kill_connections`] to also
+    /// sever what's already open).
+    pub fn set_mode(&self, mode: Mode) {
+        *self.state.mode.lock().unwrap() = mode;
+    }
+
+    /// Sever every currently-open proxied connection (the pump threads
+    /// notice within one tick and shut both ends down).
+    pub fn kill_connections(&self) {
+        self.state.generation.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Total connections accepted so far.
+    pub fn connections(&self) -> usize {
+        self.state.connections.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting, sever everything, and join the accept thread.
+    pub fn stop(self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.generation.fetch_add(1, Ordering::SeqCst);
+        // poke the accept loop out of incoming()
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+    }
+}
+
+fn handle(client: TcpStream, state: &Arc<ProxyState>) {
+    let born = state.generation.load(Ordering::SeqCst);
+    let mode = *state.mode.lock().unwrap();
+    match mode {
+        Mode::Drop => {
+            let _ = client.shutdown(Shutdown::Both);
+        }
+        Mode::Blackhole => blackhole(client, state, born),
+        Mode::Delay(latency) => {
+            // hold in ticks so stop()/kill don't have to outwait a
+            // long configured latency
+            let mut waited = Duration::ZERO;
+            while waited < latency {
+                if severed(state, born) {
+                    let _ = client.shutdown(Shutdown::Both);
+                    return;
+                }
+                let step = TICK.min(latency - waited);
+                std::thread::sleep(step);
+                waited += step;
+            }
+            forward(client, state, born);
+        }
+        Mode::Forward => forward(client, state, born),
+    }
+}
+
+fn severed(state: &ProxyState, born: u64) -> bool {
+    state.shutdown.load(Ordering::SeqCst) || state.generation.load(Ordering::SeqCst) != born
+}
+
+/// Read and discard forever (until severed or the client gives up) —
+/// the client's request "arrives" but no reply ever comes.
+fn blackhole(client: TcpStream, state: &Arc<ProxyState>, born: u64) {
+    let _ = client.set_read_timeout(Some(TICK));
+    let mut sink = [0u8; 8192];
+    let mut stream = client;
+    loop {
+        if severed(state, born) {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        match stream.read(&mut sink) {
+            Ok(0) => return, // client closed
+            Ok(_) => {}      // swallow
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Transparent bidirectional pump: two threads, each copying one
+/// direction in short-timeout ticks so a kill lands within ~one tick.
+fn forward(client: TcpStream, state: &Arc<ProxyState>, born: u64) {
+    let upstream = match TcpStream::connect(&state.upstream) {
+        Ok(s) => s,
+        Err(_) => {
+            let _ = client.shutdown(Shutdown::Both);
+            return;
+        }
+    };
+    let _ = client.set_nodelay(true);
+    let _ = upstream.set_nodelay(true);
+    let (Ok(c2), Ok(u2)) = (client.try_clone(), upstream.try_clone()) else {
+        return;
+    };
+    let st = Arc::clone(state);
+    let a = std::thread::spawn(move || pump(client, u2, &st, born));
+    pump(upstream, c2, state, born);
+    let _ = a.join();
+}
+
+fn pump(mut from: TcpStream, mut to: TcpStream, state: &ProxyState, born: u64) {
+    let _ = from.set_read_timeout(Some(TICK));
+    let mut buf = [0u8; 8192];
+    loop {
+        if severed(state, born) {
+            break;
+        }
+        match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+    }
+    // sever both ends: the peer's pump unblocks on EOF/error
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    /// A one-line echo upstream: reads a line, writes it back.
+    fn echo_server() -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { break };
+                std::thread::spawn(move || {
+                    let mut reader = BufReader::new(stream);
+                    let mut line = String::new();
+                    while reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                        if reader.get_ref().write_all(line.as_bytes()).is_err() {
+                            break;
+                        }
+                        line.clear();
+                    }
+                });
+            }
+        });
+        (addr, h)
+    }
+
+    fn roundtrip_line(addr: SocketAddr) -> std::io::Result<String> {
+        let mut s = TcpStream::connect(addr)?;
+        s.set_read_timeout(Some(Duration::from_secs(2)))?;
+        s.write_all(b"ping\n")?;
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "closed without reply",
+            ));
+        }
+        Ok(line)
+    }
+
+    #[test]
+    fn forwards_then_drops_then_blackholes() {
+        let (up, _h) = echo_server();
+        let proxy = ChaosProxy::start(&up.to_string()).unwrap();
+
+        assert_eq!(roundtrip_line(proxy.addr()).unwrap(), "ping\n");
+        assert!(proxy.connections() >= 1);
+
+        proxy.set_mode(Mode::Drop);
+        assert!(roundtrip_line(proxy.addr()).is_err(), "Drop must refuse service");
+
+        proxy.set_mode(Mode::Blackhole);
+        let t0 = std::time::Instant::now();
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        s.write_all(b"ping\n").unwrap(); // accepted...
+        let mut byte = [0u8; 1];
+        assert!(s.read(&mut byte).is_err(), "Blackhole must never answer");
+        assert!(t0.elapsed() >= Duration::from_millis(150), "failed only by timeout");
+
+        proxy.set_mode(Mode::Forward);
+        assert_eq!(roundtrip_line(proxy.addr()).unwrap(), "ping\n");
+        proxy.stop();
+    }
+
+    #[test]
+    fn delay_holds_but_delivers_and_kill_severs() {
+        let (up, _h) = echo_server();
+        let proxy = ChaosProxy::start(&up.to_string()).unwrap();
+
+        proxy.set_mode(Mode::Delay(Duration::from_millis(120)));
+        let t0 = std::time::Instant::now();
+        assert_eq!(roundtrip_line(proxy.addr()).unwrap(), "ping\n");
+        assert!(t0.elapsed() >= Duration::from_millis(100), "delay not applied");
+
+        // an established Forward connection dies when killed
+        proxy.set_mode(Mode::Forward);
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        s.write_all(b"ping\n").unwrap();
+        let mut reader = BufReader::new(s);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "ping\n");
+        proxy.kill_connections();
+        line.clear();
+        // severed: EOF (Ok(0 bytes) → empty line) or a reset error
+        let dead = match reader.read_line(&mut line) {
+            Ok(n) => n == 0,
+            Err(_) => true,
+        };
+        assert!(dead, "kill_connections must sever the live socket");
+        proxy.stop();
+    }
+}

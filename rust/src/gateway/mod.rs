@@ -1,0 +1,1489 @@
+//! `bfast gateway` — the resident fleet coordinator: one `/v1` facade
+//! over many `bfast serve` workers.
+//!
+//! The one-shot [`crate::shard`] coordinator proved the mechanics
+//! (bit-exact split/merge, aggregate progress, cancel fan-out); this
+//! layer makes the fleet a *service*. A gateway process is a drop-in
+//! replacement for a single `bfast serve` endpoint — same
+//! `POST /v1/runs` / poll / `/result` protocol, same error envelopes —
+//! except that behind the facade every run is split across the live
+//! worker fleet and survives workers dying mid-run:
+//!
+//! * **Registration + heartbeat** — workers announce themselves with
+//!   `POST /v1/workers` (`bfast serve --gateway` self-registers on an
+//!   interval); a worker whose beats stop is *stale*, and one that
+//!   fails a placement or health probe is *down*. Statically seeded
+//!   workers (`--workers`) are health-probed by the sweep instead.
+//! * **Throughput-weighted placement** — the sweep scrapes each live
+//!   worker's `/metrics` for `bfast_chunks_done_total` and maintains a
+//!   chunks/sec EMA; shard widths are apportioned ∝ that rate
+//!   ([`crate::shard::split_weighted`]), so a 4× faster worker gets a
+//!   4× wider pixel strip. Workers without an observation yet get an
+//!   average-sized strip; `POST /v1/workers` can pin an explicit
+//!   `weight` instead.
+//! * **Mid-run rebalancing** — a shard whose worker dies mid-run
+//!   ([`PlaceError::WorkerDown`]) is not retried whole at a static
+//!   slot: the worker is marked down and the shard's pixel range is
+//!   **re-split across the surviving fleet** (recursively, up to
+//!   `--max-resplits`), so the work redistributes at the same
+//!   throughput-weighted proportions as the original placement.
+//!   `bfast_gateway_rebalances_total` counts these events.
+//! * **Bit-exactness** — however many times a run is re-split, the
+//!   merged map equals a single-process
+//!   [`BfastRunner::run`](crate::coordinator::BfastRunner::run)
+//!   bit-for-bit ([`PartialResult`] association), pinned over real
+//!   sockets — including deterministic worker murder via
+//!   [`chaos::ChaosProxy`] — by `tests/gateway.rs` and
+//!   `tests/chaos.rs`.
+//!
+//! Monitor sessions don't partition by pixel (their state lives where
+//! the history was fitted), so `/v1/sessions` routes are proxied: the
+//! gateway picks the least-loaded live worker at create, remembers the
+//! owner, and forwards every later session request to it.
+
+pub mod chaos;
+
+use crate::api::{
+    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, OutputSpec,
+    ParamSpec, PartialResult, SceneSource,
+};
+use crate::cli::{Command, Matches};
+use crate::error::{ensure, err, Context, Result};
+use crate::json::Value;
+use crate::metrics::{self, PhaseTimes};
+use crate::raster::TimeStack;
+use crate::report;
+use crate::serve::http::{self, Client, Request, Response};
+use crate::serve::queue::JobState;
+use crate::shard::{self, PlaceError, PlaceOptions, ShardReport};
+use crate::threadpool::{self, WorkerPool};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Cap on requests served over one keep-alive connection (same bound
+/// as the worker-side server).
+const MAX_REQUESTS_PER_CONN: usize = 1024;
+
+/// The backoff hint an over-admitted gateway advertises (parity with
+/// the worker's 429).
+const RETRY_AFTER_S: u64 = 1;
+
+/// Gateway configuration (`bfast gateway` flags).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Listen address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Statically seeded workers (health-probed by the sweep);
+    /// dynamic workers join via `POST /v1/workers` at any time.
+    pub workers: Vec<String>,
+    /// HTTP worker threads (0 = auto).
+    pub http_threads: usize,
+    /// Largest accepted request body, in bytes.
+    pub max_body: usize,
+    /// Per-shard worker job poll interval.
+    pub poll: Duration,
+    /// Per-I/O timeout on worker sockets — bounds how long a
+    /// black-holed worker can stall a shard before it rebalances.
+    pub io_timeout: Duration,
+    /// A worker whose last beat is older than this is stale (not
+    /// placed on) until it beats again.
+    pub heartbeat_timeout: Duration,
+    /// Health sweep + throughput scrape interval.
+    pub sweep: Duration,
+    /// Bounded 429-backoff tries per shard submit.
+    pub submit_attempts: usize,
+    /// Re-split budget per pixel range: how many times one range may
+    /// be rebalanced onto survivors before the run fails.
+    pub max_resplits: usize,
+    /// Concurrent runs admitted before `POST /v1/runs` answers 429.
+    pub max_inflight: usize,
+    /// Finished run records retained for status/map queries.
+    pub finished_cap: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7979".into(),
+            workers: Vec::new(),
+            http_threads: 0,
+            max_body: 256 << 20,
+            poll: Duration::from_millis(25),
+            io_timeout: Duration::from_secs(10),
+            heartbeat_timeout: Duration::from_secs(5),
+            sweep: Duration::from_secs(1),
+            submit_attempts: 8,
+            max_resplits: 4,
+            max_inflight: 8,
+            finished_cap: 256,
+        }
+    }
+}
+
+// -- the fleet registry --------------------------------------------------
+
+/// Public snapshot of one registered worker (the `GET /v1/workers` /
+/// [`report::workers_table`] row).
+#[derive(Clone, Debug)]
+pub struct WorkerInfo {
+    pub addr: String,
+    /// Eligible for placement: not down, beaten recently.
+    pub alive: bool,
+    /// Explicitly marked dead (failed placement or health probe).
+    pub down: bool,
+    /// Seeded via `--workers` (health-probed) rather than
+    /// self-registered (heartbeating).
+    pub is_static: bool,
+    /// Effective placement weight (pinned, or the observed rate).
+    pub weight: f64,
+    /// Observed throughput EMA, chunks/sec (0 = no observation yet).
+    pub rate: f64,
+    /// Heartbeats received (probe successes count for statics).
+    pub beats: u64,
+    /// Time since the last beat.
+    pub last_beat: Duration,
+}
+
+impl WorkerInfo {
+    pub fn status(&self) -> &'static str {
+        if self.alive {
+            "alive"
+        } else if self.down {
+            "down"
+        } else {
+            "stale"
+        }
+    }
+}
+
+struct WorkerEntry {
+    last_beat: Instant,
+    down: bool,
+    is_static: bool,
+    pinned_weight: Option<f64>,
+    /// Chunks/sec EMA from `/metrics` scrapes (0 = never observed).
+    rate: f64,
+    /// Last scraped (chunks_done_total, when) for rate deltas.
+    last_scrape: Option<(u64, Instant)>,
+    beats: u64,
+}
+
+impl WorkerEntry {
+    fn new(is_static: bool) -> Self {
+        Self {
+            last_beat: Instant::now(),
+            down: false,
+            is_static,
+            pinned_weight: None,
+            rate: 0.0,
+            last_scrape: None,
+            beats: 0,
+        }
+    }
+
+    fn alive(&self, timeout: Duration) -> bool {
+        !self.down && self.last_beat.elapsed() <= timeout
+    }
+
+    /// Placement weight: an operator-pinned weight wins; otherwise the
+    /// observed rate (0.0 = "unknown", which [`shard::split_weighted`]
+    /// replaces with the fleet average).
+    fn weight(&self) -> f64 {
+        self.pinned_weight.unwrap_or(self.rate)
+    }
+}
+
+/// Who is in the fleet and how healthy/fast each member is.
+struct Fleet {
+    timeout: Duration,
+    workers: Mutex<BTreeMap<String, WorkerEntry>>,
+    heartbeats: AtomicU64,
+}
+
+impl Fleet {
+    fn new(timeout: Duration) -> Self {
+        Self { timeout, workers: Mutex::new(BTreeMap::new()), heartbeats: AtomicU64::new(0) }
+    }
+
+    /// Seed a static worker (grace of one timeout before its first
+    /// probe result is in).
+    fn seed(&self, addr: &str) {
+        self.workers
+            .lock()
+            .unwrap()
+            .entry(addr.to_string())
+            .or_insert_with(|| WorkerEntry::new(true));
+    }
+
+    /// A heartbeat (`POST /v1/workers`, or a static's probe success):
+    /// refreshes liveness and *clears* a down mark — recovered workers
+    /// rejoin the fleet on their next beat.
+    fn beat(&self, addr: &str, weight: Option<f64>) {
+        let mut ws = self.workers.lock().unwrap();
+        let e = ws.entry(addr.to_string()).or_insert_with(|| WorkerEntry::new(false));
+        e.last_beat = Instant::now();
+        e.down = false;
+        e.beats += 1;
+        if let Some(w) = weight {
+            e.pinned_weight = Some(w);
+        }
+        self.heartbeats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn mark_down(&self, addr: &str) {
+        if let Some(e) = self.workers.lock().unwrap().get_mut(addr) {
+            e.down = true;
+        }
+    }
+
+    fn remove(&self, addr: &str) -> bool {
+        self.workers.lock().unwrap().remove(addr).is_some()
+    }
+
+    fn is_alive(&self, addr: &str) -> bool {
+        self.workers
+            .lock()
+            .unwrap()
+            .get(addr)
+            .is_some_and(|e| e.alive(self.timeout))
+    }
+
+    /// `(addr, weight)` of every placeable worker, address-ordered
+    /// (deterministic placement for a given fleet state).
+    fn placement(&self) -> Vec<(String, f64)> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.alive(self.timeout))
+            .map(|(a, e)| (a.clone(), e.weight()))
+            .collect()
+    }
+
+    fn statics(&self) -> Vec<String> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.is_static)
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    fn alive_addrs(&self) -> Vec<String> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, e)| e.alive(self.timeout))
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    /// Fold a scraped cumulative chunk counter into the worker's
+    /// chunks/sec EMA. Only *positive* deltas update the rate: an idle
+    /// worker keeps its last known speed (decaying an idle worker to
+    /// zero would starve the fastest machine of its next shard). A
+    /// counter that went backwards (worker restart) just re-anchors.
+    fn observe_chunks(&self, addr: &str, chunks: u64, now: Instant) {
+        let mut ws = self.workers.lock().unwrap();
+        if let Some(e) = ws.get_mut(addr) {
+            if let Some((prev, at)) = e.last_scrape {
+                let dt = now.duration_since(at).as_secs_f64();
+                if dt > 0.0 && chunks > prev {
+                    let sample = (chunks - prev) as f64 / dt;
+                    e.rate = metrics::ema(e.rate, sample, 0.5);
+                }
+            }
+            e.last_scrape = Some((chunks, now));
+        }
+    }
+
+    fn snapshot(&self) -> Vec<WorkerInfo> {
+        self.workers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(a, e)| WorkerInfo {
+                addr: a.clone(),
+                alive: e.alive(self.timeout),
+                down: e.down,
+                is_static: e.is_static,
+                weight: e.weight(),
+                rate: e.rate,
+                beats: e.beats,
+                last_beat: e.last_beat.elapsed(),
+            })
+            .collect()
+    }
+
+    fn counts(&self) -> (usize, usize) {
+        let ws = self.workers.lock().unwrap();
+        let alive = ws.values().filter(|e| e.alive(self.timeout)).count();
+        (ws.len(), alive)
+    }
+}
+
+// -- gateway state + jobs ------------------------------------------------
+
+struct GwJob {
+    id: u64,
+    state: JobState,
+    handle: JobHandle,
+    pixels: Option<usize>,
+    result: Option<AnalysisResult>,
+    shards: Vec<ShardReport>,
+    finished_at: Option<Instant>,
+}
+
+impl GwJob {
+    fn progress(&self) -> f64 {
+        match &self.state {
+            JobState::Queued => 0.0,
+            JobState::Done => 1.0,
+            _ => {
+                let (done, total) = self.handle.progress();
+                if total == 0 {
+                    0.0
+                } else {
+                    done as f64 / total as f64
+                }
+            }
+        }
+    }
+}
+
+struct Jobs {
+    next: u64,
+    map: BTreeMap<u64, GwJob>,
+}
+
+struct GatewayState {
+    addr: SocketAddr,
+    cfg: GatewayConfig,
+    fleet: Fleet,
+    jobs: Mutex<Jobs>,
+    /// Session name → owning worker address.
+    sessions: Mutex<BTreeMap<String, String>>,
+    run_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    phases: Mutex<PhaseTimes>,
+    rebalances: AtomicU64,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    started: Instant,
+    shutdown: AtomicBool,
+}
+
+impl GatewayState {
+    fn inflight(&self) -> usize {
+        self.jobs
+            .lock()
+            .unwrap()
+            .map
+            .values()
+            .filter(|j| !j.state.is_finished())
+            .count()
+    }
+}
+
+/// Per-run progress: each in-flight pixel range reports its worker's
+/// `(chunks_done, chunks_total)` here; the sum streams into the run's
+/// aggregate [`JobHandle`]. Ranges come and go as rebalances re-split
+/// the work, so totals may move — fine for a progress bar, and the
+/// final publish (everything done) is exact.
+struct RunProgress {
+    cells: Mutex<BTreeMap<(usize, usize), (usize, usize)>>,
+}
+
+impl RunProgress {
+    fn new() -> Self {
+        Self { cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn set(&self, range: (usize, usize), done: usize, total: usize) {
+        self.cells.lock().unwrap().insert(range, (done, total));
+    }
+
+    fn clear(&self, range: (usize, usize)) {
+        self.cells.lock().unwrap().remove(&range);
+    }
+
+    fn publish(&self, handle: &JobHandle) {
+        let cells = self.cells.lock().unwrap();
+        let done = cells.values().map(|c| c.0).sum();
+        let total = cells.values().map(|c| c.1).sum();
+        drop(cells);
+        handle.set_progress(done, total);
+    }
+}
+
+// -- the run engine: weighted fan-out with recursive rebalancing ---------
+
+struct RunCtx<'a> {
+    state: &'a GatewayState,
+    stack: &'a TimeStack,
+    params: ParamSpec,
+    engine: &'a EngineSpec,
+    chunking: &'a ChunkSpec,
+    handle: &'a JobHandle,
+    progress: &'a RunProgress,
+    acc: &'a Mutex<Vec<(PartialResult, ShardReport)>>,
+    popts: PlaceOptions,
+}
+
+/// Execute one request across the live fleet; the returned result is
+/// bit-identical to a single-process run of the same request.
+fn drive_run(
+    state: &GatewayState,
+    req: &AnalysisRequest,
+    handle: &JobHandle,
+) -> Result<(AnalysisResult, Vec<ShardReport>)> {
+    let (stack, params) = req.resolve()?;
+    let pixels = stack.n_pixels();
+    ensure!(pixels > 0, "scene has no pixels");
+    // pin every parameter (λ included) gateway-side, so every shard —
+    // and every rebalanced re-placement — analyses under identical
+    // numbers
+    let pinned = ParamSpec::from_params(&params);
+    let progress = RunProgress::new();
+    let acc = Mutex::new(Vec::new());
+    let ctx = RunCtx {
+        state,
+        stack: &stack,
+        // (resolve returns Cow<TimeStack>; &*cow is the strip itself)
+        params: pinned,
+        engine: &req.engine,
+        chunking: &req.chunking,
+        handle,
+        progress: &progress,
+        acc: &acc,
+        popts: PlaceOptions {
+            poll: state.cfg.poll,
+            submit_attempts: state.cfg.submit_attempts,
+            io_timeout: state.cfg.io_timeout,
+        },
+    };
+    drive_range(&ctx, (0, pixels), 0)?;
+    let mut entries = acc.into_inner().unwrap();
+    entries.sort_by_key(|(_, rep)| rep.pixel_range.0);
+    for (i, (_, rep)) in entries.iter_mut().enumerate() {
+        rep.shard = i; // shard ids = final pixel order, not spawn order
+    }
+    let (parts, reports): (Vec<_>, Vec<_>) = entries.into_iter().unzip();
+    let result = PartialResult::assemble(parts)?.into_full(pixels, stack.width, stack.height)?;
+    Ok((result, reports))
+}
+
+/// Place `range` across the currently-live fleet, splitting it by
+/// observed throughput. Each sub-range that loses its worker mid-run
+/// recurses (depth-bounded) over whatever fleet is alive *then*.
+fn drive_range(ctx: &RunCtx<'_>, range: (usize, usize), depth: usize) -> Result<()> {
+    if ctx.handle.is_cancelled() {
+        return Err(api::cancelled());
+    }
+    let placement = ctx.state.fleet.placement();
+    // bounded, typed refusal — a fleet with no live workers must fail
+    // the run promptly, never hang it
+    ensure!(
+        !placement.is_empty(),
+        "no live workers to place pixels [{}, {}) on — register workers \
+         (POST /v1/workers) or wait for heartbeats",
+        range.0,
+        range.1
+    );
+    let weights: Vec<f64> = placement.iter().map(|(_, w)| *w).collect();
+    let spans = shard::split_weighted(range.1 - range.0, &weights);
+    let outcomes: Vec<Result<()>> = std::thread::scope(|scope| {
+        let threads: Vec<_> = spans
+            .iter()
+            .zip(placement.iter())
+            .filter(|(&(a, b), _)| a < b)
+            .map(|(&(a, b), (worker, _))| {
+                let sub = (range.0 + a, range.0 + b);
+                scope.spawn(move || drive_sub(ctx, worker, sub, depth))
+            })
+            .collect();
+        threads
+            .into_iter()
+            .map(|t| {
+                t.join()
+                    .unwrap_or_else(|_| Err(err!("gateway shard thread panicked")))
+            })
+            .collect()
+    });
+    let mut cancelled = ctx.handle.is_cancelled();
+    let mut first_err = None;
+    for outcome in outcomes {
+        match outcome {
+            Ok(()) => {}
+            Err(e) if api::is_cancelled(&e) => cancelled = true,
+            Err(e) => {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    if cancelled {
+        return Err(api::cancelled());
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Drive one contiguous sub-range on one worker. A dead worker
+/// ([`PlaceError::WorkerDown`]) is marked down and the range re-split
+/// across the survivors; a job-side failure fails the run.
+fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize) -> Result<()> {
+    // ship only this range's pixel strip (see run_one_shard in
+    // crate::shard for why slicing here is bit-equivalent)
+    let mut chunking = ctx.chunking.clone();
+    chunking.pixel_range = None;
+    let sub = AnalysisRequest {
+        source: SceneSource::Inline(ctx.stack.slice_pixels(range.0, range.1)),
+        params: ctx.params.clone(),
+        engine: ctx.engine.clone(),
+        chunking,
+        outputs: OutputSpec::default(),
+    };
+    let body = sub.to_json_string();
+    drop(sub);
+    let progress = |done: usize, total: usize| {
+        ctx.progress.set(range, done, total);
+        ctx.progress.publish(ctx.handle);
+    };
+    match shard::place_on_worker(worker, &body, range, &ctx.popts, ctx.handle, &progress) {
+        Ok(p) => {
+            ctx.acc.lock().unwrap().push((
+                p.partial,
+                ShardReport {
+                    shard: 0, // renumbered after assembly
+                    pixel_range: range,
+                    worker: worker.to_string(),
+                    attempts: depth + 1,
+                    chunks: p.chunks,
+                    wall: p.wall,
+                },
+            ));
+            Ok(())
+        }
+        Err(e) if e.is_cancelled() => Err(e.into_inner()),
+        Err(PlaceError::Job(e)) => {
+            Err(e.push_context(format!("pixels [{}, {}) on {worker}", range.0, range.1)))
+        }
+        Err(PlaceError::WorkerDown(e)) => {
+            // the rebalance: bury the worker, return this range's
+            // progress to zero, and re-split it over the survivors
+            ctx.state.fleet.mark_down(worker);
+            ctx.state.rebalances.fetch_add(1, Ordering::Relaxed);
+            ctx.progress.clear(range);
+            ctx.progress.publish(ctx.handle);
+            println!(
+                "bfast gateway: worker {worker} lost pixels [{}, {}) ({e:#}); \
+                 rebalancing onto survivors",
+                range.0, range.1
+            );
+            ensure!(
+                depth < ctx.state.cfg.max_resplits,
+                "pixels [{}, {}): re-split budget ({}) exhausted — last worker {worker}: {e:#}",
+                range.0,
+                range.1,
+                ctx.state.cfg.max_resplits
+            );
+            drive_range(ctx, range, depth + 1)
+        }
+    }
+}
+
+/// The detached run thread: drive the fan-out, record the outcome.
+fn run_job(state: &Arc<GatewayState>, id: u64, req: AnalysisRequest, handle: JobHandle) {
+    if let Some(job) = state.jobs.lock().unwrap().map.get_mut(&id) {
+        job.state = JobState::Running;
+    }
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        drive_run(state, &req, &handle)
+    }));
+    let mut jobs = state.jobs.lock().unwrap();
+    let Some(job) = jobs.map.get_mut(&id) else { return };
+    job.finished_at = Some(Instant::now());
+    match outcome {
+        Ok(Ok((result, shards))) => {
+            if let Some(p) = &result.phases {
+                state.phases.lock().unwrap().merge(p);
+            }
+            println!(
+                "bfast gateway: job {id} done — {} pixels over {} shard(s)",
+                result.map.len(),
+                shards.len()
+            );
+            print!("{}", report::shard_table(&shards).to_console());
+            job.pixels = Some(result.map.len());
+            job.result = Some(result);
+            job.shards = shards;
+            job.state = JobState::Done;
+        }
+        Ok(Err(e)) if api::is_cancelled(&e) => job.state = JobState::Cancelled,
+        Ok(Err(e)) => job.state = JobState::Failed { error: format!("{e:#}") },
+        Err(_) => job.state = JobState::Failed { error: "gateway run panicked".into() },
+    }
+    // count-capped retention, oldest finished first (ids ascend)
+    let finished: Vec<u64> = jobs
+        .map
+        .iter()
+        .filter(|(_, j)| j.state.is_finished())
+        .map(|(&i, _)| i)
+        .collect();
+    if finished.len() > state.cfg.finished_cap.max(1) {
+        for i in &finished[..finished.len() - state.cfg.finished_cap.max(1)] {
+            jobs.map.remove(i);
+        }
+    }
+}
+
+// -- the health sweep ----------------------------------------------------
+
+/// One sweep pass: probe statics' `/healthz` (success = synthetic
+/// beat, failure = down), then scrape every live worker's `/metrics`
+/// for its cumulative chunk counter.
+fn sweep_once(state: &GatewayState) {
+    // probing can't outlast the heartbeat budget — a worker that can't
+    // answer /healthz within it isn't meaningfully alive
+    let io = state
+        .cfg
+        .io_timeout
+        .min(state.cfg.heartbeat_timeout.max(Duration::from_millis(100)));
+    for addr in state.fleet.statics() {
+        let ok = Client::connect_timeout(&addr, io)
+            .and_then(|mut c| c.request("GET", "/healthz", "", &[]))
+            .map(|(status, _)| status == 200)
+            .unwrap_or(false);
+        if ok {
+            state.fleet.beat(&addr, None);
+        } else {
+            state.fleet.mark_down(&addr);
+        }
+    }
+    for addr in state.fleet.alive_addrs() {
+        let scraped = Client::connect_timeout(&addr, io)
+            .and_then(|mut c| c.request("GET", "/metrics", "", &[]))
+            .ok()
+            .filter(|(status, _)| *status == 200)
+            .and_then(|(_, body)| scrape_counter(&body, "bfast_chunks_done_total"));
+        if let Some(chunks) = scraped {
+            state.fleet.observe_chunks(&addr, chunks, Instant::now());
+        }
+    }
+}
+
+/// Pull one integer-valued counter out of a Prometheus text page.
+fn scrape_counter(body: &[u8], name: &str) -> Option<u64> {
+    let text = std::str::from_utf8(body).ok()?;
+    text.lines().find_map(|line| {
+        let rest = line.strip_prefix(name)?;
+        rest.trim().parse().ok()
+    })
+}
+
+// -- the HTTP front door -------------------------------------------------
+
+/// A running `bfast gateway` instance. [`Gateway::start`] returns once
+/// the socket is listening; [`Gateway::wait`] blocks until
+/// `POST /shutdown` (or [`Gateway::stop`]) and drains in-flight runs.
+pub struct Gateway {
+    addr: SocketAddr,
+    state: Arc<GatewayState>,
+    accept: std::thread::JoinHandle<()>,
+    sweep: std::thread::JoinHandle<()>,
+}
+
+impl Gateway {
+    pub fn start(cfg: GatewayConfig) -> Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let http_threads = if cfg.http_threads == 0 {
+            threadpool::default_threads().clamp(2, 16)
+        } else {
+            cfg.http_threads
+        };
+        let fleet = Fleet::new(cfg.heartbeat_timeout);
+        for w in &cfg.workers {
+            fleet.seed(w);
+        }
+        let state = Arc::new(GatewayState {
+            addr,
+            cfg,
+            fleet,
+            jobs: Mutex::new(Jobs { next: 1, map: BTreeMap::new() }),
+            sessions: Mutex::new(BTreeMap::new()),
+            run_threads: Mutex::new(Vec::new()),
+            phases: Mutex::new(PhaseTimes::new()),
+            rebalances: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_state = Arc::clone(&state);
+        let accept = std::thread::spawn(move || {
+            let mut pool = WorkerPool::new(http_threads);
+            for conn in listener.incoming() {
+                if accept_state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let st = Arc::clone(&accept_state);
+                if pool.execute(move || handle_connection(stream, &st)).is_err() {
+                    break;
+                }
+            }
+            pool.shutdown();
+        });
+        let sweep_state = Arc::clone(&state);
+        let sweep = std::thread::spawn(move || {
+            let interval = sweep_state.cfg.sweep.max(Duration::from_millis(10));
+            let tick = Duration::from_millis(25).min(interval);
+            let mut next = Instant::now(); // first sweep immediately
+            while !sweep_state.shutdown.load(Ordering::SeqCst) {
+                if Instant::now() >= next {
+                    sweep_once(&sweep_state);
+                    next = Instant::now() + interval;
+                }
+                std::thread::sleep(tick);
+            }
+        });
+        Ok(Gateway { addr, state, accept, sweep })
+    }
+
+    /// The bound address (resolves an ephemeral port request).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until shutdown, then drain: in-flight run threads are
+    /// joined (each is I/O-bounded by `io_timeout`), the sweep stops.
+    pub fn wait(self) -> Result<()> {
+        self.accept
+            .join()
+            .map_err(|_| err!("gateway accept loop panicked"))?;
+        self.sweep
+            .join()
+            .map_err(|_| err!("gateway sweep loop panicked"))?;
+        loop {
+            // take the lock only to pop, never across the join
+            let Some(t) = self.state.run_threads.lock().unwrap().pop() else {
+                break;
+            };
+            let _ = t.join();
+        }
+        Ok(())
+    }
+
+    /// Trigger a graceful shutdown and wait for it to complete.
+    pub fn stop(self) -> Result<()> {
+        trigger_shutdown(&self.state);
+        self.wait()
+    }
+}
+
+fn trigger_shutdown(state: &GatewayState) {
+    state.shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(state.addr);
+}
+
+fn handle_connection(stream: TcpStream, state: &Arc<GatewayState>) {
+    let _ = stream.set_nodelay(true);
+    let mut reader = std::io::BufReader::new(stream);
+    let mut served = 0usize;
+    loop {
+        let timeout = if served == 0 { Duration::from_secs(30) } else { Duration::from_secs(5) };
+        let _ = reader.get_ref().set_read_timeout(Some(timeout));
+        let req = match http::read_request(&mut reader, state.cfg.max_body) {
+            Ok(Some(req)) => req,
+            Ok(None) => break,
+            Err(e) => {
+                state.requests.fetch_add(1, Ordering::Relaxed);
+                state.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(
+                    reader.get_mut(),
+                    &Response::json_error(400, &format!("{e:#}")),
+                    false,
+                );
+                break;
+            }
+        };
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = route(&req, state);
+        if resp.status >= 400 {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        served += 1;
+        let keep = req.keep_alive()
+            && served < MAX_REQUESTS_PER_CONN
+            && !state.shutdown.load(Ordering::SeqCst);
+        if http::write_response(reader.get_mut(), &resp, keep).is_err() {
+            break;
+        }
+        if !keep {
+            break;
+        }
+    }
+}
+
+fn route(req: &Request, state: &Arc<GatewayState>) -> Response {
+    let path = req.path.clone();
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics_page(state),
+        ("POST", ["shutdown"]) => {
+            trigger_shutdown(state);
+            Response::json(
+                200,
+                &Value::obj(vec![("status", Value::Str("shutting down".into()))]),
+            )
+        }
+        ("POST", ["v1", "workers"]) => worker_register(req, state),
+        ("GET", ["v1", "workers"]) => worker_list(state),
+        ("DELETE", ["v1", "workers", addr]) => worker_remove(addr, state),
+        ("POST", ["v1", "runs"]) => submit_run(req, state),
+        ("GET", ["v1", "runs"]) => list_runs(state),
+        ("GET", ["v1", "runs", id]) => run_status(id, state),
+        ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
+        ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
+        ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
+        ("GET", ["v1", "sessions"]) => list_sessions(state),
+        ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
+        ("GET", ["v1", "sessions", name])
+        | ("POST", ["v1", "sessions", name, "ingest"])
+        | ("GET", ["v1", "sessions", name, "map"]) => proxy_session(req, name, state),
+        (method, _) => Response::json_error(404, &format!("no route for {method} {}", req.path)),
+    }
+}
+
+fn healthz(state: &GatewayState) -> Response {
+    let (workers, alive) = state.fleet.counts();
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("status", Value::Str("ok".into())),
+            ("role", Value::Str("gateway".into())),
+            ("uptime_s", Value::Num(state.started.elapsed().as_secs_f64())),
+            ("workers", Value::Num(workers as f64)),
+            ("workers_alive", Value::Num(alive as f64)),
+            ("jobs_inflight", Value::Num(state.inflight() as f64)),
+            ("sessions", Value::Num(state.sessions.lock().unwrap().len() as f64)),
+        ]),
+    )
+}
+
+fn metrics_page(state: &GatewayState) -> Response {
+    use std::fmt::Write as _;
+    let (workers, alive) = state.fleet.counts();
+    let (mut done, mut failed, mut cancelled, mut inflight) = (0u64, 0u64, 0u64, 0u64);
+    for j in state.jobs.lock().unwrap().map.values() {
+        match &j.state {
+            JobState::Done => done += 1,
+            JobState::Failed { .. } => failed += 1,
+            JobState::Cancelled => cancelled += 1,
+            _ => inflight += 1,
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "bfast_gateway_uptime_seconds {:.3}",
+        state.started.elapsed().as_secs_f64()
+    );
+    let _ = writeln!(
+        out,
+        "bfast_gateway_http_requests_total {}",
+        state.requests.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "bfast_gateway_http_errors_total {}",
+        state.errors.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(out, "bfast_gateway_workers {workers}");
+    let _ = writeln!(out, "bfast_gateway_workers_alive {alive}");
+    let _ = writeln!(
+        out,
+        "bfast_gateway_heartbeats_total {}",
+        state.fleet.heartbeats.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "bfast_gateway_rebalances_total {}",
+        state.rebalances.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "bfast_gateway_runs_submitted_total {}",
+        state.submitted.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "bfast_gateway_runs_rejected_total {}",
+        state.rejected.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(out, "bfast_gateway_runs_inflight {inflight}");
+    let _ = writeln!(out, "bfast_gateway_runs_done {done}");
+    let _ = writeln!(out, "bfast_gateway_runs_failed {failed}");
+    let _ = writeln!(out, "bfast_gateway_runs_cancelled {cancelled}");
+    let _ = writeln!(
+        out,
+        "bfast_gateway_sessions {}",
+        state.sessions.lock().unwrap().len()
+    );
+    for w in state.fleet.snapshot() {
+        let _ = writeln!(
+            out,
+            "bfast_gateway_worker_weight{{worker=\"{}\"}} {:.3}",
+            w.addr, w.weight
+        );
+        let _ = writeln!(
+            out,
+            "bfast_gateway_worker_chunks_per_s{{worker=\"{}\"}} {:.3}",
+            w.addr, w.rate
+        );
+    }
+    out.push_str(
+        &state
+            .phases
+            .lock()
+            .unwrap()
+            .to_prometheus("bfast_gateway_run_phase_seconds"),
+    );
+    Response::text(200, &out)
+}
+
+// -- worker endpoints ----------------------------------------------------
+
+/// `POST /v1/workers` `{"addr": "host:port", "weight"?: w}` —
+/// registration and heartbeat are the same idempotent call.
+fn worker_register(req: &Request, state: &GatewayState) -> Response {
+    let parsed = || -> Result<(String, Option<f64>)> {
+        let v = crate::json::parse(
+            std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?,
+        )?;
+        let addr = v.get("addr")?.as_str()?.trim().to_string();
+        ensure!(!addr.is_empty(), "addr must be a non-empty host:port");
+        let weight = match v.try_get("weight") {
+            Some(w) => {
+                let w = w.as_f64()?;
+                ensure!(w.is_finite() && w > 0.0, "weight must be finite and positive");
+                Some(w)
+            }
+            None => None,
+        };
+        Ok((addr, weight))
+    };
+    match parsed() {
+        Ok((addr, weight)) => {
+            state.fleet.beat(&addr, weight);
+            let (workers, alive) = state.fleet.counts();
+            Response::json(
+                200,
+                &Value::obj(vec![
+                    ("addr", Value::Str(addr)),
+                    ("status", Value::Str("ok".into())),
+                    ("workers", Value::Num(workers as f64)),
+                    ("workers_alive", Value::Num(alive as f64)),
+                ]),
+            )
+        }
+        Err(e) => Response::json_error(400, &format!("{e:#}")),
+    }
+}
+
+fn worker_info_json(w: &WorkerInfo) -> Value {
+    Value::obj(vec![
+        ("addr", Value::Str(w.addr.clone())),
+        ("status", Value::Str(w.status().into())),
+        ("alive", Value::Bool(w.alive)),
+        ("down", Value::Bool(w.down)),
+        ("static", Value::Bool(w.is_static)),
+        ("weight", Value::Num(w.weight)),
+        ("rate_chunks_per_s", Value::Num(w.rate)),
+        ("beats", Value::Num(w.beats as f64)),
+        ("last_beat_s", Value::Num(w.last_beat.as_secs_f64())),
+    ])
+}
+
+fn worker_list(state: &GatewayState) -> Response {
+    let arr = state.fleet.snapshot().iter().map(worker_info_json).collect();
+    Response::json(200, &Value::obj(vec![("workers", Value::Arr(arr))]))
+}
+
+fn worker_remove(addr: &str, state: &GatewayState) -> Response {
+    if state.fleet.remove(addr) {
+        Response::json(
+            200,
+            &Value::obj(vec![
+                ("addr", Value::Str(addr.to_string())),
+                ("status", Value::Str("removed".into())),
+            ]),
+        )
+    } else {
+        Response::json_error(404, &format!("no worker {addr:?}"))
+    }
+}
+
+// -- run endpoints (the serve facade, fleet-backed) ----------------------
+
+fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
+    if state.shutdown.load(Ordering::SeqCst) {
+        return Response::json_error(503, "gateway is shutting down");
+    }
+    let analysis = match crate::serve::analysis_request_from(req) {
+        Ok(a) => a,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    // admission control: a run fans out across the whole fleet, so the
+    // inflight cap plays the role the worker queue capacity plays on a
+    // single serve (same 429 + Retry-After contract)
+    if state.inflight() >= state.cfg.max_inflight.max(1) {
+        state.rejected.fetch_add(1, Ordering::Relaxed);
+        return Response::json(
+            429,
+            &http::error_envelope(
+                429,
+                &format!(
+                    "gateway at max inflight runs ({}); retry later",
+                    state.cfg.max_inflight.max(1)
+                ),
+                &[("retry_after_s", Value::Num(RETRY_AFTER_S as f64))],
+            ),
+        )
+        .with_header("Retry-After", &RETRY_AFTER_S.to_string());
+    }
+    let handle = JobHandle::new();
+    let id = {
+        let mut jobs = state.jobs.lock().unwrap();
+        let id = jobs.next;
+        jobs.next += 1;
+        jobs.map.insert(
+            id,
+            GwJob {
+                id,
+                state: JobState::Queued,
+                handle: handle.clone(),
+                pixels: None,
+                result: None,
+                shards: Vec::new(),
+                finished_at: None,
+            },
+        );
+        id
+    };
+    state.submitted.fetch_add(1, Ordering::Relaxed);
+    let run_state = Arc::clone(state);
+    let t = std::thread::spawn(move || run_job(&run_state, id, analysis, handle));
+    state.run_threads.lock().unwrap().push(t);
+    Response::json(
+        202,
+        &Value::obj(vec![
+            ("job", Value::Num(id as f64)),
+            ("status", Value::Str("queued".into())),
+        ]),
+    )
+}
+
+fn job_json(job: &GwJob) -> Value {
+    let mut fields = vec![
+        ("job", Value::Num(job.id as f64)),
+        ("status", Value::Str(job.state.label().into())),
+        ("progress", Value::Num(job.progress())),
+    ];
+    if let Some(px) = job.pixels {
+        fields.push(("pixels", Value::Num(px as f64)));
+    }
+    let (chunks_done, chunks_total) = job.handle.progress();
+    match &job.state {
+        JobState::Running | JobState::Cancelled => {
+            fields.push(("chunks_done", Value::Num(chunks_done as f64)));
+            fields.push(("chunks_total", Value::Num(chunks_total as f64)));
+        }
+        JobState::Failed { error } => fields.push(("error", Value::Str(error.clone()))),
+        _ => {}
+    }
+    if let Some(res) = &job.result {
+        fields.push(("breaks", Value::Num(res.map.break_count() as f64)));
+        fields.push(("chunks", Value::Num(res.chunks as f64)));
+        fields.push(("artifact", Value::Str(res.artifact.clone())));
+        fields.push(("engine", Value::Str(res.engine.clone())));
+        fields.push(("lambda", Value::Num(res.params.lambda)));
+        fields.push(("wall_s", Value::Num(res.wall.as_secs_f64())));
+    }
+    if !job.shards.is_empty() {
+        let arr = job
+            .shards
+            .iter()
+            .map(|s| {
+                Value::obj(vec![
+                    ("shard", Value::Num(s.shard as f64)),
+                    ("pixel_start", Value::Num(s.pixel_range.0 as f64)),
+                    ("pixel_end", Value::Num(s.pixel_range.1 as f64)),
+                    ("worker", Value::Str(s.worker.clone())),
+                    ("attempts", Value::Num(s.attempts as f64)),
+                    ("chunks", Value::Num(s.chunks as f64)),
+                    ("wall_s", Value::Num(s.wall.as_secs_f64())),
+                ])
+            })
+            .collect();
+        fields.push(("shards", Value::Arr(arr)));
+    }
+    Value::obj(fields)
+}
+
+fn list_runs(state: &GatewayState) -> Response {
+    let jobs = state.jobs.lock().unwrap();
+    let arr = jobs
+        .map
+        .values()
+        .map(|j| {
+            Value::obj(vec![
+                ("job", Value::Num(j.id as f64)),
+                ("status", Value::Str(j.state.label().into())),
+                ("progress", Value::Num(j.progress())),
+            ])
+        })
+        .collect();
+    Response::json(200, &Value::obj(vec![("jobs", Value::Arr(arr))]))
+}
+
+fn parse_id(seg: &str) -> Result<u64> {
+    seg.parse().map_err(|_| err!("job id {seg:?} must be an integer"))
+}
+
+fn run_status(id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    match state.jobs.lock().unwrap().map.get(&id) {
+        Some(job) => Response::json(200, &job_json(job)),
+        None => Response::json_error(404, &format!("no job {id}")),
+    }
+}
+
+fn cancel_run(id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let jobs = state.jobs.lock().unwrap();
+    match jobs.map.get(&id) {
+        None => Response::json_error(404, &format!("no job {id}")),
+        Some(job) if job.state.is_finished() => {
+            Response::json_error(409, &format!("job {id} already finished"))
+        }
+        Some(job) => {
+            // cooperative: the run thread observes the handle at its
+            // next poll tick and DELETE-fans-out to every live shard
+            job.handle.cancel();
+            Response::json(
+                200,
+                &Value::obj(vec![
+                    ("job", Value::Num(id as f64)),
+                    ("status", Value::Str("cancelling".into())),
+                ]),
+            )
+        }
+    }
+}
+
+fn run_map(req: &Request, id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let jobs = state.jobs.lock().unwrap();
+    match jobs.map.get(&id) {
+        None => Response::json_error(404, &format!("no job {id}")),
+        Some(job) => match (&job.state, &job.result) {
+            (JobState::Done, Some(res)) => {
+                crate::serve::map_response(req, &res.map, res.width, res.height)
+            }
+            (JobState::Failed { error }, _) => {
+                Response::json_error(409, &format!("job {id} failed: {error}"))
+            }
+            (JobState::Cancelled, _) => {
+                Response::json_error(409, &format!("job {id} was cancelled"))
+            }
+            _ => Response::json_error(409, &format!("job {id} is not finished")),
+        },
+    }
+}
+
+fn run_result(id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let jobs = state.jobs.lock().unwrap();
+    match jobs.map.get(&id) {
+        None => Response::json_error(404, &format!("no job {id}")),
+        Some(job) => match (&job.state, &job.result) {
+            (JobState::Done, Some(res)) => Response::json(200, &res.to_json()),
+            (JobState::Failed { error }, _) => {
+                Response::json_error(409, &format!("job {id} failed: {error}"))
+            }
+            (JobState::Cancelled, _) => {
+                Response::json_error(409, &format!("job {id} was cancelled"))
+            }
+            _ => Response::json_error(409, &format!("job {id} is not finished")),
+        },
+    }
+}
+
+// -- session proxying ----------------------------------------------------
+
+fn list_sessions(state: &GatewayState) -> Response {
+    let arr = state
+        .sessions
+        .lock()
+        .unwrap()
+        .keys()
+        .cloned()
+        .map(Value::Str)
+        .collect();
+    Response::json(200, &Value::obj(vec![("sessions", Value::Arr(arr))]))
+}
+
+/// Create routes to the least-loaded live worker; the gateway records
+/// the owner on success and forwards every later request there —
+/// session state (the fitted history) lives on exactly one worker.
+fn create_session(req: &Request, name: &str, state: &GatewayState) -> Response {
+    let owner = state.sessions.lock().unwrap().get(name).cloned();
+    let target = match owner {
+        // existing name: let the owner answer (it will 409)
+        Some(owner) => owner,
+        None => {
+            let placement = state.fleet.placement();
+            if placement.is_empty() {
+                return Response::json_error(
+                    503,
+                    "no live workers to host the session — register workers first",
+                );
+            }
+            let owners = state.sessions.lock().unwrap();
+            placement
+                .iter()
+                .map(|(w, _)| w)
+                .min_by_key(|w| owners.values().filter(|o| o == w).count())
+                .cloned()
+                .unwrap()
+        }
+    };
+    match forward(&target, req, state.cfg.io_timeout) {
+        Ok(resp) => {
+            if resp.status == 201 {
+                state
+                    .sessions
+                    .lock()
+                    .unwrap()
+                    .insert(name.to_string(), target);
+            }
+            resp
+        }
+        Err(e) => {
+            state.fleet.mark_down(&target);
+            Response::json_error(502, &format!("worker {target}: {e:#}"))
+        }
+    }
+}
+
+fn proxy_session(req: &Request, name: &str, state: &GatewayState) -> Response {
+    let Some(owner) = state.sessions.lock().unwrap().get(name).cloned() else {
+        return Response::json_error(404, &format!("no session named {name:?}"));
+    };
+    if !state.fleet.is_alive(&owner) {
+        return Response::json_error(
+            503,
+            &format!("session {name:?} lives on worker {owner}, which is not alive"),
+        );
+    }
+    match forward(&owner, req, state.cfg.io_timeout) {
+        Ok(resp) => resp,
+        Err(e) => {
+            state.fleet.mark_down(&owner);
+            Response::json_error(502, &format!("worker {owner}: {e:#}"))
+        }
+    }
+}
+
+/// Forward one request verbatim (method, path, query, content type,
+/// body) and relay the worker's response.
+fn forward(worker: &str, req: &Request, io: Duration) -> Result<Response> {
+    let mut path = req.path.clone();
+    if !req.query.is_empty() {
+        let qs: Vec<String> = req
+            .query
+            .iter()
+            .map(|(k, v)| format!("{}={}", enc(k), enc(v)))
+            .collect();
+        path = format!("{path}?{}", qs.join("&"));
+    }
+    let mut c = Client::connect_timeout(worker, io)?;
+    let (status, headers, body) =
+        c.request_parts(&req.method, &path, req.content_type(), &req.body)?;
+    let ctype = headers
+        .iter()
+        .find(|(k, _)| k == "content-type")
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("application/octet-stream");
+    Ok(Response::bytes(status, ctype, body))
+}
+
+/// Minimal percent-encoder for re-serialising decoded query values.
+fn enc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+// -- the CLI front door --------------------------------------------------
+
+/// The `bfast gateway` flag surface.
+pub fn gateway_command() -> Command {
+    Command::new("gateway", "resident fleet coordinator: one /v1 facade over many workers")
+        .opt("addr", "127.0.0.1:7979", "listen address (host:port)")
+        .opt("workers", "", "static worker addresses to seed (host:port,...)")
+        .opt("http-threads", "0", "HTTP worker threads (0 = auto)")
+        .opt("max-body-mb", "256", "largest accepted request body (MiB)")
+        .opt("poll-ms", "25", "per-shard worker poll interval (ms)")
+        .opt("io-timeout-ms", "10000", "per-I/O timeout on worker sockets (ms)")
+        .opt("heartbeat-timeout-ms", "5000", "beats older than this mark a worker stale (ms)")
+        .opt("sweep-ms", "1000", "health probe + throughput scrape interval (ms)")
+        .opt("submit-attempts", "8", "bounded 429-backoff tries per shard submit")
+        .opt("max-resplits", "4", "re-split budget per pixel range on worker death")
+        .opt("max-inflight", "8", "concurrent runs admitted before 429")
+        .opt("finished-cap", "256", "finished run records retained")
+}
+
+/// Parse `bfast gateway` flags into a [`GatewayConfig`].
+pub fn gateway_config_from_matches(m: &Matches) -> Result<GatewayConfig> {
+    let workers: Vec<String> = m
+        .str("workers")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    Ok(GatewayConfig {
+        addr: m.str("addr")?.to_string(),
+        workers,
+        http_threads: m.usize("http-threads")?,
+        max_body: m.usize("max-body-mb")? << 20,
+        poll: Duration::from_millis(m.u64("poll-ms")?),
+        io_timeout: Duration::from_millis(m.u64("io-timeout-ms")?),
+        heartbeat_timeout: Duration::from_millis(m.u64("heartbeat-timeout-ms")?),
+        sweep: Duration::from_millis(m.u64("sweep-ms")?),
+        submit_attempts: m.usize("submit-attempts")?,
+        max_resplits: m.usize("max-resplits")?,
+        max_inflight: m.usize("max-inflight")?,
+        finished_cap: m.usize("finished-cap")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_lifecycle_beat_stale_down_recover() {
+        let fleet = Fleet::new(Duration::from_millis(80));
+        fleet.beat("a:1", None);
+        fleet.beat("b:2", Some(3.0));
+        assert_eq!(fleet.counts(), (2, 2));
+        assert!(fleet.is_alive("a:1"));
+        // placement is address-ordered with effective weights
+        let p = fleet.placement();
+        assert_eq!(p[0].0, "a:1");
+        assert_eq!(p[1], ("b:2".to_string(), 3.0));
+        // down beats staleness: an explicit mark removes it now
+        fleet.mark_down("a:1");
+        assert!(!fleet.is_alive("a:1"));
+        assert_eq!(fleet.placement().len(), 1);
+        // ...and a fresh beat resurrects it
+        fleet.beat("a:1", None);
+        assert!(fleet.is_alive("a:1"));
+        // stale: no beat within the timeout
+        std::thread::sleep(Duration::from_millis(120));
+        assert!(!fleet.is_alive("a:1"));
+        assert_eq!(fleet.counts(), (2, 0));
+        let snap = fleet.snapshot();
+        assert_eq!(snap[0].status(), "stale");
+    }
+
+    #[test]
+    fn fleet_rate_ema_from_scrapes() {
+        let fleet = Fleet::new(Duration::from_secs(60));
+        fleet.beat("w:1", None);
+        let t0 = Instant::now();
+        fleet.observe_chunks("w:1", 100, t0);
+        // first delta: 100 chunks in 1s → rate adopts 100
+        fleet.observe_chunks("w:1", 200, t0 + Duration::from_secs(1));
+        let r1 = fleet.snapshot()[0].rate;
+        assert!((r1 - 100.0).abs() < 1e-9, "{r1}");
+        // idle scrape (no delta) must NOT decay the rate
+        fleet.observe_chunks("w:1", 200, t0 + Duration::from_secs(2));
+        assert_eq!(fleet.snapshot()[0].rate, r1);
+        // counter went backwards (restart) → re-anchor, keep rate
+        fleet.observe_chunks("w:1", 10, t0 + Duration::from_secs(3));
+        assert_eq!(fleet.snapshot()[0].rate, r1);
+        // faster delta pulls the EMA up
+        fleet.observe_chunks("w:1", 310, t0 + Duration::from_secs(4));
+        let r2 = fleet.snapshot()[0].rate;
+        assert!(r2 > r1, "{r2} should exceed {r1}");
+    }
+
+    #[test]
+    fn scrape_counter_finds_the_line() {
+        let page = b"bfast_uptime_seconds 1.5\nbfast_chunks_done_total 42\nbfast_jobs_done 1\n";
+        assert_eq!(scrape_counter(page, "bfast_chunks_done_total"), Some(42));
+        assert_eq!(scrape_counter(page, "bfast_nope"), None);
+    }
+
+    #[test]
+    fn enc_escapes_reserved() {
+        assert_eq!(enc("abc-123_.~"), "abc-123_.~");
+        assert_eq!(enc("a b&c=d"), "a%20b%26c%3Dd");
+    }
+
+    #[test]
+    fn gateway_flags_parse() {
+        let args: Vec<String> = [
+            "--addr", "127.0.0.1:0", "--workers", "a:1, b:2", "--poll-ms", "5",
+            "--heartbeat-timeout-ms", "250", "--sweep-ms", "50", "--max-resplits", "2",
+            "--max-inflight", "3",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let m = gateway_command().parse(&args).unwrap();
+        let cfg = gateway_config_from_matches(&m).unwrap();
+        assert_eq!(cfg.workers, vec!["a:1", "b:2"]);
+        assert_eq!(cfg.poll, Duration::from_millis(5));
+        assert_eq!(cfg.heartbeat_timeout, Duration::from_millis(250));
+        assert_eq!(cfg.sweep, Duration::from_millis(50));
+        assert_eq!(cfg.max_resplits, 2);
+        assert_eq!(cfg.max_inflight, 3);
+        assert_eq!(cfg.max_body, 256 << 20);
+    }
+}

@@ -22,6 +22,15 @@
 //!   payload, served by `GET /v1/runs/{id}/result`), and per-shard
 //!   [`api::PartialResult`]s merge associatively back into the
 //!   full-scene bits.
+//! * **L6 ([`gateway`])** — the resident fleet coordinator:
+//!   `bfast gateway` keeps the `/v1` facade up as a long-lived
+//!   process in front of N workers. Workers register and heartbeat
+//!   (`POST /v1/workers`; `bfast serve --gateway` self-registers),
+//!   placement weights follow each worker's observed chunks/sec
+//!   (scraped from its `/metrics`), and a shard whose worker dies
+//!   mid-run is re-split across the survivors — still bit-identical
+//!   to a single-process run (`tests/gateway.rs`, `tests/chaos.rs`,
+//!   with deterministic fault injection via [`gateway::chaos`]).
 //! * **L5 ([`shard`])** — the fleet layer: `bfast shard` splits one
 //!   request by pixel range, fans the slices out across N serve
 //!   workers over keep-alive sockets, streams per-shard progress
@@ -159,6 +168,7 @@ pub mod cpu;
 pub mod design;
 pub mod error;
 pub mod fill;
+pub mod gateway;
 pub mod history;
 pub mod json;
 pub mod lambda;

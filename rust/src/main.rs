@@ -40,6 +40,8 @@ COMMANDS:
                 live monitor sessions (--addr host:port --state dir/)
   shard         fan one analysis out across several serve workers and
                 merge the shard maps bit-exactly (--workers a:p,b:p)
+  gateway       resident fleet coordinator: health-checked workers,
+                throughput-weighted placement, mid-run rebalancing
   client        talk to a running server (health | submit | cancel | ingest | ...)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
@@ -60,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "monitor" => cmd_monitor(rest),
         "serve" => cmd_serve(rest),
         "shard" => cmd_shard(rest),
+        "gateway" => cmd_gateway(rest),
         "client" => cmd_client(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
@@ -481,7 +484,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("queue", "32", "job queue capacity (further submissions get 429)")
     .opt("max-body-mb", "256", "largest accepted request body (MiB)")
     .opt("finished-cap", "256", "finished job records kept for status/map queries")
-    .opt("finished-max-age-s", "3600", "seconds a finished job record is retained (0 = no age limit)");
+    .opt("finished-max-age-s", "3600", "seconds a finished job record is retained (0 = no age limit)")
+    .opt("gateway", "", "gateway address to register with and heartbeat (host:port)")
+    .opt("advertise", "", "address advertised to the gateway (default: the bound address)")
+    .opt("heartbeat-ms", "1000", "heartbeat interval when --gateway is set (ms)");
     let m = cmd.parse(args)?;
     let cfg = ServeConfig {
         addr: m.str("addr")?.to_string(),
@@ -496,6 +502,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         finished_cap: m.usize("finished-cap")?,
         finished_max_age: Duration::from_secs(m.u64("finished-max-age-s")?),
         runner: RunnerConfig::default(),
+        gateway: match m.str("gateway")? {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        advertise: match m.str("advertise")? {
+            "" => None,
+            s => Some(s.to_string()),
+        },
+        heartbeat: Duration::from_millis(m.u64("heartbeat-ms")?),
     };
     let state_desc = cfg
         .state_dir
@@ -510,6 +525,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         m.usize("queue")?
     );
     server.wait()
+}
+
+fn cmd_gateway(args: &[String]) -> Result<()> {
+    let m = bfast::gateway::gateway_command().parse(args)?;
+    let cfg = bfast::gateway::gateway_config_from_matches(&m)?;
+    let statics = cfg.workers.len();
+    let gw = bfast::gateway::Gateway::start(cfg)?;
+    println!(
+        "bfast gateway: listening on http://{} ({statics} static worker(s) seeded; \
+         workers join via POST /v1/workers); POST /shutdown stops it",
+        gw.addr()
+    );
+    gw.wait()
 }
 
 fn client_param_spec(m: &bfast::cli::Matches) -> Result<api::ParamSpec> {
@@ -569,9 +597,9 @@ fn client_wait_for_job(addr: &str, job: usize) -> Result<()> {
 fn cmd_client(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "client",
-        "HTTP client for a running `bfast serve`. Positional action: \
-         health | metrics | jobs | submit | status | cancel | map | result | \
-         session-init | session | ingest | session-map | shutdown",
+        "HTTP client for a running `bfast serve` or `bfast gateway`. Positional \
+         action: health | metrics | jobs | workers | submit | status | cancel | \
+         map | result | session-init | session | ingest | session-map | shutdown",
     )
     .opt("addr", "127.0.0.1:7878", "server address (host:port)")
     .opt("input", "", "input file (.bsq scene; .bten/.pgm layer for ingest)")
@@ -626,6 +654,29 @@ fn cmd_client(args: &[String]) -> Result<()> {
                 })
                 .collect::<Result<_>>()?;
             print!("{}", bfast::report::jobs_table(&rows).to_console());
+        }
+        "workers" => {
+            // gateway-only: the fleet view behind GET /v1/workers
+            let body = expect_ok(shttp::roundtrip(addr, "GET", "/v1/workers", "", &[])?)?;
+            let v = json::parse(std::str::from_utf8(&body)?.trim())?;
+            let rows: Vec<bfast::gateway::WorkerInfo> = v
+                .get("workers")?
+                .as_arr()?
+                .iter()
+                .map(|w| {
+                    Ok(bfast::gateway::WorkerInfo {
+                        addr: w.get("addr")?.as_str()?.to_string(),
+                        alive: w.get("alive")?.as_bool()?,
+                        down: w.get("down")?.as_bool()?,
+                        is_static: w.get("static")?.as_bool()?,
+                        weight: w.get("weight")?.as_f64()?,
+                        rate: w.get("rate_chunks_per_s")?.as_f64()?,
+                        beats: w.get("beats")?.as_usize()? as u64,
+                        last_beat: Duration::from_secs_f64(w.get("last_beat_s")?.as_f64()?),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            print!("{}", bfast::report::workers_table(&rows).to_console());
         }
         "submit" => {
             // post exactly what the library executes: the canonical

@@ -114,6 +114,19 @@ impl PhaseTimes {
     }
 }
 
+/// One step of an exponential moving average: `prev + alpha * (sample
+/// - prev)`. A `prev` of exactly 0.0 means "no observation yet" and
+/// adopts the sample outright — so the first real measurement isn't
+/// dragged toward zero by the uninitialised state. (Gateway worker
+/// throughput tracking; rates are strictly positive when observed.)
+pub fn ema(prev: f64, sample: f64, alpha: f64) -> f64 {
+    if prev == 0.0 {
+        sample
+    } else {
+        prev + alpha * (sample - prev)
+    }
+}
+
 /// Median / MAD over repeated wall-clock samples (bench harness use).
 pub fn median(xs: &mut [f64]) -> f64 {
     assert!(!xs.is_empty());
@@ -129,6 +142,15 @@ pub fn median(xs: &mut [f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ema_adopts_first_sample_then_smooths() {
+        assert_eq!(ema(0.0, 8.0, 0.5), 8.0);
+        assert_eq!(ema(8.0, 4.0, 0.5), 6.0);
+        assert_eq!(ema(6.0, 6.0, 0.25), 6.0);
+        // alpha=1 tracks the sample exactly
+        assert_eq!(ema(3.0, 9.0, 1.0), 9.0);
+    }
 
     #[test]
     fn accumulates_and_orders() {

@@ -162,6 +162,27 @@ pub fn jobs_table(jobs: &[(u64, String, f64)]) -> Table {
     t
 }
 
+/// Render the gateway's fleet view (`bfast client workers` /
+/// `GET /v1/workers`): one row per registered worker with its health,
+/// placement weight and observed throughput.
+pub fn workers_table(workers: &[crate::gateway::WorkerInfo]) -> Table {
+    let mut t = Table::new(
+        "fleet workers",
+        &["worker", "status", "weight", "chunks_per_s", "beats", "last_beat_s"],
+    );
+    for w in workers {
+        t.row(vec![
+            w.addr.clone(),
+            w.status().to_string(),
+            format!("{:.2}", w.weight),
+            format!("{:.2}", w.rate),
+            w.beats.to_string(),
+            format!("{:.1}", w.last_beat.as_secs_f64()),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +255,41 @@ mod tests {
         assert!(con.contains("[50, 101)"), "{con}");
         assert!(con.contains("127.0.0.1:7902"), "{con}");
         assert!(con.contains("1.500"), "{con}");
+    }
+
+    #[test]
+    fn workers_table_renders_fleet() {
+        use std::time::Duration;
+        let workers = vec![
+            crate::gateway::WorkerInfo {
+                addr: "127.0.0.1:7901".into(),
+                alive: true,
+                down: false,
+                is_static: false,
+                weight: 3.0,
+                rate: 12.5,
+                beats: 42,
+                last_beat: Duration::from_millis(400),
+            },
+            crate::gateway::WorkerInfo {
+                addr: "127.0.0.1:7902".into(),
+                alive: false,
+                down: true,
+                is_static: true,
+                weight: 1.0,
+                rate: 0.0,
+                beats: 7,
+                last_beat: Duration::from_secs(9),
+            },
+        ];
+        let t = workers_table(&workers);
+        assert_eq!(t.rows.len(), 2);
+        let con = t.to_console();
+        assert!(con.contains("fleet workers"));
+        assert!(con.contains("alive"), "{con}");
+        assert!(con.contains("down"), "{con}");
+        assert!(con.contains("12.50"), "{con}");
+        assert!(con.contains("9.0"), "{con}");
     }
 
     #[test]

@@ -169,6 +169,7 @@ pub fn status_text(status: u16) -> &'static str {
         413 => "Payload Too Large",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
+        502 => "Bad Gateway",
         503 => "Service Unavailable",
         _ => "",
     }
@@ -411,6 +412,27 @@ impl Client {
             TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         let _ = stream.set_nodelay(true);
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        Ok(Client { addr: addr.to_string(), reader: BufReader::new(stream) })
+    }
+
+    /// [`Client::connect`] with an explicit I/O bound: the TCP connect
+    /// and every subsequent read/write give up after `io` instead of
+    /// the default 30 s. This is what caps a caller's exposure to a
+    /// black-holed peer — a probe or poll that never answers surfaces
+    /// as a transport error after `io`, not a stuck thread. (The
+    /// gateway's health sweep and placement engine run on this.)
+    pub fn connect_timeout(addr: &str, io: Duration) -> Result<Client> {
+        use std::net::ToSocketAddrs;
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| err!("{addr} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, io)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(io));
+        let _ = stream.set_write_timeout(Some(io));
         Ok(Client { addr: addr.to_string(), reader: BufReader::new(stream) })
     }
 

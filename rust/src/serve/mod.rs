@@ -98,6 +98,14 @@ pub struct ServeConfig {
     pub finished_max_age: Duration,
     /// Coordinator configuration for the shared runner.
     pub runner: RunnerConfig,
+    /// Gateway address to register with and heartbeat
+    /// (`POST /v1/workers`); `None` = standalone worker.
+    pub gateway: Option<String>,
+    /// Address advertised to the gateway (defaults to the bound
+    /// address — override when workers sit behind NAT or a proxy).
+    pub advertise: Option<String>,
+    /// Heartbeat interval when `gateway` is set.
+    pub heartbeat: Duration,
 }
 
 impl Default for ServeConfig {
@@ -113,6 +121,9 @@ impl Default for ServeConfig {
             finished_cap: policy.max_finished,
             finished_max_age: policy.max_age,
             runner: RunnerConfig::default(),
+            gateway: None,
+            advertise: None,
+            heartbeat: Duration::from_secs(1),
         }
     }
 }
@@ -138,6 +149,7 @@ pub struct Server {
     addr: SocketAddr,
     state: Arc<ServerState>,
     accept: std::thread::JoinHandle<()>,
+    beat: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -194,7 +206,32 @@ impl Server {
                 eprintln!("bfast serve: persisting sessions on shutdown: {e:#}");
             }
         });
-        Ok(Server { addr, state, accept })
+        let beat = cfg.gateway.as_ref().map(|gateway| {
+            let gateway = gateway.clone();
+            let advertise = cfg.advertise.clone().unwrap_or_else(|| addr.to_string());
+            let interval = cfg.heartbeat.max(Duration::from_millis(50));
+            let beat_state = Arc::clone(&state);
+            std::thread::spawn(move || {
+                // Registration and heartbeat are the same idempotent
+                // POST; failures are tolerated (the gateway may not be
+                // up yet, or may restart) — the next beat re-registers.
+                let body = Value::obj(vec![("addr", Value::Str(advertise))])
+                    .to_string_compact();
+                let mut next = Instant::now();
+                while !beat_state.shutdown.load(Ordering::SeqCst) {
+                    if Instant::now() >= next {
+                        let io = Duration::from_secs(2);
+                        let _ = http::Client::connect_timeout(&gateway, io).and_then(|mut c| {
+                            c.request("POST", "/v1/workers", "application/json", body.as_bytes())
+                        });
+                        next = Instant::now() + interval;
+                    }
+                    // short ticks so shutdown is observed promptly
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            })
+        });
+        Ok(Server { addr, state, accept, beat })
     }
 
     /// The bound address (resolves an ephemeral port request).
@@ -207,7 +244,13 @@ impl Server {
     pub fn wait(self) -> Result<()> {
         self.accept
             .join()
-            .map_err(|_| err!("serve accept loop panicked"))
+            .map_err(|_| err!("serve accept loop panicked"))?;
+        // shutdown is already flagged once the accept loop exits, so
+        // the heartbeat thread stops within one 50 ms tick
+        if let Some(beat) = self.beat {
+            beat.join().map_err(|_| err!("serve heartbeat loop panicked"))?;
+        }
+        Ok(())
     }
 
     /// Trigger a graceful shutdown and wait for it to complete.
@@ -327,6 +370,7 @@ fn metrics(state: &ServerState) -> Response {
     let _ = writeln!(out, "bfast_jobs_done {}", stats.done);
     let _ = writeln!(out, "bfast_jobs_failed {}", stats.failed);
     let _ = writeln!(out, "bfast_jobs_cancelled {}", stats.cancelled);
+    let _ = writeln!(out, "bfast_chunks_done_total {}", stats.chunks_done);
     let _ = writeln!(out, "bfast_queue_capacity {}", state.queue.capacity());
     let policy = state.queue.policy();
     let _ = writeln!(out, "bfast_finished_records_cap {}", policy.max_finished);
@@ -382,7 +426,7 @@ fn params_from_query(req: &Request) -> Result<ParamSpec> {
 /// `path` source would let any client make the server read arbitrary
 /// local files (the path form is for the CLI and for trusted
 /// shard-fanout deployments with shared storage, not the open wire).
-fn reject_path_source(source: &SceneSource) -> Result<()> {
+pub(crate) fn reject_path_source(source: &SceneSource) -> Result<()> {
     match source {
         SceneSource::Path(p) => {
             bail!("scene source {p:?} is a path; the wire only accepts inline scenes")
@@ -394,7 +438,7 @@ fn reject_path_source(source: &SceneSource) -> Result<()> {
 /// Lower either submit body form into the one request type: a JSON
 /// body *is* an [`AnalysisRequest`]; raw `.bsq` bytes + query params
 /// are sugar for an inline request.
-fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
+pub(crate) fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
     let analysis = if req.is_json() {
         let text = std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?;
         let ar = AnalysisRequest::from_json_str(text)?;
@@ -570,7 +614,7 @@ fn run_result(id_seg: &str, state: &ServerState) -> Response {
 }
 
 /// Break map as JSON, or as a momax-heatmap PGM with `?format=pgm`.
-fn map_response(
+pub(crate) fn map_response(
     req: &Request,
     map: &BreakMap,
     width: Option<usize>,

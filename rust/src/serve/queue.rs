@@ -142,6 +142,9 @@ pub struct QueueStats {
     pub done: usize,
     pub failed: usize,
     pub cancelled: usize,
+    /// Chunks executed across every completed run — the monotonic
+    /// counter a gateway scrapes to estimate this worker's throughput.
+    pub chunks_done: u64,
     /// Engine phase times accumulated across every completed run.
     pub phases: PhaseTimes,
 }
@@ -154,6 +157,7 @@ struct QueueInner {
     submitted: u64,
     rejected: u64,
     evicted: u64,
+    chunks_done: u64,
     phases: PhaseTimes,
 }
 
@@ -219,6 +223,7 @@ impl JobQueue {
                 submitted: 0,
                 rejected: 0,
                 evicted: 0,
+                chunks_done: 0,
                 phases: PhaseTimes::new(),
             }),
             ready: Condvar::new(),
@@ -295,6 +300,7 @@ impl JobQueue {
         if let Some(p) = &result.phases {
             inner.phases.merge(p);
         }
+        inner.chunks_done += result.chunks as u64;
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Done;
             // the run's own view wins: a pixel_range request analyses a
@@ -393,6 +399,7 @@ impl JobQueue {
             submitted: inner.submitted,
             rejected: inner.rejected,
             evicted: inner.evicted,
+            chunks_done: inner.chunks_done,
             queued: 0,
             running: 0,
             done: 0,

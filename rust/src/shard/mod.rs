@@ -34,11 +34,13 @@ use crate::api::{
     ParamSpec, PartialResult, SceneSource,
 };
 use crate::cli::{Command, Matches};
-use crate::error::{bail, ensure, err, Context, Result};
+use crate::error::{bail, ensure, err, BfastError, Context, Result};
 use crate::json;
 use crate::raster::TimeStack;
 use crate::serve::http::{self, Client};
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Fan-out knobs (`bfast shard` flags).
@@ -49,12 +51,17 @@ pub struct ShardOptions {
     /// Per-shard job status poll interval.
     pub poll: Duration,
     /// Placement attempts per shard across workers (0 = one per
-    /// worker): attempt `n` for shard `i` goes to worker
-    /// `(i + n) % workers`, so a retry always lands on a *different*
-    /// (surviving) worker when there is one.
+    /// worker): attempt `n` for shard `i` starts from slot
+    /// `(i + n) % workers` and then skips forward past any worker
+    /// already found dead this run, so a retry always lands on a
+    /// *surviving* worker when there is one.
     pub attempts: usize,
     /// Bounded 429-backoff tries per placement.
     pub submit_attempts: usize,
+    /// Per-I/O timeout on worker sockets (connect, read, write): a
+    /// black-holed worker surfaces as a transport error after this
+    /// long instead of pinning a shard thread.
+    pub io_timeout: Duration,
 }
 
 impl Default for ShardOptions {
@@ -64,8 +71,73 @@ impl Default for ShardOptions {
             poll: Duration::from_millis(50),
             attempts: 0,
             submit_attempts: 8,
+            io_timeout: Duration::from_secs(30),
         }
     }
+}
+
+/// The single-placement subset of [`ShardOptions`] —
+/// what [`place_on_worker`] needs to drive one shard on one worker.
+#[derive(Clone, Debug)]
+pub struct PlaceOptions {
+    /// Job status poll interval.
+    pub poll: Duration,
+    /// Bounded 429-backoff tries for the submit.
+    pub submit_attempts: usize,
+    /// Per-I/O timeout on the worker socket.
+    pub io_timeout: Duration,
+}
+
+impl From<&ShardOptions> for PlaceOptions {
+    fn from(o: &ShardOptions) -> Self {
+        Self { poll: o.poll, submit_attempts: o.submit_attempts, io_timeout: o.io_timeout }
+    }
+}
+
+/// Why a placement failed — the classification a coordinator's
+/// recovery policy turns on:
+///
+/// * [`PlaceError::WorkerDown`] — the *worker* is the problem
+///   (connect/transport failure, 5xx, a poll that found the job gone):
+///   re-placing the same shard on a different worker can succeed, and
+///   the worker should be skipped for the rest of the run.
+/// * [`PlaceError::Job`] — the *job* is the problem (4xx, the analysis
+///   failed, the caller cancelled): the same placement would fail on
+///   any worker, so don't burn the fleet retrying it.
+#[derive(Debug)]
+pub enum PlaceError {
+    WorkerDown(BfastError),
+    Job(BfastError),
+}
+
+impl PlaceError {
+    pub fn inner(&self) -> &BfastError {
+        match self {
+            PlaceError::WorkerDown(e) | PlaceError::Job(e) => e,
+        }
+    }
+
+    pub fn into_inner(self) -> BfastError {
+        match self {
+            PlaceError::WorkerDown(e) | PlaceError::Job(e) => e,
+        }
+    }
+
+    /// The caller's own [`JobHandle`] was cancelled (always a
+    /// [`PlaceError::Job`]).
+    pub fn is_cancelled(&self) -> bool {
+        api::is_cancelled(self.inner())
+    }
+}
+
+/// What one successful placement produced.
+#[derive(Debug)]
+pub struct Placement {
+    pub partial: PartialResult,
+    /// Chunks the worker executed for this shard.
+    pub chunks: usize,
+    /// The worker-side wall time of the shard run.
+    pub wall: Duration,
 }
 
 /// How one shard fared (the `bfast shard` report table).
@@ -104,6 +176,72 @@ pub fn split_ranges(pixels: usize, k: usize) -> Vec<(usize, usize)> {
     let mut start = 0;
     for i in 0..k {
         let width = base + usize::from(i < extra);
+        out.push((start, start + width));
+        start += width;
+    }
+    debug_assert_eq!(start, pixels);
+    out
+}
+
+/// Partition `[0, pixels)` into exactly `weights.len()` contiguous
+/// ranges with widths ∝ the weights (largest-remainder apportionment,
+/// index-order tiebreak — fully deterministic). Ranges align
+/// positionally with `weights`, so the caller can zip them back to
+/// whatever the weights describe (per-worker throughput, say); a range
+/// may be **empty** when its weight rounds to zero pixels — skip
+/// `(a, b)` with `a == b` when placing.
+///
+/// Non-finite or non-positive weights are replaced by the mean of the
+/// usable (finite, positive) weights — or 1.0 when none are — so a
+/// worker with no throughput observation yet gets an average-sized
+/// shard rather than none.
+pub fn split_weighted(pixels: usize, weights: &[f64]) -> Vec<(usize, usize)> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    let usable: Vec<f64> =
+        weights.iter().copied().filter(|w| w.is_finite() && *w > 0.0).collect();
+    let fallback = if usable.is_empty() {
+        1.0
+    } else {
+        usable.iter().sum::<f64>() / usable.len() as f64
+    };
+    let w: Vec<f64> = weights
+        .iter()
+        .map(|&x| if x.is_finite() && x > 0.0 { x } else { fallback })
+        .collect();
+    let total: f64 = w.iter().sum();
+    let mut widths = Vec::with_capacity(w.len());
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(w.len());
+    let mut assigned = 0usize;
+    for (i, wi) in w.iter().enumerate() {
+        let quota = pixels as f64 * wi / total;
+        let floor = quota.floor() as usize;
+        widths.push(floor);
+        assigned += floor;
+        fracs.push((quota - floor as f64, i));
+    }
+    // hand the remainder out by descending fractional part (cycling if
+    // float error left more remainder than weights — harmless)
+    fracs.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    let mut remainder = pixels.saturating_sub(assigned);
+    let mut i = 0;
+    while remainder > 0 {
+        widths[fracs[i % fracs.len()].1] += 1;
+        remainder -= 1;
+        i += 1;
+    }
+    // float-error insurance in the other direction: trim overshoot
+    while assigned > pixels {
+        let imax = (0..widths.len()).max_by_key(|&j| widths[j]).unwrap();
+        widths[imax] -= 1;
+        assigned -= 1;
+    }
+    let mut out = Vec::with_capacity(widths.len());
+    let mut start = 0;
+    for width in widths {
         out.push((start, start + width));
         start += width;
     }
@@ -175,8 +313,13 @@ pub fn run_sharded(
     // (chunks_done, chunks_total) per shard, summed into the handle
     let cells: Vec<(AtomicUsize, AtomicUsize)> =
         ranges.iter().map(|_| Default::default()).collect();
+    // worker indices that failed as WorkerDown this run: every shard
+    // thread publishes its corpses here, so nobody's *retry* cycles
+    // back onto a worker another shard already found dead
+    let dead = Mutex::new(HashSet::new());
     let stack = &*stack;
     let cells = &cells;
+    let dead = &dead;
     let outcomes: Vec<Result<(PartialResult, ShardReport)>> = std::thread::scope(|scope| {
         let threads: Vec<_> = ranges
             .iter()
@@ -198,6 +341,7 @@ pub fn run_sharded(
                         opts,
                         handle,
                         cells,
+                        dead,
                     )
                 })
             })
@@ -260,6 +404,7 @@ fn run_one_shard(
     opts: &ShardOptions,
     handle: &JobHandle,
     cells: &[(AtomicUsize, AtomicUsize)],
+    dead: &Mutex<HashSet<usize>>,
 ) -> Result<(PartialResult, ShardReport)> {
     // The wire form ships only this shard's pixel strip (bandwidth and
     // worker memory ∝ m/k). Slicing here instead of forwarding the
@@ -279,33 +424,53 @@ fn run_one_shard(
     };
     let body = sub.to_json_string();
     drop(sub); // the JSON carries the slice; don't hold it twice
+    let popts = PlaceOptions::from(opts);
+    let progress = |done: usize, total: usize| {
+        cells[idx].0.store(done, Ordering::Relaxed);
+        cells[idx].1.store(total, Ordering::Relaxed);
+        publish_progress(handle, cells);
+    };
     let mut errors: Vec<String> = Vec::new();
     for attempt in 0..attempts.max(1) {
         if handle.is_cancelled() {
             return Err(api::cancelled());
         }
-        let worker = &workers[(idx + attempt) % workers.len()];
-        match drive_worker(worker, &body, idx, range, opts, handle, cells) {
-            Ok((partial, chunks, wall)) => {
+        // rotate from the static home slot, but skip every worker some
+        // shard has already found dead this run — a retry must land on
+        // a *live* candidate, not cycle blindly onto a known corpse
+        let pick = {
+            let dead = dead.lock().unwrap();
+            (0..workers.len())
+                .map(|o| (idx + attempt + o) % workers.len())
+                .find(|wi| !dead.contains(wi))
+        };
+        let Some(wi) = pick else {
+            errors.push("every worker is known dead this run".into());
+            break;
+        };
+        let worker = &workers[wi];
+        match place_on_worker(worker, &body, range, &popts, handle, &progress) {
+            Ok(p) => {
                 return Ok((
-                    partial,
+                    p.partial,
                     ShardReport {
                         shard: idx,
                         pixel_range: range,
                         worker: worker.clone(),
                         attempts: attempt + 1,
-                        chunks,
-                        wall,
+                        chunks: p.chunks,
+                        wall: p.wall,
                     },
                 ));
             }
-            Err(e) if api::is_cancelled(&e) => return Err(e),
+            Err(e) if e.is_cancelled() => return Err(e.into_inner()),
             Err(e) => {
-                errors.push(format!("{worker}: {e:#}"));
+                if matches!(e, PlaceError::WorkerDown(_)) {
+                    dead.lock().unwrap().insert(wi);
+                }
+                errors.push(format!("{worker}: {:#}", e.inner()));
                 // a fresh placement starts from zero chunks
-                cells[idx].0.store(0, Ordering::Relaxed);
-                cells[idx].1.store(0, Ordering::Relaxed);
-                publish_progress(handle, cells);
+                progress(0, 0);
             }
         }
     }
@@ -317,33 +482,46 @@ fn run_one_shard(
     )
 }
 
-/// One placement: submit the shard to `worker`, poll it to completion
-/// (streaming progress, honouring cancellation), fetch the typed
-/// result. Any transport or job failure is an `Err` — the caller
-/// re-places the shard on the next worker.
-fn drive_worker(
+/// One placement: submit the pre-serialized request `body` to
+/// `worker`, poll the job to completion (streaming `(done, total)`
+/// chunk progress through `progress`, honouring cancellation of
+/// `handle` as a `DELETE` on the worker), and fetch the typed result
+/// as a [`PartialResult`] covering `range`. Failures come back
+/// classified as [`PlaceError`] so the caller's recovery policy can
+/// distinguish a dead worker (re-place elsewhere) from a doomed job
+/// (fail fast). On any non-cancellation failure after submit, the
+/// worker-side job is best-effort `DELETE`d so a re-placed shard
+/// doesn't leave an orphan computing the same pixels.
+///
+/// This is the placement primitive shared by the one-shot
+/// [`run_sharded`] coordinator and the resident
+/// [`crate::gateway`] (which re-splits `range` onto survivors when
+/// this returns [`PlaceError::WorkerDown`] mid-run).
+pub fn place_on_worker(
     worker: &str,
     body: &str,
-    idx: usize,
     range: (usize, usize),
-    opts: &ShardOptions,
+    opts: &PlaceOptions,
     handle: &JobHandle,
-    cells: &[(AtomicUsize, AtomicUsize)],
-) -> Result<(PartialResult, usize, Duration)> {
-    let mut client = Client::connect(worker)?;
+    progress: &(dyn Fn(usize, usize) + Sync),
+) -> std::result::Result<Placement, PlaceError> {
+    let mut client =
+        Client::connect_timeout(worker, opts.io_timeout).map_err(PlaceError::WorkerDown)?;
 
     // submit, backing off politely while the worker's queue is full
     let mut submit_attempt = 0;
     let job = loop {
         if handle.is_cancelled() {
-            return Err(api::cancelled());
+            return Err(PlaceError::Job(api::cancelled()));
         }
-        let (status, headers, resp) =
-            client.request_parts("POST", "/v1/runs", "application/json", body.as_bytes())?;
+        let (status, headers, resp) = client
+            .request_parts("POST", "/v1/runs", "application/json", body.as_bytes())
+            .map_err(PlaceError::WorkerDown)?;
         match status {
             202 => {
-                let v = json::parse(std::str::from_utf8(&resp)?.trim())?;
-                break v.get("job")?.as_usize()? as u64;
+                break parse_json(&resp)
+                    .and_then(|v| Ok(v.get("job")?.as_usize()? as u64))
+                    .map_err(PlaceError::Job)?;
             }
             429 if submit_attempt + 1 < opts.submit_attempts.max(1) => {
                 std::thread::sleep(http::backoff_delay(
@@ -352,45 +530,58 @@ fn drive_worker(
                 ));
                 submit_attempt += 1;
             }
-            _ => bail!("submit: HTTP {status}: {}", http::error_message(&resp)),
+            s if s >= 500 => {
+                return Err(PlaceError::WorkerDown(err!(
+                    "submit: HTTP {s}: {}",
+                    http::error_message(&resp)
+                )));
+            }
+            _ => {
+                return Err(PlaceError::Job(err!(
+                    "submit: HTTP {status}: {}",
+                    http::error_message(&resp)
+                )));
+            }
         }
     };
 
     // The job is live on the worker from here on: any failure below
-    // best-effort-DELETEs it before handing the shard to the next
-    // worker, so a re-placed shard doesn't leave an orphan computing
-    // the same pixels (and squatting on the old worker's queue).
-    let out = poll_and_fetch(&mut client, worker, job, idx, range, opts, handle, cells);
-    if out.as_ref().is_err_and(|e| !api::is_cancelled(e)) {
-        let fresh = Client::connect(worker); // the old socket may be dead
-        if let Ok(mut c) = fresh {
+    // best-effort-DELETEs it before the shard goes elsewhere, so a
+    // re-placed shard doesn't leave an orphan computing the same
+    // pixels (and squatting on the old worker's queue).
+    let out = poll_and_fetch(&mut client, worker, job, range, opts, handle, progress);
+    if out.as_ref().is_err_and(|e| !e.is_cancelled()) {
+        // the old socket may be dead
+        if let Ok(mut c) = Client::connect_timeout(worker, opts.io_timeout) {
             let _ = c.request("DELETE", &format!("/v1/runs/{job}"), "", &[]);
         }
     }
     out
 }
 
+fn parse_json(resp: &[u8]) -> Result<json::Value> {
+    json::parse(std::str::from_utf8(resp).context("non-UTF-8 response body")?.trim())
+}
+
 /// Poll one submitted job to completion and fetch its typed result.
-/// Split from [`drive_worker`] so its caller can reap the job on any
-/// failure path.
-#[allow(clippy::too_many_arguments)] // internal plumbing of drive_worker
+/// Split from [`place_on_worker`] so its caller can reap the job on
+/// any failure path.
 fn poll_and_fetch(
     client: &mut Client,
     worker: &str,
     job: u64,
-    idx: usize,
     range: (usize, usize),
-    opts: &ShardOptions,
+    opts: &PlaceOptions,
     handle: &JobHandle,
-    cells: &[(AtomicUsize, AtomicUsize)],
-) -> Result<(PartialResult, usize, Duration)> {
+    progress: &(dyn Fn(usize, usize) + Sync),
+) -> std::result::Result<Placement, PlaceError> {
     // reconnect once per round if the keep-alive socket dies under us
     // (per-connection request caps, worker restarts mid-poll)
     let get = |client: &mut Client, path: &str| -> Result<(u16, Vec<u8>)> {
         match client.request("GET", path, "", &[]) {
             Ok(out) => Ok(out),
             Err(_) => {
-                *client = Client::connect(worker)?;
+                *client = Client::connect_timeout(worker, opts.io_timeout)?;
                 client.request("GET", path, "", &[])
             }
         }
@@ -401,29 +592,41 @@ fn poll_and_fetch(
             // DELETE fan-out: stop this shard's job on the worker
             // (best-effort — the job may have just finished)
             let _ = client.request("DELETE", &status_path, "", &[]);
-            return Err(api::cancelled());
+            return Err(PlaceError::Job(api::cancelled()));
         }
-        let (status, resp) = get(client, &status_path)?;
-        ensure!(
-            status == 200,
-            "polling job {job}: HTTP {status}: {}",
-            http::error_message(&resp)
-        );
-        let v = json::parse(std::str::from_utf8(&resp)?.trim())?;
-        match v.get("status")?.as_str()? {
+        let (status, resp) = get(client, &status_path).map_err(PlaceError::WorkerDown)?;
+        if status != 200 {
+            // non-200 on a poll means the worker lost the job (restart,
+            // eviction) or is erroring — either way this placement is
+            // unrecoverable *here* but fine elsewhere
+            return Err(PlaceError::WorkerDown(err!(
+                "polling job {job}: HTTP {status}: {}",
+                http::error_message(&resp)
+            )));
+        }
+        let v = parse_json(&resp).map_err(PlaceError::Job)?;
+        let label =
+            v.get("status").and_then(|s| Ok(s.as_str()?.to_string())).map_err(PlaceError::Job)?;
+        match label.as_str() {
             "done" => break,
-            "failed" => bail!(
-                "job {job} failed: {}",
-                v.try_get("error").and_then(|e| e.as_str().ok()).unwrap_or("(no error)")
-            ),
-            "cancelled" => bail!("job {job} was cancelled on the worker"),
+            "failed" => {
+                return Err(PlaceError::Job(err!(
+                    "job {job} failed: {}",
+                    v.try_get("error").and_then(|e| e.as_str().ok()).unwrap_or("(no error)")
+                )));
+            }
+            "cancelled" => {
+                return Err(PlaceError::Job(err!("job {job} was cancelled on the worker")));
+            }
             _ => {
                 if let (Some(done), Some(total)) =
                     (v.try_get("chunks_done"), v.try_get("chunks_total"))
                 {
-                    cells[idx].0.store(done.as_usize()?, Ordering::Relaxed);
-                    cells[idx].1.store(total.as_usize()?, Ordering::Relaxed);
-                    publish_progress(handle, cells);
+                    let parsed = done
+                        .as_usize()
+                        .and_then(|d| Ok((d, total.as_usize()?)))
+                        .map_err(PlaceError::Job)?;
+                    progress(parsed.0, parsed.1);
                 }
                 std::thread::sleep(opts.poll);
             }
@@ -431,20 +634,22 @@ fn poll_and_fetch(
     }
 
     // the typed back door: the canonical v1 result envelope
-    let (status, resp) = get(client, &format!("/v1/runs/{job}/result"))?;
-    ensure!(
-        status == 200,
-        "fetching result of job {job}: HTTP {status}: {}",
-        http::error_message(&resp)
-    );
-    let result = AnalysisResult::from_json_str(
-        std::str::from_utf8(&resp).context("non-UTF-8 result body")?.trim(),
-    )?;
-    cells[idx].0.store(result.chunks, Ordering::Relaxed);
-    cells[idx].1.store(result.chunks, Ordering::Relaxed);
-    publish_progress(handle, cells);
+    let (status, resp) =
+        get(client, &format!("/v1/runs/{job}/result")).map_err(PlaceError::WorkerDown)?;
+    if status != 200 {
+        return Err(PlaceError::WorkerDown(err!(
+            "fetching result of job {job}: HTTP {status}: {}",
+            http::error_message(&resp)
+        )));
+    }
+    let result = std::str::from_utf8(&resp)
+        .context("non-UTF-8 result body")
+        .and_then(|s| AnalysisResult::from_json_str(s.trim()))
+        .map_err(PlaceError::Job)?;
+    progress(result.chunks, result.chunks);
     let (chunks, wall) = (result.chunks, result.wall);
-    Ok((PartialResult::new(range, result)?, chunks, wall))
+    let partial = PartialResult::new(range, result).map_err(PlaceError::Job)?;
+    Ok(Placement { partial, chunks, wall })
 }
 
 // -- the CLI front door --------------------------------------------------
@@ -520,6 +725,42 @@ mod tests {
                 let (lo, hi) =
                     (widths.iter().min().unwrap(), widths.iter().max().unwrap());
                 assert!(hi - lo <= 1, "unbalanced split {widths:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_weighted_apportions_by_weight() {
+        // 3:1 throughput → 75/25 of the scene
+        assert_eq!(split_weighted(100, &[3.0, 1.0]), vec![(0, 75), (75, 100)]);
+        assert_eq!(split_weighted(10, &[1.0]), vec![(0, 10)]);
+        assert_eq!(split_weighted(7, &[]), Vec::<(usize, usize)>::new());
+        // equal weights reproduce the even split
+        assert_eq!(split_weighted(10, &[1.0, 1.0, 1.0]), split_ranges(10, 3));
+        // a zero/NaN weight gets the mean of the usable ones (here 2.0,
+        // so thirds), not a zero-width shard
+        assert_eq!(
+            split_weighted(9, &[2.0, f64::NAN, 2.0]),
+            vec![(0, 3), (3, 6), (6, 9)]
+        );
+        // no usable weight at all → uniform
+        assert_eq!(split_weighted(4, &[0.0, -1.0]), vec![(0, 2), (2, 4)]);
+        // an extreme ratio may round a shard down to empty — the range
+        // list still covers the scene positionally
+        assert_eq!(split_weighted(2, &[1000.0, 0.001]), vec![(0, 2), (2, 2)]);
+        // coverage + contiguity + determinism over a small grid
+        for pixels in [0usize, 1, 5, 17, 100] {
+            for weights in
+                [&[1.0, 2.0, 3.0][..], &[0.5, 0.5], &[10.0, 0.1, 5.0, 2.2], &[1.0]]
+            {
+                let r = split_weighted(pixels, weights);
+                assert_eq!(r.len(), weights.len());
+                assert_eq!(r.first().unwrap().0, 0);
+                assert_eq!(r.last().unwrap().1, pixels);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap at {w:?}");
+                }
+                assert_eq!(r, split_weighted(pixels, weights), "non-deterministic");
             }
         }
     }

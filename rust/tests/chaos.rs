@@ -1,0 +1,429 @@
+//! Fault-injection matrix for the gateway's failure detectors, driven
+//! by [`bfast::gateway::chaos::ChaosProxy`] so every network pathology
+//! is provoked *deterministically* — no racing real processes:
+//!
+//! * a **delayed** worker (high latency, still answering) must be
+//!   treated as slow, not dead — no burial, no rebalance;
+//! * a **half-open** worker (accepts, never answers) must be detected
+//!   by timeout and the run rebalanced within a bounded wall-clock;
+//! * an **accepted-submit-then-black-holed-poll** worker — the
+//!   nastiest sequence, the shard is live on the other side — must be
+//!   buried mid-run and its range rescued bit-identically;
+//! * **dropped** connections (accept + close) must fail fast, well
+//!   under the configured I/O timeout, not wait it out.
+
+use bfast::api::{AnalysisRequest, ParamSpec, SceneSource};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::gateway::chaos::{ChaosProxy, Mode};
+use bfast::gateway::{Gateway, GatewayConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{io as rio, BreakMap, TimeStack};
+use bfast::serve::http::roundtrip;
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::time::{Duration, Instant};
+
+/// Analysis shape shared by every test: N=48, n=36, h=12, k=1.
+const PQ: &str = "?n-hist=36&h=12&k=1&freq=12&alpha=0.05";
+
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn param_spec() -> ParamSpec {
+    ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    }
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(params_new(48), m, seed).generate();
+    if m >= 8 {
+        let d = data.stack.data_mut();
+        for t in 0..48 {
+            d[t * m] = f32::NAN;
+        }
+        for t in 10..14 {
+            d[t * m + 3] = f32::NAN;
+        }
+    }
+    data.stack
+}
+
+fn reference_map(stack: &TimeStack) -> BreakMap {
+    BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(stack, &params_new(48))
+        .unwrap()
+        .map
+}
+
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: momax differs at px {px}: {x} vs {y}");
+    }
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn parse_json(body: &[u8]) -> json::Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+fn parse_map(body: &[u8]) -> BreakMap {
+    let v = parse_json(body);
+    let ints = |key: &str| -> Vec<i32> {
+        v.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect()
+    };
+    let momax = v
+        .get("momax")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    BreakMap { breaks: ints("breaks"), first: ints("first"), momax }
+}
+
+fn start_worker() -> Server {
+    Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).unwrap()
+}
+
+fn gw_cfg() -> GatewayConfig {
+    GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        poll: Duration::from_millis(5),
+        sweep: Duration::from_millis(50),
+        ..Default::default()
+    }
+}
+
+fn submit_json(gw: &str, req: &AnalysisRequest) -> u64 {
+    let (status, body) =
+        roundtrip(gw, "POST", "/v1/runs", "application/json", req.to_json_string().as_bytes())
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64
+}
+
+fn submit_bin(gw: &str, stack: &TimeStack) -> u64 {
+    let (status, body) = roundtrip(
+        gw,
+        "POST",
+        &format!("/v1/runs{PQ}"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(stack),
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64
+}
+
+fn wait_finished(gw: &str, id: u64, deadline: Duration) -> json::Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = get(gw, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        let s = v.get("status").unwrap().as_str().unwrap();
+        if s == "done" || s == "failed" || s == "cancelled" {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < deadline,
+            "job {id} still {s} after {deadline:?} — the gateway hung"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn wait_alive(gw: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = get(gw, "/healthz");
+        assert_eq!(status, 200);
+        if parse_json(&body).get("workers_alive").unwrap().as_usize().unwrap() == want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never reached {want} live worker(s)");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn gw_metric(gw: &str, name: &str) -> u64 {
+    let (status, body) = get(gw, "/metrics");
+    assert_eq!(status, 200);
+    String::from_utf8(body)
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
+        .unwrap_or_else(|| panic!("metric {name} missing"))
+}
+
+fn observe_mid_run(worker: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, body) = get(worker, "/v1/runs");
+        assert_eq!(status, 200);
+        let mid = parse_json(&body).get("jobs").unwrap().as_arr().unwrap().iter().any(|j| {
+            j.get("status").unwrap().as_str().unwrap() == "running"
+                && j.get("progress").unwrap().as_f64().unwrap() > 0.0
+        });
+        if mid {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{worker}: no shard reached mid-run");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Slow ≠ dead: with every connection held 150 ms, the health sweep
+/// (probe timeout well above the latency) must keep the worker alive
+/// through repeated sweeps, and a run placed on it completes with
+/// **zero** rebalances.
+#[test]
+fn delayed_worker_is_slow_not_dead() {
+    let w = start_worker();
+    let proxy = ChaosProxy::start(&w.addr().to_string()).unwrap();
+    proxy.set_mode(Mode::Delay(Duration::from_millis(150)));
+
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![proxy.addr().to_string()];
+    cfg.io_timeout = Duration::from_secs(2);
+    cfg.heartbeat_timeout = Duration::from_millis(800);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 1);
+
+    // several sweep periods of sustained latency: never buried
+    for _ in 0..5 {
+        std::thread::sleep(Duration::from_millis(100));
+        let (status, body) = get(&gaddr, "/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(
+            parse_json(&body).get("workers_alive").unwrap().as_usize().unwrap(),
+            1,
+            "a slow worker was buried as dead"
+        );
+    }
+
+    let stack = scene(120, 5);
+    let reference = reference_map(&stack);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(60));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "delayed worker vs direct");
+    assert_eq!(
+        gw_metric(&gaddr, "bfast_gateway_rebalances_total"),
+        0,
+        "latency alone must never trigger a rebalance"
+    );
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w.stop().unwrap();
+}
+
+/// Half-open: one worker accepts connections but never answers
+/// (the harshest failure — detectable only by timeout). The placement
+/// must time out, bury it, and rebalance onto the healthy worker
+/// within a wall-clock bounded by a few I/O timeouts.
+#[test]
+fn half_open_worker_is_buried_and_the_run_rebalances() {
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let proxy = ChaosProxy::start(&w2.addr().to_string()).unwrap();
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![w1.addr().to_string(), proxy.addr().to_string()];
+    cfg.io_timeout = Duration::from_millis(400);
+    // park the sweep after its first (immediate, healthy) pass so the
+    // in-flight placement — not the health prober — finds the corpse
+    cfg.sweep = Duration::from_secs(30);
+    cfg.heartbeat_timeout = Duration::from_secs(60);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    proxy.set_mode(Mode::Blackhole);
+    proxy.kill_connections();
+
+    let stack = scene(600, 13);
+    let reference = reference_map(&stack);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let t0 = Instant::now();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(30));
+    let wall = t0.elapsed();
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert!(
+        gw_metric(&gaddr, "bfast_gateway_rebalances_total") >= 1,
+        "the half-open worker must be detected and rebalanced away"
+    );
+    assert!(
+        wall < Duration::from_secs(15),
+        "half-open detection took {wall:?} — not bounded by the I/O timeout"
+    );
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "half-open rebalance vs direct");
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
+
+/// The nastiest sequence: the submit is **accepted** (the shard runs
+/// on the worker), then every poll is black-holed. The gateway must
+/// not trust the accepted submit — the dead poll channel buries the
+/// worker mid-run and the range is rescued on the survivor,
+/// bit-identically.
+#[test]
+fn blackholed_poll_after_accepted_submit_rebalances() {
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let proxy = ChaosProxy::start(&w2.addr().to_string()).unwrap();
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![w1.addr().to_string(), proxy.addr().to_string()];
+    cfg.io_timeout = Duration::from_millis(500);
+    cfg.heartbeat_timeout = Duration::from_secs(2);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    let stack = scene(100_000, 3);
+    let reference = reference_map(&stack);
+    let id = submit_bin(&gaddr, &stack);
+    // the shard is provably accepted and executing before the link
+    // goes half-open
+    observe_mid_run(&w2.addr().to_string());
+    let killed = Instant::now();
+    proxy.set_mode(Mode::Blackhole);
+    proxy.kill_connections();
+
+    let done = wait_finished(&gaddr, id, Duration::from_secs(300));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert!(
+        gw_metric(&gaddr, "bfast_gateway_rebalances_total") >= 1,
+        "an accepted submit must not mask the dead poll channel"
+    );
+    assert!(
+        killed.elapsed() < Duration::from_secs(120),
+        "recovery after the black-holed poll took {:?}",
+        killed.elapsed()
+    );
+    let w1_addr = w1.addr().to_string();
+    let (_, body) = get(&gaddr, &format!("/v1/runs/{id}"));
+    let rescued = parse_json(&body);
+    let all_on_survivor = rescued
+        .get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .all(|s| s.get("worker").unwrap().as_str().unwrap() == w1_addr);
+    assert!(all_on_survivor, "{}", rescued.to_string_compact());
+
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "black-holed poll vs direct");
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
+
+/// Dropped connections (accept + immediate close) must be recognised
+/// as a *fast* failure: even with a deliberately huge I/O timeout the
+/// rebalance completes in seconds, because a closed socket is an
+/// error, not a timeout.
+#[test]
+fn dropped_connections_fail_fast_without_waiting_for_timeouts() {
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let proxy = ChaosProxy::start(&w2.addr().to_string()).unwrap();
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![w1.addr().to_string(), proxy.addr().to_string()];
+    // the contrast with the half-open case: this timeout would make a
+    // blackhole take ~16 s to detect, but Drop must not wait on it
+    cfg.io_timeout = Duration::from_secs(8);
+    cfg.sweep = Duration::from_secs(30);
+    cfg.heartbeat_timeout = Duration::from_secs(60);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    proxy.set_mode(Mode::Drop);
+    proxy.kill_connections();
+
+    let stack = scene(600, 21);
+    let reference = reference_map(&stack);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let t0 = Instant::now();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(30));
+    let wall = t0.elapsed();
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert!(
+        gw_metric(&gaddr, "bfast_gateway_rebalances_total") >= 1,
+        "the dropped worker must be rebalanced away"
+    );
+    assert!(
+        wall < Duration::from_secs(6),
+        "drop took {wall:?} — detection waited on a timeout instead of the error"
+    );
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "dropped worker vs direct");
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}

@@ -1,0 +1,588 @@
+//! `bfast gateway` acceptance suite — the resident fleet coordinator
+//! over real loopback sockets. The contract under test: the gateway is
+//! a drop-in `/v1` facade whose answers are **bit-identical** to a
+//! direct single-process `BfastRunner::run` of the same scene, no
+//! matter how the fleet behaves — N-worker fan-out, a worker murdered
+//! mid-run (the shard re-splits onto survivors), operator-pinned
+//! placement weights, and a randomized seeded kill schedule. A fleet
+//! with no live workers fails a run with a typed error (never a hang),
+//! and a cancel at the gateway DELETE-fans-out to every live shard.
+
+use bfast::api::{AnalysisRequest, ParamSpec, SceneSource};
+use bfast::coordinator::{BfastRunner, RunnerConfig};
+use bfast::gateway::chaos::{ChaosProxy, Mode};
+use bfast::gateway::{Gateway, GatewayConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{io as rio, BreakMap, TimeStack};
+use bfast::serve::http::roundtrip;
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Analysis shape shared by every test: N=48, n=36, h=12, k=1.
+const PQ: &str = "?n-hist=36&h=12&k=1&freq=12&alpha=0.05";
+
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn param_spec() -> ParamSpec {
+    ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    }
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let mut data = ArtificialDataset::new(params_new(48), m, seed).generate();
+    if m >= 8 {
+        let d = data.stack.data_mut();
+        for t in 0..48 {
+            d[t * m] = f32::NAN; // dead pixel
+        }
+        for t in 10..14 {
+            d[t * m + 3] = f32::NAN; // cloud hole
+        }
+    }
+    data.stack
+}
+
+fn reference_map(stack: &TimeStack) -> BreakMap {
+    BfastRunner::emulated(RunnerConfig::default())
+        .unwrap()
+        .run(stack, &params_new(48))
+        .unwrap()
+        .map
+}
+
+fn assert_maps_identical(a: &BreakMap, b: &BreakMap, ctx: &str) {
+    assert_eq!(a.breaks, b.breaks, "{ctx}: breaks differ");
+    assert_eq!(a.first, b.first, "{ctx}: first differ");
+    assert_eq!(a.momax.len(), b.momax.len(), "{ctx}: momax length");
+    for (px, (x, y)) in a.momax.iter().zip(&b.momax).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: momax differs at px {px}: {x} vs {y}");
+    }
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn parse_json(body: &[u8]) -> json::Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+fn parse_map(body: &[u8]) -> BreakMap {
+    let v = parse_json(body);
+    let ints = |key: &str| -> Vec<i32> {
+        v.get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap() as i32)
+            .collect()
+    };
+    let momax = v
+        .get("momax")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect();
+    BreakMap { breaks: ints("breaks"), first: ints("first"), momax }
+}
+
+/// A worker; `gateway` = self-register and heartbeat there.
+fn start_worker(gateway: Option<&str>) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        gateway: gateway.map(|s| s.to_string()),
+        heartbeat: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Fast-paced gateway defaults for tests; individual tests override
+/// the failure-detection knobs they pin.
+fn gw_cfg() -> GatewayConfig {
+    GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        poll: Duration::from_millis(5),
+        sweep: Duration::from_millis(50),
+        ..Default::default()
+    }
+}
+
+fn submit_json(gw: &str, req: &AnalysisRequest) -> u64 {
+    let (status, body) =
+        roundtrip(gw, "POST", "/v1/runs", "application/json", req.to_json_string().as_bytes())
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64
+}
+
+fn submit_bin(gw: &str, stack: &TimeStack) -> u64 {
+    let (status, body) = roundtrip(
+        gw,
+        "POST",
+        &format!("/v1/runs{PQ}"),
+        "application/octet-stream",
+        &rio::stack_to_bytes(stack),
+    )
+    .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64
+}
+
+/// Poll the gateway until the job reaches a terminal state.
+fn wait_finished(gw: &str, id: u64, deadline: Duration) -> json::Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = get(gw, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        let s = v.get("status").unwrap().as_str().unwrap();
+        if s == "done" || s == "failed" || s == "cancelled" {
+            return v;
+        }
+        assert!(
+            t0.elapsed() < deadline,
+            "job {id} still {s} after {deadline:?} — the gateway hung"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn wait_alive(gw: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = get(gw, "/healthz");
+        assert_eq!(status, 200);
+        if parse_json(&body).get("workers_alive").unwrap().as_usize().unwrap() == want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never reached {want} live worker(s)");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn gw_metric(gw: &str, name: &str) -> u64 {
+    let (status, body) = get(gw, "/metrics");
+    assert_eq!(status, 200);
+    String::from_utf8(body)
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
+        .unwrap_or_else(|| panic!("metric {name} missing"))
+}
+
+/// Block until some job on this worker is running with ≥ 1 chunk done,
+/// so a subsequent fault provably interrupts in-flight work.
+fn observe_mid_run(worker: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, body) = get(worker, "/v1/runs");
+        assert_eq!(status, 200);
+        let mid = parse_json(&body).get("jobs").unwrap().as_arr().unwrap().iter().any(|j| {
+            j.get("status").unwrap().as_str().unwrap() == "running"
+                && j.get("progress").unwrap().as_f64().unwrap() > 0.0
+        });
+        if mid {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{worker}: no shard reached mid-run");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn shard_entries(done: &json::Value) -> Vec<(String, usize, usize, usize)> {
+    done.get("shards")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.get("worker").unwrap().as_str().unwrap().to_string(),
+                s.get("pixel_start").unwrap().as_usize().unwrap(),
+                s.get("pixel_end").unwrap().as_usize().unwrap(),
+                s.get("attempts").unwrap().as_usize().unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Acceptance: three self-registering workers carry one gateway run —
+/// split evenly (no throughput observed yet), every worker used once,
+/// the served map bit-identical to a direct run, zero rebalances.
+#[test]
+fn three_worker_fanout_is_bit_identical_to_direct_run() {
+    let gw = Gateway::start(gw_cfg()).unwrap();
+    let gaddr = gw.addr().to_string();
+    let workers: Vec<Server> = (0..3).map(|_| start_worker(Some(&gaddr))).collect();
+    wait_alive(&gaddr, 3);
+
+    let stack = scene(257, 31);
+    let reference = reference_map(&stack);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(120));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert_eq!(done.get("pixels").unwrap().as_usize().unwrap(), 257);
+
+    let shards = shard_entries(&done);
+    assert_eq!(shards.len(), 3, "{}", done.to_string_compact());
+    let mut placed: Vec<&str> = shards.iter().map(|(w, ..)| w.as_str()).collect();
+    placed.sort_unstable();
+    let mut expected: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+    expected.sort();
+    assert_eq!(placed, expected.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    assert!(shards.iter().all(|&(_, _, _, attempts)| attempts == 1));
+    // an unobserved fleet splits evenly (largest-remainder over equal
+    // fallback weights): 257 → 86 + 86 + 85
+    let mut widths: Vec<usize> = shards.iter().map(|&(_, a, b, _)| b - a).collect();
+    widths.sort_unstable();
+    assert_eq!(widths, vec![85, 86, 86]);
+
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "gateway fan-out vs direct");
+    let (status, _) = get(&gaddr, &format!("/v1/runs/{id}/result"));
+    assert_eq!(status, 200, "the typed result document is served too");
+    assert_eq!(gw_metric(&gaddr, "bfast_gateway_rebalances_total"), 0);
+
+    gw.stop().unwrap();
+    for w in workers {
+        w.stop().unwrap();
+    }
+}
+
+/// Acceptance (the tentpole): a worker killed mid-run — observed
+/// executing chunks, then its link severed — is buried, its shard
+/// re-split onto the survivor, and the merged map is **still
+/// bit-identical** to the single-process run.
+#[test]
+fn worker_killed_mid_run_rebalances_onto_survivors() {
+    let w1 = start_worker(None);
+    let w2 = start_worker(None);
+    let proxy = ChaosProxy::start(&w2.addr().to_string()).unwrap();
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![w1.addr().to_string(), proxy.addr().to_string()];
+    cfg.io_timeout = Duration::from_millis(500);
+    cfg.heartbeat_timeout = Duration::from_secs(2);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    let stack = scene(100_000, 3);
+    let reference = reference_map(&stack);
+    let id = submit_bin(&gaddr, &stack);
+    // wait until w2 is provably executing its shard, then murder the
+    // link: new connections refused, the live poll socket severed
+    observe_mid_run(&w2.addr().to_string());
+    proxy.set_mode(Mode::Drop);
+    proxy.kill_connections();
+
+    let done = wait_finished(&gaddr, id, Duration::from_secs(300));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert!(
+        gw_metric(&gaddr, "bfast_gateway_rebalances_total") >= 1,
+        "the mid-run death must be handled as a rebalance"
+    );
+    let shards = shard_entries(&done);
+    let w1_addr = w1.addr().to_string();
+    assert!(
+        shards.iter().all(|(w, ..)| *w == w1_addr),
+        "every credited shard must be on the survivor: {shards:?}"
+    );
+    assert!(
+        shards.iter().any(|&(_, _, _, attempts)| attempts >= 2),
+        "the rescued range must show a re-placement: {shards:?}"
+    );
+    let covered: usize = shards.iter().map(|&(_, a, b, _)| b - a).sum();
+    assert_eq!(covered, 100_000, "no pixel may be lost or doubled: {shards:?}");
+
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "rebalanced run vs direct");
+
+    // the fleet view records the burial
+    let paddr = proxy.addr().to_string();
+    let (status, body) = get(&gaddr, "/v1/workers");
+    assert_eq!(status, 200);
+    let buried = parse_json(&body).get("workers").unwrap().as_arr().unwrap().iter().any(|w| {
+        w.get("addr").unwrap().as_str().unwrap() == paddr
+            && !w.get("alive").unwrap().as_bool().unwrap()
+    });
+    assert!(buried, "the dead worker must show as not alive");
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
+
+/// Acceptance: a fleet whose every worker is dead fails the run with
+/// the typed "no live workers" error, promptly — never a hang.
+#[test]
+fn dead_fleet_fails_with_typed_error_not_a_hang() {
+    // a dead address: bind an ephemeral port, then drop the listener
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![dead];
+    cfg.io_timeout = Duration::from_millis(300);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(64, 9)));
+    req.params = param_spec();
+    let t0 = Instant::now();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(10));
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "failed",
+        "{}",
+        done.to_string_compact()
+    );
+    let error = done.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(error.contains("no live workers"), "untyped failure: {error}");
+    // the map is refused with a 409, not served, not hung
+    let (status, _) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 409);
+    gw.stop().unwrap();
+}
+
+/// Acceptance: cancelling at the gateway DELETE-fans-out to every live
+/// shard — both workers' jobs land in `cancelled`, never `done`.
+#[test]
+fn cancel_fans_out_to_every_live_shard() {
+    let w1 = start_worker(None);
+    let w2 = start_worker(None);
+    let mut cfg = gw_cfg();
+    cfg.workers = vec![w1.addr().to_string(), w2.addr().to_string()];
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    let id = submit_bin(&gaddr, &scene(100_000, 3));
+    // both shards provably mid-run, then pull the plug at the gateway
+    observe_mid_run(&w1.addr().to_string());
+    observe_mid_run(&w2.addr().to_string());
+    let (status, body) = roundtrip(&gaddr, "DELETE", &format!("/v1/runs/{id}"), "", &[]).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(parse_json(&body).get("status").unwrap().as_str().unwrap(), "cancelling");
+
+    let done = wait_finished(&gaddr, id, Duration::from_secs(60));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "cancelled",
+        "{}",
+        done.to_string_compact()
+    );
+
+    for addr in [w1.addr().to_string(), w2.addr().to_string()] {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let (status, body) = get(&addr, "/v1/runs");
+            assert_eq!(status, 200);
+            let v = parse_json(&body);
+            let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+            assert!(!jobs.is_empty(), "{addr}: shard was never submitted");
+            let states: Vec<&str> = jobs
+                .iter()
+                .map(|j| j.get("status").unwrap().as_str().unwrap())
+                .collect();
+            assert!(
+                !states.contains(&"done"),
+                "{addr}: a shard ran to completion despite the cancel ({states:?})"
+            );
+            if states.iter().all(|s| *s == "cancelled") {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "{addr}: jobs never reached cancelled ({states:?})"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    // a cancelled run's result is a 409 at the facade
+    let (status, _) = get(&gaddr, &format!("/v1/runs/{id}/result"));
+    assert_eq!(status, 409);
+    gw.stop().unwrap();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
+
+/// Satellite: operator-pinned weights steer the split — a 3:1 fleet
+/// gives the heavy worker exactly 3/4 of the pixels, and the merged
+/// map is unchanged down to the bits.
+#[test]
+fn pinned_weights_apportion_the_split() {
+    let wa = start_worker(None);
+    let wb = start_worker(None);
+    let mut cfg = gw_cfg();
+    // registered once below, no heartbeats: keep them alive all test
+    cfg.heartbeat_timeout = Duration::from_secs(120);
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    for (w, weight) in [(&wa, 3.0), (&wb, 1.0)] {
+        let body = format!("{{\"addr\": \"{}\", \"weight\": {weight}}}", w.addr());
+        let (status, resp) =
+            roundtrip(&gaddr, "POST", "/v1/workers", "application/json", body.as_bytes()).unwrap();
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&resp));
+    }
+    wait_alive(&gaddr, 2);
+
+    let stack = scene(400, 17);
+    let reference = reference_map(&stack);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = param_spec();
+    let id = submit_json(&gaddr, &req);
+    let done = wait_finished(&gaddr, id, Duration::from_secs(120));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+
+    let mut widths: BTreeMap<String, usize> = BTreeMap::new();
+    for (w, a, b, _) in shard_entries(&done) {
+        *widths.entry(w).or_insert(0) += b - a;
+    }
+    assert_eq!(widths.get(&wa.addr().to_string()), Some(&300), "{widths:?}");
+    assert_eq!(widths.get(&wb.addr().to_string()), Some(&100), "{widths:?}");
+
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+    assert_eq!(status, 200);
+    assert_maps_identical(&parse_map(&body), &reference, "weighted split vs direct");
+
+    // the fleet view reports the pinned weights back
+    let (status, body) = get(&gaddr, "/v1/workers");
+    assert_eq!(status, 200);
+    let mut weights: Vec<f64> = parse_json(&body)
+        .get("workers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.get("weight").unwrap().as_f64().unwrap())
+        .collect();
+    weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(weights, vec![1.0, 3.0]);
+
+    gw.stop().unwrap();
+    wa.stop().unwrap();
+    wb.stop().unwrap();
+}
+
+/// Seeded splitmix-style generator: the kill schedules below are
+/// reproducible from the test source alone.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.0 >> 33
+    }
+}
+
+/// Soak: for k ∈ {2, 3, 5} workers, murder a seeded-random subset
+/// (always leaving ≥ 1 survivor) at seeded-random delays after
+/// submit. Whatever the schedule does to the fleet, the merged map
+/// equals the single-process run bit-for-bit.
+#[test]
+fn soak_random_kill_schedules_preserve_bit_identity() {
+    let stack = scene(40_000, 11);
+    let reference = reference_map(&stack);
+    let bytes = rio::stack_to_bytes(&stack);
+    for k in [2usize, 3, 5] {
+        let mut rng = Lcg(0x5EED_0000 + k as u64);
+        let workers: Vec<Server> = (0..k).map(|_| start_worker(None)).collect();
+        let proxies: Vec<ChaosProxy> = workers
+            .iter()
+            .map(|w| ChaosProxy::start(&w.addr().to_string()).unwrap())
+            .collect();
+        let mut cfg = gw_cfg();
+        cfg.workers = proxies.iter().map(|p| p.addr().to_string()).collect();
+        cfg.io_timeout = Duration::from_millis(400);
+        cfg.heartbeat_timeout = Duration::from_secs(2);
+        let gw = Gateway::start(cfg).unwrap();
+        let gaddr = gw.addr().to_string();
+        wait_alive(&gaddr, k);
+
+        let (status, body) = roundtrip(
+            &gaddr,
+            "POST",
+            &format!("/v1/runs{PQ}"),
+            "application/octet-stream",
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(status, 202, "k={k}: {}", String::from_utf8_lossy(&body));
+        let id = parse_json(&body).get("job").unwrap().as_usize().unwrap() as u64;
+
+        // pick 0..k-1 victims in seeded-shuffled order, each killed
+        // after a seeded delay (a kill landing after completion is a
+        // legal schedule and trivially preserves the property)
+        let victims = (rng.next_u64() as usize) % k;
+        let mut order: Vec<usize> = (0..k).collect();
+        for i in (1..order.len()).rev() {
+            order.swap(i, (rng.next_u64() as usize) % (i + 1));
+        }
+        for &v in order.iter().take(victims) {
+            std::thread::sleep(Duration::from_millis(rng.next_u64() % 150));
+            proxies[v].set_mode(Mode::Drop);
+            proxies[v].kill_connections();
+        }
+
+        let done = wait_finished(&gaddr, id, Duration::from_secs(300));
+        assert_eq!(
+            done.get("status").unwrap().as_str().unwrap(),
+            "done",
+            "k={k} victims={victims}: {}",
+            done.to_string_compact()
+        );
+        let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/map"));
+        assert_eq!(status, 200, "k={k}");
+        assert_maps_identical(&parse_map(&body), &reference, &format!("k={k} victims={victims}"));
+
+        gw.stop().unwrap();
+        for p in proxies {
+            p.stop();
+        }
+        for w in workers {
+            w.stop().unwrap();
+        }
+    }
+}
