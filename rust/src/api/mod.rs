@@ -569,6 +569,13 @@ pub struct AnalysisRequest {
     pub engine: EngineSpec,
     pub chunking: ChunkSpec,
     pub outputs: OutputSpec,
+    /// Correlation id for the flight recorder: minted at the front
+    /// door when absent ([`crate::trace::new_request_id`]), propagated
+    /// on the wire both in this JSON and as `X-Request-Id`, so one
+    /// gateway run stitches its workers' spans into a single
+    /// distributed trace. `None` serialises to nothing (the wire form
+    /// without an id is unchanged).
+    pub request_id: Option<String>,
 }
 
 impl AnalysisRequest {
@@ -580,6 +587,7 @@ impl AnalysisRequest {
             engine: EngineSpec::default(),
             chunking: ChunkSpec::default(),
             outputs: OutputSpec::default(),
+            request_id: None,
         }
     }
 
@@ -709,14 +717,18 @@ impl AnalysisRequest {
     }
 
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
-            ("v", Value::Num(1.0)),
+        let mut fields = vec![("v", Value::Num(1.0))];
+        if let Some(rid) = &self.request_id {
+            fields.push(("request_id", Value::Str(rid.clone())));
+        }
+        fields.extend([
             ("source", self.source.to_json()),
             ("params", self.params.to_json()),
             ("engine", self.engine.to_json()),
             ("chunking", self.chunking.to_json()),
             ("outputs", self.outputs.to_json()),
-        ])
+        ]);
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -741,6 +753,10 @@ impl AnalysisRequest {
             outputs: match v.try_get("outputs") {
                 None | Some(Value::Null) => OutputSpec::default(),
                 Some(x) => OutputSpec::from_json(x)?,
+            },
+            request_id: match v.try_get("request_id") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(x.as_str().context("field \"request_id\"")?.to_string()),
             },
         })
     }
@@ -1008,6 +1024,7 @@ pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
             pixel_range,
         },
         outputs: outputs_from_matches(m)?,
+        request_id: None,
     })
 }
 

@@ -150,8 +150,12 @@ impl BfastRunner {
             if dir.as_ref().join("manifest.json").exists() {
                 match crate::runtime::pjrt::DeviceRuntime::new(&dir) {
                     Ok(rt) => return Self::new(Box::new(rt), cfg),
-                    Err(e) => eprintln!(
-                        "bfast: pjrt backend unavailable ({e:#}); falling back to emulated"
+                    Err(e) => crate::trace::log!(
+                        Warn,
+                        "coordinator",
+                        "pjrt_unavailable",
+                        "error" => format!("{e:#}"),
+                        "fallback" => "emulated",
                     ),
                 }
             }
@@ -296,6 +300,11 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
         let n_workers = self.cfg.staging_threads.min(plan.len());
 
         let free_rx = std::sync::Mutex::new(free_rx);
+        // The run-level span (opened by the serving layer or shard
+        // front door) is on *this* thread's stack; chunk spans open
+        // under it via the handle so they parent correctly even though
+        // the executor loop runs inside the scope closure.
+        let run_span = crate::trace::current_handle();
         let result: Result<()> = std::thread::scope(|scope| {
             // --- staging workers ---------------------------------------
             for _ in 0..n_workers {
@@ -354,6 +363,11 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
                     next_chunk.store(plan.len(), Ordering::Relaxed);
                 }
                 if exec_err.is_none() {
+                    let _chunk_span = crate::trace::span_under(&run_span, "chunk").map(|s| {
+                        s.with_attr("chunk", chunk.index)
+                            .with_attr("pixels_start", chunk.start)
+                            .with_attr("pixels_end", chunk.end)
+                    });
                     match exec.run_chunk(&t_axis, freq, &buf, lambda, &mut phases) {
                         Ok(out) => {
                             let w = chunk.width();

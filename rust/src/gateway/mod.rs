@@ -50,13 +50,14 @@ use crate::api::{
 use crate::cli::{Command, Matches};
 use crate::error::{ensure, err, Context, Result};
 use crate::json::Value;
-use crate::metrics::{self, PhaseTimes};
+use crate::metrics::{self, Histogram, PhaseTimes};
 use crate::raster::TimeStack;
 use crate::report;
 use crate::serve::http::{self, Client, Request, Response};
 use crate::serve::queue::JobState;
 use crate::shard::{self, PlaceError, PlaceOptions, ShardReport};
 use crate::threadpool::{self, WorkerPool};
+use crate::trace::{self, Recorder, SpanHandle};
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -329,10 +330,34 @@ impl Fleet {
 
 // -- gateway state + jobs ------------------------------------------------
 
+/// One worker placement of a (sub-)shard, as observed at submit time
+/// (202 from the worker) — recorded even when the placement later
+/// fails, so the distributed trace can fetch the orphaned worker job's
+/// spans after the worker recovers.
+#[derive(Clone)]
+struct PlacedShard {
+    /// Worker address the gateway submitted to.
+    worker: String,
+    /// The worker-side job id.
+    job: u64,
+    /// The gateway shard span this placement ran under (0 = tracing
+    /// off); worker trace roots are re-parented beneath it on merge.
+    span_id: u64,
+}
+
 struct GwJob {
     id: u64,
     state: JobState,
     handle: JobHandle,
+    /// Request id minted (or propagated) at `POST /v1/runs`.
+    request_id: String,
+    /// Gateway-side flight recorder (`None` = tracing disabled).
+    recorder: Option<Recorder>,
+    /// Every worker placement this run made, in submit order (shared
+    /// with the run thread; the trace endpoint reads it to stitch the
+    /// distributed trace).
+    placements: Arc<Mutex<Vec<PlacedShard>>>,
+    submitted_at: Instant,
     pixels: Option<usize>,
     result: Option<AnalysisResult>,
     shards: Vec<ShardReport>,
@@ -370,6 +395,8 @@ struct GatewayState {
     sessions: Mutex<BTreeMap<String, String>>,
     run_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
     phases: Mutex<PhaseTimes>,
+    /// Seconds from run submission to a terminal state.
+    run_latency: Histogram,
     rebalances: AtomicU64,
     submitted: AtomicU64,
     rejected: AtomicU64,
@@ -434,6 +461,12 @@ struct RunCtx<'a> {
     progress: &'a RunProgress,
     acc: &'a Mutex<Vec<(PartialResult, ShardReport)>>,
     popts: PlaceOptions,
+    /// The run's request id, propagated to every worker placement as
+    /// `X-Request-Id`.
+    request_id: &'a str,
+    /// Worker placements observed at submit time (shared with the
+    /// job record; see [`PlacedShard`]).
+    placements: &'a Arc<Mutex<Vec<PlacedShard>>>,
 }
 
 /// Execute one request across the live fleet; the returned result is
@@ -442,6 +475,8 @@ fn drive_run(
     state: &GatewayState,
     req: &AnalysisRequest,
     handle: &JobHandle,
+    request_id: &str,
+    placements: &Arc<Mutex<Vec<PlacedShard>>>,
 ) -> Result<(AnalysisResult, Vec<ShardReport>)> {
     let (stack, params) = req.resolve()?;
     let pixels = stack.n_pixels();
@@ -452,6 +487,14 @@ fn drive_run(
     let pinned = ParamSpec::from_params(&params);
     let progress = RunProgress::new();
     let acc = Mutex::new(Vec::new());
+    let mut popts = PlaceOptions {
+        poll: state.cfg.poll,
+        submit_attempts: state.cfg.submit_attempts,
+        io_timeout: state.cfg.io_timeout,
+        request_id: None,
+        on_submit: None,
+    };
+    popts.request_id = Some(request_id.to_string());
     let ctx = RunCtx {
         state,
         stack: &stack,
@@ -462,13 +505,14 @@ fn drive_run(
         handle,
         progress: &progress,
         acc: &acc,
-        popts: PlaceOptions {
-            poll: state.cfg.poll,
-            submit_attempts: state.cfg.submit_attempts,
-            io_timeout: state.cfg.io_timeout,
-        },
+        popts,
+        request_id,
+        placements,
     };
-    drive_range(&ctx, (0, pixels), 0)?;
+    // the run root span lives on this thread (opened by run_job);
+    // shard spans open under it via the handle inside scoped threads
+    let root = trace::current_handle();
+    drive_range(&ctx, (0, pixels), 0, &root)?;
     let mut entries = acc.into_inner().unwrap();
     entries.sort_by_key(|(_, rep)| rep.pixel_range.0);
     for (i, (_, rep)) in entries.iter_mut().enumerate() {
@@ -482,7 +526,15 @@ fn drive_run(
 /// Place `range` across the currently-live fleet, splitting it by
 /// observed throughput. Each sub-range that loses its worker mid-run
 /// recurses (depth-bounded) over whatever fleet is alive *then*.
-fn drive_range(ctx: &RunCtx<'_>, range: (usize, usize), depth: usize) -> Result<()> {
+/// `parent` is the span the new shard spans open under: the run root
+/// at depth 0, the failed shard's span on a rebalance (so retries are
+/// visibly parented under the placement they replace).
+fn drive_range(
+    ctx: &RunCtx<'_>,
+    range: (usize, usize),
+    depth: usize,
+    parent: &Option<SpanHandle>,
+) -> Result<()> {
     if ctx.handle.is_cancelled() {
         return Err(api::cancelled());
     }
@@ -505,7 +557,15 @@ fn drive_range(ctx: &RunCtx<'_>, range: (usize, usize), depth: usize) -> Result<
             .filter(|(&(a, b), _)| a < b)
             .map(|(&(a, b), (worker, _))| {
                 let sub = (range.0 + a, range.0 + b);
-                scope.spawn(move || drive_sub(ctx, worker, sub, depth))
+                scope.spawn(move || {
+                    let span = trace::span_under(parent, "shard").map(|s| {
+                        s.with_attr("worker", worker)
+                            .with_attr("pixels_start", sub.0)
+                            .with_attr("pixels_end", sub.1)
+                            .with_attr("attempt", depth + 1)
+                    });
+                    drive_sub(ctx, worker, sub, depth, span)
+                })
             })
             .collect();
         threads
@@ -538,8 +598,16 @@ fn drive_range(ctx: &RunCtx<'_>, range: (usize, usize), depth: usize) -> Result<
 
 /// Drive one contiguous sub-range on one worker. A dead worker
 /// ([`PlaceError::WorkerDown`]) is marked down and the range re-split
-/// across the survivors; a job-side failure fails the run.
-fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize) -> Result<()> {
+/// across the survivors; a job-side failure fails the run. `span` is
+/// this placement's shard span — on a rebalance the replacement shard
+/// spans open under it.
+fn drive_sub(
+    ctx: &RunCtx<'_>,
+    worker: &str,
+    range: (usize, usize),
+    depth: usize,
+    span: Option<trace::Span>,
+) -> Result<()> {
     // ship only this range's pixel strip (see run_one_shard in
     // crate::shard for why slicing here is bit-equivalent)
     let mut chunking = ctx.chunking.clone();
@@ -550,6 +618,9 @@ fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize
         engine: ctx.engine.clone(),
         chunking,
         outputs: OutputSpec::default(),
+        // travels as X-Request-Id instead (PlaceOptions), keeping the
+        // shipped body canonical
+        request_id: None,
     };
     let body = sub.to_json_string();
     drop(sub);
@@ -557,7 +628,23 @@ fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize
         ctx.progress.set(range, done, total);
         ctx.progress.publish(ctx.handle);
     };
-    match shard::place_on_worker(worker, &body, range, &ctx.popts, ctx.handle, &progress) {
+    // record every worker-side job id the moment the worker 202s, even
+    // if this placement later dies — the trace endpoint needs orphaned
+    // jobs too
+    let mut popts = ctx.popts.clone();
+    {
+        let placements = Arc::clone(ctx.placements);
+        let worker_owned = worker.to_string();
+        let span_id = span.as_ref().map(|s| s.id()).unwrap_or(0);
+        popts.on_submit = Some(Arc::new(move |job| {
+            placements.lock().unwrap().push(PlacedShard {
+                worker: worker_owned.clone(),
+                job,
+                span_id,
+            });
+        }));
+    }
+    match shard::place_on_worker(worker, &body, range, &popts, ctx.handle, &progress) {
         Ok(p) => {
             ctx.acc.lock().unwrap().push((
                 p.partial,
@@ -583,10 +670,15 @@ fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize
             ctx.state.rebalances.fetch_add(1, Ordering::Relaxed);
             ctx.progress.clear(range);
             ctx.progress.publish(ctx.handle);
-            println!(
-                "bfast gateway: worker {worker} lost pixels [{}, {}) ({e:#}); \
-                 rebalancing onto survivors",
-                range.0, range.1
+            trace::log!(
+                Warn,
+                "gateway",
+                "worker_down",
+                "worker" => worker,
+                "request_id" => ctx.request_id,
+                "pixels_start" => range.0,
+                "pixels_end" => range.1,
+                "error" => format!("{e:#}"),
             );
             ensure!(
                 depth < ctx.state.cfg.max_resplits,
@@ -595,41 +687,91 @@ fn drive_sub(ctx: &RunCtx<'_>, worker: &str, range: (usize, usize), depth: usize
                 range.1,
                 ctx.state.cfg.max_resplits
             );
-            drive_range(ctx, range, depth + 1)
+            // close the failed placement's span (its duration = time
+            // to detect the death) but keep its identity: replacement
+            // shards parent under it
+            let retry_parent = span.as_ref().map(|s| s.handle());
+            drop(span);
+            drive_range(ctx, range, depth + 1, &retry_parent)
         }
     }
 }
 
 /// The detached run thread: drive the fan-out, record the outcome.
 fn run_job(state: &Arc<GatewayState>, id: u64, req: AnalysisRequest, handle: JobHandle) {
-    if let Some(job) = state.jobs.lock().unwrap().map.get_mut(&id) {
+    let (request_id, recorder, placements) = {
+        let mut jobs = state.jobs.lock().unwrap();
+        let Some(job) = jobs.map.get_mut(&id) else { return };
         job.state = JobState::Running;
-    }
+        (job.request_id.clone(), job.recorder.clone(), Arc::clone(&job.placements))
+    };
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        drive_run(state, &req, &handle)
+        // root of the gateway-side span tree; worker trees re-parent
+        // under its shard children on trace merge. Dropped (flushed)
+        // before the terminal state is published.
+        let _run = recorder.as_ref().map(|r| {
+            r.span("run").with_attr("job", id).with_attr("request_id", &request_id)
+        });
+        drive_run(state, &req, &handle, &request_id, &placements)
     }));
     let mut jobs = state.jobs.lock().unwrap();
     let Some(job) = jobs.map.get_mut(&id) else { return };
     job.finished_at = Some(Instant::now());
+    state.run_latency.observe(job.submitted_at.elapsed().as_secs_f64());
     match outcome {
         Ok(Ok((result, shards))) => {
             if let Some(p) = &result.phases {
                 state.phases.lock().unwrap().merge(p);
             }
-            println!(
-                "bfast gateway: job {id} done — {} pixels over {} shard(s)",
-                result.map.len(),
-                shards.len()
+            trace::log!(
+                Info,
+                "gateway",
+                "job_done",
+                "job" => id,
+                "request_id" => &request_id,
+                "pixels" => result.map.len(),
+                "shards" => shards.len(),
+                "wall_s" => result.wall.as_secs_f64(),
             );
-            print!("{}", report::shard_table(&shards).to_console());
+            if trace::level_enabled(trace::Level::Debug) {
+                eprint!("{}", report::shard_table(&shards).to_console());
+            }
             job.pixels = Some(result.map.len());
             job.result = Some(result);
             job.shards = shards;
             job.state = JobState::Done;
         }
-        Ok(Err(e)) if api::is_cancelled(&e) => job.state = JobState::Cancelled,
-        Ok(Err(e)) => job.state = JobState::Failed { error: format!("{e:#}") },
-        Err(_) => job.state = JobState::Failed { error: "gateway run panicked".into() },
+        Ok(Err(e)) if api::is_cancelled(&e) => {
+            trace::log!(
+                Info,
+                "gateway",
+                "job_cancelled",
+                "job" => id,
+                "request_id" => &request_id,
+            );
+            job.state = JobState::Cancelled;
+        }
+        Ok(Err(e)) => {
+            trace::log!(
+                Warn,
+                "gateway",
+                "job_failed",
+                "job" => id,
+                "request_id" => &request_id,
+                "error" => format!("{e:#}"),
+            );
+            job.state = JobState::Failed { error: format!("{e:#}") };
+        }
+        Err(_) => {
+            trace::log!(
+                Error,
+                "gateway",
+                "job_panicked",
+                "job" => id,
+                "request_id" => &request_id,
+            );
+            job.state = JobState::Failed { error: "gateway run panicked".into() };
+        }
     }
     // count-capped retention, oldest finished first (ids ascend)
     let finished: Vec<u64> = jobs
@@ -723,6 +865,7 @@ impl Gateway {
             sessions: Mutex::new(BTreeMap::new()),
             run_threads: Mutex::new(Vec::new()),
             phases: Mutex::new(PhaseTimes::new()),
+            run_latency: Histogram::run_latency(),
             rebalances: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -859,6 +1002,7 @@ fn route(req: &Request, state: &Arc<GatewayState>) -> Response {
         ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
         ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
+        ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
         ("GET", ["v1", "sessions", name])
@@ -875,6 +1019,12 @@ fn healthz(state: &GatewayState) -> Response {
         &Value::obj(vec![
             ("status", Value::Str("ok".into())),
             ("role", Value::Str("gateway".into())),
+            ("version", Value::Str(env!("CARGO_PKG_VERSION").into())),
+            (
+                "git_rev",
+                Value::Str(option_env!("BFAST_GIT_REV").unwrap_or("unknown").into()),
+            ),
+            ("profile", Value::Str(metrics::build_profile().into())),
             ("uptime_s", Value::Num(state.started.elapsed().as_secs_f64())),
             ("workers", Value::Num(workers as f64)),
             ("workers_alive", Value::Num(alive as f64)),
@@ -885,6 +1035,7 @@ fn healthz(state: &GatewayState) -> Response {
 }
 
 fn metrics_page(state: &GatewayState) -> Response {
+    use crate::metrics::{prom_header, prom_metric};
     use std::fmt::Write as _;
     let (workers, alive) = state.fleet.counts();
     let (mut done, mut failed, mut cancelled, mut inflight) = (0u64, 0u64, 0u64, 0u64);
@@ -897,64 +1048,127 @@ fn metrics_page(state: &GatewayState) -> Response {
         }
     }
     let mut out = String::new();
-    let _ = writeln!(
-        out,
-        "bfast_gateway_uptime_seconds {:.3}",
-        state.started.elapsed().as_secs_f64()
+    metrics::prom_build_info(&mut out);
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_gateway_uptime_seconds",
+        "seconds since this gateway started",
+        state.started.elapsed().as_secs_f64(),
     );
-    let _ = writeln!(
-        out,
-        "bfast_gateway_http_requests_total {}",
-        state.requests.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_http_requests_total",
+        "HTTP requests accepted",
+        state.requests.load(Ordering::Relaxed) as f64,
     );
-    let _ = writeln!(
-        out,
-        "bfast_gateway_http_errors_total {}",
-        state.errors.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_http_errors_total",
+        "HTTP responses with status >= 400",
+        state.errors.load(Ordering::Relaxed) as f64,
     );
-    let _ = writeln!(out, "bfast_gateway_workers {workers}");
-    let _ = writeln!(out, "bfast_gateway_workers_alive {alive}");
-    let _ = writeln!(
-        out,
-        "bfast_gateway_heartbeats_total {}",
-        state.fleet.heartbeats.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_gateway_workers",
+        "registered workers (any state)",
+        workers as f64,
     );
-    let _ = writeln!(
-        out,
-        "bfast_gateway_rebalances_total {}",
-        state.rebalances.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_gateway_workers_alive",
+        "workers eligible for placement",
+        alive as f64,
     );
-    let _ = writeln!(
-        out,
-        "bfast_gateway_runs_submitted_total {}",
-        state.submitted.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_heartbeats_total",
+        "worker heartbeats received (probe successes included)",
+        state.fleet.heartbeats.load(Ordering::Relaxed) as f64,
     );
-    let _ = writeln!(
-        out,
-        "bfast_gateway_runs_rejected_total {}",
-        state.rejected.load(Ordering::Relaxed)
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_rebalances_total",
+        "mid-run shard re-splits after a worker death",
+        state.rebalances.load(Ordering::Relaxed) as f64,
     );
-    let _ = writeln!(out, "bfast_gateway_runs_inflight {inflight}");
-    let _ = writeln!(out, "bfast_gateway_runs_done {done}");
-    let _ = writeln!(out, "bfast_gateway_runs_failed {failed}");
-    let _ = writeln!(out, "bfast_gateway_runs_cancelled {cancelled}");
-    let _ = writeln!(
-        out,
-        "bfast_gateway_sessions {}",
-        state.sessions.lock().unwrap().len()
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_runs_submitted_total",
+        "runs accepted at POST /v1/runs",
+        state.submitted.load(Ordering::Relaxed) as f64,
     );
-    for w in state.fleet.snapshot() {
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_gateway_runs_rejected_total",
+        "runs refused by admission control (HTTP 429)",
+        state.rejected.load(Ordering::Relaxed) as f64,
+    );
+    // per-state tallies are gauges over *retained* records (they
+    // shrink under the finished-record cap)
+    prom_metric(&mut out, "gauge", "bfast_gateway_runs_inflight", "runs not yet finished", inflight as f64);
+    prom_metric(&mut out, "gauge", "bfast_gateway_runs_done", "retained completed runs", done as f64);
+    prom_metric(&mut out, "gauge", "bfast_gateway_runs_failed", "retained failed runs", failed as f64);
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_gateway_runs_cancelled",
+        "retained cancelled runs",
+        cancelled as f64,
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_gateway_sessions",
+        "monitor sessions routed through this gateway",
+        state.sessions.lock().unwrap().len() as f64,
+    );
+    state.run_latency.render(
+        &mut out,
+        "bfast_gateway_run_latency_seconds",
+        "seconds from run submission to a terminal state",
+    );
+    let fleet = state.fleet.snapshot();
+    prom_header(
+        &mut out,
+        "gauge",
+        "bfast_gateway_worker_weight",
+        "effective placement weight per worker",
+    );
+    for w in &fleet {
         let _ = writeln!(
             out,
             "bfast_gateway_worker_weight{{worker=\"{}\"}} {:.3}",
             w.addr, w.weight
         );
+    }
+    prom_header(
+        &mut out,
+        "gauge",
+        "bfast_gateway_worker_chunks_per_s",
+        "observed throughput EMA per worker",
+    );
+    for w in &fleet {
         let _ = writeln!(
             out,
             "bfast_gateway_worker_chunks_per_s{{worker=\"{}\"}} {:.3}",
             w.addr, w.rate
         );
     }
+    prom_header(
+        &mut out,
+        "gauge",
+        "bfast_gateway_run_phase_seconds",
+        "engine phase seconds accumulated across completed runs",
+    );
     out.push_str(
         &state
             .phases
@@ -1043,10 +1257,19 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
     if state.shutdown.load(Ordering::SeqCst) {
         return Response::json_error(503, "gateway is shutting down");
     }
-    let analysis = match crate::serve::analysis_request_from(req) {
+    let mut analysis = match crate::serve::analysis_request_from(req) {
         Ok(a) => a,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
+    // the gateway is a front door: honour a caller-supplied request id
+    // (JSON field, then X-Request-Id header), mint one otherwise
+    if analysis.request_id.is_none() {
+        analysis.request_id = req.header("x-request-id").map(str::to_string);
+    }
+    let request_id = analysis
+        .request_id
+        .clone()
+        .unwrap_or_else(trace::new_request_id);
     // admission control: a run fans out across the whole fleet, so the
     // inflight cap plays the role the worker queue capacity plays on a
     // single serve (same 429 + Retry-After contract)
@@ -1076,6 +1299,10 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
                 id,
                 state: JobState::Queued,
                 handle: handle.clone(),
+                request_id: request_id.clone(),
+                recorder: Recorder::new(&request_id),
+                placements: Arc::new(Mutex::new(Vec::new())),
+                submitted_at: Instant::now(),
                 pixels: None,
                 result: None,
                 shards: Vec::new(),
@@ -1085,6 +1312,13 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
         id
     };
     state.submitted.fetch_add(1, Ordering::Relaxed);
+    trace::log!(
+        Info,
+        "gateway",
+        "run_submitted",
+        "job" => id,
+        "request_id" => &request_id,
+    );
     let run_state = Arc::clone(state);
     let t = std::thread::spawn(move || run_job(&run_state, id, analysis, handle));
     state.run_threads.lock().unwrap().push(t);
@@ -1093,6 +1327,7 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
         &Value::obj(vec![
             ("job", Value::Num(id as f64)),
             ("status", Value::Str("queued".into())),
+            ("request_id", Value::Str(request_id)),
         ]),
     )
 }
@@ -1101,6 +1336,7 @@ fn job_json(job: &GwJob) -> Value {
     let mut fields = vec![
         ("job", Value::Num(job.id as f64)),
         ("status", Value::Str(job.state.label().into())),
+        ("request_id", Value::Str(job.request_id.clone())),
         ("progress", Value::Num(job.progress())),
     ];
     if let Some(px) = job.pixels {
@@ -1245,6 +1481,152 @@ fn run_result(id_seg: &str, state: &GatewayState) -> Response {
     }
 }
 
+// -- the distributed trace endpoint --------------------------------------
+
+/// Span-id offset between merged processes: worker `k` (0-based) has
+/// its span ids shifted by `(k + 1) * SPAN_ID_STRIDE`, keeping every
+/// id unique in the merged trace while gateway ids stay untouched.
+/// Far above any real recorder's id count (rings cap at tens of
+/// thousands of spans).
+const SPAN_ID_STRIDE: u64 = 1_000_000;
+
+/// `GET /v1/runs/{id}/trace` — one Chrome trace for the whole
+/// distributed run: the gateway's own span tree (pid 1) merged with
+/// every placed worker job's trace (pid 2…N, fetched live from the
+/// workers), worker roots re-parented under the gateway shard span
+/// that placed them. Workers that cannot be reached (still down) are
+/// skipped and counted in `otherData.workers_unreachable`.
+fn run_trace(id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let (recorder, request_id, placements) = {
+        let jobs = state.jobs.lock().unwrap();
+        let Some(job) = jobs.map.get(&id) else {
+            return Response::json_error(404, &format!("no job {id}"));
+        };
+        (job.recorder.clone(), job.request_id.clone(), Arc::clone(&job.placements))
+    };
+    let Some(rec) = recorder else {
+        return Response::json_error(
+            409,
+            &format!("job {id} has no trace (tracing disabled at submission)"),
+        );
+    };
+    let mut events = trace::chrome_events(&rec.records(), 1, "bfast gateway");
+    let placements = placements.lock().unwrap().clone();
+    let mut unreachable = 0u64;
+    for (k, p) in placements.iter().enumerate() {
+        let pid = k as u64 + 2;
+        let offset = (k as u64 + 1) * SPAN_ID_STRIDE;
+        match fetch_worker_trace(&p.worker, p.job, state.cfg.io_timeout) {
+            Ok(worker_trace) => {
+                merge_worker_events(&mut events, &worker_trace, pid, offset, p.span_id);
+                events.push(Value::obj(vec![
+                    ("ph", Value::Str("M".into())),
+                    ("name", Value::Str("process_name".into())),
+                    ("pid", Value::Num(pid as f64)),
+                    ("tid", Value::Num(0.0)),
+                    (
+                        "args",
+                        Value::obj(vec![(
+                            "name",
+                            Value::Str(format!("worker {} (job {})", p.worker, p.job)),
+                        )]),
+                    ),
+                ]));
+            }
+            Err(e) => {
+                unreachable += 1;
+                trace::log!(
+                    Warn,
+                    "gateway",
+                    "trace_fetch_failed",
+                    "worker" => &p.worker,
+                    "worker_job" => p.job,
+                    "request_id" => &request_id,
+                    "error" => format!("{e:#}"),
+                );
+            }
+        }
+    }
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", Value::Str("ms".into())),
+            (
+                "otherData",
+                Value::obj(vec![
+                    ("request_id", Value::Str(request_id)),
+                    ("dropped_spans", Value::Num(rec.dropped() as f64)),
+                    ("workers_merged", Value::Num((placements.len() as u64 - unreachable) as f64)),
+                    ("workers_unreachable", Value::Num(unreachable as f64)),
+                ]),
+            ),
+        ]),
+    )
+}
+
+/// Fetch one worker job's Chrome trace (`GET /v1/runs/{job}/trace`).
+fn fetch_worker_trace(worker: &str, job: u64, io: Duration) -> Result<Value> {
+    let mut c = Client::connect_timeout(worker, io)?;
+    let (status, body) = c.request("GET", &format!("/v1/runs/{job}/trace"), "", &[])?;
+    ensure!(status == 200, "worker answered {status}: {}", http::error_message(&body));
+    crate::json::parse(std::str::from_utf8(&body).context("non-UTF-8 trace body")?)
+}
+
+/// Fold one worker's `traceEvents` into the merged stream: re-stamp
+/// the pid, shift `span_id`/`parent_id` by `offset`, and re-parent the
+/// worker's root spans (parent 0) under the gateway shard span that
+/// placed the job. Worker-side metadata events are skipped (the caller
+/// pushes its own process-name event per worker).
+fn merge_worker_events(
+    events: &mut Vec<Value>,
+    worker_trace: &Value,
+    pid: u64,
+    offset: u64,
+    shard_span: u64,
+) {
+    let Some(Value::Arr(worker_events)) = worker_trace.try_get("traceEvents") else {
+        return;
+    };
+    for ev in worker_events {
+        let Value::Obj(fields) = ev else { continue };
+        if fields.iter().any(|(k, v)| k == "ph" && matches!(v, Value::Str(s) if s == "M")) {
+            continue;
+        }
+        let mut fields = fields.clone();
+        for (k, v) in fields.iter_mut() {
+            match k.as_str() {
+                "pid" => *v = Value::Num(pid as f64),
+                "args" => {
+                    if let Value::Obj(args) = v {
+                        for (ak, av) in args.iter_mut() {
+                            let id = match av {
+                                Value::Num(n) => *n as u64,
+                                _ => continue,
+                            };
+                            if ak == "span_id" {
+                                *av = Value::Num((id + offset) as f64);
+                            } else if ak == "parent_id" {
+                                *av = Value::Num(if id == 0 {
+                                    shard_span as f64
+                                } else {
+                                    (id + offset) as f64
+                                });
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        events.push(Value::Obj(fields));
+    }
+}
+
 // -- session proxying ----------------------------------------------------
 
 fn list_sessions(state: &GatewayState) -> Response {
@@ -1375,6 +1757,9 @@ pub fn gateway_command() -> Command {
         .opt("max-resplits", "4", "re-split budget per pixel range on worker death")
         .opt("max-inflight", "8", "concurrent runs admitted before 429")
         .opt("finished-cap", "256", "finished run records retained")
+        .opt("log-level", "info", "log verbosity: error|warn|info|debug|trace")
+        .opt("log-format", "json", "log line format: json|text")
+        .opt("trace", "on", "flight recorder (span capture): on|off")
 }
 
 /// Parse `bfast gateway` flags into a [`GatewayConfig`].

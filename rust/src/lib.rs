@@ -64,6 +64,16 @@
 //! * **L2/L1 (python/compile)** — the batched BFAST compute graph and
 //!   its Pallas MOSUM kernel, lowered once to `artifacts/*.hlo.txt`
 //!   (only consumed by the `pjrt` backend).
+//! * **Observability ([`trace`])** — the flight recorder cutting
+//!   across every layer above: each run carries a request id (minted
+//!   at the front door, propagated as `X-Request-Id` through gateway →
+//!   worker), records a span tree **run → shard → chunk → phase**
+//!   into a bounded per-run ring, and exports it as Chrome
+//!   trace-event JSON (`GET /v1/runs/{id}/trace`, merged across the
+//!   fleet by the gateway; Perfetto-loadable). [`trace::log!`] is the
+//!   leveled structured logger behind `--log-level`/`--log-format`,
+//!   and [`metrics`] renders Prometheus expositions with fixed-bucket
+//!   latency histograms (`tests/metrics.rs`, `tests/trace.rs`).
 //!
 //! ## Backend feature matrix
 //!
@@ -187,5 +197,6 @@ pub mod serve;
 pub mod shard;
 pub mod synth;
 pub mod threadpool;
+pub mod trace;
 
 pub use error::{BfastError, Context, Result};

@@ -487,8 +487,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("finished-max-age-s", "3600", "seconds a finished job record is retained (0 = no age limit)")
     .opt("gateway", "", "gateway address to register with and heartbeat (host:port)")
     .opt("advertise", "", "address advertised to the gateway (default: the bound address)")
-    .opt("heartbeat-ms", "1000", "heartbeat interval when --gateway is set (ms)");
+    .opt("heartbeat-ms", "1000", "heartbeat interval when --gateway is set (ms)")
+    .opt("log-level", "info", "log verbosity: error|warn|info|debug|trace")
+    .opt("log-format", "json", "log line format: json|text")
+    .opt("trace", "on", "flight recorder (span capture): on|off");
     let m = cmd.parse(args)?;
+    apply_observability_flags(&m)?;
     let cfg = ServeConfig {
         addr: m.str("addr")?.to_string(),
         state_dir: match m.str("state")? {
@@ -527,8 +531,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     server.wait()
 }
 
+/// Apply the shared `--log-level` / `--log-format` / `--trace` flags
+/// (serve and gateway) to the process-wide observability switches.
+fn apply_observability_flags(m: &bfast::cli::Matches) -> Result<()> {
+    bfast::trace::set_log_level(bfast::trace::Level::parse(m.str("log-level")?)?);
+    bfast::trace::set_log_format(m.str("log-format")?)?;
+    match m.str("trace")? {
+        "on" => bfast::trace::set_enabled(true),
+        "off" => bfast::trace::set_enabled(false),
+        other => bail!("--trace: expected on|off, got {other:?}"),
+    }
+    Ok(())
+}
+
 fn cmd_gateway(args: &[String]) -> Result<()> {
     let m = bfast::gateway::gateway_command().parse(args)?;
+    apply_observability_flags(&m)?;
     let cfg = bfast::gateway::gateway_config_from_matches(&m)?;
     let statics = cfg.workers.len();
     let gw = bfast::gateway::Gateway::start(cfg)?;
@@ -599,11 +617,11 @@ fn cmd_client(args: &[String]) -> Result<()> {
         "client",
         "HTTP client for a running `bfast serve` or `bfast gateway`. Positional \
          action: health | metrics | jobs | workers | submit | status | cancel | \
-         map | result | session-init | session | ingest | session-map | shutdown",
+         map | result | trace | session-init | session | ingest | session-map | shutdown",
     )
     .opt("addr", "127.0.0.1:7878", "server address (host:port)")
     .opt("input", "", "input file (.bsq scene; .bten/.pgm layer for ingest)")
-    .opt("job", "0", "job id (status / cancel / map / result)")
+    .opt("job", "0", "job id (status / cancel / map / result / trace)")
     .opt("name", "", "session name")
     .opt("t", "", "acquisition time of the ingested layer")
     .opt("out", "", "write the response payload here instead of stdout")
@@ -730,6 +748,16 @@ fn cmd_client(args: &[String]) -> Result<()> {
             // replayable, and what the shard coordinator merges
             let job = m.usize("job")?;
             let path = format!("/v1/runs/{job}/result");
+            let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
+            client_print_or_write(&body, m.str("out")?)?;
+        }
+        "trace" => {
+            // Chrome trace-event JSON for one run — load the file into
+            // chrome://tracing or https://ui.perfetto.dev. Against a
+            // gateway this is the merged fleet trace (gateway + every
+            // worker that held a shard, one process lane each).
+            let job = m.usize("job")?;
+            let path = format!("/v1/runs/{job}/trace");
             let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
             client_print_or_write(&body, m.str("out")?)?;
         }

@@ -28,8 +28,15 @@ impl PhaseTimes {
         }
     }
 
-    /// Time `f` and charge it to `name`; returns f's output.
+    /// Time `f` and charge it to `name`; returns f's output. This is
+    /// the one phase-timing hook every backend routes through, so it
+    /// also opens the per-phase trace span: when the executing thread
+    /// is inside a traced run (a chunk span is *current*), the phase
+    /// lands in the flight recorder as its child — otherwise
+    /// [`crate::trace::phase_scope`] is a no-op behind one atomic
+    /// load.
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let _span = crate::trace::phase_scope(name);
         let t0 = Instant::now();
         let out = f();
         self.add(name, t0.elapsed());
@@ -124,6 +131,121 @@ pub fn ema(prev: f64, sample: f64, alpha: f64) -> f64 {
         sample
     } else {
         prev + alpha * (sample - prev)
+    }
+}
+
+// -- Prometheus exposition ----------------------------------------------
+
+/// A fixed-bucket Prometheus histogram: thread-safe `observe`, text
+/// exposition with cumulative `le` buckets plus `_sum`/`_count`. The
+/// serving layers use it for queue-wait and end-to-end run latency.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<std::sync::atomic::AtomicU64>,
+    /// Sum in nanoseconds (fits ~584 years of observed latency).
+    sum_ns: std::sync::atomic::AtomicU64,
+}
+
+impl Histogram {
+    /// Bucket upper bounds in seconds, ascending; an implicit `+Inf`
+    /// bucket is always appended.
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        let n = bounds.len() + 1; // +Inf
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..n).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+            sum_ns: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Bounds suiting queue-wait style latencies (1 ms – 60 s).
+    pub fn queue_wait() -> Histogram {
+        Histogram::new(&[0.001, 0.005, 0.025, 0.1, 0.5, 1.0, 5.0, 15.0, 60.0])
+    }
+
+    /// Bounds suiting end-to-end run latencies (10 ms – 10 min).
+    pub fn run_latency() -> Histogram {
+        Histogram::new(&[0.01, 0.05, 0.25, 1.0, 5.0, 15.0, 60.0, 180.0, 600.0])
+    }
+
+    pub fn observe(&self, seconds: f64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let seconds = if seconds.is_finite() && seconds >= 0.0 { seconds } else { 0.0 };
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add((seconds * 1e9) as u64, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.counts.iter().map(|c| c.load(Relaxed)).sum()
+    }
+
+    /// Append the full exposition for this histogram (`# HELP`,
+    /// `# TYPE`, cumulative buckets, `_sum`, `_count`) to `out`.
+    pub fn render(&self, out: &mut String, name: &str, help: &str) {
+        use std::fmt::Write;
+        use std::sync::atomic::Ordering::Relaxed;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, b) in self.bounds.iter().enumerate() {
+            cum += self.counts[i].load(Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+        }
+        cum += self.counts[self.bounds.len()].load(Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let sum = self.sum_ns.load(Relaxed) as f64 / 1e9;
+        let _ = writeln!(out, "{name}_sum {sum:.6}");
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+}
+
+/// Append one `# HELP`/`# TYPE`-prefixed single-sample family to a
+/// Prometheus exposition. `ty` is `"counter"` or `"gauge"`.
+pub fn prom_metric(out: &mut String, ty: &str, name: &str, help: &str, value: f64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Append only the `# HELP`/`# TYPE` header for a family whose
+/// samples the caller writes itself (labelled series).
+pub fn prom_header(out: &mut String, ty: &str, name: &str, help: &str) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {ty}");
+}
+
+/// Append the `bfast_build_info` gauge: constant 1 with the version /
+/// git revision / build profile as labels (the standard
+/// `*_build_info` idiom). The git revision comes from the optional
+/// `BFAST_GIT_REV` compile-time env var.
+pub fn prom_build_info(out: &mut String) {
+    use std::fmt::Write;
+    prom_header(out, "gauge", "bfast_build_info", "build metadata (constant 1)");
+    let _ = writeln!(
+        out,
+        "bfast_build_info{{version=\"{}\",git_rev=\"{}\",profile=\"{}\"}} 1",
+        env!("CARGO_PKG_VERSION"),
+        option_env!("BFAST_GIT_REV").unwrap_or("unknown"),
+        build_profile(),
+    );
+}
+
+/// `"debug"` or `"release"`, from how this binary was compiled.
+pub fn build_profile() -> &'static str {
+    if cfg!(debug_assertions) {
+        "debug"
+    } else {
+        "release"
     }
 }
 
@@ -233,5 +355,49 @@ mod tests {
     fn median_odd_even() {
         assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotonic() {
+        let h = Histogram::new(&[0.1, 1.0, 10.0]);
+        for s in [0.05, 0.05, 0.5, 2.0, 100.0] {
+            h.observe(s);
+        }
+        assert_eq!(h.count(), 5);
+        let mut text = String::new();
+        h.render(&mut text, "t_seconds", "test");
+        assert!(text.contains("# HELP t_seconds test"));
+        assert!(text.contains("# TYPE t_seconds histogram"));
+        assert!(text.contains("t_seconds_bucket{le=\"0.1\"} 2"));
+        assert!(text.contains("t_seconds_bucket{le=\"1\"} 3"));
+        assert!(text.contains("t_seconds_bucket{le=\"10\"} 4"));
+        assert!(text.contains("t_seconds_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("t_seconds_count 5"));
+        // cumulative counts never decrease down the bucket list
+        let counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("t_seconds_bucket"))
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+        // garbage observations are clamped, not panicking
+        h.observe(f64::NAN);
+        h.observe(-3.0);
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn prom_helpers_emit_help_type_then_sample() {
+        let mut s = String::new();
+        prom_metric(&mut s, "counter", "x_total", "things", 3.0);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "# HELP x_total things");
+        assert_eq!(lines[1], "# TYPE x_total counter");
+        assert_eq!(lines[2], "x_total 3");
+        let mut b = String::new();
+        prom_build_info(&mut b);
+        assert!(b.contains("# TYPE bfast_build_info gauge"));
+        assert!(b.contains(concat!("version=\"", env!("CARGO_PKG_VERSION"), "\"")));
+        assert!(b.contains("} 1"));
     }
 }

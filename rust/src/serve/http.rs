@@ -463,12 +463,32 @@ impl Client {
         content_type: &str,
         body: &[u8],
     ) -> Result<ResponseParts> {
-        let head = format!(
+        self.request_with_headers(method, path, content_type, &[], body)
+    }
+
+    /// [`Client::request_parts`] with extra request headers beyond the
+    /// always-present Host / Content-Type / Content-Length /
+    /// Connection — e.g. `X-Request-Id` on a shard submit, so a
+    /// worker's trace stitches into the coordinator's distributed
+    /// trace.
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra_headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<ResponseParts> {
+        let mut head = format!(
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\n\
-             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+             Content-Length: {}\r\n",
             self.addr,
             body.len()
         );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("Connection: keep-alive\r\n\r\n");
         let stream = self.reader.get_mut();
         stream.write_all(head.as_bytes())?;
         stream.write_all(body)?;

@@ -23,6 +23,7 @@
 //! | `DELETE /v1/runs/{id}`             | —               | cancel (200/404/409) |
 //! | `GET  /v1/runs/{id}/result`        | —               | canonical v1 [`crate::api::AnalysisResult`] JSON |
 //! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM (sugar) |
+//! | `GET  /v1/runs/{id}/trace`         | —               | Chrome trace-event JSON (flight recorder) |
 //! | `POST /v1/sessions/{name}`         | [`SessionInit`] JSON, or `.bsq` bytes + `?n-hist=..` | 201 summary |
 //! | `GET  /v1/sessions[/{name}]`       | —               | list / summary |
 //! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or [`SessionIngest`] JSON | ingest delta |
@@ -55,10 +56,12 @@ use crate::api::{AnalysisRequest, ParamSpec, SceneSource, SessionIngest, Session
 use crate::coordinator::{RunnerConfig, SharedBfastRunner};
 use crate::error::{bail, err, Context, Result};
 use crate::json::{self, Value};
+use crate::metrics;
 use crate::monitor::MonitorSession;
 use crate::raster::{io as rio, pgm, BreakMap};
 use crate::runtime::bten::{bten_from_bytes, Tensor};
 use crate::threadpool::{self, WorkerPool};
+use crate::trace;
 use http::{Request, Response};
 use queue::{
     CancelOutcome, EvictionPolicy, JobQueue, JobRecord, JobState, Scheduler, SubmitError,
@@ -203,7 +206,12 @@ impl Server {
             scheduler.join();
             pool.shutdown();
             if let Err(e) = accept_state.registry.save_all() {
-                eprintln!("bfast serve: persisting sessions on shutdown: {e:#}");
+                trace::log!(
+                    Error,
+                    "serve",
+                    "session_persist_failed",
+                    "error" => format!("{e:#}"),
+                );
             }
         });
         let beat = cfg.gateway.as_ref().map(|gateway| {
@@ -331,6 +339,7 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
         ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
+        ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
         ("GET", ["v1", "sessions", name]) => session_status(name, state),
@@ -348,6 +357,12 @@ fn healthz(state: &ServerState) -> Response {
         &Value::obj(vec![
             ("status", Value::Str("ok".into())),
             ("backend", Value::Str(state.runner.platform())),
+            ("version", Value::Str(env!("CARGO_PKG_VERSION").into())),
+            (
+                "git_rev",
+                Value::Str(option_env!("BFAST_GIT_REV").unwrap_or("unknown").into()),
+            ),
+            ("profile", Value::Str(metrics::build_profile().into())),
             ("uptime_s", Value::Num(state.started.elapsed().as_secs_f64())),
             ("sessions", Value::Num(state.registry.len() as f64)),
             ("queue_depth", Value::Num(state.queue.depth() as f64)),
@@ -356,34 +371,126 @@ fn healthz(state: &ServerState) -> Response {
 }
 
 fn metrics(state: &ServerState) -> Response {
-    use std::fmt::Write as _;
+    use crate::metrics::{prom_header, prom_metric};
     let stats = state.queue.stats();
     let mut out = String::new();
-    let _ = writeln!(out, "bfast_uptime_seconds {:.3}", state.started.elapsed().as_secs_f64());
-    let _ = writeln!(out, "bfast_http_requests_total {}", state.requests.load(Ordering::Relaxed));
-    let _ = writeln!(out, "bfast_http_errors_total {}", state.errors.load(Ordering::Relaxed));
-    let _ = writeln!(out, "bfast_jobs_submitted_total {}", stats.submitted);
-    let _ = writeln!(out, "bfast_jobs_rejected_total {}", stats.rejected);
-    let _ = writeln!(out, "bfast_jobs_evicted_total {}", stats.evicted);
-    let _ = writeln!(out, "bfast_jobs_queued {}", stats.queued);
-    let _ = writeln!(out, "bfast_jobs_running {}", stats.running);
-    let _ = writeln!(out, "bfast_jobs_done {}", stats.done);
-    let _ = writeln!(out, "bfast_jobs_failed {}", stats.failed);
-    let _ = writeln!(out, "bfast_jobs_cancelled {}", stats.cancelled);
-    let _ = writeln!(out, "bfast_chunks_done_total {}", stats.chunks_done);
-    let _ = writeln!(out, "bfast_queue_capacity {}", state.queue.capacity());
-    let policy = state.queue.policy();
-    let _ = writeln!(out, "bfast_finished_records_cap {}", policy.max_finished);
-    let _ = writeln!(
-        out,
-        "bfast_finished_max_age_seconds {:.3}",
-        policy.max_age.as_secs_f64()
+    metrics::prom_build_info(&mut out);
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_uptime_seconds",
+        "seconds since this server started",
+        state.started.elapsed().as_secs_f64(),
     );
-    let _ = writeln!(out, "bfast_sessions {}", state.registry.len());
-    let _ = writeln!(
-        out,
-        "bfast_session_layers_ingested_total {}",
-        state.registry.layers_ingested()
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_http_requests_total",
+        "HTTP requests accepted",
+        state.requests.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_http_errors_total",
+        "HTTP responses with status >= 400",
+        state.errors.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_jobs_submitted_total",
+        "analysis jobs accepted into the queue",
+        stats.submitted as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_jobs_rejected_total",
+        "submissions refused by backpressure (HTTP 429)",
+        stats.rejected as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_jobs_evicted_total",
+        "finished job records reaped by the eviction policy",
+        stats.evicted as f64,
+    );
+    // per-state tallies are gauges: they count *retained* records,
+    // which shrink under eviction
+    prom_metric(&mut out, "gauge", "bfast_jobs_queued", "jobs waiting for a worker", stats.queued as f64);
+    prom_metric(&mut out, "gauge", "bfast_jobs_running", "jobs currently executing", stats.running as f64);
+    prom_metric(&mut out, "gauge", "bfast_jobs_done", "retained completed jobs", stats.done as f64);
+    prom_metric(&mut out, "gauge", "bfast_jobs_failed", "retained failed jobs", stats.failed as f64);
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_jobs_cancelled",
+        "retained cancelled jobs",
+        stats.cancelled as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_chunks_done_total",
+        "chunks executed across every completed run",
+        stats.chunks_done as f64,
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_queue_capacity",
+        "bounded job-queue capacity",
+        state.queue.capacity() as f64,
+    );
+    let policy = state.queue.policy();
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_finished_records_cap",
+        "finished job records retained (count cap)",
+        policy.max_finished as f64,
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_finished_max_age_seconds",
+        "longest a finished record is retained (0 = unlimited)",
+        policy.max_age.as_secs_f64(),
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_sessions",
+        "live monitor sessions",
+        state.registry.len() as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_session_layers_ingested_total",
+        "layers absorbed across every monitor session",
+        state.registry.layers_ingested() as f64,
+    );
+    state.queue.queue_wait().render(
+        &mut out,
+        "bfast_queue_wait_seconds",
+        "seconds jobs waited in the queue before a worker picked them up",
+    );
+    state.queue.run_latency().render(
+        &mut out,
+        "bfast_run_latency_seconds",
+        "seconds from job submission to a terminal state",
+    );
+    // accumulated seconds, but exposed as a labelled gauge family: the
+    // name predates the HELP/TYPE discipline and renaming would break
+    // scrapers (counters must end in _total)
+    prom_header(
+        &mut out,
+        "gauge",
+        "bfast_run_phase_seconds",
+        "engine phase seconds accumulated across completed runs",
     );
     out.push_str(&stats.phases.to_prometheus("bfast_run_phase_seconds"));
     Response::text(200, &out)
@@ -457,18 +564,38 @@ pub(crate) fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
 }
 
 fn submit_run(req: &Request, state: &ServerState) -> Response {
-    let analysis = match analysis_request_from(req) {
+    let mut analysis = match analysis_request_from(req) {
         Ok(a) => a,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
+    // request-id precedence at the front door: JSON field, then the
+    // X-Request-Id header (how the gateway/shard layer propagates its
+    // id), then minted by the queue
+    if analysis.request_id.is_none() {
+        analysis.request_id = req.header("x-request-id").map(str::to_string);
+    }
     match state.queue.submit(analysis) {
-        Ok(id) => Response::json(
-            202,
-            &Value::obj(vec![
-                ("job", Value::Num(id as f64)),
-                ("status", Value::Str("queued".into())),
-            ]),
-        ),
+        Ok(id) => {
+            let request_id = state
+                .queue
+                .with_record(id, |rec| rec.request_id.clone())
+                .unwrap_or_default();
+            trace::log!(
+                Info,
+                "serve",
+                "job_submitted",
+                "job" => id,
+                "request_id" => &request_id,
+            );
+            Response::json(
+                202,
+                &Value::obj(vec![
+                    ("job", Value::Num(id as f64)),
+                    ("status", Value::Str("queued".into())),
+                    ("request_id", Value::Str(request_id)),
+                ]),
+            )
+        }
         // 429 carries the retry hint twice: the standard Retry-After
         // header, and `retry_after_s` inside the error envelope for
         // body-only clients. `bfast client submit` and the shard
@@ -495,6 +622,7 @@ fn job_json(rec: &JobRecord) -> Value {
     let mut fields = vec![
         ("job", Value::Num(rec.id as f64)),
         ("status", Value::Str(rec.state.label().into())),
+        ("request_id", Value::Str(rec.request_id.clone())),
         ("progress", Value::Num(rec.progress())),
     ];
     if let Some(px) = rec.pixels {
@@ -609,6 +737,24 @@ fn run_result(id_seg: &str, state: &ServerState) -> Response {
             Response::json_error(409, &format!("job {id} was cancelled"))
         }
         _ => Response::json_error(409, &format!("job {id} is not finished")),
+    });
+    resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
+}
+
+/// `GET /v1/runs/{id}/trace` — the job's flight-recorder span tree as
+/// Chrome trace-event JSON (load it in Perfetto / `chrome://tracing`).
+/// Served for any job state: a running job yields its spans so far.
+fn run_trace(id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let resp = state.queue.with_record(id, |rec| match &rec.recorder {
+        Some(r) => Response::json(200, &r.to_chrome_trace(1, "bfast serve")),
+        None => Response::json_error(
+            409,
+            &format!("job {id} has no trace (tracing disabled at submission)"),
+        ),
     });
     resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
 }

@@ -26,7 +26,8 @@
 
 use crate::api::{self, AnalysisRequest, AnalysisResult, JobHandle};
 use crate::coordinator::SharedBfastRunner;
-use crate::metrics::PhaseTimes;
+use crate::metrics::{Histogram, PhaseTimes};
+use crate::trace::{self, Recorder};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -64,6 +65,15 @@ pub struct JobRecord {
     pub state: JobState,
     /// Progress + cancellation of this job (shared with the worker).
     pub handle: JobHandle,
+    /// Request id stamped at submission (client-supplied or minted);
+    /// every log line and trace span of this job carries it.
+    pub request_id: String,
+    /// Flight recorder for this job's span tree (`None` when tracing
+    /// is disabled). Served by `GET /v1/runs/{id}/trace`.
+    pub recorder: Option<Recorder>,
+    /// When the job entered the queue (queue-wait + end-to-end
+    /// latency histograms).
+    pub submitted_at: Instant,
     /// Scene geometry recorded at submission (PGM rendering); known
     /// only for inline scenes until the run resolves the source.
     pub width: Option<usize>,
@@ -198,12 +208,25 @@ impl QueueInner {
     }
 }
 
+/// One unit of work handed to a scheduler worker by [`JobQueue::next_job`].
+struct NextJob {
+    id: u64,
+    req: AnalysisRequest,
+    handle: JobHandle,
+    request_id: String,
+    recorder: Option<Recorder>,
+}
+
 /// Bounded FIFO of analysis jobs. See module docs.
 pub struct JobQueue {
     capacity: usize,
     policy: EvictionPolicy,
     inner: Mutex<QueueInner>,
     ready: Condvar,
+    /// Seconds jobs spent queued before a worker picked them up.
+    queue_wait: Histogram,
+    /// Seconds from submission to a terminal state.
+    run_latency: Histogram,
 }
 
 impl JobQueue {
@@ -227,6 +250,8 @@ impl JobQueue {
                 phases: PhaseTimes::new(),
             }),
             ready: Condvar::new(),
+            queue_wait: Histogram::queue_wait(),
+            run_latency: Histogram::run_latency(),
         }
     }
 
@@ -234,12 +259,27 @@ impl JobQueue {
         self.capacity
     }
 
+    /// Queue-wait histogram (submission → worker pickup), for `/metrics`.
+    pub fn queue_wait(&self) -> &Histogram {
+        &self.queue_wait
+    }
+
+    /// End-to-end latency histogram (submission → terminal state).
+    pub fn run_latency(&self) -> &Histogram {
+        &self.run_latency
+    }
+
     pub fn policy(&self) -> &EvictionPolicy {
         &self.policy
     }
 
     /// Enqueue a request; `Err(Full)` is the 429 backpressure signal.
-    pub fn submit(&self, req: AnalysisRequest) -> std::result::Result<u64, SubmitError> {
+    /// The job's request id is taken from the request (minted here
+    /// when absent) and a flight recorder is opened for its span tree.
+    pub fn submit(&self, mut req: AnalysisRequest) -> std::result::Result<u64, SubmitError> {
+        let request_id =
+            req.request_id.clone().unwrap_or_else(trace::new_request_id);
+        req.request_id = Some(request_id.clone());
         let mut inner = self.inner.lock().unwrap();
         if inner.shutdown {
             return Err(SubmitError::ShuttingDown);
@@ -261,6 +301,9 @@ impl JobQueue {
                 id,
                 state: JobState::Queued,
                 handle: JobHandle::new(),
+                request_id: request_id.clone(),
+                recorder: Recorder::new(&request_id),
+                submitted_at: Instant::now(),
                 width,
                 height,
                 pixels,
@@ -275,16 +318,24 @@ impl JobQueue {
         Ok(id)
     }
 
-    /// Blocking pop for scheduler workers; marks the job running and
-    /// hands back its handle. Returns `None` only once the queue is
-    /// shut down *and* drained.
-    fn next_job(&self) -> Option<(u64, AnalysisRequest, JobHandle)> {
+    /// Blocking pop for scheduler workers; marks the job running,
+    /// observes its queue wait and hands back everything the worker
+    /// needs. Returns `None` only once the queue is shut down *and*
+    /// drained.
+    fn next_job(&self) -> Option<NextJob> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some((id, req)) = inner.pending.pop_front() {
                 if let Some(rec) = inner.records.get_mut(&id) {
                     rec.state = JobState::Running;
-                    return Some((id, req, rec.handle.clone()));
+                    self.queue_wait.observe(rec.submitted_at.elapsed().as_secs_f64());
+                    return Some(NextJob {
+                        id,
+                        req,
+                        handle: rec.handle.clone(),
+                        request_id: rec.request_id.clone(),
+                        recorder: rec.recorder.clone(),
+                    });
                 }
                 continue; // record gone (cannot happen: pending jobs are never evicted)
             }
@@ -303,6 +354,7 @@ impl JobQueue {
         inner.chunks_done += result.chunks as u64;
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Done;
+            self.run_latency.observe(rec.submitted_at.elapsed().as_secs_f64());
             // the run's own view wins: a pixel_range request analyses a
             // slice, whose map no longer matches the submitted scene's
             // geometry (PGM rendering would assert on the mismatch)
@@ -319,6 +371,7 @@ impl JobQueue {
         let mut inner = self.inner.lock().unwrap();
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Failed { error };
+            self.run_latency.observe(rec.submitted_at.elapsed().as_secs_f64());
             rec.finished_at = Some(Instant::now());
         }
         inner.evict_finished(&self.policy);
@@ -329,6 +382,7 @@ impl JobQueue {
         let mut inner = self.inner.lock().unwrap();
         if let Some(rec) = inner.records.get_mut(&id) {
             rec.state = JobState::Cancelled;
+            self.run_latency.observe(rec.submitted_at.elapsed().as_secs_f64());
             rec.finished_at = Some(Instant::now());
         }
         inner.evict_finished(&self.policy);
@@ -443,19 +497,49 @@ impl Scheduler {
                 let queue = Arc::clone(&queue);
                 let runner = Arc::clone(&runner);
                 std::thread::spawn(move || {
-                    while let Some((id, req, handle)) = queue.next_job() {
+                    while let Some(job) = queue.next_job() {
+                        let NextJob { id, req, handle, request_id, recorder } = job;
                         // contain panics: a panicking run must mark its
                         // job failed, not kill the worker (with the
                         // default single worker that would stall the
                         // whole queue, jobs stuck in "running" forever)
                         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            // root of this job's span tree; made
+                            // current on this thread so the
+                            // coordinator's chunk/phase spans parent
+                            // under it. Dropped (and flushed) before
+                            // the terminal state is recorded.
+                            let _run = recorder.as_ref().map(|r| {
+                                r.span("run")
+                                    .with_attr("job", id)
+                                    .with_attr("request_id", &request_id)
+                            });
                             req.execute_on(runner.as_ref(), &handle)
                         }));
                         match res {
                             Ok(Ok(r)) => queue.complete(id, r),
                             Ok(Err(e)) if api::is_cancelled(&e) => queue.mark_cancelled(id),
-                            Ok(Err(e)) => queue.fail(id, format!("{e:#}")),
-                            Err(_) => queue.fail(id, "analysis panicked".to_string()),
+                            Ok(Err(e)) => {
+                                trace::log!(
+                                    Warn,
+                                    "serve",
+                                    "job_failed",
+                                    "job" => id,
+                                    "request_id" => &request_id,
+                                    "error" => format!("{e:#}"),
+                                );
+                                queue.fail(id, format!("{e:#}"));
+                            }
+                            Err(_) => {
+                                trace::log!(
+                                    Error,
+                                    "serve",
+                                    "job_panicked",
+                                    "job" => id,
+                                    "request_id" => &request_id,
+                                );
+                                queue.fail(id, "analysis panicked".to_string());
+                            }
                         }
                     }
                 })

@@ -78,7 +78,7 @@ impl Default for ShardOptions {
 
 /// The single-placement subset of [`ShardOptions`] —
 /// what [`place_on_worker`] needs to drive one shard on one worker.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct PlaceOptions {
     /// Job status poll interval.
     pub poll: Duration,
@@ -86,11 +86,38 @@ pub struct PlaceOptions {
     pub submit_attempts: usize,
     /// Per-I/O timeout on the worker socket.
     pub io_timeout: Duration,
+    /// Sent as the `X-Request-Id` header on the shard submit, so the
+    /// worker's flight recorder keys its trace to the coordinator's
+    /// request id.
+    pub request_id: Option<String>,
+    /// Observer invoked with the worker-side job id as soon as the
+    /// submit is accepted — *before* polling begins — so a resident
+    /// coordinator can record the placement (and later fetch its
+    /// worker trace) even when the placement subsequently fails.
+    pub on_submit: Option<std::sync::Arc<dyn Fn(u64) + Send + Sync>>,
+}
+
+impl std::fmt::Debug for PlaceOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlaceOptions")
+            .field("poll", &self.poll)
+            .field("submit_attempts", &self.submit_attempts)
+            .field("io_timeout", &self.io_timeout)
+            .field("request_id", &self.request_id)
+            .field("on_submit", &self.on_submit.as_ref().map(|_| "<fn>"))
+            .finish()
+    }
 }
 
 impl From<&ShardOptions> for PlaceOptions {
     fn from(o: &ShardOptions) -> Self {
-        Self { poll: o.poll, submit_attempts: o.submit_attempts, io_timeout: o.io_timeout }
+        Self {
+            poll: o.poll,
+            submit_attempts: o.submit_attempts,
+            io_timeout: o.io_timeout,
+            request_id: None,
+            on_submit: None,
+        }
     }
 }
 
@@ -138,6 +165,9 @@ pub struct Placement {
     pub chunks: usize,
     /// The worker-side wall time of the shard run.
     pub wall: Duration,
+    /// The worker-side job id (for follow-up queries against the
+    /// worker — e.g. `GET /v1/runs/{job}/trace`).
+    pub job: u64,
 }
 
 /// How one shard fared (the `bfast shard` report table).
@@ -306,6 +336,12 @@ pub fn run_sharded(
     // pin every parameter (λ included) coordinator-side, so all shards
     // — and any retried placement — analyse under identical numbers
     let pinned = ParamSpec::from_params(&params);
+    // one request id for the whole fan-out: minted here when the
+    // caller didn't bring one, propagated to every shard submit
+    let request_id = req
+        .request_id
+        .clone()
+        .unwrap_or_else(crate::trace::new_request_id);
     let k = if opts.shards == 0 { workers.len() } else { opts.shards };
     let ranges = split_ranges(pixels, k);
     let attempts = if opts.attempts == 0 { workers.len() } else { opts.attempts };
@@ -328,6 +364,7 @@ pub fn run_sharded(
                 let pinned = pinned.clone();
                 let engine = &req.engine;
                 let chunking = &req.chunking;
+                let request_id = request_id.as_str();
                 scope.spawn(move || {
                     run_one_shard(
                         idx,
@@ -336,6 +373,7 @@ pub fn run_sharded(
                         pinned,
                         engine,
                         chunking,
+                        request_id,
                         workers,
                         attempts,
                         opts,
@@ -399,6 +437,7 @@ fn run_one_shard(
     params: ParamSpec,
     engine: &EngineSpec,
     chunking: &ChunkSpec,
+    request_id: &str,
     workers: &[String],
     attempts: usize,
     opts: &ShardOptions,
@@ -421,10 +460,12 @@ fn run_one_shard(
         engine: engine.clone(),
         chunking,
         outputs: OutputSpec::default(),
+        request_id: Some(request_id.to_string()),
     };
     let body = sub.to_json_string();
     drop(sub); // the JSON carries the slice; don't hold it twice
-    let popts = PlaceOptions::from(opts);
+    let mut popts = PlaceOptions::from(opts);
+    popts.request_id = Some(request_id.to_string());
     let progress = |done: usize, total: usize| {
         cells[idx].0.store(done, Ordering::Relaxed);
         cells[idx].1.store(total, Ordering::Relaxed);
@@ -514,14 +555,22 @@ pub fn place_on_worker(
         if handle.is_cancelled() {
             return Err(PlaceError::Job(api::cancelled()));
         }
+        let mut extra: Vec<(&str, &str)> = Vec::new();
+        if let Some(rid) = &opts.request_id {
+            extra.push(("X-Request-Id", rid.as_str()));
+        }
         let (status, headers, resp) = client
-            .request_parts("POST", "/v1/runs", "application/json", body.as_bytes())
+            .request_with_headers("POST", "/v1/runs", "application/json", &extra, body.as_bytes())
             .map_err(PlaceError::WorkerDown)?;
         match status {
             202 => {
-                break parse_json(&resp)
+                let job = parse_json(&resp)
                     .and_then(|v| Ok(v.get("job")?.as_usize()? as u64))
                     .map_err(PlaceError::Job)?;
+                if let Some(observe) = &opts.on_submit {
+                    observe(job);
+                }
+                break job;
             }
             429 if submit_attempt + 1 < opts.submit_attempts.max(1) => {
                 std::thread::sleep(http::backoff_delay(
@@ -649,7 +698,7 @@ fn poll_and_fetch(
     progress(result.chunks, result.chunks);
     let (chunks, wall) = (result.chunks, result.wall);
     let partial = PartialResult::new(range, result).map_err(PlaceError::Job)?;
-    Ok(Placement { partial, chunks, wall })
+    Ok(Placement { partial, chunks, wall, job })
 }
 
 // -- the CLI front door --------------------------------------------------

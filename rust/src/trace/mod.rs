@@ -1,0 +1,793 @@
+//! The **flight recorder**: request-scoped tracing spans plus leveled
+//! structured logging, threaded through every layer with zero
+//! dependencies.
+//!
+//! Two halves, one module:
+//!
+//! * **Spans** — a [`Recorder`] is minted per run (keyed by its
+//!   request id) and collects a tree of [`SpanRecord`]s —
+//!   **run → shard → chunk → phase** — with integer-ns start/end
+//!   stamps on a shared epoch clock ([`now_ns`]). [`Span`] is an RAII
+//!   guard: creating one makes it the thread's *current* span (so
+//!   children parent automatically), dropping it stamps the end time
+//!   and hands the record to a per-thread buffer that drains into the
+//!   recorder's bounded ring (drop-oldest beyond
+//!   [`Recorder::capacity`]). Cross-thread parenting goes through
+//!   [`SpanHandle`] (capture on the submitting thread, adopt on the
+//!   executor thread) — this is how the coordinator's scoped executor
+//!   thread hangs chunk spans under the serve scheduler's run span.
+//!   The whole tree exports as Chrome trace-event JSON
+//!   ([`Recorder::to_chrome_trace`]) — loadable in Perfetto / DevTools
+//!   — and the gateway merges its workers' exports into one
+//!   distributed trace (`GET /v1/runs/{id}/trace`).
+//! * **Logs** — [`log!`] emits one structured record per line to
+//!   stderr: JSON (`{"ts_ns":..,"level":"info","target":"gateway",
+//!   "event":"worker_down",...}`) or `key=value` text, selected
+//!   process-wide by [`set_log_format`] (the `--log-format` flag on
+//!   serve/gateway). Records below [`set_log_level`] are skipped
+//!   before any formatting work.
+//!
+//! Tracing is **on by default** and can be disabled process-wide
+//! ([`set_enabled`], the `--trace off` flag): every span constructor
+//! is a no-op behind one relaxed atomic load, so the fused-engine hot
+//! path (which routes every phase through
+//! [`crate::metrics::PhaseTimes::time`] → [`phase_scope`]) pays
+//! nothing measurable when the recorder is off — pinned by the bench
+//! trajectory gate.
+
+use crate::json::Value;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::Instant;
+
+// -- clock ---------------------------------------------------------------
+
+/// Monotonic nanoseconds on the unix epoch: the process captures one
+/// `(SystemTime, Instant)` anchor, then every stamp is epoch base +
+/// monotonic elapsed. Monotonic within a process, comparable across
+/// processes to clock-sync accuracy — which is what lets one gateway
+/// trace interleave spans from several worker processes on a shared
+/// timeline.
+pub fn now_ns() -> u64 {
+    static ANCHOR: OnceLock<(u64, Instant)> = OnceLock::new();
+    let (epoch_ns, at) = ANCHOR.get_or_init(|| {
+        let epoch = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        (epoch, Instant::now())
+    });
+    epoch_ns + at.elapsed().as_nanos() as u64
+}
+
+/// A process-unique-ish request id: epoch-ns entropy mixed with a
+/// process-wide counter through splitmix64, rendered as 16 hex chars.
+/// Minted at every front door that receives a request without one.
+pub fn new_request_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut x = now_ns() ^ ((std::process::id() as u64) << 32);
+    x = x.wrapping_add(SEQ.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // splitmix64 finaliser
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    format!("{x:016x}")
+}
+
+// -- process-wide switches ----------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static LOG_JSON: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable span recording process-wide (`--trace on|off`).
+/// Disabled, every span constructor returns `None` behind a single
+/// relaxed load.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Severity of one log record, `Error` most severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> crate::Result<Level> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            other => crate::error::bail!(
+                "unknown log level {other:?} (error|warn|info|debug|trace)"
+            ),
+        })
+    }
+}
+
+/// Drop log records below `level` (`--log-level`).
+pub fn set_log_level(level: Level) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is a record at `level` currently emitted? (The [`log!`] macro
+/// checks this before doing any formatting work.)
+pub fn level_enabled(level: Level) -> bool {
+    level as u8 <= LOG_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Select the log line format: `"json"` (one object per line — the
+/// default, grep-able in CI) or `"text"` (`key=value` pairs).
+pub fn set_log_format(format: &str) -> crate::Result<()> {
+    match format {
+        "json" => LOG_JSON.store(true, Ordering::Relaxed),
+        "text" => LOG_JSON.store(false, Ordering::Relaxed),
+        other => crate::error::bail!("unknown log format {other:?} (json|text)"),
+    }
+    Ok(())
+}
+
+// -- structured logging --------------------------------------------------
+
+/// A typed field value for [`log!`] records.
+#[derive(Clone, Debug)]
+pub enum FieldValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl From<&str> for FieldValue {
+    fn from(s: &str) -> Self {
+        FieldValue::Str(s.to_string())
+    }
+}
+impl From<String> for FieldValue {
+    fn from(s: String) -> Self {
+        FieldValue::Str(s)
+    }
+}
+impl From<&String> for FieldValue {
+    fn from(s: &String) -> Self {
+        FieldValue::Str(s.clone())
+    }
+}
+impl From<u64> for FieldValue {
+    fn from(n: u64) -> Self {
+        FieldValue::Num(n as f64)
+    }
+}
+impl From<usize> for FieldValue {
+    fn from(n: usize) -> Self {
+        FieldValue::Num(n as f64)
+    }
+}
+impl From<u32> for FieldValue {
+    fn from(n: u32) -> Self {
+        FieldValue::Num(n as f64)
+    }
+}
+impl From<i64> for FieldValue {
+    fn from(n: i64) -> Self {
+        FieldValue::Num(n as f64)
+    }
+}
+impl From<f64> for FieldValue {
+    fn from(n: f64) -> Self {
+        FieldValue::Num(n)
+    }
+}
+impl From<bool> for FieldValue {
+    fn from(b: bool) -> Self {
+        FieldValue::Bool(b)
+    }
+}
+
+impl FieldValue {
+    fn to_value(&self) -> Value {
+        match self {
+            FieldValue::Str(s) => Value::Str(s.clone()),
+            FieldValue::Num(n) => Value::Num(*n),
+            FieldValue::Bool(b) => Value::Bool(*b),
+        }
+    }
+
+    fn to_text(&self) -> String {
+        match self {
+            FieldValue::Str(s) if s.contains(' ') || s.is_empty() => format!("{s:?}"),
+            FieldValue::Str(s) => s.clone(),
+            FieldValue::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            FieldValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// Emit one structured log record (called through [`log!`], which
+/// performs the level check first). One line per record, written to
+/// stderr in a single `eprintln!` so concurrent threads never
+/// interleave mid-line.
+pub fn log_record(level: Level, target: &str, event: &str, fields: &[(&str, FieldValue)]) {
+    if LOG_JSON.load(Ordering::Relaxed) {
+        let mut pairs: Vec<(String, Value)> = vec![
+            ("ts_ns".into(), Value::Num(now_ns() as f64)),
+            ("level".into(), Value::Str(level.as_str().into())),
+            ("target".into(), Value::Str(target.into())),
+            ("event".into(), Value::Str(event.into())),
+        ];
+        for (k, v) in fields {
+            pairs.push((k.to_string(), v.to_value()));
+        }
+        eprintln!("{}", Value::Obj(pairs).to_string_compact());
+    } else {
+        let mut line = format!(
+            "[{}] {:<5} {target} {event}",
+            now_ns(),
+            level.as_str().to_ascii_uppercase()
+        );
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(&v.to_text());
+        }
+        eprintln!("{line}");
+    }
+}
+
+/// Structured logging: `log!(Info, "serve", "job_done", "job" => id,
+/// "request_id" => rid)`. The level test happens before any argument
+/// evaluation beyond the match, so disabled levels cost one atomic
+/// load.
+#[macro_export]
+macro_rules! trace_log {
+    ($lvl:ident, $target:expr, $event:expr $(, $k:literal => $v:expr)* $(,)?) => {{
+        if $crate::trace::level_enabled($crate::trace::Level::$lvl) {
+            $crate::trace::log_record(
+                $crate::trace::Level::$lvl,
+                $target,
+                $event,
+                &[ $( ($k, $crate::trace::FieldValue::from($v)) ),* ],
+            );
+        }
+    }};
+}
+
+pub use crate::trace_log as log;
+
+// -- span records ---------------------------------------------------------
+
+/// One finished span, as stored in a recorder's ring.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub id: u64,
+    /// 0 = a root span.
+    pub parent: u64,
+    pub name: String,
+    /// Epoch nanoseconds ([`now_ns`]).
+    pub start_ns: u64,
+    pub end_ns: u64,
+    /// Small process-local thread index (stable per thread).
+    pub tid: u64,
+    pub attrs: Vec<(String, String)>,
+}
+
+struct Ring {
+    records: Vec<SpanRecord>,
+    start: usize, // ring head when full
+    dropped: u64,
+}
+
+struct RecorderInner {
+    request_id: String,
+    capacity: usize,
+    next_id: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+/// The per-run span sink: a bounded ring of [`SpanRecord`]s keyed by
+/// one request id. Cloning shares the sink (the serve queue keeps one
+/// clone in the job record while the scheduler thread records into
+/// another).
+#[derive(Clone)]
+pub struct Recorder(Arc<RecorderInner>);
+
+/// Default ring capacity: enough for tens of thousands of chunk×phase
+/// spans before drop-oldest kicks in.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+impl Recorder {
+    /// A new recorder for one run, or `None` when tracing is disabled
+    /// process-wide — callers thread the `Option` through untouched.
+    pub fn new(request_id: &str) -> Option<Recorder> {
+        if !enabled() {
+            return None;
+        }
+        Some(Self::with_capacity(request_id, DEFAULT_CAPACITY))
+    }
+
+    pub fn with_capacity(request_id: &str, capacity: usize) -> Recorder {
+        Recorder(Arc::new(RecorderInner {
+            request_id: request_id.to_string(),
+            capacity: capacity.max(16),
+            next_id: AtomicU64::new(1),
+            ring: Mutex::new(Ring { records: Vec::new(), start: 0, dropped: 0 }),
+        }))
+    }
+
+    pub fn request_id(&self) -> &str {
+        &self.0.request_id
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.0.capacity
+    }
+
+    fn alloc_id(&self) -> u64 {
+        self.0.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn push_batch(&self, batch: &mut Vec<SpanRecord>) {
+        let mut ring = self.0.ring.lock().unwrap();
+        for rec in batch.drain(..) {
+            if ring.records.len() < self.0.capacity {
+                ring.records.push(rec);
+            } else {
+                let at = ring.start;
+                ring.records[at] = rec;
+                ring.start = (ring.start + 1) % self.0.capacity;
+                ring.dropped += 1;
+            }
+        }
+    }
+
+    /// Spans dropped because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.0.ring.lock().unwrap().dropped
+    }
+
+    /// Snapshot the finished spans, oldest first. Flushes the calling
+    /// thread's pending buffer first; spans finished on *other*
+    /// threads that have not flushed yet (fewer than one batch) may
+    /// lag until those threads end or flush.
+    pub fn records(&self) -> Vec<SpanRecord> {
+        flush_thread();
+        let ring = self.0.ring.lock().unwrap();
+        let mut out = Vec::with_capacity(ring.records.len());
+        out.extend_from_slice(&ring.records[ring.start..]);
+        out.extend_from_slice(&ring.records[..ring.start]);
+        out
+    }
+
+    /// Open a span with an explicit parent (0 = root). Prefer
+    /// [`Recorder::span`] / [`span_under`] which resolve the parent
+    /// for you.
+    pub fn span_with_parent(&self, name: &str, parent: u64) -> Span {
+        Span {
+            rec: self.clone(),
+            id: self.alloc_id(),
+            parent,
+            name: name.to_string(),
+            start_ns: now_ns(),
+            attrs: Vec::new(),
+        }
+        .made_current()
+    }
+
+    /// Open a span parented under the calling thread's current span
+    /// when that span belongs to this recorder (root otherwise).
+    pub fn span(&self, name: &str) -> Span {
+        let parent = current_for(self).unwrap_or(0);
+        self.span_with_parent(name, parent)
+    }
+
+    /// Export the ring as Chrome trace-event JSON (the
+    /// `chrome://tracing` / Perfetto format): one complete-`"X"` event
+    /// per span with μs timestamps, span/parent ids in `args`, plus a
+    /// process-name metadata event. `pid` distinguishes processes in a
+    /// merged distributed trace (the gateway is 1, workers 2…N).
+    pub fn to_chrome_trace(&self, pid: u64, process_name: &str) -> Value {
+        let events = chrome_events(&self.records(), pid, process_name);
+        Value::obj(vec![
+            ("traceEvents", Value::Arr(events)),
+            ("displayTimeUnit", Value::Str("ms".into())),
+            (
+                "otherData",
+                Value::obj(vec![
+                    ("request_id", Value::Str(self.request_id().into())),
+                    ("dropped_spans", Value::Num(self.dropped() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Lower span records to Chrome trace events (shared by the recorder
+/// export and the gateway's multi-process merge, which re-stamps ids
+/// before calling this).
+pub fn chrome_events(records: &[SpanRecord], pid: u64, process_name: &str) -> Vec<Value> {
+    let mut events = Vec::with_capacity(records.len() + 1);
+    events.push(Value::obj(vec![
+        ("ph", Value::Str("M".into())),
+        ("name", Value::Str("process_name".into())),
+        ("pid", Value::Num(pid as f64)),
+        ("tid", Value::Num(0.0)),
+        ("args", Value::obj(vec![("name", Value::Str(process_name.into()))])),
+    ]));
+    for r in records {
+        let mut args = vec![
+            ("span_id".to_string(), Value::Num(r.id as f64)),
+            ("parent_id".to_string(), Value::Num(r.parent as f64)),
+        ];
+        for (k, v) in &r.attrs {
+            args.push((k.clone(), Value::Str(v.clone())));
+        }
+        events.push(Value::obj(vec![
+            ("ph", Value::Str("X".into())),
+            ("name", Value::Str(r.name.clone())),
+            ("cat", Value::Str("bfast".into())),
+            ("ts", Value::Num(r.start_ns as f64 / 1000.0)),
+            ("dur", Value::Num(r.end_ns.saturating_sub(r.start_ns) as f64 / 1000.0)),
+            ("pid", Value::Num(pid as f64)),
+            ("tid", Value::Num(r.tid as f64)),
+            ("args", Value::Obj(args)),
+        ]));
+    }
+    events
+}
+
+// -- the RAII span guard --------------------------------------------------
+
+/// An open span: stamps its end time and records itself when dropped.
+/// While alive it is the calling thread's *current* span, so nested
+/// spans (and [`phase_scope`] calls from the engines) parent under it
+/// automatically. Keep the guard on the thread that opened it.
+pub struct Span {
+    rec: Recorder,
+    id: u64,
+    parent: u64,
+    name: String,
+    start_ns: u64,
+    attrs: Vec<(String, String)>,
+}
+
+impl Span {
+    fn made_current(self) -> Span {
+        CURRENT.with(|c| {
+            c.borrow_mut().push((Arc::downgrade(&self.rec.0), self.id));
+        });
+        self
+    }
+
+    /// Attach a key=value attribute (exported into the Chrome event's
+    /// `args`).
+    pub fn attr(&mut self, key: &str, value: impl ToString) {
+        self.attrs.push((key.to_string(), value.to_string()));
+    }
+
+    /// Builder form of [`Span::attr`].
+    pub fn with_attr(mut self, key: &str, value: impl ToString) -> Span {
+        self.attr(key, value);
+        self
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// A cloneable, `Send` reference for parenting spans opened on
+    /// other threads under this one.
+    pub fn handle(&self) -> SpanHandle {
+        SpanHandle { rec: self.rec.clone(), id: self.id }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        CURRENT.with(|c| {
+            let mut stack = c.borrow_mut();
+            if let Some(at) = stack.iter().rposition(|(_, id)| *id == self.id) {
+                stack.remove(at);
+            }
+        });
+        let record = SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            start_ns: self.start_ns,
+            end_ns: now_ns(),
+            tid: thread_index(),
+            attrs: std::mem::take(&mut self.attrs),
+        };
+        let root = self.parent == 0;
+        BATCH.with(|b| {
+            let mut batch = b.borrow_mut();
+            batch.push(&self.rec, record);
+            // flush eagerly when a root span closes: the run is over
+            // and the exporter reads the ring next
+            if root {
+                batch.flush();
+            }
+        });
+    }
+}
+
+/// A `Send + Clone` reference to an open (or finished) span, used to
+/// parent work that happens on other threads — e.g. the coordinator
+/// captures the run span's handle before `thread::scope` and opens
+/// chunk spans under it on the executor thread.
+#[derive(Clone)]
+pub struct SpanHandle {
+    rec: Recorder,
+    id: u64,
+}
+
+impl SpanHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
+    }
+
+    /// Open a child span under this handle on the calling thread.
+    pub fn child(&self, name: &str) -> Span {
+        self.rec.span_with_parent(name, self.id)
+    }
+}
+
+/// Open a span under an optional handle — the `Option`-threading form
+/// the coordinator uses (`None` = tracing off, no-op).
+pub fn span_under(parent: &Option<SpanHandle>, name: &str) -> Option<Span> {
+    parent.as_ref().map(|h| h.child(name))
+}
+
+// -- thread-local state ---------------------------------------------------
+
+const BATCH_FLUSH: usize = 64;
+
+/// Per-thread pending records for one recorder; switching recorders
+/// (or reaching [`BATCH_FLUSH`], or thread exit) drains into the ring.
+struct Batch {
+    rec: Option<Recorder>,
+    pending: Vec<SpanRecord>,
+}
+
+impl Batch {
+    fn push(&mut self, rec: &Recorder, record: SpanRecord) {
+        let same = self
+            .rec
+            .as_ref()
+            .is_some_and(|r| Arc::ptr_eq(&r.0, &rec.0));
+        if !same {
+            self.flush();
+            self.rec = Some(rec.clone());
+        }
+        self.pending.push(record);
+        if self.pending.len() >= BATCH_FLUSH {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        if let Some(rec) = &self.rec {
+            rec.push_batch(&mut self.pending);
+        } else {
+            self.pending.clear();
+        }
+    }
+}
+
+impl Drop for Batch {
+    fn drop(&mut self) {
+        self.flush(); // scoped executor threads drain on exit
+    }
+}
+
+thread_local! {
+    static BATCH: RefCell<Batch> = RefCell::new(Batch { rec: None, pending: Vec::new() });
+    /// Stack of (recorder, span id) — innermost current span last.
+    static CURRENT: RefCell<Vec<(Weak<RecorderInner>, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Drain the calling thread's pending span buffer into its ring.
+pub fn flush_thread() {
+    BATCH.with(|b| b.borrow_mut().flush());
+}
+
+/// Small stable per-thread index for trace `tid`s (thread 1, 2, …
+/// in first-span order within the process).
+fn thread_index() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// The calling thread's current span id when it belongs to `rec`.
+fn current_for(rec: &Recorder) -> Option<u64> {
+    CURRENT.with(|c| {
+        let stack = c.borrow();
+        let (weak, id) = stack.last()?;
+        let alive = weak.upgrade()?;
+        Arc::ptr_eq(&alive, &rec.0).then_some(*id)
+    })
+}
+
+/// A handle to the calling thread's current span, if any — capture
+/// before handing work to another thread.
+pub fn current_handle() -> Option<SpanHandle> {
+    if !enabled() {
+        return None;
+    }
+    CURRENT.with(|c| {
+        let stack = c.borrow();
+        let (weak, id) = stack.last()?;
+        let rec = weak.upgrade()?;
+        Some(SpanHandle { rec: Recorder(rec), id: *id })
+    })
+}
+
+/// Open a phase span under the calling thread's current span — the
+/// single hook [`crate::metrics::PhaseTimes::time`] routes every
+/// backend's phase timings through. No current span (bare engine
+/// runs, tracing off) → `None` at the cost of one atomic load and a
+/// TLS peek.
+pub fn phase_scope(name: &str) -> Option<Span> {
+    if !enabled() {
+        return None;
+    }
+    let handle = current_handle()?;
+    Some(handle.child(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_are_unique_hex() {
+        let a = new_request_id();
+        let b = new_request_id();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn span_tree_records_parenting() {
+        let rec = Recorder::with_capacity("req-1", 128);
+        {
+            let root = rec.span("run").with_attr("job", 7);
+            let root_id = root.id();
+            {
+                let chunk = rec.span("chunk");
+                assert_eq!(chunk.parent, root_id);
+                let phase = rec.span("phase");
+                assert_eq!(phase.parent, chunk.id());
+            }
+            // after inner guards drop, the root is current again
+            let sibling = rec.span("chunk2");
+            assert_eq!(sibling.parent, root_id);
+        }
+        let records = rec.records();
+        assert_eq!(records.len(), 4);
+        let root = records.iter().find(|r| r.name == "run").unwrap();
+        assert_eq!(root.parent, 0);
+        assert!(root.attrs.iter().any(|(k, v)| k == "job" && v == "7"));
+        for r in &records {
+            assert!(r.end_ns >= r.start_ns);
+        }
+        let chunk = records.iter().find(|r| r.name == "chunk").unwrap();
+        let phase = records.iter().find(|r| r.name == "phase").unwrap();
+        assert_eq!(chunk.parent, root.id);
+        assert_eq!(phase.parent, chunk.id);
+    }
+
+    #[test]
+    fn cross_thread_parenting_via_handle() {
+        let rec = Recorder::with_capacity("req-2", 128);
+        let root = rec.span("run");
+        let handle = root.handle();
+        std::thread::spawn(move || {
+            let _chunk = handle.child("chunk").with_attr("index", 0);
+            // phase_scope on the worker thread parents under the chunk
+            let phase = phase_scope("model");
+            assert!(phase.is_some());
+        })
+        .join()
+        .unwrap();
+        drop(root);
+        let records = rec.records();
+        let root = records.iter().find(|r| r.name == "run").unwrap();
+        let chunk = records.iter().find(|r| r.name == "chunk").unwrap();
+        let phase = records.iter().find(|r| r.name == "model").unwrap();
+        assert_eq!(chunk.parent, root.id);
+        assert_eq!(phase.parent, chunk.id);
+        assert_ne!(chunk.tid, root.tid);
+    }
+
+    #[test]
+    fn ring_drops_oldest_beyond_capacity() {
+        let rec = Recorder::with_capacity("req-3", 16);
+        for i in 0..40 {
+            let _s = rec.span(&format!("s{i}"));
+        }
+        let records = rec.records();
+        assert_eq!(records.len(), 16);
+        assert_eq!(rec.dropped(), 24);
+        // oldest dropped, newest kept, order preserved
+        assert_eq!(records.last().unwrap().name, "s39");
+        assert_eq!(records.first().unwrap().name, "s24");
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let rec = Recorder::with_capacity("req-4", 32);
+        {
+            let _root = rec.span("run");
+            let _child = rec.span("chunk");
+        }
+        let v = rec.to_chrome_trace(1, "serve 127.0.0.1:7878");
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3); // metadata + 2 spans
+        assert_eq!(events[0].get("ph").unwrap().as_str().unwrap(), "M");
+        let span = &events[1];
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(span.get("ts").unwrap().as_f64().unwrap() > 0.0);
+        assert!(span.get("args").unwrap().get("span_id").is_ok());
+        assert_eq!(
+            v.get("otherData").unwrap().get("request_id").unwrap().as_str().unwrap(),
+            "req-4"
+        );
+        // the export is valid JSON that re-parses
+        let text = v.to_string_compact();
+        assert!(crate::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn phase_scope_is_noop_without_a_current_span() {
+        assert!(phase_scope("model").is_none());
+    }
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert!(Level::parse("WARN").unwrap() == Level::Warn);
+        assert!(Level::parse("nope").is_err());
+        assert!(Level::Error < Level::Trace);
+    }
+}

@@ -1,0 +1,251 @@
+//! Prometheus exposition lint against a LIVE serve and gateway: every
+//! sample family is announced by `# HELP` + `# TYPE` before its first
+//! sample, no series is emitted twice, histogram buckets are
+//! cumulative (monotone, `+Inf` last, `_count` == the `+Inf` bucket),
+//! counters follow the `_total` naming convention, and the build-info
+//! gauge identifies the binary. A renamed or malformed family breaks
+//! dashboards silently — this test makes it break CI loudly instead.
+
+use bfast::api::{AnalysisRequest, ParamSpec, SceneSource};
+use bfast::gateway::{Gateway, GatewayConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::serve::http::roundtrip;
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+fn small_request() -> AnalysisRequest {
+    let params = BfastParams::new(48, 36, 12, 1, 12.0, 0.05).unwrap();
+    let stack = ArtificialDataset::new(params, 120, 11).generate().stack;
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    };
+    req
+}
+
+fn submit_and_wait(addr: &str) {
+    let req = small_request();
+    let (status, body) =
+        roundtrip(addr, "POST", "/v1/runs", "application/json", req.to_json_string().as_bytes())
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let id = json::parse(std::str::from_utf8(&body).unwrap().trim())
+        .unwrap()
+        .get("job")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, body) = roundtrip(addr, "GET", &format!("/v1/runs/{id}"), "", &[]).unwrap();
+        assert_eq!(status, 200);
+        let v = json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+        match v.get("status").unwrap().as_str().unwrap() {
+            "done" => return,
+            "failed" | "cancelled" => panic!("{}", v.to_string_compact()),
+            _ => {}
+        }
+        assert!(Instant::now() < deadline, "job never finished");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn scrape(addr: &str) -> String {
+    let (status, body) = roundtrip(addr, "GET", "/metrics", "", &[]).unwrap();
+    assert_eq!(status, 200);
+    String::from_utf8(body).unwrap()
+}
+
+/// Family name for a sample line: strip histogram sample suffixes when
+/// (and only when) the base family is declared as a histogram.
+fn family_of<'a>(name: &'a str, types: &HashMap<&'a str, &'a str>) -> &'a str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base) == Some(&"histogram") {
+                return base;
+            }
+        }
+    }
+    name
+}
+
+/// The lint proper — panics with the offending line on any violation.
+fn lint_exposition(text: &str, ctx: &str) {
+    let mut helps: HashSet<&str> = HashSet::new();
+    let mut types: HashMap<&str, &str> = HashMap::new();
+    // two passes: TYPE declarations first, so histogram sample names
+    // can be resolved to their family regardless of line order
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, ty) = (it.next().unwrap(), it.next().unwrap());
+            assert!(
+                !types.contains_key(name),
+                "{ctx}: duplicate # TYPE for {name}"
+            );
+            assert!(
+                matches!(ty, "counter" | "gauge" | "histogram"),
+                "{ctx}: unknown type {ty:?} for {name}"
+            );
+            if ty == "counter" {
+                assert!(
+                    name.ends_with("_total"),
+                    "{ctx}: counter {name} must end in _total"
+                );
+            }
+            types.insert(name, ty);
+        } else if let Some(rest) = line.strip_prefix("# HELP ") {
+            helps.insert(rest.split_whitespace().next().unwrap());
+        }
+    }
+
+    let mut seen_series: HashSet<&str> = HashSet::new();
+    // per-histogram bucket state: (last upper bound, last cumulative
+    // count, saw +Inf, +Inf count, _count value)
+    struct HistState {
+        last_le: f64,
+        last_n: f64,
+        inf: Option<f64>,
+        count: Option<f64>,
+    }
+    let mut hists: HashMap<&str, HistState> = HashMap::new();
+
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("{ctx}: malformed sample line {line:?}"));
+        let value: f64 = value.parse().unwrap_or_else(|_| {
+            panic!("{ctx}: non-numeric value in {line:?}");
+        });
+        assert!(
+            seen_series.insert(series),
+            "{ctx}: series {series} emitted twice"
+        );
+        let name = series.split(['{', ' ']).next().unwrap();
+        let family = family_of(name, &types);
+        assert!(
+            types.contains_key(family),
+            "{ctx}: sample {name} has no # TYPE {family}"
+        );
+        assert!(
+            helps.contains(family),
+            "{ctx}: sample {name} has no # HELP {family}"
+        );
+
+        if types.get(family) == Some(&"histogram") {
+            let st = hists.entry(family).or_insert(HistState {
+                last_le: f64::NEG_INFINITY,
+                last_n: 0.0,
+                inf: None,
+                count: None,
+            });
+            if name.ends_with("_bucket") {
+                let le = series
+                    .split("le=\"")
+                    .nth(1)
+                    .and_then(|s| s.split('"').next())
+                    .unwrap_or_else(|| panic!("{ctx}: bucket without le label: {line:?}"));
+                assert!(st.inf.is_none(), "{ctx}: {family} bucket after +Inf: {line:?}");
+                if le == "+Inf" {
+                    st.inf = Some(value);
+                } else {
+                    let le: f64 = le.parse().unwrap();
+                    assert!(le > st.last_le, "{ctx}: {family} bucket bounds not increasing");
+                    st.last_le = le;
+                }
+                assert!(
+                    value >= st.last_n,
+                    "{ctx}: {family} bucket counts not cumulative at le={le}"
+                );
+                st.last_n = value;
+            } else if name.ends_with("_count") {
+                st.count = Some(value);
+            }
+        }
+    }
+    for (family, st) in &hists {
+        let inf = st.inf.unwrap_or_else(|| panic!("{ctx}: {family} has no +Inf bucket"));
+        let count = st.count.unwrap_or_else(|| panic!("{ctx}: {family} has no _count"));
+        assert_eq!(inf, count, "{ctx}: {family} _count must equal the +Inf bucket");
+    }
+    assert!(!seen_series.is_empty(), "{ctx}: empty exposition");
+}
+
+fn check_build_info(text: &str, ctx: &str) {
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("bfast_build_info{"))
+        .unwrap_or_else(|| panic!("{ctx}: bfast_build_info sample missing"));
+    for label in ["version=\"", "git_rev=\"", "profile=\""] {
+        assert!(line.contains(label), "{ctx}: build info lacks {label}...: {line}");
+    }
+    assert!(line.ends_with(" 1"), "{ctx}: build info gauge must be 1: {line}");
+}
+
+#[test]
+fn serve_exposition_is_well_formed() {
+    let w = Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+        .unwrap();
+    let addr = w.addr().to_string();
+    // one completed run populates the queue-wait and run-latency
+    // histograms and the counter families
+    submit_and_wait(&addr);
+    let text = scrape(&addr);
+    lint_exposition(&text, "serve");
+    check_build_info(&text, "serve");
+    for family in ["bfast_queue_wait_seconds", "bfast_run_latency_seconds"] {
+        assert!(
+            text.contains(&format!("# TYPE {family} histogram")),
+            "serve: {family} histogram missing"
+        );
+        let count = text
+            .lines()
+            .find(|l| l.starts_with(&format!("{family}_count")))
+            .and_then(|l| l.rsplit_once(' '))
+            .and_then(|(_, v)| v.parse::<f64>().ok())
+            .unwrap();
+        assert!(count >= 1.0, "serve: {family} observed nothing");
+    }
+    w.stop().unwrap();
+}
+
+#[test]
+fn gateway_exposition_is_well_formed() {
+    let w = Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+        .unwrap();
+    let cfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![w.addr().to_string()],
+        poll: Duration::from_millis(5),
+        sweep: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    submit_and_wait(&gaddr);
+    let text = scrape(&gaddr);
+    lint_exposition(&text, "gateway");
+    check_build_info(&text, "gateway");
+    assert!(
+        text.contains("# TYPE bfast_gateway_run_latency_seconds histogram"),
+        "gateway: run latency histogram missing"
+    );
+    assert!(
+        text.contains("# TYPE bfast_gateway_rebalances_total counter"),
+        "gateway: rebalance counter missing"
+    );
+    gw.stop().unwrap();
+    w.stop().unwrap();
+}

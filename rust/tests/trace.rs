@@ -1,0 +1,355 @@
+//! Flight-recorder pins, over real sockets: request ids echo through
+//! every front door, the serve trace endpoint yields a valid Chrome
+//! trace for a finished run, and — the distributed acceptance case — a
+//! two-worker gateway run whose worker is murdered mid-run still
+//! produces ONE merged trace: gateway spans plus both workers' spans
+//! under a single request id, with the retry shard span parented under
+//! the original (failed) shard span.
+
+use bfast::api::{AnalysisRequest, ParamSpec, SceneSource};
+use bfast::gateway::chaos::{ChaosProxy, Mode};
+use bfast::gateway::{Gateway, GatewayConfig};
+use bfast::json::{self, Value};
+use bfast::params::BfastParams;
+use bfast::raster::TimeStack;
+use bfast::serve::http::{roundtrip, Client};
+use bfast::serve::{ServeConfig, Server};
+use bfast::synth::ArtificialDataset;
+use std::time::{Duration, Instant};
+
+fn params_new(n_total: usize) -> BfastParams {
+    BfastParams::new(n_total, 36, 12, 1, 12.0, 0.05).unwrap()
+}
+
+fn param_spec() -> ParamSpec {
+    ParamSpec {
+        n_total: Some(48),
+        n_hist: 36,
+        h: 12,
+        k: 1,
+        freq: 12.0,
+        alpha: 0.05,
+        lambda: None,
+    }
+}
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    ArtificialDataset::new(params_new(48), m, seed).generate().stack
+}
+
+fn start_worker() -> Server {
+    Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).unwrap()
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn parse_json(body: &[u8]) -> Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+fn wait_finished(addr: &str, id: u64, deadline: Duration) -> Value {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = get(addr, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        let s = v.get("status").unwrap().as_str().unwrap();
+        if s == "done" || s == "failed" || s == "cancelled" {
+            return v;
+        }
+        assert!(t0.elapsed() < deadline, "job {id} still {s} after {deadline:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn wait_alive(gw: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = get(gw, "/healthz");
+        assert_eq!(status, 200);
+        if parse_json(&body).get("workers_alive").unwrap().as_usize().unwrap() == want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never reached {want} live worker(s)");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn observe_mid_run(worker: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (status, body) = get(worker, "/v1/runs");
+        assert_eq!(status, 200);
+        let mid = parse_json(&body).get("jobs").unwrap().as_arr().unwrap().iter().any(|j| {
+            j.get("status").unwrap().as_str().unwrap() == "running"
+                && j.get("progress").unwrap().as_f64().unwrap() > 0.0
+        });
+        if mid {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{worker}: no shard reached mid-run");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Wait until every job the worker has ever accepted is terminal —
+/// after a rebalance the orphaned shard keeps running server-side, and
+/// its trace is only fully flushed once its run span drops.
+fn wait_all_terminal(worker: &str, deadline: Duration) {
+    let t0 = Instant::now();
+    loop {
+        let (status, body) = get(worker, "/v1/runs");
+        assert_eq!(status, 200);
+        let all = parse_json(&body).get("jobs").unwrap().as_arr().unwrap().iter().all(|j| {
+            matches!(
+                j.get("status").unwrap().as_str().unwrap(),
+                "done" | "failed" | "cancelled"
+            )
+        });
+        if all {
+            return;
+        }
+        assert!(t0.elapsed() < deadline, "{worker}: orphaned job never reached a terminal state");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Every trace event must carry the Chrome trace-event required keys;
+/// returns the events array for further inspection.
+fn check_chrome_shape(trace: &Value) -> Vec<Value> {
+    let events = trace.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "empty traceEvents");
+    for ev in events {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        ev.get("name").unwrap().as_str().unwrap();
+        ev.get("pid").unwrap().as_f64().unwrap();
+        ev.get("tid").unwrap().as_f64().unwrap();
+        if ph == "X" {
+            assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        } else {
+            assert_eq!(ph, "M", "unexpected phase {ph:?}");
+        }
+    }
+    events.to_vec()
+}
+
+/// Serve front door: an `X-Request-Id` header is adopted, echoed in
+/// the 202 body and the status JSON, and stamps the whole trace.
+#[test]
+fn serve_adopts_header_request_id_and_serves_a_chrome_trace() {
+    let w = start_worker();
+    let addr = w.addr().to_string();
+    let rid = "cafef00ddeadbeef";
+
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(120, 7)));
+    req.params = param_spec();
+    let mut c = Client::connect_timeout(&addr, Duration::from_secs(10)).unwrap();
+    let (status, _headers, body) = c
+        .request_with_headers(
+            "POST",
+            "/v1/runs",
+            "application/json",
+            &[("X-Request-Id", rid)],
+            req.to_json_string().as_bytes(),
+        )
+        .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let accepted = parse_json(&body);
+    assert_eq!(accepted.get("request_id").unwrap().as_str().unwrap(), rid);
+    let id = accepted.get("job").unwrap().as_usize().unwrap() as u64;
+
+    let done = wait_finished(&addr, id, Duration::from_secs(60));
+    assert_eq!(done.get("status").unwrap().as_str().unwrap(), "done");
+    assert_eq!(done.get("request_id").unwrap().as_str().unwrap(), rid);
+
+    let (status, body) = get(&addr, &format!("/v1/runs/{id}/trace"));
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let trace = parse_json(&body);
+    assert_eq!(
+        trace.get("otherData").unwrap().get("request_id").unwrap().as_str().unwrap(),
+        rid
+    );
+    let events = check_chrome_shape(&trace);
+
+    let run = events
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str().unwrap() == "run")
+        .expect("no run span in the serve trace");
+    assert_eq!(run.get("args").unwrap().get("request_id").unwrap().as_str().unwrap(), rid);
+    let chunks = events
+        .iter()
+        .filter(|e| e.get("name").unwrap().as_str().unwrap() == "chunk")
+        .count();
+    assert!(chunks > 0, "no chunk spans recorded");
+    // the engine phases nest under the chunks: more spans than just
+    // run + chunks means per-phase scopes made it into the ring
+    assert!(
+        events.len() > 1 + chunks,
+        "expected phase spans beyond run + {chunks} chunk(s), got {} events",
+        events.len()
+    );
+
+    w.stop().unwrap();
+}
+
+/// An unknown job is a 404, and a submit without any id gets one
+/// minted (16 hex chars) at the front door.
+#[test]
+fn trace_endpoint_404s_and_ids_are_minted_when_absent() {
+    let w = start_worker();
+    let addr = w.addr().to_string();
+    let (status, _) = get(&addr, "/v1/runs/9999/trace");
+    assert_eq!(status, 404);
+
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(64, 9)));
+    req.params = param_spec();
+    let (status, body) =
+        roundtrip(&addr, "POST", "/v1/runs", "application/json", req.to_json_string().as_bytes())
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let rid = parse_json(&body).get("request_id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(rid.len(), 16, "minted request id {rid:?} is not 16 hex chars");
+    assert!(rid.chars().all(|c| c.is_ascii_hexdigit()), "minted request id {rid:?} not hex");
+
+    w.stop().unwrap();
+}
+
+/// The acceptance pin: a 2-worker gateway run with one worker
+/// black-holed mid-run produces ONE merged Chrome trace — gateway
+/// spans (pid 1) plus both workers' spans (distinct pids) under the
+/// submitter's request id, and the replacement shard span is parented
+/// under the original failed shard span.
+#[test]
+fn killed_worker_run_yields_one_merged_trace_with_reparented_retry() {
+    let w1 = start_worker();
+    let w2 = start_worker();
+    let proxy = ChaosProxy::start(&w2.addr().to_string()).unwrap();
+    let proxy_addr = proxy.addr().to_string();
+    let w1_addr = w1.addr().to_string();
+
+    let cfg = GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![w1_addr.clone(), proxy_addr.clone()],
+        poll: Duration::from_millis(5),
+        sweep: Duration::from_millis(50),
+        io_timeout: Duration::from_millis(500),
+        heartbeat_timeout: Duration::from_secs(2),
+        ..Default::default()
+    };
+    let gw = Gateway::start(cfg).unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    let rid = "feedfacecafef00d";
+    let mut req = AnalysisRequest::new(SceneSource::Inline(scene(100_000, 3)));
+    req.params = param_spec();
+    req.request_id = Some(rid.to_string());
+    let (status, body) =
+        roundtrip(&gaddr, "POST", "/v1/runs", "application/json", req.to_json_string().as_bytes())
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let accepted = parse_json(&body);
+    assert_eq!(accepted.get("request_id").unwrap().as_str().unwrap(), rid);
+    let id = accepted.get("job").unwrap().as_usize().unwrap() as u64;
+
+    // the shard is provably executing on w2 before the link goes
+    // half-open — then murder it
+    observe_mid_run(&w2.addr().to_string());
+    proxy.set_mode(Mode::Blackhole);
+    proxy.kill_connections();
+
+    let done = wait_finished(&gaddr, id, Duration::from_secs(300));
+    assert_eq!(
+        done.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{}",
+        done.to_string_compact()
+    );
+    assert_eq!(done.get("request_id").unwrap().as_str().unwrap(), rid);
+
+    // revive the link so the merge can reach the orphaned worker, and
+    // wait for its shard to finish (its trace flushes on completion)
+    proxy.set_mode(Mode::Forward);
+    wait_all_terminal(&w2.addr().to_string(), Duration::from_secs(300));
+    wait_all_terminal(&w1_addr, Duration::from_secs(300));
+
+    let (status, body) = get(&gaddr, &format!("/v1/runs/{id}/trace"));
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let trace = parse_json(&body);
+    let other = trace.get("otherData").unwrap();
+    assert_eq!(other.get("request_id").unwrap().as_str().unwrap(), rid, "one request id");
+    assert_eq!(
+        other.get("workers_unreachable").unwrap().as_usize().unwrap(),
+        0,
+        "every placed shard's trace must be reachable after the revive"
+    );
+    assert!(other.get("workers_merged").unwrap().as_usize().unwrap() >= 3);
+    let events = check_chrome_shape(&trace);
+
+    // spans from the gateway AND both workers, in distinct process lanes
+    let mut pids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+        .map(|e| e.get("pid").unwrap().as_f64().unwrap() as u64)
+        .collect();
+    pids.sort_unstable();
+    pids.dedup();
+    assert!(pids.contains(&1), "no gateway spans (pid 1) in {pids:?}");
+    assert!(
+        pids.iter().filter(|&&p| p > 1).count() >= 2,
+        "expected spans from at least two worker lanes, got pids {pids:?}"
+    );
+    let lane_names: Vec<String> = events
+        .iter()
+        .filter(|e| e.get("ph").unwrap().as_str().unwrap() == "M")
+        .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert!(
+        lane_names.iter().any(|n| n.contains(&w1_addr)),
+        "no process lane for {w1_addr} in {lane_names:?}"
+    );
+    assert!(
+        lane_names.iter().any(|n| n.contains(&proxy_addr)),
+        "no process lane for the killed worker {proxy_addr} in {lane_names:?}"
+    );
+
+    // retry parenting: the attempt-2 shard span hangs off the failed
+    // attempt-1 shard span, so the rescue reads as a child in the UI
+    let shard_spans: Vec<&Value> = events
+        .iter()
+        .filter(|e| {
+            e.get("pid").unwrap().as_f64().unwrap() as u64 == 1
+                && e.get("name").unwrap().as_str().unwrap() == "shard"
+        })
+        .collect();
+    assert!(shard_spans.len() >= 3, "expected >=3 shard spans, got {}", shard_spans.len());
+    let span_field = |e: &Value, key: &str| -> u64 {
+        e.get("args").unwrap().get(key).unwrap().as_f64().unwrap() as u64
+    };
+    let attempt = |e: &Value| -> String {
+        e.get("args").unwrap().get("attempt").unwrap().as_str().unwrap().to_string()
+    };
+    let retry = shard_spans
+        .iter()
+        .find(|e| attempt(e) == "2")
+        .expect("no attempt-2 (retry) shard span in the gateway trace");
+    let parent = span_field(retry, "parent_id");
+    let original = shard_spans
+        .iter()
+        .find(|e| span_field(e, "span_id") == parent)
+        .unwrap_or_else(|| panic!("retry parent {parent} is not a shard span"));
+    assert_eq!(attempt(original), "1", "retry must parent under the original placement");
+    assert_eq!(
+        original.get("args").unwrap().get("worker").unwrap().as_str().unwrap(),
+        proxy_addr,
+        "the retry's parent must be the shard placed on the killed worker"
+    );
+
+    gw.stop().unwrap();
+    proxy.stop();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}
