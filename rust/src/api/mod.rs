@@ -84,6 +84,7 @@ use crate::params::BfastParams;
 use crate::pixel::{DirectBfast, NaiveBfast};
 use crate::raster::{io as rio, TimeStack};
 use crate::runtime::ExecutorBackend;
+use crate::store::hash::{HashingReader, Sha256};
 use crate::b64::{base64_decode, base64_encode};
 use std::borrow::Cow;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -769,6 +770,96 @@ impl AnalysisRequest {
     pub fn from_json_str(text: &str) -> Result<Self> {
         Self::from_json(&crate::json::parse(text)?)
     }
+
+    /// The scene's content digest: SHA-256 hex of its canonical `.bsq`
+    /// byte stream. Inline scenes stream through
+    /// [`rio::stack_digest_hex`] (no byte copy); `Path` sources stream
+    /// the file through a [`HashingReader`]. Files written by this
+    /// repo's own writer hash identically to their inline form.
+    pub fn scene_digest(&self) -> Result<String> {
+        match &self.source {
+            SceneSource::Inline(s) => Ok(rio::stack_digest_hex(s)),
+            SceneSource::Path(p) => {
+                let file =
+                    std::fs::File::open(p).with_context(|| format!("opening {p}"))?;
+                let mut r = HashingReader::new(std::io::BufReader::new(file));
+                std::io::copy(&mut r, &mut std::io::sink())
+                    .with_context(|| format!("reading {p}"))?;
+                Ok(r.digest_hex())
+            }
+        }
+    }
+
+    /// The request's cache key: SHA-256 hex over the scene digest plus
+    /// the **result-relevant** fields — the params section and
+    /// `pixel_range`. Engine choice, the chunking performance knobs,
+    /// outputs and `request_id` are deliberately excluded: break maps
+    /// are backend-invariant by construction (and the executing host
+    /// owns the streaming knobs anyway), so requests differing only
+    /// there are the same computation and must share a cache entry.
+    pub fn request_digest(&self) -> Result<String> {
+        let mut h = Sha256::new();
+        h.update(b"bfast-request-v1\n");
+        h.update(self.scene_digest()?.as_bytes());
+        h.update(b"\n");
+        h.update(self.params.to_json().to_string_compact().as_bytes());
+        h.update(b"\n");
+        match self.chunking.pixel_range {
+            Some((a, b)) => h.update(format!("pixels:{a}:{b}").as_bytes()),
+            None => h.update(b"pixels:all"),
+        }
+        Ok(h.finalize_hex())
+    }
+}
+
+/// Serialise the wire body of a pixel-range sub-request over `stack` —
+/// the shard/gateway fan-out path. Byte-identical to building an
+/// [`AnalysisRequest`] with
+/// `SceneSource::Inline(stack.slice_pixels(range.0, range.1))` (and
+/// `chunking.pixel_range` cleared — the slice already applied it) and
+/// calling [`AnalysisRequest::to_json_string`], but streams the sliced
+/// `.bsq` payload straight into the body: no intermediate sliced
+/// [`TimeStack`], no `Value` tree holding the base64, and no escaping
+/// scan over it (base64 never needs JSON escaping). An N-worker
+/// fan-out therefore holds one encoded body per shard instead of ~4
+/// transient copies of each slice.
+pub fn slice_request_body(
+    stack: &TimeStack,
+    range: (usize, usize),
+    params: &ParamSpec,
+    engine: &EngineSpec,
+    chunking: &ChunkSpec,
+    request_id: Option<&str>,
+) -> String {
+    let bsq = rio::slice_to_bytes(stack, range.0, range.1);
+    let b64 = base64_encode(&bsq);
+    drop(bsq);
+    let mut sub_chunking = chunking.clone();
+    sub_chunking.pixel_range = None;
+    let params_js = params.to_json().to_string_compact();
+    let engine_js = engine.to_json().to_string_compact();
+    let chunking_js = sub_chunking.to_json().to_string_compact();
+    let outputs_js = OutputSpec::default().to_json().to_string_compact();
+    let mut body = String::with_capacity(
+        b64.len() + params_js.len() + engine_js.len() + chunking_js.len() + outputs_js.len() + 128,
+    );
+    body.push_str("{\"v\":1");
+    if let Some(rid) = request_id {
+        body.push_str(",\"request_id\":");
+        body.push_str(&Value::Str(rid.to_string()).to_string_compact());
+    }
+    body.push_str(",\"source\":{\"kind\":\"inline\",\"bsq_b64\":\"");
+    body.push_str(&b64);
+    body.push_str("\"},\"params\":");
+    body.push_str(&params_js);
+    body.push_str(",\"engine\":");
+    body.push_str(&engine_js);
+    body.push_str(",\"chunking\":");
+    body.push_str(&chunking_js);
+    body.push_str(",\"outputs\":");
+    body.push_str(&outputs_js);
+    body.push('}');
+    body
 }
 
 // -- session requests ----------------------------------------------------
@@ -1155,6 +1246,65 @@ mod tests {
         assert!(req.resolve().is_err());
         req.chunking.pixel_range = Some((4, 4));
         assert!(req.resolve().is_err());
+    }
+
+    #[test]
+    fn slice_request_body_matches_the_typed_serialisation() {
+        let stack = small_stack(9, 5);
+        let params = ParamSpec { n_hist: 24, h: 8, k: 1, freq: 12.0, ..Default::default() };
+        let engine = EngineSpec::Emulated;
+        let chunking = ChunkSpec {
+            queue_depth: 3,
+            // an inherited range must be cleared — the slice applies it
+            pixel_range: Some((0, 4)),
+            ..Default::default()
+        };
+        for rid in [None, Some("req-\"quoted\"-1")] {
+            let body = slice_request_body(&stack, (2, 7), &params, &engine, &chunking, rid);
+            let mut sub_chunking = chunking.clone();
+            sub_chunking.pixel_range = None;
+            let sub = AnalysisRequest {
+                source: SceneSource::Inline(stack.slice_pixels(2, 7)),
+                params: params.clone(),
+                engine: engine.clone(),
+                chunking: sub_chunking,
+                outputs: OutputSpec::default(),
+                request_id: rid.map(str::to_string),
+            };
+            assert_eq!(body, sub.to_json_string(), "request_id = {rid:?}");
+        }
+    }
+
+    #[test]
+    fn digests_key_on_scene_and_result_relevant_fields() {
+        let stack = small_stack(6, 7);
+        let mut req = AnalysisRequest::new(SceneSource::Inline(stack.clone()));
+        req.params = ParamSpec { n_hist: 24, h: 8, k: 1, freq: 12.0, ..Default::default() };
+        let scene = req.scene_digest().unwrap();
+        assert_eq!(scene, crate::store::hash::sha256_hex(&rio::stack_to_bytes(&stack)));
+        let d0 = req.request_digest().unwrap();
+        assert_eq!(d0.len(), 64);
+        // engine, chunking perf knobs, outputs, request_id: excluded
+        let mut same = req.clone();
+        same.engine = EngineSpec::Cpu;
+        same.chunking.queue_depth = 7;
+        same.outputs.timings = true;
+        same.request_id = Some("rid".into());
+        assert_eq!(same.request_digest().unwrap(), d0);
+        // params and pixel_range: included
+        let mut other = req.clone();
+        other.params.h = 9;
+        assert_ne!(other.request_digest().unwrap(), d0);
+        let mut ranged = req.clone();
+        ranged.chunking.pixel_range = Some((0, 3));
+        assert_ne!(ranged.request_digest().unwrap(), d0);
+        // a path source hashes the file bytes — same digest as inline
+        let path = std::env::temp_dir()
+            .join(format!("bfast_api_digest_{}.bsq", std::process::id()));
+        rio::write_stack(&path, &stack).unwrap();
+        let preq = AnalysisRequest::new(SceneSource::Path(path.display().to_string()));
+        assert_eq!(preq.scene_digest().unwrap(), scene);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

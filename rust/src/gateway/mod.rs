@@ -35,6 +35,13 @@
 //!   sockets — including deterministic worker murder via
 //!   [`chaos::ChaosProxy`] — by `tests/gateway.rs` and
 //!   `tests/chaos.rs`.
+//! * **Content-addressed result cache** — `POST /v1/runs` hashes the
+//!   request ([`AnalysisRequest::request_digest`]) and answers an
+//!   identical resubmission from the cache with **zero worker
+//!   traffic**: the job record is born `Done` (marked `cached`) and
+//!   `/result` serves the byte-identical envelope, `ETag`'d by the
+//!   digest. `--cache-cap-mb 0` disables it; `DELETE /v1/cache`
+//!   invalidates at runtime.
 //!
 //! Monitor sessions don't partition by pixel (their state lives where
 //! the history was fitted), so `/v1/sessions` routes are proxied: the
@@ -44,8 +51,8 @@
 pub mod chaos;
 
 use crate::api::{
-    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, OutputSpec,
-    ParamSpec, PartialResult, SceneSource,
+    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, ParamSpec,
+    PartialResult,
 };
 use crate::cli::{Command, Matches};
 use crate::error::{ensure, err, Context, Result};
@@ -56,6 +63,7 @@ use crate::report;
 use crate::serve::http::{self, Client, Request, Response};
 use crate::serve::queue::JobState;
 use crate::shard::{self, PlaceError, PlaceOptions, ShardReport};
+use crate::store::ResultCache;
 use crate::threadpool::{self, WorkerPool};
 use crate::trace::{self, Recorder, SpanHandle};
 use std::collections::BTreeMap;
@@ -103,6 +111,10 @@ pub struct GatewayConfig {
     pub max_inflight: usize,
     /// Finished run records retained for status/map queries.
     pub finished_cap: usize,
+    /// Content-addressed result cache capacity in bytes (0 disables):
+    /// an identical resubmission is answered gateway-side with **zero
+    /// worker traffic**.
+    pub cache_cap: usize,
 }
 
 impl Default for GatewayConfig {
@@ -120,6 +132,7 @@ impl Default for GatewayConfig {
             max_resplits: 4,
             max_inflight: 8,
             finished_cap: 256,
+            cache_cap: 64 << 20,
         }
     }
 }
@@ -351,6 +364,11 @@ struct GwJob {
     handle: JobHandle,
     /// Request id minted (or propagated) at `POST /v1/runs`.
     request_id: String,
+    /// Content digest of the request (cache key + result `ETag`).
+    digest: Option<String>,
+    /// Answered from the result cache: born `Done`, zero worker
+    /// traffic.
+    cached: bool,
     /// Gateway-side flight recorder (`None` = tracing disabled).
     recorder: Option<Recorder>,
     /// Every worker placement this run made, in submit order (shared
@@ -390,6 +408,7 @@ struct GatewayState {
     addr: SocketAddr,
     cfg: GatewayConfig,
     fleet: Fleet,
+    cache: Arc<ResultCache>,
     jobs: Mutex<Jobs>,
     /// Session name → owning worker address.
     sessions: Mutex<BTreeMap<String, String>>,
@@ -609,21 +628,13 @@ fn drive_sub(
     span: Option<trace::Span>,
 ) -> Result<()> {
     // ship only this range's pixel strip (see run_one_shard in
-    // crate::shard for why slicing here is bit-equivalent)
-    let mut chunking = ctx.chunking.clone();
-    chunking.pixel_range = None;
-    let sub = AnalysisRequest {
-        source: SceneSource::Inline(ctx.stack.slice_pixels(range.0, range.1)),
-        params: ctx.params.clone(),
-        engine: ctx.engine.clone(),
-        chunking,
-        outputs: OutputSpec::default(),
-        // travels as X-Request-Id instead (PlaceOptions), keeping the
-        // shipped body canonical
-        request_id: None,
-    };
-    let body = sub.to_json_string();
-    drop(sub);
+    // crate::shard for why slicing here is bit-equivalent), encoded
+    // straight from the scene buffer — no intermediate sliced stack,
+    // so an N-way fan-out holds one body per shard, not a stack copy
+    // plus a body each. The request id travels as X-Request-Id
+    // (PlaceOptions), keeping the shipped body canonical.
+    let body =
+        api::slice_request_body(ctx.stack, range, &ctx.params, ctx.engine, ctx.chunking, None);
     let progress = |done: usize, total: usize| {
         ctx.progress.set(range, done, total);
         ctx.progress.publish(ctx.handle);
@@ -714,6 +725,19 @@ fn run_job(state: &Arc<GatewayState>, id: u64, req: AnalysisRequest, handle: Job
         });
         drive_run(state, &req, &handle, &request_id, &placements)
     }));
+    // cache fill: serialise outside the jobs lock (envelopes are
+    // scene-sized); the digest is immutable after submission
+    let cache_fill = match &outcome {
+        Ok(Ok((result, _))) if state.cache.enabled() => state
+            .jobs
+            .lock()
+            .unwrap()
+            .map
+            .get(&id)
+            .and_then(|j| j.digest.clone())
+            .map(|d| (d, Arc::<str>::from(result.to_json_string()))),
+        _ => None,
+    };
     let mut jobs = state.jobs.lock().unwrap();
     let Some(job) = jobs.map.get_mut(&id) else { return };
     job.finished_at = Some(Instant::now());
@@ -784,6 +808,10 @@ fn run_job(state: &Arc<GatewayState>, id: u64, req: AnalysisRequest, handle: Job
         for i in &finished[..finished.len() - state.cfg.finished_cap.max(1)] {
             jobs.map.remove(i);
         }
+    }
+    drop(jobs);
+    if let Some((digest, body)) = cache_fill {
+        state.cache.put(&digest, body);
     }
 }
 
@@ -857,10 +885,12 @@ impl Gateway {
         for w in &cfg.workers {
             fleet.seed(w);
         }
+        let cache = Arc::new(ResultCache::new(cfg.cache_cap));
         let state = Arc::new(GatewayState {
             addr,
             cfg,
             fleet,
+            cache,
             jobs: Mutex::new(Jobs { next: 1, map: BTreeMap::new() }),
             sessions: Mutex::new(BTreeMap::new()),
             run_threads: Mutex::new(Vec::new()),
@@ -1001,8 +1031,10 @@ fn route(req: &Request, state: &Arc<GatewayState>) -> Response {
         ("GET", ["v1", "runs", id]) => run_status(id, state),
         ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
-        ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
+        ("GET", ["v1", "runs", id, "result"]) => run_result(req, id, state),
         ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
+        ("GET", ["v1", "cache"]) => cache_stats(state),
+        ("DELETE", ["v1", "cache"]) => cache_clear(state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
         ("GET", ["v1", "sessions", name])
@@ -1131,6 +1163,35 @@ fn metrics_page(state: &GatewayState) -> Response {
         "monitor sessions routed through this gateway",
         state.sessions.lock().unwrap().len() as f64,
     );
+    let cache = state.cache.stats();
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_hits_total",
+        "submissions answered from the result cache",
+        cache.hits as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_misses_total",
+        "cache lookups that fell through to a fleet run",
+        cache.misses as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_evictions_total",
+        "cached results evicted to stay under capacity",
+        cache.evictions as f64,
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_cache_bytes",
+        "bytes of serialised results held by the cache",
+        cache.bytes as f64,
+    );
     state.run_latency.render(
         &mut out,
         "bfast_gateway_run_latency_seconds",
@@ -1257,7 +1318,7 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
     if state.shutdown.load(Ordering::SeqCst) {
         return Response::json_error(503, "gateway is shutting down");
     }
-    let mut analysis = match crate::serve::analysis_request_from(req) {
+    let mut analysis = match crate::serve::analysis_request_from(req, state.cfg.max_body) {
         Ok(a) => a,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
@@ -1270,6 +1331,18 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
         .request_id
         .clone()
         .unwrap_or_else(trace::new_request_id);
+    // content-addressed front door, consulted before placement *and*
+    // before admission control: a hit is answered entirely
+    // gateway-side — no run thread, no worker traffic, no inflight
+    // slot — with a record born Done
+    let digest = analysis.request_digest().ok();
+    if let Some(d) = digest.as_deref() {
+        if let Some(body) = state.cache.get(d) {
+            if let Ok(res) = AnalysisResult::from_json_str(&body) {
+                return insert_cached_job(state, &request_id, d, res);
+            }
+        }
+    }
     // admission control: a run fans out across the whole fleet, so the
     // inflight cap plays the role the worker queue capacity plays on a
     // single serve (same 429 + Retry-After contract)
@@ -1300,6 +1373,8 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
                 state: JobState::Queued,
                 handle: handle.clone(),
                 request_id: request_id.clone(),
+                digest,
+                cached: false,
                 recorder: Recorder::new(&request_id),
                 placements: Arc::new(Mutex::new(Vec::new())),
                 submitted_at: Instant::now(),
@@ -1332,6 +1407,75 @@ fn submit_run(req: &Request, state: &Arc<GatewayState>) -> Response {
     )
 }
 
+/// Record and answer a result-cache hit: a `GwJob` born `Done` with
+/// the cached result attached. Nothing fans out — the fleet never
+/// hears about this run.
+fn insert_cached_job(
+    state: &GatewayState,
+    request_id: &str,
+    digest: &str,
+    result: AnalysisResult,
+) -> Response {
+    let handle = JobHandle::new();
+    handle.set_progress(result.chunks, result.chunks);
+    let now = Instant::now();
+    let id = {
+        let mut jobs = state.jobs.lock().unwrap();
+        let id = jobs.next;
+        jobs.next += 1;
+        let pixels = Some(result.map.len());
+        jobs.map.insert(
+            id,
+            GwJob {
+                id,
+                state: JobState::Done,
+                handle,
+                request_id: request_id.to_string(),
+                digest: Some(digest.to_string()),
+                cached: true,
+                recorder: Recorder::new(request_id),
+                placements: Arc::new(Mutex::new(Vec::new())),
+                submitted_at: now,
+                pixels,
+                result: Some(result),
+                shards: Vec::new(),
+                finished_at: Some(now),
+            },
+        );
+        // same count-capped retention run_job applies after a compute
+        let finished: Vec<u64> = jobs
+            .map
+            .iter()
+            .filter(|(_, j)| j.state.is_finished())
+            .map(|(&i, _)| i)
+            .collect();
+        if finished.len() > state.cfg.finished_cap.max(1) {
+            for i in &finished[..finished.len() - state.cfg.finished_cap.max(1)] {
+                jobs.map.remove(i);
+            }
+        }
+        id
+    };
+    state.submitted.fetch_add(1, Ordering::Relaxed);
+    trace::log!(
+        Info,
+        "gateway",
+        "run_cache_hit",
+        "job" => id,
+        "request_id" => request_id,
+        "digest" => digest,
+    );
+    Response::json(
+        202,
+        &Value::obj(vec![
+            ("job", Value::Num(id as f64)),
+            ("status", Value::Str("done".into())),
+            ("cached", Value::Bool(true)),
+            ("request_id", Value::Str(request_id.to_string())),
+        ]),
+    )
+}
+
 fn job_json(job: &GwJob) -> Value {
     let mut fields = vec![
         ("job", Value::Num(job.id as f64)),
@@ -1341,6 +1485,9 @@ fn job_json(job: &GwJob) -> Value {
     ];
     if let Some(px) = job.pixels {
         fields.push(("pixels", Value::Num(px as f64)));
+    }
+    if job.cached {
+        fields.push(("cached", Value::Bool(true)));
     }
     let (chunks_done, chunks_total) = job.handle.progress();
     match &job.state {
@@ -1460,16 +1607,32 @@ fn run_map(req: &Request, id_seg: &str, state: &GatewayState) -> Response {
     }
 }
 
-fn run_result(id_seg: &str, state: &GatewayState) -> Response {
+/// Same conditional-GET contract as the worker's result endpoint: the
+/// request digest is the strong `ETag`, `If-None-Match` re-fetches
+/// answer `304`, and gzip is applied when the caller accepts it.
+fn run_result(req: &Request, id_seg: &str, state: &GatewayState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     let jobs = state.jobs.lock().unwrap();
-    match jobs.map.get(&id) {
+    let resp = match jobs.map.get(&id) {
         None => Response::json_error(404, &format!("no job {id}")),
         Some(job) => match (&job.state, &job.result) {
-            (JobState::Done, Some(res)) => Response::json(200, &res.to_json()),
+            (JobState::Done, Some(res)) => {
+                let etag = job.digest.as_ref().map(|d| format!("\"{d}\""));
+                let matched = etag.as_ref().is_some_and(|etag| {
+                    req.header("if-none-match")
+                        .is_some_and(|v| crate::serve::etag_matches(v, etag))
+                });
+                match (matched, etag) {
+                    (true, Some(etag)) => Response::text(304, "").with_header("ETag", &etag),
+                    (_, Some(etag)) => {
+                        Response::json(200, &res.to_json()).with_header("ETag", &etag)
+                    }
+                    _ => Response::json(200, &res.to_json()),
+                }
+            }
             (JobState::Failed { error }, _) => {
                 Response::json_error(409, &format!("job {id} failed: {error}"))
             }
@@ -1478,7 +1641,32 @@ fn run_result(id_seg: &str, state: &GatewayState) -> Response {
             }
             _ => Response::json_error(409, &format!("job {id} is not finished")),
         },
-    }
+    };
+    drop(jobs);
+    resp.gzip_if_accepted(req)
+}
+
+/// `GET /v1/cache` — gateway result-cache counters and occupancy.
+fn cache_stats(state: &GatewayState) -> Response {
+    let s = state.cache.stats();
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("enabled", Value::Bool(state.cache.enabled())),
+            ("capacity", Value::Num(s.capacity as f64)),
+            ("entries", Value::Num(s.entries as f64)),
+            ("bytes", Value::Num(s.bytes as f64)),
+            ("hits", Value::Num(s.hits as f64)),
+            ("misses", Value::Num(s.misses as f64)),
+            ("evictions", Value::Num(s.evictions as f64)),
+        ]),
+    )
+}
+
+/// `DELETE /v1/cache` — drop every cached result (counters survive).
+fn cache_clear(state: &GatewayState) -> Response {
+    let cleared = state.cache.clear();
+    Response::json(200, &Value::obj(vec![("cleared", Value::Num(cleared as f64))]))
 }
 
 // -- the distributed trace endpoint --------------------------------------
@@ -1757,6 +1945,7 @@ pub fn gateway_command() -> Command {
         .opt("max-resplits", "4", "re-split budget per pixel range on worker death")
         .opt("max-inflight", "8", "concurrent runs admitted before 429")
         .opt("finished-cap", "256", "finished run records retained")
+        .opt("cache-cap-mb", "64", "result cache capacity (MiB; 0 disables caching)")
         .opt("log-level", "info", "log verbosity: error|warn|info|debug|trace")
         .opt("log-format", "json", "log line format: json|text")
         .opt("trace", "on", "flight recorder (span capture): on|off")
@@ -1783,6 +1972,7 @@ pub fn gateway_config_from_matches(m: &Matches) -> Result<GatewayConfig> {
         max_resplits: m.usize("max-resplits")?,
         max_inflight: m.usize("max-inflight")?,
         finished_cap: m.usize("finished-cap")?,
+        cache_cap: m.usize("cache-cap-mb")? << 20,
     })
 }
 
@@ -1870,5 +2060,14 @@ mod tests {
         assert_eq!(cfg.max_resplits, 2);
         assert_eq!(cfg.max_inflight, 3);
         assert_eq!(cfg.max_body, 256 << 20);
+        assert_eq!(cfg.cache_cap, 64 << 20);
+    }
+
+    #[test]
+    fn cache_cap_flag_scales_and_disables() {
+        let args: Vec<String> =
+            ["--cache-cap-mb", "0"].iter().map(|s| s.to_string()).collect();
+        let m = gateway_command().parse(&args).unwrap();
+        assert_eq!(gateway_config_from_matches(&m).unwrap().cache_cap, 0);
     }
 }

@@ -31,6 +31,17 @@
 //!   mid-run is re-split across the survivors — still bit-identical
 //!   to a single-process run (`tests/gateway.rs`, `tests/chaos.rs`,
 //!   with deterministic fault injection via [`gateway::chaos`]).
+//! * **Store ([`store`])** — the content-addressed layer under the
+//!   serving stack: an in-tree SHA-256 ([`store::hash`], with a
+//!   streaming [`store::HashingReader`]) gives every scene a canonical
+//!   `scene_digest` and every request a derived `request_digest`
+//!   (engine-irrelevant fields excluded); [`store::ResultCache`]
+//!   (LRU by bytes) answers repeated requests at the front door of
+//!   both serve and gateway with the bit-identical cached envelope —
+//!   gateway hits place zero worker traffic; and [`store::compress`]
+//!   is the zero-dep DEFLATE/gzip/zlib wire ([`store::AnyDecoder`]
+//!   sniffs scene uploads, `Content-Encoding: gzip` request bodies
+//!   decode centrally, results compress on `Accept-Encoding: gzip`).
 //! * **L5 ([`shard`])** — the fleet layer: `bfast shard` splits one
 //!   request by pixel range, fans the slices out across N serve
 //!   workers over keep-alive sockets, streams per-shard progress
@@ -195,6 +206,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod shard;
+pub mod store;
 pub mod synth;
 pub mod threadpool;
 pub mod trace;

@@ -14,6 +14,7 @@ use bfast::params::BfastParams;
 use bfast::raster::{io as rio, pgm};
 use bfast::runtime::bten::{bten_to_bytes, Tensor};
 use bfast::serve::{http as shttp, ServeConfig, Server};
+use bfast::store;
 use bfast::synth::{ArtificialDataset, ChileScene};
 use std::time::{Duration, Instant};
 
@@ -43,6 +44,7 @@ COMMANDS:
   gateway       resident fleet coordinator: health-checked workers,
                 throughput-weighted placement, mid-run rebalancing
   client        talk to a running server (health | submit | cancel | ingest | ...)
+  cache         inspect or clear a server's result cache (stats | clear)
   inspect       per-pixel MOSUM/fit details for one pixel
   lambda-table  print simulated critical values λ(α, h/n)
   bench         perf trajectory: run the pinned fig2/fig3 scenarios,
@@ -64,6 +66,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "shard" => cmd_shard(rest),
         "gateway" => cmd_gateway(rest),
         "client" => cmd_client(rest),
+        "cache" => cmd_cache(rest),
         "inspect" => cmd_inspect(rest),
         "lambda-table" => cmd_lambda(rest),
         "bench" => cmd_bench(rest),
@@ -484,6 +487,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("queue", "32", "job queue capacity (further submissions get 429)")
     .opt("max-body-mb", "256", "largest accepted request body (MiB)")
     .opt("finished-cap", "256", "finished job records kept for status/map queries")
+    .opt("cache-cap-mb", "64", "result cache capacity (MiB; 0 disables caching)")
     .opt("finished-max-age-s", "3600", "seconds a finished job record is retained (0 = no age limit)")
     .opt("gateway", "", "gateway address to register with and heartbeat (host:port)")
     .opt("advertise", "", "address advertised to the gateway (default: the bound address)")
@@ -505,6 +509,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_body: m.usize("max-body-mb")? << 20,
         finished_cap: m.usize("finished-cap")?,
         finished_max_age: Duration::from_secs(m.u64("finished-max-age-s")?),
+        cache_cap: m.usize("cache-cap-mb")? << 20,
         runner: RunnerConfig::default(),
         gateway: match m.str("gateway")? {
             "" => None,
@@ -612,6 +617,10 @@ fn client_wait_for_job(addr: &str, job: usize) -> Result<()> {
     }
 }
 
+/// Largest compressed result envelope `client result` will inflate
+/// (same role as the server's `--max-body-mb` bound, client-side).
+const RESULT_DECODE_CAP: usize = 1 << 30;
+
 fn cmd_client(args: &[String]) -> Result<()> {
     let cmd = Command::new(
         "client",
@@ -631,6 +640,8 @@ fn cmd_client(args: &[String]) -> Result<()> {
     .opt("freq", "23", "observations per period f (submit / session-init)")
     .opt("alpha", "0.05", "significance level (submit / session-init)")
     .opt("init-layers", "0", "prime on only the first K layers (session-init)")
+    .opt("etag", "", "previously-seen ETag; sent as If-None-Match (result)")
+    .switch("compress", "gzip the request body over the wire (submit)")
     .switch("wait", "poll until the submitted job finishes (submit)")
     .switch("pgm", "fetch the break map as a PGM heatmap (map / session-map)");
     let m = cmd.parse(args)?;
@@ -705,17 +716,25 @@ fn cmd_client(args: &[String]) -> Result<()> {
             let stack = rio::stack_from_bytes(&bytes, m.str("input")?)?;
             let mut analysis = api::AnalysisRequest::new(api::SceneSource::Inline(stack));
             analysis.params = client_param_spec(&m)?;
-            let body = expect_ok(shttp::roundtrip_retry(
+            let payload = analysis.to_json_string().into_bytes();
+            let (wire, extra): (Vec<u8>, &[(&str, &str)]) = if m.flag("compress") {
+                (store::gzip_compress(&payload), &[("Content-Encoding", "gzip")])
+            } else {
+                (payload, &[])
+            };
+            let body = expect_ok(shttp::roundtrip_retry_with(
                 addr,
                 "POST",
                 "/v1/runs",
                 "application/json",
-                analysis.to_json_string().as_bytes(),
+                extra,
+                &wire,
                 8,
             )?)?;
             let v = json::parse(std::str::from_utf8(&body)?.trim())?;
             let job = v.get("job")?.as_usize()?;
-            println!("submitted job {job}");
+            let cached = v.get("cached").and_then(|c| c.as_bool()).unwrap_or(false);
+            println!("submitted job {job}{}", if cached { " (cache hit)" } else { "" });
             if m.flag("wait") {
                 client_wait_for_job(addr, job)?;
             }
@@ -745,10 +764,32 @@ fn cmd_client(args: &[String]) -> Result<()> {
         }
         "result" => {
             // the canonical v1 AnalysisResult envelope — lossless,
-            // replayable, and what the shard coordinator merges
+            // replayable, and what the shard coordinator merges. The
+            // envelope's ETag is echoed on stderr; pass it back via
+            // --etag to turn an unchanged re-fetch into a bodyless 304.
             let job = m.usize("job")?;
             let path = format!("/v1/runs/{job}/result");
-            let body = expect_ok(shttp::roundtrip(addr, "GET", &path, "", &[])?)?;
+            let etag = m.str("etag")?;
+            let mut extra: Vec<(&str, &str)> = vec![("Accept-Encoding", "gzip")];
+            if !etag.is_empty() {
+                extra.push(("If-None-Match", etag));
+            }
+            let mut client = shttp::Client::connect(addr)?;
+            let (status, headers, body) =
+                client.request_with_headers("GET", &path, "", &extra, &[])?;
+            if status == 304 {
+                println!("job {job} result unchanged (matches {etag})");
+                return Ok(());
+            }
+            let body = expect_ok((status, body))?;
+            let gzipped = headers
+                .iter()
+                .any(|(k, v)| k == "content-encoding" && v.eq_ignore_ascii_case("gzip"));
+            let body =
+                if gzipped { store::gzip_decompress(&body, RESULT_DECODE_CAP)? } else { body };
+            if let Some((_, tag)) = headers.iter().find(|(k, _)| k == "etag") {
+                eprintln!("etag: {tag}");
+            }
             client_print_or_write(&body, m.str("out")?)?;
         }
         "trace" => {
@@ -827,6 +868,32 @@ fn cmd_client(args: &[String]) -> Result<()> {
             print!("{}", String::from_utf8_lossy(&body));
         }
         other => bail!("unknown client action {other:?}\n\n{}", cmd.usage()),
+    }
+    Ok(())
+}
+
+fn cmd_cache(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "cache",
+        "inspect or clear the result cache of a running serve/gateway.\n\nACTIONS:\n  \
+         stats   show hit/miss/eviction counters and held bytes (default action)\n  \
+         clear   drop every cached result",
+    )
+    .opt("addr", "127.0.0.1:7878", "server address (host:port)");
+    let m = cmd.parse(args)?;
+    let addr = m.str("addr")?;
+    let action = m.positional.first().map(|s| s.as_str()).unwrap_or("stats");
+    match action {
+        "stats" => {
+            let body = expect_ok(shttp::roundtrip(addr, "GET", "/v1/cache", "", &[])?)?;
+            print!("{}", String::from_utf8_lossy(&body));
+        }
+        "clear" => {
+            let body = expect_ok(shttp::roundtrip(addr, "DELETE", "/v1/cache", "", &[])?)?;
+            let v = json::parse(std::str::from_utf8(&body)?.trim())?;
+            println!("cleared {} cached result(s)", v.get("cleared")?.as_usize()?);
+        }
+        other => bail!("unknown cache action {other:?}\n\n{}", cmd.usage()),
     }
     Ok(())
 }

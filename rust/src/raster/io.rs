@@ -12,6 +12,7 @@
 use super::TimeStack;
 use crate::json::{self, Value};
 use crate::error::{ensure, Context, Result};
+use crate::store::hash::Sha256;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"BSQ1";
@@ -40,6 +41,57 @@ pub fn stack_to_bytes(stack: &TimeStack) -> Vec<u8> {
     out.extend_from_slice(htext.as_bytes());
     for v in data {
         out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// SHA-256 (lowercase hex) of the canonical `.bsq` byte stream of
+/// `stack` — identical to hashing [`stack_to_bytes`], but streamed in
+/// bounded chunks so no full byte copy of the scene is materialised.
+/// This is the scene's content digest (`scene_digest`): the same hex
+/// whether the scene arrived as a file, raw octets, or inline JSON.
+pub fn stack_digest_hex(stack: &TimeStack) -> String {
+    let mut h = Sha256::new();
+    let htext = header_text(stack);
+    h.update(MAGIC);
+    h.update(&(htext.len() as u32).to_le_bytes());
+    h.update(htext.as_bytes());
+    let mut buf = Vec::with_capacity(4 << 16);
+    for chunk in stack.data().chunks(1 << 16) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        h.update(&buf);
+    }
+    h.finalize_hex()
+}
+
+/// The `.bsq` bytes of the pixel slice `[start, end)` of `stack` —
+/// byte-identical to `stack_to_bytes(&stack.slice_pixels(start, end))`
+/// without materialising the intermediate sliced stack. The sharded
+/// fan-out encodes one of these per worker, so skipping the copy
+/// matters at scene scale.
+pub fn slice_to_bytes(stack: &TimeStack, start: usize, end: usize) -> Vec<u8> {
+    assert!(start <= end && end <= stack.n_pixels());
+    let w = end - start;
+    // slice_pixels drops geometry, so the slice header carries none
+    let header = Value::obj(vec![
+        ("n_times", Value::Num(stack.n_times() as f64)),
+        ("n_pixels", Value::Num(w as f64)),
+        ("time_axis", Value::arr_num(&stack.time_axis)),
+    ])
+    .to_string_compact();
+    let data = stack.data();
+    let n_pixels = stack.n_pixels();
+    let mut out = Vec::with_capacity(8 + header.len() + stack.n_times() * w * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    for t in 0..stack.n_times() {
+        for v in &data[t * n_pixels + start..t * n_pixels + end] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
     out
 }
@@ -167,6 +219,24 @@ mod tests {
         }
         assert!(stack_from_bytes(&bytes[..bytes.len() - 1], "test").is_err());
         assert!(stack_from_bytes(b"BS", "test").is_err());
+    }
+
+    #[test]
+    fn digest_and_slice_bytes_match_the_materialised_forms() {
+        let mut s = TimeStack::zeros(4, 6).with_geometry(6, 1).unwrap();
+        for (i, v) in s.data_mut().iter_mut().enumerate() {
+            *v = i as f32 * 0.25;
+        }
+        s.data_mut()[5] = f32::NAN;
+        assert_eq!(
+            stack_digest_hex(&s),
+            crate::store::hash::sha256_hex(&stack_to_bytes(&s)),
+            "streamed digest must equal hashing the materialised bytes"
+        );
+        let direct = stack_to_bytes(&s.slice_pixels(1, 4));
+        assert_eq!(slice_to_bytes(&s, 1, 4), direct);
+        // full-width slice still drops geometry, like slice_pixels
+        assert_eq!(slice_to_bytes(&s, 0, 6), stack_to_bytes(&s.slice_pixels(0, 6)));
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! `keep-alive`), which is all the break-detection API requires while
 //! keeping the parser easy to audit.
 
-use crate::error::{ensure, err, Context, Result};
+use crate::error::{bail, ensure, err, Context, Result};
 use crate::json::Value;
 use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
@@ -123,6 +123,33 @@ impl Response {
     pub fn json_error(status: u16, message: &str) -> Response {
         Response::json(status, &error_envelope(status, message, &[]))
     }
+
+    /// Gzip the body (marking it with `Content-Encoding: gzip`) when
+    /// the request's `Accept-Encoding` allows it and compression
+    /// actually pays: opt-in per call site, only on 200s, never on
+    /// bodies too small to matter, and dropped when the deflated form
+    /// is no smaller. Callers that never send `Accept-Encoding` are
+    /// untouched.
+    pub fn gzip_if_accepted(mut self, req: &Request) -> Response {
+        if self.status == 200 && accepts_gzip(req) && self.body.len() >= 512 {
+            let packed = crate::store::compress::gzip_compress(&self.body);
+            if packed.len() < self.body.len() {
+                self.body = packed;
+                self.headers.push(("Content-Encoding".into(), "gzip".into()));
+            }
+        }
+        self
+    }
+}
+
+/// Does the request's `Accept-Encoding` admit a gzip response body?
+pub fn accepts_gzip(req: &Request) -> bool {
+    req.header("accept-encoding").is_some_and(|v| {
+        v.split(',').any(|t| {
+            let t = t.trim();
+            t == "gzip" || t.starts_with("gzip;")
+        })
+    })
 }
 
 /// Extract the human-readable message from an error-envelope body;
@@ -162,6 +189,7 @@ pub fn status_text(status: u16) -> &'static str {
         200 => "OK",
         201 => "Created",
         202 => "Accepted",
+        304 => "Not Modified",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
@@ -230,6 +258,19 @@ pub fn read_request(stream: &mut impl Read, max_body: usize) -> Result<Option<Re
     stream
         .read_exact(&mut body)
         .context("connection closed mid-body")?;
+    // Content-Encoding: gzip request bodies decode centrally here, so
+    // every handler sees plain bytes; the decoded size is bounded by
+    // the same max_body the raw form honours (zip-bomb guard).
+    if let Some((_, enc)) = headers.iter().find(|(k, _)| k == "content-encoding") {
+        match enc.to_ascii_lowercase().as_str() {
+            "gzip" | "x-gzip" => {
+                body = crate::store::compress::gzip_decompress(&body, max_body)
+                    .context("decoding gzip request body")?;
+            }
+            "identity" | "" => {}
+            other => bail!("unsupported Content-Encoding {other:?} (gzip|identity)"),
+        }
+    }
 
     let (path, query) = parse_target(target)?;
     Ok(Some(Request { method, path, query, headers, body, http11 }))
@@ -370,7 +411,7 @@ pub fn roundtrip(
     content_type: &str,
     body: &[u8],
 ) -> Result<(u16, Vec<u8>)> {
-    parse_response(&roundtrip_raw(addr, method, path, content_type, body)?)
+    parse_response(&roundtrip_raw(addr, method, path, content_type, &[], body)?)
 }
 
 /// The raw bytes of a one-shot `Connection: close` exchange.
@@ -379,15 +420,20 @@ fn roundtrip_raw(
     method: &str,
     path: &str,
     content_type: &str,
+    extra_headers: &[(&str, &str)],
     body: &[u8],
 ) -> Result<Vec<u8>> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    let head = format!(
+    let mut head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("Connection: close\r\n\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
@@ -511,10 +557,24 @@ pub fn roundtrip_retry(
     body: &[u8],
     attempts: usize,
 ) -> Result<(u16, Vec<u8>)> {
+    roundtrip_retry_with(addr, method, path, content_type, &[], body, attempts)
+}
+
+/// [`roundtrip_retry`] with extra request headers — e.g.
+/// `Content-Encoding: gzip` on a compressed `client submit`.
+pub fn roundtrip_retry_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    attempts: usize,
+) -> Result<(u16, Vec<u8>)> {
     let attempts = attempts.max(1);
     let mut attempt = 0;
     loop {
-        let raw = roundtrip_raw(addr, method, path, content_type, body)?;
+        let raw = roundtrip_raw(addr, method, path, content_type, extra_headers, body)?;
         let (status, headers, resp_body) = parse_response_parts(&raw)?;
         if status != 429 || attempt + 1 >= attempts {
             return Ok((status, resp_body));
@@ -744,4 +804,52 @@ mod tests {
         assert!(percent_decode("bad%zz").is_err());
     }
 
+    #[test]
+    fn gzip_request_bodies_decode_centrally() {
+        use crate::store::compress::gzip_compress;
+        let payload = b"{\"scene\": \"compressed on the wire\"}".repeat(20);
+        let packed = gzip_compress(&payload);
+        let mut raw = format!(
+            "POST /v1/runs HTTP/1.1\r\nContent-Type: application/json\r\n\
+             Content-Encoding: gzip\r\nContent-Length: {}\r\n\r\n",
+            packed.len()
+        )
+        .into_bytes();
+        raw.extend_from_slice(&packed);
+        let req = read_request(&mut Cursor::new(&raw[..]), 1 << 20).unwrap().unwrap();
+        assert_eq!(req.body, payload, "handlers must see the plain bytes");
+        // the decoded size is bounded by max_body, not the wire size
+        let mut small = Cursor::new(&raw[..]);
+        assert!(read_request(&mut small, 64).is_err(), "zip-bomb guard");
+        // unknown encodings are refused outright
+        let raw = b"POST /x HTTP/1.1\r\nContent-Encoding: br\r\nContent-Length: 1\r\n\r\nx";
+        assert!(read_request(&mut Cursor::new(&raw[..]), 1 << 10).is_err());
+    }
+
+    #[test]
+    fn responses_compress_only_when_accepted_and_worthwhile() {
+        use crate::store::compress::gzip_decompress;
+        let parse = |head: &str| {
+            read_request(&mut Cursor::new(head.as_bytes()), 1 << 10)
+                .unwrap()
+                .unwrap()
+        };
+        let plain = parse("GET /x HTTP/1.1\r\n\r\n");
+        let gz = parse("GET /x HTTP/1.1\r\nAccept-Encoding: gzip, deflate\r\n\r\n");
+        let gzq = parse("GET /x HTTP/1.1\r\nAccept-Encoding: gzip;q=0.8\r\n\r\n");
+        let other = parse("GET /x HTTP/1.1\r\nAccept-Encoding: br\r\n\r\n");
+        assert!(!accepts_gzip(&plain));
+        assert!(accepts_gzip(&gz) && accepts_gzip(&gzq));
+        assert!(!accepts_gzip(&other));
+
+        let big = "x".repeat(4096);
+        let resp = Response::text(200, &big).gzip_if_accepted(&gz);
+        assert!(resp.headers.iter().any(|(k, v)| k == "Content-Encoding" && v == "gzip"));
+        assert!(resp.body.len() < big.len());
+        assert_eq!(gzip_decompress(&resp.body, 1 << 20).unwrap(), big.as_bytes());
+        // no opt-in → no compression; tiny bodies stay plain either way
+        assert!(Response::text(200, &big).gzip_if_accepted(&plain).headers.is_empty());
+        assert!(Response::text(200, "tiny").gzip_if_accepted(&gz).headers.is_empty());
+        assert!(Response::text(404, &big).gzip_if_accepted(&gz).headers.is_empty());
+    }
 }

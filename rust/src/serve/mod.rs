@@ -24,6 +24,8 @@
 //! | `GET  /v1/runs/{id}/result`        | —               | canonical v1 [`crate::api::AnalysisResult`] JSON |
 //! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM (sugar) |
 //! | `GET  /v1/runs/{id}/trace`         | —               | Chrome trace-event JSON (flight recorder) |
+//! | `GET  /v1/cache`                   | —               | result-cache stats JSON |
+//! | `DELETE /v1/cache`                 | —               | drop cached results |
 //! | `POST /v1/sessions/{name}`         | [`SessionInit`] JSON, or `.bsq` bytes + `?n-hist=..` | 201 summary |
 //! | `GET  /v1/sessions[/{name}]`       | —               | list / summary |
 //! | `POST /v1/sessions/{name}/ingest?t=..` | `.bten` f32 layer or [`SessionIngest`] JSON | ingest delta |
@@ -60,6 +62,7 @@ use crate::metrics;
 use crate::monitor::MonitorSession;
 use crate::raster::{io as rio, pgm, BreakMap};
 use crate::runtime::bten::{bten_from_bytes, Tensor};
+use crate::store::{AnyDecoder, ResultCache};
 use crate::threadpool::{self, WorkerPool};
 use crate::trace;
 use http::{Request, Response};
@@ -99,6 +102,10 @@ pub struct ServeConfig {
     /// Longest a finished job record is retained (age cap of the
     /// eviction policy; zero = no age limit, count cap only).
     pub finished_max_age: Duration,
+    /// Content-addressed result cache capacity in bytes (0 disables
+    /// caching): an identical resubmission is answered from the cache
+    /// without queueing.
+    pub cache_cap: usize,
     /// Coordinator configuration for the shared runner.
     pub runner: RunnerConfig,
     /// Gateway address to register with and heartbeat
@@ -123,6 +130,7 @@ impl Default for ServeConfig {
             max_body: 256 << 20,
             finished_cap: policy.max_finished,
             finished_max_age: policy.max_age,
+            cache_cap: 64 << 20,
             runner: RunnerConfig::default(),
             gateway: None,
             advertise: None,
@@ -135,6 +143,7 @@ struct ServerState {
     addr: SocketAddr,
     runner: Arc<SharedBfastRunner>,
     queue: Arc<JobQueue>,
+    cache: Arc<ResultCache>,
     registry: SessionRegistry,
     started: Instant,
     max_body: usize,
@@ -168,10 +177,14 @@ impl Server {
             cfg.http_threads
         };
         let runner = Arc::new(SharedBfastRunner::emulated_shared(cfg.runner.clone())?);
-        let queue = Arc::new(JobQueue::with_policy(
-            cfg.queue_capacity,
-            EvictionPolicy { max_finished: cfg.finished_cap, max_age: cfg.finished_max_age },
-        ));
+        let cache = Arc::new(ResultCache::new(cfg.cache_cap));
+        let queue = Arc::new(
+            JobQueue::with_policy(
+                cfg.queue_capacity,
+                EvictionPolicy { max_finished: cfg.finished_cap, max_age: cfg.finished_max_age },
+            )
+            .with_cache(Arc::clone(&cache)),
+        );
         let registry =
             SessionRegistry::open(cfg.state_dir.clone(), threadpool::default_threads())?;
         let scheduler =
@@ -180,6 +193,7 @@ impl Server {
             addr,
             runner,
             queue,
+            cache,
             registry,
             started: Instant::now(),
             max_body: cfg.max_body,
@@ -338,8 +352,10 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("GET", ["v1", "runs", id]) => run_status(id, state),
         ("DELETE", ["v1", "runs", id]) => cancel_run(id, state),
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
-        ("GET", ["v1", "runs", id, "result"]) => run_result(id, state),
+        ("GET", ["v1", "runs", id, "result"]) => run_result(req, id, state),
         ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
+        ("GET", ["v1", "cache"]) => cache_stats(state),
+        ("DELETE", ["v1", "cache"]) => cache_clear(state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
         ("POST", ["v1", "sessions", name]) => create_session(req, name, state),
         ("GET", ["v1", "sessions", name]) => session_status(name, state),
@@ -444,6 +460,35 @@ fn metrics(state: &ServerState) -> Response {
         "bounded job-queue capacity",
         state.queue.capacity() as f64,
     );
+    let cache = state.cache.stats();
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_hits_total",
+        "submissions answered from the result cache",
+        cache.hits as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_misses_total",
+        "cache lookups that fell through to a compute",
+        cache.misses as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_cache_evictions_total",
+        "cached results evicted to stay under capacity",
+        cache.evictions as f64,
+    );
+    prom_metric(
+        &mut out,
+        "gauge",
+        "bfast_cache_bytes",
+        "bytes of serialised results held by the cache",
+        cache.bytes as f64,
+    );
     let policy = state.queue.policy();
     prom_metric(
         &mut out,
@@ -544,15 +589,18 @@ pub(crate) fn reject_path_source(source: &SceneSource) -> Result<()> {
 
 /// Lower either submit body form into the one request type: a JSON
 /// body *is* an [`AnalysisRequest`]; raw `.bsq` bytes + query params
-/// are sugar for an inline request.
-pub(crate) fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
+/// are sugar for an inline request. Octet-stream bodies are sniffed
+/// ([`AnyDecoder`]): gzip/zlib-wrapped `.bsq` uploads decode here
+/// (bounded by `max_body`) so a `.bsq.gz` file posts as-is.
+pub(crate) fn analysis_request_from(req: &Request, max_body: usize) -> Result<AnalysisRequest> {
     let analysis = if req.is_json() {
         let text = std::str::from_utf8(&req.body).context("non-UTF-8 JSON body")?;
         let ar = AnalysisRequest::from_json_str(text)?;
         reject_path_source(&ar.source)?;
         ar
     } else {
-        let stack = rio::stack_from_bytes(&req.body, "request body")?;
+        let bytes = AnyDecoder::decode(&req.body, max_body)?;
+        let stack = rio::stack_from_bytes(&bytes, "request body")?;
         let mut ar = AnalysisRequest::new(SceneSource::Inline(stack));
         ar.params = params_from_query(req)?;
         ar
@@ -564,7 +612,7 @@ pub(crate) fn analysis_request_from(req: &Request) -> Result<AnalysisRequest> {
 }
 
 fn submit_run(req: &Request, state: &ServerState) -> Response {
-    let mut analysis = match analysis_request_from(req) {
+    let mut analysis = match analysis_request_from(req, state.max_body) {
         Ok(a) => a,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
@@ -574,7 +622,48 @@ fn submit_run(req: &Request, state: &ServerState) -> Response {
     if analysis.request_id.is_none() {
         analysis.request_id = req.header("x-request-id").map(str::to_string);
     }
-    match state.queue.submit(analysis) {
+    // content-addressed front door: hash the request once, and answer
+    // an identical resubmission from the result cache — the record is
+    // born Done and no scheduler worker ever sees it
+    let digest = analysis.request_digest().ok();
+    if let Some(d) = digest.as_deref() {
+        if let Some(body) = state.cache.get(d) {
+            // a cache entry that no longer parses falls through to a
+            // recompute (put() will overwrite it) instead of erroring
+            if let Ok(res) = crate::api::AnalysisResult::from_json_str(&body) {
+                match state.queue.insert_cached(analysis.request_id.clone(), d, res) {
+                    Ok(id) => {
+                        let request_id = state
+                            .queue
+                            .with_record(id, |rec| rec.request_id.clone())
+                            .unwrap_or_default();
+                        trace::log!(
+                            Info,
+                            "serve",
+                            "job_cache_hit",
+                            "job" => id,
+                            "request_id" => &request_id,
+                            "digest" => d,
+                        );
+                        return Response::json(
+                            202,
+                            &Value::obj(vec![
+                                ("job", Value::Num(id as f64)),
+                                ("status", Value::Str("done".into())),
+                                ("cached", Value::Bool(true)),
+                                ("request_id", Value::Str(request_id)),
+                            ]),
+                        );
+                    }
+                    Err(SubmitError::ShuttingDown) => {
+                        return Response::json_error(503, "server is shutting down")
+                    }
+                    Err(SubmitError::Full { .. }) => {} // unreachable: hits skip the FIFO
+                }
+            }
+        }
+    }
+    match state.queue.submit_with_digest(analysis, digest) {
         Ok(id) => {
             let request_id = state
                 .queue
@@ -627,6 +716,9 @@ fn job_json(rec: &JobRecord) -> Value {
     ];
     if let Some(px) = rec.pixels {
         fields.push(("pixels", Value::Num(px as f64)));
+    }
+    if rec.cached {
+        fields.push(("cached", Value::Bool(true)));
     }
     let (chunks_done, chunks_total) = rec.handle.progress();
     match &rec.state {
@@ -723,13 +815,32 @@ fn run_map(req: &Request, id_seg: &str, state: &ServerState) -> Response {
 /// This is the back door's typed counterpart of `POST /v1/runs` (and
 /// what the shard coordinator fetches per worker); the `/map` routes
 /// stay as float-array / PGM sugar over the same record.
-fn run_result(id_seg: &str, state: &ServerState) -> Response {
+///
+/// The request digest doubles as a strong `ETag`: a re-fetch with
+/// `If-None-Match` answers `304` with no body, and `Accept-Encoding:
+/// gzip` callers get the envelope compressed when that actually helps.
+fn run_result(req: &Request, id_seg: &str, state: &ServerState) -> Response {
     let id = match parse_id(id_seg) {
         Ok(id) => id,
         Err(e) => return Response::json_error(400, &format!("{e:#}")),
     };
     let resp = state.queue.with_record(id, |rec| match (&rec.state, &rec.result) {
-        (JobState::Done, Some(res)) => Response::json(200, &res.to_json()),
+        (JobState::Done, Some(res)) => {
+            let etag = rec.digest.as_ref().map(|d| format!("\"{d}\""));
+            if let Some(etag) = &etag {
+                let matched = req
+                    .header("if-none-match")
+                    .is_some_and(|v| etag_matches(v, etag));
+                if matched {
+                    return Response::text(304, "").with_header("ETag", etag);
+                }
+            }
+            let resp = Response::json(200, &res.to_json());
+            match etag {
+                Some(etag) => resp.with_header("ETag", &etag),
+                None => resp,
+            }
+        }
         (JobState::Failed { error }, _) => {
             Response::json_error(409, &format!("job {id} failed: {error}"))
         }
@@ -739,6 +850,36 @@ fn run_result(id_seg: &str, state: &ServerState) -> Response {
         _ => Response::json_error(409, &format!("job {id} is not finished")),
     });
     resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
+        .gzip_if_accepted(req)
+}
+
+/// `If-None-Match` comparison: a comma-separated list of entity tags
+/// (or `*`), matched byte-for-byte — our tags are strong.
+pub(crate) fn etag_matches(header: &str, etag: &str) -> bool {
+    header.split(',').map(str::trim).any(|t| t == "*" || t == etag)
+}
+
+/// `GET /v1/cache` — result-cache counters and occupancy.
+fn cache_stats(state: &ServerState) -> Response {
+    let s = state.cache.stats();
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("enabled", Value::Bool(state.cache.enabled())),
+            ("capacity", Value::Num(s.capacity as f64)),
+            ("entries", Value::Num(s.entries as f64)),
+            ("bytes", Value::Num(s.bytes as f64)),
+            ("hits", Value::Num(s.hits as f64)),
+            ("misses", Value::Num(s.misses as f64)),
+            ("evictions", Value::Num(s.evictions as f64)),
+        ]),
+    )
+}
+
+/// `DELETE /v1/cache` — drop every cached result (counters survive).
+fn cache_clear(state: &ServerState) -> Response {
+    let cleared = state.cache.clear();
+    Response::json(200, &Value::obj(vec![("cleared", Value::Num(cleared as f64))]))
 }
 
 /// `GET /v1/runs/{id}/trace` — the job's flight-recorder span tree as

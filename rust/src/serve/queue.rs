@@ -27,6 +27,7 @@
 use crate::api::{self, AnalysisRequest, AnalysisResult, JobHandle};
 use crate::coordinator::SharedBfastRunner;
 use crate::metrics::{Histogram, PhaseTimes};
+use crate::store::ResultCache;
 use crate::trace::{self, Recorder};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -79,6 +80,13 @@ pub struct JobRecord {
     pub width: Option<usize>,
     pub height: Option<usize>,
     pub pixels: Option<usize>,
+    /// Content digest of the request (scene bytes + result-relevant
+    /// fields), when the front door computed one. Keys the result
+    /// cache and doubles as the result endpoint's `ETag`.
+    pub digest: Option<String>,
+    /// The record was born finished from a cache hit: no queue wait,
+    /// no scheduler worker, result attached at submission.
+    pub cached: bool,
     pub result: Option<AnalysisResult>,
     /// When the job reached a terminal state (age-based eviction).
     pub finished_at: Option<Instant>,
@@ -223,6 +231,9 @@ pub struct JobQueue {
     policy: EvictionPolicy,
     inner: Mutex<QueueInner>,
     ready: Condvar,
+    /// Result cache filled when jobs with a digest complete (`None`
+    /// when the server runs uncached).
+    cache: Option<Arc<ResultCache>>,
     /// Seconds jobs spent queued before a worker picked them up.
     queue_wait: Histogram,
     /// Seconds from submission to a terminal state.
@@ -250,9 +261,17 @@ impl JobQueue {
                 phases: PhaseTimes::new(),
             }),
             ready: Condvar::new(),
+            cache: None,
             queue_wait: Histogram::queue_wait(),
             run_latency: Histogram::run_latency(),
         }
+    }
+
+    /// Attach a result cache: completed jobs carrying a digest publish
+    /// their serialised envelope into it.
+    pub fn with_cache(mut self, cache: Arc<ResultCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn capacity(&self) -> usize {
@@ -276,7 +295,19 @@ impl JobQueue {
     /// Enqueue a request; `Err(Full)` is the 429 backpressure signal.
     /// The job's request id is taken from the request (minted here
     /// when absent) and a flight recorder is opened for its span tree.
-    pub fn submit(&self, mut req: AnalysisRequest) -> std::result::Result<u64, SubmitError> {
+    pub fn submit(&self, req: AnalysisRequest) -> std::result::Result<u64, SubmitError> {
+        self.submit_with_digest(req, None)
+    }
+
+    /// [`submit`](Self::submit) with the request's content digest
+    /// attached (the front door computes it once for the cache lookup;
+    /// carrying it here lets completion fill the cache and the result
+    /// endpoint emit it as an `ETag`).
+    pub fn submit_with_digest(
+        &self,
+        mut req: AnalysisRequest,
+        digest: Option<String>,
+    ) -> std::result::Result<u64, SubmitError> {
         let request_id =
             req.request_id.clone().unwrap_or_else(trace::new_request_id);
         req.request_id = Some(request_id.clone());
@@ -307,6 +338,8 @@ impl JobQueue {
                 width,
                 height,
                 pixels,
+                digest,
+                cached: false,
                 result: None,
                 finished_at: None,
             },
@@ -315,6 +348,50 @@ impl JobQueue {
         inner.evict_finished(&self.policy); // lazy age sweep
         drop(inner);
         self.ready.notify_one();
+        Ok(id)
+    }
+
+    /// Insert a record born `Done` from a result-cache hit: the
+    /// finished result is attached at submission, the FIFO and the
+    /// scheduler workers are never involved, and the record is marked
+    /// `cached` so the status API can say so. Counts as a submission
+    /// (and still refuses during shutdown, like [`submit`](Self::submit)).
+    pub fn insert_cached(
+        &self,
+        request_id: Option<String>,
+        digest: &str,
+        result: AnalysisResult,
+    ) -> std::result::Result<u64, SubmitError> {
+        let request_id = request_id.unwrap_or_else(trace::new_request_id);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.submitted += 1;
+        let handle = JobHandle::new();
+        handle.set_progress(result.chunks, result.chunks);
+        let now = Instant::now();
+        inner.records.insert(
+            id,
+            JobRecord {
+                id,
+                state: JobState::Done,
+                handle,
+                request_id: request_id.clone(),
+                recorder: Recorder::new(&request_id),
+                submitted_at: now,
+                width: result.width,
+                height: result.height,
+                pixels: Some(result.map.len()),
+                digest: Some(digest.to_string()),
+                cached: true,
+                result: Some(result),
+                finished_at: Some(now),
+            },
+        );
+        inner.evict_finished(&self.policy);
         Ok(id)
     }
 
@@ -347,6 +424,19 @@ impl JobQueue {
     }
 
     fn complete(&self, id: u64, result: AnalysisResult) {
+        // Serialise the cache envelope before taking the queue lock:
+        // envelopes are scene-sized and the lock is hot. The digest is
+        // immutable after submission, so the two lock windows agree.
+        let fill = self.cache.as_ref().filter(|c| c.enabled()).and_then(|cache| {
+            let digest = self
+                .inner
+                .lock()
+                .unwrap()
+                .records
+                .get(&id)
+                .and_then(|rec| rec.digest.clone())?;
+            Some((Arc::clone(cache), digest, Arc::<str>::from(result.to_json_string())))
+        });
         let mut inner = self.inner.lock().unwrap();
         if let Some(p) = &result.phases {
             inner.phases.merge(p);
@@ -365,6 +455,10 @@ impl JobQueue {
             rec.finished_at = Some(Instant::now());
         }
         inner.evict_finished(&self.policy);
+        drop(inner);
+        if let Some((cache, digest, body)) = fill {
+            cache.put(&digest, body);
+        }
     }
 
     fn fail(&self, id: u64, error: String) {
@@ -695,6 +789,58 @@ mod tests {
             done < total,
             "cancelled job must stop early, but executed {done}/{total} chunks"
         );
+    }
+
+    #[test]
+    fn completion_fills_the_cache_and_cached_records_are_born_done() {
+        let cache = Arc::new(ResultCache::new(64 << 20));
+        let q = Arc::new(JobQueue::new(4).with_cache(Arc::clone(&cache)));
+        let req = request(8, 3);
+        let digest = req.request_digest().unwrap();
+        let id = q.submit_with_digest(req, Some(digest.clone())).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        // wait for completion with the queue still accepting, so the
+        // cached insertion below exercises the normal (open) path
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !q.with_record(id, |r| r.state.is_finished()).unwrap() {
+            assert!(Instant::now() < deadline, "job never finished");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let (label, cached, serialized) = q
+            .with_record(id, |r| {
+                (r.state.label(), r.cached, r.result.as_ref().unwrap().to_json_string())
+            })
+            .unwrap();
+        assert_eq!(label, "done");
+        assert!(!cached, "a computed job must not claim to be cached");
+        let body = cache.get(&digest).expect("completion must fill the cache");
+        assert_eq!(&*body, serialized, "cached envelope must match the record's result");
+        // a hit inserts a pre-completed record with a bit-identical result
+        let hit = AnalysisResult::from_json_str(&body).unwrap();
+        let cid = q.insert_cached(None, &digest, hit).unwrap();
+        let (label, cached, progress, ser2) = q
+            .with_record(cid, |r| {
+                (
+                    r.state.label(),
+                    r.cached,
+                    r.progress(),
+                    r.result.as_ref().unwrap().to_json_string(),
+                )
+            })
+            .unwrap();
+        assert_eq!(label, "done");
+        assert!(cached);
+        assert_eq!(progress, 1.0);
+        assert_eq!(ser2, serialized, "cache hit must re-serialise bit-identically");
+        assert_eq!(q.stats().submitted, 2, "a hit still counts as a submission");
+        q.shutdown();
+        sched.join();
+        // shutdown refuses cached insertions like it refuses submits
+        let again = AnalysisResult::from_json_str(&body).unwrap();
+        assert!(matches!(
+            q.insert_cached(None, &digest, again),
+            Err(SubmitError::ShuttingDown)
+        ));
     }
 
     #[test]

@@ -30,8 +30,8 @@
 //! scene.bsq` (see the README's "Sharded serving" walkthrough).
 
 use crate::api::{
-    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, OutputSpec,
-    ParamSpec, PartialResult, SceneSource,
+    self, AnalysisRequest, AnalysisResult, ChunkSpec, EngineSpec, JobHandle, ParamSpec,
+    PartialResult, SceneSource,
 };
 use crate::cli::{Command, Matches};
 use crate::error::{bail, ensure, err, BfastError, Context, Result};
@@ -451,19 +451,11 @@ fn run_one_shard(
     // `pixel_range` / `slice_pixels` test in tests/api.rs. The
     // request's chunking travels with pixel_range cleared (the slice
     // already applied it); like any wire submit, the worker's own
-    // runner config governs the streaming knobs at execution.
-    let mut chunking = chunking.clone();
-    chunking.pixel_range = None;
-    let sub = AnalysisRequest {
-        source: SceneSource::Inline(stack.slice_pixels(range.0, range.1)),
-        params,
-        engine: engine.clone(),
-        chunking,
-        outputs: OutputSpec::default(),
-        request_id: Some(request_id.to_string()),
-    };
-    let body = sub.to_json_string();
-    drop(sub); // the JSON carries the slice; don't hold it twice
+    // runner config governs the streaming knobs at execution. The body
+    // is encoded straight from the scene buffer — no intermediate
+    // sliced stack — so a fan-out holds one copy per shard, not ~4.
+    let body =
+        api::slice_request_body(stack, range, &params, engine, chunking, Some(request_id));
     let mut popts = PlaceOptions::from(opts);
     popts.request_id = Some(request_id.to_string());
     let progress = |done: usize, total: usize| {

@@ -1,0 +1,216 @@
+//! [`ResultCache`] — a bounded, content-addressed map from request
+//! digest to the serialized [`crate::api::AnalysisResult`] envelope.
+//!
+//! The cache stores the envelope *bytes*, not the decoded result: the
+//! envelope serialization is a fixed point (serialize → parse →
+//! serialize reproduces the identical bytes, pinned by the result
+//! tests), so a hit is bit-identical to a recompute by construction.
+//! Eviction is LRU by **bytes** — result envelopes vary by orders of
+//! magnitude with scene size, so an entry-count bound would be
+//! meaningless. Capacity 0 disables the cache entirely (every lookup
+//! misses nothing and stores nothing — the `--cache-cap-mb 0`
+//! invalidation contract).
+//!
+//! Counters (hits/misses/evictions + resident bytes) feed the
+//! `bfast_cache_*` metric families on both serve and gateway.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One public snapshot of the cache (the `GET /v1/cache` body and the
+/// `bfast cache stats` table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub capacity: usize,
+}
+
+struct Entry {
+    body: Arc<str>,
+    /// Recency stamp: bumped on every hit; the smallest stamp is the
+    /// least-recently-used entry.
+    stamp: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// Digest → envelope cache, LRU by bytes. Shared behind an [`Arc`]
+/// between the HTTP front door (lookups) and the completion paths
+/// (fills).
+pub struct ResultCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    /// A cache bounded at `capacity` bytes of envelope payload
+    /// (0 = disabled: never stores, never hits).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), bytes: 0, clock: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Look up a request digest; a hit refreshes the entry's recency.
+    /// Disabled caches answer `None` without counting a miss.
+    pub fn get(&self, digest: &str) -> Option<Arc<str>> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.map.get_mut(digest) {
+            Some(e) => {
+                e.stamp = clock;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.body))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an envelope under its request digest,
+    /// evicting least-recently-used entries until it fits. Envelopes
+    /// larger than the whole capacity are not cached at all.
+    pub fn put(&self, digest: &str, body: Arc<str>) {
+        if !self.enabled() || body.len() > self.capacity {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(digest) {
+            inner.bytes -= old.body.len();
+        }
+        while inner.bytes + body.len() > self.capacity {
+            let Some(lru) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let evicted = inner.map.remove(&lru).unwrap();
+            inner.bytes -= evicted.body.len();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.clock += 1;
+        let stamp = inner.clock;
+        inner.bytes += body.len();
+        inner.map.insert(digest.to_string(), Entry { body, stamp });
+    }
+
+    /// Drop every entry (counters are cumulative and survive — a clear
+    /// is an operational action, not a counter reset).
+    pub fn clear(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let dropped = inner.map.len();
+        inner.map.clear();
+        inner.bytes = 0;
+        dropped
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn body(tag: &str, len: usize) -> Arc<str> {
+        let mut s = tag.to_string();
+        while s.len() < len {
+            s.push('x');
+        }
+        Arc::from(s.as_str())
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let c = ResultCache::new(1024);
+        assert!(c.get("a").is_none());
+        c.put("a", body("a", 10));
+        let got = c.get("a").unwrap();
+        assert!(got.starts_with('a'));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.bytes), (1, 1, 1, 10));
+    }
+
+    #[test]
+    fn evicts_least_recently_used_by_bytes() {
+        let c = ResultCache::new(100);
+        c.put("a", body("a", 40));
+        c.put("b", body("b", 40));
+        // touch "a" so "b" is the LRU when "c" needs room
+        assert!(c.get("a").is_some());
+        c.put("c", body("c", 40));
+        assert!(c.get("b").is_none(), "LRU entry must be evicted");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.bytes, 80);
+    }
+
+    #[test]
+    fn oversized_entries_and_disabled_cache() {
+        let c = ResultCache::new(10);
+        c.put("big", body("b", 11));
+        assert_eq!(c.stats().entries, 0, "oversized entry must not displace the cache");
+
+        let off = ResultCache::new(0);
+        assert!(!off.enabled());
+        off.put("a", body("a", 1));
+        assert!(off.get("a").is_none());
+        let s = off.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+    }
+
+    #[test]
+    fn refresh_replaces_in_place_and_clear_drops() {
+        let c = ResultCache::new(100);
+        c.put("a", body("a", 30));
+        c.put("a", body("A", 50));
+        let s = c.stats();
+        assert_eq!((s.entries, s.bytes), (1, 50));
+        assert_eq!(c.clear(), 1);
+        let s = c.stats();
+        assert_eq!((s.entries, s.bytes), (0, 0));
+        // counters are cumulative across a clear
+        assert!(c.get("a").is_none());
+        assert_eq!(c.stats().misses, 1);
+    }
+}

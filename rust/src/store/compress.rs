@@ -1,0 +1,767 @@
+//! Zero-dependency DEFLATE (RFC 1951) with gzip (RFC 1952) and zlib
+//! (RFC 1950) framing, plus [`AnyDecoder`] — the magic-byte sniffer
+//! the upload paths put in front of scene bodies.
+//!
+//! The **inflate** side is complete (stored, fixed-Huffman and
+//! dynamic-Huffman blocks), because we must accept what real tools
+//! (`gzip`, `curl --data-binary @scene.bsq.gz`, zlib wrappers) emit.
+//! The **deflate** side emits fixed-Huffman blocks over a greedy
+//! hash-chain LZ77 (plus raw stored blocks) — deliberately simple:
+//! `.bsq` scenes are f32 rasters whose win comes from back-reference
+//! matching, not from per-block optimal Huffman trees, and the decoder
+//! on the other end is usually our own.
+//!
+//! Every decode path takes an explicit output **limit** and fails
+//! fast beyond it: a compressed request body is attacker-shaped input
+//! and must not inflate past the server's `max_body` no matter what
+//! its header claims.
+
+use crate::error::{bail, ensure, err, Result};
+use std::borrow::Cow;
+
+// -- bit I/O (LSB-first, per RFC 1951) -----------------------------------
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next unread byte.
+    pos: usize,
+    /// Bit accumulator, LSB = next bit.
+    acc: u32,
+    bits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0, acc: 0, bits: 0 }
+    }
+
+    fn take(&mut self, n: u32) -> Result<u32> {
+        debug_assert!(n <= 16);
+        while self.bits < n {
+            let byte = *self
+                .data
+                .get(self.pos)
+                .ok_or_else(|| err!("truncated deflate stream"))?;
+            self.acc |= (byte as u32) << self.bits;
+            self.bits += 8;
+            self.pos += 1;
+        }
+        let out = self.acc & ((1u32 << n) - 1);
+        self.acc >>= n;
+        self.bits -= n;
+        Ok(out)
+    }
+
+    /// Discard to the next byte boundary (stored-block preamble).
+    fn align(&mut self) {
+        self.acc = 0;
+        self.bits = 0;
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        debug_assert_eq!(self.bits, 0);
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| err!("truncated deflate stream (stored block)"))?;
+        let out = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+}
+
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u32,
+    bits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self { out: Vec::new(), acc: 0, bits: 0 }
+    }
+
+    /// Emit `n` bits LSB-first (extra bits, block headers).
+    fn put(&mut self, value: u32, n: u32) {
+        self.acc |= value << self.bits;
+        self.bits += n;
+        while self.bits >= 8 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.bits -= 8;
+        }
+    }
+
+    /// Emit a Huffman code: codes pack MSB-first into the LSB-first
+    /// stream, so reverse the bits.
+    fn put_code(&mut self, code: u32, n: u32) {
+        let mut rev = 0u32;
+        for i in 0..n {
+            rev |= ((code >> i) & 1) << (n - 1 - i);
+        }
+        self.put(rev, n);
+    }
+
+    fn align(&mut self) {
+        if self.bits > 0 {
+            self.out.push((self.acc & 0xff) as u8);
+            self.acc = 0;
+            self.bits = 0;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        self.align();
+        self.out
+    }
+}
+
+// -- canonical Huffman decoding ------------------------------------------
+
+/// A canonical Huffman code, decoded bit-serially from the
+/// per-length symbol counts (the classic `puff` algorithm — compact
+/// and obviously correct; throughput is bounded by socket I/O here,
+/// not table lookups).
+struct Huffman {
+    /// `counts[len]` = number of symbols with code length `len`.
+    counts: [u16; 16],
+    /// Symbols sorted by (code length, symbol value).
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn new(lengths: &[u8]) -> Result<Huffman> {
+        let mut counts = [0u16; 16];
+        for &len in lengths {
+            ensure!(len <= 15, "huffman code length {len} out of range");
+            counts[len as usize] += 1;
+        }
+        // reject over-subscribed codes (incomplete codes are allowed:
+        // real streams carry single-code distance trees)
+        let mut left = 1i32;
+        for len in 1..=15 {
+            left = (left << 1) - counts[len] as i32;
+            ensure!(left >= 0, "over-subscribed huffman code");
+        }
+        let mut offsets = [0u16; 16];
+        for len in 1..15 {
+            offsets[len + 1] = offsets[len] + counts[len];
+        }
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l > 0).count()];
+        for (sym, &len) in lengths.iter().enumerate() {
+            if len > 0 {
+                symbols[offsets[len as usize] as usize] = sym as u16;
+                offsets[len as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    fn decode(&self, br: &mut BitReader) -> Result<u16> {
+        let (mut code, mut first, mut index) = (0i32, 0i32, 0i32);
+        for len in 1..=15 {
+            code |= br.take(1)? as i32;
+            let count = self.counts[len] as i32;
+            if code - first < count {
+                return Ok(self.symbols[(index + code - first) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        bail!("invalid huffman code in deflate stream")
+    }
+}
+
+// -- inflate -------------------------------------------------------------
+
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+/// Order in which code-length-code lengths appear in a dynamic header.
+const CLC_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+fn fixed_literal_lengths() -> Vec<u8> {
+    let mut lens = vec![8u8; 288];
+    lens[144..256].fill(9);
+    lens[256..280].fill(7);
+    lens
+}
+
+/// Decompress a raw DEFLATE stream. `limit` bounds the decoded size —
+/// exceeding it is an error, not a truncation.
+pub fn inflate(data: &[u8], limit: usize) -> Result<Vec<u8>> {
+    let mut br = BitReader::new(data);
+    let mut out = Vec::new();
+    loop {
+        let bfinal = br.take(1)?;
+        match br.take(2)? {
+            0 => {
+                br.align();
+                let head = br.bytes(4)?;
+                let len = u16::from_le_bytes([head[0], head[1]]) as usize;
+                let nlen = u16::from_le_bytes([head[2], head[3]]);
+                ensure!(!(len as u16) == nlen, "stored block LEN/NLEN mismatch");
+                ensure!(out.len() + len <= limit, "decompressed data exceeds {limit} bytes");
+                out.extend_from_slice(br.bytes(len)?);
+            }
+            1 => {
+                let lit = Huffman::new(&fixed_literal_lengths())?;
+                let dist = Huffman::new(&[5u8; 30])?;
+                inflate_block(&mut br, &lit, &dist, &mut out, limit)?;
+            }
+            2 => {
+                let hlit = br.take(5)? as usize + 257;
+                let hdist = br.take(5)? as usize + 1;
+                let hclen = br.take(4)? as usize + 4;
+                ensure!(hlit <= 286 && hdist <= 30, "dynamic header counts out of range");
+                let mut clc_lens = [0u8; 19];
+                for &pos in CLC_ORDER.iter().take(hclen) {
+                    clc_lens[pos] = br.take(3)? as u8;
+                }
+                let clc = Huffman::new(&clc_lens)?;
+                let mut lens = Vec::with_capacity(hlit + hdist);
+                while lens.len() < hlit + hdist {
+                    match clc.decode(&mut br)? {
+                        sym @ 0..=15 => lens.push(sym as u8),
+                        16 => {
+                            let &last = lens
+                                .last()
+                                .ok_or_else(|| err!("code-length repeat with no prior length"))?;
+                            let n = br.take(2)? as usize + 3;
+                            lens.resize(lens.len() + n, last);
+                        }
+                        17 => {
+                            let n = br.take(3)? as usize + 3;
+                            lens.resize(lens.len() + n, 0);
+                        }
+                        18 => {
+                            let n = br.take(7)? as usize + 11;
+                            lens.resize(lens.len() + n, 0);
+                        }
+                        other => bail!("invalid code-length symbol {other}"),
+                    }
+                }
+                ensure!(lens.len() == hlit + hdist, "code-length run overruns the header");
+                ensure!(lens[256] > 0, "dynamic block has no end-of-block code");
+                let lit = Huffman::new(&lens[..hlit])?;
+                let dist = Huffman::new(&lens[hlit..])?;
+                inflate_block(&mut br, &lit, &dist, &mut out, limit)?;
+            }
+            other => bail!("invalid deflate block type {other}"),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+fn inflate_block(
+    br: &mut BitReader,
+    lit: &Huffman,
+    dist: &Huffman,
+    out: &mut Vec<u8>,
+    limit: usize,
+) -> Result<()> {
+    loop {
+        match lit.decode(br)? {
+            sym @ 0..=255 => {
+                ensure!(out.len() < limit, "decompressed data exceeds {limit} bytes");
+                out.push(sym as u8);
+            }
+            256 => return Ok(()),
+            sym @ 257..=285 => {
+                let idx = sym as usize - 257;
+                let len = LEN_BASE[idx] as usize + br.take(LEN_EXTRA[idx] as u32)? as usize;
+                let dsym = dist.decode(br)? as usize;
+                ensure!(dsym < 30, "invalid distance symbol {dsym}");
+                let d = DIST_BASE[dsym] as usize + br.take(DIST_EXTRA[dsym] as u32)? as usize;
+                ensure!(d <= out.len(), "back-reference before start of output");
+                ensure!(out.len() + len <= limit, "decompressed data exceeds {limit} bytes");
+                // overlapping copies are the point (run-length encoding)
+                let start = out.len() - d;
+                for i in 0..len {
+                    let b = out[start + i];
+                    out.push(b);
+                }
+            }
+            other => bail!("invalid literal/length symbol {other}"),
+        }
+    }
+}
+
+// -- deflate (fixed-Huffman over greedy hash-chain LZ77) -----------------
+
+const WINDOW: usize = 32 << 10;
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const HASH_BITS: u32 = 15;
+/// Chain links followed per position — bounds worst-case time while
+/// keeping raster data's long runs compressible.
+const MAX_CHAIN: usize = 64;
+
+fn hash3(a: u8, b: u8, c: u8) -> usize {
+    let v = (a as u32) << 16 | (b as u32) << 8 | c as u32;
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Symbol index for a match length (3..=258) in the length alphabet.
+fn length_symbol(len: usize) -> usize {
+    debug_assert!((MIN_MATCH..=MAX_MATCH).contains(&len));
+    match LEN_BASE.binary_search(&(len as u16)) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// Symbol index for a distance (1..=32768) in the distance alphabet.
+fn distance_symbol(d: usize) -> usize {
+    debug_assert!((1..=WINDOW).contains(&d));
+    match DIST_BASE.binary_search(&(d as u16)) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    }
+}
+
+/// The fixed lit/len code for `sym` as `(code, bits)` (RFC 1951 §3.2.6).
+fn fixed_lit_code(sym: usize) -> (u32, u32) {
+    match sym {
+        0..=143 => (0x30 + sym as u32, 8),
+        144..=255 => (0x190 + (sym as u32 - 144), 9),
+        256..=279 => (sym as u32 - 256, 7),
+        _ => (0xc0 + (sym as u32 - 280), 8),
+    }
+}
+
+fn emit_fixed_sym(bw: &mut BitWriter, sym: usize) {
+    let (code, bits) = fixed_lit_code(sym);
+    bw.put_code(code, bits);
+}
+
+/// Compress into one final fixed-Huffman DEFLATE block.
+pub fn deflate(data: &[u8]) -> Vec<u8> {
+    let mut bw = BitWriter::new();
+    bw.put(1, 1); // BFINAL
+    bw.put(1, 2); // fixed Huffman
+    let mut head = vec![u32::MAX; 1 << HASH_BITS];
+    let mut prev = vec![u32::MAX; data.len()];
+    let mut i = 0usize;
+    while i < data.len() {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= data.len() {
+            let h = hash3(data[i], data[i + 1], data[i + 2]);
+            let mut cand = head[h];
+            let mut chain = 0;
+            while cand != u32::MAX && chain < MAX_CHAIN {
+                let c = cand as usize;
+                let dist = i - c;
+                if dist > WINDOW {
+                    break;
+                }
+                let max = MAX_MATCH.min(data.len() - i);
+                let mut len = 0;
+                while len < max && data[c + len] == data[i + len] {
+                    len += 1;
+                }
+                if len > best_len {
+                    best_len = len;
+                    best_dist = dist;
+                    if len == MAX_MATCH {
+                        break;
+                    }
+                }
+                cand = prev[c];
+                chain += 1;
+            }
+            prev[i] = head[h];
+            head[h] = i as u32;
+        }
+        if best_len >= MIN_MATCH {
+            let lsym = length_symbol(best_len);
+            emit_fixed_sym(&mut bw, 257 + lsym);
+            let lextra = LEN_EXTRA[lsym] as u32;
+            if lextra > 0 {
+                bw.put((best_len - LEN_BASE[lsym] as usize) as u32, lextra);
+            }
+            let dsym = distance_symbol(best_dist);
+            bw.put_code(dsym as u32, 5);
+            let dextra = DIST_EXTRA[dsym] as u32;
+            if dextra > 0 {
+                bw.put((best_dist - DIST_BASE[dsym] as usize) as u32, dextra);
+            }
+            // insert the skipped positions into the chains so later
+            // matches can anchor inside this one
+            for j in i + 1..(i + best_len).min(data.len().saturating_sub(MIN_MATCH - 1)) {
+                let h = hash3(data[j], data[j + 1], data[j + 2]);
+                prev[j] = head[h];
+                head[h] = j as u32;
+            }
+            i += best_len;
+        } else {
+            emit_fixed_sym(&mut bw, data[i] as usize);
+            i += 1;
+        }
+    }
+    emit_fixed_sym(&mut bw, 256); // end of block
+    bw.finish()
+}
+
+/// Compress into stored (uncompressed) blocks — the fallback framing
+/// for incompressible payloads, and a test fixture for the stored
+/// inflate path.
+pub fn deflate_stored(data: &[u8]) -> Vec<u8> {
+    let mut bw = BitWriter::new();
+    if data.is_empty() {
+        bw.put(1, 1);
+        bw.put(0, 2);
+        bw.align();
+        bw.out.extend_from_slice(&[0, 0, 0xff, 0xff]);
+        return bw.finish();
+    }
+    let chunks: Vec<&[u8]> = data.chunks(65_535).collect();
+    for (i, chunk) in chunks.iter().enumerate() {
+        bw.put(u32::from(i + 1 == chunks.len()), 1);
+        bw.put(0, 2);
+        bw.align();
+        let len = chunk.len() as u16;
+        bw.out.extend_from_slice(&len.to_le_bytes());
+        bw.out.extend_from_slice(&(!len).to_le_bytes());
+        bw.out.extend_from_slice(chunk);
+    }
+    bw.finish()
+}
+
+// -- checksums -----------------------------------------------------------
+
+/// CRC-32 (IEEE, reflected) — the gzip trailer checksum.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Adler-32 — the zlib trailer checksum.
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65_521;
+    let (mut a, mut b) = (1u32, 0u32);
+    for chunk in data.chunks(5550) {
+        for &byte in chunk {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+// -- gzip / zlib framing -------------------------------------------------
+
+const GZIP_MAGIC: [u8; 2] = [0x1f, 0x8b];
+
+/// Wrap [`deflate`] output in a minimal gzip member (no name, no
+/// mtime, "unknown" OS).
+pub fn gzip_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = vec![0x1f, 0x8b, 8, 0, 0, 0, 0, 0, 0, 0xff];
+    out.extend_from_slice(&deflate(data));
+    out.extend_from_slice(&crc32(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+/// Decompress one gzip member, verifying the CRC-32 and length
+/// trailer. `limit` bounds the decoded size.
+pub fn gzip_decompress(data: &[u8], limit: usize) -> Result<Vec<u8>> {
+    ensure!(data.len() >= 18, "gzip data too short ({} bytes)", data.len());
+    ensure!(data[..2] == GZIP_MAGIC, "not gzip data (bad magic)");
+    ensure!(data[2] == 8, "unsupported gzip compression method {}", data[2]);
+    let flags = data[3];
+    ensure!(flags & 0xe0 == 0, "reserved gzip flag bits set");
+    let mut pos = 10usize;
+    if flags & 0x04 != 0 {
+        // FEXTRA
+        ensure!(data.len() >= pos + 2, "truncated gzip FEXTRA field");
+        let xlen = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: zero-terminated strings
+        if flags & flag != 0 {
+            let end = data[pos.min(data.len())..]
+                .iter()
+                .position(|&b| b == 0)
+                .ok_or_else(|| err!("unterminated gzip header string"))?;
+            pos += end + 1;
+        }
+    }
+    if flags & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    ensure!(data.len() >= pos + 8, "truncated gzip stream");
+    let body = &data[pos..data.len() - 8];
+    let out = inflate(body, limit)?;
+    let trailer = &data[data.len() - 8..];
+    let want_crc = u32::from_le_bytes(trailer[..4].try_into().unwrap());
+    let want_len = u32::from_le_bytes(trailer[4..].try_into().unwrap());
+    ensure!(crc32(&out) == want_crc, "gzip CRC mismatch (corrupt stream)");
+    ensure!(out.len() as u32 == want_len, "gzip length trailer mismatch");
+    Ok(out)
+}
+
+/// Wrap [`deflate`] output in a zlib stream (32K window, default
+/// compression level bits).
+pub fn zlib_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = vec![0x78, 0x9c];
+    out.extend_from_slice(&deflate(data));
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}
+
+/// Decompress a zlib stream, verifying the Adler-32 trailer.
+pub fn zlib_decompress(data: &[u8], limit: usize) -> Result<Vec<u8>> {
+    ensure!(data.len() >= 6, "zlib data too short ({} bytes)", data.len());
+    ensure!(is_zlib_header(data[0], data[1]), "not zlib data (bad header)");
+    ensure!(data[1] & 0x20 == 0, "zlib preset dictionaries are not supported");
+    let out = inflate(&data[2..data.len() - 4], limit)?;
+    let want = u32::from_be_bytes(data[data.len() - 4..].try_into().unwrap());
+    ensure!(adler32(&out) == want, "zlib Adler-32 mismatch (corrupt stream)");
+    Ok(out)
+}
+
+fn is_zlib_header(cmf: u8, flg: u8) -> bool {
+    cmf & 0x0f == 8 && ((cmf as u16) << 8 | flg as u16) % 31 == 0
+}
+
+// -- the sniffer ---------------------------------------------------------
+
+/// What a payload's leading bytes say it is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    Gzip,
+    Zlib,
+    /// Raw payload (recognised `.bsq`/`.bten` magic, or anything that
+    /// matches no compressed framing) — passed through untouched.
+    Identity,
+}
+
+/// Magic-byte sniffer for scene upload bodies: callers hand it
+/// whatever arrived on the wire and get canonical bytes back. Raw
+/// `.bsq`/`.bten` payloads are recognised first so a scene can never
+/// be misread as a compressed stream.
+pub struct AnyDecoder;
+
+impl AnyDecoder {
+    pub fn sniff(data: &[u8]) -> Encoding {
+        if data.starts_with(b"BSQ1") || data.starts_with(b"BTEN") {
+            return Encoding::Identity;
+        }
+        if data.starts_with(&GZIP_MAGIC) {
+            return Encoding::Gzip;
+        }
+        if data.len() >= 2 && is_zlib_header(data[0], data[1]) {
+            return Encoding::Zlib;
+        }
+        Encoding::Identity
+    }
+
+    /// Decode to canonical bytes: compressed framings are expanded
+    /// (bounded by `limit`), raw payloads are borrowed as-is.
+    pub fn decode(data: &[u8], limit: usize) -> Result<Cow<'_, [u8]>> {
+        match Self::sniff(data) {
+            Encoding::Gzip => Ok(Cow::Owned(gzip_decompress(data, limit)?)),
+            Encoding::Zlib => Ok(Cow::Owned(zlib_decompress(data, limit)?)),
+            Encoding::Identity => Ok(Cow::Borrowed(data)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    fn sample_texts() -> Vec<Vec<u8>> {
+        let mut rng = Pcg32::with_stream(0xc0ffee, 7);
+        let mut noisy = vec![0u8; 10_000];
+        for b in noisy.iter_mut() {
+            *b = (rng.next_u32() & 0xff) as u8;
+        }
+        vec![
+            Vec::new(),
+            b"a".to_vec(),
+            b"the quick brown fox jumps over the lazy dog".to_vec(),
+            vec![0u8; 70_000],                       // long runs, multi-chunk stored
+            b"abcabcabcabcabcabcabcabcabc".repeat(50), // periodic back-references
+            noisy,                                    // incompressible
+        ]
+    }
+
+    #[test]
+    fn fixed_deflate_roundtrips() {
+        for data in sample_texts() {
+            let packed = deflate(&data);
+            let back = inflate(&packed, data.len().max(1)).unwrap();
+            assert_eq!(back, data, "fixed roundtrip failed for {} bytes", data.len());
+        }
+    }
+
+    #[test]
+    fn stored_deflate_roundtrips() {
+        for data in sample_texts() {
+            let packed = deflate_stored(&data);
+            let back = inflate(&packed, data.len().max(1)).unwrap();
+            assert_eq!(back, data, "stored roundtrip failed for {} bytes", data.len());
+        }
+    }
+
+    /// Hand-built dynamic-Huffman stream: 255 literal codes of length
+    /// 8 plus two of length 9 (a complete canonical code), a single
+    /// 1-bit distance code, all-literal payload.
+    fn dynamic_stream(payload: &[u8]) -> Vec<u8> {
+        let mut bw = BitWriter::new();
+        bw.put(1, 1); // BFINAL
+        bw.put(2, 2); // dynamic
+        bw.put(0, 5); // HLIT  = 257
+        bw.put(0, 5); // HDIST = 1
+        bw.put(14, 4); // HCLEN = 18
+        // code-length-code lengths in CLC_ORDER (first 18 entries):
+        // symbol 8 → 1 bit, symbols 9 and 1 → 2 bits
+        let clc_lens = [0u32, 0, 0, 0, 1, 0, 2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 2];
+        for l in clc_lens {
+            bw.put(l, 3);
+        }
+        // canonical CLC codes: len(8)=1 → 0; len(1)=2 → 10; len(9)=2 → 11
+        for _ in 0..255 {
+            bw.put_code(0b0, 1); // literal lengths 0..=254 are 8 bits
+        }
+        bw.put_code(0b11, 2); // literal 255 → 9 bits
+        bw.put_code(0b11, 2); // symbol 256 (EOB) → 9 bits
+        bw.put_code(0b10, 2); // the lone distance code → 1 bit
+        // literal codes: sym k ≤ 254 → k (8 bits); 255 → 510, EOB → 511
+        for &b in payload {
+            if b < 255 {
+                bw.put_code(b as u32, 8);
+            } else {
+                bw.put_code(510, 9);
+            }
+        }
+        bw.put_code(511, 9); // end of block
+        bw.finish()
+    }
+
+    #[test]
+    fn dynamic_huffman_inflates() {
+        let payload = b"dynamic huffman block with a \xff byte and repetition repetition";
+        let stream = dynamic_stream(payload);
+        assert_eq!(inflate(&stream, 4096).unwrap(), payload);
+    }
+
+    #[test]
+    fn truncated_streams_error_out() {
+        let data = b"truncation test payload with enough content to matter".repeat(10);
+        for packer in [deflate as fn(&[u8]) -> Vec<u8>, deflate_stored] {
+            let packed = packer(&data);
+            for cut in [1, packed.len() / 2, packed.len() - 1] {
+                let err = inflate(&packed[..cut], 1 << 20).unwrap_err().to_string();
+                assert!(err.contains("truncated"), "cut at {cut}: {err}");
+            }
+        }
+        // a truncated gzip member dies on framing before inflate runs
+        let gz = gzip_compress(&data);
+        assert!(gzip_decompress(&gz[..10], 1 << 20).is_err());
+    }
+
+    #[test]
+    fn output_limit_is_enforced() {
+        // 70_000 zeros compress tiny; a 1 KiB limit must refuse to
+        // expand them (zip-bomb guard), on every block type
+        let data = vec![0u8; 70_000];
+        for packed in [deflate(&data), deflate_stored(&data)] {
+            let err = inflate(&packed, 1024).unwrap_err().to_string();
+            assert!(err.contains("exceeds 1024 bytes"), "{err}");
+        }
+    }
+
+    #[test]
+    fn gzip_roundtrip_and_corruption_detection() {
+        let data = b"gzip framing test \x00\x01\x02 with binary".repeat(37);
+        let gz = gzip_compress(&data);
+        assert_eq!(AnyDecoder::sniff(&gz), Encoding::Gzip);
+        assert_eq!(gzip_decompress(&gz, 1 << 20).unwrap(), data);
+        // flip a payload bit → CRC must catch it
+        let mut bad = gz.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(gzip_decompress(&bad, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn gzip_header_fields_are_skipped() {
+        // FNAME + FEXTRA headers, as real tools write them
+        let data = b"payload behind a decorated gzip header";
+        let plain = gzip_compress(data);
+        let mut decorated = vec![0x1f, 0x8b, 8, 0x08 | 0x04, 1, 2, 3, 4, 0, 0xff];
+        decorated.extend_from_slice(&3u16.to_le_bytes()); // XLEN
+        decorated.extend_from_slice(b"xtr"); // extra field
+        decorated.extend_from_slice(b"scene.bsq\0"); // FNAME
+        decorated.extend_from_slice(&plain[10..]); // deflate body + trailer
+        assert_eq!(gzip_decompress(&decorated, 1 << 20).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_roundtrip() {
+        let data = b"zlib framing test".repeat(100);
+        let z = zlib_compress(&data);
+        assert_eq!(AnyDecoder::sniff(&z), Encoding::Zlib);
+        assert_eq!(zlib_decompress(&z, 1 << 20).unwrap(), data);
+        let mut bad = z.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(zlib_decompress(&bad, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn sniffer_passes_raw_scene_formats_through() {
+        let bsq = b"BSQ1\x10\x00\x00\x00{}rest-of-scene";
+        assert_eq!(AnyDecoder::sniff(bsq), Encoding::Identity);
+        match AnyDecoder::decode(bsq, 1 << 20).unwrap() {
+            Cow::Borrowed(b) => assert_eq!(b, bsq),
+            Cow::Owned(_) => panic!("raw scene must be borrowed, not copied"),
+        }
+        assert_eq!(AnyDecoder::sniff(b"BTEN...."), Encoding::Identity);
+        assert_eq!(AnyDecoder::sniff(b"{\"v\":1}"), Encoding::Identity);
+        // a gzip body decodes transparently
+        let gz = gzip_compress(b"BSQ1 payload");
+        assert_eq!(AnyDecoder::decode(&gz, 1 << 20).unwrap().as_ref(), b"BSQ1 payload");
+    }
+
+    #[test]
+    fn checksums_match_reference_values() {
+        // IEEE CRC-32 and Adler-32 of "123456789" (the classic check
+        // values: cbf43926 / 091e01de)
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(adler32(b"123456789"), 0x091e_01de);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(adler32(b""), 1);
+    }
+}

@@ -1,0 +1,45 @@
+//! The **content-addressed store**: canonical digests, a bounded
+//! result cache, and a zero-dep compressed wire.
+//!
+//! The paper's whole argument is that break detection at scale is
+//! bottlenecked by data volume — yet until this layer every scene
+//! travelled as 4/3×-inflated base64 JSON and every request recomputed
+//! from scratch, even when the identical scene + parameters had just
+//! been analysed. This subsystem gives the serving stack the two
+//! levers distributed ingest systems reach for first:
+//!
+//! * **Content addressing** ([`hash`]) — an in-tree SHA-256
+//!   (known-answer-vector tested) plus a streaming [`HashingReader`]
+//!   that digests scene bytes *as they are ingested*. Every scene gets
+//!   a canonical `scene_digest` (the hash of its canonical `.bsq` byte
+//!   stream — identical whether the scene arrived as raw octets, a
+//!   gzip upload, or inline JSON), and every request a derived
+//!   `request_digest` over the scene digest + the result-relevant
+//!   parameters ([`crate::api::AnalysisRequest::request_digest`]).
+//!   Engine choice, chunking knobs and output options are *excluded*:
+//!   break maps are backend-invariant by construction, so requests
+//!   that differ only there are the same computation.
+//! * **Result caching** ([`cache`]) — [`ResultCache`] maps a request
+//!   digest to the serialized [`crate::api::AnalysisResult`] envelope,
+//!   LRU by bytes under a configurable capacity, with hit/miss/evict
+//!   counters surfaced on `/metrics`. Both `bfast serve` and the
+//!   gateway consult it at the front door of `POST /v1/runs`: a hit
+//!   answers immediately with a finished job record marked `cached`
+//!   (bit-identical to a recompute — the envelope serialization is a
+//!   fixed point), and a gateway-level hit places **zero** worker
+//!   traffic.
+//! * **Compressed wire** ([`compress`]) — an in-tree DEFLATE (full
+//!   inflate: stored/fixed/dynamic blocks; fixed-huffman + stored
+//!   deflate) with gzip/zlib framing behind [`AnyDecoder`], which
+//!   sniffs magic bytes on scene upload bodies (gzip, zlib, raw
+//!   `.bsq`/`.bten` passthrough). The HTTP substrate decodes
+//!   `Content-Encoding: gzip` request bodies centrally and serves
+//!   compressed result envelopes to `Accept-Encoding: gzip` callers.
+
+pub mod cache;
+pub mod compress;
+pub mod hash;
+
+pub use cache::{CacheStats, ResultCache};
+pub use compress::{gzip_compress, gzip_decompress, AnyDecoder, Encoding};
+pub use hash::{HashingReader, Sha256};

@@ -1,0 +1,280 @@
+//! Result-cache + compressed-wire acceptance suite, over real loopback
+//! sockets. The contract: resubmitting a byte-identical request is
+//! answered from the content-addressed cache — born-done job record,
+//! **bit-identical** result envelope, zero new worker traffic behind a
+//! gateway — and a gzipped upload of the same scene hashes to the same
+//! digest as its raw form (so it *hits* the entry the raw submit
+//! filled). `DELETE /v1/cache` drops the entries and the next submit
+//! is a miss again.
+
+use bfast::gateway::{Gateway, GatewayConfig};
+use bfast::json;
+use bfast::params::BfastParams;
+use bfast::raster::{io as rio, TimeStack};
+use bfast::serve::http::{roundtrip, Client};
+use bfast::serve::{ServeConfig, Server};
+use bfast::store::gzip_compress;
+use bfast::synth::ArtificialDataset;
+use std::time::{Duration, Instant};
+
+/// Analysis shape shared by every test: N=48, n=36, h=12, k=1.
+const PQ: &str = "?n-hist=36&h=12&k=1&freq=12&alpha=0.05";
+
+fn scene(m: usize, seed: u64) -> TimeStack {
+    let params = BfastParams::new(48, 36, 12, 1, 12.0, 0.05).unwrap();
+    ArtificialDataset::new(params, m, seed).generate().stack
+}
+
+fn get(addr: &str, path: &str) -> (u16, Vec<u8>) {
+    roundtrip(addr, "GET", path, "", &[]).unwrap()
+}
+
+fn parse_json(body: &[u8]) -> json::Value {
+    json::parse(std::str::from_utf8(body).unwrap().trim()).unwrap()
+}
+
+/// Submit `.bsq` bytes; returns (job id, parsed 202 body).
+fn submit_bin(addr: &str, bytes: &[u8]) -> (u64, json::Value) {
+    let (status, body) =
+        roundtrip(addr, "POST", &format!("/v1/runs{PQ}"), "application/octet-stream", bytes)
+            .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    let v = parse_json(&body);
+    (v.get("job").unwrap().as_usize().unwrap() as u64, v)
+}
+
+fn wait_done(addr: &str, id: u64) -> json::Value {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (status, body) = get(addr, &format!("/v1/runs/{id}"));
+        assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+        let v = parse_json(&body);
+        match v.get("status").unwrap().as_str().unwrap() {
+            "done" => return v,
+            "failed" => panic!("job {id} failed: {}", String::from_utf8_lossy(&body)),
+            s => assert!(Instant::now() < deadline, "job {id} still {s} — hung"),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn result_body(addr: &str, id: u64) -> Vec<u8> {
+    let (status, body) = get(addr, &format!("/v1/runs/{id}/result"));
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    body
+}
+
+fn cache_stats(addr: &str) -> json::Value {
+    let (status, body) = get(addr, "/v1/cache");
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    parse_json(&body)
+}
+
+/// Whether a job/submit JSON carries `"cached": true`.
+fn is_cached(v: &json::Value) -> bool {
+    v.get("cached").and_then(|c| c.as_bool()).unwrap_or(false)
+}
+
+/// The full serve-level contract on one server: miss → fill → hit
+/// (bit-identical, ETag/304), gzip upload hits the raw entry, clear
+/// makes the next submit a miss again.
+#[test]
+fn serve_cache_hit_is_bit_identical_and_gzip_upload_shares_the_digest() {
+    let server =
+        Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).unwrap();
+    let addr = server.addr().to_string();
+    let bytes = rio::stack_to_bytes(&scene(64, 5));
+
+    // first submit: a miss that computes and fills the cache
+    let (id1, v1) = submit_bin(&addr, &bytes);
+    assert!(!is_cached(&v1), "first submit must not be a cache hit");
+    wait_done(&addr, id1);
+    let envelope = result_body(&addr, id1);
+
+    // second identical submit: born-done record, bit-identical envelope
+    let (id2, v2) = submit_bin(&addr, &bytes);
+    assert_ne!(id1, id2, "a cache hit still mints a fresh job id");
+    assert!(is_cached(&v2), "identical resubmit must hit: {}", v2.to_string_compact());
+    assert_eq!(v2.get("status").unwrap().as_str().unwrap(), "done");
+    let status2 = wait_done(&addr, id2);
+    assert!(is_cached(&status2), "job record must carry cached: true");
+    assert_eq!(envelope, result_body(&addr, id2), "cache hit must be bit-identical");
+
+    // the ETag is the request digest; If-None-Match turns the re-fetch
+    // into a bodyless 304 on the SAME keep-alive socket
+    let mut client = Client::connect(&addr).unwrap();
+    let (status, headers, body) = client
+        .request_with_headers("GET", &format!("/v1/runs/{id1}/result"), "", &[], &[])
+        .unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body, envelope);
+    let etag = headers
+        .iter()
+        .find(|(k, _)| k == "etag")
+        .map(|(_, v)| v.clone())
+        .expect("finished result must carry an ETag");
+    assert!(
+        etag.len() == 66 && etag.starts_with('"') && etag.ends_with('"'),
+        "ETag must be the quoted 64-hex request digest, got {etag:?}"
+    );
+    let (status, _, body) = client
+        .request_with_headers(
+            "GET",
+            &format!("/v1/runs/{id1}/result"),
+            "",
+            &[("If-None-Match", &etag)],
+            &[],
+        )
+        .unwrap();
+    assert_eq!(status, 304, "matching If-None-Match must 304");
+    assert!(body.is_empty(), "a 304 carries no body");
+
+    // a gzipped upload of the same scene sniffs, inflates, hashes to
+    // the same scene digest — and therefore HITS the raw submit's entry
+    let (id3, v3) = submit_bin(&addr, &gzip_compress(&bytes));
+    assert!(is_cached(&v3), "gzip upload of the same scene must share the digest");
+    assert_eq!(envelope, result_body(&addr, id3), "gzip-upload result must be bit-identical");
+    let (status, headers, _) = client
+        .request_with_headers("GET", &format!("/v1/runs/{id3}/result"), "", &[], &[])
+        .unwrap();
+    assert_eq!(status, 200);
+    let etag3 = headers.iter().find(|(k, _)| k == "etag").map(|(_, v)| v.clone()).unwrap();
+    assert_eq!(etag, etag3, "raw and gzipped uploads must share the request digest");
+
+    // Content-Encoding: gzip on the request is decoded centrally and
+    // behaves identically
+    let (status, _, body) = client
+        .request_with_headers(
+            "POST",
+            &format!("/v1/runs{PQ}"),
+            "application/octet-stream",
+            &[("Content-Encoding", "gzip")],
+            &gzip_compress(&bytes),
+        )
+        .unwrap();
+    assert_eq!(status, 202, "{}", String::from_utf8_lossy(&body));
+    assert!(is_cached(&parse_json(&body)), "Content-Encoding path must hit too");
+
+    let stats = cache_stats(&addr);
+    assert!(stats.get("enabled").unwrap().as_bool().unwrap());
+    assert!(stats.get("hits").unwrap().as_usize().unwrap() >= 3);
+    assert!(stats.get("entries").unwrap().as_usize().unwrap() >= 1);
+    assert!(stats.get("bytes").unwrap().as_usize().unwrap() > 0);
+    let (status, body) = get(&addr, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let hits: f64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix("bfast_cache_hits_total "))
+        .expect("bfast_cache_hits_total sample missing")
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(hits >= 3.0, "exported hit counter lags the stats endpoint");
+
+    // clear: the same request is a miss again (and recomputes fine)
+    let (status, body) = roundtrip(&addr, "DELETE", "/v1/cache", "", &[]).unwrap();
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    assert!(parse_json(&body).get("cleared").unwrap().as_usize().unwrap() >= 1);
+    let (id4, v4) = submit_bin(&addr, &bytes);
+    assert!(!is_cached(&v4), "a cleared cache must miss");
+    wait_done(&addr, id4);
+    assert_eq!(envelope, result_body(&addr, id4), "recompute must match the cached bytes");
+
+    server.stop().unwrap();
+}
+
+/// `--cache-cap 0` semantics: a disabled cache never hits and the
+/// stats endpoint says so.
+#[test]
+fn disabled_cache_never_hits() {
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        cache_cap: 0,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+    let bytes = rio::stack_to_bytes(&scene(48, 9));
+    let (id1, _) = submit_bin(&addr, &bytes);
+    wait_done(&addr, id1);
+    let (id2, v2) = submit_bin(&addr, &bytes);
+    assert!(!is_cached(&v2), "a disabled cache must never hit");
+    wait_done(&addr, id2);
+    let stats = cache_stats(&addr);
+    assert!(!stats.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(stats.get("hits").unwrap().as_usize().unwrap(), 0);
+    server.stop().unwrap();
+}
+
+fn worker_job_count(addr: &str) -> usize {
+    let (status, body) = get(addr, "/v1/runs");
+    assert_eq!(status, 200);
+    parse_json(&body).get("jobs").unwrap().as_arr().unwrap().len()
+}
+
+fn wait_alive(gw: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = get(gw, "/healthz");
+        assert_eq!(status, 200);
+        if parse_json(&body).get("workers_alive").unwrap().as_usize().unwrap() == want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "fleet never reached {want} live worker(s)");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Gateway-level contract: a cache hit short-circuits placement — the
+/// second identical submit creates **zero** new jobs on either worker
+/// and still answers with the bit-identical merged envelope.
+#[test]
+fn gateway_cache_hit_creates_zero_worker_traffic() {
+    let w1 =
+        Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).unwrap();
+    let w2 =
+        Server::start(ServeConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).unwrap();
+    let gw = Gateway::start(GatewayConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+        poll: Duration::from_millis(5),
+        sweep: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    let gaddr = gw.addr().to_string();
+    wait_alive(&gaddr, 2);
+
+    let bytes = rio::stack_to_bytes(&scene(96, 21));
+    let (id1, v1) = submit_bin(&gaddr, &bytes);
+    assert!(!is_cached(&v1));
+    wait_done(&gaddr, id1);
+    let envelope = result_body(&gaddr, id1);
+
+    let before = (
+        worker_job_count(&w1.addr().to_string()),
+        worker_job_count(&w2.addr().to_string()),
+    );
+    assert!(before.0 + before.1 >= 1, "the first run must have reached the fleet");
+
+    let (id2, v2) = submit_bin(&gaddr, &bytes);
+    assert!(is_cached(&v2), "identical resubmit must hit: {}", v2.to_string_compact());
+    assert_eq!(v2.get("status").unwrap().as_str().unwrap(), "done");
+    let status2 = wait_done(&gaddr, id2);
+    assert!(is_cached(&status2));
+    assert_eq!(envelope, result_body(&gaddr, id2), "gateway hit must be bit-identical");
+
+    let after = (
+        worker_job_count(&w1.addr().to_string()),
+        worker_job_count(&w2.addr().to_string()),
+    );
+    assert_eq!(before, after, "a gateway cache hit must place zero worker jobs");
+
+    let stats = cache_stats(&gaddr);
+    assert!(stats.get("hits").unwrap().as_usize().unwrap() >= 1);
+
+    gw.stop().unwrap();
+    w1.stop().unwrap();
+    w2.stop().unwrap();
+}

@@ -218,7 +218,26 @@ fn serve_exposition_is_well_formed() {
             .unwrap();
         assert!(count >= 1.0, "serve: {family} observed nothing");
     }
+    check_cache_families(&text, "serve");
     w.stop().unwrap();
+}
+
+/// The result-cache families the ISSUE pins on BOTH expositions:
+/// three counters plus the held-bytes gauge, each HELP/TYPE-announced
+/// (the lint already proved that — this pins their names).
+fn check_cache_families(text: &str, ctx: &str) {
+    for family in
+        ["bfast_cache_hits_total", "bfast_cache_misses_total", "bfast_cache_evictions_total"]
+    {
+        assert!(
+            text.contains(&format!("# TYPE {family} counter")),
+            "{ctx}: {family} counter missing"
+        );
+    }
+    assert!(
+        text.contains("# TYPE bfast_cache_bytes gauge"),
+        "{ctx}: bfast_cache_bytes gauge missing"
+    );
 }
 
 #[test]
@@ -246,6 +265,7 @@ fn gateway_exposition_is_well_formed() {
         text.contains("# TYPE bfast_gateway_rebalances_total counter"),
         "gateway: rebalance counter missing"
     );
+    check_cache_families(&text, "gateway");
     gw.stop().unwrap();
     w.stop().unwrap();
 }
