@@ -39,11 +39,13 @@
 //!                "freq": 12, "alpha": 0.05, "lambda": 3.0},
 //!   "engine":   {"kind": "emulated"}
 //!               | {"kind": "device", "artifacts": "artifacts", "artifact": "small"}
-//!               | {"kind": "cpu"} | {"kind": "direct"} | {"kind": "naive"},
+//!               | {"kind": "cmd"} | {"kind": "cpu"} | {"kind": "direct"}
+//!               | {"kind": "naive"},
 //!   "chunking": {"queue_depth": 2, "staging_threads": 0, "phased": false,
-//!                "fill_missing": true, "pixel_range": [0, 1024]},
+//!                "fill_missing": true, "autotune": true, "m_chunk": 512,
+//!                "pixel_range": [0, 1024]},
 //!   "outputs":  {"momax_pgm": "momax.pgm", "result_json": "res.json",
-//!                "timings": false}
+//!                "timings": false, "record": false}
 //! }
 //! ```
 //!
@@ -106,6 +108,22 @@ pub fn cancelled() -> BfastError {
 /// rather than `failed`.)
 pub fn is_cancelled(e: &BfastError) -> bool {
     e.root_cause() == CANCELLED_MSG
+}
+
+/// Root-cause prefix of a request-validation failure (see [`invalid`]).
+pub const INVALID_PREFIX: &str = "invalid request: ";
+
+/// A **typed validation error**: the request itself is wrong (bad
+/// `m_chunk`, an override the backend cannot honour, …), as opposed to
+/// an execution failure. The serve layer maps these to a 400 at the
+/// door; everything else stays a 500-class job failure.
+pub fn invalid(msg: impl std::fmt::Display) -> BfastError {
+    BfastError::msg(format!("{INVALID_PREFIX}{msg}"))
+}
+
+/// Does this error mean "the request was invalid" (see [`invalid`])?
+pub fn is_invalid(e: &BfastError) -> bool {
+    e.root_cause().starts_with(INVALID_PREFIX)
 }
 
 /// Cooperative cancellation flag, shareable across threads. The
@@ -358,14 +376,17 @@ impl SceneSource {
 // -- engine --------------------------------------------------------------
 
 /// Which implementation runs the analysis. The coordinator engines
-/// (`Device`, `Emulated`) stream chunks and honour progress +
+/// (`Device`, `Emulated`, `Cmd`) stream chunks and honour progress +
 /// cancellation; the reference engines (`Cpu`, `Direct`, `Naive`) are
-/// the paper's comparison ladder and run scene-at-once.
+/// the paper's comparison ladder and run scene-at-once. `Cmd` routes
+/// every chunk through the recorded-command-stream interpreter
+/// ([`crate::cmd`]) — same bits, different executor.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub enum EngineSpec {
     Device { artifacts: String, artifact: Option<String> },
     #[default]
     Emulated,
+    Cmd,
     Cpu,
     Direct,
     Naive,
@@ -376,6 +397,7 @@ impl EngineSpec {
         match self {
             EngineSpec::Device { .. } => "device",
             EngineSpec::Emulated => "emulated",
+            EngineSpec::Cmd => "cmd",
             EngineSpec::Cpu => "cpu",
             EngineSpec::Direct => "direct",
             EngineSpec::Naive => "naive",
@@ -390,10 +412,11 @@ impl EngineSpec {
                 artifact: if artifact.is_empty() { None } else { Some(artifact.to_string()) },
             },
             "emulated" => EngineSpec::Emulated,
+            "cmd" => EngineSpec::Cmd,
             "cpu" => EngineSpec::Cpu,
             "direct" => EngineSpec::Direct,
             "naive" => EngineSpec::Naive,
-            other => bail!("unknown engine {other:?} (device|emulated|cpu|direct|naive)"),
+            other => bail!("unknown engine {other:?} (device|emulated|cmd|cpu|direct|naive)"),
         })
     }
 
@@ -426,6 +449,7 @@ impl EngineSpec {
                 },
             }),
             "emulated" => Ok(EngineSpec::Emulated),
+            "cmd" => Ok(EngineSpec::Cmd),
             "cpu" => Ok(EngineSpec::Cpu),
             "direct" => Ok(EngineSpec::Direct),
             "naive" => Ok(EngineSpec::Naive),
@@ -450,6 +474,15 @@ pub struct ChunkSpec {
     pub phased: bool,
     /// Gap-fill NaN observations during staging.
     pub fill_missing: bool,
+    /// Pin the chunk width (pixels per executed chunk). Only honoured
+    /// by flexible-chunk backends — a shape-specialised backend rejects
+    /// the override with a typed [`invalid`] error rather than padding
+    /// or ignoring it. `Some(0)` is refused at submit time.
+    pub m_chunk: Option<usize>,
+    /// Let auto-built runners pick the chunk width with the bench
+    /// autotuner on first run (ignored when [`ChunkSpec::m_chunk`] is
+    /// set). Defaults to on.
+    pub autotune: bool,
     /// Restrict the analysis to pixels `[start, end)`.
     pub pixel_range: Option<(usize, usize)>,
 }
@@ -461,6 +494,8 @@ impl Default for ChunkSpec {
             staging_threads: 0,
             phased: false,
             fill_missing: true,
+            m_chunk: None,
+            autotune: true,
             pixel_range: None,
         }
     }
@@ -474,6 +509,8 @@ impl ChunkSpec {
             queue_depth: self.queue_depth,
             phased: self.phased,
             fill_missing: self.fill_missing,
+            m_chunk: self.m_chunk,
+            autotune: self.autotune,
             ..RunnerConfig::default()
         };
         if self.staging_threads > 0 {
@@ -489,6 +526,10 @@ impl ChunkSpec {
             ("phased", Value::Bool(self.phased)),
             ("fill_missing", Value::Bool(self.fill_missing)),
         ];
+        if let Some(mc) = self.m_chunk {
+            fields.push(("m_chunk", Value::Num(mc as f64)));
+        }
+        fields.push(("autotune", Value::Bool(self.autotune)));
         if let Some((a, b)) = self.pixel_range {
             fields.push(("pixel_range", Value::arr_usize(&[a, b])));
         }
@@ -510,6 +551,11 @@ impl ChunkSpec {
             staging_threads: get_usize_or(v, "staging_threads", d.staging_threads)?,
             phased: get_bool_or(v, "phased", d.phased)?,
             fill_missing: get_bool_or(v, "fill_missing", d.fill_missing)?,
+            m_chunk: match v.try_get("m_chunk") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(x.as_usize().context("field \"m_chunk\"")?),
+            },
+            autotune: get_bool_or(v, "autotune", d.autotune)?,
             pixel_range,
         })
     }
@@ -527,6 +573,12 @@ pub struct OutputSpec {
     pub result_json: Option<String>,
     /// Print/collect the phase breakdown.
     pub timings: bool,
+    /// Capture the analysis as a replayable command stream. On serve,
+    /// the recorded `.bcmd` bytes are kept with the job and served by
+    /// `GET /v1/runs/{id}/cmdstream`; the CLI's `bfast run --record
+    /// PATH` writes them to disk. Recorded jobs opt out of request
+    /// batching (their stream must describe exactly one job).
+    pub record: bool,
 }
 
 impl OutputSpec {
@@ -539,6 +591,9 @@ impl OutputSpec {
             fields.push(("result_json", Value::Str(p.clone())));
         }
         fields.push(("timings", Value::Bool(self.timings)));
+        if self.record {
+            fields.push(("record", Value::Bool(true)));
+        }
         Value::obj(fields)
     }
 
@@ -553,6 +608,7 @@ impl OutputSpec {
             momax_pgm: opt_str("momax_pgm")?,
             result_json: opt_str("result_json")?,
             timings: get_bool_or(v, "timings", false)?,
+            record: get_bool_or(v, "record", false)?,
         })
     }
 }
@@ -598,6 +654,9 @@ impl AnalysisRequest {
     /// door, not a queued job that fails minutes later (`Path` sources
     /// defer to execution, where the file is actually read).
     pub fn validate(&self) -> Result<()> {
+        if self.chunking.m_chunk == Some(0) {
+            return Err(invalid("chunking.m_chunk must be >= 1"));
+        }
         if let SceneSource::Inline(s) = &self.source {
             if let Some((start, end)) = self.chunking.pixel_range {
                 ensure!(
@@ -648,6 +707,10 @@ impl AnalysisRequest {
             }
             EngineSpec::Emulated => {
                 let runner = BfastRunner::emulated(self.chunking.runner_config(None))?;
+                self.execute_on(&runner, handle)
+            }
+            EngineSpec::Cmd => {
+                let runner = BfastRunner::cmdstream(self.chunking.runner_config(None))?;
                 self.execute_on(&runner, handle)
             }
             EngineSpec::Cpu | EngineSpec::Direct | EngineSpec::Naive => {
@@ -862,6 +925,23 @@ pub fn slice_request_body(
     body
 }
 
+/// Record a request's analysis into a replayable command stream plus
+/// the **deterministic** replay envelope (zero wall time, no phase
+/// table — see [`crate::cmd::replay_to_results`]). The stream is what
+/// `bfast run --record` encodes to `.bcmd` and what a recording serve
+/// job keeps for `GET /v1/runs/{id}/cmdstream`; re-executing it
+/// anywhere reproduces the identical envelope byte for byte.
+pub fn record_request(req: &AnalysisRequest) -> Result<(crate::cmd::CmdStream, AnalysisResult)> {
+    req.validate()?;
+    let (stack, params) = req.resolve()?;
+    let runner = BfastRunner::cmdstream(req.chunking.runner_config(None))?;
+    let tag = req.request_id.as_deref().unwrap_or("job 0");
+    let stream = runner.record(&stack, &params, tag)?;
+    let mut results = crate::cmd::replay_to_results(&stream)?;
+    let res = results.pop().context("recording produced no job results")?;
+    Ok((stream, res))
+}
+
 // -- session requests ----------------------------------------------------
 
 /// Prime a monitor session: the one-time staged history pass over an
@@ -1024,14 +1104,17 @@ pub fn run_command() -> Command {
     param_flags(
         Command::new("run", "analyse a stack")
             .req("input", "input .bsq stack")
-            .opt("engine", "device", "device | emulated | cpu | direct | naive")
+            .opt("engine", "device", "device | emulated | cmd | cpu | direct | naive")
             .opt("artifacts", "artifacts", "artifact directory (device)")
             .opt("artifact", "", "artifact config name override (device)")
             .opt("queue-depth", "2", "staging queue depth (device)")
             .opt("staging-threads", "0", "staging threads, 0 = auto (device)")
+            .opt("m-chunk", "0", "pin the chunk width, 0 = backend default")
             .opt("pixels", "", "analyse only the pixel range START:END")
             .opt("momax-pgm", "", "write max|MOSUM| heatmap PGM here")
             .opt("result-json", "", "write the v1 result envelope JSON here")
+            .opt("record", "", "record the run as a replayable .bcmd command stream here")
+            .switch("no-autotune", "disable the first-run chunk-width autotuner")
             .switch("phased", "run the per-phase executables (instrumented)")
             .switch("timings", "print the phase breakdown"),
     )
@@ -1093,12 +1176,15 @@ pub fn outputs_from_matches(m: &Matches) -> Result<OutputSpec> {
         momax_pgm: opt("momax-pgm")?,
         result_json: opt("result-json")?,
         timings: m.flag("timings"),
+        record: false,
     })
 }
 
 /// Build an [`AnalysisRequest`] from parsed `bfast run` matches.
 pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
     let pixel_range = parse_pixel_range(m.str("pixels")?)?;
+    let mut outputs = outputs_from_matches(m)?;
+    outputs.record = !m.str("record")?.is_empty();
     Ok(AnalysisRequest {
         source: SceneSource::Path(m.str("input")?.to_string()),
         params: param_spec_from_matches(m)?,
@@ -1112,9 +1198,14 @@ pub fn run_request_from_matches(m: &Matches) -> Result<AnalysisRequest> {
             staging_threads: m.usize("staging-threads")?,
             phased: m.flag("phased"),
             fill_missing: true,
+            m_chunk: match m.usize("m-chunk")? {
+                0 => None,
+                n => Some(n),
+            },
+            autotune: !m.flag("no-autotune"),
             pixel_range,
         },
-        outputs: outputs_from_matches(m)?,
+        outputs,
         request_id: None,
     })
 }
@@ -1179,6 +1270,7 @@ mod tests {
             EngineSpec::Device { artifacts: "arts".into(), artifact: Some("small".into()) },
             EngineSpec::Device { artifacts: "arts".into(), artifact: None },
             EngineSpec::Emulated,
+            EngineSpec::Cmd,
             EngineSpec::Cpu,
             EngineSpec::Direct,
             EngineSpec::Naive,
@@ -1189,11 +1281,29 @@ mod tests {
         }
         assert!(EngineSpec::from_flags("quantum", "a", "").is_err());
 
-        let c = ChunkSpec { pixel_range: Some((4, 9)), queue_depth: 3, ..Default::default() };
+        let c = ChunkSpec {
+            pixel_range: Some((4, 9)),
+            queue_depth: 3,
+            m_chunk: Some(301),
+            autotune: false,
+            ..Default::default()
+        };
         let back = ChunkSpec::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
         let d = ChunkSpec::from_json(&crate::json::parse("{}").unwrap()).unwrap();
         assert_eq!(d, ChunkSpec::default());
+    }
+
+    #[test]
+    fn zero_m_chunk_is_a_typed_validation_error_at_submit() {
+        let mut req = AnalysisRequest::new(SceneSource::Inline(small_stack(4, 1)));
+        req.params = ParamSpec { n_hist: 24, h: 8, k: 1, freq: 12.0, ..Default::default() };
+        assert!(req.validate().is_ok());
+        req.chunking.m_chunk = Some(0);
+        let err = req.validate().unwrap_err();
+        assert!(is_invalid(&err), "{err:#}");
+        req.chunking.m_chunk = Some(16);
+        assert!(req.validate().is_ok());
     }
 
     #[test]
@@ -1347,7 +1457,8 @@ mod tests {
     fn cli_flags_build_the_same_request_as_the_library() {
         let args: Vec<String> = [
             "--input", "scene.bsq", "--engine", "emulated", "--n-total", "48", "--n-hist",
-            "36", "--h", "12", "--k", "1", "--freq", "12", "--pixels", "3:9",
+            "36", "--h", "12", "--k", "1", "--freq", "12", "--pixels", "3:9", "--m-chunk",
+            "301", "--no-autotune", "--record", "run.bcmd",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -1360,6 +1471,9 @@ mod tests {
         assert_eq!(req.engine, EngineSpec::Emulated);
         assert_eq!(req.params.n_total, Some(48));
         assert_eq!(req.chunking.pixel_range, Some((3, 9)));
+        assert_eq!(req.chunking.m_chunk, Some(301));
+        assert!(!req.chunking.autotune);
+        assert!(req.outputs.record);
         // malformed pixel ranges are rejected at parse time
         let bad: Vec<String> =
             ["--input", "s.bsq", "--pixels", "oops"].iter().map(|s| s.to_string()).collect();

@@ -34,6 +34,7 @@ pub const ENGINE_FUSED: &str = "fused-cpu";
 pub const ENGINE_DIRECT: &str = "direct";
 pub const ENGINE_EMULATED: &str = "emulated";
 pub const ENGINE_EMULATED_PHASED: &str = "emulated-phased";
+pub const ENGINE_CMD: &str = "cmd-replay";
 
 /// Fingerprint `source` for reports emitted by this harness. Reports
 /// measured by other instruments (e.g. the committed kernel-replica
@@ -159,7 +160,7 @@ pub fn scenarios() -> Vec<Scenario> {
             params: BfastParams::paper_synthetic(),
             base_m: 20_000,
             seed: 42,
-            engines: &[ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED],
+            engines: &[ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED, ENGINE_CMD],
         },
         Scenario {
             name: "fig3",
@@ -514,9 +515,20 @@ fn engine_runner<'a>(
                 Ok((t0.elapsed(), res.phases, res.map.break_count()))
             }))
         }
+        ENGINE_CMD => {
+            // record-then-replay: the stream is re-recorded every trial
+            // so the measured number is the full command-stream path,
+            // not just executor dispatch
+            let runner = BfastRunner::cmdstream(RunnerConfig::default())?;
+            Ok(Box::new(move || {
+                let t0 = Instant::now();
+                let res = runner.run(stack, p)?;
+                Ok((t0.elapsed(), res.phases, res.map.break_count()))
+            }))
+        }
         other => bail!(
             "unknown engine {other:?} (known: {ENGINE_FUSED}, {ENGINE_DIRECT}, \
-             {ENGINE_EMULATED}, {ENGINE_EMULATED_PHASED})"
+             {ENGINE_EMULATED}, {ENGINE_EMULATED_PHASED}, {ENGINE_CMD})"
         ),
     }
 }
@@ -760,7 +772,8 @@ mod tests {
 
     #[test]
     fn scenario_names_are_unique_and_engines_known() {
-        let known = [ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED, ENGINE_EMULATED_PHASED];
+        let known =
+            [ENGINE_FUSED, ENGINE_DIRECT, ENGINE_EMULATED, ENGINE_EMULATED_PHASED, ENGINE_CMD];
         let scs = scenarios();
         for (i, a) in scs.iter().enumerate() {
             assert!(scs[i + 1..].iter().all(|b| b.name != a.name), "dup {}", a.name);

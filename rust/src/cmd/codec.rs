@@ -1,0 +1,548 @@
+//! Canonical `.bcmd` encoding: a little-endian binary form (the file
+//! format) plus a JSON dump for human inspection.
+//!
+//! The binary layout for version 1, in order:
+//!
+//! ```text
+//! magic "BCMD" · u32 version
+//! header: u32 n_total · u32 n_hist · u32 h · u32 k
+//!         f64 freq · f64 alpha · f64 lambda
+//!         u32 m_chunk · u8 fill_missing
+//!         u32 freq32 bits · u32 lambda32 bits
+//!         u32 t_len · t_len × u32 (f32 bits)
+//! slots:  u32 count · per slot: str name · u8 dtype (0=f32, 1=i32)
+//!         · u32 rank · rank × u32
+//! jobs:   u32 count · per job: str tag · u32 m
+//!         · u32 width (0 = absent) · u32 height (0 = absent)
+//! ops:    u32 count · per op: u8 opcode · u32 job · u32 chunk
+//!         · stage_gather (0): u32 start · u32 width
+//!           · u32 nvals · nvals × u32 (f32 bits)
+//!         · readback (5): u32 start · u32 width
+//! ```
+//!
+//! `str` is `u32 len` + UTF-8 bytes. Floats are stored as raw IEEE
+//! bits so NaN payloads survive the round trip and
+//! `encode(decode(bytes)) == bytes` holds for every accepted stream.
+//! The slot table is redundant (derivable from the header) but is
+//! written and **checked** on decode: a stream whose slots disagree
+//! with the v1 contract is rejected before any op could execute.
+
+use crate::b64::base64_encode;
+use crate::error::{bail, ensure, Result};
+use crate::json::Value;
+use crate::runtime::Dtype;
+
+use super::{slot_table, CmdStream, JobDesc, Op, StreamHeader, BCMD_MAGIC, BCMD_VERSION};
+
+const OP_STAGE_GATHER: u8 = 0;
+const OP_FILL_COLUMNS: u8 = 1;
+const OP_BATCHED_FIT: u8 = 2;
+const OP_MOSUM: u8 = 3;
+const OP_DETECT_BREAKS: u8 = 4;
+const OP_READBACK: u8 = 5;
+
+fn dtype_code(d: Dtype) -> u8 {
+    match d {
+        Dtype::F32 => 0,
+        Dtype::I32 => 1,
+    }
+}
+
+fn dtype_name(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "i32",
+    }
+}
+
+struct Wr {
+    b: Vec<u8>,
+}
+
+impl Wr {
+    fn u8(&mut self, v: u8) {
+        self.b.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize32(&mut self, v: usize) {
+        self.u32(v as u32);
+    }
+    fn f64(&mut self, v: f64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32bits(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.usize32(s.len());
+        self.b.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let left = self.b.len() - self.pos;
+        ensure!(
+            left >= n,
+            "truncated .bcmd: wanted {n} bytes at offset {}, {left} available",
+            self.pos
+        );
+        let out = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn len32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+    fn f32bits(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    /// Read `n` f32s without trusting `n` for an up-front allocation:
+    /// the byte length is checked first, so a hostile count fails as a
+    /// truncation error instead of an OOM.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).unwrap_or(usize::MAX))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+            .collect())
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.len32()?;
+        let bytes = self.take(n)?;
+        match std::str::from_utf8(bytes) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => bail!("invalid UTF-8 string at offset {}", self.pos - n),
+        }
+    }
+}
+
+impl CmdStream {
+    /// Serialise to the canonical `.bcmd` binary form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Wr { b: Vec::new() };
+        w.b.extend_from_slice(&BCMD_MAGIC);
+        w.u32(BCMD_VERSION);
+
+        let h = &self.header;
+        w.usize32(h.n_total);
+        w.usize32(h.n_hist);
+        w.usize32(h.h);
+        w.usize32(h.k);
+        w.f64(h.freq);
+        w.f64(h.alpha);
+        w.f64(h.lambda);
+        w.usize32(h.m_chunk);
+        w.u8(h.fill_missing as u8);
+        w.f32bits(h.freq32);
+        w.f32bits(h.lambda32);
+        w.usize32(h.t_axis.len());
+        for &t in &h.t_axis {
+            w.f32bits(t);
+        }
+
+        let slots = self.slot_table();
+        w.usize32(slots.len());
+        for s in &slots {
+            w.str(&s.name);
+            w.u8(dtype_code(s.dtype));
+            w.usize32(s.shape.len());
+            for &d in &s.shape {
+                w.usize32(d);
+            }
+        }
+
+        w.usize32(self.jobs.len());
+        for j in &self.jobs {
+            w.str(&j.tag);
+            w.usize32(j.m);
+            w.usize32(j.width.unwrap_or(0));
+            w.usize32(j.height.unwrap_or(0));
+        }
+
+        w.usize32(self.ops.len());
+        for op in &self.ops {
+            match op {
+                Op::StageGather { job, chunk, start, width, data } => {
+                    w.u8(OP_STAGE_GATHER);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                    w.u32(*start);
+                    w.u32(*width);
+                    w.usize32(data.len());
+                    for &v in data {
+                        w.f32bits(v);
+                    }
+                }
+                Op::FillColumns { job, chunk } => {
+                    w.u8(OP_FILL_COLUMNS);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                }
+                Op::BatchedFit { job, chunk } => {
+                    w.u8(OP_BATCHED_FIT);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                }
+                Op::Mosum { job, chunk } => {
+                    w.u8(OP_MOSUM);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                }
+                Op::DetectBreaks { job, chunk } => {
+                    w.u8(OP_DETECT_BREAKS);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                }
+                Op::Readback { job, chunk, start, width } => {
+                    w.u8(OP_READBACK);
+                    w.u32(*job);
+                    w.u32(*chunk);
+                    w.u32(*start);
+                    w.u32(*width);
+                }
+            }
+        }
+        w.b
+    }
+
+    /// Parse and validate a `.bcmd` binary stream. Fails closed: bad
+    /// magic, unknown versions, truncation, trailing bytes, a slot
+    /// table that disagrees with the v1 contract, and structurally
+    /// invalid ops are all hard errors.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Rd { b: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        ensure!(magic == BCMD_MAGIC, "not a .bcmd command stream (bad magic)");
+        let version = r.u32()?;
+        ensure!(
+            version == BCMD_VERSION,
+            "unsupported .bcmd version {version} (this build speaks v{BCMD_VERSION})"
+        );
+
+        let n_total = r.len32()?;
+        let n_hist = r.len32()?;
+        let h = r.len32()?;
+        let k = r.len32()?;
+        let freq = r.f64()?;
+        let alpha = r.f64()?;
+        let lambda = r.f64()?;
+        let m_chunk = r.len32()?;
+        let fill_missing = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => bail!("fill_missing flag must be 0 or 1, got {other}"),
+        };
+        let freq32 = r.f32bits()?;
+        let lambda32 = r.f32bits()?;
+        let t_len = r.len32()?;
+        let t_axis = r.f32s(t_len)?;
+        let header = StreamHeader {
+            n_total,
+            n_hist,
+            h,
+            k,
+            freq,
+            alpha,
+            lambda,
+            m_chunk,
+            fill_missing,
+            t_axis,
+            freq32,
+            lambda32,
+        };
+
+        let want_slots = slot_table(&header);
+        let n_slots = r.len32()?;
+        ensure!(
+            n_slots == want_slots.len(),
+            "slot table has {n_slots} entries, the v1 chunk contract has {}",
+            want_slots.len()
+        );
+        for want in &want_slots {
+            let name = r.str()?;
+            let dtype = r.u8()?;
+            let rank = r.len32()?;
+            let mut shape = Vec::new();
+            for _ in 0..rank {
+                shape.push(r.len32()?);
+            }
+            ensure!(
+                name == want.name && dtype == dtype_code(want.dtype) && shape == want.shape,
+                "slot {name:?} does not match the v1 chunk contract"
+            );
+        }
+
+        let n_jobs = r.len32()?;
+        let mut jobs = Vec::new();
+        for _ in 0..n_jobs {
+            let tag = r.str()?;
+            let m = r.len32()?;
+            let width = match r.len32()? {
+                0 => None,
+                w => Some(w),
+            };
+            let height = match r.len32()? {
+                0 => None,
+                h => Some(h),
+            };
+            jobs.push(JobDesc { tag, m, width, height });
+        }
+
+        let n_ops = r.len32()?;
+        let chunk_len = header.n_total * header.m_chunk;
+        let mut ops = Vec::new();
+        for i in 0..n_ops {
+            let code = r.u8()?;
+            let job = r.u32()?;
+            let chunk = r.u32()?;
+            let op = match code {
+                OP_STAGE_GATHER => {
+                    let start = r.u32()?;
+                    let width = r.u32()?;
+                    let nvals = r.len32()?;
+                    ensure!(
+                        nvals == chunk_len,
+                        "op {i} (stage_gather) declares {nvals} values, slot y holds {chunk_len}"
+                    );
+                    let data = r.f32s(nvals)?;
+                    Op::StageGather { job, chunk, start, width, data }
+                }
+                OP_FILL_COLUMNS => Op::FillColumns { job, chunk },
+                OP_BATCHED_FIT => Op::BatchedFit { job, chunk },
+                OP_MOSUM => Op::Mosum { job, chunk },
+                OP_DETECT_BREAKS => Op::DetectBreaks { job, chunk },
+                OP_READBACK => {
+                    let start = r.u32()?;
+                    let width = r.u32()?;
+                    Op::Readback { job, chunk, start, width }
+                }
+                other => bail!("unknown opcode {other} at op {i}"),
+            };
+            ops.push(op);
+        }
+
+        ensure!(
+            r.pos == bytes.len(),
+            "{} trailing bytes after the op list",
+            bytes.len() - r.pos
+        );
+        let stream = CmdStream { header, jobs, ops };
+        stream.validate()?;
+        Ok(stream)
+    }
+
+    /// JSON view of the stream for inspection (`bfast replay --dump`).
+    /// Gather payloads are base64 of the little-endian f32 bytes so
+    /// NaN samples stay representable and the document stays valid
+    /// JSON; `values` carries the element count for quick reading.
+    pub fn to_json(&self) -> Value {
+        let h = &self.header;
+        let header = Value::obj(vec![
+            ("n_total", Value::Num(h.n_total as f64)),
+            ("n_hist", Value::Num(h.n_hist as f64)),
+            ("h", Value::Num(h.h as f64)),
+            ("k", Value::Num(h.k as f64)),
+            ("freq", Value::Num(h.freq)),
+            ("alpha", Value::Num(h.alpha)),
+            ("lambda", Value::Num(h.lambda)),
+            ("m_chunk", Value::Num(h.m_chunk as f64)),
+            ("fill_missing", Value::Bool(h.fill_missing)),
+            ("freq_f32", Value::Num(h.freq32 as f64)),
+            ("lambda_f32", Value::Num(h.lambda32 as f64)),
+            (
+                "t_axis",
+                Value::Arr(h.t_axis.iter().map(|&t| Value::Num(t as f64)).collect()),
+            ),
+        ]);
+        let slots = Value::Arr(
+            self.slot_table()
+                .iter()
+                .map(|s| {
+                    Value::obj(vec![
+                        ("name", Value::Str(s.name.clone())),
+                        ("dtype", Value::Str(dtype_name(s.dtype).to_string())),
+                        ("shape", Value::arr_usize(&s.shape)),
+                    ])
+                })
+                .collect(),
+        );
+        let jobs = Value::Arr(
+            self.jobs
+                .iter()
+                .map(|j| {
+                    let dim = |d: Option<usize>| match d {
+                        Some(v) => Value::Num(v as f64),
+                        None => Value::Null,
+                    };
+                    Value::obj(vec![
+                        ("tag", Value::Str(j.tag.clone())),
+                        ("m", Value::Num(j.m as f64)),
+                        ("width", dim(j.width)),
+                        ("height", dim(j.height)),
+                    ])
+                })
+                .collect(),
+        );
+        let ops = Value::Arr(self.ops.iter().map(op_to_json).collect());
+        Value::obj(vec![
+            ("v", Value::Num(BCMD_VERSION as f64)),
+            ("header", header),
+            ("slots", slots),
+            ("jobs", jobs),
+            ("ops", ops),
+        ])
+    }
+}
+
+fn op_to_json(op: &Op) -> Value {
+    let mut fields = vec![
+        ("op", Value::Str(op.name().to_string())),
+        ("job", Value::Num(op.job() as f64)),
+        ("chunk", Value::Num(op.chunk() as f64)),
+    ];
+    match op {
+        Op::StageGather { start, width, data, .. } => {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for &v in data {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            fields.push(("start", Value::Num(*start as f64)));
+            fields.push(("width", Value::Num(*width as f64)));
+            fields.push(("values", Value::Num(data.len() as f64)));
+            fields.push(("data_b64", Value::Str(base64_encode(&bytes))));
+        }
+        Op::Readback { start, width, .. } => {
+            fields.push(("start", Value::Num(*start as f64)));
+            fields.push(("width", Value::Num(*width as f64)));
+        }
+        _ => {}
+    }
+    Value::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{record_stream, RecordJob};
+    use super::*;
+    use crate::params::BfastParams;
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap()
+    }
+
+    fn stream() -> CmdStream {
+        let p = params();
+        let gen = ArtificialDataset::new(p.clone(), 25, 11).generate();
+        let mut stack = gen.stack;
+        // NaN payloads must survive the byte round trip
+        stack.data_mut()[3] = f32::NAN;
+        record_stream(&[RecordJob { tag: "t".into(), stack: &stack, params: &p }], 10, true)
+            .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_encode_is_a_fixed_point() {
+        let s = stream();
+        let bytes = s.encode();
+        let back = CmdStream::decode(&bytes).unwrap();
+        assert_eq!(back.encode(), bytes);
+        assert_eq!(back.jobs, s.jobs);
+        assert_eq!(back.ops.len(), s.ops.len());
+        // spot-check the NaN travelled as its exact bit pattern
+        match (&s.ops[0], &back.ops[0]) {
+            (Op::StageGather { data: a, .. }, Op::StageGather { data: b, .. }) => {
+                assert_eq!(a[3].to_bits(), b[3].to_bits());
+                assert!(b[3].is_nan());
+            }
+            other => panic!("first ops should be gathers, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = stream().encode();
+        for n in 0..bytes.len() {
+            let err = CmdStream::decode(&bytes[..n]).unwrap_err().to_string();
+            assert!(!err.is_empty(), "truncation at {n} must error");
+        }
+    }
+
+    #[test]
+    fn corrupt_streams_fail_closed() {
+        let bytes = stream().encode();
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let err = CmdStream::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut bad = bytes.clone();
+        bad[4] = 2; // version 2
+        let err = CmdStream::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("unsupported .bcmd version 2"), "{err}");
+
+        let mut bad = bytes.clone();
+        bad.push(0);
+        let err = CmdStream::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+
+        // flipping a slot-table dimension breaks the contract check;
+        // the first dim of slot "y" sits at a computable offset:
+        // magic+version (8), four u32 params (16), three f64 (24),
+        // m_chunk (4), fill flag (1), two f32 bits (8), t_len (4),
+        // the t axis, slot count (4), name "y" (4 + 1), dtype (1),
+        // rank (4).
+        let t = stream().header.t_axis.len();
+        let dim0 = 8 + 16 + 24 + 4 + 1 + 8 + 4 + 4 * t + 4 + 5 + 1 + 4;
+        let mut bad = bytes.clone();
+        bad[dim0] ^= 0xff;
+        let err = CmdStream::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("chunk contract"), "{err}");
+    }
+
+    #[test]
+    fn json_dump_is_structurally_complete() {
+        let s = stream();
+        let v = s.to_json();
+        let text = v.to_string_pretty();
+        let parsed = crate::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("v").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            parsed.get("header").unwrap().get("m_chunk").unwrap().as_usize().unwrap(),
+            10
+        );
+        assert_eq!(parsed.get("slots").unwrap().as_arr().unwrap().len(), 6);
+        assert_eq!(
+            parsed.get("ops").unwrap().as_arr().unwrap().len(),
+            s.ops.len()
+        );
+        let first = &parsed.get("ops").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("op").unwrap().as_str().unwrap(), "stage_gather");
+        assert_eq!(
+            first.get("values").unwrap().as_usize().unwrap(),
+            s.header.n_total * s.header.m_chunk
+        );
+    }
+}

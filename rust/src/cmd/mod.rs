@@ -1,0 +1,661 @@
+//! `bfast::cmd` — the recorded command stream: the chunk contract as
+//! **data**.
+//!
+//! Every backend executes the same per-chunk sequence (gather → fill →
+//! batched fit → MOSUM → detect → readback), but until this module the
+//! sequence only existed as direct Rust calls — nothing to inspect,
+//! reorder, or hand to a device. A [`CmdStream`] reifies it: a
+//! versioned IR of typed [`Op`]s over a fixed tensor slot table, with
+//! a canonical binary encoding (`.bcmd`, see [`CmdStream::encode`])
+//! and a JSON dump for inspection ([`CmdStream::to_json`],
+//! `bfast replay --dump`).
+//!
+//! * [`Recorder`] captures a stream. The coordinator drives it over
+//!   its resolved chunk plan ([`record_stream`] /
+//!   `BfastRunner::record`) instead of calling a `ChunkExecutor` —
+//!   the recorded stream carries the **raw, unfilled** staged chunks,
+//!   so gap-filling is itself a replayable [`Op::FillColumns`] op.
+//! * [`replay::ReplayExecutor`] parses a stream and dispatches each op
+//!   to the fused CPU kernels through a translation cache (prepared
+//!   engine keyed on the f32 chunk-contract bits), producing break
+//!   maps **bit-identical** to a direct run — the op kernels are the
+//!   same code path as `FusedCpuBfast::run` (pinned by
+//!   `tests/cmdstream.rs`).
+//! * [`replay::CmdBackend`] wires record-then-replay in as a
+//!   first-class `ExecutorBackend` (`--engine cmd`), and
+//!   [`record_stream`] accepts **many jobs** sharing one chunk
+//!   contract — the serve scheduler's batching seam: queued compatible
+//!   requests execute through a single stream on one prepared engine
+//!   (see [`batch_compatible`]).
+//!
+//! ## `.bcmd` format version policy
+//!
+//! The binary form opens with the magic `BCMD` and a little-endian
+//! `u32` version ([`BCMD_VERSION`], currently 1). The rules:
+//!
+//! * A reader accepts exactly the versions it knows and **fails
+//!   closed** on anything else (`unsupported .bcmd version`): ops must
+//!   never be silently skipped, because a skipped op changes the
+//!   arithmetic.
+//! * Any change to the op set, the slot table, or a header field is a
+//!   version bump — there are no in-version extension points.
+//! * The encoder always writes the newest version, and encoding is
+//!   canonical: `encode(decode(bytes)) == bytes` for any accepted
+//!   stream (the fixed-point property pinned by the codec tests).
+//!
+//! Header values are stored twice on purpose: the resolved `f64`
+//! analysis parameters (for result envelopes) and the `f32`
+//! chunk-contract values actually fed to the kernels (time axis,
+//! frequency, λ) — replay upcasts the f32 bits exactly like the
+//! emulated device, which is what makes replay bit-identical.
+
+pub mod codec;
+pub mod replay;
+
+pub use replay::{replay_to_results, CmdBackend, ReplayExecutor, REPLAY_ENGINE};
+
+use crate::api::{AnalysisRequest, SceneSource};
+use crate::error::{ensure, Result};
+use crate::params::BfastParams;
+use crate::raster::{ChunkPlan, TimeStack};
+use crate::runtime::{Dtype, TensorSpec};
+
+/// Magic bytes opening every `.bcmd` stream.
+pub const BCMD_MAGIC: [u8; 4] = *b"BCMD";
+
+/// The stream format version this build reads and writes.
+pub const BCMD_VERSION: u32 = 1;
+
+/// Stream-wide execution contract: the resolved analysis parameters
+/// plus the f32 values the chunk boundary actually ships (see the
+/// module docs on why both live here).
+#[derive(Clone, Debug)]
+pub struct StreamHeader {
+    pub n_total: usize,
+    pub n_hist: usize,
+    pub h: usize,
+    pub k: usize,
+    /// Resolved f64 parameters, kept for result envelopes.
+    pub freq: f64,
+    pub alpha: f64,
+    pub lambda: f64,
+    /// Pixels per executed chunk (every slot is shaped for this).
+    pub m_chunk: usize,
+    /// Whether chunks were recorded raw with a gap-fill op following
+    /// each gather (`false` = the producer staged pre-filled data).
+    pub fill_missing: bool,
+    /// The f32 chunk-contract values fed to the kernels.
+    pub t_axis: Vec<f32>,
+    pub freq32: f32,
+    pub lambda32: f32,
+}
+
+impl StreamHeader {
+    /// Build the header the coordinator's chunk boundary implies:
+    /// f32-rounded time axis, frequency and λ next to the resolved
+    /// f64 parameters.
+    pub fn from_params(
+        params: &BfastParams,
+        time_axis: &[f64],
+        m_chunk: usize,
+        fill_missing: bool,
+    ) -> Self {
+        Self {
+            n_total: params.n_total,
+            n_hist: params.n_hist,
+            h: params.h,
+            k: params.k,
+            freq: params.freq,
+            alpha: params.alpha,
+            lambda: params.lambda,
+            m_chunk,
+            fill_missing,
+            t_axis: time_axis.iter().map(|&v| v as f32).collect(),
+            freq32: params.freq as f32,
+            lambda32: params.lambda as f32,
+        }
+    }
+
+    /// The resolved f64 parameters (envelope side — replay builds its
+    /// engine from the f32 values instead, see [`replay`]).
+    pub fn params(&self) -> Result<BfastParams> {
+        BfastParams::with_lambda(
+            self.n_total,
+            self.n_hist,
+            self.h,
+            self.k,
+            self.freq,
+            self.alpha,
+            self.lambda,
+        )
+    }
+
+    /// Monitoring-window length `N - n`.
+    pub fn n_monitor(&self) -> usize {
+        self.n_total - self.n_hist
+    }
+}
+
+/// One analysis riding in a stream: several jobs may share one stream
+/// (and one prepared engine) when their chunk contracts agree.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobDesc {
+    /// Caller label (request id on serve; `"job 0"` from the CLI).
+    pub tag: String,
+    /// Pixels in this job's scene.
+    pub m: usize,
+    /// Optional scene geometry, carried into the result envelope.
+    pub width: Option<usize>,
+    pub height: Option<usize>,
+}
+
+/// One typed command. `job`/`chunk` address the work; slot traffic is
+/// implicit in the v1 contract: `StageGather` writes slot `y`,
+/// `FillColumns` rewrites it in place, `BatchedFit` produces `resid`,
+/// `Mosum` produces `strip`, `DetectBreaks` produces
+/// `breaks`/`first`/`momax`, and `Readback` copies the first `width`
+/// columns of those into the job's map at `start`.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Stage a raw padded chunk (`n_total × m_chunk`, time-major) into
+    /// slot `y`. `data` is **unfilled**: NaN observations travel as
+    /// recorded.
+    StageGather { job: u32, chunk: u32, start: u32, width: u32, data: Vec<f32> },
+    /// Gap-fill slot `y` column-wise (the staging-side interpolation).
+    FillColumns { job: u32, chunk: u32 },
+    /// History OLS fit + predictions + residuals: `y` → `resid`.
+    BatchedFit { job: u32, chunk: u32 },
+    /// Rolling normalised MOSUM strip: `resid` → `strip`.
+    Mosum { job: u32, chunk: u32 },
+    /// Scan the strip against the monitoring boundary: `strip` →
+    /// `breaks`/`first`/`momax`.
+    DetectBreaks { job: u32, chunk: u32 },
+    /// Copy columns `[0, width)` of the detection outputs into job
+    /// `job`'s break map at pixel `start`.
+    Readback { job: u32, chunk: u32, start: u32, width: u32 },
+}
+
+impl Op {
+    /// Stable op name (JSON tag, trace span name, phase label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::StageGather { .. } => "stage_gather",
+            Op::FillColumns { .. } => "fill_columns",
+            Op::BatchedFit { .. } => "batched_fit",
+            Op::Mosum { .. } => "mosum",
+            Op::DetectBreaks { .. } => "detect_breaks",
+            Op::Readback { .. } => "readback",
+        }
+    }
+
+    /// The job this op belongs to.
+    pub fn job(&self) -> u32 {
+        match self {
+            Op::StageGather { job, .. }
+            | Op::FillColumns { job, .. }
+            | Op::BatchedFit { job, .. }
+            | Op::Mosum { job, .. }
+            | Op::DetectBreaks { job, .. }
+            | Op::Readback { job, .. } => *job,
+        }
+    }
+
+    /// The job-relative chunk index this op works on.
+    pub fn chunk(&self) -> u32 {
+        match self {
+            Op::StageGather { chunk, .. }
+            | Op::FillColumns { chunk, .. }
+            | Op::BatchedFit { chunk, .. }
+            | Op::Mosum { chunk, .. }
+            | Op::DetectBreaks { chunk, .. }
+            | Op::Readback { chunk, .. } => *chunk,
+        }
+    }
+}
+
+/// A recorded command stream: header + job table + op sequence.
+#[derive(Clone, Debug)]
+pub struct CmdStream {
+    pub header: StreamHeader,
+    pub jobs: Vec<JobDesc>,
+    pub ops: Vec<Op>,
+}
+
+impl CmdStream {
+    /// The v1 tensor slot table this stream's shapes imply. Slots are
+    /// fixed by the format version; the table is carried in the binary
+    /// form and checked on decode so a corrupted or foreign stream is
+    /// rejected before any op executes.
+    pub fn slot_table(&self) -> Vec<TensorSpec> {
+        slot_table(&self.header)
+    }
+
+    /// Number of executed chunks a job contributes (its readbacks).
+    pub fn chunks_of(&self, job: u32) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, Op::Readback { .. }) && op.job() == job)
+            .count()
+    }
+
+    /// Structural validation: every op must address a real job, stay
+    /// inside its pixel range, and ship full-slot payloads. Run by
+    /// [`CmdStream::decode`] and again by the replayer before
+    /// execution.
+    pub fn validate(&self) -> Result<()> {
+        let h = &self.header;
+        ensure!(h.m_chunk >= 1, "m_chunk must be >= 1");
+        ensure!(
+            h.t_axis.len() == h.n_total,
+            "t axis length {} != N {}",
+            h.t_axis.len(),
+            h.n_total
+        );
+        h.params()?;
+        let chunk_len = h.n_total * h.m_chunk;
+        for (i, op) in self.ops.iter().enumerate() {
+            let job = op.job() as usize;
+            ensure!(
+                job < self.jobs.len(),
+                "op {i} ({}) addresses job {job}, stream has {}",
+                op.name(),
+                self.jobs.len()
+            );
+            let m = self.jobs[job].m;
+            match op {
+                Op::StageGather { start, width, data, .. } => {
+                    ensure!(
+                        data.len() == chunk_len,
+                        "op {i} (stage_gather) payload has {} values, slot y holds {chunk_len}",
+                        data.len()
+                    );
+                    check_range(i, op.name(), *start, *width, m, h.m_chunk)?;
+                }
+                Op::Readback { start, width, .. } => {
+                    check_range(i, op.name(), *start, *width, m, h.m_chunk)?;
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn check_range(
+    i: usize,
+    name: &str,
+    start: u32,
+    width: u32,
+    m: usize,
+    m_chunk: usize,
+) -> Result<()> {
+    let (start, width) = (start as usize, width as usize);
+    ensure!(width >= 1 && width <= m_chunk, "op {i} ({name}) width {width} not in [1, {m_chunk}]");
+    ensure!(
+        start + width <= m,
+        "op {i} ({name}) pixels [{start}, {}) exceed the job's {m}",
+        start + width
+    );
+    Ok(())
+}
+
+/// The v1 slot table for a header's shapes (see
+/// [`CmdStream::slot_table`]).
+pub fn slot_table(h: &StreamHeader) -> Vec<TensorSpec> {
+    let (n, mc, n_mon) = (h.n_total, h.m_chunk, h.n_monitor());
+    let f32s = |name: &str, shape: Vec<usize>| TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: Dtype::F32,
+    };
+    vec![
+        f32s("y", vec![n, mc]),
+        f32s("resid", vec![n, mc]),
+        f32s("strip", vec![n_mon, mc]),
+        TensorSpec { name: "breaks".into(), shape: vec![mc], dtype: Dtype::I32 },
+        TensorSpec { name: "first".into(), shape: vec![mc], dtype: Dtype::I32 },
+        f32s("momax", vec![mc]),
+    ]
+}
+
+/// Captures a [`CmdStream`]: declare jobs, then record each staged
+/// chunk; [`Recorder::record_chunk`] emits the canonical op sequence
+/// for it (gather, optional fill, fit, mosum, detect, readback).
+pub struct Recorder {
+    header: StreamHeader,
+    jobs: Vec<JobDesc>,
+    ops: Vec<Op>,
+}
+
+impl Recorder {
+    pub fn new(header: StreamHeader) -> Result<Self> {
+        ensure!(header.m_chunk >= 1, "m_chunk must be >= 1");
+        ensure!(
+            header.t_axis.len() == header.n_total,
+            "t axis length {} != N {}",
+            header.t_axis.len(),
+            header.n_total
+        );
+        Ok(Self { header, jobs: Vec::new(), ops: Vec::new() })
+    }
+
+    /// Declare a job; returns its id for [`Recorder::record_chunk`].
+    pub fn begin_job(
+        &mut self,
+        tag: impl Into<String>,
+        m: usize,
+        width: Option<usize>,
+        height: Option<usize>,
+    ) -> u32 {
+        self.jobs.push(JobDesc { tag: tag.into(), m, width, height });
+        (self.jobs.len() - 1) as u32
+    }
+
+    /// Record one staged chunk of `job`: raw padded data (NaNs intact)
+    /// covering pixels `[start, start + width)`.
+    pub fn record_chunk(
+        &mut self,
+        job: u32,
+        chunk: u32,
+        start: usize,
+        width: usize,
+        data: Vec<f32>,
+    ) -> Result<()> {
+        let h = &self.header;
+        ensure!((job as usize) < self.jobs.len(), "unknown job {job}");
+        ensure!(
+            data.len() == h.n_total * h.m_chunk,
+            "chunk payload has {} values, slot y holds {}",
+            data.len(),
+            h.n_total * h.m_chunk
+        );
+        let m = self.jobs[job as usize].m;
+        ensure!(
+            width >= 1 && width <= h.m_chunk && start + width <= m,
+            "chunk pixels [{start}, {}) invalid for m={m}, m_chunk={}",
+            start + width,
+            h.m_chunk
+        );
+        let (start, width) = (start as u32, width as u32);
+        self.ops.push(Op::StageGather { job, chunk, start, width, data });
+        if self.header.fill_missing {
+            self.ops.push(Op::FillColumns { job, chunk });
+        }
+        self.ops.push(Op::BatchedFit { job, chunk });
+        self.ops.push(Op::Mosum { job, chunk });
+        self.ops.push(Op::DetectBreaks { job, chunk });
+        self.ops.push(Op::Readback { job, chunk, start, width });
+        Ok(())
+    }
+
+    pub fn finish(self) -> CmdStream {
+        CmdStream { header: self.header, jobs: self.jobs, ops: self.ops }
+    }
+}
+
+/// One analysis to record into a (possibly multi-job) stream.
+pub struct RecordJob<'a> {
+    pub tag: String,
+    pub stack: &'a TimeStack,
+    pub params: &'a BfastParams,
+}
+
+/// Do two resolved parameter sets describe the same chunk contract?
+/// (Float fields compare by bits — replay equality is bitwise.)
+pub fn params_bits_eq(a: &BfastParams, b: &BfastParams) -> bool {
+    a.n_total == b.n_total
+        && a.n_hist == b.n_hist
+        && a.h == b.h
+        && a.k == b.k
+        && a.freq.to_bits() == b.freq.to_bits()
+        && a.alpha.to_bits() == b.alpha.to_bits()
+        && a.lambda.to_bits() == b.lambda.to_bits()
+}
+
+/// Record a command stream executing `jobs` through chunk width
+/// `m_chunk`. All jobs must share the chunk contract — identical
+/// resolved parameters (bitwise) and time axis — because the stream
+/// carries exactly one header; [`replay::ReplayExecutor::execute`]
+/// then runs them all on one prepared engine and returns one break
+/// map per job, in order.
+pub fn record_stream(
+    jobs: &[RecordJob<'_>],
+    m_chunk: usize,
+    fill_missing: bool,
+) -> Result<CmdStream> {
+    ensure!(!jobs.is_empty(), "record_stream: no jobs");
+    let first = &jobs[0];
+    ensure!(
+        first.stack.n_times() == first.params.n_total,
+        "stack has {} layers, params expect N={}",
+        first.stack.n_times(),
+        first.params.n_total
+    );
+    let header =
+        StreamHeader::from_params(first.params, &first.stack.time_axis, m_chunk, fill_missing);
+    let n_total = first.params.n_total;
+    let mut rec = Recorder::new(header)?;
+    for job in jobs {
+        ensure!(
+            params_bits_eq(job.params, first.params),
+            "job {:?} breaks the shared chunk contract (parameters differ)",
+            job.tag
+        );
+        let same_axis = job.stack.time_axis.len() == first.stack.time_axis.len()
+            && job
+                .stack
+                .time_axis
+                .iter()
+                .zip(&first.stack.time_axis)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        ensure!(
+            same_axis,
+            "job {:?} breaks the shared chunk contract (time axis differs)",
+            job.tag
+        );
+        let m = job.stack.n_pixels();
+        let jid = rec.begin_job(job.tag.clone(), m, job.stack.width, job.stack.height);
+        if m == 0 {
+            continue;
+        }
+        let plan = ChunkPlan::new(m, m_chunk);
+        for chunk in plan.iter() {
+            let mut buf = vec![0.0f32; n_total * m_chunk];
+            job.stack.copy_chunk_padded(chunk.start, chunk.end, chunk.padded, 0.0, &mut buf);
+            rec.record_chunk(jid, chunk.index as u32, chunk.start, chunk.width(), buf)?;
+        }
+    }
+    Ok(rec.finish())
+}
+
+/// Can two queued requests execute through one batched stream? True
+/// when both carry inline scenes over the identical time axis, no
+/// pixel-range restriction, the same gap-fill setting, and resolve to
+/// bitwise-equal parameters — i.e. they differ only in pixel values,
+/// which is exactly what the job table expresses. The serve scheduler
+/// uses this to drain several small jobs per prepared engine.
+pub fn batch_compatible(a: &AnalysisRequest, b: &AnalysisRequest) -> bool {
+    let (SceneSource::Inline(sa), SceneSource::Inline(sb)) = (&a.source, &b.source) else {
+        return false;
+    };
+    if a.chunking.pixel_range.is_some() || b.chunking.pixel_range.is_some() {
+        return false;
+    }
+    if a.chunking.fill_missing != b.chunking.fill_missing {
+        return false;
+    }
+    if sa.n_times() != sb.n_times()
+        || sa
+            .time_axis
+            .iter()
+            .zip(&sb.time_axis)
+            .any(|(x, y)| x.to_bits() != y.to_bits())
+    {
+        return false;
+    }
+    let (Ok(pa), Ok(pb)) = (a.params.resolve(sa.n_times()), b.params.resolve(sb.n_times())) else {
+        return false;
+    };
+    params_bits_eq(&pa, &pb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap()
+    }
+
+    fn scene(m: usize, seed: u64) -> TimeStack {
+        ArtificialDataset::new(params(), m, seed).generate().stack
+    }
+
+    #[test]
+    fn recorder_emits_the_canonical_op_sequence() {
+        let p = params();
+        let stack = scene(25, 1);
+        let stream = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            10,
+            true,
+        )
+        .unwrap();
+        assert_eq!(stream.jobs.len(), 1);
+        assert_eq!(stream.jobs[0].m, 25);
+        assert_eq!(stream.chunks_of(0), 3); // ceil(25 / 10)
+        // 6 ops per chunk with fill, in a fixed order
+        assert_eq!(stream.ops.len(), 3 * 6);
+        let names: Vec<&str> = stream.ops[..6].iter().map(|o| o.name()).collect();
+        assert_eq!(
+            names,
+            ["stage_gather", "fill_columns", "batched_fit", "mosum", "detect_breaks", "readback"]
+        );
+        // the last chunk is partial: width 5, padded payload
+        match &stream.ops[2 * 6] {
+            Op::StageGather { start, width, data, .. } => {
+                assert_eq!((*start, *width), (20, 5));
+                assert_eq!(data.len(), p.n_total * 10);
+            }
+            other => panic!("expected a gather, got {other:?}"),
+        }
+        assert!(stream.validate().is_ok());
+
+        // no fill op when the producer staged pre-filled data
+        let raw = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            10,
+            false,
+        )
+        .unwrap();
+        assert_eq!(raw.ops.len(), 3 * 5);
+        assert!(!raw.ops.iter().any(|o| matches!(o, Op::FillColumns { .. })));
+    }
+
+    #[test]
+    fn slot_table_matches_the_contract_shapes() {
+        let p = params();
+        let stack = scene(8, 2);
+        let stream = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            4,
+            true,
+        )
+        .unwrap();
+        let slots = stream.slot_table();
+        let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["y", "resid", "strip", "breaks", "first", "momax"]);
+        assert_eq!(slots[0].shape, vec![40, 4]);
+        assert_eq!(slots[2].shape, vec![16, 4]); // n_mon = 40 - 24
+        assert_eq!(slots[3].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_streams() {
+        let p = params();
+        let stack = scene(12, 3);
+        let ok = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            8,
+            true,
+        )
+        .unwrap();
+
+        // op addressing a job the table does not have
+        let mut bad = ok.clone();
+        bad.ops.push(Op::BatchedFit { job: 7, chunk: 0 });
+        assert!(bad.validate().unwrap_err().to_string().contains("job 7"));
+
+        // readback past the job's pixel count
+        let mut bad = ok.clone();
+        bad.ops.push(Op::Readback { job: 0, chunk: 0, start: 8, width: 8 });
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("exceed"), "{err}");
+
+        // short gather payload
+        let mut bad = ok.clone();
+        bad.ops.push(Op::StageGather { job: 0, chunk: 0, start: 0, width: 1, data: vec![0.0] });
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+
+        // truncated time axis
+        let mut bad = ok;
+        bad.header.t_axis.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn multi_job_streams_share_one_contract() {
+        let p = params();
+        let (a, b) = (scene(9, 4), scene(5, 5));
+        let stream = record_stream(
+            &[
+                RecordJob { tag: "a".into(), stack: &a, params: &p },
+                RecordJob { tag: "b".into(), stack: &b, params: &p },
+            ],
+            8,
+            true,
+        )
+        .unwrap();
+        assert_eq!(stream.jobs.len(), 2);
+        assert_eq!((stream.chunks_of(0), stream.chunks_of(1)), (2, 1));
+
+        // a job with different parameters is refused
+        let p2 = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 2.5).unwrap();
+        let err = record_stream(
+            &[
+                RecordJob { tag: "a".into(), stack: &a, params: &p },
+                RecordJob { tag: "b".into(), stack: &b, params: &p2 },
+            ],
+            8,
+            true,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("chunk contract"), "{err}");
+    }
+
+    #[test]
+    fn batch_compatibility_requires_an_identical_contract() {
+        use crate::api::ParamSpec;
+        let make = |m: usize, seed: u64| {
+            let mut req = AnalysisRequest::new(SceneSource::Inline(scene(m, seed)));
+            req.params = ParamSpec { n_hist: 24, h: 8, k: 1, freq: 12.0, ..Default::default() };
+            req
+        };
+        let a = make(6, 1);
+        assert!(batch_compatible(&a, &make(9, 2)), "pixel values may differ");
+        let mut other = make(6, 3);
+        other.params.h = 9;
+        assert!(!batch_compatible(&a, &other), "parameters must match");
+        let mut ranged = make(6, 4);
+        ranged.chunking.pixel_range = Some((0, 3));
+        assert!(!batch_compatible(&a, &ranged), "pixel ranges opt out");
+        let mut nofill = make(6, 5);
+        nofill.chunking.fill_missing = false;
+        assert!(!batch_compatible(&a, &nofill), "gap-fill setting must match");
+        let path = AnalysisRequest::new(SceneSource::Path("x.bsq".into()));
+        assert!(!batch_compatible(&a, &path), "path sources opt out");
+    }
+}

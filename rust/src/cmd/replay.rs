@@ -1,0 +1,506 @@
+//! Stream replay: parse a [`CmdStream`] and dispatch its ops to the
+//! fused CPU kernels.
+//!
+//! [`ReplayExecutor`] is the interpreter. It keeps a **translation
+//! cache** ([`ReplayState`], the analogue of the emulated backend's
+//! prepared-engine cache): the expensive design-side preparation —
+//! history design matrix, monitoring boundary, staging buffer — is
+//! built once per chunk contract (shape + f32 time axis + freq + λ,
+//! compared bitwise) and reused across every op, chunk, job, and
+//! stream that shares it. Op dispatch then calls the same per-phase
+//! entry points (`FusedCpuBfast::fit_residuals` / `mosum_strip` /
+//! `detect_from_strip`) that the fused engine's own `run` is built
+//! from, which is why replayed maps are bit-identical to a direct run.
+//!
+//! [`CmdBackend`] adapts record-then-replay to the coordinator's
+//! `ExecutorBackend` seam (`--engine cmd`): each staged chunk is
+//! recorded into a single-chunk stream and immediately replayed, so
+//! the whole coordinator pipeline — staging, queueing, readback —
+//! exercises the command-stream path end to end.
+
+use super::{CmdStream, Op, Recorder, StreamHeader};
+use crate::api::AnalysisResult;
+use crate::cpu::FusedCpuBfast;
+use crate::error::{bail, ensure, Context, Result};
+use crate::fill;
+use crate::metrics::PhaseTimes;
+use crate::params::BfastParams;
+use crate::raster::{BreakMap, TimeStack};
+use crate::runtime::{
+    ArtifactSpec, ChunkExecutor, ChunkOutput, Dtype, ExecutorBackend, TensorSpec,
+    PHASE_FUSED, PHASE_READBACK, PHASE_TRANSFER,
+};
+use crate::threadpool;
+use crate::trace;
+use std::time::Duration;
+
+/// Engine label stamped on results produced by offline replay.
+pub const REPLAY_ENGINE: &str = "cmdstream";
+
+/// Phase names for per-op time attribution during replay.
+pub const OP_STAGE: &str = "stage gather";
+pub const OP_FILL: &str = "fill columns";
+pub const OP_FIT: &str = "batched fit";
+pub const OP_MOSUM: &str = "mosum";
+pub const OP_DETECT: &str = "detect breaks";
+pub const OP_READBACK: &str = "readback";
+
+/// The prepared-kernel cache: everything derivable from the stream
+/// header, keyed on its exact f32 bits. Rebuilding only happens when
+/// a stream with a different chunk contract arrives.
+struct ReplayState {
+    shape: (usize, usize, usize, usize, usize),
+    t_bits: Vec<u32>,
+    freq_bits: u32,
+    lambda_bits: u32,
+    engine: FusedCpuBfast,
+    /// Reused staging buffer shaped (n_total, m_chunk) — slot `y`.
+    stage: TimeStack,
+}
+
+/// Interprets command streams against the fused CPU kernels (see the
+/// module docs). Reusable across streams; the translation cache
+/// persists as long as the chunk contract does.
+pub struct ReplayExecutor {
+    threads: usize,
+    state: Option<ReplayState>,
+}
+
+impl Default for ReplayExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplayExecutor {
+    pub fn new() -> Self {
+        Self { threads: threadpool::default_threads(), state: None }
+    }
+
+    /// Override the compute thread count (≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    fn ensure_state(&mut self, h: &StreamHeader) -> Result<()> {
+        let shape = (h.n_total, h.n_hist, h.h, h.k, h.m_chunk);
+        let fresh = match &self.state {
+            Some(st) => {
+                st.shape == shape
+                    && st.freq_bits == h.freq32.to_bits()
+                    && st.lambda_bits == h.lambda32.to_bits()
+                    && st.t_bits.len() == h.t_axis.len()
+                    && st.t_bits.iter().zip(&h.t_axis).all(|(b, t)| *b == t.to_bits())
+            }
+            None => false,
+        };
+        if fresh {
+            return Ok(());
+        }
+        let t64: Vec<f64> = h.t_axis.iter().map(|&v| v as f64).collect();
+        // Mirror the emulated backend exactly: the engine is built
+        // from the f32 chunk-contract values, upcast — and α only
+        // labels the analysis; the boundary is fully determined by
+        // the λ shipped in the header.
+        let params = BfastParams::with_lambda(
+            h.n_total,
+            h.n_hist,
+            h.h,
+            h.k,
+            h.freq32 as f64,
+            0.05,
+            h.lambda32 as f64,
+        )?;
+        let engine = FusedCpuBfast::new(params, &t64)?.with_threads(self.threads);
+        let stage = TimeStack::zeros(h.n_total, h.m_chunk)
+            .with_time_axis(t64)
+            .context("cmd replay: f32-rounded chunk time axis")?;
+        self.state = Some(ReplayState {
+            shape,
+            t_bits: h.t_axis.iter().map(|t| t.to_bits()).collect(),
+            freq_bits: h.freq32.to_bits(),
+            lambda_bits: h.lambda32.to_bits(),
+            engine,
+            stage,
+        });
+        Ok(())
+    }
+
+    /// Execute every op in order; returns one break map per job (in
+    /// job-table order). Ops execute under a trace span each, and
+    /// their time lands in `times` under the [`OP_STAGE`]-family
+    /// phase names. Out-of-sequence ops (a fit with nothing staged, a
+    /// readback with nothing detected) are hard errors.
+    pub fn execute(&mut self, stream: &CmdStream, times: &mut PhaseTimes) -> Result<Vec<BreakMap>> {
+        stream.validate()?;
+        self.ensure_state(&stream.header)?;
+        let h = &stream.header;
+        let (n_total, mc) = (h.n_total, h.m_chunk);
+        let mut maps: Vec<BreakMap> = stream.jobs.iter().map(|j| BreakMap::zeros(j.m)).collect();
+        let st = self.state.as_mut().expect("state built above");
+        let mut staged = false;
+        let mut resid: Option<Vec<f32>> = None;
+        let mut strip: Option<Vec<f32>> = None;
+        let mut out: Option<BreakMap> = None;
+        let parent = trace::current_handle();
+        for (i, op) in stream.ops.iter().enumerate() {
+            let _sp = trace::span_under(&parent, op.name())
+                .map(|s| s.with_attr("job", op.job()).with_attr("chunk", op.chunk()));
+            match op {
+                Op::StageGather { data, .. } => {
+                    times.time(OP_STAGE, || st.stage.data_mut().copy_from_slice(data));
+                    staged = true;
+                    resid = None;
+                    strip = None;
+                    out = None;
+                }
+                Op::FillColumns { .. } => {
+                    ensure!(staged, "op {i} (fill_columns) has no staged chunk");
+                    times.time(OP_FILL, || fill::fill_columns(st.stage.data_mut(), n_total, mc));
+                }
+                Op::BatchedFit { .. } => {
+                    ensure!(staged, "op {i} (batched_fit) has no staged chunk");
+                    resid = Some(times.time(OP_FIT, || st.engine.fit_residuals(&st.stage))?);
+                }
+                Op::Mosum { .. } => {
+                    let Some(r) = &resid else {
+                        bail!("op {i} (mosum) has no residuals: batched_fit must precede it");
+                    };
+                    strip = Some(times.time(OP_MOSUM, || st.engine.mosum_strip(r, mc))?);
+                }
+                Op::DetectBreaks { .. } => {
+                    let Some(s) = &strip else {
+                        bail!("op {i} (detect_breaks) has no strip: mosum must precede it");
+                    };
+                    out = Some(times.time(OP_DETECT, || st.engine.detect_from_strip(s, mc))?);
+                }
+                Op::Readback { job, start, width, .. } => {
+                    let Some(o) = &out else {
+                        bail!("op {i} (readback) has no outputs: detect_breaks must precede it");
+                    };
+                    let (a, w) = (*start as usize, *width as usize);
+                    let dst = &mut maps[*job as usize];
+                    times.time(OP_READBACK, || {
+                        dst.write_at(a, &o.breaks[..w], &o.first[..w], &o.momax[..w])
+                    });
+                }
+            }
+        }
+        Ok(maps)
+    }
+}
+
+/// Replay a stream offline and wrap each job's map in the v1 result
+/// envelope. The envelope is **deterministic** — zero wall time, no
+/// phase table, [`REPLAY_ENGINE`] labels — so re-executing the same
+/// `.bcmd` yields byte-identical result JSON (the CI replay-smoke job
+/// diffs exactly this against the recording run's envelope).
+pub fn replay_to_results(stream: &CmdStream) -> Result<Vec<AnalysisResult>> {
+    let params = stream.header.params()?;
+    let mut replay = ReplayExecutor::new();
+    let mut op_times = PhaseTimes::new();
+    let maps = replay.execute(stream, &mut op_times)?;
+    let mut out = Vec::with_capacity(maps.len());
+    for (ji, (job, map)) in stream.jobs.iter().zip(maps).enumerate() {
+        out.push(AnalysisResult {
+            map,
+            params: params.clone(),
+            phases: None,
+            chunks: stream.chunks_of(ji as u32),
+            artifact: REPLAY_ENGINE.to_string(),
+            engine: REPLAY_ENGINE.to_string(),
+            wall: Duration::ZERO,
+            width: job.width,
+            height: job.height,
+        });
+    }
+    Ok(out)
+}
+
+/// Record-then-replay as a first-class [`ExecutorBackend`]
+/// (`--engine cmd`): every chunk the coordinator stages is recorded
+/// into a single-chunk stream and replayed through the interpreter,
+/// so results flow through the exact op path an offline `.bcmd`
+/// replay uses.
+#[derive(Clone, Debug)]
+pub struct CmdBackend {
+    m_chunk: usize,
+    threads: usize,
+}
+
+impl Default for CmdBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CmdBackend {
+    pub fn new() -> Self {
+        Self {
+            m_chunk: crate::runtime::emulated::DEFAULT_M_CHUNK,
+            threads: threadpool::default_threads(),
+        }
+    }
+
+    /// Override the chunk width (≥ 1).
+    pub fn with_m_chunk(mut self, m_chunk: usize) -> Self {
+        self.m_chunk = m_chunk.max(1);
+        self
+    }
+
+    /// Override the compute thread count (≥ 1).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+impl ExecutorBackend for CmdBackend {
+    fn platform(&self) -> String {
+        format!("cmd replay ({} threads)", self.threads)
+    }
+
+    fn resolve(&self, artifact: Option<&str>, params: &BfastParams) -> Result<ArtifactSpec> {
+        let (n_total, n_hist, h, k) = (params.n_total, params.n_hist, params.h, params.k);
+        let mc = self.m_chunk;
+        let f32_spec = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+            dtype: Dtype::F32,
+        };
+        Ok(ArtifactSpec {
+            name: artifact.unwrap_or("cmdstream").to_string(),
+            phase: "cmd".to_string(),
+            path: std::path::PathBuf::new(),
+            n_total,
+            n_hist,
+            h,
+            k,
+            p: 2 + 2 * k,
+            m_chunk: mc,
+            use_pallas: false,
+            inputs: vec![
+                f32_spec("t", vec![n_total]),
+                f32_spec("f", vec![]),
+                f32_spec("y", vec![n_total, mc]),
+                f32_spec("lam", vec![]),
+            ],
+            outputs: vec![
+                TensorSpec { name: "breaks".into(), shape: vec![mc], dtype: Dtype::I32 },
+                TensorSpec { name: "first".into(), shape: vec![mc], dtype: Dtype::I32 },
+                f32_spec("momax", vec![mc]),
+            ],
+        })
+    }
+
+    fn load<'a>(
+        &'a self,
+        spec: &ArtifactSpec,
+        phased: bool,
+    ) -> Result<Box<dyn ChunkExecutor + 'a>> {
+        ensure!(spec.m_chunk >= 1, "m_chunk must be >= 1, got {}", spec.m_chunk);
+        Ok(Box::new(CmdChunkExecutor {
+            spec: spec.clone(),
+            phased,
+            replay: ReplayExecutor::new().with_threads(self.threads),
+        }))
+    }
+
+    /// Replay runs any chunk width — the stream carries its own.
+    fn flexible_chunk(&self) -> bool {
+        true
+    }
+}
+
+struct CmdChunkExecutor {
+    spec: ArtifactSpec,
+    phased: bool,
+    /// Persists across chunks: the translation cache makes every
+    /// chunk after the first replay against the already-prepared
+    /// engine.
+    replay: ReplayExecutor,
+}
+
+impl ChunkExecutor for CmdChunkExecutor {
+    fn run_chunk(
+        &mut self,
+        t_axis: &[f32],
+        freq: f32,
+        y: &[f32],
+        lambda: f32,
+        times: &mut PhaseTimes,
+    ) -> Result<ChunkOutput> {
+        let spec = &self.spec;
+        ensure!(
+            t_axis.len() == spec.n_total,
+            "t axis len {} != N {}",
+            t_axis.len(),
+            spec.n_total
+        );
+        ensure!(
+            y.len() == spec.n_total * spec.m_chunk,
+            "chunk len {} != N*m_chunk {}",
+            y.len(),
+            spec.n_total * spec.m_chunk
+        );
+        // Record the chunk as a single-chunk stream. The coordinator
+        // already gap-filled during staging, so no fill op is emitted
+        // (fill_missing = false in the header).
+        let stream = times.time(PHASE_TRANSFER, || -> Result<CmdStream> {
+            let header = StreamHeader {
+                n_total: spec.n_total,
+                n_hist: spec.n_hist,
+                h: spec.h,
+                k: spec.k,
+                freq: freq as f64,
+                alpha: 0.05,
+                lambda: lambda as f64,
+                m_chunk: spec.m_chunk,
+                fill_missing: false,
+                t_axis: t_axis.to_vec(),
+                freq32: freq,
+                lambda32: lambda,
+            };
+            let mut rec = Recorder::new(header)?;
+            let job = rec.begin_job("chunk", spec.m_chunk, None, None);
+            rec.record_chunk(job, 0, 0, spec.m_chunk, y.to_vec())?;
+            Ok(rec.finish())
+        })?;
+        let mut op_times = PhaseTimes::new();
+        let maps = if self.phased {
+            self.replay.execute(&stream, &mut op_times)?
+        } else {
+            times.time(PHASE_FUSED, || self.replay.execute(&stream, &mut op_times))?
+        };
+        if self.phased {
+            // Surface the per-op phase names instead of one fused
+            // bucket.
+            times.merge(&op_times);
+        }
+        let map = maps.into_iter().next().context("replay produced no job results")?;
+        times.time(PHASE_READBACK, || {
+            Ok(ChunkOutput { breaks: map.breaks, first: map.first, momax: map.momax })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{record_stream, RecordJob};
+    use super::*;
+    use crate::synth::ArtificialDataset;
+
+    fn params() -> BfastParams {
+        BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap()
+    }
+
+    fn scene(m: usize, seed: u64) -> TimeStack {
+        ArtificialDataset::new(params(), m, seed).generate().stack
+    }
+
+    fn direct_map(stack: &TimeStack) -> BreakMap {
+        let p = params();
+        let (map, _) = FusedCpuBfast::new(p, &stack.time_axis).unwrap().run(stack).unwrap();
+        map
+    }
+
+    #[test]
+    fn replayed_stream_matches_the_direct_run_bitwise() {
+        let p = params();
+        let stack = scene(150, 7);
+        let stream = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            64,
+            true,
+        )
+        .unwrap();
+        let mut times = PhaseTimes::new();
+        let maps = ReplayExecutor::new().execute(&stream, &mut times).unwrap();
+        let want = direct_map(&stack);
+        assert_eq!(maps.len(), 1);
+        assert_eq!(maps[0].breaks, want.breaks);
+        assert_eq!(maps[0].first, want.first);
+        let same = maps[0]
+            .momax
+            .iter()
+            .zip(&want.momax)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "momax must be bit-identical");
+        for ph in [OP_STAGE, OP_FILL, OP_FIT, OP_MOSUM, OP_DETECT, OP_READBACK] {
+            assert!(times.get(ph).is_some(), "missing op phase {ph}");
+        }
+    }
+
+    #[test]
+    fn multi_job_replay_keeps_per_job_results_independent() {
+        let p = params();
+        let (a, b) = (scene(33, 8), scene(50, 9));
+        let stream = record_stream(
+            &[
+                RecordJob { tag: "a".into(), stack: &a, params: &p },
+                RecordJob { tag: "b".into(), stack: &b, params: &p },
+            ],
+            16,
+            true,
+        )
+        .unwrap();
+        let mut times = PhaseTimes::new();
+        let maps = ReplayExecutor::new().execute(&stream, &mut times).unwrap();
+        assert_eq!(maps.len(), 2);
+        assert_eq!(maps[0].breaks, direct_map(&a).breaks);
+        assert_eq!(maps[1].breaks, direct_map(&b).breaks);
+    }
+
+    #[test]
+    fn out_of_sequence_ops_are_rejected() {
+        let p = params();
+        let stack = scene(10, 3);
+        let ok = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            10,
+            true,
+        )
+        .unwrap();
+        // a mosum with no preceding fit
+        let mut bad = ok.clone();
+        bad.ops = vec![bad.ops[0].clone(), Op::Mosum { job: 0, chunk: 0 }];
+        let err = ReplayExecutor::new()
+            .execute(&bad, &mut PhaseTimes::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batched_fit"), "{err}");
+        // a readback with no detection
+        let mut bad = ok;
+        bad.ops = vec![Op::Readback { job: 0, chunk: 0, start: 0, width: 1 }];
+        let err = ReplayExecutor::new()
+            .execute(&bad, &mut PhaseTimes::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("detect_breaks"), "{err}");
+    }
+
+    #[test]
+    fn deterministic_envelopes_from_offline_replay() {
+        let p = params();
+        let stack = scene(24, 5);
+        let stream = record_stream(
+            &[RecordJob { tag: "a".into(), stack: &stack, params: &p }],
+            16,
+            true,
+        )
+        .unwrap();
+        let res_a = replay_to_results(&stream).unwrap();
+        let res_b = replay_to_results(&stream).unwrap();
+        assert_eq!(res_a.len(), 1);
+        assert_eq!(res_a[0].engine, REPLAY_ENGINE);
+        assert_eq!(res_a[0].chunks, 2);
+        assert_eq!(res_a[0].wall, Duration::ZERO);
+        // byte-identical wire envelopes on re-execution
+        assert_eq!(
+            res_a[0].to_json().to_string_pretty(),
+            res_b[0].to_json().to_string_pretty()
+        );
+        assert_eq!(res_a[0].map.breaks, direct_map(&stack).breaks);
+    }
+}

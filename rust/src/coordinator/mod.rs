@@ -47,6 +47,29 @@ use std::time::Instant;
 /// Staging-side phase label (host work before the executor sees data).
 pub const PHASE_STAGING: &str = "staging (host)";
 
+/// A resolved artifact must carry exactly the analysis shape — a
+/// shape-specialised backend may return a spec for a different one.
+fn ensure_spec_shape(spec: &crate::runtime::ArtifactSpec, params: &BfastParams) -> Result<()> {
+    ensure!(
+        spec.n_total == params.n_total
+            && spec.n_hist == params.n_hist
+            && spec.h == params.h
+            && spec.k == params.k,
+        "artifact {} is shaped (N={}, n={}, h={}, k={}) but params are \
+         (N={}, n={}, h={}, k={})",
+        spec.name,
+        spec.n_total,
+        spec.n_hist,
+        spec.h,
+        spec.k,
+        params.n_total,
+        params.n_hist,
+        params.h,
+        params.k
+    );
+    Ok(())
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct RunnerConfig {
@@ -68,6 +91,11 @@ pub struct RunnerConfig {
     /// the backend resolves. Typically seeded from
     /// `bench::tune_m_chunk` measurements.
     pub m_chunk: Option<usize>,
+    /// Let [`BfastRunner::auto`] pick `m_chunk` with the bench
+    /// autotuner on its first run (ignored when [`RunnerConfig::m_chunk`]
+    /// pins a width, and only honoured by auto-built runners over
+    /// flexible backends — explicit constructors never tune).
+    pub autotune: bool,
 }
 
 impl Default for RunnerConfig {
@@ -79,6 +107,7 @@ impl Default for RunnerConfig {
             phased: false,
             fill_missing: true,
             m_chunk: None,
+            autotune: true,
         }
     }
 }
@@ -118,6 +147,13 @@ impl RunResult {
 /// Every analysis entry point takes `&self`.
 pub struct BfastRunner<B: ?Sized + ExecutorBackend = dyn ExecutorBackend> {
     pub cfg: RunnerConfig,
+    /// First-run autotuner verdict (`None` inside = tuning ran and
+    /// declined/failed); `OnceLock` so concurrent first runs through
+    /// a shared runner tune exactly once.
+    tuned: std::sync::OnceLock<Option<usize>>,
+    /// Set only by [`BfastRunner::auto`] (from [`RunnerConfig::autotune`]):
+    /// explicitly constructed runners never self-tune.
+    autotune_armed: bool,
     backend: Box<B>,
 }
 
@@ -130,6 +166,14 @@ impl BfastRunner {
     /// Pure-rust emulated backend (the default build's device).
     pub fn emulated(cfg: RunnerConfig) -> Result<Self> {
         Self::new(Box::new(EmulatedDevice::new()), cfg)
+    }
+
+    /// Command-stream backend (`--engine cmd`): every chunk is
+    /// recorded into a single-chunk [`crate::cmd::CmdStream`] and
+    /// replayed through the op interpreter — bit-identical to the
+    /// fused CPU path, exercised end to end.
+    pub fn cmdstream(cfg: RunnerConfig) -> Result<Self> {
+        Self::new(Box::new(crate::cmd::CmdBackend::new()), cfg)
     }
 
     /// Open the PJRT runtime from an artifact directory
@@ -161,7 +205,9 @@ impl BfastRunner {
             }
         }
         let _ = &dir;
-        Self::emulated(cfg)
+        let mut r = Self::emulated(cfg)?;
+        r.autotune_armed = r.cfg.autotune;
+        Ok(r)
     }
 }
 
@@ -178,7 +224,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
     pub fn new(backend: Box<B>, cfg: RunnerConfig) -> Result<Self> {
         ensure!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
         ensure!(cfg.staging_threads >= 1, "staging_threads must be >= 1");
-        Ok(Self { backend, cfg })
+        Ok(Self { backend, cfg, tuned: std::sync::OnceLock::new(), autotune_armed: false })
     }
 
     /// The backend in use.
@@ -192,20 +238,62 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
     }
 
     /// Apply [`RunnerConfig::m_chunk`] to a resolved spec, if set.
-    /// Fails when the backend runs shape-specialised artifacts (its
-    /// chunk width is baked into the compiled executable).
+    /// Fails with a **typed validation error** ([`crate::api::invalid`],
+    /// detectable via [`crate::api::is_invalid`], a 400 at the serving
+    /// layer) when the width is zero or the backend runs
+    /// shape-specialised artifacts (its chunk width is baked into the
+    /// compiled executable) — the override is never silently padded
+    /// or dropped.
     fn apply_chunk_override(&self, spec: &mut crate::runtime::ArtifactSpec) -> Result<()> {
         if let Some(mc) = self.cfg.m_chunk {
-            ensure!(mc >= 1, "m_chunk override must be >= 1");
-            ensure!(
-                self.backend.flexible_chunk(),
-                "backend {} runs shape-specialised artifacts; its m_chunk cannot be \
-                 overridden",
-                self.backend.platform()
-            );
+            if mc < 1 {
+                return Err(crate::api::invalid("m_chunk override must be >= 1"));
+            }
+            if !self.backend.flexible_chunk() {
+                return Err(crate::api::invalid(format!(
+                    "backend {} runs shape-specialised artifacts; its m_chunk cannot be \
+                     overridden",
+                    self.backend.platform()
+                )));
+            }
             spec.m_chunk = mc;
         }
         Ok(())
+    }
+
+    /// First-run chunk-width autotune (see [`RunnerConfig::autotune`]).
+    /// Failure is never fatal: a tuning error logs a warning and the
+    /// backend-resolved width stands.
+    fn autotuned_chunk(&self, params: &BfastParams, m: usize) -> Option<usize> {
+        *self.tuned.get_or_init(|| {
+            let tune_m = m.min(4096);
+            let cands: Vec<usize> = crate::bench::TUNE_CANDIDATES
+                .iter()
+                .copied()
+                .filter(|&c| c < m && c <= tune_m)
+                .collect();
+            if cands.len() < 2 {
+                return None; // nothing to choose between
+            }
+            match crate::bench::tune_m_chunk(params, tune_m, &cands, 1) {
+                Ok((best, _)) => Some(best),
+                Err(e) => {
+                    crate::trace::log!(
+                        Warn,
+                        "coordinator",
+                        "autotune_failed",
+                        "error" => format!("{e:#}"),
+                    );
+                    None
+                }
+            }
+        })
+    }
+
+    /// The chunk width the first-run autotuner settled on, if it ran
+    /// and picked one.
+    pub fn tuned_m_chunk(&self) -> Option<usize> {
+        self.tuned.get().copied().flatten()
     }
 
     /// Analyse a scene. Streams chunks through the staging → executor
@@ -245,24 +333,16 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
             .backend
             .resolve(self.cfg.artifact.as_deref(), params)?;
         let name = spec.name.clone();
-        ensure!(
-            spec.n_total == params.n_total
-                && spec.n_hist == params.n_hist
-                && spec.h == params.h
-                && spec.k == params.k,
-            "artifact {name} is shaped (N={}, n={}, h={}, k={}) but params are \
-             (N={}, n={}, h={}, k={})",
-            spec.n_total,
-            spec.n_hist,
-            spec.h,
-            spec.k,
-            params.n_total,
-            params.n_hist,
-            params.h,
-            params.k
-        );
+        ensure_spec_shape(&spec, params)?;
         self.apply_chunk_override(&mut spec)?;
         let m = stack.n_pixels();
+        let want_tune =
+            self.cfg.m_chunk.is_none() && self.autotune_armed && self.backend.flexible_chunk();
+        if want_tune {
+            if let Some(mc) = self.autotuned_chunk(params, m) {
+                spec.m_chunk = mc;
+            }
+        }
         let plan = ChunkPlan::new(m, spec.m_chunk);
         let t_axis: Vec<f32> = stack.time_axis.iter().map(|&v| v as f32).collect();
         let freq = params.freq as f32;
@@ -411,6 +491,93 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
         })
     }
 
+    /// Record the chunk contract for one scene into a replayable
+    /// [`crate::cmd::CmdStream`] instead of executing it. The stream
+    /// captures exactly what [`BfastRunner::run`] would feed the
+    /// executor — the same resolved chunk plan and the same staged
+    /// (raw, pre-fill) bytes, with gap-fill carried as its own op —
+    /// so replaying it is bit-identical to the direct run. Recording
+    /// never consults the autotuner: a captured stream must mean the
+    /// same thing on every machine that replays it.
+    pub fn record(
+        &self,
+        stack: &TimeStack,
+        params: &BfastParams,
+        tag: &str,
+    ) -> Result<crate::cmd::CmdStream> {
+        self.record_jobs(&[crate::cmd::RecordJob { tag: tag.to_string(), stack, params }])
+    }
+
+    /// [`BfastRunner::record`] over several jobs sharing one chunk
+    /// contract (see [`crate::cmd::record_stream`]) — the serve
+    /// scheduler's batching path records compatible queued requests
+    /// into one stream through this.
+    pub fn record_jobs(&self, jobs: &[crate::cmd::RecordJob<'_>]) -> Result<crate::cmd::CmdStream> {
+        let first = jobs.first().context("record_jobs: no jobs")?;
+        first.params.validate()?;
+        ensure!(
+            first.stack.n_times() == first.params.n_total,
+            "stack has {} layers, params expect N={}",
+            first.stack.n_times(),
+            first.params.n_total
+        );
+        let mut spec = self.backend.resolve(self.cfg.artifact.as_deref(), first.params)?;
+        ensure_spec_shape(&spec, first.params)?;
+        self.apply_chunk_override(&mut spec)?;
+        crate::cmd::record_stream(jobs, spec.m_chunk, self.cfg.fill_missing)
+    }
+
+    /// Record a scene and immediately replay the stream: returns both
+    /// the reusable [`crate::cmd::CmdStream`] (encode it to `.bcmd`)
+    /// and a [`RunResult`] bit-identical to [`BfastRunner::run`].
+    pub fn record_run(
+        &self,
+        stack: &TimeStack,
+        params: &BfastParams,
+        tag: &str,
+    ) -> Result<(crate::cmd::CmdStream, RunResult)> {
+        let t0 = Instant::now();
+        let stream = self.record(stack, params, tag)?;
+        let mut phases = PhaseTimes::new();
+        let maps = crate::cmd::ReplayExecutor::new().execute(&stream, &mut phases)?;
+        let map = maps.into_iter().next().context("replay produced no job results")?;
+        let chunks = stream.chunks_of(0);
+        let res = RunResult {
+            map,
+            phases,
+            chunks,
+            artifact: crate::cmd::REPLAY_ENGINE.to_string(),
+            wall: t0.elapsed(),
+        };
+        Ok((stream, res))
+    }
+
+    /// Execute several compatible jobs through **one** recorded stream
+    /// on one prepared engine — the batching path behind the serve
+    /// scheduler. Returns one [`RunResult`] per job, in order, each
+    /// bit-identical to running that job alone (pinned by
+    /// `tests/cmdstream.rs`). Phase times and wall time are
+    /// stream-wide (the work was genuinely shared) and repeat in every
+    /// result.
+    pub fn run_recorded(&self, jobs: &[crate::cmd::RecordJob<'_>]) -> Result<Vec<RunResult>> {
+        let t0 = Instant::now();
+        let stream = self.record_jobs(jobs)?;
+        let mut phases = PhaseTimes::new();
+        let maps = crate::cmd::ReplayExecutor::new().execute(&stream, &mut phases)?;
+        let wall = t0.elapsed();
+        Ok(maps
+            .into_iter()
+            .enumerate()
+            .map(|(ji, map)| RunResult {
+                map,
+                phases: phases.clone(),
+                chunks: stream.chunks_of(ji as u32),
+                artifact: crate::cmd::REPLAY_ENGINE.to_string(),
+                wall,
+            })
+            .collect())
+    }
+
     /// Open an incremental [`MonitorSession`] over an initial archive:
     /// the staged history pass runs once, sharded with the same chunk
     /// plan this runner's backend resolves for the analysis shape, and
@@ -424,23 +591,7 @@ impl<B: ?Sized + ExecutorBackend> BfastRunner<B> {
         params: &BfastParams,
     ) -> Result<crate::monitor::MonitorSession> {
         let mut spec = self.backend.resolve(self.cfg.artifact.as_deref(), params)?;
-        ensure!(
-            spec.n_total == params.n_total
-                && spec.n_hist == params.n_hist
-                && spec.h == params.h
-                && spec.k == params.k,
-            "artifact {} is shaped (N={}, n={}, h={}, k={}) but params are \
-             (N={}, n={}, h={}, k={})",
-            spec.name,
-            spec.n_total,
-            spec.n_hist,
-            spec.h,
-            spec.k,
-            params.n_total,
-            params.n_hist,
-            params.h,
-            params.k
-        );
+        ensure_spec_shape(&spec, params)?;
         self.apply_chunk_override(&mut spec)?;
         let cfg = crate::monitor::MonitorConfig {
             m_chunk: spec.m_chunk,
@@ -605,5 +756,106 @@ mod tests {
         })
         .unwrap();
         assert!(bad.run(&data.stack, &params).is_err(), "m_chunk=0 must be rejected");
+    }
+
+    #[test]
+    fn m_chunk_override_errors_are_typed_invalid() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 20, 1).generate();
+        let runner = BfastRunner::new(
+            Box::new(FailingBackend),
+            RunnerConfig { m_chunk: Some(16), ..Default::default() },
+        )
+        .unwrap();
+        let err = runner.run(&data.stack, &params).unwrap_err();
+        assert!(crate::api::is_invalid(&err), "shape-specialised rejection is typed: {err:#}");
+        let bad = BfastRunner::emulated(RunnerConfig {
+            m_chunk: Some(0),
+            ..Default::default()
+        })
+        .unwrap();
+        let err = bad.run(&data.stack, &params).unwrap_err();
+        assert!(crate::api::is_invalid(&err), "m_chunk=0 rejection is typed: {err:#}");
+    }
+
+    #[test]
+    fn autotuned_auto_runner_stays_bit_identical_to_untuned() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 600, 11).generate();
+        let plain = BfastRunner::auto(
+            "/nonexistent/artifacts",
+            RunnerConfig { autotune: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!plain.cfg.autotune);
+        let want = plain.run(&data.stack, &params).unwrap();
+        assert!(plain.tuned_m_chunk().is_none(), "opted-out runner must not tune");
+
+        let tuned = BfastRunner::auto("/nonexistent/artifacts", RunnerConfig::default()).unwrap();
+        let got = tuned.run(&data.stack, &params).unwrap();
+        let pick = tuned.tuned_m_chunk();
+        assert!(pick.is_some(), "600 px admits two candidates, tuning must pick one");
+        assert!(crate::bench::TUNE_CANDIDATES.contains(&pick.unwrap()));
+        assert_eq!(got.map.breaks, want.map.breaks);
+        assert_eq!(got.map.first, want.map.first);
+        let same = got
+            .map
+            .momax
+            .iter()
+            .zip(&want.map.momax)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "the tuned chunk width must not change the arithmetic");
+    }
+
+    #[test]
+    fn record_run_matches_the_streamed_run() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let data = crate::synth::ArtificialDataset::new(params.clone(), 150, 5).generate();
+        let runner = BfastRunner::emulated(RunnerConfig {
+            m_chunk: Some(64),
+            ..Default::default()
+        })
+        .unwrap();
+        let want = runner.run(&data.stack, &params).unwrap();
+        let (stream, res) = runner.record_run(&data.stack, &params, "scene").unwrap();
+        assert_eq!(stream.jobs.len(), 1);
+        assert_eq!(stream.header.m_chunk, 64, "override drives the recorded plan");
+        assert_eq!(res.chunks, want.chunks);
+        assert_eq!(res.artifact, crate::cmd::REPLAY_ENGINE);
+        assert_eq!(res.map.breaks, want.map.breaks);
+        assert_eq!(res.map.first, want.map.first);
+        let same = res
+            .map
+            .momax
+            .iter()
+            .zip(&want.map.momax)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "recorded replay must be bit-identical to the streamed run");
+    }
+
+    #[test]
+    fn run_recorded_batches_jobs_without_changing_their_results() {
+        let params = BfastParams::with_lambda(40, 24, 8, 1, 12.0, 0.05, 3.0).unwrap();
+        let a = crate::synth::ArtificialDataset::new(params.clone(), 40, 6).generate();
+        let b = crate::synth::ArtificialDataset::new(params.clone(), 25, 7).generate();
+        let runner = BfastRunner::emulated(RunnerConfig {
+            m_chunk: Some(16),
+            ..Default::default()
+        })
+        .unwrap();
+        let res = runner
+            .run_recorded(&[
+                crate::cmd::RecordJob { tag: "a".into(), stack: &a.stack, params: &params },
+                crate::cmd::RecordJob { tag: "b".into(), stack: &b.stack, params: &params },
+            ])
+            .unwrap();
+        assert_eq!(res.len(), 2);
+        assert_eq!((res[0].chunks, res[1].chunks), (3, 2));
+        let solo_a = runner.run(&a.stack, &params).unwrap();
+        let solo_b = runner.run(&b.stack, &params).unwrap();
+        assert_eq!(res[0].map.breaks, solo_a.map.breaks);
+        assert_eq!(res[1].map.breaks, solo_b.map.breaks);
+        assert_eq!(res[0].map.first, solo_a.map.first);
+        assert_eq!(res[1].map.first, solo_b.map.first);
     }
 }

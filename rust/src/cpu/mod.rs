@@ -130,7 +130,7 @@ impl FusedCpuBfast {
             stack.n_times(),
             p.n_total
         );
-        let (n_total, n_hist, preg) = (p.n_total, p.n_hist, p.p());
+        let (n_total, n_hist) = (p.n_total, p.n_hist);
         let m = stack.n_pixels();
         let mut times = PhaseTimes::new();
         if m == 0 {
@@ -138,39 +138,9 @@ impl FusedCpuBfast {
         }
         let y = stack.data();
 
-        // 1. create model: beta (p × m) = M (p × n) · Y[:n] (n × m)
-        let mut beta = vec![0.0f32; preg * m];
-        times.time(PHASE_MODEL, || {
-            linalg::par_sgemm(
-                self.threads,
-                preg,
-                n_hist,
-                m,
-                &self.m_f32,
-                &y[..n_hist * m],
-                &mut beta,
-            );
-        });
-
-        // 2. predictions: yhat (N × m) = Xᵀ (N × p) · beta (p × m)
-        let mut yhat = vec![0.0f32; n_total * m];
-        times.time(PHASE_PREDICT, || {
-            linalg::par_sgemm(self.threads, n_total, preg, m, &self.xt_f32, &beta, &mut yhat);
-        });
-        // past this point β̂ is only needed for the emitted state
-        let beta = want_state.then_some(beta);
-
-        // 3. residuals: R = Y − Ŷ (reuse the yhat buffer)
-        let mut resid = yhat;
-        times.time(PHASE_RESID, || {
-            let view = SyncSlice::new(&mut resid);
-            threadpool::parallel_ranges(n_total * m, 1 << 16, self.threads, |s, e| {
-                let part = unsafe { view.slice_mut(s, e) };
-                for (r, &yv) in part.iter_mut().zip(&y[s..e]) {
-                    *r = yv - *r;
-                }
-            });
-        });
+        // 1–3. fit + predict + residuals (shared with the standalone
+        // per-phase entry point, so the two can never drift)
+        let (beta, resid) = self.fit_residuals_inner(y, m, &mut times, want_state);
 
         // 4+5. MOSUMs + detect, fused: every pixel block computes its
         // rolling statistics into a block-local strip (n_mon × w) and
@@ -307,6 +277,193 @@ impl FusedCpuBfast {
         });
         Ok((map, times, state))
     }
+
+    /// Phases 1–3, shared verbatim by [`FusedCpuBfast::run`] and the
+    /// standalone [`FusedCpuBfast::fit_residuals`]: one code path, so
+    /// the fused engine and the command-stream replayer cannot drift.
+    fn fit_residuals_inner(
+        &self,
+        y: &[f32],
+        m: usize,
+        times: &mut PhaseTimes,
+        keep_beta: bool,
+    ) -> (Option<Vec<f32>>, Vec<f32>) {
+        if m == 0 {
+            return (keep_beta.then(Vec::new), Vec::new());
+        }
+        let p = &self.params;
+        let (n_total, n_hist, preg) = (p.n_total, p.n_hist, p.p());
+
+        // 1. create model: beta (p × m) = M (p × n) · Y[:n] (n × m)
+        let mut beta = vec![0.0f32; preg * m];
+        times.time(PHASE_MODEL, || {
+            linalg::par_sgemm(
+                self.threads,
+                preg,
+                n_hist,
+                m,
+                &self.m_f32,
+                &y[..n_hist * m],
+                &mut beta,
+            );
+        });
+
+        // 2. predictions: yhat (N × m) = Xᵀ (N × p) · beta (p × m)
+        let mut yhat = vec![0.0f32; n_total * m];
+        times.time(PHASE_PREDICT, || {
+            linalg::par_sgemm(self.threads, n_total, preg, m, &self.xt_f32, &beta, &mut yhat);
+        });
+        // past this point β̂ is only needed for the emitted state
+        let beta = keep_beta.then_some(beta);
+
+        // 3. residuals: R = Y − Ŷ (reuse the yhat buffer)
+        let mut resid = yhat;
+        times.time(PHASE_RESID, || {
+            let view = SyncSlice::new(&mut resid);
+            threadpool::parallel_ranges(n_total * m, 1 << 16, self.threads, |s, e| {
+                let part = unsafe { view.slice_mut(s, e) };
+                for (r, &yv) in part.iter_mut().zip(&y[s..e]) {
+                    *r = yv - *r;
+                }
+            });
+        });
+        (beta, resid)
+    }
+
+    /// Phases 1–3 as one standalone call: history fit, predictions and
+    /// the residual matrix `R = Y − Ŷ` (N × m, time-major like the
+    /// stack). This is the `BatchedFit` dispatch target of the command
+    /// stream replayer ([`crate::cmd`]); it runs the *same* code path
+    /// as [`FusedCpuBfast::run`]'s first three phases, so the residuals
+    /// are bit-identical by construction.
+    pub fn fit_residuals(&self, stack: &TimeStack) -> Result<Vec<f32>> {
+        let p = &self.params;
+        ensure!(
+            stack.n_times() == p.n_total,
+            "stack has {} layers, params expect N={}",
+            stack.n_times(),
+            p.n_total
+        );
+        let mut times = PhaseTimes::new();
+        let (_, resid) =
+            self.fit_residuals_inner(stack.data(), stack.n_pixels(), &mut times, false);
+        Ok(resid)
+    }
+
+    /// Phase 4 alone: the full normalised MOSUM strip (n_mon × m,
+    /// time-major) over residuals from
+    /// [`fit_residuals`](FusedCpuBfast::fit_residuals) — the `Mosum`
+    /// dispatch target of the command stream replayer. The fused pass
+    /// computes these values block-locally without materialising the
+    /// scene-wide strip; per-element arithmetic here is the same
+    /// expressions in the same order, so every strip value (and
+    /// everything derived from it) is bit-identical to the fused run.
+    pub fn mosum_strip(&self, resid: &[f32], m: usize) -> Result<Vec<f32>> {
+        let p = &self.params;
+        ensure!(
+            resid.len() == p.n_total * m,
+            "residual matrix has {} values, expected N*m = {}",
+            resid.len(),
+            p.n_total * m
+        );
+        let n_mon = p.n_monitor();
+        let mut strip = vec![0.0f32; n_mon * m];
+        if m == 0 {
+            return Ok(strip);
+        }
+        let (n_hist, h, dof) = (p.n_hist, p.h, p.dof() as f64);
+        let view = SyncSlice::new(&mut strip);
+        threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
+            let w = e - s;
+            let mut sigma = vec![0.0f64; w];
+            let mut acc = vec![0.0f64; w];
+            // sigma from history rows
+            for t in 0..n_hist {
+                let row = &resid[t * m + s..t * m + e];
+                for (sg, &r) in sigma.iter_mut().zip(row) {
+                    *sg += (r as f64) * (r as f64);
+                }
+            }
+            let sqrt_n = (n_hist as f64).sqrt();
+            for sg in sigma.iter_mut() {
+                *sg = (*sg / dof).sqrt() * sqrt_n; // denominator σ̂√n
+            }
+            // initial window: rows n-h .. n-1 end at t = n+1 (row n)
+            for t in n_hist + 1 - h..=n_hist {
+                let row = &resid[t * m + s..t * m + e];
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += r as f64;
+                }
+            }
+            {
+                let row0 = unsafe { view.slice_mut(s, e) };
+                for ((o, &a), &sg) in row0.iter_mut().zip(&acc).zip(&sigma) {
+                    *o = (a / sg) as f32;
+                }
+            }
+            // rolling update, identical expressions to the fused pass
+            for ti in 1..n_mon {
+                let add = &resid[(n_hist + ti) * m + s..(n_hist + ti) * m + e];
+                let sub = &resid[(n_hist + ti - h) * m + s..(n_hist + ti - h) * m + e];
+                let out = unsafe { view.slice_mut(ti * m + s, ti * m + e) };
+                for ((((o, a), &ad), &su), &sg) in
+                    out.iter_mut().zip(acc.iter_mut()).zip(add).zip(sub).zip(&sigma)
+                {
+                    *a += ad as f64 - su as f64;
+                    *o = (*a / sg) as f32;
+                }
+            }
+        });
+        Ok(strip)
+    }
+
+    /// Phase 5 alone: scan a [`mosum_strip`](FusedCpuBfast::mosum_strip)
+    /// against the monitoring boundary — the `DetectBreaks` dispatch
+    /// target of the command stream replayer. Same comparisons in the
+    /// same order as the fused pass.
+    pub fn detect_from_strip(&self, strip: &[f32], m: usize) -> Result<BreakMap> {
+        let p = &self.params;
+        let n_mon = p.n_monitor();
+        ensure!(
+            strip.len() == n_mon * m,
+            "MOSUM strip has {} values, expected n_mon*m = {}",
+            strip.len(),
+            n_mon * m
+        );
+        let mut map = BreakMap::zeros(m);
+        if m == 0 {
+            return Ok(map);
+        }
+        let vb = SyncSlice::new(&mut map.breaks);
+        let vf = SyncSlice::new(&mut map.first);
+        let vm = SyncSlice::new(&mut map.momax);
+        threadpool::parallel_ranges(m, BLOCK, self.threads, |s, e| {
+            let w = e - s;
+            let mut momax = vec![0.0f32; w];
+            let mut first = vec![-1i32; w];
+            for ti in 0..n_mon {
+                let b = self.bound[ti] as f32;
+                let row = &strip[ti * m + s..ti * m + e];
+                for (j, &v) in row.iter().enumerate() {
+                    let a = v.abs();
+                    if a > momax[j] {
+                        momax[j] = a;
+                    }
+                    if first[j] < 0 && a > b {
+                        first[j] = ti as i32;
+                    }
+                }
+            }
+            for j in 0..w {
+                unsafe {
+                    vb.write(s + j, (first[j] >= 0) as i32);
+                    vf.write(s + j, first[j]);
+                    vm.write(s + j, momax[j]);
+                }
+            }
+        });
+        Ok(map)
+    }
 }
 
 #[cfg(test)]
@@ -379,6 +536,32 @@ mod tests {
             let last_mo = ((st.acc[px] / st.sigma_denom[px]) as f32).abs();
             assert!(last_mo <= map.momax[px], "px {px}: {last_mo} > {}", map.momax[px]);
         }
+    }
+
+    #[test]
+    fn per_phase_split_matches_the_fused_run_bitwise() {
+        let p = params();
+        let data = ArtificialDataset::new(p.clone(), 700, 12).generate();
+        let mut stack = data.stack;
+        // gaps and one all-NaN pixel: both paths see identical values
+        stack.data_mut()[17] = f32::NAN;
+        stack.data_mut()[700 + 3] = f32::NAN;
+        let m = stack.n_pixels();
+        for t in 0..p.n_total {
+            stack.data_mut()[t * m + 5] = f32::NAN;
+        }
+        let eng = FusedCpuBfast::new(p.clone(), &stack.time_axis).unwrap();
+        let (fused, _) = eng.run(&stack).unwrap();
+        let resid = eng.fit_residuals(&stack).unwrap();
+        let strip = eng.mosum_strip(&resid, m).unwrap();
+        let map = eng.detect_from_strip(&strip, m).unwrap();
+        assert_eq!(map.breaks, fused.breaks);
+        assert_eq!(map.first, fused.first);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&map.momax), bits(&fused.momax));
+        // shape errors are rejected, not padded
+        assert!(eng.mosum_strip(&resid[1..], m).is_err());
+        assert!(eng.detect_from_strip(&strip[1..], m).is_err());
     }
 
     #[test]

@@ -1033,6 +1033,7 @@ fn route(req: &Request, state: &Arc<GatewayState>) -> Response {
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
         ("GET", ["v1", "runs", id, "result"]) => run_result(req, id, state),
         ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
+        ("GET", ["v1", "runs", id, "cmdstream"]) => run_cmdstream(id, state),
         ("GET", ["v1", "cache"]) => cache_stats(state),
         ("DELETE", ["v1", "cache"]) => cache_clear(state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
@@ -1677,6 +1678,28 @@ fn cache_clear(state: &GatewayState) -> Response {
 /// Far above any real recorder's id count (rings cap at tens of
 /// thousands of spans).
 const SPAN_ID_STRIDE: u64 = 1_000_000;
+
+/// `GET /v1/runs/{id}/cmdstream` — not servable at the gateway: a
+/// fanned-out run executes as N per-worker shard jobs, so there is no
+/// single recorded stream describing it. Answers 409 for known jobs
+/// (pointing at the worker-level endpoint) and 404 otherwise.
+fn run_cmdstream(id_seg: &str, state: &GatewayState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    if !state.jobs.lock().unwrap().map.contains_key(&id) {
+        return Response::json_error(404, &format!("no job {id}"));
+    }
+    Response::json_error(
+        409,
+        &format!(
+            "job {id} was fanned out across workers and has no single recorded \
+             command stream; submit to one worker with outputs.record (or \
+             ?record=1) and fetch its /v1/runs/{{id}}/cmdstream"
+        ),
+    )
+}
 
 /// `GET /v1/runs/{id}/trace` — one Chrome trace for the whole
 /// distributed run: the gateway's own span tree (pid 1) merged with

@@ -57,6 +57,16 @@
 //!   ([`serve::registry`]), sharing one runner across its worker
 //!   threads. Break maps served over the wire are bit-identical to
 //!   direct runs (`tests/serve.rs`, `tests/api.rs`).
+//! * **Command streams ([`cmd`])** — the chunk contract as data:
+//!   [`cmd::Recorder`] captures the per-chunk op sequence (gather →
+//!   fill → batched fit → MOSUM → detect → readback) into a versioned
+//!   [`cmd::CmdStream`] with a canonical binary form (`.bcmd`, plus a
+//!   JSON dump), and [`cmd::ReplayExecutor`] re-executes it through a
+//!   translation cache **bit-identically** to the fused CPU engine —
+//!   `bfast run --record`, `bfast replay`, `--engine cmd`, and
+//!   `GET /v1/runs/{id}/cmdstream` on serve. Multi-job streams are the
+//!   scheduler's batching seam: compatible queued requests execute
+//!   through one stream on one prepared engine (`tests/cmdstream.rs`).
 //! * **L3 ([`coordinator`])** — the streaming coordinator:
 //!   scene source → gap-fill → chunking → staged transfer → executor →
 //!   break-map assembly, plus all CPU baselines ([`pixel`], [`cpu`])
@@ -64,7 +74,7 @@
 //!   subsystem that keeps per-pixel rolling state between satellite
 //!   revisits instead of recomputing whole scenes.
 //! * **Backends** ([`runtime`]) — the chunk contract is the
-//!   [`runtime::ExecutorBackend`] trait. Two implementations:
+//!   [`runtime::ExecutorBackend`] trait. Implementations:
 //!   - [`runtime::EmulatedDevice`] (**default**): a pure-rust device
 //!     emulator executing the batched BFAST pipeline (history OLS fit
 //!     → predictions → MOSUM → break scan) on the [`threadpool`] +
@@ -184,6 +194,7 @@ pub mod b64;
 pub mod bench;
 pub mod bench_support;
 pub mod cli;
+pub mod cmd;
 pub mod coordinator;
 pub mod cpu;
 pub mod design;

@@ -34,7 +34,10 @@ USAGE: bfast <command> [flags]   (bfast <command> --help for details)
 COMMANDS:
   info          show executor backend + artifact manifest
   generate      write a synthetic .bsq stack (artificial or chile)
-  run           analyse a .bsq stack (engine: device|emulated|cpu|direct|naive)
+  run           analyse a .bsq stack (engine: device|emulated|cmd|cpu|direct|naive);
+                --record FILE.bcmd captures the run as a command stream
+  replay        re-execute a recorded .bcmd command stream bit-identically,
+                or dump it as JSON (--dump)
   monitor       incremental session: one-time history pass, then ingest
                 new layers (.bsq/.pgm) with no refit (--state dir/)
   serve         break-detection service: HTTP API, bounded job queue,
@@ -61,6 +64,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "info" => cmd_info(rest),
         "generate" => cmd_generate(rest),
         "run" => cmd_run(rest),
+        "replay" => cmd_replay(rest),
         "monitor" => cmd_monitor(rest),
         "serve" => cmd_serve(rest),
         "shard" => cmd_shard(rest),
@@ -176,8 +180,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
     // the whole command is one trip through the front door: flags →
     // AnalysisRequest → execute (bit-identical to a wire submit of the
     // same request — pinned by tests/api.rs)
-    let req = api::run_request_from_args(args)?;
-    let res = req.execute(&JobHandle::new())?;
+    let m = api::run_command().parse(args)?;
+    let req = api::run_request_from_matches(&m)?;
+    let record_path = m.str("record")?;
+    let res = if record_path.is_empty() {
+        req.execute(&JobHandle::new())?
+    } else {
+        // record-then-replay: the .bcmd written here is the exact
+        // stream whose replay produced the printed result, so
+        // `bfast replay` reproduces the envelope byte-for-byte
+        let (stream, res) = api::record_request(&req)?;
+        let bytes = stream.encode();
+        std::fs::write(record_path, &bytes)?;
+        println!(
+            "recorded {record_path}: {} op(s), {} chunk(s), {} bytes (re-run with `bfast replay`)",
+            stream.ops.len(),
+            res.chunks,
+            bytes.len()
+        );
+        res
+    };
     println!(
         "{} run: engine={} artifact={} chunks={} wall={:.3}s",
         req.engine.label(),
@@ -220,6 +242,72 @@ fn write_outputs(outputs: &bfast::api::OutputSpec, res: &bfast::api::AnalysisRes
         println!("wrote {json_path} ({} bytes, v1 result envelope)", text.len());
     }
     Ok(())
+}
+
+fn cmd_replay(args: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "replay",
+        "re-execute a recorded .bcmd command stream through the replay executor \
+         (bit-identical to the run that recorded it), or dump the decoded stream \
+         as JSON for inspection.\n\nUSAGE: bfast replay FILE.bcmd [flags]",
+    )
+    .opt("result-json", "", "write the v1 result envelope here (.N suffix per extra job)")
+    .opt("momax-pgm", "", "write the momax heatmap here (.N suffix per extra job)")
+    .switch("dump", "print the stream as JSON instead of executing it");
+    let m = cmd.parse(args)?;
+    ensure!(m.positional.len() == 1, "usage: bfast replay FILE.bcmd\n\n{}", cmd.usage());
+    let path = &m.positional[0];
+    let bytes = std::fs::read(path)
+        .map_err(|e| bfast::err!("{path}: {e} (expected a .bcmd from `bfast run --record`)"))?;
+    let stream = bfast::cmd::CmdStream::decode(&bytes)?;
+    if m.flag("dump") {
+        println!("{}", stream.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let results = bfast::cmd::replay_to_results(&stream)?;
+    println!(
+        "replayed {path}: {} job(s), {} op(s), m_chunk {} in {:.3}s",
+        stream.jobs.len(),
+        stream.ops.len(),
+        stream.header.m_chunk,
+        t0.elapsed().as_secs_f64()
+    );
+    for (job, res) in stream.jobs.iter().zip(&results) {
+        println!(
+            "  {}: {} pixels, {} breaks ({:.2}%)  [lambda={:.3}]",
+            job.tag,
+            res.map.len(),
+            res.map.break_count(),
+            100.0 * res.map.break_fraction(),
+            res.params.lambda
+        );
+    }
+    // single-job streams write outputs exactly like `run`; multi-job
+    // streams suffix the job index so nothing is silently overwritten
+    let result_json = m.str("result-json")?;
+    let momax_pgm = m.str("momax-pgm")?;
+    for (ji, res) in results.iter().enumerate() {
+        let outputs = bfast::api::OutputSpec {
+            momax_pgm: replay_out_path(momax_pgm, ji, results.len()),
+            result_json: replay_out_path(result_json, ji, results.len()),
+            ..Default::default()
+        };
+        write_outputs(&outputs, res)?;
+    }
+    Ok(())
+}
+
+/// Output path for replayed job `ji`: untouched when the stream holds
+/// one job, `.N`-suffixed otherwise (`""` = output not requested).
+fn replay_out_path(base: &str, ji: usize, jobs: usize) -> Option<String> {
+    if base.is_empty() {
+        None
+    } else if jobs == 1 {
+        Some(base.to_string())
+    } else {
+        Some(format!("{base}.{ji}"))
+    }
 }
 
 fn cmd_shard(args: &[String]) -> Result<()> {

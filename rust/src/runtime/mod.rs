@@ -3,7 +3,7 @@
 //! The coordinator never talks to a device directly; it talks to an
 //! [`ExecutorBackend`] that resolves an analysis shape to a chunk
 //! contract ([`manifest::ArtifactSpec`]) and loads a [`ChunkExecutor`]
-//! that runs padded `N × m_chunk` chunks to [`ChunkOutput`]s. Two
+//! that runs padded `N × m_chunk` chunks to [`ChunkOutput`]s. Three
 //! implementations ship:
 //!
 //! * [`EmulatedDevice`] (**default build**) — a pure-rust emulator
@@ -14,6 +14,10 @@
 //! * [`pjrt::DeviceRuntime`] (**feature `pjrt`**) — loads the AOT HLO
 //!   artifacts emitted by `python/compile/aot.py` and executes them
 //!   through the `xla` crate's PJRT client (see `pjrt` module docs).
+//! * [`crate::cmd::CmdBackend`] — record-then-replay: each staged
+//!   chunk becomes a single-chunk command stream executed by the
+//!   `cmd` interpreter, so the coordinator path and an offline
+//!   `bfast replay` share one op pipeline (bit-identical results).
 //!
 //! PJRT handles are not `Send`; the coordinator owns whichever backend
 //! on a single executor thread (the analogue of a CUDA-stream owner)

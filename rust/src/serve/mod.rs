@@ -24,6 +24,7 @@
 //! | `GET  /v1/runs/{id}/result`        | —               | canonical v1 [`crate::api::AnalysisResult`] JSON |
 //! | `GET  /v1/runs/{id}/map[?format=pgm]` | —            | break map JSON / PGM (sugar) |
 //! | `GET  /v1/runs/{id}/trace`         | —               | Chrome trace-event JSON (flight recorder) |
+//! | `GET  /v1/runs/{id}/cmdstream[?format=json]` | —     | recorded `.bcmd` command stream (submit with `outputs.record` or `?record=1`) |
 //! | `GET  /v1/cache`                   | —               | result-cache stats JSON |
 //! | `DELETE /v1/cache`                 | —               | drop cached results |
 //! | `POST /v1/sessions/{name}`         | [`SessionInit`] JSON, or `.bsq` bytes + `?n-hist=..` | 201 summary |
@@ -354,6 +355,7 @@ fn route(req: &Request, state: &ServerState) -> Response {
         ("GET", ["v1", "runs", id, "map"]) => run_map(req, id, state),
         ("GET", ["v1", "runs", id, "result"]) => run_result(req, id, state),
         ("GET", ["v1", "runs", id, "trace"]) => run_trace(id, state),
+        ("GET", ["v1", "runs", id, "cmdstream"]) => run_cmdstream(req, id, state),
         ("GET", ["v1", "cache"]) => cache_stats(state),
         ("DELETE", ["v1", "cache"]) => cache_clear(state),
         ("GET", ["v1", "sessions"]) => list_sessions(state),
@@ -452,6 +454,13 @@ fn metrics(state: &ServerState) -> Response {
         "bfast_chunks_done_total",
         "chunks executed across every completed run",
         stats.chunks_done as f64,
+    );
+    prom_metric(
+        &mut out,
+        "counter",
+        "bfast_jobs_batched_total",
+        "jobs executed through a multi-job batched command stream",
+        stats.batched as f64,
     );
     prom_metric(
         &mut out,
@@ -622,11 +631,19 @@ fn submit_run(req: &Request, state: &ServerState) -> Response {
     if analysis.request_id.is_none() {
         analysis.request_id = req.header("x-request-id").map(str::to_string);
     }
+    // query sugar for the OutputSpec field: ?record=1 asks the worker
+    // to capture the run as a replayable .bcmd, served by
+    // GET /v1/runs/{id}/cmdstream
+    if matches!(req.query_get("record"), Some("1" | "true")) {
+        analysis.outputs.record = true;
+    }
     // content-addressed front door: hash the request once, and answer
     // an identical resubmission from the result cache — the record is
-    // born Done and no scheduler worker ever sees it
+    // born Done and no scheduler worker ever sees it. Recorded jobs
+    // always go to a worker: a cache hit would skip the recording
+    // (the digest deliberately ignores output options).
     let digest = analysis.request_digest().ok();
-    if let Some(d) = digest.as_deref() {
+    if let Some(d) = digest.as_deref().filter(|_| !analysis.outputs.record) {
         if let Some(body) = state.cache.get(d) {
             // a cache entry that no longer parses falls through to a
             // recompute (put() will overwrite it) instead of erroring
@@ -895,6 +912,41 @@ fn run_trace(id_seg: &str, state: &ServerState) -> Response {
         None => Response::json_error(
             409,
             &format!("job {id} has no trace (tracing disabled at submission)"),
+        ),
+    });
+    resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))
+}
+
+/// `GET /v1/runs/{id}/cmdstream` — the job's recorded `.bcmd` command
+/// stream, byte-for-byte as the worker encoded (and replayed) it.
+/// Present only for jobs submitted with `outputs.record` (JSON field)
+/// or `?record=1` (query sugar); everyone else gets a 409 explaining
+/// how to ask for one. `?format=json` serves the decoded JSON dump of
+/// the same stream instead of the binary form.
+fn run_cmdstream(req: &Request, id_seg: &str, state: &ServerState) -> Response {
+    let id = match parse_id(id_seg) {
+        Ok(id) => id,
+        Err(e) => return Response::json_error(400, &format!("{e:#}")),
+    };
+    let resp = state.queue.with_record(id, |rec| match &rec.cmdstream {
+        Some(bytes) => match req.query_get("format") {
+            Some("json") => match crate::cmd::CmdStream::decode(bytes) {
+                Ok(stream) => Response::json(200, &stream.to_json()),
+                Err(e) => {
+                    Response::json_error(500, &format!("stored stream is corrupt: {e:#}"))
+                }
+            },
+            Some(other) if other != "bcmd" => {
+                Response::json_error(400, &format!("unknown format {other:?} (bcmd|json)"))
+            }
+            _ => Response::bytes(200, "application/octet-stream", bytes.clone()),
+        },
+        None => Response::json_error(
+            409,
+            &format!(
+                "job {id} has no recorded command stream \
+                 (submit with outputs.record or ?record=1)"
+            ),
         ),
     });
     resp.unwrap_or_else(|| Response::json_error(404, &format!("no job {id}")))

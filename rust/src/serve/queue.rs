@@ -15,6 +15,18 @@
 //! executor), so a scheduler worker count of 1–2 keeps the machine
 //! saturated without oversubscribing it.
 //!
+//! Queued requests that share a chunk contract (inline scenes over
+//! the same time axis and bitwise-equal parameters — see
+//! [`crate::cmd::batch_compatible`]) are drained **batched**: one
+//! worker pops up to [`MAX_BATCH`] of them at once and executes them
+//! through a single recorded multi-job command stream on one prepared
+//! engine, so a lone worker saturates on many small requests. Every
+//! batched job keeps its own record, result, and terminal state, and
+//! its break map is bit-identical to running it alone. Jobs submitted
+//! with `outputs.record` never batch — their `.bcmd` must describe
+//! exactly one request — and instead attach the recorded stream for
+//! `GET /v1/runs/{id}/cmdstream`.
+//!
 //! Finished records (each holds a full break map) are retained under a
 //! configurable [`EvictionPolicy`] — a count cap plus a maximum age —
 //! so a long-lived server's memory stays bounded no matter the traffic
@@ -25,13 +37,20 @@
 //! accepted before [`Scheduler::join`] returns.
 
 use crate::api::{self, AnalysisRequest, AnalysisResult, JobHandle};
-use crate::coordinator::SharedBfastRunner;
+use crate::coordinator::{RunResult, SharedBfastRunner};
+use crate::error::Result;
 use crate::metrics::{Histogram, PhaseTimes};
+use crate::params::BfastParams;
+use crate::raster::TimeStack;
 use crate::store::ResultCache;
 use crate::trace::{self, Recorder};
+use std::borrow::Cow;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Upper bound on queued jobs drained into one batched command stream.
+pub const MAX_BATCH: usize = 8;
 
 /// Lifecycle of a job.
 #[derive(Clone, Debug, PartialEq)]
@@ -88,6 +107,10 @@ pub struct JobRecord {
     /// no scheduler worker, result attached at submission.
     pub cached: bool,
     pub result: Option<AnalysisResult>,
+    /// Encoded `.bcmd` bytes, attached at completion for jobs
+    /// submitted with `outputs.record` (the job executed by replaying
+    /// exactly this stream). Served by `GET /v1/runs/{id}/cmdstream`.
+    pub cmdstream: Option<Vec<u8>>,
     /// When the job reached a terminal state (age-based eviction).
     pub finished_at: Option<Instant>,
 }
@@ -163,6 +186,9 @@ pub struct QueueStats {
     /// Chunks executed across every completed run — the monotonic
     /// counter a gateway scrapes to estimate this worker's throughput.
     pub chunks_done: u64,
+    /// Jobs that executed through a multi-job batched command stream
+    /// (two or more compatible queued requests per prepared engine).
+    pub batched: u64,
     /// Engine phase times accumulated across every completed run.
     pub phases: PhaseTimes,
 }
@@ -176,6 +202,7 @@ struct QueueInner {
     rejected: u64,
     evicted: u64,
     chunks_done: u64,
+    batched: u64,
     phases: PhaseTimes,
 }
 
@@ -216,7 +243,7 @@ impl QueueInner {
     }
 }
 
-/// One unit of work handed to a scheduler worker by [`JobQueue::next_job`].
+/// One unit of work handed to a scheduler worker by [`JobQueue::next_batch`].
 struct NextJob {
     id: u64,
     req: AnalysisRequest,
@@ -258,6 +285,7 @@ impl JobQueue {
                 rejected: 0,
                 evicted: 0,
                 chunks_done: 0,
+                batched: 0,
                 phases: PhaseTimes::new(),
             }),
             ready: Condvar::new(),
@@ -341,6 +369,7 @@ impl JobQueue {
                 digest,
                 cached: false,
                 result: None,
+                cmdstream: None,
                 finished_at: None,
             },
         );
@@ -388,6 +417,7 @@ impl JobQueue {
                 digest: Some(digest.to_string()),
                 cached: true,
                 result: Some(result),
+                cmdstream: None,
                 finished_at: Some(now),
             },
         );
@@ -395,31 +425,72 @@ impl JobQueue {
         Ok(id)
     }
 
-    /// Blocking pop for scheduler workers; marks the job running,
-    /// observes its queue wait and hands back everything the worker
-    /// needs. Returns `None` only once the queue is shut down *and*
-    /// drained.
-    fn next_job(&self) -> Option<NextJob> {
+    /// Mark a popped job running, observe its queue wait and build the
+    /// worker handoff (`None` if its record vanished, which cannot
+    /// happen: pending jobs are never evicted).
+    fn claim_locked(
+        &self,
+        inner: &mut QueueInner,
+        id: u64,
+        req: AnalysisRequest,
+    ) -> Option<NextJob> {
+        let rec = inner.records.get_mut(&id)?;
+        rec.state = JobState::Running;
+        self.queue_wait.observe(rec.submitted_at.elapsed().as_secs_f64());
+        Some(NextJob {
+            id,
+            req,
+            handle: rec.handle.clone(),
+            request_id: rec.request_id.clone(),
+            recorder: rec.recorder.clone(),
+        })
+    }
+
+    /// Blocking pop for scheduler workers: hands back the oldest
+    /// queued job plus every younger queued job that can share its
+    /// command stream (capped at [`MAX_BATCH`]; see
+    /// [`crate::cmd::batch_compatible`]). Jobs recording a `.bcmd`
+    /// never batch. Marks every returned job running and observes its
+    /// queue wait. Returns `None` only once the queue is shut down
+    /// *and* drained.
+    fn next_batch(&self) -> Option<Vec<NextJob>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some((id, req)) = inner.pending.pop_front() {
-                if let Some(rec) = inner.records.get_mut(&id) {
-                    rec.state = JobState::Running;
-                    self.queue_wait.observe(rec.submitted_at.elapsed().as_secs_f64());
-                    return Some(NextJob {
-                        id,
-                        req,
-                        handle: rec.handle.clone(),
-                        request_id: rec.request_id.clone(),
-                        recorder: rec.recorder.clone(),
-                    });
+                let Some(first) = self.claim_locked(&mut inner, id, req) else {
+                    continue;
+                };
+                let mut batch = vec![first];
+                if !batch[0].req.outputs.record {
+                    while batch.len() < MAX_BATCH {
+                        let next = inner.pending.iter().position(|(_, r)| {
+                            !r.outputs.record && crate::cmd::batch_compatible(&batch[0].req, r)
+                        });
+                        let Some(pos) = next else { break };
+                        let Some((id, req)) = inner.pending.remove(pos) else { break };
+                        if let Some(job) = self.claim_locked(&mut inner, id, req) {
+                            batch.push(job);
+                        }
+                    }
                 }
-                continue; // record gone (cannot happen: pending jobs are never evicted)
+                if batch.len() > 1 {
+                    inner.batched += batch.len() as u64;
+                }
+                return Some(batch);
             }
             if inner.shutdown {
                 return None;
             }
             inner = self.ready.wait(inner).unwrap();
+        }
+    }
+
+    /// Attach the recorded `.bcmd` bytes to a job (worker-side, for
+    /// requests submitted with `outputs.record`).
+    fn attach_cmdstream(&self, id: u64, bytes: Vec<u8>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.records.get_mut(&id) {
+            rec.cmdstream = Some(bytes);
         }
     }
 
@@ -548,6 +619,7 @@ impl JobQueue {
             rejected: inner.rejected,
             evicted: inner.evicted,
             chunks_done: inner.chunks_done,
+            batched: inner.batched,
             queued: 0,
             running: 0,
             done: 0,
@@ -591,7 +663,12 @@ impl Scheduler {
                 let queue = Arc::clone(&queue);
                 let runner = Arc::clone(&runner);
                 std::thread::spawn(move || {
-                    while let Some(job) = queue.next_job() {
+                    while let Some(mut batch) = queue.next_batch() {
+                        if batch.len() > 1 {
+                            run_batch(&queue, &runner, batch);
+                            continue;
+                        }
+                        let Some(job) = batch.pop() else { continue };
                         let NextJob { id, req, handle, request_id, recorder } = job;
                         // contain panics: a panicking run must mark its
                         // job failed, not kill the worker (with the
@@ -608,10 +685,25 @@ impl Scheduler {
                                     .with_attr("job", id)
                                     .with_attr("request_id", &request_id)
                             });
-                            req.execute_on(runner.as_ref(), &handle)
+                            if req.outputs.record {
+                                // recorded jobs execute by replaying
+                                // the captured stream, so the attached
+                                // .bcmd provably reproduces the result
+                                // it is served next to
+                                let (stream, res) = api::record_request(&req)?;
+                                handle.set_progress(res.chunks, res.chunks);
+                                Ok((Some(stream.encode()), res))
+                            } else {
+                                req.execute_on(runner.as_ref(), &handle).map(|r| (None, r))
+                            }
                         }));
                         match res {
-                            Ok(Ok(r)) => queue.complete(id, r),
+                            Ok(Ok((bytes, r))) => {
+                                if let Some(bytes) = bytes {
+                                    queue.attach_cmdstream(id, bytes);
+                                }
+                                queue.complete(id, r);
+                            }
                             Ok(Err(e)) if api::is_cancelled(&e) => queue.mark_cancelled(id),
                             Ok(Err(e)) => {
                                 trace::log!(
@@ -646,6 +738,104 @@ impl Scheduler {
     pub fn join(self) {
         for w in self.workers {
             let _ = w.join();
+        }
+    }
+}
+
+/// Resolve every live job's scene and execute them all through one
+/// recorded multi-job command stream. Split out of [`run_batch`] so
+/// the `?` plumbing stays typed under `catch_unwind`.
+fn run_batch_inner<'a>(
+    runner: &SharedBfastRunner,
+    live: &'a [NextJob],
+) -> Result<Vec<((Cow<'a, TimeStack>, BfastParams), RunResult)>> {
+    let mut scenes = Vec::with_capacity(live.len());
+    for job in live {
+        scenes.push(job.req.resolve()?);
+    }
+    let jobs: Vec<crate::cmd::RecordJob<'_>> = live
+        .iter()
+        .zip(&scenes)
+        .map(|(job, (stack, params))| crate::cmd::RecordJob {
+            tag: job.request_id.clone(),
+            stack: stack.as_ref(),
+            params,
+        })
+        .collect();
+    let results = runner.run_recorded(&jobs)?;
+    drop(jobs);
+    Ok(scenes.into_iter().zip(results).collect())
+}
+
+/// Execute two or more compatible queued jobs through one recorded
+/// command stream on one prepared engine (the batching seam described
+/// in the module docs). Every job still completes with its own result
+/// record — bit-identical to running it alone — and a failure or
+/// panic fails the whole batch.
+fn run_batch(queue: &JobQueue, runner: &SharedBfastRunner, batch: Vec<NextJob>) {
+    // replay has no chunk-boundary cancellation hook, so jobs
+    // cancelled between claiming and execution drop out here
+    let mut live: Vec<NextJob> = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.handle.is_cancelled() {
+            queue.mark_cancelled(job.id);
+        } else {
+            live.push(job);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let ids: Vec<u64> = live.iter().map(|j| j.id).collect();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // the batch's span tree roots in the oldest job's recorder
+        // (one stream executed — there is no per-job phase split)
+        let _run = live[0].recorder.as_ref().map(|r| {
+            r.span("batched run")
+                .with_attr("jobs", live.len() as u64)
+                .with_attr("request_id", &live[0].request_id)
+        });
+        run_batch_inner(runner, &live)
+    }));
+    match outcome {
+        Ok(Ok(done)) => {
+            for (job, ((stack, params), res)) in live.iter().zip(done) {
+                job.handle.set_progress(res.chunks, res.chunks);
+                if job.handle.is_cancelled() {
+                    queue.mark_cancelled(job.id);
+                    continue;
+                }
+                let result = AnalysisResult {
+                    map: res.map,
+                    params,
+                    phases: Some(res.phases),
+                    chunks: res.chunks,
+                    artifact: res.artifact,
+                    engine: runner.platform(),
+                    wall: res.wall,
+                    width: stack.width,
+                    height: stack.height,
+                };
+                queue.complete(job.id, result);
+            }
+        }
+        Ok(Err(e)) => {
+            trace::log!(
+                Warn,
+                "serve",
+                "batch_failed",
+                "jobs" => format!("{ids:?}"),
+                "error" => format!("{e:#}"),
+            );
+            for id in ids {
+                queue.fail(id, format!("{e:#}"));
+            }
+        }
+        Err(_) => {
+            trace::log!(Error, "serve", "batch_panicked", "jobs" => format!("{ids:?}"));
+            for id in ids {
+                queue.fail(id, "analysis panicked".to_string());
+            }
         }
     }
 }
@@ -879,6 +1069,57 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         assert!(q.with_record(id, |_| ()).is_none());
         assert_eq!(q.stats().evicted, 1);
+    }
+
+    #[test]
+    fn compatible_jobs_batch_through_one_stream_with_results_unchanged() {
+        // submitted before the single worker starts, so the scheduler
+        // sees all three together and drains them as one batch
+        let q = Arc::new(JobQueue::new(8));
+        let jobs = [(40usize, 21u64), (25, 22), (8, 23)];
+        let ids: Vec<u64> =
+            jobs.iter().map(|&(m, s)| q.submit(request(m, s)).unwrap()).collect();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        assert_eq!(q.stats().batched, 3, "all three jobs must share one stream");
+        let solo_runner = runner();
+        for (&(m, seed), &id) in jobs.iter().zip(&ids) {
+            let solo = request(m, seed)
+                .execute_on(solo_runner.as_ref(), &JobHandle::new())
+                .unwrap();
+            let (label, map, progress) = q
+                .with_record(id, |r| {
+                    (r.state.label(), r.result.as_ref().unwrap().map.clone(), r.progress())
+                })
+                .unwrap();
+            assert_eq!(label, "done", "job {id}");
+            assert_eq!(progress, 1.0, "job {id}");
+            assert_eq!(map.breaks, solo.map.breaks, "job {id}");
+            assert_eq!(map.first, solo.map.first, "job {id}");
+        }
+    }
+
+    #[test]
+    fn record_flagged_jobs_attach_a_replayable_stream_and_never_batch() {
+        let q = Arc::new(JobQueue::new(8));
+        let mut rec_req = request(12, 31);
+        rec_req.outputs.record = true;
+        let rid = q.submit(rec_req).unwrap();
+        let plain = q.submit(request(12, 32)).unwrap();
+        let sched = Scheduler::start(Arc::clone(&q), runner(), 1);
+        q.shutdown();
+        sched.join();
+        assert_eq!(q.stats().batched, 0, "record-flagged jobs must not batch");
+        let (label, bytes) =
+            q.with_record(rid, |r| (r.state.label(), r.cmdstream.clone())).unwrap();
+        assert_eq!(label, "done");
+        let bytes = bytes.expect("a recorded job must carry its .bcmd");
+        let stream = crate::cmd::CmdStream::decode(&bytes).unwrap();
+        assert_eq!(stream.jobs.len(), 1);
+        assert_eq!(stream.jobs[0].m, 12);
+        // the plain job ran solo and has no stream attached
+        assert!(q.with_record(plain, |r| r.cmdstream.is_none()).unwrap());
     }
 
     #[test]

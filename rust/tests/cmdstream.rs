@@ -1,0 +1,158 @@
+//! Command-stream integration: the cross-backend grid of the recorded
+//! `.bcmd` path. A stream recorded from a scene and replayed through
+//! [`ReplayExecutor`] must reproduce the fused CPU engine **bitwise**
+//! across chunk widths, cloud-hole gaps and dead (all-NaN) pixels;
+//! the wire form must be a lossless fixed point; and damaged streams
+//! must fail closed before any op executes.
+
+use bfast::api::{AnalysisRequest, EngineSpec, JobHandle, ParamSpec, SceneSource};
+use bfast::cmd::{record_stream, replay_to_results, CmdStream, RecordJob};
+use bfast::cpu::FusedCpuBfast;
+use bfast::params::BfastParams;
+use bfast::raster::{BreakMap, TimeStack};
+use bfast::synth::ArtificialDataset;
+
+/// f32-exact parameters (integer-exact λ and freq) so the fused f64
+/// engine and the f32 chunk contract agree bitwise.
+fn params() -> BfastParams {
+    BfastParams::with_lambda(60, 40, 20, 2, 12.0, 0.05, 2.5).unwrap()
+}
+
+/// Seeded scene with cloud holes on every 7th pixel and pixel 0 fully
+/// dead — the missing-data shapes of the paper's footnote 2.
+fn gappy_scene(m: usize, seed: u64) -> TimeStack {
+    let p = params();
+    let mut stack = ArtificialDataset::new(p.clone(), m, seed).generate().stack;
+    for px in (0..m).step_by(7) {
+        let t = 1 + px % (p.n_total - 2);
+        stack.data_mut()[t * m + px] = f32::NAN;
+    }
+    for t in 0..p.n_total {
+        stack.data_mut()[t * m] = f32::NAN;
+    }
+    stack
+}
+
+/// The reference run: gap-fill host-side (per-pixel arithmetic is
+/// exactly the recorded `fill_columns` op's), then the fused CPU
+/// engine scene-wide.
+fn fused_reference(stack: &TimeStack) -> BreakMap {
+    let mut filled = stack.clone();
+    bfast::fill::fill_stack(&mut filled, 2);
+    let (map, _) = FusedCpuBfast::new(params(), &filled.time_axis).unwrap().run(&filled).unwrap();
+    map
+}
+
+fn assert_bitwise(got: &BreakMap, want: &BreakMap, what: &str) {
+    assert_eq!(got.breaks, want.breaks, "{what}: breaks");
+    assert_eq!(got.first, want.first, "{what}: first");
+    for (i, (a, b)) in got.momax.iter().zip(&want.momax).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what} px {i}: momax bits");
+    }
+}
+
+#[test]
+fn replay_matches_fused_cpu_across_chunk_widths_on_a_gappy_scene() {
+    let p = params();
+    let stack = gappy_scene(333, 11);
+    let want = fused_reference(&stack);
+    // widths below, straddling, and beyond the scene's pixel count
+    for mc in [64usize, 301, 1024] {
+        let job = RecordJob { tag: "grid".into(), stack: &stack, params: &p };
+        let stream = record_stream(&[job], mc, true).unwrap();
+        let res = replay_to_results(&stream).unwrap();
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].chunks, 333usize.div_ceil(mc), "m_chunk={mc}: chunks");
+        assert_bitwise(&res[0].map, &want, &format!("m_chunk={mc}"));
+    }
+}
+
+#[test]
+fn replay_survives_a_fully_dead_scene() {
+    // every observation missing: fill leaves the series NaN and the
+    // kernels must carry that through without ever flagging a break
+    let p = params();
+    let mut stack = ArtificialDataset::new(p.clone(), 40, 2).generate().stack;
+    for v in stack.data_mut().iter_mut() {
+        *v = f32::NAN;
+    }
+    let want = fused_reference(&stack);
+    for mc in [64usize, 301, 1024] {
+        let job = RecordJob { tag: "dead".into(), stack: &stack, params: &p };
+        let stream = record_stream(&[job], mc, true).unwrap();
+        let res = replay_to_results(&stream).unwrap();
+        assert_bitwise(&res[0].map, &want, &format!("all-NaN m_chunk={mc}"));
+        assert_eq!(res[0].map.break_count(), 0, "dead pixels never break");
+    }
+}
+
+#[test]
+fn bcmd_wire_form_is_a_lossless_fixed_point() {
+    let p = params();
+    let stack = gappy_scene(97, 3);
+    let job = RecordJob { tag: "wire".into(), stack: &stack, params: &p };
+    let stream = record_stream(&[job], 301, true).unwrap();
+
+    let bytes = stream.encode();
+    let decoded = CmdStream::decode(&bytes).unwrap();
+    assert_eq!(decoded.encode(), bytes, "encode -> decode -> encode fixed point");
+
+    // and the round-trip changes nothing observable: identical envelopes
+    let a = replay_to_results(&stream).unwrap();
+    let b = replay_to_results(&decoded).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_json_string(), y.to_json_string(), "replay envelope drifted");
+    }
+}
+
+#[test]
+fn damaged_streams_fail_closed() {
+    let p = params();
+    let stack = gappy_scene(30, 4);
+    let job = RecordJob { tag: "dmg".into(), stack: &stack, params: &p };
+    let bytes = record_stream(&[job], 16, true).unwrap().encode();
+
+    // truncation anywhere — header, slot table, op payload, last byte
+    for cut in [0, 3, 9, bytes.len() / 2, bytes.len() - 1] {
+        assert!(CmdStream::decode(&bytes[..cut]).is_err(), "truncated at {cut} must fail");
+    }
+
+    // wrong magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    let err = CmdStream::decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // future format version
+    let mut bad = bytes.clone();
+    bad[4] = 0xee;
+    let err = CmdStream::decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // trailing garbage after a well-formed stream
+    let mut bad = bytes.clone();
+    bad.push(0);
+    assert!(CmdStream::decode(&bad).is_err(), "trailing bytes must fail");
+}
+
+#[test]
+fn cmd_engine_through_the_api_matches_emulated_bitwise() {
+    // `--engine cmd` is a first-class backend: the same AnalysisRequest
+    // run through the command-stream executor and the emulated device
+    // must agree bitwise, m_chunk override included
+    let p = params();
+    let stack = gappy_scene(120, 6);
+    let mut req = AnalysisRequest::new(SceneSource::Inline(stack));
+    req.params = ParamSpec::from_params(&p);
+    req.chunking.m_chunk = Some(48);
+
+    req.engine = EngineSpec::Cmd;
+    let via_cmd = req.execute(&JobHandle::new()).unwrap();
+    assert!(via_cmd.engine.starts_with("cmd replay"), "engine label: {}", via_cmd.engine);
+
+    req.engine = EngineSpec::Emulated;
+    let via_emu = req.execute(&JobHandle::new()).unwrap();
+    assert_eq!(via_cmd.chunks, via_emu.chunks, "same chunk plan");
+    assert_bitwise(&via_cmd.map, &via_emu.map, "cmd vs emulated");
+}
